@@ -1,0 +1,69 @@
+//! CIFAR10(sim) — a single Table-1-style comparison at full preset scale:
+//! small-batch SGD vs large-batch SGD vs SWAP, one seed each, with the
+//! virtual-cluster time breakdown the paper's Table 1 reports.
+//!
+//!     cargo run --release --example cifar10_swap
+//!
+//! (Use `cargo bench --bench table1_cifar10` for the multi-run version
+//! with mean ± std statistics.)
+
+use swap::config::preset;
+use swap::coordinator::{run_baseline, run_swap};
+use swap::experiments::Lab;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(preset("cifar10sim")?)?;
+    let env = lab.env();
+    let seed = lab.cfg.seed;
+
+    println!("== small-batch SGD (1 device, B={}) ==", lab.cfg.exec_batch);
+    let sb = run_baseline(&env, &lab.sb_arm(seed))?;
+    println!(
+        "  acc {:.4} | modeled {:.2}s | {:.0} epochs",
+        sb.outcome.test_acc1, sb.outcome.cluster_seconds, sb.progress.epochs
+    );
+
+    println!(
+        "== large-batch SGD ({} devices, B={}) ==",
+        lab.cfg.lb_devices,
+        lab.cfg.lb_devices * lab.cfg.exec_batch
+    );
+    let lb = run_baseline(&env, &lab.lb_arm(seed))?;
+    println!(
+        "  acc {:.4} | modeled {:.2}s (comm {:.2}s) | {:.0} epochs",
+        lb.outcome.test_acc1,
+        lb.outcome.cluster_seconds,
+        lb.clock.comm,
+        lb.progress.epochs
+    );
+
+    println!("== SWAP ({} workers) ==", lab.cfg.workers);
+    let r = run_swap(&env, &lab.swap_arm(seed))?;
+    println!(
+        "  phase 1 exits at train acc {:.3} after {:.1} epochs (τ = {})",
+        r.phase1.train_acc, r.phase1.epochs, lab.cfg.phase1_stop_acc
+    );
+    println!(
+        "  before averaging: mean worker acc {:.4} @ {:.2}s",
+        r.before_avg_acc1(),
+        r.phase2_seconds
+    );
+    println!(
+        "  after averaging:  acc {:.4} @ {:.2}s",
+        r.final_stats.accuracy1(),
+        r.clock.seconds
+    );
+
+    println!("\nshape vs paper Table 1:");
+    println!(
+        "  time: SWAP {:.2}s vs LB {:.2}s vs SB {:.2}s (paper: 169 / 133 / 254)",
+        r.clock.seconds, lb.outcome.cluster_seconds, sb.outcome.cluster_seconds
+    );
+    println!(
+        "  acc:  SWAP {:.4} vs LB {:.4} vs SB {:.4} (paper: 95.23 / 94.77 / 95.24)",
+        r.final_stats.accuracy1(),
+        lb.outcome.test_acc1,
+        sb.outcome.test_acc1
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver (DESIGN.md "end-to-end validation"): trains the
+//! ResNet9s on the full cifar10sim workload through ALL layers of the
+//! stack — rust coordinator -> PJRT runtime -> AOT HLO from JAX -> Pallas
+//! kernel lineage — for several hundred optimizer steps, logging the loss
+//! curve, then runs SWAP and compares all arms. Writes
+//! results/e2e_loss_curve.csv. Takes a few minutes; the run recorded in
+//! EXPERIMENTS.md used the default settings.
+//!
+//!     cargo run --release --example e2e_train
+
+use swap::config::preset;
+use swap::coordinator::{run_baseline, run_swap, run_sync_training, SyncTrainConfig, TrainEnv};
+use swap::experiments::Lab;
+use swap::metrics::SeriesLog;
+use swap::model::ParamSet;
+use swap::sim::ClusterClock;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(preset("cifar10sim")?)?;
+    let env: TrainEnv = lab.env();
+    let m = lab.engine.manifest();
+    println!(
+        "e2e: resnet9s width={} ({} params), {} train / {} test synthetic images, B={}",
+        m.model.width, m.num_params, lab.cfg.n_train, lab.cfg.n_test, lab.cfg.exec_batch
+    );
+
+    // ---- 1. plain training run with a logged loss curve ----------------
+    let spe = lab.spe(1);
+    let epochs = lab.cfg.sb_epochs;
+    println!("training {} epochs = {} steps ...", epochs, epochs * spe);
+    let mut params = ParamSet::init(m, lab.cfg.seed);
+    let mut momentum = params.zeros_like();
+    let mut clock = ClusterClock::new();
+    let mut curve = SeriesLog::new(&["step", "lr", "batch_loss", "batch_acc"]);
+    let sched = lab.cfg.sb_schedule(spe);
+    let sched_for_log = sched.clone();
+    run_sync_training(
+        &env,
+        &mut params,
+        &mut momentum,
+        &SyncTrainConfig {
+            devices: 1,
+            global_batch: lab.cfg.exec_batch,
+            max_epochs: epochs,
+            stop_train_acc: 1.1,
+            sched,
+            sched_offset: 0,
+            seed_stream: 0,
+            seed: lab.cfg.seed,
+        },
+        &mut clock,
+        |step, _ps, stats| {
+            curve.push(&[
+                step as f64,
+                sched_for_log.lr(step) as f64,
+                stats.mean_loss(),
+                stats.accuracy1(),
+            ]);
+        },
+    )?;
+    curve.write_csv("results/e2e_loss_curve.csv")?;
+    let losses = curve.column("batch_loss").unwrap();
+    let k = losses.len();
+    println!(
+        "loss curve: start {:.3} -> mid {:.3} -> end {:.3}  ({} points, results/e2e_loss_curve.csv)",
+        losses[0],
+        losses[k / 2],
+        losses[k - 1],
+        k
+    );
+    let stats = env.bn_and_eval(&params, lab.cfg.seed, &mut clock)?;
+    println!("plain run test acc: {:.4}", stats.accuracy1());
+
+    // ---- 2. the three paper arms on the same workload -------------------
+    let sb = run_baseline(&env, &lab.sb_arm(lab.cfg.seed))?;
+    let lb = run_baseline(&env, &lab.lb_arm(lab.cfg.seed))?;
+    let swap = run_swap(&env, &lab.swap_arm(lab.cfg.seed))?;
+    println!("\n=== e2e summary (modeled cluster time) ===");
+    println!("SB   : acc {:.4} @ {:>7.2}s", sb.outcome.test_acc1, sb.outcome.cluster_seconds);
+    println!("LB   : acc {:.4} @ {:>7.2}s", lb.outcome.test_acc1, lb.outcome.cluster_seconds);
+    println!(
+        "SWAP : acc {:.4} @ {:>7.2}s (before avg {:.4}; phase1 τ-exit at {:.1} epochs)",
+        swap.final_stats.accuracy1(),
+        swap.clock.seconds,
+        swap.before_avg_acc1(),
+        swap.phase1.epochs
+    );
+    let ok = swap.final_stats.accuracy1() >= swap.before_avg_acc1()
+        && swap.clock.seconds < sb.outcome.cluster_seconds;
+    println!("shape holds (avg helps && SWAP faster than SB): {ok}");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! ImageNet(sim) — the §5.2 setting: piecewise LR + batch schedules, the
+//! large-batch arm doubles both batch and LR (Figure 5), SWAP phase 2 runs
+//! two *groups* of data-parallel workers (2 x 2 devices here, scaled from
+//! the paper's 2 x 8 V100). Reports Top-1 AND Top-5 like Table 3.
+//!
+//!     cargo run --release --example imagenet_sim
+
+use swap::config::preset;
+use swap::coordinator::{run_baseline, run_swap};
+use swap::experiments::Lab;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(preset("imagenetsim")?)?;
+    let env = lab.env();
+    let seed = lab.cfg.seed;
+    println!(
+        "imagenetsim: {} classes, {} train images, piecewise schedule = {}",
+        lab.engine.manifest().model.num_classes,
+        lab.cfg.n_train,
+        lab.cfg.imagenet_style
+    );
+
+    let sb = run_baseline(&env, &lab.sb_arm(seed))?;
+    println!(
+        "SB  (batch {:>4}): top1 {:.4} top5 {:.4} | modeled {:.2}s",
+        lab.cfg.sb_devices * lab.cfg.exec_batch,
+        sb.outcome.test_acc1,
+        sb.outcome.test_acc5,
+        sb.outcome.cluster_seconds
+    );
+    let lb = run_baseline(&env, &lab.lb_arm(seed))?;
+    println!(
+        "LB  (batch {:>4}): top1 {:.4} top5 {:.4} | modeled {:.2}s  (2x batch, 2x LR)",
+        lab.cfg.lb_devices * lab.cfg.exec_batch,
+        lb.outcome.test_acc1,
+        lb.outcome.test_acc5,
+        lb.outcome.cluster_seconds
+    );
+    let r = run_swap(&env, &lab.swap_arm(seed))?;
+    println!(
+        "SWAP ({}x{} devs): top1 {:.4} top5 {:.4} | modeled {:.2}s (before avg: {:.4}/{:.4})",
+        lab.cfg.workers,
+        lab.cfg.group_devices,
+        r.final_stats.accuracy1(),
+        r.final_stats.accuracy5(),
+        r.clock.seconds,
+        r.before_avg_acc1(),
+        r.before_avg_acc5()
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Landscape tour — the §4 visualization machinery on a small setting:
+//! run SWAP with 3 workers, build the two planes of Figures 2 and 3,
+//! evaluate a coarse error grid, and print an ASCII rendering of the
+//! train-error basin with the anchor points overlaid.
+//!
+//!     cargo run --release --example landscape_tour
+
+use swap::config::preset;
+use swap::coordinator::run_swap;
+use swap::experiments::Lab;
+use swap::landscape::{eval_grid, GridSpec, Plane};
+use swap::sim::ClusterClock;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = preset("cifar10sim")?;
+    cfg.apply_kv("n_train", "512")?;
+    cfg.apply_kv("n_test", "256")?;
+    cfg.apply_kv("workers", "3")?;
+    cfg.apply_kv("lb_devices", "3")?;
+    cfg.apply_kv("phase1_max_epochs", "12")?;
+    cfg.apply_kv("phase2_epochs", "4")?;
+    let lab = Lab::new(cfg)?;
+    let env = lab.env();
+
+    let r = run_swap(&env, &lab.swap_arm(lab.cfg.seed))?;
+    let plane = Plane::through(&r.worker_params[0], &r.worker_params[1], &r.worker_params[2])?;
+    let swap_xy = plane.project(&r.final_params)?;
+    println!(
+        "plane through 3 workers; SWAP projects to ({:.2},{:.2}), residual {:.3}",
+        swap_xy.0,
+        swap_xy.1,
+        plane.residual(&r.final_params)?
+    );
+
+    let spec = GridSpec { n: 9, margin: 0.4, max_eval_batches: 2 };
+    let mut clock = ClusterClock::new();
+    let grid = eval_grid(&env, &plane, &spec, lab.cfg.seed, &mut clock)?;
+
+    // ASCII heat map of train error (darker = higher error)
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let (lo, hi) = grid.points.iter().fold((1.0f64, 0.0f64), |(lo, hi), p| {
+        (lo.min(p.train_err), hi.max(p.train_err))
+    });
+    println!("train error over the plane (lo {lo:.3} hi {hi:.3}):");
+    for j in (0..spec.n).rev() {
+        let mut line = String::new();
+        for i in 0..spec.n {
+            let p = grid.points[i * spec.n + j];
+            let t = ((p.train_err - lo) / (hi - lo).max(1e-9) * 9.0) as usize;
+            line.push(shades[t.min(9)]);
+            line.push(' ');
+        }
+        println!("  {line}");
+    }
+    for (k, (a, b)) in plane.anchors.iter().enumerate() {
+        let p = grid.nearest(*a, *b);
+        println!("worker {k} @ ({a:.2},{b:.2}): train_err {:.3} test_err {:.3}", p.train_err, p.test_err);
+    }
+    let ps = grid.nearest(swap_xy.0, swap_xy.1);
+    println!(
+        "SWAP     @ ({:.2},{:.2}): train_err {:.3} test_err {:.3}  <- should be interior/lower",
+        swap_xy.0, swap_xy.1, ps.train_err, ps.test_err
+    );
+    println!("BEST test err on plane: {:.3}", grid.best_test.test_err);
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the smallest end-to-end SWAP run.
+//!
+//! Loads the tiny preset artifacts (built by `make artifacts`), generates a
+//! synthetic dataset, runs the three-phase SWAP algorithm with 2 workers,
+//! and prints accuracies before/after weight averaging plus the modeled
+//! cluster time. Runs in well under a minute.
+//!
+//!     cargo run --release --example quickstart
+
+use swap::config::preset;
+use swap::coordinator::run_swap;
+use swap::experiments::Lab;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a Lab bundles artifacts (engine), synthetic data, and cost model
+    let lab = Lab::new(preset("tiny")?)?;
+
+    // 2. the SWAP arm derived from the preset (workers, schedules, τ)
+    let cfg = lab.swap_arm(lab.cfg.seed);
+    println!(
+        "SWAP on '{}': {} workers x {} device(s), phase1 ≤{} epochs (τ={}), phase2 {} epochs",
+        lab.cfg.preset,
+        cfg.workers,
+        cfg.group_devices,
+        cfg.phase1_max_epochs,
+        cfg.phase1_stop_acc,
+        cfg.phase2_epochs
+    );
+
+    // 3. run all three phases
+    let r = run_swap(&lab.env(), &cfg)?;
+
+    println!(
+        "phase 1: {:.1} epochs, train acc {:.3}, modeled {:.3}s",
+        r.phase1.epochs, r.phase1.train_acc, r.phase1_seconds
+    );
+    for (w, stats) in r.worker_stats.iter().enumerate() {
+        println!("worker {w}: test acc {:.4} (before averaging)", stats.accuracy1());
+    }
+    println!(
+        "averaged model: test acc {:.4} | total modeled {:.3}s (compute {:.3}s, comm {:.3}s)",
+        r.final_stats.accuracy1(),
+        r.clock.seconds,
+        r.clock.compute,
+        r.clock.comm
+    );
+    println!(
+        "divergence between workers: {:.3} (L2 in weight space)",
+        r.worker_params[0].distance(&r.worker_params[1])?
+    );
+    Ok(())
+}

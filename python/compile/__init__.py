@@ -1,0 +1,6 @@
+"""swap-train build-time package: L2 model + L1 kernels + AOT exporter.
+
+Nothing in this package runs at serving/training time — `make artifacts`
+lowers everything to HLO text once, and the rust coordinator executes the
+artifacts through PJRT (see DESIGN.md).
+"""

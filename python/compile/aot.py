@@ -1,0 +1,185 @@
+"""AOT exporter: lower the L2/L1 graphs once to HLO text + manifest.json.
+
+Usage (from python/):  python -m compile.aot --preset all --out ../artifacts
+
+For every preset this writes
+
+    artifacts/<preset>/grad_b{B}.hlo.txt     phase-1 gradient executable
+    artifacts/<preset>/train_b{B}.hlo.txt    phase-2 fused train step
+    artifacts/<preset>/eval_b{B}.hlo.txt     evaluation (running BN stats)
+    artifacts/<preset>/bnstats_b{B}.hlo.txt  phase-3 BN-moment recompute
+    artifacts/<preset>/manifest.json         layout contract for rust
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowered with return_tuple=True;
+the rust side unwraps the tuple.
+
+Python runs exactly once, at build time. `make artifacts` skips this when
+inputs are unchanged.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Presets. Scaled-down substitutes for the paper's workloads (DESIGN.md):
+# widths/epochs shrink to single-CPU-core scale, topology and training
+# procedure stay faithful. `tiny` exists for fast unit/integration tests.
+# ---------------------------------------------------------------------------
+PRESETS = {
+    # tiny keeps the full Pallas matmul path so the rust integration tests
+    # and the e2e example exercise Pallas-lowered HLO; the big presets use
+    # the XLA-native matmul twin on CPU (see kernels/matmul.py docstring).
+    "tiny": dict(width=4, num_classes=10, image_size=16, batches=(8,),
+                 matmul_backend="pallas"),
+    "cifar10sim": dict(width=8, num_classes=10, image_size=32, batches=(64,),
+                       matmul_backend="xla"),
+    "cifar100sim": dict(width=8, num_classes=100, image_size=32, batches=(64,),
+                        matmul_backend="xla"),
+    "imagenetsim": dict(width=12, num_classes=64, image_size=32, batches=(64,),
+                        matmul_backend="xla"),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def conv_flops_per_example(cfg: M.ModelConfig) -> int:
+    """Forward multiply-add FLOPs of all convs + head for one example."""
+    hw = cfg.image_size * cfg.image_size
+    sizes = {  # spatial size at each conv (after the preceding pools)
+        "prep": hw, "layer1": hw, "res1a": hw // 4, "res1b": hw // 4,
+        "layer2": hw // 4, "layer3": hw // 16, "res3a": hw // 64,
+        "res3b": hw // 64,
+    }
+    total = 0
+    for name, cin, cout in M._conv_layers(cfg):
+        total += 2 * sizes[name] * (9 * cin) * cout
+    total += 2 * cfg.channels["res3"] * cfg.num_classes
+    return total
+
+
+def export_preset(name: str, out_root: str, batches=None) -> dict:
+    spec = PRESETS[name]
+    cfg = M.ModelConfig(width=spec["width"], num_classes=spec["num_classes"],
+                        image_size=spec["image_size"],
+                        matmul_backend=os.environ.get("SWAP_MATMUL_BACKEND",
+                                                      spec["matmul_backend"]))
+    batches = tuple(batches or spec["batches"])
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    pspecs = M.param_specs(cfg)
+    bspecs = M.bn_specs(cfg)
+    f32 = jnp.float32
+    p_avals = [jax.ShapeDtypeStruct(s, f32) for _, s in pspecs]
+    bn_avals = [jax.ShapeDtypeStruct(s, f32) for _, s in bspecs]
+    img = cfg.image_size
+
+    executables = {}
+
+    def emit(fname, fn, *avals):
+        # keep_unused: the rust side always feeds the FULL param list; jit
+        # must not prune inputs that a particular entry point ignores
+        # (e.g. bnstats does not read the head weights).
+        lowered = jax.jit(fn, keep_unused=True).lower(*avals)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        executables[fname.replace(".hlo.txt", "")] = fname
+        print(f"  {name}/{fname}: {len(text)} chars")
+
+    for b in batches:
+        im = jax.ShapeDtypeStruct((b, img, img, 3), f32)
+        lb = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lr = jax.ShapeDtypeStruct((1,), f32)
+
+        emit(f"grad_b{b}.hlo.txt",
+             lambda *a, b=b: M.grad_step(cfg, list(a[:len(p_avals)]), a[-2], a[-1]),
+             *p_avals, im, lb)
+        emit(f"train_b{b}.hlo.txt",
+             lambda *a, b=b: M.train_step(
+                 cfg, list(a[:len(p_avals)]),
+                 list(a[len(p_avals):2 * len(p_avals)]), a[-3], a[-2], a[-1]),
+             *p_avals, *p_avals, im, lb, lr)
+        emit(f"eval_b{b}.hlo.txt",
+             lambda *a, b=b: M.eval_step(
+                 cfg, list(a[:len(p_avals)]),
+                 list(a[len(p_avals):len(p_avals) + len(bn_avals)]), a[-2], a[-1]),
+             *p_avals, *bn_avals, im, lb)
+        emit(f"bnstats_b{b}.hlo.txt",
+             lambda *a, b=b: M.bnstats_step(cfg, list(a[:len(p_avals)]), a[-1]),
+             *p_avals, im)
+
+    manifest = {
+        "preset": name,
+        "model": {
+            "arch": "resnet9s",
+            "width": cfg.width,
+            "num_classes": cfg.num_classes,
+            "image_size": cfg.image_size,
+            "momentum": cfg.momentum,
+            "weight_decay": cfg.weight_decay,
+            "head_scale": M.HEAD_SCALE,
+            "bn_eps": M.BN_EPS,
+            "matmul_backend": cfg.matmul_backend,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+        "bn_stats": [{"name": n, "shape": list(s)} for n, s in bspecs],
+        "num_params": M.num_params(cfg),
+        "batches": list(batches),
+        "executables": executables,
+        "flops_fwd_per_example": conv_flops_per_example(cfg),
+        # Interface contract (also documented in rust/src/runtime/manifest.rs):
+        "interface": {
+            "grad": "in: params..., images(B,H,W,3)f32, labels(B,)i32 | out: grads..., sum_loss f32, ncorrect1 i32, ncorrect5 i32",
+            "train": "in: params..., momentum..., images, labels, lr(1,)f32 | out: params'..., momentum'..., sum_loss, ncorrect1, ncorrect5",
+            "eval": "in: params..., bn_stats..., images, labels | out: sum_loss, ncorrect1, ncorrect5",
+            "bnstats": "in: params..., images | out: bn_moments... (bn_stats order)",
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="all",
+                    help="preset name or 'all' (%s)" % ",".join(PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated batch-size override")
+    args = ap.parse_args()
+    batches = [int(x) for x in args.batches.split(",")] if args.batches else None
+    names = list(PRESETS) if args.preset == "all" else [args.preset]
+    for n in names:
+        print(f"exporting preset {n} ...")
+        m = export_preset(n, args.out, batches)
+        print(f"  num_params={m['num_params']} "
+              f"fwd_flops/example={m['flops_fwd_per_example']}")
+    # Stamp so `make artifacts` can skip re-runs when inputs are unchanged.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

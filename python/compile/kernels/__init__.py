@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for swap-train (build-time only; see DESIGN.md).
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis assert
+agreement across shapes and dtypes (python/tests/test_kernels.py).
+"""
+
+from .avg import weight_average
+from .matmul import default_blocks, matmul_bias_act, vmem_bytes
+from .sgd import sgd_nesterov
+from .xent import cross_entropy
+
+__all__ = [
+    "cross_entropy",
+    "default_blocks",
+    "matmul_bias_act",
+    "sgd_nesterov",
+    "vmem_bytes",
+    "weight_average",
+]

@@ -1,0 +1,42 @@
+"""L1: phase-3 weight averaging as a Pallas kernel.
+
+SWAP's final step (Algorithm 1, line 27) averages the W divergent worker
+models: theta_hat = (1/W) sum_w theta_w. For multi-million-parameter models
+this is a bandwidth-bound streaming reduction; the kernel reads one
+(W, block) tile per grid step and emits the f32-accumulated mean, i.e. a
+single pass over all W models' weights.
+
+The rust coordinator also has a host-side implementation
+(rust/src/model/average.rs) used when the weights already live on the host;
+the two are cross-checked in the integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _avg_kernel(s_ref, o_ref):
+    o_ref[...] = jnp.mean(s_ref[...].astype(jnp.float32), axis=0).astype(o_ref.dtype)
+
+
+def weight_average(stacked, block: int = 1 << 16):
+    """Mean over the leading (worker) axis. stacked: (W, N) -> (N,)."""
+    w, n = stacked.shape
+    bn = min(block, _ceil_to(max(n, 1), 8))
+    npad = _ceil_to(n, bn)
+    if npad != n:
+        stacked = jnp.pad(stacked, ((0, 0), (0, npad - n)))
+    out = pl.pallas_call(
+        _avg_kernel,
+        grid=(npad // bn,),
+        in_specs=[pl.BlockSpec((w, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), stacked.dtype),
+        interpret=True,
+    )(stacked)
+    return out[:n]

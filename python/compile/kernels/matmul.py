@@ -1,0 +1,203 @@
+"""L1: MXU-tiled matmul with fused bias + activation, as a Pallas kernel.
+
+This is the hot-spot of the whole stack: every convolution in the ResNet9s
+model (python/compile/model.py) is lowered to im2col + this kernel, and the
+classifier head calls it directly — exactly the TPU-idiomatic adaptation of
+the paper's cuDNN/V100 convolutions (see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping
+-----------
+* The (bm, bk) x (bk, bn) tiles are the HBM→VMEM schedule, expressed with
+  `BlockSpec` index maps instead of CUDA threadblocks.
+* The accumulator lives in a VMEM scratch buffer (`pltpu.VMEM`) and is only
+  written back to HBM on the last K-step — one HBM write per output tile.
+* `jnp.dot(..., preferred_element_type=f32)` targets the MXU systolic array:
+  bf16 or f32 operands, f32 accumulation.
+* grid = (M/bm, N/bn, K/bk) with K innermost so the accumulator is reused
+  across the contraction (the "revisiting" pattern).
+
+CPU AOT note: the kernel is lowered with `interpret=True` (a Mosaic
+custom-call cannot run on the CPU PJRT plugin). Interpret-mode lowering
+turns the grid into an XLA loop of dynamic-slices, so for the AOT artifacts
+we pick large blocks (often a single K/N block) and let XLA fuse the body;
+multi-tile grids are exercised by the pytest/hypothesis suite to validate
+the TPU schedule. Block sizes are overridable via SWAP_BM/SWAP_BK/SWAP_BN
+for the §Perf experiments.
+
+Differentiation: `matmul_bias_act` carries a custom VJP whose backward pass
+reuses this same kernel (dA = dZ @ B^T, dB = A^T @ dZ), so the backward
+matmuls also run on the MXU path.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def default_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Pick (bm, bk, bn) for the given problem.
+
+    On a real TPU we would pick (128, 128, 128)-ish tiles to match the MXU
+    and an ~16 MiB VMEM budget; for the CPU-AOT path large blocks minimize
+    interpret-mode grid overhead. Env overrides: SWAP_BM / SWAP_BK / SWAP_BN.
+    """
+    bm = int(os.environ.get("SWAP_BM", 0)) or min(_ceil_to(m, 8), 2048)
+    bk = int(os.environ.get("SWAP_BK", 0)) or min(_ceil_to(k, 8), 2048)
+    bn = int(os.environ.get("SWAP_BN", 0)) or min(_ceil_to(n, 8), 512)
+    return bm, bk, bn
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate of one program instance (A, B, acc, out).
+
+    Used by DESIGN.md/EXPERIMENTS.md to check the TPU tile choice fits the
+    ~16 MiB/core VMEM budget with double-buffering (×2 on the inputs).
+    """
+    a = bm * bk * dtype_bytes * 2  # double-buffered input tile
+    b = bk * bn * dtype_bytes * 2
+    acc = bm * bn * 4              # f32 accumulator
+    out = bm * bn * dtype_bytes
+    return a + b + acc + out
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, activation: str,
+                   bias_ref=None):
+    """One (i, j, k) grid step: acc += A_tile @ B_tile; epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _matmul_raw(a, b, bias, activation, blocks=None):
+    """Padded, tiled pallas_call. a: (M, K), b: (K, N), bias: (N,) or None."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = blocks or default_blocks(m, k, n)
+    bm, bk, bn = min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 8)), min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    # Zero padding is exact for matmul + bias; relu(0 + bias_pad=0) = 0.
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [a, b]
+    if bias is not None:
+        bias2 = bias.reshape(1, -1)
+        if np_ != n:
+            bias2 = jnp.pad(bias2, ((0, 0), (0, np_ - n)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(bias2)
+        kernel = functools.partial(_matmul_kernel_bias, nk=nk,
+                                   activation=activation)
+    else:
+        kernel = functools.partial(_matmul_kernel, nk=nk,
+                                   activation=activation)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(*args)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _matmul_kernel_bias(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, activation):
+    _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, nk=nk, activation=activation,
+                   bias_ref=bias_ref)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def matmul_bias_act_pallas(a, b, bias, activation="none", blocks=None):
+    """act(a @ b + bias) with f32 accumulation, as an MXU-tiled Pallas kernel.
+
+    a: (M, K); b: (K, N); bias: (N,) or None; activation in {"none", "relu"}.
+    Differentiable (custom VJP, backward reuses the same kernel).
+    """
+    return _matmul_raw(a, b, bias, activation, blocks)
+
+
+def matmul_bias_act_xla(a, b, bias, activation="none"):
+    """XLA-native twin of the Pallas kernel — identical semantics (f32
+    accumulation, fused bias + activation by the XLA fusion pass).
+
+    This is the CPU-backend dispatch target: interpret-mode Pallas lowers
+    the tiled grid to an HLO loop of dynamic-slices that XLA-CPU cannot
+    fuse (~2x slower, see EXPERIMENTS.md §Perf L1), so the big AOT presets
+    emit this path while the `tiny` preset keeps the full Pallas lowering
+    exercised end-to-end. On TPU the Pallas path is the performant one.
+    """
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(a.dtype)
+
+
+def matmul_bias_act(a, b, bias, activation="none", blocks=None, backend="pallas"):
+    """Backend-dispatched matmul+bias+activation (the model's hot-spot op).
+
+    backend: "pallas" (MXU-tiled kernel; TPU path, default) or "xla"
+    (native dot; fast path for CPU-PJRT AOT artifacts). Both share the
+    same reference oracle (ref.matmul_bias_act) in the test suite.
+    """
+    if backend == "xla":
+        return matmul_bias_act_xla(a, b, bias, activation)
+    return matmul_bias_act_pallas(a, b, bias, activation, blocks)
+
+
+def _mba_fwd(a, b, bias, activation, blocks):
+    out = _matmul_raw(a, b, bias, activation, blocks)
+    return out, (a, b, out if activation == "relu" else None,
+                 bias is not None)
+
+
+def _mba_bwd(activation, blocks, res, dz):
+    a, b, relu_out, has_bias = res
+    if activation == "relu":
+        dz = jnp.where(relu_out > 0, dz, jnp.zeros_like(dz))
+    # Backward matmuls on the same MXU kernel.
+    da = _matmul_raw(dz, b.T, None, "none", blocks)
+    db = _matmul_raw(a.T, dz, None, "none", blocks)
+    dbias = jnp.sum(dz, axis=0).astype(dz.dtype) if has_bias else None
+    return da.astype(a.dtype), db.astype(b.dtype), dbias
+
+
+matmul_bias_act_pallas.defvjp(_mba_fwd, _mba_bwd)

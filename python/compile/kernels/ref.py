@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1).
+
+These are the CORE correctness signal: pytest (with hypothesis sweeps over
+shapes and dtypes) asserts that each Pallas kernel in this package matches
+its oracle to tight tolerances. The oracles are deliberately written in the
+most obvious jnp style — no tiling, no tricks — so a reviewer can audit them
+against the paper's equations directly.
+
+SGD update follows the PyTorch/paper convention of *coupled* weight decay
+with Nesterov momentum (momentum 0.9, wd 5e-4 in the paper, §5.1):
+
+    g' = g + wd * p
+    m' = mu * m + g'
+    p' = p - lr * (g' + mu * m')
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_bias_act(a, b, bias=None, activation=None):
+    """Reference for kernels.matmul.matmul_bias_act: act(a @ b + bias).
+
+    a: (M, K), b: (K, N), bias: (N,) or None. Accumulates in f32 regardless
+    of the input dtype (the MXU convention), returns the input dtype.
+    """
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation not in (None, "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(a.dtype)
+
+
+def sgd_nesterov(p, m, g, lr, *, mu, wd):
+    """Reference for kernels.sgd.sgd_nesterov (coupled wd + Nesterov)."""
+    p32, m32, g32 = (x.astype(jnp.float32) for x in (p, m, g))
+    g2 = g32 + wd * p32
+    m2 = mu * m32 + g2
+    p2 = p32 - lr * (g2 + mu * m2)
+    return p2.astype(p.dtype), m2.astype(m.dtype)
+
+
+def cross_entropy(logits, labels):
+    """Reference for kernels.xent.cross_entropy.
+
+    Returns (sum_loss f32 scalar, ncorrect1 i32, ncorrect5 i32).
+    Loss is the *sum* over the batch of softmax cross-entropy (the caller
+    divides by the global batch size; summing makes multi-batch aggregation
+    exact). Top-k correctness uses the rank of the true logit, i.e.
+    rank_i = |{c : logits[i,c] > logits[i,y_i]}| and correct@k <=> rank < k,
+    which is deterministic under ties.
+    """
+    logits = logits.astype(jnp.float32)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1)) + mx[:, 0]
+    true_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.sum(lse - true_logit)
+    rank = jnp.sum((logits > true_logit[:, None]).astype(jnp.int32), axis=-1)
+    ncorrect1 = jnp.sum((rank < 1).astype(jnp.int32))
+    ncorrect5 = jnp.sum((rank < 5).astype(jnp.int32))
+    return loss, ncorrect1, ncorrect5
+
+
+def cross_entropy_grad(logits, labels, dloss=1.0):
+    """d(sum_loss)/dlogits — used to check the custom VJP of the kernel."""
+    logits32 = logits.astype(jnp.float32)
+    p = jnp.exp(logits32 - jnp.max(logits32, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    onehot = jnp.zeros_like(logits32).at[jnp.arange(logits.shape[0]), labels].set(1.0)
+    return ((p - onehot) * dloss).astype(logits.dtype)
+
+
+def weight_average(stacked):
+    """Reference for kernels.avg.weight_average: mean over leading axis.
+
+    stacked: (W, N) — W worker copies of a flattened tensor. Accumulates in
+    f32 (phase 3 of SWAP averages in full precision even if weights are bf16).
+    """
+    return jnp.mean(stacked.astype(jnp.float32), axis=0).astype(stacked.dtype)

@@ -1,0 +1,120 @@
+"""L1: fused softmax cross-entropy + top-1/top-5 accuracy, as Pallas.
+
+One pass over the logits produces the summed batch loss and the number of
+top-1 / top-5 correct predictions — the three statistics every executable
+(grad/train/eval) reports to the rust coordinator. Summation (rather than
+mean) makes multi-batch aggregation in rust exact: the coordinator divides
+by the number of samples it actually fed.
+
+Top-k via the *rank trick*: rank_i = |{c : logit[i,c] > logit[i,y_i]}|,
+correct@k <=> rank_i < k. This is deterministic under ties, needs no sort,
+and vectorizes to a single compare+reduce on the VPU.
+
+The backward pass (softmax - onehot) is a custom VJP in plain jnp — it is
+memory-bound and XLA fuses it completely, so a Pallas kernel would add
+nothing on either backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref, c1_ref, c5_ref, *, nc: int):
+    logits = logits_ref[...].astype(jnp.float32)  # (bb, Cpad)
+    labels = labels_ref[...]                      # (bb,)
+    bb = logits.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = col < nc
+    neg = jnp.float32(-1e30)
+    logits = jnp.where(valid, logits, neg)
+    # Padded rows carry label == -1 and contribute exactly zero below.
+    row_valid = labels >= 0
+    safe_labels = jnp.where(row_valid, labels, 0)
+
+    mx = jnp.max(logits, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx[:, None]), axis=-1)) + mx
+    onehot = (col == safe_labels[:, None]) & valid
+    true_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = jnp.where(row_valid, lse - true_logit, 0.0)
+    rank = jnp.sum(((logits > true_logit[:, None]) & valid).astype(jnp.int32),
+                   axis=-1)
+    c1 = jnp.where(row_valid, (rank < 1).astype(jnp.int32), 0)
+    c5 = jnp.where(row_valid, (rank < 5).astype(jnp.int32), 0)
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        c1_ref[...] = jnp.zeros_like(c1_ref)
+        c5_ref[...] = jnp.zeros_like(c5_ref)
+
+    loss_ref[0] += jnp.sum(loss)
+    c1_ref[0] += jnp.sum(c1)
+    c5_ref[0] += jnp.sum(c5)
+
+
+def _xent_raw(logits, labels, block_b: int = 1024):
+    b, nc = logits.shape
+    bb = min(block_b, _ceil_to(b, 8))
+    bp = _ceil_to(b, bb)
+    ncp = _ceil_to(nc, 8)
+    if (bp, ncp) != (b, nc):
+        logits = jnp.pad(logits, ((0, bp - b), (0, ncp - nc)))
+        labels = jnp.pad(labels, (0, bp - b), constant_values=-1)
+    loss, c1, c5 = pl.pallas_call(
+        functools.partial(_xent_kernel, nc=nc),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, ncp), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(logits, labels)
+    return loss[0], c1[0], c5[0]
+
+
+@jax.custom_vjp
+def cross_entropy(logits, labels):
+    """(sum_loss f32, ncorrect1 i32, ncorrect5 i32) over the batch.
+
+    logits: (B, C) float; labels: (B,) int32 in [0, C). Differentiable in
+    logits (d sum_loss / d logits = softmax - onehot).
+    """
+    return _xent_raw(logits, labels)
+
+
+def _xent_fwd(logits, labels):
+    out = _xent_raw(logits, labels)
+    return out, (logits, labels)
+
+
+def _xent_bwd(res, cot):
+    logits, labels = res
+    dloss = cot[0]
+    logits32 = logits.astype(jnp.float32)
+    p = jnp.exp(logits32 - jnp.max(logits32, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    dlogits = ((p - onehot) * dloss).astype(logits.dtype)
+    return dlogits, None
+
+
+cross_entropy.defvjp(_xent_fwd, _xent_bwd)

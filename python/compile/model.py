@@ -1,0 +1,269 @@
+"""L2: ResNet9s — the paper's CIFAR network, functional JAX, Pallas-backed.
+
+The paper trains the "fast-to-train custom ResNet 9" from davidcpage's
+DAWNBench submission (§5.1). This module reproduces that topology:
+
+    prep  : conv3x3( 3 ->  c) + BN + ReLU
+    layer1: conv3x3( c -> 2c) + BN + ReLU + maxpool2
+    res1  : 2 x [conv3x3(2c -> 2c) + BN + ReLU]   (residual)
+    layer2: conv3x3(2c -> 4c) + BN + ReLU + maxpool2
+    layer3: conv3x3(4c -> 8c) + BN + ReLU + maxpool2
+    res3  : 2 x [conv3x3(8c -> 8c) + BN + ReLU]   (residual)
+    head  : global maxpool + linear(8c -> classes) * 0.125
+
+Every convolution is lowered to **im2col + the L1 Pallas MXU matmul**
+(kernels.matmul) — the TPU-idiomatic replacement for the paper's cuDNN
+convs; see DESIGN.md §Hardware-Adaptation. BatchNorm uses batch statistics
+in training mode; evaluation takes externally supplied running statistics
+(the rust coordinator recomputes them in SWAP phase 3 via the `bnstats_b*`
+executable, exactly as Algorithm 1 line 28 prescribes).
+
+Parameters travel across the rust<->HLO boundary as a *flat ordered list*
+of tensors; `param_specs()` / `bn_specs()` define the order and are written
+into artifacts/<preset>/manifest.json by aot.py.
+
+All functions here are pure; nothing is jitted at import time.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cross_entropy, matmul_bias_act, sgd_nesterov
+
+BN_EPS = 1e-5
+HEAD_SCALE = 0.125  # davidcpage head scaling
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture configuration (baked into the AOT artifacts)."""
+
+    width: int = 8          # base channel count c
+    num_classes: int = 10
+    image_size: int = 32    # square images, NHWC
+    momentum: float = 0.9   # Nesterov momentum (paper §5.1)
+    weight_decay: float = 5e-4
+    # matmul kernel backend: "pallas" (TPU/MXU path; tiny preset keeps it
+    # on CPU so the full Pallas lowering is exercised end-to-end) or "xla"
+    # (CPU fast path; see kernels/matmul.py + EXPERIMENTS.md §Perf L1)
+    matmul_backend: str = "pallas"
+
+    @property
+    def channels(self):
+        c = self.width
+        return dict(prep=c, layer1=2 * c, res1=2 * c, layer2=4 * c,
+                    layer3=8 * c, res3=8 * c)
+
+
+# Conv layers in forward order: (name, cin_key or None for input, cout_key,
+# has two convs if residual). Flattened to per-conv entries below.
+def _conv_layers(cfg: ModelConfig):
+    ch = cfg.channels
+    return [
+        ("prep", 3, ch["prep"]),
+        ("layer1", ch["prep"], ch["layer1"]),
+        ("res1a", ch["layer1"], ch["res1"]),
+        ("res1b", ch["res1"], ch["res1"]),
+        ("layer2", ch["layer1"], ch["layer2"]),
+        ("layer3", ch["layer2"], ch["layer3"]),
+        ("res3a", ch["layer3"], ch["res3"]),
+        ("res3b", ch["res3"], ch["res3"]),
+    ]
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the manifest/rust param layout."""
+    specs = []
+    for name, cin, cout in _conv_layers(cfg):
+        specs.append((f"{name}.w", (cin * 9, cout)))
+        specs.append((f"{name}.gamma", (cout,)))
+        specs.append((f"{name}.beta", (cout,)))
+    c8 = cfg.channels["res3"]
+    specs.append(("head.w", (c8, cfg.num_classes)))
+    specs.append(("head.b", (cfg.num_classes,)))
+    return specs
+
+
+def bn_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list of batch-norm running statistics.
+
+    For each conv layer there is a mean and a var vector over channels; the
+    order matches the order bn moments are emitted by `forward(train=True)`.
+    """
+    specs = []
+    for name, _cin, cout in _conv_layers(cfg):
+        specs.append((f"{name}.mean", (cout,)))
+        specs.append((f"{name}.var", (cout,)))
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-normal conv init, BN gamma=1/beta=0, zero head bias.
+
+    Returns the flat ordered list matching `param_specs`.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".w"):
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          * jnp.sqrt(2.0 / fan_in))
+        elif name.endswith(".gamma"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:  # beta, head.b
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def init_bn_stats(cfg: ModelConfig):
+    stats = []
+    for name, shape in bn_specs(cfg):
+        stats.append(jnp.zeros(shape, jnp.float32) if name.endswith(".mean")
+                     else jnp.ones(shape, jnp.float32))
+    return stats
+
+
+def im2col(x):
+    """(B, H, W, C) -> (B*H*W, 9*C) patches for a 3x3 SAME convolution.
+
+    Patch channel order is (dy, dx, c) row-major — conv weights are stored
+    in exactly this (9*Cin, Cout) layout. Explicit shifted-slice
+    construction (no gather) so XLA lowers it to pad+slice+concat, which
+    fuses with the downstream matmul's HBM reads.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    rows = []
+    for dy in range(3):
+        for dx in range(3):
+            rows.append(xp[:, dy:dy + h, dx:dx + w, :])
+    patches = jnp.concatenate(rows, axis=-1)  # (B, H, W, 9*C)
+    return patches.reshape(b * h * w, 9 * c)
+
+
+def conv3x3(x, w, backend="pallas"):
+    """3x3 SAME conv via im2col + the MXU matmul kernel (backend-dispatched).
+    x: (B,H,W,C)->(B,H,W,Cout)."""
+    b, h, wd, _c = x.shape
+    cout = w.shape[1]
+    out = matmul_bias_act(im2col(x), w, None, "none", backend=backend)
+    return out.reshape(b, h, wd, cout)
+
+
+def batchnorm_train(x, gamma, beta):
+    """BN with batch statistics. Returns (y, (mean, var)) — biased var,
+    matching what the bnstats executable accumulates for evaluation."""
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+    return y, (mean, var)
+
+
+def batchnorm_eval(x, gamma, beta, mean, var):
+    return (x - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def global_maxpool(x):
+    return jnp.max(x, axis=(1, 2))
+
+
+def forward(cfg: ModelConfig, params, images, train: bool, bn_stats=None):
+    """ResNet9s forward pass.
+
+    images: (B, H, W, 3) f32 in [-1, 1]-ish (normalization happens in the
+    rust data pipeline). Returns (logits, bn_moments) where bn_moments is a
+    flat [mean0, var0, mean1, var1, ...] list in `bn_specs` order when
+    train=True, else [].
+    """
+    p = {name: t for (name, _), t in zip(param_specs(cfg), params)}
+    if not train:
+        s = {name: t for (name, _), t in zip(bn_specs(cfg), bn_stats)}
+    moments = []
+
+    def block(x, name):
+        x = conv3x3(x, p[f"{name}.w"], backend=cfg.matmul_backend)
+        if train:
+            x, (mean, var) = batchnorm_train(x, p[f"{name}.gamma"], p[f"{name}.beta"])
+            moments.extend([mean, var])
+        else:
+            x = batchnorm_eval(x, p[f"{name}.gamma"], p[f"{name}.beta"],
+                               s[f"{name}.mean"], s[f"{name}.var"])
+        return jnp.maximum(x, 0.0)
+
+    x = block(images, "prep")
+    x = maxpool2(block(x, "layer1"))
+    x = x + block(block(x, "res1a"), "res1b")
+    x = maxpool2(block(x, "layer2"))
+    x = maxpool2(block(x, "layer3"))
+    x = x + block(block(x, "res3a"), "res3b")
+    x = global_maxpool(x)
+    logits = matmul_bias_act(x, p["head.w"], p["head.b"], "none",
+                             backend=cfg.matmul_backend) * HEAD_SCALE
+    return logits, moments
+
+
+def loss_fn(cfg: ModelConfig, params, images, labels):
+    """Training loss: mean cross-entropy. Returns (mean_loss,
+    (sum_loss, ncorrect1, ncorrect5)) so grad flows through the mean."""
+    logits, _ = forward(cfg, params, images, train=True)
+    sum_loss, c1, c5 = cross_entropy(logits, labels)
+    batch = images.shape[0]
+    return sum_loss / batch, (sum_loss, c1, c5)
+
+
+# --------------------------------------------------------------------------
+# The four exported entry points (lowered per preset x batch size by aot.py)
+# --------------------------------------------------------------------------
+
+def grad_step(cfg: ModelConfig, params, images, labels):
+    """Phase-1 executable: gradients only (the all-reduce + optimizer update
+    happen in rust between executions). Outputs grads in param order, then
+    (sum_loss, ncorrect1, ncorrect5)."""
+    (_, aux), grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, images, labels), has_aux=True)(params)
+    sum_loss, c1, c5 = aux
+    return (*grads, sum_loss, c1, c5)
+
+
+def train_step(cfg: ModelConfig, params, momentum, images, labels, lr):
+    """Phase-2 executable: fused grad + Nesterov-SGD update on device, using
+    the L1 sgd kernel. Outputs (params'..., momentum'..., sum_loss, c1, c5)."""
+    (_, aux), grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, images, labels), has_aux=True)(params)
+    sum_loss, c1, c5 = aux
+    new_p, new_m = [], []
+    for pt, mt, gt in zip(params, momentum, grads):
+        p2, m2 = sgd_nesterov(pt, mt, gt, lr, mu=cfg.momentum,
+                              wd=cfg.weight_decay)
+        new_p.append(p2)
+        new_m.append(m2)
+    return (*new_p, *new_m, sum_loss, c1, c5)
+
+
+def eval_step(cfg: ModelConfig, params, bn_stats, images, labels):
+    """Evaluation executable: forward with running BN statistics.
+    Outputs (sum_loss, ncorrect1, ncorrect5)."""
+    logits, _ = forward(cfg, params, images, train=False, bn_stats=bn_stats)
+    return cross_entropy(logits, labels)
+
+
+def bnstats_step(cfg: ModelConfig, params, images):
+    """Phase-3 executable: batch-norm moments of one batch (Algorithm 1,
+    line 28). The rust coordinator averages moments over several batches to
+    build the running statistics used by `eval_step`."""
+    _, moments = forward(cfg, params, images, train=True)
+    return tuple(moments)

@@ -1,0 +1,143 @@
+"""AOT interchange correctness: the HLO text artifacts parse and expose the
+exact interface (parameter count/order/shapes, tuple outputs) that the rust
+runtime (rust/src/runtime/manifest.rs) relies on.
+
+Numerics of the compiled artifacts are validated end-to-end on the rust
+side (rust/tests/integration_runtime.rs executes the same artifacts through
+PjRtClient::cpu and checks them against values recorded here via the
+deterministic model); this file pins the *contract*.
+"""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(width=4, num_classes=10, image_size=16)
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def tiny_manifest():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+_SHAPE_RE = re.compile(r"(?:f32|s32|pred)\[[\d,]*\](?:\{[\d,]*\})?")
+
+
+def _entry_layout(path):
+    """Parse `entry_computation_layout={(...)->...}` from HLO text."""
+    text = open(path).read()
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->(.*?)\}\n", text, re.S)
+    assert m, "no entry layout in " + path
+    parts = _SHAPE_RE.findall(m.group(1))  # robust to /*index=N*/ comments
+    return parts, m.group(2), text
+
+
+def _shape_of(part):
+    m = re.match(r"(f32|s32|pred)\[([\d,]*)\]", part)
+    assert m, part
+    dims = tuple(int(d) for d in m.group(2).split(",") if d) if m.group(2) else ()
+    return m.group(1), dims
+
+
+def test_manifest_matches_model(tiny_manifest):
+    man = tiny_manifest
+    assert man["model"]["arch"] == "resnet9s"
+    specs = M.param_specs(CFG)
+    assert [p["name"] for p in man["params"]] == [n for n, _ in specs]
+    assert [tuple(p["shape"]) for p in man["params"]] == [s for _, s in specs]
+    assert [tuple(b["shape"]) for b in man["bn_stats"]] == \
+        [s for _, s in M.bn_specs(CFG)]
+    assert man["num_params"] == M.num_params(CFG)
+    for fname in man["executables"].values():
+        assert os.path.exists(os.path.join(ART, fname)), fname
+
+
+def test_hlo_artifacts_parse_back(tiny_manifest):
+    """The exact text the rust loader reads must re-parse as an HloModule
+    (this is the 64-bit-id-safe interchange from the AOT recipe)."""
+    for fname in tiny_manifest["executables"].values():
+        text = open(os.path.join(ART, fname)).read()
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod.name, fname
+
+
+def test_grad_interface_arity(tiny_manifest):
+    man = tiny_manifest
+    b = man["batches"][0]
+    npar = len(man["params"])
+    ins, out, _ = _entry_layout(os.path.join(ART, f"grad_b{b}.hlo.txt"))
+    assert len(ins) == npar + 2  # params..., images, labels
+    for spec, part in zip(man["params"], ins):
+        assert _shape_of(part) == ("f32", tuple(spec["shape"])), spec["name"]
+    assert _shape_of(ins[npar]) == ("f32", (b, 16, 16, 3))
+    assert _shape_of(ins[npar + 1]) == ("s32", (b,))
+    # tuple out: grads... + (loss, c1, c5)
+    assert out.count("f32") >= npar + 1 and out.count("s32[]") == 2
+
+
+def test_train_interface_arity(tiny_manifest):
+    man = tiny_manifest
+    b = man["batches"][0]
+    npar = len(man["params"])
+    ins, out, _ = _entry_layout(os.path.join(ART, f"train_b{b}.hlo.txt"))
+    assert len(ins) == 2 * npar + 3  # params, momentum, images, labels, lr
+    assert _shape_of(ins[-1]) == ("f32", (1,))
+    assert _shape_of(ins[-2]) == ("s32", (b,))
+    assert _shape_of(ins[-3]) == ("f32", (b, 16, 16, 3))
+
+
+def test_eval_interface_arity(tiny_manifest):
+    man = tiny_manifest
+    b = man["batches"][0]
+    npar, nbn = len(man["params"]), len(man["bn_stats"])
+    ins, out, _ = _entry_layout(os.path.join(ART, f"eval_b{b}.hlo.txt"))
+    assert len(ins) == npar + nbn + 2
+    for spec, part in zip(man["bn_stats"], ins[npar:npar + nbn]):
+        assert _shape_of(part) == ("f32", tuple(spec["shape"])), spec["name"]
+
+
+def test_bnstats_interface_arity(tiny_manifest):
+    man = tiny_manifest
+    b = man["batches"][0]
+    npar = len(man["params"])
+    ins, out, _ = _entry_layout(os.path.join(ART, f"bnstats_b{b}.hlo.txt"))
+    assert len(ins) == npar + 1
+    assert _shape_of(ins[-1]) == ("f32", (b, 16, 16, 3))
+    # 16 bn tensors of width 4..32 channels in the tuple
+    assert out.count("f32") == len(man["bn_stats"])
+
+
+def test_flops_estimate_positive_and_monotone_in_width():
+    small = aot.conv_flops_per_example(M.ModelConfig(width=4))
+    big = aot.conv_flops_per_example(M.ModelConfig(width=8))
+    assert 0 < small < big
+
+
+def test_presets_well_formed():
+    for name, spec in aot.PRESETS.items():
+        assert spec["num_classes"] >= 6, name  # top-5 must be meaningful
+        assert spec["image_size"] % 8 == 0, name  # three maxpool2 stages
+        assert all(b % 8 == 0 for b in spec["batches"]), name
+
+
+def test_manifest_deterministic(tmp_path):
+    """Re-exporting tiny produces an identical manifest (stable contract)."""
+    m1 = aot.export_preset("tiny", str(tmp_path))
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m2 = json.load(f)
+    assert m1 == m2

@@ -1,0 +1,259 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes (the f32/bf16 MXU pair), including
+shapes that do NOT divide the block sizes (exercising the padding path)
+and multi-tile grids (exercising the accumulator revisiting pattern that
+the TPU schedule relies on).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (cross_entropy, matmul_bias_act, sgd_nesterov,
+                             weight_average)
+from compile.kernels import ref
+from compile.kernels.matmul import default_blocks, vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+    dt=st.sampled_from(DTYPES),
+    bias=st.booleans(), act=st.sampled_from(["none", "relu"]),
+)
+def test_matmul_matches_ref(m, k, n, dt, bias, act):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    a, b = rand(rng, (m, k), dt), rand(rng, (k, n), dt)
+    bv = rand(rng, (n,), dt) if bias else None
+    out = matmul_bias_act(a, b, bv, act)
+    expect = ref.matmul_bias_act(a, b, bv, act)
+    assert out.dtype == dt and out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dt))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+)
+def test_matmul_multitile_grid(bm, bk, bn):
+    """Multi-tile grids (the real TPU schedule) must agree with ref."""
+    rng = np.random.default_rng(bm * 100 + bk * 10 + bn)
+    m, k, n = 3 * bm + 5, 2 * bk + 3, 2 * bn + 1  # force padding + revisits
+    a, b = rand(rng, (m, k), jnp.float32), rand(rng, (k, n), jnp.float32)
+    out = matmul_bias_act(a, b, None, "none", (bm, bk, bn))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_bias_act(a, b)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_matmul_grad_matches_ref_grad():
+    rng = np.random.default_rng(7)
+    a = rand(rng, (33, 21), jnp.float32)
+    b = rand(rng, (21, 17), jnp.float32)
+    bias = rand(rng, (17,), jnp.float32)
+    co = rand(rng, (33, 17), jnp.float32)
+
+    f = lambda a, b, bias: jnp.sum(matmul_bias_act(a, b, bias, "relu") * co)
+    fr = lambda a, b, bias: jnp.sum(ref.matmul_bias_act(a, b, bias, "relu") * co)
+    g = jax.grad(f, argnums=(0, 1, 2))(a, b, bias)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(a, b, bias)
+    for x, y in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_relu_masks_negative():
+    a = jnp.array([[1.0, -1.0]], jnp.float32)
+    b = jnp.array([[1.0], [2.0]], jnp.float32)
+    out = matmul_bias_act(a, b, None, "relu")  # 1 - 2 = -1 -> 0
+    assert float(out[0, 0]) == 0.0
+
+
+def test_default_blocks_and_vmem_budget():
+    bm, bk, bn = default_blocks(4096, 1152, 128)
+    assert bm % 8 == 0 and bk % 8 == 0 and bn % 8 == 0
+    # The documented TPU tile must fit a 16 MiB VMEM with double buffering.
+    assert vmem_bytes(128, 128, 128, 2) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# sgd_nesterov
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000), dt=st.sampled_from(DTYPES),
+    lr=st.floats(1e-4, 1.0), mu=st.sampled_from([0.0, 0.9, 0.99]),
+    wd=st.sampled_from([0.0, 5e-4, 1e-2]),
+    block=st.sampled_from([64, 1024, 1 << 16]),
+)
+def test_sgd_matches_ref(n, dt, lr, mu, wd, block):
+    rng = np.random.default_rng(n)
+    p, m, g = (rand(rng, (n,), dt) for _ in range(3))
+    p2, m2 = sgd_nesterov(p, m, g, lr, mu=mu, wd=wd, block=block)
+    p2r, m2r = ref.sgd_nesterov(p, m, g, lr, mu=mu, wd=wd)
+    np.testing.assert_allclose(np.asarray(p2, np.float32),
+                               np.asarray(p2r, np.float32), **tol(dt))
+    np.testing.assert_allclose(np.asarray(m2, np.float32),
+                               np.asarray(m2r, np.float32), **tol(dt))
+
+
+def test_sgd_multidim_shape_preserved():
+    rng = np.random.default_rng(0)
+    p = rand(rng, (9, 7, 5), jnp.float32)
+    m, g = jnp.zeros_like(p), rand(rng, (9, 7, 5), jnp.float32)
+    p2, m2 = sgd_nesterov(p, m, g, 0.1, mu=0.9, wd=0.0)
+    assert p2.shape == p.shape and m2.shape == p.shape
+    # mu with zero momentum buffer: p2 = p - lr*(1+mu)*g
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(p - 0.1 * 1.9 * g),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sgd_zero_lr_is_identity_on_params():
+    rng = np.random.default_rng(1)
+    p = rand(rng, (100,), jnp.float32)
+    m = rand(rng, (100,), jnp.float32)
+    g = rand(rng, (100,), jnp.float32)
+    p2, m2 = sgd_nesterov(p, m, g, 0.0, mu=0.9, wd=5e-4)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(p), atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# cross_entropy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 130), c=st.integers(2, 150), seed=st.integers(0, 99))
+def test_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((b, c)) * 3, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, c, b), jnp.int32)
+    loss, c1, c5 = cross_entropy(logits, labels)
+    lr_, c1r, c5r = ref.cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(loss), float(lr_), atol=1e-3, rtol=1e-5)
+    assert int(c1) == int(c1r) and int(c5) == int(c5r)
+    assert 0 <= int(c1) <= int(c5) <= b
+
+
+def test_xent_grad_matches_softmax_minus_onehot():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.standard_normal((17, 11)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 11, 17), jnp.int32)
+    d = jax.grad(lambda lg: cross_entropy(lg, labels)[0])(logits)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(ref.cross_entropy_grad(logits, labels)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_xent_perfect_prediction():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    loss, c1, c5 = cross_entropy(logits, labels)
+    assert float(loss) < 1e-3 and int(c1) == 2 and int(c5) == 2
+
+
+def test_xent_top5_vs_top1():
+    # true class ranked 2nd -> top1 wrong, top5 right (C >= 6).
+    logits = jnp.asarray([[5.0, 4.0, 0.0, 0.0, 0.0, 0.0]], jnp.float32)
+    labels = jnp.asarray([1], jnp.int32)
+    _, c1, c5 = cross_entropy(logits, labels)
+    assert int(c1) == 0 and int(c5) == 1
+
+
+def test_xent_large_logits_stable():
+    logits = jnp.asarray([[1000.0, 999.0]], jnp.float32)
+    labels = jnp.asarray([0], jnp.int32)
+    loss, _, _ = cross_entropy(logits, labels)
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# weight_average
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(w=st.integers(1, 16), n=st.integers(1, 3000),
+       block=st.sampled_from([32, 512, 1 << 16]), dt=st.sampled_from(DTYPES))
+def test_avg_matches_ref(w, n, block, dt):
+    rng = np.random.default_rng(w * 1000 + n)
+    s = rand(rng, (w, n), dt)
+    out = weight_average(s, block=block)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref.weight_average(s), np.float32),
+                               **tol(dt))
+
+
+def test_avg_of_identical_models_is_identity():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(257), jnp.float32)
+    s = jnp.stack([x] * 8)
+    # f32 accumulate-then-divide leaves ~1ulp of noise
+    np.testing.assert_allclose(np.asarray(weight_average(s)), np.asarray(x),
+                               atol=1e-6, rtol=0)
+
+
+def test_avg_is_convex_combination():
+    """mean must lie inside [min, max] elementwise — phase-3 geometry."""
+    rng = np.random.default_rng(6)
+    s = jnp.asarray(rng.standard_normal((5, 100)), jnp.float32)
+    out = np.asarray(weight_average(s))
+    assert (out <= np.asarray(s).max(0) + 1e-6).all()
+    assert (out >= np.asarray(s).min(0) - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch (CPU fast path vs Pallas path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 50), k=st.integers(1, 50), n=st.integers(1, 50),
+       bias=st.booleans(), act=st.sampled_from(["none", "relu"]))
+def test_matmul_backends_agree(m, k, n, bias, act):
+    """The XLA-native twin must match the Pallas kernel exactly (same f32
+    accumulation) — the AOT presets dispatch between them."""
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    bv = jnp.asarray(rng.standard_normal(n), jnp.float32) if bias else None
+    pal = matmul_bias_act(a, b, bv, act, backend="pallas")
+    xla = matmul_bias_act(a, b, bv, act, backend="xla")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(xla),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_matmul_backend_grads_agree():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((20, 12)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((12, 8)), jnp.float32)
+    co = jnp.asarray(rng.standard_normal((20, 8)), jnp.float32)
+    g_pal = jax.grad(lambda a, b: jnp.sum(
+        matmul_bias_act(a, b, None, "relu", backend="pallas") * co),
+        argnums=(0, 1))(a, b)
+    g_xla = jax.grad(lambda a, b: jnp.sum(
+        matmul_bias_act(a, b, None, "relu", backend="xla") * co),
+        argnums=(0, 1))(a, b)
+    for p, x in zip(g_pal, g_xla):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(x),
+                                   atol=1e-5, rtol=1e-5)

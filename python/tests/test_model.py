@@ -1,0 +1,205 @@
+"""L2 correctness: ResNet9s shapes, conv-vs-lax oracle, BN, grads, update.
+
+The key oracle here: `conv3x3` (im2col + Pallas matmul) must equal
+`jax.lax.conv_general_dilated` — i.e. our TPU-adapted convolution is the
+same operator the paper's cuDNN path computes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(width=4, num_classes=10, image_size=16)
+
+
+def lax_conv3x3(x, w):
+    """Oracle conv: NHWC x (9*Cin, Cout) weights -> lax.conv."""
+    cin = x.shape[-1]
+    cout = w.shape[1]
+    # our weight layout is (dy, dx, cin) row-major flattened
+    wk = w.reshape(3, 3, cin, cout)
+    return jax.lax.conv_general_dilated(
+        x, wk, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 4), h=st.sampled_from([4, 8]), cin=st.sampled_from([3, 8]),
+       cout=st.sampled_from([4, 16]), seed=st.integers(0, 50))
+def test_conv3x3_matches_lax_conv(b, h, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, h, h, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((9 * cin, cout)) * 0.1, jnp.float32)
+    np.testing.assert_allclose(np.asarray(M.conv3x3(x, w)),
+                               np.asarray(lax_conv3x3(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_param_specs_order_and_count():
+    specs = M.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "prep.w" and names[-1] == "head.b"
+    assert len(names) == 8 * 3 + 2  # 8 convs x (w, gamma, beta) + head w/b
+    assert len(set(names)) == len(names)
+    assert M.num_params(CFG) == sum(int(np.prod(s)) for _, s in specs)
+
+
+def test_bn_specs_pair_mean_var():
+    specs = M.bn_specs(CFG)
+    assert len(specs) == 16
+    for i in range(0, 16, 2):
+        assert specs[i][0].endswith(".mean") and specs[i + 1][0].endswith(".var")
+        assert specs[i][1] == specs[i + 1][1]
+
+
+def test_init_params_match_specs():
+    params = M.init_params(CFG, seed=0)
+    for (name, shape), p in zip(M.param_specs(CFG), params):
+        assert p.shape == shape, name
+        if name.endswith(".gamma"):
+            assert float(jnp.min(p)) == 1.0
+        if name.endswith(".beta"):
+            assert float(jnp.max(p)) == 0.0
+
+
+def test_forward_shapes_and_moments():
+    params = M.init_params(CFG, seed=0)
+    x = jnp.zeros((2, 16, 16, 3), jnp.float32)
+    logits, moments = M.forward(CFG, params, x, train=True)
+    assert logits.shape == (2, 10)
+    assert len(moments) == len(M.bn_specs(CFG))
+    for (name, shape), mom in zip(M.bn_specs(CFG), moments):
+        assert mom.shape == shape, name
+
+
+def test_forward_eval_uses_running_stats():
+    params = M.init_params(CFG, seed=0)
+    stats = M.init_bn_stats(CFG)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, 16, 3)), jnp.float32)
+    logits, moments = M.forward(CFG, params, x, train=False, bn_stats=stats)
+    assert logits.shape == (4, 10) and moments == []
+    # different stats must change the output
+    stats2 = [s + 0.5 for s in stats]
+    logits2, _ = M.forward(CFG, params, x, train=False, bn_stats=stats2)
+    assert float(jnp.abs(logits - logits2).max()) > 1e-6
+
+
+def test_batchnorm_train_normalizes():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 4, 4, 3)) * 5 + 2, jnp.float32)
+    y, (mean, var) = M.batchnorm_train(x, jnp.ones(3), jnp.zeros(3))
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, (0, 1, 2))), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.var(y, (0, 1, 2))), 1, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(jnp.mean(x, (0, 1, 2))),
+                               atol=1e-5)
+
+
+def test_grad_step_output_arity_and_shapes():
+    params = M.init_params(CFG, seed=0)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((8, 16, 16, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 8), jnp.int32)
+    out = M.grad_step(CFG, params, x, y)
+    assert len(out) == len(params) + 3
+    for p, g in zip(params, out[:len(params)]):
+        assert g.shape == p.shape
+    sum_loss, c1, c5 = out[-3:]
+    assert np.isfinite(float(sum_loss))
+    assert 0 <= int(c1) <= int(c5) <= 8
+
+
+def test_grad_step_matches_numerical_gradient():
+    """Directional finite-difference check through the whole Pallas stack."""
+    cfg = M.ModelConfig(width=2, num_classes=4, image_size=8)
+    params = M.init_params(cfg, seed=1)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 8, 8, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, 4), jnp.int32)
+
+    out = M.grad_step(cfg, params, x, y)
+    grads = out[:len(params)]
+    dirs = [jnp.asarray(rng.standard_normal(p.shape), jnp.float32)
+            for p in params]
+    analytic = sum(float(jnp.vdot(g, d)) for g, d in zip(grads, dirs))
+
+    eps = 1e-3
+    def loss_at(t):
+        ps = [p + t * d for p, d in zip(params, dirs)]
+        l, _ = M.loss_fn(cfg, ps, x, y)
+        return float(l)
+    numeric = (loss_at(eps) - loss_at(-eps)) / (2 * eps)
+    # relu/maxpool kinks + f32 arithmetic make the centered difference noisy;
+    # 20% still catches any sign/scale/indexing bug in the custom VJPs.
+    assert abs(analytic - numeric) < 0.2 * max(1.0, abs(analytic)), \
+        (analytic, numeric)
+
+
+def test_train_step_applies_sgd_update():
+    params = M.init_params(CFG, seed=0)
+    mom = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 16, 16, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 8), jnp.int32)
+    lr = jnp.asarray([0.05], jnp.float32)
+
+    out = M.train_step(CFG, params, mom, x, y, lr)
+    n = len(params)
+    new_p, new_m = out[:n], out[n:2 * n]
+    grads = M.grad_step(CFG, params, x, y)[:n]
+    for p, m, g, p2, m2 in zip(params, mom, grads, new_p, new_m):
+        p2r, m2r = ref.sgd_nesterov(p, m, g, 0.05, mu=CFG.momentum,
+                                    wd=CFG.weight_decay)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(p2r),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m2r),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_train_step_zero_lr_keeps_params():
+    params = M.init_params(CFG, seed=0)
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jnp.zeros((8, 16, 16, 3), jnp.float32)
+    y = jnp.zeros((8,), jnp.int32)
+    out = M.train_step(CFG, params, mom, x, y, jnp.asarray([0.0], jnp.float32))
+    for p, p2 in zip(params, out[:len(params)]):
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(p), atol=0)
+
+
+def test_bnstats_step_matches_forward_moments():
+    params = M.init_params(CFG, seed=0)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((8, 16, 16, 3)), jnp.float32)
+    moments = M.bnstats_step(CFG, params, x)
+    _, expect = M.forward(CFG, params, x, train=True)
+    assert len(moments) == len(expect)
+    for a, b in zip(moments, expect):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_loss_decreases_under_training():
+    """A few fused steps on a fixed batch must reduce the loss — the whole
+    L1+L2 stack actually learns."""
+    cfg = M.ModelConfig(width=2, num_classes=4, image_size=8)
+    params = M.init_params(cfg, seed=2)
+    mom = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((16, 8, 8, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, 16), jnp.int32)
+    lr = jnp.asarray([0.1], jnp.float32)
+
+    first = None
+    n = len(params)
+    for step in range(8):
+        out = M.train_step(cfg, params, mom, x, y, lr)
+        params, mom = list(out[:n]), list(out[n:2 * n])
+        loss = float(out[-3]) / 16
+        if first is None:
+            first = loss
+    assert loss < first, (first, loss)

@@ -1,0 +1,16 @@
+//! Bench: the §5.1 DAWNBench claim — time-to-target accuracy for a fast
+//! SWAP configuration vs the small-batch baseline (paper: 27s vs 37s on
+//! CIFAR10-94%, a 0.73x ratio). Here the target is 95% of what the SB
+//! baseline reaches; shape criterion: fast-SWAP hits the target in well
+//! under the SB time.
+//! Run: cargo bench --bench dawnbench
+
+use swap::experiments::{tables, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("cifar10sim")?)?;
+    let t = tables::dawnbench(&lab, 0.95)?;
+    t.print();
+    tables::save_table(&t, "dawnbench")?;
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate Figure 1 — LR schedule + per-worker test accuracy
+//! through both SWAP phases, plus the on-the-fly averaged-model accuracy
+//! (which should dominate every individual worker during phase 2).
+//! Writes results/fig1_lr.csv and results/fig1_accuracy.csv.
+//! Run: cargo bench --bench fig1_accuracy_curves
+
+use swap::experiments::{figures, Lab};
+
+fn main() -> anyhow::Result<()> {
+    // eval-heavy instrumentation: a lighter config keeps this bench fast
+    let mut cfg = swap::config::preset("cifar10sim")?;
+    cfg.apply_kv("n_train", "512")?;
+    cfg.apply_kv("n_test", "256")?;
+    cfg.apply_kv("workers", "4")?;
+    cfg.apply_kv("lb_devices", "4")?;
+    cfg.apply_kv("phase1_max_epochs", "20")?;
+    cfg.apply_kv("phase2_epochs", "6")?;
+    cfg.apply_kv("bn_batches", "4")?;
+    let lab = Lab::new(cfg)?;
+    let (lr, acc) = figures::fig1(&lab)?;
+    println!("fig1: {} lr rows, {} accuracy rows", lr.len(), acc.len());
+    // qualitative check: averaged model beats the mean worker at the end
+    let avg_rows: Vec<f64> = acc
+        .column("test_acc")
+        .unwrap()
+        .iter()
+        .zip(acc.column("worker").unwrap())
+        .filter(|(_, w)| *w == 99.0)
+        .map(|(a, _)| *a)
+        .collect();
+    if let Some(last_avg) = avg_rows.last() {
+        println!("final averaged-model accuracy on the curve: {last_avg:.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Figures 2 and 3 — train/test error surfaces over the
+//! plane through (LB, worker, SWAP) and the plane through three workers.
+//! Writes results/fig{2,3}_surface.csv + anchor files. Shape criteria:
+//! workers sit on different sides of the train-error basin, SWAP interior
+//! with lower test error.
+//! Run: cargo bench --bench fig2_fig3_landscape
+
+use swap::experiments::{figures, Lab};
+use swap::landscape::GridSpec;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = swap::config::preset("cifar10sim")?;
+    // landscape runs are eval-heavy; a lighter config keeps this bench fast
+    cfg.apply_kv("n_train", "512")?;
+    cfg.apply_kv("n_test", "256")?;
+    cfg.apply_kv("workers", "4")?;
+    cfg.apply_kv("lb_devices", "4")?;
+    cfg.apply_kv("phase1_max_epochs", "16")?;
+    cfg.apply_kv("sb_epochs", "12")?;
+    cfg.apply_kv("phase2_epochs", "4")?;
+    let lab = Lab::new(cfg)?;
+    let grid = GridSpec { n: 11, margin: 0.3, max_eval_batches: 3 };
+    let figs = figures::fig2_fig3(&lab, &grid)?;
+
+    // Fig 2: SWAP anchor should have the lowest test error of the anchors
+    for (name, a, b) in &figs.fig2_anchors {
+        let p = figs.fig2.nearest(*a, *b);
+        println!("fig2 {name}: train_err {:.3} test_err {:.3}", p.train_err, p.test_err);
+    }
+    for (name, a, b) in &figs.fig3_anchors {
+        let p = figs.fig3.nearest(*a, *b);
+        println!("fig3 {name}: train_err {:.3} test_err {:.3}", p.train_err, p.test_err);
+    }
+    println!("best test err on fig3 plane: {:.4}", figs.fig3.best_test.test_err);
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Figure 4 — cosine similarity between the descent
+//! direction −g_t and the direction toward the SWAP average, along a
+//! phase-2 worker trajectory. Shape criterion: the cosine decays toward ~0
+//! as training enters the late stage (progress becomes orthogonal to the
+//! basin direction).
+//! Run: cargo bench --bench fig4_cosine
+
+use swap::experiments::{figures, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = swap::config::preset("cifar10sim")?;
+    cfg.apply_kv("n_train", "512")?;
+    cfg.apply_kv("workers", "4")?;
+    cfg.apply_kv("lb_devices", "4")?;
+    cfg.apply_kv("phase1_max_epochs", "16")?;
+    cfg.apply_kv("phase2_epochs", "6")?;
+    let lab = Lab::new(cfg)?;
+    let s = figures::fig4(&lab)?;
+    let cos = s.column("cosine").unwrap();
+    let steps = s.column("step").unwrap();
+    for (t, c) in steps.iter().zip(&cos) {
+        println!("step {t:>5}: cosine {c:+.4}");
+    }
+    let early: f64 = cos.iter().take(3).sum::<f64>() / 3.0_f64.min(cos.len() as f64);
+    let late: f64 = cos.iter().rev().take(3).sum::<f64>() / 3.0_f64.min(cos.len() as f64);
+    println!("early mean {early:.4} -> late mean {late:.4} (paper: decays)");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Figures 5 and 6 — the ImageNet LR/batch schedules
+//! (original vs doubled vs the SWAP composition) and the SWA cyclic-LR
+//! illustrations. Pure schedule evaluation; writes results/fig{5,6}_*.csv.
+//! Run: cargo bench --bench fig5_fig6_schedules
+
+use swap::experiments::{figures, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("imagenetsim")?)?;
+    let f5 = figures::fig5(&lab)?;
+    println!("fig5: {} rows (lr_original / lr_doubled / lr_swap + batch sizes)", f5.len());
+    // the SWAP schedule must equal the doubled one early, the original late
+    let (lrs, lrd, lro) = (
+        f5.column("lr_swap").unwrap(),
+        f5.column("lr_doubled").unwrap(),
+        f5.column("lr_original").unwrap(),
+    );
+    let n = lrs.len();
+    println!(
+        "early: swap={:.4} doubled={:.4} | late: swap={:.4} original-tail={:.4}",
+        lrs[n / 10], lrd[n / 10], lrs[n - 1], lro[5 * n / 28]
+    );
+
+    let lab100 = Lab::new(swap::config::preset("cifar100sim")?)?;
+    let f6 = figures::fig6(&lab100)?;
+    let markers: f64 = f6.column("sample_marker").unwrap().iter().sum();
+    println!("fig6: {} rows, {} SWA sample points marked", f6.len(), markers);
+    Ok(())
+}

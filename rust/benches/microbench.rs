@@ -1,0 +1,87 @@
+//! Microbenchmarks of the L3 hot paths (own harness; no criterion in the
+//! vendored set): executable invocation, host SGD update, ring all-reduce,
+//! weight averaging, batch assembly, literal conversion. These are the
+//! §Perf L3 numbers in EXPERIMENTS.md.
+//! Run: cargo bench --bench microbench
+
+use swap::bench::{bench, Table};
+use swap::coordinator::allreduce;
+use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
+use swap::model::ParamSet;
+use swap::optim::{SgdConfig, SgdOptimizer};
+use swap::runtime::Engine;
+use swap::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts/cifar10sim")?;
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 1));
+    let ds = gen.sample(256, 10);
+    let mut rng = Rng::new(0);
+    let mut batcher = Batcher::new(64, m.model.image_size, AugmentSpec::cifar_default());
+    let idx: Vec<usize> = (0..64).collect();
+
+    let mut t = Table::new(
+        "L3 microbenchmarks (cifar10sim, B=64)",
+        &["op", "mean (ms)", "std (ms)", "min (ms)"],
+    );
+    let mut row = |name: &str, s: swap::bench::Stats| {
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", s.mean * 1e3),
+            format!("{:.3}", s.std * 1e3),
+            format!("{:.3}", s.min * 1e3),
+        ]);
+    };
+
+    // batch assembly + augmentation
+    let s = bench(3, 20, || {
+        let _ = batcher.assemble(&ds, &idx, &mut rng);
+    });
+    row("batch assemble+augment", s);
+
+    // fused train step (the phase-2 hot path, includes literal conversion)
+    let mut params = ParamSet::init(&m, 0);
+    let mut mom = params.zeros_like();
+    let hb = batcher.assemble(&ds, &idx, &mut rng);
+    let s = bench(2, 10, || {
+        engine
+            .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
+            .unwrap();
+    });
+    row("fused train step (exec)", s);
+
+    // gradient step (phase-1 per-worker call)
+    let s = bench(2, 10, || {
+        engine.grad(params.as_slice(), &hb).unwrap();
+    });
+    row("grad step (exec)", s);
+
+    // host SGD update over all tensors
+    let g = engine.grad(params.as_slice(), &hb)?;
+    let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 5e-4 }, &params);
+    let s = bench(3, 50, || {
+        opt.step(&mut params, &g.grads, 0.01).unwrap();
+    });
+    row("host SGD-Nesterov update", s);
+
+    // ring all-reduce of 8 worker gradients
+    let sets: Vec<Vec<swap::tensor::Tensor>> = (0..8).map(|_| g.grads.clone()).collect();
+    let s = bench(3, 20, || {
+        allreduce::ring_mean(&sets).unwrap();
+    });
+    row("ring all-reduce (W=8)", s);
+
+    // phase-3 weight averaging of 8 models
+    let models: Vec<ParamSet> = (0..8).map(|i| ParamSet::init(&m, i as u64)).collect();
+    let s = bench(3, 50, || {
+        ParamSet::average(&models).unwrap();
+    });
+    row("weight average (W=8)", s);
+
+    t.print();
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/microbench.txt", t.render())?;
+    std::fs::write("results/microbench.csv", t.to_csv())?;
+    Ok(())
+}

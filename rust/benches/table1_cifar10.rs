@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's Table 1 (CIFAR10 — SB vs LB vs SWAP).
+//! Prints paper vs measured rows; writes results/table1.{txt,csv}.
+//! Shape criteria (DESIGN.md): SWAP-after ≈ SB accuracy at ≈ LB-scale
+//! time; averaging strictly helps over the mean worker.
+//!
+//! Run: cargo bench --bench table1_cifar10    (SWAP_RUNS=n overrides runs)
+
+use swap::experiments::{tables, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("cifar10sim")?)?;
+    let t = tables::table1(&lab)?;
+    t.print();
+    tables::save_table(&t, "table1")?;
+    println!("shape check: SWAP(after) ≈ SB accuracy in ≈ LB-scale modeled time.");
+    Ok(())
+}

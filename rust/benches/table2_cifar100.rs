@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Table 2 (CIFAR100 — SB vs LB vs SWAP).
+//! Run: cargo bench --bench table2_cifar100
+
+use swap::experiments::{tables, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("cifar100sim")?)?;
+    let t = tables::table2(&lab)?;
+    t.print();
+    tables::save_table(&t, "table2")?;
+    Ok(())
+}

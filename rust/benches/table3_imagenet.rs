@@ -1,0 +1,13 @@
+//! Bench: regenerate the paper's Table 3 (ImageNet — Top1/Top5, doubled
+//! batch + doubled LR for the LB arm, 2 phase-2 worker groups of 2 devices).
+//! Run: cargo bench --bench table3_imagenet
+
+use swap::experiments::{tables, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("imagenetsim")?)?;
+    let t = tables::table3(&lab)?;
+    t.print();
+    tables::save_table(&t, "table3")?;
+    Ok(())
+}

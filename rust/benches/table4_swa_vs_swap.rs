@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Table 4 (SWA vs SWAP on CIFAR100).
+//! Five arms: LB-SWA, LB→SB-SWA, SB-SWA, SWAP (short), SWAP (long).
+//! Shape criteria: SB-SWA reaches the best accuracy but at many-x the
+//! time; LB-SWA fails to improve; long-phase-2 SWAP ≈ SB-SWA accuracy at
+//! a fraction of the time (paper: 3.5x less).
+//! Run: cargo bench --bench table4_swa_vs_swap
+
+use swap::experiments::{tables, Lab};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(swap::config::preset("cifar100sim")?)?;
+    let t = tables::table4(&lab)?;
+    t.print();
+    tables::save_table(&t, "table4")?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Training-dynamics analysis (§4.2, Figure 4): cosine similarity between
+//! the descent direction −g_t and the direction toward the SWAP average
+//! Δθ = θ_swap − θ_t, plus weight-travel statistics (Hoffer et al.-style
+//! distance from initialization).
+
+use crate::coordinator::TrainEnv;
+use crate::data::{AugmentSpec, Batcher};
+use crate::metrics::SeriesLog;
+use crate::model::ParamSet;
+use crate::tensor;
+use crate::util::{Result, Rng};
+
+/// Cosine series along a snapshot trail: for every (step, theta_t) compute
+/// a fresh mini-batch gradient g_t and report
+/// cos(−g_t, theta_target − theta_t) — Figure 4's y-axis.
+pub fn cosine_to_target(
+    env: &TrainEnv,
+    trail: &[(usize, ParamSet)],
+    target: &ParamSet,
+    seed: u64,
+) -> Result<SeriesLog> {
+    let mut out = SeriesLog::new(&["step", "cosine", "grad_norm", "dist_to_target"]);
+    let b = env.exec_batch;
+    let mut rng = Rng::stream(seed, 0xF16);
+    let mut batcher = Batcher::new(b, env.image_size(), AugmentSpec::none());
+    for (step, theta) in trail {
+        // a random clean training batch for the gradient probe
+        let idx: Vec<usize> = (0..b).map(|_| rng.below(env.train.n)).collect();
+        let hb = batcher.assemble_clean(env.train, &idx);
+        let g = env.engine.grad(theta.as_slice(), &hb)?;
+        // -g direction vs (target - theta)
+        let delta = tensor::sets_sub(&target.tensors, &theta.tensors)?;
+        let mut neg = g.grads;
+        tensor::sets_scale(&mut neg, -1.0);
+        let cos = tensor::sets_cosine(&neg, &delta)?;
+        out.push(&[
+            *step as f64,
+            cos,
+            tensor::sets_norm(&neg),
+            tensor::sets_norm(&delta),
+        ]);
+    }
+    Ok(out)
+}
+
+/// Distance of every snapshot from a reference point (weight travel,
+/// Hoffer et al.'s "distance from initialization").
+pub fn travel_series(trail: &[(usize, ParamSet)], reference: &ParamSet) -> Result<SeriesLog> {
+    let mut out = SeriesLog::new(&["step", "distance"]);
+    for (step, theta) in trail {
+        out.push(&[*step as f64, theta.distance(reference)?]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn pset(vals: Vec<f32>) -> ParamSet {
+        ParamSet {
+            tensors: vec![Tensor::new(vec![vals.len()], vals).unwrap()],
+        }
+    }
+
+    #[test]
+    fn travel_series_distances() {
+        let trail = vec![
+            (0usize, pset(vec![0.0, 0.0])),
+            (10, pset(vec![3.0, 4.0])),
+        ];
+        let s = travel_series(&trail, &pset(vec![0.0, 0.0])).unwrap();
+        assert_eq!(s.column("distance").unwrap(), vec![0.0, 5.0]);
+        assert_eq!(s.column("step").unwrap(), vec![0.0, 10.0]);
+    }
+}

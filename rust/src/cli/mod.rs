@@ -1,0 +1,219 @@
+//! CLI argument parsing (no clap in the vendored crate set) and the
+//! subcommand surface of the `swap-train` binary.
+//!
+//! ```text
+//! swap-train <command> [--preset NAME] [--config FILE]
+//!            [--set key=value]... [--runs N] [--seed N]
+//! ```
+//!
+//! Commands: swap | sb | lb | swa | local-sgd | table1 | table2 | table3 |
+//!           table4 | dawnbench | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 |
+//!           schedules | info | help
+
+use crate::config::{preset, ExperimentConfig};
+use crate::util::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Args {
+    pub command: String,
+    /// --key value / --key=value flags (key without the dashes)
+    pub flags: Vec<(String, String)>,
+    /// bare --flags (no value)
+    pub switches: Vec<String>,
+}
+
+const VALUE_FLAGS: &[&str] = &["preset", "config", "set", "runs", "seed", "out"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .unwrap_or_else(|| "help".to_string());
+        if command.starts_with('-') {
+            return Err(Error::config(format!(
+                "expected a command first, got flag '{command}'"
+            )));
+        }
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(stripped) = arg.strip_prefix("--") else {
+                return Err(Error::config(format!("unexpected argument '{arg}'")));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.push((k.to_string(), v.to_string()));
+            } else if VALUE_FLAGS.contains(&stripped) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| Error::config(format!("flag --{stripped} needs a value")))?;
+                flags.push((stripped.to_string(), v.clone()));
+            } else {
+                switches.push(stripped.to_string());
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Build the experiment config: preset (or the command's default) +
+    /// --config file + --set overrides + --runs/--seed shorthands.
+    pub fn config(&self, default_preset: &str) -> Result<ExperimentConfig> {
+        let name = self.get("preset").unwrap_or(default_preset);
+        let mut cfg = preset(name)?;
+        if let Some(path) = self.get("config") {
+            cfg.apply_file(path)?;
+        }
+        for kv in self.get_all("set") {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("--set wants key=value, got '{kv}'")))?;
+            cfg.apply_kv(k, v)?;
+        }
+        if let Some(r) = self.get("runs") {
+            cfg.apply_kv("runs", r)?;
+        }
+        if let Some(s) = self.get("seed") {
+            cfg.apply_kv("seed", s)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// The default dataset preset for each subcommand.
+pub fn default_preset_for(command: &str) -> &'static str {
+    match command {
+        "table2" | "table4" => "cifar100sim",
+        "table3" => "imagenetsim",
+        _ => "cifar10sim",
+    }
+}
+
+pub const HELP: &str = "\
+swap-train — SWAP (Stochastic Weight Averaging in Parallel, ICLR 2020)
+
+USAGE:  swap-train <command> [--preset NAME] [--config FILE]
+                   [--set key=value]... [--runs N] [--seed N]
+
+Training commands (print a run summary):
+  swap        run the three-phase SWAP algorithm
+  sb          small-batch SGD baseline
+  lb          large-batch SGD baseline
+  swa         sequential SWA from a small-batch run
+  local-sgd   post-local SGD extension
+
+Paper reproduction (write results/*.txt + *.csv):
+  table1      CIFAR10(sim)  SB vs LB vs SWAP          [preset cifar10sim]
+  table2      CIFAR100(sim) SB vs LB vs SWAP          [preset cifar100sim]
+  table3      ImageNet(sim) Top1/Top5 SB vs LB vs SWAP [preset imagenetsim]
+  table4      SWA vs SWAP                             [preset cifar100sim]
+  dawnbench   time-to-target accuracy (§5.1)
+  fig1        LR schedule + per-worker accuracy curves
+  fig2 fig3   loss-landscape planes (runs both)
+  fig4        cosine(−g, θ_swap − θ) series
+  schedules   fig5 + fig6 LR/batch schedule series
+  info        print preset config + artifact manifest
+
+Presets: tiny | cifar10sim | cifar100sim | imagenetsim
+Env: SWAP_RUNS=N override runs, SWAP_LOG=debug|info|warn|quiet";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--set", "runs=2"])).unwrap();
+        assert_eq!(a.command, "swap");
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert_eq!(a.get_all("set"), vec!["runs=2"]);
+    }
+
+    #[test]
+    fn parses_equals_form_and_switches() {
+        let a = Args::parse(&argv(&["fig1", "--preset=tiny", "--quiet"])).unwrap();
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert!(a.has("quiet"));
+        assert!(!a.has("loud"));
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = Args::parse(&argv(&["swap", "--seed", "1", "--seed", "2"])).unwrap();
+        assert_eq!(a.get("seed"), Some("2"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&argv(&["--preset", "x"])).is_err());
+        assert!(Args::parse(&argv(&["swap", "stray"])).is_err());
+        assert!(Args::parse(&argv(&["swap", "--preset"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(Args::parse(&[]).unwrap().command, "help");
+    }
+
+    #[test]
+    fn config_applies_overrides() {
+        let a = Args::parse(&argv(&[
+            "swap",
+            "--preset",
+            "tiny",
+            "--set",
+            "n_train=128",
+            "--runs",
+            "9",
+            "--seed",
+            "77",
+        ]))
+        .unwrap();
+        let cfg = a.config("cifar10sim").unwrap();
+        assert_eq!(cfg.preset, "tiny");
+        assert_eq!(cfg.n_train, 128);
+        assert_eq!(cfg.runs, 9);
+        assert_eq!(cfg.seed, 77);
+    }
+
+    #[test]
+    fn config_rejects_bad_set() {
+        let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--set", "oops"])).unwrap();
+        assert!(a.config("tiny").is_err());
+        let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--set", "zzz=1"])).unwrap();
+        assert!(a.config("tiny").is_err());
+    }
+
+    #[test]
+    fn default_presets() {
+        assert_eq!(default_preset_for("table2"), "cifar100sim");
+        assert_eq!(default_preset_for("table3"), "imagenetsim");
+        assert_eq!(default_preset_for("table1"), "cifar10sim");
+    }
+}

@@ -1,0 +1,279 @@
+//! Experiment configuration: presets mirroring the paper's hyperparameter
+//! tables (Appendix A, Tables 5-6; §5.2), scaled to this testbed per
+//! DESIGN.md, plus a small TOML-subset loader and `--set key=value`
+//! overrides so every knob is reachable from the CLI without recompiling.
+
+pub mod presets;
+
+pub use presets::preset;
+
+use crate::data::AugmentSpec;
+use crate::optim::{imagenet_piecewise, Schedule};
+use crate::util::{Error, Result};
+
+/// All knobs of one experiment family (one dataset preset).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// artifact preset directory name (tiny / cifar10sim / ...)
+    pub preset: String,
+    pub artifacts_root: String,
+    pub seed: u64,
+    /// statistics are collected over this many runs (paper: 10 / 3)
+    pub runs: usize,
+
+    // ---- data ----
+    pub n_train: usize,
+    pub n_test: usize,
+    pub augment: bool,
+    /// per-executable batch size (must exist in the artifact manifest)
+    pub exec_batch: usize,
+    /// batches for phase-3 BN recomputation
+    pub bn_batches: usize,
+
+    // ---- cluster shape ----
+    /// SWAP phase-2 independent workers W
+    pub workers: usize,
+    /// devices inside each phase-2 worker (ImageNet: 2 groups x 8 GPUs)
+    pub group_devices: usize,
+    /// devices for the small-batch baseline arm
+    pub sb_devices: usize,
+    /// devices for the large-batch baseline arm (= workers*group_devices)
+    pub lb_devices: usize,
+
+    // ---- small-batch baseline schedule ----
+    pub sb_epochs: usize,
+    pub sb_peak_lr: f32,
+    pub sb_warmup_frac: f64,
+
+    // ---- large-batch baseline schedule ----
+    pub lb_epochs: usize,
+    pub lb_peak_lr: f32,
+    pub lb_warmup_frac: f64,
+
+    // ---- SWAP phases ----
+    pub phase1_max_epochs: usize,
+    /// τ: phase 1 exits at this training accuracy
+    pub phase1_stop_acc: f64,
+    pub phase2_epochs: usize,
+    pub phase2_peak_lr: f32,
+
+    // ---- SWA baseline (Table 4) ----
+    pub swa_cycles: usize,
+    pub swa_cycle_epochs: usize,
+    pub swa_high_lr: f32,
+    pub swa_low_lr: f32,
+
+    /// use the piecewise ImageNet-style schedule (Fig 5) instead of the
+    /// warmup-triangle for the baselines/phase 1
+    pub imagenet_style: bool,
+}
+
+impl ExperimentConfig {
+    pub fn artifacts_dir(&self) -> std::path::PathBuf {
+        std::path::Path::new(&self.artifacts_root).join(&self.preset)
+    }
+
+    pub fn augment_spec(&self) -> AugmentSpec {
+        if self.augment {
+            AugmentSpec::cifar_default()
+        } else {
+            AugmentSpec::none()
+        }
+    }
+
+    fn triangle(&self, peak: f32, epochs: usize, warmup_frac: f64, spe: usize) -> Schedule {
+        let total = (epochs * spe).max(2);
+        Schedule::Triangle {
+            peak,
+            warmup: ((total as f64 * warmup_frac) as usize).max(1),
+            total,
+            end_lr: 0.0,
+        }
+    }
+
+    /// Small-batch baseline schedule given its steps/epoch.
+    pub fn sb_schedule(&self, spe: usize) -> Schedule {
+        if self.imagenet_style {
+            imagenet_piecewise(spe * self.sb_epochs / 28.max(1), self.sb_peak_lr)
+        } else {
+            self.triangle(self.sb_peak_lr, self.sb_epochs, self.sb_warmup_frac, spe)
+        }
+    }
+
+    /// Large-batch baseline schedule (linear-scaling rule already applied
+    /// in `lb_peak_lr`).
+    pub fn lb_schedule(&self, spe: usize) -> Schedule {
+        if self.imagenet_style {
+            imagenet_piecewise(spe * self.lb_epochs / 28.max(1), self.lb_peak_lr)
+        } else {
+            self.triangle(self.lb_peak_lr, self.lb_epochs, self.lb_warmup_frac, spe)
+        }
+    }
+
+    /// SWAP phase 1 uses the LB schedule shape over its max epochs.
+    pub fn phase1_schedule(&self, spe: usize) -> Schedule {
+        if self.imagenet_style {
+            imagenet_piecewise(spe * self.phase1_max_epochs / 22.max(1), self.lb_peak_lr)
+        } else {
+            self.triangle(self.lb_peak_lr, self.phase1_max_epochs, self.lb_warmup_frac, spe)
+        }
+    }
+
+    /// SWAP phase 2: no warmup, decay from the (lower) phase-2 peak to 0
+    /// (Appendix A: warm-up epochs 0).
+    pub fn phase2_schedule(&self, spe: usize) -> Schedule {
+        Schedule::Triangle {
+            peak: self.phase2_peak_lr,
+            warmup: 1,
+            total: (self.phase2_epochs * spe).max(2),
+            end_lr: 0.0,
+        }
+    }
+
+    /// Apply one `key = value` override. Returns an error on unknown keys
+    /// so typos fail loudly.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+            v.trim().parse::<T>().map_err(|_| {
+                Error::config(format!("bad value '{v}' for key '{k}'"))
+            })
+        }
+        match key.trim() {
+            "seed" => self.seed = p(key, value)?,
+            "runs" => self.runs = p(key, value)?,
+            "n_train" => self.n_train = p(key, value)?,
+            "n_test" => self.n_test = p(key, value)?,
+            "augment" => self.augment = p(key, value)?,
+            "exec_batch" => self.exec_batch = p(key, value)?,
+            "bn_batches" => self.bn_batches = p(key, value)?,
+            "workers" => self.workers = p(key, value)?,
+            "group_devices" => self.group_devices = p(key, value)?,
+            "sb_devices" => self.sb_devices = p(key, value)?,
+            "lb_devices" => self.lb_devices = p(key, value)?,
+            "sb_epochs" => self.sb_epochs = p(key, value)?,
+            "sb_peak_lr" => self.sb_peak_lr = p(key, value)?,
+            "sb_warmup_frac" => self.sb_warmup_frac = p(key, value)?,
+            "lb_epochs" => self.lb_epochs = p(key, value)?,
+            "lb_peak_lr" => self.lb_peak_lr = p(key, value)?,
+            "lb_warmup_frac" => self.lb_warmup_frac = p(key, value)?,
+            "phase1_max_epochs" => self.phase1_max_epochs = p(key, value)?,
+            "phase1_stop_acc" => self.phase1_stop_acc = p(key, value)?,
+            "phase2_epochs" => self.phase2_epochs = p(key, value)?,
+            "phase2_peak_lr" => self.phase2_peak_lr = p(key, value)?,
+            "swa_cycles" => self.swa_cycles = p(key, value)?,
+            "swa_cycle_epochs" => self.swa_cycle_epochs = p(key, value)?,
+            "swa_high_lr" => self.swa_high_lr = p(key, value)?,
+            "swa_low_lr" => self.swa_low_lr = p(key, value)?,
+            "artifacts_root" => self.artifacts_root = value.trim().to_string(),
+            "imagenet_style" => self.imagenet_style = p(key, value)?,
+            other => {
+                return Err(Error::config(format!("unknown config key '{other}'")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines (TOML subset: comments with '#', blank
+    /// lines and [section] headers ignored).
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("{path}:{}: expected key = value", lineno + 1))
+            })?;
+            self.apply_kv(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.lb_devices != self.workers * self.group_devices {
+            return Err(Error::config(format!(
+                "lb_devices {} must equal workers {} x group_devices {}",
+                self.lb_devices, self.workers, self.group_devices
+            )));
+        }
+        let need = |b: usize, what: &str| -> Result<()> {
+            if b * self.exec_batch > self.n_train {
+                return Err(Error::config(format!(
+                    "{what}: global batch {} exceeds n_train {}",
+                    b * self.exec_batch,
+                    self.n_train
+                )));
+            }
+            Ok(())
+        };
+        need(self.lb_devices, "large batch")?;
+        need(self.sb_devices, "small batch")?;
+        if self.runs == 0 {
+            return Err(Error::config("runs must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_loads_and_validates() {
+        for name in ["tiny", "cifar10sim", "cifar100sim", "imagenetsim"] {
+            let cfg = preset(name).unwrap();
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(cfg.preset, name);
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn apply_kv_overrides() {
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_kv("runs", "7").unwrap();
+        assert_eq!(cfg.runs, 7);
+        cfg.apply_kv("sb_peak_lr", "0.42").unwrap();
+        assert!((cfg.sb_peak_lr - 0.42).abs() < 1e-6);
+        cfg.apply_kv("augment", "false").unwrap();
+        assert!(!cfg.augment);
+        assert!(cfg.apply_kv("nonsense", "1").is_err());
+        assert!(cfg.apply_kv("runs", "notanumber").is_err());
+    }
+
+    #[test]
+    fn apply_file_parses_toml_subset() {
+        let path = std::env::temp_dir().join(format!("swap-cfg-{}.toml", std::process::id()));
+        std::fs::write(&path, "# comment\n[section]\nruns = 5\nseed=123 # trailing\n").unwrap();
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.runs, 5);
+        assert_eq!(cfg.seed, 123);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validate_catches_inconsistency() {
+        let mut cfg = preset("tiny").unwrap();
+        cfg.lb_devices = 3; // != workers * group_devices
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.n_train = 8; // smaller than the LB global batch
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn schedules_have_positive_peaks() {
+        let cfg = preset("cifar10sim").unwrap();
+        let spe = cfg.n_train / (cfg.sb_devices * cfg.exec_batch);
+        let s = cfg.sb_schedule(spe);
+        let peak = (0..cfg.sb_epochs * spe).map(|t| s.lr(t)).fold(0.0f32, f32::max);
+        assert!((peak - cfg.sb_peak_lr).abs() < 0.05 * cfg.sb_peak_lr);
+        // phase-2 schedule starts near its peak (no warmup)
+        let p2 = cfg.phase2_schedule(spe);
+        assert!(p2.lr(1) > 0.8 * cfg.phase2_peak_lr);
+    }
+}

@@ -1,0 +1,181 @@
+//! Gradient all-reduce: an actual ring-reduce-scatter + all-gather schedule
+//! over in-process worker shards (the Horovod algorithm the paper runs),
+//! plus the trivial mean as an oracle. The property tests assert the ring
+//! schedule produces exactly the arithmetic mean; the α–β *cost* of the
+//! ring lives in `sim::NetModel`.
+
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+/// Naive oracle: elementwise mean of the workers' gradient sets.
+pub fn naive_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    crate::tensor::average_sets(worker_grads)
+}
+
+/// Ring all-reduce over W workers' flattened gradients.
+///
+/// Implements the standard two-phase schedule on W chunks:
+///   * reduce-scatter: in step s, worker w sends chunk (w - s) and adds the
+///     received chunk into its accumulator; after W-1 steps worker w owns
+///     the fully-reduced chunk (w + 1).
+///   * all-gather: the owned chunks circulate for W-1 more steps.
+///
+/// Returns the averaged gradient set (divided by W at the end).
+pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    let w = worker_grads.len();
+    if w == 0 {
+        return Err(Error::invalid("ring_mean: no workers"));
+    }
+    if w == 1 {
+        return Ok(worker_grads[0].clone());
+    }
+    // Flatten each worker's set into one vector (the real implementation
+    // fuses tensors into buckets exactly like this).
+    let shapes: Vec<Vec<usize>> = worker_grads[0].iter().map(|t| t.shape().to_vec()).collect();
+    let total: usize = worker_grads[0].iter().map(|t| t.numel()).sum();
+    let mut flat: Vec<Vec<f32>> = worker_grads
+        .iter()
+        .map(|set| {
+            if set.len() != shapes.len() {
+                return Err(Error::shape("ring_mean: ragged worker sets"));
+            }
+            let mut v = Vec::with_capacity(total);
+            for t in set {
+                v.extend_from_slice(t.data());
+            }
+            Ok(v)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if flat.iter().any(|v| v.len() != total) {
+        return Err(Error::shape("ring_mean: inconsistent gradient sizes"));
+    }
+
+    // chunk boundaries (W chunks, last one takes the remainder)
+    let chunk = |c: usize| -> std::ops::Range<usize> {
+        let per = total / w;
+        let start = c * per;
+        let end = if c == w - 1 { total } else { start + per };
+        start..end
+    };
+
+    // reduce-scatter
+    for s in 0..w - 1 {
+        // worker r receives chunk (r - s - 1) from worker (r - 1)
+        let snapshots: Vec<Vec<f32>> = (0..w)
+            .map(|r| {
+                let c = (r + w - s) % w; // chunk each worker SENDS this step
+                flat[r][chunk(c)].to_vec()
+            })
+            .collect();
+        for r in 0..w {
+            let sender = (r + w - 1) % w;
+            let c = (sender + w - s) % w;
+            let rng = chunk(c);
+            let recv = &snapshots[sender];
+            for (dst, src) in flat[r][rng].iter_mut().zip(recv) {
+                *dst += src;
+            }
+        }
+    }
+    // after reduce-scatter, worker r owns fully-reduced chunk (r + 1) % w
+    // all-gather
+    for s in 0..w - 1 {
+        let snapshots: Vec<(usize, Vec<f32>)> = (0..w)
+            .map(|r| {
+                let c = (r + 1 + w - s) % w; // chunk each worker sends
+                (c, flat[r][chunk(c)].to_vec())
+            })
+            .collect();
+        for r in 0..w {
+            let sender = (r + w - 1) % w;
+            let (c, ref data) = snapshots[sender];
+            let rng = chunk(c);
+            flat[r][rng].copy_from_slice(data);
+        }
+    }
+
+    // every worker now holds the identical full sum; divide and un-flatten
+    let inv = 1.0 / w as f32;
+    let result = &mut flat[0];
+    for x in result.iter_mut() {
+        *x *= inv;
+    }
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for shape in &shapes {
+        let n: usize = shape.iter().product();
+        out.push(Tensor::new(shape.clone(), result[off..off + n].to_vec())?);
+        off += n;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::property;
+
+    fn rand_sets(g: &mut crate::testutil::Gen, w: usize) -> Vec<Vec<Tensor>> {
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![g.usize_in(1..20)],
+            vec![g.usize_in(1..7), g.usize_in(1..7)],
+        ];
+        (0..w)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        Tensor::new(s.clone(), (0..n).map(|_| g.normal()).collect()).unwrap()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_equals_naive_mean_property() {
+        property(60, |g| {
+            let w = g.usize_in(1..9);
+            let sets = rand_sets(g, w);
+            let ring = ring_mean(&sets).unwrap();
+            let naive = naive_mean(&sets).unwrap();
+            for (a, b) in ring.iter().zip(&naive) {
+                assert_eq!(a.shape(), b.shape());
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()), "{x} vs {y} (W={w})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let set = vec![vec![Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap()]];
+        assert_eq!(ring_mean(&set).unwrap(), set[0]);
+    }
+
+    #[test]
+    fn two_workers_mean() {
+        let a = vec![Tensor::new(vec![2], vec![0.0, 4.0]).unwrap()];
+        let b = vec![Tensor::new(vec![2], vec![2.0, 0.0]).unwrap()];
+        let m = ring_mean(&[a, b]).unwrap();
+        assert_eq!(m[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn tiny_tensor_fewer_elements_than_workers() {
+        // total elements < W exercises the degenerate chunking path
+        let sets: Vec<Vec<Tensor>> = (0..5)
+            .map(|i| vec![Tensor::new(vec![2], vec![i as f32, 1.0]).unwrap()])
+            .collect();
+        let m = ring_mean(&sets).unwrap();
+        assert!((m[0].data()[0] - 2.0).abs() < 1e-6);
+        assert!((m[0].data()[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_errors() {
+        assert!(ring_mean(&[]).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! The paper's comparison arms: pure small-batch and pure large-batch SGD
+//! (Tables 1-3, rows 1-2). Both reuse the shared synchronous trainer; the
+//! only differences are device count / global batch / schedule.
+
+use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use crate::metrics::RunOutcome;
+use crate::model::ParamSet;
+use crate::optim::Schedule;
+use crate::sim::ClusterClock;
+use crate::util::Result;
+
+/// One plain SGD training arm.
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub devices: usize,
+    pub epochs: usize,
+    pub sched: Schedule,
+    /// early stop on training accuracy (1.0+ = train the full epochs)
+    pub stop_train_acc: f64,
+    pub seed: u64,
+}
+
+pub struct BaselineResult {
+    pub outcome: RunOutcome,
+    pub progress: TrainProgress,
+    pub params: ParamSet,
+    pub clock: ClusterClock,
+}
+
+/// Train one model with `devices`-way synchronous data parallelism
+/// (devices=1 is the small-batch single-device arm), then evaluate with
+/// freshly recomputed BN statistics.
+pub fn run_baseline(env: &TrainEnv, cfg: &BaselineConfig) -> Result<BaselineResult> {
+    let wall0 = std::time::Instant::now();
+    let mut clock = ClusterClock::new();
+    let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
+    let mut momentum = params.zeros_like();
+    let progress = run_sync_training(
+        env,
+        &mut params,
+        &mut momentum,
+        &SyncTrainConfig {
+            devices: cfg.devices,
+            global_batch: cfg.devices * env.exec_batch,
+            max_epochs: cfg.epochs,
+            stop_train_acc: cfg.stop_train_acc,
+            sched: cfg.sched.clone(),
+            sched_offset: 0,
+            seed_stream: 0,
+            seed: cfg.seed,
+        },
+        &mut clock,
+        |_, _, _| {},
+    )?;
+    // Reporting-only BN recompute + eval (running-stat maintenance is free
+    // in a standard training loop, so it is not charged as training time).
+    let stats = env.bn_and_eval(&params, cfg.seed, &mut clock)?;
+    let outcome = RunOutcome {
+        test_acc1: stats.accuracy1(),
+        test_acc5: stats.accuracy5(),
+        test_loss: stats.mean_loss(),
+        cluster_seconds: clock.seconds,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+    };
+    Ok(BaselineResult { outcome, progress, params, clock })
+}

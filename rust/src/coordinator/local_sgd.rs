@@ -1,0 +1,125 @@
+//! Post-local SGD (Lin et al. 2018) — the closest related method (§2) and
+//! a future-work integration target (§6). Implemented as an extension so
+//! the ablation benches can compare model-averaging *frequencies*: SWAP
+//! averages once after many epochs; post-local SGD averages every H steps.
+//!
+//! Algorithm: synchronous large-batch SGD for `sync_epochs`, then the
+//! devices switch to *local* updates (fused small-batch steps) and average
+//! their PARAMETERS every `h_steps` steps.
+
+use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
+use crate::data::{AugmentSpec, Batcher, EpochSampler};
+use crate::metrics::RunOutcome;
+use crate::model::ParamSet;
+use crate::optim::Schedule;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result, Rng};
+
+#[derive(Debug, Clone)]
+pub struct LocalSgdConfig {
+    pub devices: usize,
+    /// synchronous large-batch epochs before going local
+    pub sync_epochs: usize,
+    pub sync_sched: Schedule,
+    /// local epochs after the switch
+    pub local_epochs: usize,
+    pub local_sched: Schedule,
+    /// parameter-averaging period in local steps (H)
+    pub h_steps: usize,
+    pub seed: u64,
+}
+
+pub struct LocalSgdResult {
+    pub outcome: RunOutcome,
+    pub params: ParamSet,
+    /// number of parameter-averaging synchronizations in the local phase
+    pub sync_events: usize,
+}
+
+pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdResult> {
+    if cfg.h_steps == 0 {
+        return Err(Error::config("local sgd: h_steps must be > 0"));
+    }
+    let wall0 = std::time::Instant::now();
+    let mut clock = ClusterClock::new();
+
+    // Phase A: synchronous large batch (same machinery as SWAP phase 1).
+    let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
+    let mut momentum = params.zeros_like();
+    run_sync_training(
+        env,
+        &mut params,
+        &mut momentum,
+        &SyncTrainConfig {
+            devices: cfg.devices,
+            global_batch: cfg.devices * env.exec_batch,
+            max_epochs: cfg.sync_epochs,
+            stop_train_acc: 1.1,
+            sched: cfg.sync_sched.clone(),
+            sched_offset: 0,
+            seed_stream: 0,
+            seed: cfg.seed,
+        },
+        &mut clock,
+        |_, _, _| {},
+    )?;
+
+    // Phase B: local SGD with periodic parameter averaging.
+    let b = env.exec_batch;
+    let mut worker_params: Vec<ParamSet> = (0..cfg.devices).map(|_| params.clone()).collect();
+    let mut worker_mom: Vec<ParamSet> = worker_params.iter().map(|p| p.zeros_like()).collect();
+    let mut samplers: Vec<EpochSampler> = (0..cfg.devices)
+        .map(|w| EpochSampler::new(env.train.n, b, cfg.seed, 500 + w as u64))
+        .collect();
+    let mut batcher = Batcher::new(b, env.image_size(), env.augment);
+    let mut aug_rng = Rng::stream(cfg.seed ^ 0x10CA1, 0);
+
+    let steps_per_epoch = env.train.n / b;
+    let total_local_steps = cfg.local_epochs * steps_per_epoch;
+    let step_time = env.cost.train_step_time(b);
+    let mut sync_events = 0usize;
+
+    for step in 0..total_local_steps {
+        for w in 0..cfg.devices {
+            let idx = samplers[w].next_batch().to_vec();
+            let hb = batcher.assemble(env.train, &idx, &mut aug_rng);
+            let lr = cfg.local_sched.lr(step);
+            env.engine.train_step(
+                worker_params[w].as_mut_slice(),
+                worker_mom[w].as_mut_slice(),
+                &hb,
+                lr,
+            )?;
+        }
+        // local steps run in parallel on the modeled cluster
+        clock.advance_compute(step_time);
+        if (step + 1) % cfg.h_steps == 0 {
+            let avg = ParamSet::average(&worker_params)?;
+            for wp in &mut worker_params {
+                *wp = avg.clone();
+            }
+            clock.advance_comm(env.cost.allreduce_time(cfg.devices));
+            sync_events += 1;
+        }
+    }
+
+    // final consensus model
+    params = ParamSet::average(&worker_params)?;
+    if total_local_steps % cfg.h_steps != 0 {
+        clock.advance_comm(env.cost.allreduce_time(cfg.devices));
+        sync_events += 1;
+    }
+    let stats = env.bn_and_eval(&params, cfg.seed, &mut clock)?;
+    let _ = AugmentSpec::none(); // (explicit import use)
+    Ok(LocalSgdResult {
+        outcome: RunOutcome {
+            test_acc1: stats.accuracy1(),
+            test_acc5: stats.accuracy5(),
+            test_loss: stats.mean_loss(),
+            cluster_seconds: clock.seconds,
+            wall_seconds: wall0.elapsed().as_secs_f64(),
+        },
+        params,
+        sync_events,
+    })
+}

@@ -1,0 +1,23 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! * `trainer`   — shared synchronous data-parallel loop + eval + BN
+//! * `allreduce` — ring all-reduce (value) over worker gradient shards
+//! * `swap`      — Algorithm 1 (three phases)
+//! * `baseline`  — pure small-/large-batch SGD arms (Tables 1-3)
+//! * `swa`       — sequential SWA baseline (Table 4)
+//! * `local_sgd` — post-local SGD extension (§2/§6 related method)
+
+pub mod allreduce;
+pub mod baseline;
+pub mod local_sgd;
+pub mod resume;
+pub mod swa;
+pub mod swap;
+pub mod trainer;
+
+pub use baseline::{run_baseline, BaselineConfig, BaselineResult};
+pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdResult};
+pub use resume::{run_swap_resumable, RunDir};
+pub use swa::{run_swa, SwaConfig, SwaResult};
+pub use swap::{run_swap, SwapConfig, SwapResult};
+pub use trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};

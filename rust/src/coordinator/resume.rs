@@ -1,0 +1,211 @@
+//! Phase-level checkpointing: SWAP as a restartable pipeline.
+//!
+//! Production clusters preempt; a leader must be able to resume SWAP
+//! without redoing phase 1 (the expensive synchronous part). This module
+//! persists the phase-1 output (weights + clock + progress meta) and each
+//! finished phase-2 worker, then re-enters the algorithm at the first
+//! missing piece. File layout under a run directory:
+//!
+//! ```text
+//! run/phase1.ckpt          phase-1 weights
+//! run/phase1.meta.json     steps/epochs/train-acc/cluster-clock
+//! run/worker<k>.ckpt       finished phase-2 replicas
+//! ```
+//!
+//! Determinism note: a resumed run reproduces the fresh run exactly —
+//! worker k always uses seed stream `100 + k` regardless of which process
+//! executed it (tested in rust/tests/integration_coordinator.rs).
+
+use std::path::{Path, PathBuf};
+
+use super::swap::{SwapConfig, SwapResult};
+use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use crate::model::{load_params, save_params, ParamSet};
+use crate::sim::ClusterClock;
+use crate::util::{Error, Json, Result};
+
+pub struct RunDir {
+    dir: PathBuf,
+}
+
+impl RunDir {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(RunDir { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn phase1_ckpt(&self) -> PathBuf {
+        self.dir.join("phase1.ckpt")
+    }
+
+    fn phase1_meta(&self) -> PathBuf {
+        self.dir.join("phase1.meta.json")
+    }
+
+    fn worker_ckpt(&self, w: usize) -> PathBuf {
+        self.dir.join(format!("worker{w}.ckpt"))
+    }
+
+    pub fn has_phase1(&self) -> bool {
+        self.phase1_ckpt().exists() && self.phase1_meta().exists()
+    }
+
+    pub fn finished_workers(&self, total: usize) -> Vec<usize> {
+        (0..total).filter(|w| self.worker_ckpt(*w).exists()).collect()
+    }
+
+    pub fn save_phase1(
+        &self,
+        env: &TrainEnv,
+        params: &ParamSet,
+        progress: &TrainProgress,
+        clock: &ClusterClock,
+    ) -> Result<()> {
+        save_params(self.phase1_ckpt(), env.engine.manifest(), params)?;
+        let meta = Json::obj(vec![
+            ("steps", Json::Num(progress.steps as f64)),
+            ("epochs", Json::Num(progress.epochs)),
+            ("train_acc", Json::Num(progress.train_acc)),
+            ("train_loss", Json::Num(progress.train_loss)),
+            ("seconds", Json::Num(clock.seconds)),
+            ("compute", Json::Num(clock.compute)),
+            ("comm", Json::Num(clock.comm)),
+        ]);
+        std::fs::write(self.phase1_meta(), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load_phase1(&self, env: &TrainEnv) -> Result<(ParamSet, TrainProgress, ClusterClock)> {
+        let params = load_params(self.phase1_ckpt(), env.engine.manifest())?;
+        let meta = Json::parse(&std::fs::read_to_string(self.phase1_meta())?)?;
+        let f = |k: &str| -> Result<f64> {
+            meta.req(k)?
+                .as_f64()
+                .ok_or_else(|| Error::json(format!("phase1 meta: {k}")))
+        };
+        let progress = TrainProgress {
+            steps: f("steps")? as usize,
+            epochs: f("epochs")?,
+            train_acc: f("train_acc")?,
+            train_loss: f("train_loss")?,
+        };
+        let clock = ClusterClock {
+            seconds: f("seconds")?,
+            compute: f("compute")?,
+            comm: f("comm")?,
+            eval: 0.0,
+        };
+        Ok((params, progress, clock))
+    }
+}
+
+/// Run SWAP with on-disk phase checkpoints: skips phase 1 and any finished
+/// phase-2 workers that are already present in `dir`. Produces the same
+/// SwapResult a fresh `run_swap` would (modulo the snapshot trails, which
+/// are not persisted).
+pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Result<SwapResult> {
+    let wall0 = std::time::Instant::now();
+    let devices = cfg.total_devices();
+
+    // ---- phase 1 (or resume) -------------------------------------------
+    let (params, p1, mut clock) = if dir.has_phase1() {
+        crate::info!("resume: phase 1 loaded from {}", dir.dir.display());
+        dir.load_phase1(env)?
+    } else {
+        let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
+        let mut momentum = params.zeros_like();
+        let mut clock = ClusterClock::new();
+        let p1 = run_sync_training(
+            env,
+            &mut params,
+            &mut momentum,
+            &SyncTrainConfig {
+                devices,
+                global_batch: devices * env.exec_batch,
+                max_epochs: cfg.phase1_max_epochs,
+                stop_train_acc: cfg.phase1_stop_acc,
+                sched: cfg.phase1_sched.clone(),
+                sched_offset: 0,
+                seed_stream: 0,
+                seed: cfg.seed,
+            },
+            &mut clock,
+            |_, _, _| {},
+        )?;
+        dir.save_phase1(env, &params, &p1, &clock)?;
+        (params, p1, clock)
+    };
+    let phase1_seconds = clock.seconds;
+    let phase1_params = params.clone();
+
+    // ---- phase 2 (skip finished workers) --------------------------------
+    let mut worker_params = Vec::with_capacity(cfg.workers);
+    let mut group_durations = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let ckpt = dir.worker_ckpt(w);
+        // every worker's modeled duration counts even when its work is
+        // loaded from disk — the virtual cluster ran it either way
+        let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
+        let mut wclock = ClusterClock::new();
+        if ckpt.exists() {
+            crate::info!("resume: worker {w} loaded");
+            worker_params.push(load_params(&ckpt, env.engine.manifest())?);
+            wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
+            if cfg.group_devices > 1 {
+                for _ in 0..steps {
+                    wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
+                }
+            }
+        } else {
+            let mut wp = params.clone();
+            let mut wm = wp.zeros_like();
+            run_sync_training(
+                env,
+                &mut wp,
+                &mut wm,
+                &SyncTrainConfig {
+                    devices: cfg.group_devices,
+                    global_batch: cfg.group_devices * env.exec_batch,
+                    max_epochs: cfg.phase2_epochs,
+                    stop_train_acc: 1.1,
+                    sched: cfg.phase2_sched.clone(),
+                    sched_offset: 0,
+                    seed_stream: 100 + w as u64,
+                    seed: cfg.seed,
+                },
+                &mut wclock,
+                |_, _, _| {},
+            )?;
+            save_params(&ckpt, env.engine.manifest(), &wp)?;
+            worker_params.push(wp);
+        }
+        group_durations.push(wclock.seconds);
+    }
+    clock.advance_parallel(&group_durations);
+    let phase2_seconds = clock.seconds;
+
+    // ---- phase 3 (same as run_swap) --------------------------------------
+    let mut worker_stats = Vec::with_capacity(cfg.workers);
+    for wp in &worker_params {
+        worker_stats.push(env.bn_and_eval(wp, cfg.seed, &mut clock)?);
+    }
+    let final_params = ParamSet::average(&worker_params)?;
+    let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
+    let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
+
+    Ok(SwapResult {
+        phase1: p1,
+        phase1_seconds,
+        phase2_seconds,
+        worker_params,
+        worker_stats,
+        final_params,
+        final_bn,
+        final_stats,
+        clock,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+        snapshots: Vec::new(),
+        phase1_params,
+        phase1_snapshots: Vec::new(),
+    })
+}

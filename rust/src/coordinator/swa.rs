@@ -1,0 +1,99 @@
+//! Sequential Stochastic Weight Averaging (Izmailov et al. 2018) — the
+//! baseline SWAP is compared against in §5.3 / Table 4.
+//!
+//! A cyclic (sawtooth) learning-rate schedule runs for `cycles` cycles of
+//! `cycle_epochs` each on ONE model; a weight sample is taken at the end of
+//! every cycle (the low-LR point); the samples are averaged and BN is
+//! recomputed. Unlike SWAP the samples are sequential, so the cluster time
+//! is the *sum* of all cycles (on the devices used), not the max.
+
+use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
+use crate::model::{BnState, ParamSet};
+use crate::optim::Schedule;
+use crate::runtime::BatchStats;
+use crate::sim::ClusterClock;
+use crate::util::Result;
+
+#[derive(Debug, Clone)]
+pub struct SwaConfig {
+    /// data-parallel devices for the cyclic run (large-batch SWA uses many,
+    /// small-batch SWA uses 1)
+    pub devices: usize,
+    pub cycles: usize,
+    pub cycle_epochs: usize,
+    pub high_lr: f32,
+    pub low_lr: f32,
+    pub seed: u64,
+    pub seed_stream: u64,
+}
+
+pub struct SwaResult {
+    /// the sampled models (one per cycle)
+    pub samples: Vec<ParamSet>,
+    /// last iterate before averaging and its test stats
+    pub last_stats: BatchStats,
+    pub averaged: ParamSet,
+    pub final_bn: BnState,
+    pub final_stats: BatchStats,
+    pub clock: ClusterClock,
+    pub wall_seconds: f64,
+}
+
+/// Run SWA starting from `params` (continues in place).
+pub fn run_swa(
+    env: &TrainEnv,
+    params: &mut ParamSet,
+    cfg: &SwaConfig,
+    clock: &mut ClusterClock,
+) -> Result<SwaResult> {
+    let wall0 = std::time::Instant::now();
+    let mut momentum = params.zeros_like();
+    let mut samples = Vec::with_capacity(cfg.cycles);
+
+    let steps_per_epoch = env.train.n / (cfg.devices * env.exec_batch);
+    let period = cfg.cycle_epochs * steps_per_epoch;
+    let sched = Schedule::Cyclic {
+        high: cfg.high_lr,
+        low: cfg.low_lr,
+        period: period.max(1),
+    };
+
+    for _cycle in 0..cfg.cycles {
+        run_sync_training(
+            env,
+            params,
+            &mut momentum,
+            &SyncTrainConfig {
+                devices: cfg.devices,
+                global_batch: cfg.devices * env.exec_batch,
+                max_epochs: cfg.cycle_epochs,
+                stop_train_acc: 1.1,
+                sched: sched.clone(),
+                sched_offset: 0, // each cycle restarts the sawtooth
+                seed_stream: cfg.seed_stream,
+                seed: cfg.seed,
+            },
+            clock,
+            |_, _, _| {},
+        )?;
+        samples.push(params.clone());
+    }
+
+    // reporting-only: the last SGD iterate before averaging
+    let last_stats = env.bn_and_eval(params, cfg.seed, clock)?;
+
+    // average + BN recompute (charged, as in SWAP phase 3)
+    let averaged = ParamSet::average(&samples)?;
+    let final_bn = env.recompute_bn(&averaged, cfg.seed, clock, true)?;
+    let final_stats = env.evaluate(&averaged, &final_bn, clock)?;
+
+    Ok(SwaResult {
+        samples,
+        last_stats,
+        averaged,
+        final_bn,
+        final_stats,
+        clock: *clock,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,212 @@
+//! SWAP — Algorithm 1 of the paper, composed from the shared trainer.
+//!
+//! Phase 1: every device trains one shared model with the large global
+//!          batch (synchronous gradient all-reduce each step, high LR),
+//!          stopping at training accuracy τ *before* the loss reaches zero.
+//! Phase 2: the devices split into `workers` independent groups; each group
+//!          refines its own replica with the small batch, lower LR, and a
+//!          different data randomization. No cross-group synchronization.
+//! Phase 3: the divergent replicas are weight-averaged and the batch-norm
+//!          statistics are recomputed over the training data.
+
+use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use crate::model::{BnState, ParamSet};
+use crate::optim::Schedule;
+use crate::runtime::BatchStats;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result};
+
+/// Full SWAP configuration (one experiment arm).
+#[derive(Debug, Clone)]
+pub struct SwapConfig {
+    /// number of independent phase-2 workers (groups) W
+    pub workers: usize,
+    /// devices per group (1 for CIFAR presets; 2+ models the ImageNet
+    /// setting where each phase-2 worker is itself data-parallel)
+    pub group_devices: usize,
+    /// phase-1 length cap and early-stop threshold τ
+    pub phase1_max_epochs: usize,
+    pub phase1_stop_acc: f64,
+    pub phase1_sched: Schedule,
+    /// phase-2 epochs per worker and schedule
+    pub phase2_epochs: usize,
+    pub phase2_sched: Schedule,
+    pub seed: u64,
+    /// snapshot params every N phase-2 steps (figure instrumentation)
+    pub snapshot_every: Option<usize>,
+    /// snapshot the shared model every N phase-1 steps (Figure 1's left
+    /// half plots the phase-1 accuracy trajectory)
+    pub phase1_snapshot_every: Option<usize>,
+}
+
+impl SwapConfig {
+    pub fn total_devices(&self) -> usize {
+        self.workers * self.group_devices
+    }
+}
+
+/// Per-worker phase-2 snapshot trail (for Figures 1 and 4).
+pub type Snapshots = Vec<Vec<(usize, ParamSet)>>;
+
+/// Everything the tables/figures need from one SWAP run.
+pub struct SwapResult {
+    pub phase1: TrainProgress,
+    /// cluster seconds at the end of phase 1
+    pub phase1_seconds: f64,
+    /// cluster seconds at the end of phase 2 (= "before averaging" time)
+    pub phase2_seconds: f64,
+    /// the divergent phase-2 worker models
+    pub worker_params: Vec<ParamSet>,
+    /// per-worker test statistics before averaging
+    pub worker_stats: Vec<BatchStats>,
+    /// the averaged model + recomputed BN + its test statistics
+    pub final_params: ParamSet,
+    pub final_bn: BnState,
+    pub final_stats: BatchStats,
+    /// total modeled cluster time ("after averaging" time column)
+    pub clock: ClusterClock,
+    /// real wall seconds on this machine
+    pub wall_seconds: f64,
+    /// phase-2 snapshots if requested
+    pub snapshots: Snapshots,
+    /// the phase-1 output (the 'LB' anchor point for Figure 2)
+    pub phase1_params: ParamSet,
+    /// phase-1 snapshot trail if requested
+    pub phase1_snapshots: Vec<(usize, ParamSet)>,
+}
+
+/// Run the full three-phase SWAP algorithm.
+pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
+    if cfg.workers == 0 || cfg.group_devices == 0 {
+        return Err(Error::config("swap: workers/group_devices must be > 0"));
+    }
+    let wall0 = std::time::Instant::now();
+    let mut clock = ClusterClock::new();
+
+    // ---------------- Phase 1: synchronous large batch -----------------
+    let devices = cfg.total_devices();
+    let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
+    let mut momentum = params.zeros_like();
+    let mut phase1_snapshots: Vec<(usize, ParamSet)> = Vec::new();
+    let p1_snap = cfg.phase1_snapshot_every;
+    let p1 = run_sync_training(
+        env,
+        &mut params,
+        &mut momentum,
+        &SyncTrainConfig {
+            devices,
+            global_batch: devices * env.exec_batch,
+            max_epochs: cfg.phase1_max_epochs,
+            stop_train_acc: cfg.phase1_stop_acc,
+            sched: cfg.phase1_sched.clone(),
+            sched_offset: 0,
+            seed_stream: 0,
+            seed: cfg.seed,
+        },
+        &mut clock,
+        |step, ps, _| {
+            if let Some(every) = p1_snap {
+                if step % every == 0 {
+                    phase1_snapshots.push((step, ps.clone()));
+                }
+            }
+        },
+    )?;
+    let phase1_seconds = clock.seconds;
+    let phase1_params = params.clone();
+    crate::info!(
+        "phase 1 done: {:.2} epochs, train acc {:.3}, cluster {:.3}s",
+        p1.epochs,
+        p1.train_acc,
+        phase1_seconds
+    );
+
+    // ---------------- Phase 2: independent refinement ------------------
+    // Each group starts from the phase-1 weights with fresh momentum and a
+    // distinct data stream; groups run in parallel on the modeled cluster.
+    let mut worker_params = Vec::with_capacity(cfg.workers);
+    let mut snapshots: Snapshots = Vec::with_capacity(cfg.workers);
+    let mut group_durations = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let mut wp = params.clone();
+        let mut wm = wp.zeros_like();
+        let mut wclock = ClusterClock::new();
+        let mut trail = Vec::new();
+        let snap = cfg.snapshot_every;
+        run_sync_training(
+            env,
+            &mut wp,
+            &mut wm,
+            &SyncTrainConfig {
+                devices: cfg.group_devices,
+                global_batch: cfg.group_devices * env.exec_batch,
+                max_epochs: cfg.phase2_epochs,
+                stop_train_acc: 1.1, // never early-stop in phase 2
+                sched: cfg.phase2_sched.clone(),
+                sched_offset: 0,
+                seed_stream: 100 + w as u64, // different randomization per worker
+                seed: cfg.seed,
+            },
+            &mut wclock,
+            |step, ps, _| {
+                if let Some(every) = snap {
+                    if step % every == 0 {
+                        trail.push((step, ps.clone()));
+                    }
+                }
+            },
+        )?;
+        group_durations.push(wclock.seconds);
+        worker_params.push(wp);
+        snapshots.push(trail);
+    }
+    clock.advance_parallel(&group_durations);
+    let phase2_seconds = clock.seconds;
+
+    // reporting-only: each worker's test accuracy before averaging
+    let mut worker_stats = Vec::with_capacity(cfg.workers);
+    for wp in &worker_params {
+        worker_stats.push(env.bn_and_eval(wp, cfg.seed, &mut clock)?);
+    }
+
+    // ---------------- Phase 3: average + BN recompute ------------------
+    let final_params = ParamSet::average(&worker_params)?;
+    let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
+    let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
+    crate::info!(
+        "phase 3 done: test acc {:.4} (workers before avg: {:.4}), cluster {:.3}s",
+        final_stats.accuracy1(),
+        worker_stats.iter().map(|s| s.accuracy1()).sum::<f64>() / cfg.workers as f64,
+        clock.seconds
+    );
+
+    Ok(SwapResult {
+        phase1: p1,
+        phase1_seconds,
+        phase2_seconds,
+        worker_params,
+        worker_stats,
+        final_params,
+        final_bn,
+        final_stats,
+        clock,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+        snapshots,
+        phase1_params,
+        phase1_snapshots,
+    })
+}
+
+impl SwapResult {
+    /// Mean worker accuracy before averaging (the paper's "SWAP (before
+    /// averaging)" row).
+    pub fn before_avg_acc1(&self) -> f64 {
+        self.worker_stats.iter().map(|s| s.accuracy1()).sum::<f64>()
+            / self.worker_stats.len().max(1) as f64
+    }
+
+    pub fn before_avg_acc5(&self) -> f64 {
+        self.worker_stats.iter().map(|s| s.accuracy5()).sum::<f64>()
+            / self.worker_stats.len().max(1) as f64
+    }
+}

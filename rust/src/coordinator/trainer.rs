@@ -1,0 +1,252 @@
+//! Shared training machinery: the synchronous data-parallel loop (phase 1,
+//! the LB/SB baselines, and each phase-2 sync *group*), evaluation, and
+//! batch-norm recomputation.
+
+use super::allreduce;
+use crate::data::{sequential_batches, AugmentSpec, Batcher, Dataset, EpochSampler, shard};
+use crate::model::{BnState, ParamSet};
+use crate::optim::{Schedule, SgdConfig, SgdOptimizer};
+use crate::runtime::{BatchStats, Engine};
+use crate::sim::{ClusterClock, CostModel};
+use crate::util::{Error, Result, Rng};
+
+/// Everything a training run needs, borrowed once.
+pub struct TrainEnv<'a> {
+    pub engine: &'a Engine,
+    pub cost: &'a CostModel,
+    pub train: &'a Dataset,
+    pub test: &'a Dataset,
+    pub augment: AugmentSpec,
+    /// per-executable batch size (all artifacts share it)
+    pub exec_batch: usize,
+    /// training batches used to recompute BN statistics in phase 3
+    pub bn_batches: usize,
+}
+
+impl<'a> TrainEnv<'a> {
+    pub fn image_size(&self) -> usize {
+        self.train.image_size
+    }
+
+    pub fn sgd_config(&self) -> SgdConfig {
+        let m = self.engine.manifest();
+        SgdConfig {
+            momentum: m.model.momentum,
+            weight_decay: m.model.weight_decay,
+        }
+    }
+
+    /// Full-test-set evaluation with the given BN statistics.
+    /// Adds modeled time to `clock.eval` (not training time).
+    pub fn evaluate(
+        &self,
+        params: &ParamSet,
+        bn: &BnState,
+        clock: &mut ClusterClock,
+    ) -> Result<BatchStats> {
+        self.evaluate_on(self.test, params, bn, clock, usize::MAX)
+    }
+
+    /// Evaluate on an arbitrary dataset (landscape grids measure *train*
+    /// error too), over at most `max_batches` leading batches.
+    pub fn evaluate_on(
+        &self,
+        ds: &Dataset,
+        params: &ParamSet,
+        bn: &BnState,
+        clock: &mut ClusterClock,
+        max_batches: usize,
+    ) -> Result<BatchStats> {
+        let b = self.exec_batch;
+        let mut batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let mut total = BatchStats::default();
+        for idx in sequential_batches(ds.n, b).take(max_batches) {
+            let hb = batcher.assemble_clean(ds, &idx);
+            let stats = self.engine.eval_batch(params.as_slice(), bn.as_slice(), &hb)?;
+            total.accumulate(&stats);
+            clock.note_eval(self.cost.eval_step_time(b));
+        }
+        if total.examples == 0 {
+            return Err(Error::invalid("dataset smaller than one batch"));
+        }
+        Ok(total)
+    }
+
+    /// Recompute BN running statistics from `self.bn_batches` training
+    /// batches (Algorithm 1, line 28). Deterministic batch choice per seed.
+    /// Counts as *training* time when `charge_clock` (phase 3 does; the
+    /// reporting-only per-worker evals don't).
+    pub fn recompute_bn(
+        &self,
+        params: &ParamSet,
+        seed: u64,
+        clock: &mut ClusterClock,
+        charge_clock: bool,
+    ) -> Result<BnState> {
+        let b = self.exec_batch;
+        let mut rng = Rng::stream(seed, 0xB7);
+        let mut batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let mut moments = Vec::with_capacity(self.bn_batches);
+        let mut order = rng.permutation(self.train.n);
+        if order.len() < b * self.bn_batches {
+            // small datasets: wrap around
+            while order.len() < b * self.bn_batches {
+                let extra = rng.permutation(self.train.n);
+                order.extend(extra);
+            }
+        }
+        for k in 0..self.bn_batches {
+            let idx = &order[k * b..(k + 1) * b];
+            let hb = batcher.assemble_clean(self.train, idx);
+            moments.push(self.engine.bn_moments(params.as_slice(), &hb)?);
+            let dt = self.cost.eval_step_time(b);
+            if charge_clock {
+                clock.advance_compute(dt);
+            } else {
+                clock.note_eval(dt);
+            }
+        }
+        BnState::from_moments(&moments)
+    }
+
+    /// Convenience: recompute BN (uncharged) then evaluate.
+    pub fn bn_and_eval(
+        &self,
+        params: &ParamSet,
+        seed: u64,
+        clock: &mut ClusterClock,
+    ) -> Result<BatchStats> {
+        let bn = self.recompute_bn(params, seed, clock, false)?;
+        self.evaluate(params, &bn, clock)
+    }
+}
+
+/// Configuration of one synchronous data-parallel training segment.
+#[derive(Debug, Clone)]
+pub struct SyncTrainConfig {
+    /// number of data-parallel devices (1 = single-device fused path)
+    pub devices: usize,
+    /// global batch size (must be devices * exec_batch)
+    pub global_batch: usize,
+    /// hard stop after this many epochs
+    pub max_epochs: usize,
+    /// early stop once the epoch's training accuracy reaches this (1.0 = off)
+    pub stop_train_acc: f64,
+    pub sched: Schedule,
+    /// schedule step offset (composing phases)
+    pub sched_offset: usize,
+    /// RNG stream id for sampling/augmentation (worker identity)
+    pub seed_stream: u64,
+    pub seed: u64,
+}
+
+/// Outcome of a sync segment.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainProgress {
+    pub steps: usize,
+    pub epochs: f64,
+    /// training accuracy over the last completed epoch
+    pub train_acc: f64,
+    pub train_loss: f64,
+}
+
+/// Run synchronous SGD: `devices` workers each compute gradients on a
+/// `global_batch / devices` shard, gradients are ring-averaged, and the
+/// host applies the Nesterov update (phase 1 of Algorithm 1). With
+/// `devices == 1` the fused on-device train step is used instead (the
+/// phase-2 / small-batch path).
+///
+/// `observer` is called after every optimizer step with (global step index,
+/// params) — the hook the figure benches use.
+pub fn run_sync_training(
+    env: &TrainEnv,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    cfg: &SyncTrainConfig,
+    clock: &mut ClusterClock,
+    mut observer: impl FnMut(usize, &ParamSet, &BatchStats),
+) -> Result<TrainProgress> {
+    if cfg.global_batch != cfg.devices * env.exec_batch {
+        return Err(Error::config(format!(
+            "global batch {} != devices {} x exec batch {}",
+            cfg.global_batch, cfg.devices, env.exec_batch
+        )));
+    }
+    if cfg.global_batch > env.train.n {
+        return Err(Error::config("global batch larger than the dataset"));
+    }
+    let sgd = env.sgd_config();
+    let mut opt = SgdOptimizer {
+        cfg: sgd,
+        momentum: ParamSet { tensors: std::mem::take(&mut momentum.tensors) },
+    };
+    let mut sampler = EpochSampler::new(env.train.n, cfg.global_batch, cfg.seed, cfg.seed_stream);
+    let mut batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
+    let mut aug_rng = Rng::stream(cfg.seed ^ 0xAE6, cfg.seed_stream);
+
+    let steps_per_epoch = sampler.batches_per_epoch();
+    let total_steps = cfg.max_epochs * steps_per_epoch;
+    let mut epoch_stats = BatchStats::default();
+    let mut last_epoch_acc = 0.0;
+    let mut last_epoch_loss = f64::INFINITY;
+    let mut steps = 0usize;
+
+    let step_compute = env.cost.train_step_time(env.exec_batch);
+    let ar_time = env.cost.allreduce_time(cfg.devices);
+
+    'outer: for _ in 0..total_steps {
+        let global = sampler.next_batch().to_vec();
+        let stats = if cfg.devices == 1 {
+            let hb = batcher.assemble(env.train, &global, &mut aug_rng);
+            let lr = cfg.sched.lr(cfg.sched_offset + steps);
+            env.engine
+                .train_step(params.as_mut_slice(), opt.momentum.as_mut_slice(), &hb, lr)?
+        } else {
+            let shards = shard(&global, cfg.devices);
+            let mut worker_grads = Vec::with_capacity(cfg.devices);
+            let mut stats = BatchStats::default();
+            for sh in shards {
+                let hb = batcher.assemble(env.train, sh, &mut aug_rng);
+                let g = env.engine.grad(params.as_slice(), &hb)?;
+                stats.accumulate(&g.stats);
+                worker_grads.push(g.grads);
+            }
+            let mean = allreduce::ring_mean(&worker_grads)?;
+            let lr = cfg.sched.lr(cfg.sched_offset + steps);
+            let mut pslice = ParamSet { tensors: std::mem::take(&mut params.tensors) };
+            opt.step(&mut pslice, &mean, lr)?;
+            params.tensors = pslice.tensors;
+            stats
+        };
+        // cluster time: all devices compute in parallel, then sync
+        clock.advance_compute(step_compute);
+        if cfg.devices > 1 {
+            clock.advance_comm(ar_time);
+        }
+        epoch_stats.accumulate(&stats);
+        steps += 1;
+        observer(cfg.sched_offset + steps - 1, params, &stats);
+
+        if steps % steps_per_epoch == 0 {
+            last_epoch_acc = epoch_stats.accuracy1();
+            last_epoch_loss = epoch_stats.mean_loss();
+            crate::debug!(
+                "epoch {} train acc {:.4} loss {:.4}",
+                steps / steps_per_epoch,
+                last_epoch_acc,
+                last_epoch_loss
+            );
+            epoch_stats = BatchStats::default();
+            if last_epoch_acc >= cfg.stop_train_acc {
+                break 'outer;
+            }
+        }
+    }
+    momentum.tensors = opt.momentum.tensors;
+    Ok(TrainProgress {
+        steps,
+        epochs: steps as f64 / steps_per_epoch as f64,
+        train_acc: last_epoch_acc,
+        train_loss: last_epoch_loss,
+    })
+}

@@ -1,0 +1,191 @@
+//! Training-time data augmentation, mirroring the paper's CIFAR pipeline:
+//! random horizontal flip, random shift (pad-and-crop), and cutout
+//! (DeVries & Taylor 2017 — explicitly used by the paper, §5.1).
+//!
+//! All ops work in-place on a single NHWC image slice (H*W*3 f32).
+
+use crate::util::Rng;
+
+/// Augmentation policy (per-preset config).
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentSpec {
+    pub flip: bool,
+    /// max |shift| in pixels for pad-and-crop (0 disables)
+    pub shift: usize,
+    /// cutout square side (0 disables)
+    pub cutout: usize,
+}
+
+impl AugmentSpec {
+    pub fn cifar_default() -> Self {
+        AugmentSpec { flip: true, shift: 2, cutout: 4 }
+    }
+
+    pub fn none() -> Self {
+        AugmentSpec { flip: false, shift: 0, cutout: 0 }
+    }
+}
+
+/// Apply the policy to one image in place.
+pub fn augment(img: &mut [f32], hw: usize, spec: &AugmentSpec, rng: &mut Rng) {
+    debug_assert_eq!(img.len(), hw * hw * 3);
+    if spec.flip && rng.coin(0.5) {
+        hflip(img, hw);
+    }
+    if spec.shift > 0 {
+        let dy = rng.below(2 * spec.shift + 1) as isize - spec.shift as isize;
+        let dx = rng.below(2 * spec.shift + 1) as isize - spec.shift as isize;
+        if dy != 0 || dx != 0 {
+            shift(img, hw, dy, dx);
+        }
+    }
+    if spec.cutout > 0 {
+        // cutout centre may be anywhere (standard implementation clips the
+        // square at the borders)
+        let cy = rng.below(hw);
+        let cx = rng.below(hw);
+        cutout(img, hw, cy, cx, spec.cutout);
+    }
+}
+
+/// Mirror horizontally.
+pub fn hflip(img: &mut [f32], hw: usize) {
+    for y in 0..hw {
+        for x in 0..hw / 2 {
+            let xr = hw - 1 - x;
+            for c in 0..3 {
+                img.swap((y * hw + x) * 3 + c, (y * hw + xr) * 3 + c);
+            }
+        }
+    }
+}
+
+/// Translate by (dy, dx), zero-filling exposed pixels (pad-and-crop).
+pub fn shift(img: &mut [f32], hw: usize, dy: isize, dx: isize) {
+    let src = img.to_vec();
+    img.iter_mut().for_each(|p| *p = 0.0);
+    for y in 0..hw as isize {
+        let sy = y - dy;
+        if !(0..hw as isize).contains(&sy) {
+            continue;
+        }
+        for x in 0..hw as isize {
+            let sx = x - dx;
+            if !(0..hw as isize).contains(&sx) {
+                continue;
+            }
+            let d = ((y as usize) * hw + x as usize) * 3;
+            let s = ((sy as usize) * hw + sx as usize) * 3;
+            img[d..d + 3].copy_from_slice(&src[s..s + 3]);
+        }
+    }
+}
+
+/// Zero a (side x side) square centred at (cy, cx), clipped at borders.
+pub fn cutout(img: &mut [f32], hw: usize, cy: usize, cx: usize, side: usize) {
+    let half = side / 2;
+    let y0 = cy.saturating_sub(half);
+    let x0 = cx.saturating_sub(half);
+    let y1 = (cy + half + side % 2).min(hw);
+    let x1 = (cx + half + side % 2).min(hw);
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let d = (y * hw + x) * 3;
+            img[d..d + 3].iter_mut().for_each(|p| *p = 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(hw: usize) -> Vec<f32> {
+        (0..hw * hw * 3).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let hw = 5;
+        let orig = ramp(hw);
+        let mut img = orig.clone();
+        hflip(&mut img, hw);
+        assert_ne!(img, orig);
+        hflip(&mut img, hw);
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn hflip_moves_first_to_last_column() {
+        let hw = 3;
+        let mut img = ramp(hw);
+        let first = img[0];
+        hflip(&mut img, hw);
+        assert_eq!(img[(hw - 1) * 3], first);
+    }
+
+    #[test]
+    fn shift_zero_fills() {
+        let hw = 4;
+        let mut img = vec![1.0; hw * hw * 3];
+        shift(&mut img, hw, 1, 0); // down by one: first row zero
+        assert!(img[..hw * 3].iter().all(|&p| p == 0.0));
+        assert!(img[hw * 3..].iter().all(|&p| p == 1.0));
+    }
+
+    #[test]
+    fn shift_roundtrip_loses_border_only() {
+        let hw = 6;
+        let orig = ramp(hw);
+        let mut img = orig.clone();
+        shift(&mut img, hw, 1, 1);
+        shift(&mut img, hw, -1, -1);
+        // interior pixels identical
+        for y in 0..hw - 1 {
+            for x in 0..hw - 1 {
+                let d = (y * hw + x) * 3;
+                assert_eq!(img[d], orig[d], "pixel {y},{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn cutout_zeroes_square_only() {
+        let hw = 8;
+        let mut img = vec![1.0; hw * hw * 3];
+        cutout(&mut img, hw, 4, 4, 2);
+        let zeros = img.iter().filter(|&&p| p == 0.0).count();
+        assert_eq!(zeros, 2 * 2 * 3);
+        assert_eq!(img[(4 * hw + 4) * 3], 0.0);
+    }
+
+    #[test]
+    fn cutout_clips_at_border() {
+        let hw = 8;
+        let mut img = vec![1.0; hw * hw * 3];
+        cutout(&mut img, hw, 0, 0, 4);
+        let zeros = img.iter().filter(|&&p| p == 0.0).count();
+        assert_eq!(zeros, 2 * 2 * 3); // half the square fell off the edge
+    }
+
+    #[test]
+    fn augment_none_is_identity() {
+        let hw = 4;
+        let orig = ramp(hw);
+        let mut img = orig.clone();
+        let mut rng = crate::util::Rng::new(0);
+        augment(&mut img, hw, &AugmentSpec::none(), &mut rng);
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn augment_deterministic_per_seed() {
+        let hw = 8;
+        let spec = AugmentSpec::cifar_default();
+        let mut a = ramp(hw);
+        let mut b = ramp(hw);
+        augment(&mut a, hw, &spec, &mut crate::util::Rng::new(5));
+        augment(&mut b, hw, &spec, &mut crate::util::Rng::new(5));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,118 @@
+//! Batch assembly: gather dataset rows by index, apply augmentation, and
+//! produce the `HostBatch` the runtime uploads. Buffers are reused across
+//! steps (no allocation in the training loop).
+
+use super::augment::{augment, AugmentSpec};
+use super::synth::Dataset;
+use crate::runtime::HostBatch;
+use crate::util::Rng;
+
+/// Reusable batch assembler.
+pub struct Batcher {
+    batch: usize,
+    image_size: usize,
+    augment: AugmentSpec,
+    buf_images: Vec<f32>,
+    buf_labels: Vec<i32>,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, image_size: usize, augment: AugmentSpec) -> Self {
+        Batcher {
+            batch,
+            image_size,
+            augment,
+            buf_images: vec![0.0; batch * image_size * image_size * 3],
+            buf_labels: vec![0; batch],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Assemble indices into a HostBatch (clones out of the reuse buffers).
+    pub fn assemble(&mut self, ds: &Dataset, idx: &[usize], rng: &mut Rng) -> HostBatch {
+        assert_eq!(idx.len(), self.batch, "index count != batch size");
+        assert_eq!(ds.image_size, self.image_size);
+        let pix = ds.pixels_per_image();
+        for (row, &i) in idx.iter().enumerate() {
+            let dst = &mut self.buf_images[row * pix..(row + 1) * pix];
+            dst.copy_from_slice(ds.image(i));
+            augment(dst, self.image_size, &self.augment, rng);
+            self.buf_labels[row] = ds.labels[i];
+        }
+        HostBatch {
+            images: self.buf_images.clone(),
+            labels: self.buf_labels.clone(),
+            batch: self.batch,
+            image_size: self.image_size,
+        }
+    }
+
+    /// Assemble without augmentation (eval batches / BN recompute).
+    pub fn assemble_clean(&mut self, ds: &Dataset, idx: &[usize]) -> HostBatch {
+        let mut rng = Rng::new(0);
+        let saved = self.augment;
+        self.augment = AugmentSpec::none();
+        let out = self.assemble(ds, idx, &mut rng);
+        self.augment = saved;
+        out
+    }
+}
+
+/// Iterate the whole dataset in fixed-size batches (sequential order,
+/// trailing partial batch dropped) — evaluation and BN recompute passes.
+pub fn sequential_batches(n: usize, batch: usize) -> impl Iterator<Item = Vec<usize>> {
+    let full = n / batch;
+    (0..full).map(move |b| ((b * batch)..((b + 1) * batch)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{Generator, SynthSpec};
+
+    fn dataset() -> Dataset {
+        Generator::new(SynthSpec::for_preset(10, 16, 7)).sample(40, 10)
+    }
+
+    #[test]
+    fn assemble_gathers_rows() {
+        let ds = dataset();
+        let mut b = Batcher::new(4, 16, AugmentSpec::none());
+        let hb = b.assemble_clean(&ds, &[3, 1, 0, 2]);
+        assert_eq!(hb.batch, 4);
+        assert_eq!(hb.labels, vec![ds.labels[3], ds.labels[1], ds.labels[0], ds.labels[2]]);
+        let pix = ds.pixels_per_image();
+        assert_eq!(&hb.images[..pix], ds.image(3));
+    }
+
+    #[test]
+    fn augmented_assemble_differs_but_labels_match() {
+        let ds = dataset();
+        let mut b = Batcher::new(4, 16, AugmentSpec::cifar_default());
+        let mut rng = Rng::new(3);
+        let hb = b.assemble(&ds, &[0, 1, 2, 3], &mut rng);
+        assert_eq!(hb.labels, &ds.labels[..4]);
+        let pix = ds.pixels_per_image();
+        // with flip+shift+cutout, at least one image must change
+        let changed = (0..4).any(|r| hb.images[r * pix..(r + 1) * pix] != *ds.image(r));
+        assert!(changed);
+    }
+
+    #[test]
+    fn sequential_batches_cover_prefix() {
+        let batches: Vec<Vec<usize>> = sequential_batches(10, 3).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2], vec![6, 7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "index count")]
+    fn wrong_index_count_panics() {
+        let ds = dataset();
+        let mut b = Batcher::new(4, 16, AugmentSpec::none());
+        b.assemble_clean(&ds, &[0, 1]);
+    }
+}

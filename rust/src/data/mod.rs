@@ -1,0 +1,13 @@
+//! Data pipeline: synthetic datasets, per-epoch shuffling + sharding, and
+//! the paper's augmentation (flip / shift / cutout). See DESIGN.md for why
+//! synthetic data substitutes CIFAR/ImageNet in this environment.
+
+pub mod augment;
+pub mod batch;
+pub mod sampler;
+pub mod synth;
+
+pub use augment::AugmentSpec;
+pub use batch::{sequential_batches, Batcher};
+pub use sampler::{shard, EpochSampler};
+pub use synth::{Dataset, Generator, SynthSpec};

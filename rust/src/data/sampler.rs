@@ -1,0 +1,166 @@
+//! Epoch sampling and worker sharding.
+//!
+//! * Phase 1 (synchronous large batch): one global shuffled order per
+//!   epoch; each global batch of size B1 is split into W disjoint shards of
+//!   B1/W (Algorithm 1, line 11).
+//! * Phase 2 (independent workers): each worker owns its own sampler with a
+//!   distinct RNG stream, i.e. "different randomizations of the data"
+//!   (Algorithm 1, line 22).
+
+use crate::util::Rng;
+
+/// Per-epoch reshuffling batch sampler. Drops the trailing partial batch
+//  (AOT executables are compiled for fixed batch sizes).
+#[derive(Debug)]
+pub struct EpochSampler {
+    n: usize,
+    batch: usize,
+    seed: u64,
+    stream: u64,
+    epoch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl EpochSampler {
+    /// `stream` distinguishes workers; same (seed, stream) replays exactly.
+    pub fn new(n: usize, batch: usize, seed: u64, stream: u64) -> Self {
+        assert!(batch > 0 && batch <= n, "batch {batch} vs n {n}");
+        let mut s = EpochSampler {
+            n,
+            batch,
+            seed,
+            stream,
+            epoch: 0,
+            order: Vec::new(),
+            cursor: 0,
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Rng::stream(
+            self.seed ^ 0x5A5A_0000,
+            self.stream.wrapping_mul(1_000_003) + self.epoch as u64,
+        );
+        self.order = rng.permutation(self.n);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch
+    }
+
+    /// Next batch of indices; rolls into a fresh epoch when exhausted.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.n {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let out = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        out
+    }
+
+    /// Fractional epochs elapsed (for schedules indexed in epochs).
+    pub fn epochs_elapsed(&self) -> f64 {
+        self.epoch as f64 + self.cursor as f64 / self.n as f64
+    }
+}
+
+/// Split a global batch into `workers` contiguous disjoint shards.
+/// Panics if not divisible — the caller (config) guarantees B1 % W == 0.
+pub fn shard<'a>(global: &'a [usize], workers: usize) -> Vec<&'a [usize]> {
+    assert!(workers > 0 && global.len() % workers == 0,
+            "batch {} not divisible by {workers}", global.len());
+    let per = global.len() / workers;
+    (0..workers).map(|w| &global[w * per..(w + 1) * per]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn epoch_covers_all_indices_without_repeats() {
+        let mut s = EpochSampler::new(100, 10, 1, 0);
+        let mut seen = HashSet::new();
+        for _ in 0..10 {
+            for &i in s.next_batch() {
+                assert!(seen.insert(i), "duplicate index {i} within epoch");
+            }
+        }
+        assert_eq!(seen.len(), 100);
+    }
+
+    #[test]
+    fn partial_batch_dropped() {
+        let mut s = EpochSampler::new(25, 10, 1, 0);
+        assert_eq!(s.batches_per_epoch(), 2);
+        s.next_batch();
+        s.next_batch();
+        assert_eq!(s.epoch(), 0);
+        s.next_batch(); // rolls to epoch 1 (only 5 left < 10)
+        assert_eq!(s.epoch(), 1);
+    }
+
+    #[test]
+    fn epochs_reshuffle_differently() {
+        let mut s = EpochSampler::new(64, 64, 3, 0);
+        let e0: Vec<usize> = s.next_batch().to_vec();
+        let e1: Vec<usize> = s.next_batch().to_vec();
+        assert_ne!(e0, e1);
+        let mut sorted = e1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn same_stream_replays_different_streams_diverge() {
+        let mut a = EpochSampler::new(50, 10, 9, 4);
+        let mut b = EpochSampler::new(50, 10, 9, 4);
+        let mut c = EpochSampler::new(50, 10, 9, 5);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_ne!(a.next_batch(), c.next_batch());
+    }
+
+    #[test]
+    fn shard_partition_disjoint_and_complete() {
+        let global: Vec<usize> = (0..64).collect();
+        let shards = shard(&global, 8);
+        assert_eq!(shards.len(), 8);
+        let mut all = HashSet::new();
+        for sh in &shards {
+            assert_eq!(sh.len(), 8);
+            for &i in *sh {
+                assert!(all.insert(i));
+            }
+        }
+        assert_eq!(all.len(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn shard_requires_divisibility() {
+        let global: Vec<usize> = (0..10).collect();
+        shard(&global, 3);
+    }
+
+    #[test]
+    fn epochs_elapsed_monotone() {
+        let mut s = EpochSampler::new(40, 10, 2, 0);
+        let mut last = -1.0;
+        for _ in 0..12 {
+            let e = s.epochs_elapsed();
+            assert!(e >= last);
+            last = e;
+            s.next_batch();
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Synthetic image-classification datasets (the environment has no CIFAR /
+//! ImageNet downloads — DESIGN.md documents this substitution).
+//!
+//! Generative model, chosen so that the phenomena SWAP exercises survive:
+//!   * K class anchors z_k ~ N(0, I_d) in a d-dim latent space,
+//!   * a fixed random projection P : R^d -> R^{H*W*3} shared by all classes,
+//!   * image_i = tanh( P (z_{y_i} + sigma_intra * eps_i) + sigma_pix * n_i )
+//!
+//! Within-class latent scatter (sigma_intra) makes the classes overlap, so
+//! a decision boundary must be *learned*; the tanh nonlinearity keeps
+//! pixels in [-1, 1] (the normalization the model expects) and makes the
+//! map non-linear so the conv net is not trivially optimal. Small train
+//! sets (config) produce a real train/test generalization gap, which is
+//! what Tables 1-3 measure.
+//!
+//! Train and test samples are drawn from the SAME distribution (same
+//! anchors/projection, disjoint RNG streams) — exactly the i.i.d. setting
+//! of the paper's datasets.
+
+use crate::util::Rng;
+
+/// Dataset on the host: NHWC f32 images in [-1, 1] + int labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub image_size: usize,
+    pub num_classes: usize,
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub latent_dim: usize,
+    /// within-class latent noise (class overlap / task difficulty)
+    pub sigma_intra: f32,
+    /// white pixel noise added before tanh
+    pub sigma_pixel: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn for_preset(num_classes: usize, image_size: usize, seed: u64) -> Self {
+        SynthSpec {
+            num_classes,
+            image_size,
+            latent_dim: 48,
+            sigma_intra: 2.5,
+            sigma_pixel: 0.5,
+            seed,
+        }
+    }
+}
+
+/// The frozen generative model (anchors + projection). Build once per
+/// preset, then sample disjoint train/test sets from it.
+pub struct Generator {
+    spec: SynthSpec,
+    anchors: Vec<f32>,    // (K, d)
+    projection: Vec<f32>, // (d, H*W*3)
+}
+
+impl Generator {
+    pub fn new(spec: SynthSpec) -> Self {
+        let d = spec.latent_dim;
+        let pix = spec.image_size * spec.image_size * 3;
+        let mut rng_a = Rng::stream(spec.seed, 1);
+        let anchors: Vec<f32> = (0..spec.num_classes * d)
+            .map(|_| rng_a.normal())
+            .collect();
+        let mut rng_p = Rng::stream(spec.seed, 2);
+        // scale so that (P z) has O(1) entries: var = d * (1/sqrt(d))^2 = 1
+        let scale = 1.0 / (d as f32).sqrt();
+        let projection: Vec<f32> = (0..d * pix).map(|_| rng_p.normal() * scale).collect();
+        Generator { spec, anchors, projection }
+    }
+
+    pub fn spec(&self) -> &SynthSpec {
+        &self.spec
+    }
+
+    /// Sample `n` labelled images using RNG stream `split` (train=10,
+    /// test=11, ... — callers pick disjoint streams).
+    pub fn sample(&self, n: usize, split: u64) -> Dataset {
+        let spec = &self.spec;
+        let d = spec.latent_dim;
+        let pix = spec.image_size * spec.image_size * 3;
+        let mut rng = Rng::stream(spec.seed, 1000 + split);
+        let mut images = vec![0.0f32; n * pix];
+        let mut labels = vec![0i32; n];
+        let mut latent = vec![0.0f32; d];
+        for i in 0..n {
+            let y = rng.below(spec.num_classes);
+            labels[i] = y as i32;
+            let anchor = &self.anchors[y * d..(y + 1) * d];
+            for (l, a) in latent.iter_mut().zip(anchor) {
+                *l = *a + spec.sigma_intra * rng.normal();
+            }
+            let img = &mut images[i * pix..(i + 1) * pix];
+            // img = tanh(P^T latent + pixel noise)
+            for (j, out) in img.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (k, l) in latent.iter().enumerate() {
+                    acc += self.projection[k * pix + j] * l;
+                }
+                *out = (acc + spec.sigma_pixel * rng.normal()).tanh();
+            }
+        }
+        Dataset {
+            images,
+            labels,
+            n,
+            image_size: spec.image_size,
+            num_classes: spec.num_classes,
+        }
+    }
+}
+
+impl Dataset {
+    pub fn pixels_per_image(&self) -> usize {
+        self.image_size * self.image_size * 3
+    }
+
+    /// Borrow image i as a flat NHWC slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let p = self.pixels_per_image();
+        &self.images[i * p..(i + 1) * p]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> Generator {
+        Generator::new(SynthSpec::for_preset(10, 16, 42))
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let g = gen();
+        let ds = g.sample(32, 10);
+        assert_eq!(ds.n, 32);
+        assert_eq!(ds.images.len(), 32 * 16 * 16 * 3);
+        assert_eq!(ds.labels.len(), 32);
+        assert!(ds.images.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        assert!(ds.labels.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_split() {
+        let g = gen();
+        let a = g.sample(8, 10);
+        let b = g.sample(8, 10);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = g.sample(8, 11);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_separable_but_not_trivially() {
+        // nearest-anchor-in-pixel-space classification should beat chance
+        // but stay below perfect — the task is learnable and non-trivial.
+        let g = gen();
+        let train = g.sample(200, 10);
+        let test = g.sample(100, 11);
+        let pix = train.pixels_per_image();
+        // class centroids from train
+        let mut centroid = vec![0.0f64; 10 * pix];
+        let mut count = [0usize; 10];
+        for i in 0..train.n {
+            let y = train.labels[i] as usize;
+            count[y] += 1;
+            for (c, x) in centroid[y * pix..(y + 1) * pix]
+                .iter_mut()
+                .zip(train.image(i))
+            {
+                *c += *x as f64;
+            }
+        }
+        for y in 0..10 {
+            if count[y] > 0 {
+                for c in &mut centroid[y * pix..(y + 1) * pix] {
+                    *c /= count[y] as f64;
+                }
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.n {
+            let img = test.image(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for y in 0..10 {
+                let d: f64 = centroid[y * pix..(y + 1) * pix]
+                    .iter()
+                    .zip(img)
+                    .map(|(c, x)| (c - *x as f64) * (c - *x as f64))
+                    .sum();
+                if d < best.0 {
+                    best = (d, y);
+                }
+            }
+            if best.1 == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.n as f64;
+        assert!(acc > 0.3, "task too hard: centroid acc {acc}");
+        assert!(acc < 0.999, "task trivial: centroid acc {acc}");
+    }
+
+    #[test]
+    fn label_distribution_roughly_uniform() {
+        let g = gen();
+        let ds = g.sample(1000, 10);
+        let mut counts = [0usize; 10];
+        for &y in &ds.labels {
+            counts[y as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "class starved: {counts:?}");
+        }
+    }
+}

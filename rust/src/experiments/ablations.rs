@@ -1,0 +1,159 @@
+//! Ablations over SWAP's design choices (the knobs DESIGN.md calls out and
+//! §6 of the paper discusses): worker count W, the transition threshold τ,
+//! phase-2 length, averaging frequency (SWAP's average-once vs post-local
+//! SGD's average-every-H), and the interconnect model.
+//!
+//! CLI: `swap-train ablate-workers | ablate-tau | ablate-phase2 |
+//! ablate-freq | ablate-net`. Each prints a Table and writes results/.
+
+use super::lab::Lab;
+use crate::bench::Table;
+use crate::coordinator::{run_local_sgd, run_swap, LocalSgdConfig};
+use crate::sim::{CostModel, NetModel};
+use crate::util::Result;
+
+/// W sweep: more independent workers → better averaged model (up to the
+/// phase-1 batch the devices imply), constant phase-2 wall time.
+pub fn ablate_workers(lab: &Lab, sweep: &[usize]) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — worker count W (phase-2 independent replicas)",
+        &["W", "before avg (%)", "after avg (%)", "gain (pts)", "modeled time (s)"],
+    );
+    for &w in sweep {
+        let mut cfg = lab.swap_arm(lab.cfg.seed);
+        cfg.workers = w;
+        cfg.group_devices = 1;
+        // keep the phase-1 global batch feasible for the dataset
+        let max_dev = lab.cfg.n_train / lab.cfg.exec_batch;
+        let devices = (w).min(max_dev);
+        cfg.workers = devices;
+        let r = run_swap(&lab.env(), &cfg)?;
+        let before = r.before_avg_acc1() * 100.0;
+        let after = r.final_stats.accuracy1() * 100.0;
+        t.row(&[
+            format!("{devices}"),
+            format!("{before:.2}"),
+            format!("{after:.2}"),
+            format!("{:+.2}", after - before),
+            format!("{:.3}", r.clock.seconds),
+        ]);
+    }
+    Ok(t)
+}
+
+/// τ sweep: where to hand over from large-batch to the parallel refinement.
+/// Too late (τ→1): phase 2 starts from a stuck point and cannot improve;
+/// too early: phase 1's speed advantage is wasted.
+pub fn ablate_tau(lab: &Lab, sweep: &[f64]) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — phase-1 exit threshold τ",
+        &["tau", "phase1 epochs", "after avg (%)", "modeled time (s)"],
+    );
+    for &tau in sweep {
+        let mut cfg = lab.swap_arm(lab.cfg.seed);
+        cfg.phase1_stop_acc = tau;
+        let r = run_swap(&lab.env(), &cfg)?;
+        t.row(&[
+            format!("{tau:.2}"),
+            format!("{:.0}", r.phase1.epochs),
+            format!("{:.2}", r.final_stats.accuracy1() * 100.0),
+            format!("{:.3}", r.clock.seconds),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Phase-2 length sweep (the Table-4 row-4/row-5 axis, finer).
+pub fn ablate_phase2(lab: &Lab, sweep: &[usize]) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — phase-2 epochs per worker",
+        &["epochs", "before avg (%)", "after avg (%)", "modeled time (s)"],
+    );
+    for &ep in sweep {
+        let mut cfg = lab.swap_arm(lab.cfg.seed);
+        cfg.phase2_epochs = ep;
+        cfg.phase2_sched = lab.cfg.phase2_schedule(
+            lab.cfg.n_train / (lab.cfg.group_devices * lab.cfg.exec_batch),
+        );
+        let r = run_swap(&lab.env(), &cfg)?;
+        t.row(&[
+            format!("{ep}"),
+            format!("{:.2}", r.before_avg_acc1() * 100.0),
+            format!("{:.2}", r.final_stats.accuracy1() * 100.0),
+            format!("{:.3}", r.clock.seconds),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Averaging frequency: SWAP (average once at the end) vs post-local SGD
+/// with parameter averaging every H steps (§2: "Post-local SGD averages
+/// after at most 32 updates; SWAP after tens of thousands").
+pub fn ablate_averaging_frequency(lab: &Lab, h_sweep: &[usize]) -> Result<Table> {
+    let env = lab.env();
+    let mut t = Table::new(
+        "Ablation — averaging frequency (post-local SGD H vs SWAP once)",
+        &["method", "H (steps)", "test acc (%)", "modeled time (s)", "sync events"],
+    );
+    let spe_lb = lab.spe(lab.cfg.lb_devices);
+    for &h in h_sweep {
+        let r = run_local_sgd(
+            &env,
+            &LocalSgdConfig {
+                devices: lab.cfg.lb_devices,
+                sync_epochs: lab.cfg.phase1_max_epochs / 2,
+                sync_sched: lab.cfg.phase1_schedule(spe_lb),
+                local_epochs: lab.cfg.phase2_epochs,
+                local_sched: lab.cfg.phase2_schedule(lab.spe(1)),
+                h_steps: h,
+                seed: lab.cfg.seed,
+            },
+        )?;
+        t.row(&[
+            "post-local SGD".into(),
+            format!("{h}"),
+            format!("{:.2}", r.outcome.test_acc1 * 100.0),
+            format!("{:.3}", r.outcome.cluster_seconds),
+            format!("{}", r.sync_events),
+        ]);
+    }
+    let r = run_swap(&env, &lab.swap_arm(lab.cfg.seed))?;
+    let p2_steps = lab.cfg.phase2_epochs * lab.spe(lab.cfg.group_devices);
+    t.row(&[
+        "SWAP (average once)".into(),
+        format!("{p2_steps}"),
+        format!("{:.2}", r.final_stats.accuracy1() * 100.0),
+        format!("{:.3}", r.clock.seconds),
+        "1".into(),
+    ]);
+    Ok(t)
+}
+
+/// Interconnect ablation: how much of SWAP's advantage over plain LB
+/// training comes from skipping synchronization in phase 2? With an
+/// NVLink-class fabric the all-reduce tax shrinks and LB closes the gap.
+pub fn ablate_network(lab: &Lab) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — interconnect (α–β model) vs phase-1 all-reduce tax",
+        &["fabric", "allreduce W=8 (ms)", "share of LB step (%)", "LB epoch (s)", "SWAP p2 epoch (s)"],
+    );
+    let nets = [("pcie-like", NetModel::pcie_like()), ("nvlink-like", NetModel::nvlink_like())];
+    for (name, net) in nets {
+        let cost = CostModel {
+            net,
+            ..lab.cost.clone()
+        };
+        let step = cost.train_step_time(lab.cfg.exec_batch);
+        let ar = cost.allreduce_time(lab.cfg.lb_devices);
+        let spe_lb = lab.spe(lab.cfg.lb_devices) as f64;
+        let spe_sb = lab.spe(lab.cfg.group_devices) as f64;
+        t.row(&[
+            name.into(),
+            format!("{:.3}", ar * 1e3),
+            format!("{:.1}", 100.0 * ar / (step + ar)),
+            format!("{:.4}", spe_lb * (step + ar)),
+            format!("{:.4}", spe_sb * step),
+        ]);
+    }
+    Ok(t)
+}

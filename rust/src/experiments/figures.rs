@@ -1,0 +1,222 @@
+//! Reproduction drivers for the paper's Figures 1-6. Each driver produces
+//! CSV series under results/ (the same data the paper plots) plus a small
+//! printed summary of the figure's qualitative claim.
+
+use super::lab::Lab;
+use crate::analysis;
+use crate::coordinator::{run_swap, TrainEnv};
+use crate::landscape::{eval_grid, GridResult, GridSpec, Plane};
+use crate::metrics::SeriesLog;
+use crate::model::ParamSet;
+use crate::optim::{imagenet_piecewise, Schedule};
+use crate::sim::ClusterClock;
+use crate::util::Result;
+
+fn results_path(name: &str) -> String {
+    format!("results/{name}")
+}
+
+/// Figure 1: LR schedule + per-worker test accuracy + on-the-fly averaged
+/// accuracy through both phases. Returns (lr series, accuracy series).
+pub fn fig1(lab: &Lab) -> Result<(SeriesLog, SeriesLog)> {
+    let env = lab.env();
+    let spe2 = lab.spe(lab.cfg.group_devices);
+    let snap = (spe2 / 2).max(1);
+    let mut cfg = lab.swap_arm(lab.cfg.seed);
+    cfg.snapshot_every = Some(snap);
+    cfg.phase1_snapshot_every = Some((lab.spe(lab.cfg.lb_devices)).max(1));
+    let r = run_swap(&env, &cfg)?;
+
+    // LR schedule series (x = phase-1 steps then phase-2 steps appended)
+    let mut lr = SeriesLog::new(&["step", "lr", "phase"]);
+    for s in 0..r.phase1.steps {
+        lr.push(&[s as f64, cfg.phase1_sched.lr(s) as f64, 1.0]);
+    }
+    let p2_steps = lab.cfg.phase2_epochs * spe2;
+    for s in 0..p2_steps {
+        lr.push(&[(r.phase1.steps + s) as f64, cfg.phase2_sched.lr(s) as f64, 2.0]);
+    }
+
+    // accuracy series: phase-1 shared model, then per-worker + average
+    let mut acc = SeriesLog::new(&[
+        "step", "phase", "worker", "test_acc",
+    ]);
+    let mut clock = ClusterClock::new();
+    for (step, params) in &r.phase1_snapshots {
+        let stats = env.bn_and_eval(params, lab.cfg.seed, &mut clock)?;
+        acc.push(&[*step as f64, 1.0, -1.0, stats.accuracy1()]);
+    }
+    // phase 2: align snapshots across workers by index
+    let n_snaps = r.snapshots.iter().map(|t| t.len()).min().unwrap_or(0);
+    for i in 0..n_snaps {
+        let step = r.snapshots[0][i].0;
+        let mut snap_params = Vec::new();
+        for (w, trail) in r.snapshots.iter().enumerate() {
+            let stats = env.bn_and_eval(&trail[i].1, lab.cfg.seed, &mut clock)?;
+            acc.push(&[
+                (r.phase1.steps + step) as f64,
+                2.0,
+                w as f64,
+                stats.accuracy1(),
+            ]);
+            snap_params.push(trail[i].1.clone());
+        }
+        let avg = ParamSet::average(&snap_params)?;
+        let stats = env.bn_and_eval(&avg, lab.cfg.seed, &mut clock)?;
+        acc.push(&[(r.phase1.steps + step) as f64, 2.0, 99.0, stats.accuracy1()]);
+    }
+    lr.write_csv(results_path("fig1_lr.csv"))?;
+    acc.write_csv(results_path("fig1_accuracy.csv"))?;
+    Ok((lr, acc))
+}
+
+/// Figures 2 and 3: error surfaces over weight planes.
+/// Fig 2 plane: (LB, one worker, SWAP). Fig 3 plane: (3 workers) + SWAP.
+pub struct LandscapeFigures {
+    pub fig2: GridResult,
+    pub fig2_anchors: Vec<(String, f64, f64)>,
+    pub fig3: GridResult,
+    pub fig3_anchors: Vec<(String, f64, f64)>,
+}
+
+pub fn fig2_fig3(lab: &Lab, grid: &GridSpec) -> Result<LandscapeFigures> {
+    let env = lab.env();
+    let mut cfg = lab.swap_arm(lab.cfg.seed);
+    if cfg.workers < 3 {
+        cfg.workers = 3; // Fig 3 needs three independent workers
+        cfg.group_devices = 1;
+    }
+    let r = run_swap(&env, &cfg)?;
+    let mut clock = ClusterClock::new();
+
+    // -- Fig 2: plane through LB (phase-1 output), worker 0, SWAP ---------
+    let plane2 = Plane::through(&r.phase1_params, &r.worker_params[0], &r.final_params)?;
+    let fig2 = eval_grid(&env, &plane2, grid, lab.cfg.seed, &mut clock)?;
+    let mut fig2_anchors = vec![
+        ("LB".to_string(), plane2.anchors[0].0, plane2.anchors[0].1),
+        ("SGD".to_string(), plane2.anchors[1].0, plane2.anchors[1].1),
+        ("SWAP".to_string(), plane2.anchors[2].0, plane2.anchors[2].1),
+    ];
+
+    // -- Fig 3: plane through three workers; SWAP + BEST projected in -----
+    let plane3 = Plane::through(&r.worker_params[0], &r.worker_params[1], &r.worker_params[2])?;
+    let fig3 = eval_grid(&env, &plane3, grid, lab.cfg.seed, &mut clock)?;
+    let swap_proj = plane3.project(&r.final_params)?;
+    let mut fig3_anchors = vec![
+        ("SGD1".to_string(), plane3.anchors[0].0, plane3.anchors[0].1),
+        ("SGD2".to_string(), plane3.anchors[1].0, plane3.anchors[1].1),
+        ("SGD3".to_string(), plane3.anchors[2].0, plane3.anchors[2].1),
+        ("SWAP".to_string(), swap_proj.0, swap_proj.1),
+        (
+            "BEST".to_string(),
+            fig3.best_test.alpha,
+            fig3.best_test.beta,
+        ),
+    ];
+
+    fig2.to_series().write_csv(results_path("fig2_surface.csv"))?;
+    fig3.to_series().write_csv(results_path("fig3_surface.csv"))?;
+    let write_anchors = |name: &str, anchors: &mut Vec<(String, f64, f64)>| -> Result<()> {
+        let mut s = SeriesLog::new(&["alpha", "beta", "tag"]);
+        for (i, (_n, a, b)) in anchors.iter().enumerate() {
+            s.push(&[*a, *b, i as f64]);
+        }
+        s.write_csv(results_path(name))
+    };
+    write_anchors("fig2_anchors.csv", &mut fig2_anchors)?;
+    write_anchors("fig3_anchors.csv", &mut fig3_anchors)?;
+    Ok(LandscapeFigures { fig2, fig2_anchors, fig3, fig3_anchors })
+}
+
+/// Figure 4: cosine similarity between −g_t and θ_swap − θ_t over a
+/// worker's phase-2 trajectory.
+pub fn fig4(lab: &Lab) -> Result<SeriesLog> {
+    let env = lab.env();
+    let spe2 = lab.spe(lab.cfg.group_devices);
+    let mut cfg = lab.swap_arm(lab.cfg.seed);
+    cfg.snapshot_every = Some((spe2 / 2).max(1));
+    let r = run_swap(&env, &cfg)?;
+    let series = analysis::cosine_to_target(&env, &r.snapshots[0], &r.final_params, lab.cfg.seed)?;
+    series.write_csv(results_path("fig4_cosine.csv"))?;
+    Ok(series)
+}
+
+/// Figure 5: the ImageNet LR + batch-size schedules — original (8 GPU),
+/// doubled (16 GPU), and the SWAP composition (doubled then original).
+pub fn fig5(lab: &Lab) -> Result<SeriesLog> {
+    let spe = lab.spe(lab.cfg.sb_devices).max(1);
+    let total = 28 * spe;
+    let orig = imagenet_piecewise(spe, lab.cfg.sb_peak_lr);
+    let doubled = orig.scaled(2.0);
+    let swap_combo = Schedule::Sequence(vec![
+        (22 * spe, doubled.clone()),
+        (6 * spe, orig.clone()),
+    ]);
+    let mut s = SeriesLog::new(&[
+        "step", "lr_original", "lr_doubled", "lr_swap", "batch_original", "batch_doubled",
+    ]);
+    let (b_orig, b_doubled) = (
+        (lab.cfg.sb_devices * lab.cfg.exec_batch) as f64,
+        (lab.cfg.lb_devices * lab.cfg.exec_batch) as f64,
+    );
+    for t in 0..total {
+        s.push(&[
+            t as f64,
+            orig.lr(t) as f64,
+            doubled.lr(t) as f64,
+            swap_combo.lr(t) as f64,
+            b_orig,
+            b_doubled,
+        ]);
+    }
+    s.write_csv(results_path("fig5_imagenet_schedules.csv"))?;
+    Ok(s)
+}
+
+/// Figure 6: SWA cyclic-LR schedule illustrations — (a) large-batch SWA
+/// cycles, (b) LB-to-τ then small-batch cycles.
+pub fn fig6(lab: &Lab) -> Result<SeriesLog> {
+    let spe = lab.spe(1).max(1);
+    let period = (lab.cfg.swa_cycle_epochs * spe).max(1);
+    let warm = Schedule::Triangle {
+        peak: lab.cfg.lb_peak_lr,
+        warmup: (spe * 2).max(1),
+        total: 6 * spe,
+        end_lr: lab.cfg.swa_high_lr,
+    };
+    let cycles = Schedule::Cyclic {
+        high: lab.cfg.swa_high_lr,
+        low: lab.cfg.swa_low_lr,
+        period,
+    };
+    let a = Schedule::Sequence(vec![(6 * spe, warm.clone()), (4 * period, cycles.clone())]);
+    let b = Schedule::Sequence(vec![
+        (4 * spe, warm.scaled(1.0)),
+        (4 * period, cycles.scaled(0.5)),
+    ]);
+    let total = 6 * spe + 4 * period;
+    let mut s = SeriesLog::new(&["step", "lr_lb_swa", "lr_lb_then_sb_swa", "sample_marker"]);
+    for t in 0..total {
+        let marker = if t > 6 * spe && (t - 6 * spe) % period == period - 1 {
+            1.0
+        } else {
+            0.0
+        };
+        s.push(&[t as f64, a.lr(t) as f64, b.lr(t) as f64, marker]);
+    }
+    s.write_csv(results_path("fig6_swa_schedules.csv"))?;
+    Ok(s)
+}
+
+/// Weight-travel extra (Hoffer et al. §2 discussion): distance from init
+/// for SB vs LB — used by the microbench/ablation suite.
+pub fn travel(lab: &Lab) -> Result<SeriesLog> {
+    let env: TrainEnv = lab.env();
+    let mut cfg = lab.swap_arm(lab.cfg.seed);
+    cfg.phase1_snapshot_every = Some(lab.spe(lab.cfg.lb_devices).max(1));
+    let r = run_swap(&env, &cfg)?;
+    let init = ParamSet::init(lab.engine.manifest(), lab.cfg.seed);
+    let s = analysis::travel_series(&r.phase1_snapshots, &init)?;
+    s.write_csv(results_path("travel_phase1.csv"))?;
+    Ok(s)
+}

@@ -1,0 +1,120 @@
+//! The "lab": owns the engine + datasets for one preset config and builds
+//! the per-arm configurations (SB / LB / SWAP / SWA) from it. Every table
+//! bench, figure bench, example, and CLI subcommand goes through this.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{BaselineConfig, SwaConfig, SwapConfig, TrainEnv};
+use crate::data::{Dataset, Generator, SynthSpec};
+use crate::runtime::Engine;
+use crate::sim::{CostModel, DeviceModel, NetModel};
+use crate::util::Result;
+
+pub struct Lab {
+    pub cfg: ExperimentConfig,
+    pub engine: Engine,
+    pub cost: CostModel,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+impl Lab {
+    pub fn new(cfg: ExperimentConfig) -> Result<Lab> {
+        cfg.validate()?;
+        let engine = Engine::load(cfg.artifacts_dir())?;
+        let m = engine.manifest().clone();
+        let gen = Generator::new(SynthSpec::for_preset(
+            m.model.num_classes,
+            m.model.image_size,
+            cfg.seed,
+        ));
+        let train = gen.sample(cfg.n_train, 10);
+        let test = gen.sample(cfg.n_test, 11);
+        let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+        crate::info!(
+            "lab ready: preset={} params={} train={} test={}",
+            cfg.preset,
+            m.num_params,
+            train.n,
+            test.n
+        );
+        Ok(Lab { cfg, engine, cost, train, test })
+    }
+
+    pub fn env(&self) -> TrainEnv<'_> {
+        TrainEnv {
+            engine: &self.engine,
+            cost: &self.cost,
+            train: &self.train,
+            test: &self.test,
+            augment: self.cfg.augment_spec(),
+            exec_batch: self.cfg.exec_batch,
+            bn_batches: self.cfg.bn_batches,
+        }
+    }
+
+    /// Steps per epoch for a given device count.
+    pub fn spe(&self, devices: usize) -> usize {
+        self.cfg.n_train / (devices * self.cfg.exec_batch)
+    }
+
+    pub fn sb_arm(&self, seed: u64) -> BaselineConfig {
+        BaselineConfig {
+            devices: self.cfg.sb_devices,
+            epochs: self.cfg.sb_epochs,
+            sched: self.cfg.sb_schedule(self.spe(self.cfg.sb_devices)),
+            stop_train_acc: 1.1,
+            seed,
+        }
+    }
+
+    pub fn lb_arm(&self, seed: u64) -> BaselineConfig {
+        BaselineConfig {
+            devices: self.cfg.lb_devices,
+            epochs: self.cfg.lb_epochs,
+            sched: self.cfg.lb_schedule(self.spe(self.cfg.lb_devices)),
+            stop_train_acc: 1.1,
+            seed,
+        }
+    }
+
+    pub fn swap_arm(&self, seed: u64) -> SwapConfig {
+        SwapConfig {
+            workers: self.cfg.workers,
+            group_devices: self.cfg.group_devices,
+            phase1_max_epochs: self.cfg.phase1_max_epochs,
+            phase1_stop_acc: self.cfg.phase1_stop_acc,
+            phase1_sched: self.cfg.phase1_schedule(self.spe(self.cfg.lb_devices)),
+            phase2_epochs: self.cfg.phase2_epochs,
+            phase2_sched: self.cfg.phase2_schedule(self.spe(self.cfg.group_devices)),
+            seed,
+            snapshot_every: None,
+            phase1_snapshot_every: None,
+        }
+    }
+
+    /// SWA arm on `devices` with a given number of cycles (Table 4 rows).
+    pub fn swa_arm(&self, devices: usize, cycles: usize, seed: u64) -> SwaConfig {
+        SwaConfig {
+            devices,
+            cycles,
+            cycle_epochs: self.cfg.swa_cycle_epochs,
+            high_lr: self.cfg.swa_high_lr,
+            low_lr: self.cfg.swa_low_lr,
+            seed,
+            seed_stream: 7,
+        }
+    }
+
+    /// Run seeds: base seed + run index.
+    pub fn run_seeds(&self) -> Vec<u64> {
+        (0..self.runs()).map(|r| self.cfg.seed + 1000 * r as u64).collect()
+    }
+
+    /// Number of statistical repeats (env SWAP_RUNS overrides the preset).
+    pub fn runs(&self) -> usize {
+        std::env::var("SWAP_RUNS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(self.cfg.runs)
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! CLI (`swap-train table1`, ...), the bench binaries (`cargo bench`), and
+//! the examples. DESIGN.md's per-experiment index maps each paper artifact
+//! to the driver here that regenerates it.
+
+pub mod ablations;
+pub mod figures;
+pub mod lab;
+pub mod tables;
+
+pub use lab::Lab;

@@ -1,0 +1,322 @@
+//! Reproduction drivers for the paper's Tables 1-4 (+ the DAWNBench §5.1
+//! claim). Each driver runs every arm over the lab's seeds and prints the
+//! paper's row next to the measured row, then writes a CSV under results/.
+
+use super::lab::Lab;
+use crate::bench::{pm, Table};
+use crate::coordinator::{run_baseline, run_swa, run_swap, SwaConfig};
+use crate::metrics::{summarize, RunOutcome};
+use crate::model::ParamSet;
+use crate::sim::ClusterClock;
+use crate::util::Result;
+
+fn outcome_of_swap(lab: &Lab, seed: u64) -> Result<(RunOutcome, RunOutcome)> {
+    let env = lab.env();
+    let r = run_swap(&env, &lab.swap_arm(seed))?;
+    let before = RunOutcome {
+        test_acc1: r.before_avg_acc1(),
+        test_acc5: r.before_avg_acc5(),
+        test_loss: 0.0,
+        cluster_seconds: r.phase2_seconds,
+        wall_seconds: r.wall_seconds,
+    };
+    let after = RunOutcome {
+        test_acc1: r.final_stats.accuracy1(),
+        test_acc5: r.final_stats.accuracy5(),
+        test_loss: r.final_stats.mean_loss(),
+        cluster_seconds: r.clock.seconds,
+        wall_seconds: r.wall_seconds,
+    };
+    Ok((before, after))
+}
+
+/// Tables 1 and 2 (and the accuracy/time part of Table 3): SB vs LB vs
+/// SWAP before/after averaging. `top5` adds the Top-5 column (Table 3).
+pub fn table_sgd_vs_swap(lab: &Lab, title: &str, paper_rows: &[(&str, &str, &str)],
+                         top5: bool) -> Result<Table> {
+    let mut sb = Vec::new();
+    let mut lb = Vec::new();
+    let mut swap_before = Vec::new();
+    let mut swap_after = Vec::new();
+    for seed in lab.run_seeds() {
+        crate::info!("{title}: seed {seed}");
+        sb.push(run_baseline(&lab.env(), &lab.sb_arm(seed))?.outcome);
+        lb.push(run_baseline(&lab.env(), &lab.lb_arm(seed))?.outcome);
+        let (before, after) = outcome_of_swap(lab, seed)?;
+        swap_before.push(before);
+        swap_after.push(after);
+    }
+
+    let mut headers = vec!["arm", "paper acc (%)", "measured acc (%)"];
+    if top5 {
+        headers.push("measured top5 (%)");
+    }
+    headers.extend_from_slice(&["paper time (s)", "modeled time (s)", "wall (s)"]);
+    let mut t = Table::new(title, &headers);
+    let arms: [(&str, &[RunOutcome]); 4] = [
+        ("SGD (small-batch)", &sb),
+        ("SGD (large-batch)", &lb),
+        ("SWAP (before averaging)", &swap_before),
+        ("SWAP (after averaging)", &swap_after),
+    ];
+    for ((name, outs), (_, paper_acc, paper_time)) in arms.iter().zip(paper_rows) {
+        let s = summarize(outs);
+        let mut row = vec![
+            name.to_string(),
+            paper_acc.to_string(),
+            pm(s.acc1.mean * 100.0, s.acc1.std * 100.0),
+        ];
+        if top5 {
+            row.push(pm(s.acc5.mean * 100.0, s.acc5.std * 100.0));
+        }
+        row.extend_from_slice(&[
+            paper_time.to_string(),
+            pm(s.cluster.mean, s.cluster.std),
+            format!("{:.1}", s.wall.mean),
+        ]);
+        t.row(&row);
+    }
+    Ok(t)
+}
+
+pub fn table1(lab: &Lab) -> Result<Table> {
+    table_sgd_vs_swap(
+        lab,
+        "Table 1 — CIFAR10(sim): SGD vs SWAP",
+        &[
+            ("sb", "95.24 ± 0.09", "254.12 ± 0.62"),
+            ("lb", "94.77 ± 0.23", "132.62 ± 1.09"),
+            ("swap-", "94.70 ± 0.20", "167.57 ± 3.25"),
+            ("swap+", "95.23 ± 0.08", "169.20 ± 3.25"),
+        ],
+        false,
+    )
+}
+
+pub fn table2(lab: &Lab) -> Result<Table> {
+    table_sgd_vs_swap(
+        lab,
+        "Table 2 — CIFAR100(sim): SGD vs SWAP",
+        &[
+            ("sb", "77.01 ± 0.25", "573.76 ± 2.25"),
+            ("lb", "75.84 ± 0.35", "116.13 ± 1.35"),
+            ("swap-", "75.74 ± 0.15", "123.11 ± 1.85"),
+            ("swap+", "78.18 ± 0.21", "125.34 ± 1.85"),
+        ],
+        false,
+    )
+}
+
+pub fn table3(lab: &Lab) -> Result<Table> {
+    table_sgd_vs_swap(
+        lab,
+        "Table 3 — ImageNet(sim): SGD vs SWAP (Top1; Top5 measured col)",
+        &[
+            ("sb", "76.14 ± 0.07", "235.29 ± 0.33"),
+            ("lb", "75.86 ± 0.03", "127.20 ± 0.78"),
+            ("swap-", "75.96 ± 0.02", "149.12 ± 0.55"),
+            ("swap+", "76.19 ± 0.03", "156.55 ± 0.56"),
+        ],
+        true,
+    )
+}
+
+/// Table 4 — SWA vs SWAP on CIFAR100(sim). Five arms:
+///   1. large-batch SWA (cyclic sampling stays at the large batch)
+///   2. large-batch-to-τ then small-batch SWA (sequential refinement)
+///   3. small-batch SWA (from a full SB run)
+///   4. SWAP (standard phase-2 length)
+///   5. SWAP with a longer phase 2 (the "relaxed" row)
+pub fn table4(lab: &Lab) -> Result<Table> {
+    let env = lab.env();
+    let cycles = lab.cfg.swa_cycles;
+    let mut arms: [Vec<(f64, f64, f64)>; 5] = Default::default(); // (before, after, time)
+
+    for seed in lab.run_seeds() {
+        crate::info!("table4: seed {seed}");
+        // -- arm 1: LB SWA ------------------------------------------------
+        {
+            let lbr = run_baseline(&env, &lab.lb_arm(seed))?;
+            let mut params = lbr.params;
+            let mut clock = lbr.clock;
+            let swa = run_swa(
+                &env,
+                &mut params,
+                &SwaConfig {
+                    devices: lab.cfg.lb_devices,
+                    high_lr: lab.cfg.swa_high_lr * 4.0, // linear-scaling rule
+                    ..lab.swa_arm(lab.cfg.lb_devices, cycles, seed)
+                },
+                &mut clock,
+            )?;
+            arms[0].push((
+                swa.last_stats.accuracy1(),
+                swa.final_stats.accuracy1(),
+                clock.seconds,
+            ));
+        }
+        // -- arm 2: LB-to-τ then sequential SB SWA -------------------------
+        {
+            let mut lb_cfg = lab.lb_arm(seed);
+            lb_cfg.stop_train_acc = lab.cfg.phase1_stop_acc;
+            lb_cfg.epochs = lab.cfg.phase1_max_epochs;
+            let lbr = run_baseline(&env, &lb_cfg)?;
+            let mut params = lbr.params;
+            let mut clock = lbr.clock;
+            let swa = run_swa(&env, &mut params, &lab.swa_arm(1, cycles, seed), &mut clock)?;
+            arms[1].push((
+                swa.last_stats.accuracy1(),
+                swa.final_stats.accuracy1(),
+                clock.seconds,
+            ));
+        }
+        // -- arm 3: SB SWA -------------------------------------------------
+        {
+            let sbr = run_baseline(&env, &lab.sb_arm(seed))?;
+            let mut params = sbr.params;
+            let mut clock = sbr.clock;
+            let swa = run_swa(&env, &mut params, &lab.swa_arm(1, cycles, seed), &mut clock)?;
+            arms[2].push((
+                swa.last_stats.accuracy1(),
+                swa.final_stats.accuracy1(),
+                clock.seconds,
+            ));
+        }
+        // -- arm 4: SWAP (standard) ---------------------------------------
+        {
+            let (before, after) = outcome_of_swap(lab, seed)?;
+            arms[3].push((before.test_acc1, after.test_acc1, after.cluster_seconds));
+        }
+        // -- arm 5: SWAP with a longer, cyclic phase 2 (paper: two 20-epoch
+        //    cycles instead of one 10-epoch cycle; scaled 2x here) --------
+        {
+            let mut cfg = lab.swap_arm(seed);
+            cfg.phase2_epochs *= 2;
+            cfg.phase2_sched = crate::optim::Schedule::Cyclic {
+                high: lab.cfg.swa_high_lr,
+                low: lab.cfg.swa_low_lr,
+                period: (lab.cfg.swa_cycle_epochs * lab.spe(lab.cfg.group_devices)).max(1),
+            };
+            let r = run_swap(&lab.env(), &cfg)?;
+            arms[4].push((
+                r.before_avg_acc1(),
+                r.final_stats.accuracy1(),
+                r.clock.seconds,
+            ));
+        }
+    }
+
+    let paper = [
+        ("Large-batch SWA", "76.06", "76.00", "376.4"),
+        ("LB then small-batch SWA", "76.26", "78.12", "398.0"),
+        ("Small-batch SWA", "76.80", "79.09", "848.6"),
+        ("SWAP (short phase 2)", "75.74", "78.18", "125.3"),
+        ("SWAP (long phase 2)", "76.19", "79.11", "241.5"),
+    ];
+    let mut t = Table::new(
+        "Table 4 — SWA vs SWAP (CIFAR100(sim))",
+        &[
+            "arm",
+            "paper before (%)",
+            "measured before (%)",
+            "paper after (%)",
+            "measured after (%)",
+            "paper time (s)",
+            "modeled time (s)",
+        ],
+    );
+    for (vals, (name, pb, pa, pt)) in arms.iter().zip(&paper) {
+        let before = crate::bench::stats(&vals.iter().map(|v| v.0 * 100.0).collect::<Vec<_>>());
+        let after = crate::bench::stats(&vals.iter().map(|v| v.1 * 100.0).collect::<Vec<_>>());
+        let time = crate::bench::stats(&vals.iter().map(|v| v.2).collect::<Vec<_>>());
+        t.row(&[
+            name.to_string(),
+            pb.to_string(),
+            pm(before.mean, before.std),
+            pa.to_string(),
+            pm(after.mean, after.std),
+            pt.to_string(),
+            pm(time.mean, time.std),
+        ]);
+    }
+    Ok(t)
+}
+
+/// §5.1 DAWNBench claim: time-to-target-accuracy for a fast SWAP setting
+/// (shorter phase 1 + one-epoch-scale phase 2) vs the SB baseline. The
+/// paper reaches CIFAR10-94% in 27s vs the 37s front-runner (0.73x).
+pub fn dawnbench(lab: &Lab, target_frac_of_sb: f64) -> Result<Table> {
+    let env = lab.env();
+    let mut rows = Vec::new();
+    for seed in lab.run_seeds() {
+        // the target: a fraction of what the SB baseline achieves
+        let sbr = run_baseline(&env, &lab.sb_arm(seed))?;
+        let target = sbr.outcome.test_acc1 * target_frac_of_sb;
+
+        // fast SWAP: phase 1 stops earlier, phase 2 is 1/3 the epochs
+        let mut cfg = lab.swap_arm(seed);
+        cfg.phase1_stop_acc = (lab.cfg.phase1_stop_acc - 0.1).max(0.3);
+        cfg.phase2_epochs = (lab.cfg.phase2_epochs / 3).max(1);
+        let r = run_swap(&env, &cfg)?;
+        rows.push((
+            target,
+            sbr.outcome.cluster_seconds,
+            r.final_stats.accuracy1(),
+            r.clock.seconds,
+        ));
+    }
+    let mut t = Table::new(
+        "DAWNBench §5.1 — time to target accuracy (paper: 27s vs 37s = 0.73x)",
+        &["seed run", "target acc (%)", "SB time (s)", "fast-SWAP acc (%)", "fast-SWAP time (s)", "ratio"],
+    );
+    for (i, (target, sb_time, acc, time)) in rows.iter().enumerate() {
+        t.row(&[
+            format!("{i}"),
+            format!("{:.2}", target * 100.0),
+            format!("{sb_time:.2}"),
+            format!("{:.2}{}", acc * 100.0, if acc >= target { "" } else { " (missed)" }),
+            format!("{time:.2}"),
+            format!("{:.2}x", time / sb_time),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Write a rendered table + CSV under results/.
+pub fn save_table(t: &Table, name: &str) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.txt"), t.render())?;
+    std::fs::write(format!("results/{name}.csv"), t.to_csv())?;
+    Ok(())
+}
+
+/// Shape assertions shared by the table benches: SWAP-after >= max(workers
+/// before, LB) - slack, and modeled SWAP time within [LB, SB] bounds-ish.
+/// Returns human-readable findings instead of panicking (benches print).
+pub fn check_table_shape(sb: &RunOutcome, lb: &RunOutcome, before: &RunOutcome,
+                         after: &RunOutcome) -> Vec<String> {
+    let mut findings = Vec::new();
+    if after.test_acc1 + 1e-9 < before.test_acc1 {
+        findings.push(format!(
+            "averaging did not help: after {:.4} < before {:.4}",
+            after.test_acc1, before.test_acc1
+        ));
+    }
+    if after.cluster_seconds >= sb.cluster_seconds {
+        findings.push(format!(
+            "SWAP not faster than SB: {:.2}s vs {:.2}s",
+            after.cluster_seconds, sb.cluster_seconds
+        ));
+    }
+    if lb.cluster_seconds >= sb.cluster_seconds {
+        findings.push(format!(
+            "LB not faster than SB: {:.2}s vs {:.2}s",
+            lb.cluster_seconds, sb.cluster_seconds
+        ));
+    }
+    findings
+}
+
+/// Thin struct so benches can reuse the ParamSet type without re-importing.
+pub type Params = ParamSet;
+pub type Clock = ClusterClock;

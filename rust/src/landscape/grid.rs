@@ -1,0 +1,114 @@
+//! Error-surface evaluation over a plane (Figures 2 and 3).
+//!
+//! For every grid point (alpha, beta): materialize theta = origin + alpha u
+//! + beta v, recompute BN statistics (one pass over training batches — the
+//! §4 procedure: "compute the batch-norm statistics for that model, then
+//! evaluate"), and measure train and test error.
+
+use super::plane::Plane;
+use crate::coordinator::TrainEnv;
+use crate::metrics::SeriesLog;
+use crate::sim::ClusterClock;
+use crate::util::Result;
+
+/// Grid resolution and evaluation budget.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// points per axis
+    pub n: usize,
+    /// margin around the anchors' bounding box
+    pub margin: f64,
+    /// max train/test batches per point (keeps grids tractable)
+    pub max_eval_batches: usize,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec { n: 15, margin: 0.35, max_eval_batches: 4 }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone, Copy)]
+pub struct GridPoint {
+    pub alpha: f64,
+    pub beta: f64,
+    pub train_err: f64,
+    pub test_err: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+}
+
+/// The evaluated surface + the argmin of test error ("BEST" in Figure 3).
+pub struct GridResult {
+    pub points: Vec<GridPoint>,
+    pub best_test: GridPoint,
+    pub spec: GridSpec,
+}
+
+pub fn eval_grid(
+    env: &TrainEnv,
+    plane: &Plane,
+    spec: &GridSpec,
+    seed: u64,
+    clock: &mut ClusterClock,
+) -> Result<GridResult> {
+    let (bx, by) = plane.bounds(spec.margin);
+    let lin = |r: &std::ops::Range<f64>, i: usize| {
+        r.start + (r.end - r.start) * i as f64 / (spec.n - 1).max(1) as f64
+    };
+    let mut points = Vec::with_capacity(spec.n * spec.n);
+    let mut best: Option<GridPoint> = None;
+    for i in 0..spec.n {
+        for j in 0..spec.n {
+            let (alpha, beta) = (lin(&bx, i), lin(&by, j));
+            let theta = plane.point(alpha, beta)?;
+            let bn = env.recompute_bn(&theta, seed, clock, false)?;
+            let tr = env.evaluate_on(env.train, &theta, &bn, clock, spec.max_eval_batches)?;
+            let te = env.evaluate_on(env.test, &theta, &bn, clock, spec.max_eval_batches)?;
+            let p = GridPoint {
+                alpha,
+                beta,
+                train_err: 1.0 - tr.accuracy1(),
+                test_err: 1.0 - te.accuracy1(),
+                train_loss: tr.mean_loss(),
+                test_loss: te.mean_loss(),
+            };
+            points.push(p);
+            if best.map(|b| p.test_err < b.test_err).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+        crate::debug!("grid row {}/{} done", i + 1, spec.n);
+    }
+    Ok(GridResult {
+        points,
+        best_test: best.unwrap(),
+        spec: spec.clone(),
+    })
+}
+
+impl GridResult {
+    /// CSV series: alpha, beta, train_err, test_err, train_loss, test_loss.
+    pub fn to_series(&self) -> SeriesLog {
+        let mut s = SeriesLog::new(&[
+            "alpha", "beta", "train_err", "test_err", "train_loss", "test_loss",
+        ]);
+        for p in &self.points {
+            s.push(&[p.alpha, p.beta, p.train_err, p.test_err, p.train_loss, p.test_loss]);
+        }
+        s
+    }
+
+    /// Error at the grid point nearest to the given plane coordinates.
+    pub fn nearest(&self, alpha: f64, beta: f64) -> &GridPoint {
+        self.points
+            .iter()
+            .min_by(|a, b| {
+                let da = (a.alpha - alpha).powi(2) + (a.beta - beta).powi(2);
+                let db = (b.alpha - alpha).powi(2) + (b.beta - beta).powi(2);
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap()
+    }
+}

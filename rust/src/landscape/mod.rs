@@ -1,0 +1,8 @@
+//! Loss-landscape visualization (§4, Figures 2 and 3): planes through
+//! weight vectors + error surfaces over them.
+
+pub mod grid;
+pub mod plane;
+
+pub use grid::{eval_grid, GridPoint, GridResult, GridSpec};
+pub use plane::Plane;

@@ -1,0 +1,173 @@
+//! The 2D affine plane through three weight vectors — the visualization
+//! device of §4 (Garipov et al. / Izmailov et al. style). Figures 2 and 3
+//! plot train/test error over the plane spanned by {LB, SGD, SWAP} or
+//! {SGD1, SGD2, SGD3} with SWAP projected in.
+
+use crate::model::ParamSet;
+use crate::tensor::{self, Tensor};
+use crate::util::{Error, Result};
+
+/// Orthonormal basis (u, v) of the plane through theta1, theta2, theta3,
+/// with theta1 as origin.
+pub struct Plane {
+    pub origin: ParamSet,
+    pub u: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// plane coordinates of the three anchors
+    pub anchors: [(f64, f64); 3],
+}
+
+impl Plane {
+    pub fn through(theta1: &ParamSet, theta2: &ParamSet, theta3: &ParamSet) -> Result<Plane> {
+        let d2 = tensor::sets_sub(&theta2.tensors, &theta1.tensors)?;
+        let d3 = tensor::sets_sub(&theta3.tensors, &theta1.tensors)?;
+        let n2 = tensor::sets_norm(&d2);
+        if n2 == 0.0 {
+            return Err(Error::invalid("plane: theta2 == theta1"));
+        }
+        let mut u = d2;
+        tensor::sets_scale(&mut u, (1.0 / n2) as f32);
+        // Gram-Schmidt
+        let a3 = tensor::sets_dot(&d3, &u)?;
+        let n3 = tensor::sets_norm(&d3);
+        let mut vres = d3;
+        tensor::sets_axpy(&mut vres, -a3 as f32, &u)?;
+        let nv = tensor::sets_norm(&vres);
+        // relative threshold: f32 Gram-Schmidt leaves ~1e-7 of residual on
+        // exactly collinear points
+        if nv < 1e-5 * n3.max(1e-12) {
+            return Err(Error::invalid("plane: three points are collinear"));
+        }
+        tensor::sets_scale(&mut vres, (1.0 / nv) as f32);
+        Ok(Plane {
+            origin: theta1.clone(),
+            u,
+            v: vres,
+            anchors: [(0.0, 0.0), (n2, 0.0), (a3, nv)],
+        })
+    }
+
+    /// The weight vector at plane coordinates (alpha, beta).
+    pub fn point(&self, alpha: f64, beta: f64) -> Result<ParamSet> {
+        let mut t = self.origin.clone();
+        tensor::sets_axpy(&mut t.tensors, alpha as f32, &self.u)?;
+        tensor::sets_axpy(&mut t.tensors, beta as f32, &self.v)?;
+        Ok(t)
+    }
+
+    /// Project an arbitrary weight vector onto plane coordinates.
+    pub fn project(&self, theta: &ParamSet) -> Result<(f64, f64)> {
+        let d = tensor::sets_sub(&theta.tensors, &self.origin.tensors)?;
+        Ok((tensor::sets_dot(&d, &self.u)?, tensor::sets_dot(&d, &self.v)?))
+    }
+
+    /// Distance from the plane (how far off-plane a projected point is).
+    pub fn residual(&self, theta: &ParamSet) -> Result<f64> {
+        let (a, b) = self.project(theta)?;
+        let on_plane = self.point(a, b)?;
+        theta.distance(&on_plane)
+    }
+
+    /// A bounding box (with margin) around the anchors — the grid extent
+    /// Figures 2/3 use.
+    pub fn bounds(&self, margin: f64) -> (std::ops::Range<f64>, std::ops::Range<f64>) {
+        let xs: Vec<f64> = self.anchors.iter().map(|a| a.0).collect();
+        let ys: Vec<f64> = self.anchors.iter().map(|a| a.1).collect();
+        let (x0, x1) = (
+            xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+        let (y0, y1) = (
+            ys.iter().cloned().fold(f64::INFINITY, f64::min),
+            ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+        let (dx, dy) = ((x1 - x0).max(1e-9), (y1 - y0).max(1e-9));
+        (
+            x0 - margin * dx..x1 + margin * dx,
+            y0 - margin * dy..y1 + margin * dy,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::property;
+
+    fn pset(vals: Vec<f32>) -> ParamSet {
+        ParamSet {
+            tensors: vec![Tensor::new(vec![vals.len()], vals).unwrap()],
+        }
+    }
+
+    #[test]
+    fn orthonormal_basis() {
+        let p = Plane::through(
+            &pset(vec![0.0, 0.0, 0.0]),
+            &pset(vec![2.0, 0.0, 0.0]),
+            &pset(vec![1.0, 3.0, 0.0]),
+        )
+        .unwrap();
+        assert!((tensor::sets_norm(&p.u) - 1.0).abs() < 1e-6);
+        assert!((tensor::sets_norm(&p.v) - 1.0).abs() < 1e-6);
+        assert!(tensor::sets_dot(&p.u, &p.v).unwrap().abs() < 1e-6);
+    }
+
+    #[test]
+    fn anchors_recovered_by_point() {
+        let t1 = pset(vec![1.0, 2.0, 3.0]);
+        let t2 = pset(vec![-1.0, 0.5, 2.0]);
+        let t3 = pset(vec![0.0, -1.0, 1.0]);
+        let p = Plane::through(&t1, &t2, &t3).unwrap();
+        for (anchor, theta) in p.anchors.iter().zip([&t1, &t2, &t3]) {
+            let recon = p.point(anchor.0, anchor.1).unwrap();
+            assert!(recon.distance(theta).unwrap() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn project_inverts_point_property() {
+        property(40, |g| {
+            let n = g.usize_in(3..30);
+            let mk = |g: &mut crate::testutil::Gen| {
+                pset((0..n).map(|_| g.normal()).collect())
+            };
+            let (t1, t2, t3) = (mk(g), mk(g), mk(g));
+            let p = match Plane::through(&t1, &t2, &t3) {
+                Ok(p) => p,
+                Err(_) => return, // collinear draw — fine
+            };
+            let (a, b) = (g.f64_in(-2.0..2.0), g.f64_in(-2.0..2.0));
+            let theta = p.point(a, b).unwrap();
+            let (a2, b2) = p.project(&theta).unwrap();
+            assert!((a - a2).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {a2}");
+            assert!((b - b2).abs() < 1e-3 * (1.0 + b.abs()), "{b} vs {b2}");
+            // points ON the plane have ~zero residual
+            assert!(p.residual(&theta).unwrap() < 1e-3);
+        });
+    }
+
+    #[test]
+    fn collinear_rejected() {
+        let t1 = pset(vec![0.0, 0.0]);
+        let t2 = pset(vec![1.0, 1.0]);
+        let t3 = pset(vec![2.0, 2.0]);
+        assert!(Plane::through(&t1, &t2, &t3).is_err());
+        assert!(Plane::through(&t1, &t1, &t3).is_err());
+    }
+
+    #[test]
+    fn bounds_contain_anchors() {
+        let p = Plane::through(
+            &pset(vec![0.0, 0.0, 1.0]),
+            &pset(vec![3.0, 0.0, 1.0]),
+            &pset(vec![0.0, 2.0, 1.0]),
+        )
+        .unwrap();
+        let (bx, by) = p.bounds(0.3);
+        for (a, b) in p.anchors {
+            assert!(bx.contains(&a) || a == bx.end);
+            assert!(by.contains(&b) || b == by.end);
+        }
+    }
+}

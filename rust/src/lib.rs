@@ -1,0 +1,27 @@
+//! swap-train: reproduction of "Stochastic Weight Averaging in Parallel:
+//! Large-Batch Training That Generalizes Well" (Gupta, Akle Serrano,
+//! DeCoste — ICLR 2020).
+//!
+//! Three layers (DESIGN.md):
+//! * L3 (this crate): the SWAP coordinator — phase orchestration, gradient
+//!   all-reduce, independent workers, weight averaging, BN recompute,
+//!   schedules, data pipeline, metrics, virtual-cluster clock.
+//! * L2/L1 (python/, build-time only): JAX ResNet9s + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts.
+//! * runtime: PJRT CPU client executing the artifacts.
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod landscape;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod testutil;
+pub mod util;

@@ -1,0 +1,193 @@
+//! `swap-train` — the L3 leader binary. Dispatches CLI subcommands onto
+//! the experiment drivers. See `swap-train help` / cli::HELP.
+
+use anyhow::Result;
+use swap::cli::{default_preset_for, Args, HELP};
+use swap::coordinator::{run_baseline, run_local_sgd, run_swa, run_swap, LocalSgdConfig};
+use swap::experiments::{figures, tables, Lab};
+use swap::landscape::GridSpec;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let cmd = args.command.as_str();
+    if cmd == "help" || cmd == "--help" {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let cfg = args.config(default_preset_for(cmd))?;
+
+    match cmd {
+        "info" => {
+            println!("{cfg:#?}");
+            let lab = Lab::new(cfg)?;
+            println!("manifest: {:#?}", lab.engine.manifest());
+        }
+        "swap" => {
+            let lab = Lab::new(cfg)?;
+            let r = run_swap(&lab.env(), &lab.swap_arm(lab.cfg.seed))?;
+            println!(
+                "SWAP: phase1 {:.1} epochs (train acc {:.3}) | before avg {:.4} | after avg {:.4}",
+                r.phase1.epochs,
+                r.phase1.train_acc,
+                r.before_avg_acc1(),
+                r.final_stats.accuracy1()
+            );
+            println!(
+                "modeled time: phase1 {:.2}s, total {:.2}s (compute {:.2}s, comm {:.2}s); wall {:.1}s",
+                r.phase1_seconds, r.clock.seconds, r.clock.compute, r.clock.comm, r.wall_seconds
+            );
+        }
+        "sb" | "lb" => {
+            let lab = Lab::new(cfg)?;
+            let arm = if cmd == "sb" {
+                lab.sb_arm(lab.cfg.seed)
+            } else {
+                lab.lb_arm(lab.cfg.seed)
+            };
+            let r = run_baseline(&lab.env(), &arm)?;
+            println!(
+                "{}: test acc {:.4} (top5 {:.4}) | modeled {:.2}s | wall {:.1}s | {:.1} epochs (train acc {:.3})",
+                cmd.to_uppercase(),
+                r.outcome.test_acc1,
+                r.outcome.test_acc5,
+                r.outcome.cluster_seconds,
+                r.outcome.wall_seconds,
+                r.progress.epochs,
+                r.progress.train_acc
+            );
+        }
+        "swa" => {
+            let lab = Lab::new(cfg)?;
+            let env = lab.env();
+            let sb = run_baseline(&env, &lab.sb_arm(lab.cfg.seed))?;
+            let mut params = sb.params;
+            let mut clock = sb.clock;
+            let r = run_swa(
+                &env,
+                &mut params,
+                &lab.swa_arm(1, lab.cfg.swa_cycles, lab.cfg.seed),
+                &mut clock,
+            )?;
+            println!(
+                "SWA: before avg {:.4} | after avg {:.4} | modeled {:.2}s",
+                r.last_stats.accuracy1(),
+                r.final_stats.accuracy1(),
+                clock.seconds
+            );
+        }
+        "local-sgd" => {
+            let lab = Lab::new(cfg)?;
+            let spe = lab.spe(lab.cfg.lb_devices);
+            let r = run_local_sgd(
+                &lab.env(),
+                &LocalSgdConfig {
+                    devices: lab.cfg.lb_devices,
+                    sync_epochs: (lab.cfg.phase1_max_epochs / 2).max(1),
+                    sync_sched: lab.cfg.phase1_schedule(spe),
+                    local_epochs: lab.cfg.phase2_epochs,
+                    local_sched: lab.cfg.phase2_schedule(lab.spe(1)),
+                    h_steps: 8,
+                    seed: lab.cfg.seed,
+                },
+            )?;
+            println!(
+                "post-local SGD: test acc {:.4} | modeled {:.2}s | {} sync events",
+                r.outcome.test_acc1, r.outcome.cluster_seconds, r.sync_events
+            );
+        }
+        "table1" | "table2" | "table3" | "table4" | "dawnbench" => {
+            let lab = Lab::new(cfg)?;
+            let t = match cmd {
+                "table1" => tables::table1(&lab)?,
+                "table2" => tables::table2(&lab)?,
+                "table3" => tables::table3(&lab)?,
+                "table4" => tables::table4(&lab)?,
+                _ => tables::dawnbench(&lab, 0.95)?,
+            };
+            t.print();
+            tables::save_table(&t, cmd)?;
+            println!("saved results/{cmd}.txt and .csv");
+        }
+        "fig1" => {
+            let lab = Lab::new(cfg)?;
+            let (_lr, acc) = figures::fig1(&lab)?;
+            println!(
+                "fig1 written: results/fig1_lr.csv, results/fig1_accuracy.csv ({} rows)",
+                acc.len()
+            );
+        }
+        "fig2" | "fig3" | "landscape" => {
+            let lab = Lab::new(cfg)?;
+            let figs = figures::fig2_fig3(&lab, &GridSpec::default())?;
+            println!(
+                "fig2/fig3 written under results/. best test err on fig3 plane: {:.4} at ({:.2},{:.2})",
+                figs.fig3.best_test.test_err, figs.fig3.best_test.alpha, figs.fig3.best_test.beta
+            );
+        }
+        "fig4" => {
+            let lab = Lab::new(cfg)?;
+            let s = figures::fig4(&lab)?;
+            println!("fig4 written: results/fig4_cosine.csv ({} rows)", s.len());
+        }
+        "schedules" | "fig5" | "fig6" => {
+            let lab = Lab::new(cfg)?;
+            let a = figures::fig5(&lab)?;
+            let b = figures::fig6(&lab)?;
+            println!(
+                "fig5 ({} rows) and fig6 ({} rows) written under results/",
+                a.len(),
+                b.len()
+            );
+        }
+        "swap-resume" => {
+            // restartable SWAP: phase-1 + finished workers are persisted
+            // under --out (default runs/<preset>) and skipped on re-entry
+            let out = args
+                .get("out")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("runs/{}", cfg.preset));
+            let lab = Lab::new(cfg)?;
+            let dir = swap::coordinator::RunDir::new(&out)?;
+            let r = swap::coordinator::run_swap_resumable(&lab.env(), &lab.swap_arm(lab.cfg.seed), &dir)?;
+            println!(
+                "SWAP (resumable, state in {out}): after avg {:.4} | modeled {:.2}s | wall {:.1}s",
+                r.final_stats.accuracy1(),
+                r.clock.seconds,
+                r.wall_seconds
+            );
+        }
+        "ablate-workers" | "ablate-tau" | "ablate-phase2" | "ablate-freq" | "ablate-net" => {
+            use swap::experiments::ablations as ab;
+            let lab = Lab::new(cfg)?;
+            let t = match cmd {
+                "ablate-workers" => ab::ablate_workers(&lab, &[2, 4, 8])?,
+                "ablate-tau" => ab::ablate_tau(&lab, &[0.3, 0.5, 0.7, 1.1])?,
+                "ablate-phase2" => ab::ablate_phase2(&lab, &[2, 4, 8, 16])?,
+                "ablate-freq" => ab::ablate_averaging_frequency(&lab, &[1, 8, 64])?,
+                _ => ab::ablate_network(&lab)?,
+            };
+            t.print();
+            tables::save_table(&t, cmd)?;
+        }
+        "e2e" => {
+            let lab = Lab::new(cfg)?;
+            let env = lab.env();
+            let sb = run_baseline(&env, &lab.sb_arm(lab.cfg.seed))?;
+            let r = run_swap(&env, &lab.swap_arm(lab.cfg.seed))?;
+            println!(
+                "e2e: SB acc {:.4} ({:.1}s modeled) | SWAP acc {:.4} ({:.1}s modeled, {:.2}x)",
+                sb.outcome.test_acc1,
+                sb.outcome.cluster_seconds,
+                r.final_stats.accuracy1(),
+                r.clock.seconds,
+                r.clock.seconds / sb.outcome.cluster_seconds
+            );
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Metrics: training curves (CSV series for the figures) and
+//! across-run summaries (mean ± std for the tables).
+
+pub mod series;
+
+pub use series::SeriesLog;
+
+use crate::bench::{stats, Stats};
+
+/// Accuracy/time outcome of one experiment run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOutcome {
+    pub test_acc1: f64,
+    pub test_acc5: f64,
+    pub test_loss: f64,
+    /// modeled cluster seconds (the paper's "training time")
+    pub cluster_seconds: f64,
+    /// real wall seconds on this machine (reference)
+    pub wall_seconds: f64,
+}
+
+/// mean ± std of a set of outcomes, field-wise.
+#[derive(Debug, Clone)]
+pub struct OutcomeSummary {
+    pub acc1: Stats,
+    pub acc5: Stats,
+    pub loss: Stats,
+    pub cluster: Stats,
+    pub wall: Stats,
+    pub n: usize,
+}
+
+pub fn summarize(outs: &[RunOutcome]) -> OutcomeSummary {
+    assert!(!outs.is_empty());
+    let pick = |f: fn(&RunOutcome) -> f64| stats(&outs.iter().map(f).collect::<Vec<_>>());
+    OutcomeSummary {
+        acc1: pick(|o| o.test_acc1),
+        acc5: pick(|o| o.test_acc5),
+        loss: pick(|o| o.test_loss),
+        cluster: pick(|o| o.cluster_seconds),
+        wall: pick(|o| o.wall_seconds),
+        n: outs.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_means() {
+        let outs = [
+            RunOutcome { test_acc1: 0.9, cluster_seconds: 10.0, ..Default::default() },
+            RunOutcome { test_acc1: 0.8, cluster_seconds: 20.0, ..Default::default() },
+        ];
+        let s = summarize(&outs);
+        assert!((s.acc1.mean - 0.85).abs() < 1e-12);
+        assert!((s.cluster.mean - 15.0).abs() < 1e-12);
+        assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summarize_empty_panics() {
+        summarize(&[]);
+    }
+}

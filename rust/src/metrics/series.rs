@@ -1,0 +1,103 @@
+//! Column-oriented series log → CSV. Every figure bench writes one of
+//! these under results/ so the curves can be re-plotted externally.
+
+use std::path::Path;
+
+use crate::util::{Error, Result};
+
+/// A table of f64 columns with string headers, row-appended.
+#[derive(Debug, Clone)]
+pub struct SeriesLog {
+    headers: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl SeriesLog {
+    pub fn new(headers: &[&str]) -> Self {
+        SeriesLog {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.headers.len(), "ragged series row");
+        self.rows.push(row.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Column by header name.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.headers.iter().position(|h| h == name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path.as_ref(), self.to_csv()).map_err(Error::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_column() {
+        let mut s = SeriesLog::new(&["step", "acc"]);
+        s.push(&[0.0, 0.5]);
+        s.push(&[1.0, 0.75]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.column("acc").unwrap(), vec![0.5, 0.75]);
+        assert!(s.column("nope").is_none());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = SeriesLog::new(&["a", "b"]);
+        s.push(&[1.0, 2.5]);
+        assert_eq!(s.to_csv(), "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_row_panics() {
+        let mut s = SeriesLog::new(&["a"]);
+        s.push(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("swap-series-{}", std::process::id()));
+        let path = dir.join("sub/fig.csv");
+        let mut s = SeriesLog::new(&["x"]);
+        s.push(&[7.0]);
+        s.write_csv(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("7"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,209 @@
+//! Checkpoint save/load: own little-endian binary format (no serde/bincode
+//! in the vendored crate set).
+//!
+//! Layout:
+//!   magic "SWAPCKP1" (8 bytes)
+//!   u32 tensor count
+//!   per tensor: u32 name_len, name bytes (utf-8),
+//!               u32 rank, u64 dims[rank],
+//!               f32 data[prod(dims)]
+//!
+//! Used for: phase-1 -> phase-2 handoff on disk, SWA model banks, and the
+//! landscape tools (they reload the LB/SGD/SWAP anchor points).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"SWAPCKP1";
+
+/// Save named tensors (order preserved).
+pub fn save(path: impl AsRef<Path>, named: &[(String, &Tensor)]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(named.len() as u32).to_le_bytes());
+    for (name, t) in named {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for d in t.shape() {
+            buf.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        for x in t.data() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let tmp = path.as_ref().with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path.as_ref())?; // atomic publish
+    Ok(())
+}
+
+/// Load all tensors with their names, in file order.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut r = Reader { b: &buf, i: 0 };
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        return Err(Error::invalid(format!(
+            "{}: not a swap checkpoint",
+            path.as_ref().display()
+        )));
+    }
+    let count = r.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| Error::invalid("bad checkpoint name"))?;
+        let rank = r.u32()? as usize;
+        if rank > 16 {
+            return Err(Error::invalid("implausible tensor rank"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let bytes = r.take(n * 4)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    if r.i != buf.len() {
+        return Err(Error::invalid("trailing bytes in checkpoint"));
+    }
+    Ok(out)
+}
+
+/// Save a plain tensor list with synthesized names (param sets).
+pub fn save_tensors(path: impl AsRef<Path>, names: &[String], tensors: &[Tensor]) -> Result<()> {
+    if names.len() != tensors.len() {
+        return Err(Error::invalid("names/tensors length mismatch"));
+    }
+    let named: Vec<(String, &Tensor)> = names
+        .iter()
+        .cloned()
+        .zip(tensors.iter())
+        .collect();
+    save(path, &named)
+}
+
+/// Load into a plain tensor list, verifying names match the expectation.
+pub fn load_tensors(path: impl AsRef<Path>, expect_names: &[String]) -> Result<Vec<Tensor>> {
+    let named = load(path)?;
+    if named.len() != expect_names.len() {
+        return Err(Error::invalid(format!(
+            "checkpoint has {} tensors, want {}",
+            named.len(),
+            expect_names.len()
+        )));
+    }
+    named
+        .into_iter()
+        .zip(expect_names)
+        .map(|((name, t), want)| {
+            if &name != want {
+                return Err(Error::invalid(format!(
+                    "checkpoint tensor '{name}' where '{want}' expected"
+                )));
+            }
+            Ok(t)
+        })
+        .collect()
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.i + n;
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| Error::invalid("truncated checkpoint"))?;
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("swap-ckpt-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmpfile("roundtrip");
+        let a = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, -1e7]).unwrap();
+        let b = Tensor::scalar(42.0);
+        save(&p, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let loaded = load(&p).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "a");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_tensors_checks_names() {
+        let p = tmpfile("names");
+        let a = Tensor::zeros(vec![3]);
+        save_tensors(&p, &["x".into()], &[a]).unwrap();
+        assert!(load_tensors(&p, &["x".into()]).is_ok());
+        assert!(load_tensors(&p, &["y".into()]).is_err());
+        assert!(load_tensors(&p, &["x".into(), "z".into()]).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("garbage");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = tmpfile("trunc");
+        let a = Tensor::zeros(vec![100]);
+        save(&p, &[("a".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,31 @@
+//! Model-state layer: parameter sets aligned to the manifest, batch-norm
+//! running statistics, weight averaging, and checkpointing.
+
+pub mod checkpoint;
+pub mod params;
+
+pub use params::{BnState, ParamSet};
+
+use crate::runtime::Manifest;
+use crate::util::Result;
+
+/// Save a ParamSet (+ optional momentum) under the manifest's tensor names.
+pub fn save_params(
+    path: impl AsRef<std::path::Path>,
+    manifest: &Manifest,
+    params: &ParamSet,
+) -> Result<()> {
+    let names: Vec<String> = manifest.params.iter().map(|s| s.name.clone()).collect();
+    checkpoint::save_tensors(path, &names, &params.tensors)
+}
+
+/// Load a ParamSet saved by `save_params`, verifying names.
+pub fn load_params(
+    path: impl AsRef<std::path::Path>,
+    manifest: &Manifest,
+) -> Result<ParamSet> {
+    let names: Vec<String> = manifest.params.iter().map(|s| s.name.clone()).collect();
+    Ok(ParamSet {
+        tensors: checkpoint::load_tensors(path, &names)?,
+    })
+}

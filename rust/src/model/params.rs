@@ -1,0 +1,209 @@
+//! Parameter / BN-state containers aligned to the artifact manifest order.
+//!
+//! Initialization matches python/compile/model.py's scheme (He-normal conv
+//! weights, BN gamma=1 beta=0, zero biases) — the *values* need not match
+//! python (training starts from rust-side init), only the convention.
+
+use crate::runtime::manifest::{Manifest, TensorSpec};
+use crate::tensor::Tensor;
+use crate::util::{Result, Rng};
+
+/// An ordered set of parameter tensors (manifest order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// He-normal initialization from the manifest specs.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Rng::stream(seed, 0x9a9a);
+        let tensors = manifest
+            .params
+            .iter()
+            .map(|spec| init_tensor(spec, &mut rng))
+            .collect();
+        ParamSet { tensors }
+    }
+
+    /// All-zeros set with matching shapes (momentum buffers).
+    pub fn zeros_like(&self) -> Self {
+        ParamSet {
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| Tensor::zeros(t.shape().to_vec()))
+                .collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn as_slice(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    /// Euclidean distance to another set (weight-travel statistics).
+    pub fn distance(&self, other: &ParamSet) -> Result<f64> {
+        crate::tensor::sets_distance(&self.tensors, &other.tensors)
+    }
+
+    /// Mean of several sets — SWAP phase 3 (host-side path).
+    pub fn average(sets: &[ParamSet]) -> Result<ParamSet> {
+        let slices: Vec<Vec<Tensor>> = sets.iter().map(|s| s.tensors.clone()).collect();
+        Ok(ParamSet {
+            tensors: crate::tensor::average_sets(&slices)?,
+        })
+    }
+}
+
+fn init_tensor(spec: &TensorSpec, rng: &mut Rng) -> Tensor {
+    let name = spec.name.as_str();
+    if name.ends_with(".w") {
+        let fan_in = spec.shape[0] as f32;
+        let sigma = (2.0 / fan_in).sqrt();
+        Tensor::from_fn(spec.shape.clone(), |_| rng.normal_scaled(0.0, sigma))
+    } else if name.ends_with(".gamma") {
+        Tensor::full(spec.shape.clone(), 1.0)
+    } else {
+        // beta, biases
+        Tensor::zeros(spec.shape.clone())
+    }
+}
+
+/// Running batch-norm statistics (mean=0, var=1 until recomputed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BnState {
+    pub tensors: Vec<Tensor>,
+}
+
+impl BnState {
+    pub fn init(manifest: &Manifest) -> Self {
+        let tensors = manifest
+            .bn_stats
+            .iter()
+            .map(|spec| {
+                if spec.name.ends_with(".var") {
+                    Tensor::full(spec.shape.clone(), 1.0)
+                } else {
+                    Tensor::zeros(spec.shape.clone())
+                }
+            })
+            .collect();
+        BnState { tensors }
+    }
+
+    /// Average a list of per-batch moment sets into running statistics —
+    /// phase 3 of SWAP (Algorithm 1, line 28). Plain arithmetic mean over
+    /// batches of the batch means/vars, the SWA-standard recompute.
+    pub fn from_moments(moment_batches: &[Vec<Tensor>]) -> Result<Self> {
+        Ok(BnState {
+            tensors: crate::tensor::average_sets(moment_batches)?,
+        })
+    }
+
+    pub fn as_slice(&self) -> &[Tensor] {
+        &self.tensors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let text = r#"{
+          "preset": "unit",
+          "model": {"arch":"resnet9s","width":4,"num_classes":10,"image_size":16,
+                    "momentum":0.9,"weight_decay":0.0005,"head_scale":0.125,"bn_eps":1e-05},
+          "params": [{"name":"prep.w","shape":[27,4]},
+                     {"name":"prep.gamma","shape":[4]},
+                     {"name":"prep.beta","shape":[4]},
+                     {"name":"head.b","shape":[10]}],
+          "bn_stats": [{"name":"prep.mean","shape":[4]},{"name":"prep.var","shape":[4]}],
+          "num_params": 126,
+          "batches": [8],
+          "executables": {},
+          "flops_fwd_per_example": 1
+        }"#;
+        Manifest::parse(text, PathBuf::new()).unwrap()
+    }
+
+    #[test]
+    fn init_shapes_and_conventions() {
+        let m = manifest();
+        let p = ParamSet::init(&m, 0);
+        assert_eq!(p.tensors.len(), 4);
+        assert_eq!(p.numel(), 126);
+        // gamma all ones, beta/bias all zeros
+        assert!(p.tensors[1].data().iter().all(|&x| x == 1.0));
+        assert!(p.tensors[2].data().iter().all(|&x| x == 0.0));
+        assert!(p.tensors[3].data().iter().all(|&x| x == 0.0));
+        // conv weights: nonzero, roughly He-scaled
+        let w = &p.tensors[0];
+        assert!(w.data().iter().any(|&x| x != 0.0));
+        let std = (w.sq_norm() / w.numel() as f64).sqrt();
+        let expect = (2.0f64 / 27.0).sqrt();
+        assert!((std - expect).abs() < expect * 0.5, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let m = manifest();
+        assert_eq!(ParamSet::init(&m, 7), ParamSet::init(&m, 7));
+        assert_ne!(ParamSet::init(&m, 7), ParamSet::init(&m, 8));
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let m = manifest();
+        let p = ParamSet::init(&m, 0);
+        let z = p.zeros_like();
+        assert_eq!(z.numel(), p.numel());
+        assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn average_and_distance() {
+        let m = manifest();
+        let a = ParamSet::init(&m, 1);
+        let b = ParamSet::init(&m, 2);
+        let avg = ParamSet::average(&[a.clone(), b.clone()]).unwrap();
+        // distance(avg, a) == distance(avg, b) for a 2-mean
+        let da = avg.distance(&a).unwrap();
+        let db = avg.distance(&b).unwrap();
+        assert!((da - db).abs() < 1e-6 * da.max(1.0));
+        assert!(avg.distance(&avg).unwrap() == 0.0);
+    }
+
+    #[test]
+    fn bn_state_init_mean0_var1() {
+        let m = manifest();
+        let bn = BnState::init(&m);
+        assert!(bn.tensors[0].data().iter().all(|&x| x == 0.0));
+        assert!(bn.tensors[1].data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn bn_from_moments_averages() {
+        let b1 = vec![
+            Tensor::new(vec![2], vec![0.0, 2.0]).unwrap(),
+            Tensor::new(vec![2], vec![1.0, 1.0]).unwrap(),
+        ];
+        let b2 = vec![
+            Tensor::new(vec![2], vec![2.0, 0.0]).unwrap(),
+            Tensor::new(vec![2], vec![3.0, 1.0]).unwrap(),
+        ];
+        let bn = BnState::from_moments(&[b1, b2]).unwrap();
+        assert_eq!(bn.tensors[0].data(), &[1.0, 1.0]);
+        assert_eq!(bn.tensors[1].data(), &[2.0, 1.0]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Optimizers and learning-rate schedules.
+
+pub mod schedule;
+pub mod sgd;
+
+pub use schedule::{imagenet_piecewise, Schedule};
+pub use sgd::{SgdConfig, SgdOptimizer};

@@ -1,0 +1,258 @@
+//! Learning-rate schedules, indexed in steps.
+//!
+//! The paper uses (Appendix A / §5.2 / §5.3):
+//!   * warmup-triangle ("one-cycle") for the CIFAR runs: linear 0 → peak
+//!     over the warmup, then linear peak → 0 at the end of training;
+//!   * a piecewise-linear multi-phase schedule for ImageNet (Fig 5), which
+//!     SWAP composes: doubled schedule in phase 1, original in phase 2;
+//!   * cyclic (sawtooth) schedules for SWA (Fig 6), sampling a model at the
+//!     end of each cycle where the LR is lowest.
+//!
+//! `Schedule::series` emits the full LR-vs-step curve — that is exactly the
+//! data Figures 5 and 6 plot.
+
+/// A learning-rate schedule over integer steps.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant(f32),
+    /// Linear 0→peak over `warmup`, then peak→`end_lr` over the rest.
+    Triangle {
+        peak: f32,
+        warmup: usize,
+        total: usize,
+        end_lr: f32,
+    },
+    /// Linear interpolation between (step, lr) breakpoints; clamped at the
+    /// ends. Breakpoints must be strictly increasing in step.
+    Piecewise(Vec<(usize, f32)>),
+    /// Sawtooth cycles for SWA: within each cycle of `period` steps the LR
+    /// decays linearly high→low, then jumps back to high.
+    Cyclic {
+        high: f32,
+        low: f32,
+        period: usize,
+    },
+    /// Schedules run back to back, each for its `len` steps; steps beyond
+    /// the last segment keep the last segment's final value.
+    Sequence(Vec<(usize, Schedule)>),
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match self {
+            Schedule::Constant(v) => *v,
+            Schedule::Triangle { peak, warmup, total, end_lr } => {
+                let s = step.min(*total) as f32;
+                let (w, t) = (*warmup as f32, *total as f32);
+                if s < w {
+                    peak * s / w.max(1.0)
+                } else if t > w {
+                    peak + (end_lr - peak) * (s - w) / (t - w)
+                } else {
+                    *peak
+                }
+            }
+            Schedule::Piecewise(points) => {
+                debug_assert!(!points.is_empty());
+                if step <= points[0].0 {
+                    return points[0].1;
+                }
+                for win in points.windows(2) {
+                    let ((s0, l0), (s1, l1)) = (win[0], win[1]);
+                    if step <= s1 {
+                        let t = (step - s0) as f32 / (s1 - s0).max(1) as f32;
+                        return l0 + (l1 - l0) * t;
+                    }
+                }
+                points.last().unwrap().1
+            }
+            Schedule::Cyclic { high, low, period } => {
+                let pos = (step % period.max(&1)) as f32;
+                let frac = pos / (*period as f32 - 1.0).max(1.0);
+                high + (low - high) * frac
+            }
+            Schedule::Sequence(parts) => {
+                let mut s = step;
+                for (i, (len, sched)) in parts.iter().enumerate() {
+                    if s < *len || i == parts.len() - 1 {
+                        return sched.lr(s.min(len.saturating_sub(1)));
+                    }
+                    s -= len;
+                }
+                0.0
+            }
+        }
+    }
+
+    /// Full curve for plotting (Figures 1, 5, 6).
+    pub fn series(&self, steps: usize) -> Vec<f32> {
+        (0..steps).map(|s| self.lr(s)).collect()
+    }
+
+    /// Steps within a cyclic schedule where SWA samples a model (end of
+    /// each cycle — the low-LR point).
+    pub fn cycle_ends(period: usize, total: usize) -> Vec<usize> {
+        (1..=total / period).map(|k| k * period - 1).collect()
+    }
+
+    /// Scale all learning rates by `k` (the paper's linear-scaling rule:
+    /// double the batch → double the LR, §5.2).
+    pub fn scaled(&self, k: f32) -> Schedule {
+        match self {
+            Schedule::Constant(v) => Schedule::Constant(v * k),
+            Schedule::Triangle { peak, warmup, total, end_lr } => Schedule::Triangle {
+                peak: peak * k,
+                warmup: *warmup,
+                total: *total,
+                end_lr: end_lr * k,
+            },
+            Schedule::Piecewise(pts) => {
+                Schedule::Piecewise(pts.iter().map(|(s, l)| (*s, l * k)).collect())
+            }
+            Schedule::Cyclic { high, low, period } => Schedule::Cyclic {
+                high: high * k,
+                low: low * k,
+                period: *period,
+            },
+            Schedule::Sequence(parts) => Schedule::Sequence(
+                parts.iter().map(|(n, s)| (*n, s.scaled(k))).collect(),
+            ),
+        }
+    }
+}
+
+/// The DAWNBench-style ImageNet schedule of Fig 5 (original, 8-GPU form),
+/// expressed in steps given `steps_per_epoch`. LR breakpoints follow the
+/// published shape: warmup, high plateau decaying in drops toward zero.
+pub fn imagenet_piecewise(steps_per_epoch: usize, peak: f32) -> Schedule {
+    let e = |x: f64| (x * steps_per_epoch as f64) as usize;
+    Schedule::Piecewise(vec![
+        (0, peak * 0.25),
+        (e(4.0), peak),         // warmup to peak by epoch 4
+        (e(18.0), peak * 0.1),  // long decay
+        (e(25.0), peak * 0.01), // drop
+        (e(28.0), peak * 0.001),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant(0.3);
+        assert_eq!(s.lr(0), 0.3);
+        assert_eq!(s.lr(10_000), 0.3);
+    }
+
+    #[test]
+    fn triangle_warmup_and_decay() {
+        let s = Schedule::Triangle { peak: 1.0, warmup: 10, total: 30, end_lr: 0.0 };
+        assert_eq!(s.lr(0), 0.0);
+        assert!((s.lr(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        assert!((s.lr(20) - 0.5).abs() < 1e-6);
+        assert!(s.lr(30).abs() < 1e-6);
+        assert!(s.lr(99).abs() < 1e-6); // clamped past the end
+    }
+
+    #[test]
+    fn triangle_monotone_up_then_down() {
+        let s = Schedule::Triangle { peak: 0.4, warmup: 7, total: 31, end_lr: 0.0 };
+        for t in 0..6 {
+            assert!(s.lr(t + 1) >= s.lr(t));
+        }
+        for t in 8..30 {
+            assert!(s.lr(t + 1) <= s.lr(t));
+        }
+        assert!(s.series(31).iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn piecewise_interpolates_and_clamps() {
+        let s = Schedule::Piecewise(vec![(0, 0.1), (10, 1.0), (20, 0.0)]);
+        assert!((s.lr(5) - 0.55).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        assert!((s.lr(15) - 0.5).abs() < 1e-6);
+        assert_eq!(s.lr(100), 0.0);
+    }
+
+    #[test]
+    fn cyclic_sawtooth() {
+        let s = Schedule::Cyclic { high: 1.0, low: 0.1, period: 10 };
+        assert_eq!(s.lr(0), 1.0);
+        assert!((s.lr(9) - 0.1).abs() < 1e-6); // end of cycle = low
+        assert_eq!(s.lr(10), 1.0); // jumps back
+        assert!((s.lr(19) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cycle_ends_are_low_points() {
+        let ends = Schedule::cycle_ends(10, 35);
+        assert_eq!(ends, vec![9, 19, 29]);
+        let s = Schedule::Cyclic { high: 1.0, low: 0.05, period: 10 };
+        for e in ends {
+            assert!((s.lr(e) - 0.05).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sequence_concatenates_and_holds_tail() {
+        let s = Schedule::Sequence(vec![
+            (10, Schedule::Constant(1.0)),
+            (10, Schedule::Triangle { peak: 0.5, warmup: 0, total: 10, end_lr: 0.0 }),
+        ]);
+        assert_eq!(s.lr(3), 1.0);
+        assert!((s.lr(10) - 0.5).abs() < 1e-6);
+        assert!(s.lr(19) < 0.1);
+        // past the end: holds last segment's final value
+        assert_eq!(s.lr(500), s.lr(19));
+    }
+
+    #[test]
+    fn scaled_doubles_everything() {
+        let s = Schedule::Triangle { peak: 0.6, warmup: 5, total: 20, end_lr: 0.0 }.scaled(2.0);
+        assert!((s.lr(5) - 1.2).abs() < 1e-6);
+        let p = imagenet_piecewise(100, 1.0).scaled(2.0);
+        assert!((p.lr(400) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn imagenet_shape() {
+        let s = imagenet_piecewise(100, 1.0);
+        assert!(s.lr(0) < s.lr(400)); // warms up
+        assert!(s.lr(400) > s.lr(1800)); // decays
+        assert!(s.lr(2800) <= 0.0011); // tiny at the end
+        assert!(s.series(2800).iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn nonnegative_everywhere_property() {
+        crate::testutil::property(100, |g| {
+            let sched = match g.usize_in(0..4) {
+                0 => Schedule::Constant(g.f32_in(0.0..2.0)),
+                1 => Schedule::Triangle {
+                    peak: g.f32_in(0.01..2.0),
+                    warmup: g.usize_in(1..50),
+                    total: g.usize_in(50..200),
+                    end_lr: 0.0,
+                },
+                2 => Schedule::Cyclic {
+                    high: g.f32_in(0.5..2.0),
+                    low: g.f32_in(0.0..0.5),
+                    period: g.usize_in(2..40),
+                },
+                _ => Schedule::Piecewise(vec![
+                    (0, g.f32_in(0.0..1.0)),
+                    (g.usize_in(1..50), g.f32_in(0.0..1.0)),
+                    (g.usize_in(50..100), g.f32_in(0.0..1.0)),
+                ]),
+            };
+            for step in 0..250 {
+                let lr = sched.lr(step);
+                assert!(lr >= 0.0 && lr.is_finite(), "lr {lr} at {step} in {sched:?}");
+            }
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-side SGD + Nesterov momentum + coupled weight decay — the phase-1
+//! optimizer (the update happens in rust between the gradient all-reduce
+//! and the next step). MUST match the fused L1 kernel bit-for-bit-ish:
+//!
+//! ```text
+//! g' = g + wd * p
+//! m' = mu * m + g'
+//! p' = p - lr * (g' + mu * m')
+//! ```
+//!
+//! `rust/tests/integration_runtime.rs` asserts host-vs-device parity.
+
+use crate::model::ParamSet;
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+/// Optimizer constants (per preset; paper §5.1: mu=0.9, wd=5e-4).
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+/// SGD state = momentum buffers aligned with the param set.
+pub struct SgdOptimizer {
+    pub cfg: SgdConfig,
+    pub momentum: ParamSet,
+}
+
+impl SgdOptimizer {
+    pub fn new(cfg: SgdConfig, params: &ParamSet) -> Self {
+        SgdOptimizer {
+            cfg,
+            momentum: params.zeros_like(),
+        }
+    }
+
+    /// One update step over the full parameter set.
+    pub fn step(&mut self, params: &mut ParamSet, grads: &[Tensor], lr: f32) -> Result<()> {
+        if grads.len() != params.tensors.len() {
+            return Err(Error::shape(format!(
+                "sgd: {} grads for {} params",
+                grads.len(),
+                params.tensors.len()
+            )));
+        }
+        let (mu, wd) = (self.cfg.momentum, self.cfg.weight_decay);
+        for ((p, m), g) in params
+            .tensors
+            .iter_mut()
+            .zip(self.momentum.tensors.iter_mut())
+            .zip(grads)
+        {
+            if p.shape() != g.shape() {
+                return Err(Error::shape("sgd: grad shape mismatch"));
+            }
+            let (pd, md, gd) = (p.data_mut(), m.data_mut(), g.data());
+            for i in 0..pd.len() {
+                let g2 = gd[i] + wd * pd[i];
+                let m2 = mu * md[i] + g2;
+                pd[i] -= lr * (g2 + mu * m2);
+                md[i] = m2;
+            }
+        }
+        Ok(())
+    }
+
+    /// Reset momentum (paper: phase transitions restart the schedule; we
+    /// keep momentum by default but expose reset for ablations).
+    pub fn reset(&mut self) {
+        for t in &mut self.momentum.tensors {
+            t.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_param(vals: &[f32]) -> ParamSet {
+        ParamSet {
+            tensors: vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()],
+        }
+    }
+
+    #[test]
+    fn plain_sgd_no_momentum_no_wd() {
+        let mut p = one_param(&[1.0, 2.0]);
+        let g = vec![Tensor::new(vec![2], vec![0.5, -0.5]).unwrap()];
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.0, weight_decay: 0.0 }, &p);
+        opt.step(&mut p, &g, 0.1).unwrap();
+        assert!((p.tensors[0].data()[0] - 0.95).abs() < 1e-7);
+        assert!((p.tensors[0].data()[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn nesterov_first_step_scales_by_one_plus_mu() {
+        // m=0: p' = p - lr*(g + mu*g) = p - lr*(1+mu)*g
+        let mut p = one_param(&[0.0]);
+        let g = vec![Tensor::new(vec![1], vec![1.0]).unwrap()];
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
+        opt.step(&mut p, &g, 0.1).unwrap();
+        assert!((p.tensors[0].data()[0] + 0.1 * 1.9).abs() < 1e-7);
+        // momentum buffer now holds g
+        assert!((opt.momentum.tensors[0].data()[0] - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut p = one_param(&[10.0]);
+        let g = vec![Tensor::new(vec![1], vec![0.0]).unwrap()];
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.0, weight_decay: 0.1 }, &p);
+        opt.step(&mut p, &g, 0.5).unwrap();
+        // g' = 0 + 0.1*10 = 1; p' = 10 - 0.5*1 = 9.5
+        assert!((p.tensors[0].data()[0] - 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_scalar_reference_sequence() {
+        // hand-rolled 3-step reference with mu=0.9 wd=0.01 lr=0.2
+        let (mu, wd, lr) = (0.9f32, 0.01f32, 0.2f32);
+        let grads = [0.3f32, -0.1, 0.05];
+        let (mut pr, mut mr) = (1.0f32, 0.0f32);
+        for g in grads {
+            let g2 = g + wd * pr;
+            let m2 = mu * mr + g2;
+            pr -= lr * (g2 + mu * m2);
+            mr = m2;
+        }
+        let mut p = one_param(&[1.0]);
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: mu, weight_decay: wd }, &p);
+        for g in grads {
+            let gt = vec![Tensor::new(vec![1], vec![g]).unwrap()];
+            opt.step(&mut p, &gt, lr).unwrap();
+        }
+        assert!((p.tensors[0].data()[0] - pr).abs() < 1e-6);
+        assert!((opt.momentum.tensors[0].data()[0] - mr).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_zeroes_momentum() {
+        let mut p = one_param(&[1.0]);
+        let g = vec![Tensor::new(vec![1], vec![1.0]).unwrap()];
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
+        opt.step(&mut p, &g, 0.1).unwrap();
+        opt.reset();
+        assert_eq!(opt.momentum.tensors[0].data(), &[0.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let mut p = one_param(&[1.0, 2.0]);
+        let bad = vec![Tensor::new(vec![3], vec![0.0; 3]).unwrap()];
+        let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
+        assert!(opt.step(&mut p, &bad, 0.1).is_err());
+    }
+}

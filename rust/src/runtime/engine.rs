@@ -1,0 +1,272 @@
+//! PJRT engine: loads AOT HLO-text artifacts, compiles them once per
+//! process, and exposes typed entry points (grad / train / eval / bnstats)
+//! over host tensors. This is the only module that executes XLA code; the
+//! coordinator above it never sees a literal.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::literal::{
+    i32s_to_literal, images_to_literal, literal_f32, literal_i32, literal_to_tensor, lr_literal,
+    tensor_to_literal,
+};
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+/// One mini-batch on the host, NHWC images + labels.
+#[derive(Debug, Clone)]
+pub struct HostBatch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub image_size: usize,
+}
+
+impl HostBatch {
+    pub fn to_literals(&self) -> Result<(xla::Literal, xla::Literal)> {
+        Ok((
+            images_to_literal(&self.images, self.batch, self.image_size)?,
+            i32s_to_literal(&self.labels),
+        ))
+    }
+}
+
+/// Loss/accuracy statistics returned by every executable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    pub sum_loss: f64,
+    pub correct1: i64,
+    pub correct5: i64,
+    pub examples: i64,
+}
+
+impl BatchStats {
+    pub fn accumulate(&mut self, other: &BatchStats) {
+        self.sum_loss += other.sum_loss;
+        self.correct1 += other.correct1;
+        self.correct5 += other.correct5;
+        self.examples += other.examples;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.sum_loss / self.examples as f64
+        }
+    }
+
+    pub fn accuracy1(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct1 as f64 / self.examples as f64
+        }
+    }
+
+    pub fn accuracy5(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct5 as f64 / self.examples as f64
+        }
+    }
+}
+
+/// Gradient result of `grad_b*`.
+pub struct GradResult {
+    pub grads: Vec<Tensor>,
+    pub stats: BatchStats,
+}
+
+/// Compiled-executable cache + typed call surface.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// executions performed, by key (profiling / tests)
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Engine {
+    /// Load a preset's artifacts, e.g. `Engine::load("artifacts/cifar10sim")`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            execs: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of times each executable ran (keyed by "grad_b64", ...).
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.calls.borrow().clone()
+    }
+
+    fn ensure_compiled(&self, key: &str) -> Result<()> {
+        if self.execs.borrow().contains_key(key) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(key)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::debug!("compiled {key} from {}", path.display());
+        self.execs.borrow_mut().insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact by key with raw literals; returns the flattened
+    /// output tuple. Public so the landscape/analysis modules and tests can
+    /// drive executables directly.
+    pub fn run_raw(&self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(key)?;
+        *self.calls.borrow_mut().entry(key.to_string()).or_insert(0) += 1;
+        let execs = self.execs.borrow();
+        let exe = execs.get(key).unwrap();
+        let result = exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    fn params_to_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.manifest.params.len() {
+            return Err(Error::shape(format!(
+                "expected {} param tensors, got {}",
+                self.manifest.params.len(),
+                params.len()
+            )));
+        }
+        params.iter().map(tensor_to_literal).collect()
+    }
+
+    fn stats_from(&self, outs: &[xla::Literal], batch: usize) -> Result<BatchStats> {
+        let n = outs.len();
+        Ok(BatchStats {
+            sum_loss: literal_f32(&outs[n - 3])? as f64,
+            correct1: literal_i32(&outs[n - 2])? as i64,
+            correct5: literal_i32(&outs[n - 1])? as i64,
+            examples: batch as i64,
+        })
+    }
+
+    /// Phase-1 gradients: `grad_b{B}`.
+    pub fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
+        let key = format!("grad_b{}", batch.batch);
+        let mut args = self.params_to_literals(params)?;
+        let (img, lab) = batch.to_literals()?;
+        args.push(img);
+        args.push(lab);
+        let outs = self.run_raw(&key, &args)?;
+        let np = self.manifest.params.len();
+        if outs.len() != np + 3 {
+            return Err(Error::shape(format!(
+                "grad returned {} outputs, want {}",
+                outs.len(),
+                np + 3
+            )));
+        }
+        let grads = outs[..np]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        let stats = self.stats_from(&outs, batch.batch)?;
+        Ok(GradResult { grads, stats })
+    }
+
+    /// Phase-2 fused step: `train_b{B}`. Updates params/momentum in place.
+    pub fn train_step(
+        &self,
+        params: &mut [Tensor],
+        momentum: &mut [Tensor],
+        batch: &HostBatch,
+        lr: f32,
+    ) -> Result<BatchStats> {
+        let key = format!("train_b{}", batch.batch);
+        let np = self.manifest.params.len();
+        let mut args = self.params_to_literals(params)?;
+        args.extend(
+            momentum
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<Vec<_>>>()?,
+        );
+        let (img, lab) = batch.to_literals()?;
+        args.push(img);
+        args.push(lab);
+        args.push(lr_literal(lr)?);
+        let outs = self.run_raw(&key, &args)?;
+        if outs.len() != 2 * np + 3 {
+            return Err(Error::shape(format!(
+                "train returned {} outputs, want {}",
+                outs.len(),
+                2 * np + 3
+            )));
+        }
+        for (t, lit) in params.iter_mut().zip(&outs[..np]) {
+            *t = literal_to_tensor(lit)?;
+        }
+        for (t, lit) in momentum.iter_mut().zip(&outs[np..2 * np]) {
+            *t = literal_to_tensor(lit)?;
+        }
+        self.stats_from(&outs, batch.batch)
+    }
+
+    /// Evaluation with running BN stats: `eval_b{B}`.
+    pub fn eval_batch(
+        &self,
+        params: &[Tensor],
+        bn_stats: &[Tensor],
+        batch: &HostBatch,
+    ) -> Result<BatchStats> {
+        let key = format!("eval_b{}", batch.batch);
+        if bn_stats.len() != self.manifest.bn_stats.len() {
+            return Err(Error::shape(format!(
+                "expected {} bn tensors, got {}",
+                self.manifest.bn_stats.len(),
+                bn_stats.len()
+            )));
+        }
+        let mut args = self.params_to_literals(params)?;
+        args.extend(
+            bn_stats
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<Vec<_>>>()?,
+        );
+        let (img, lab) = batch.to_literals()?;
+        args.push(img);
+        args.push(lab);
+        let outs = self.run_raw(&key, &args)?;
+        self.stats_from(&outs, batch.batch)
+    }
+
+    /// BN moments of one batch: `bnstats_b{B}` (phase 3).
+    pub fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
+        let key = format!("bnstats_b{}", batch.batch);
+        let mut args = self.params_to_literals(params)?;
+        let (img, _lab) = batch.to_literals()?;
+        args.push(img);
+        let outs = self.run_raw(&key, &args)?;
+        if outs.len() != self.manifest.bn_stats.len() {
+            return Err(Error::shape(format!(
+                "bnstats returned {} outputs, want {}",
+                outs.len(),
+                self.manifest.bn_stats.len()
+            )));
+        }
+        outs.iter().map(literal_to_tensor).collect()
+    }
+}

@@ -1,0 +1,95 @@
+//! Host `Tensor` ⇄ XLA `Literal` conversion, plus small scalar helpers.
+//! This is the only file where tensor data crosses the PJRT boundary.
+
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+/// Host tensor -> literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: reshape to scalar
+        return Ok(flat.reshape(&[])?);
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Literal (f32) -> host tensor, preserving the literal's shape.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}
+
+/// i32 vector literal (labels).
+pub fn i32s_to_literal(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Scalar f32 out of a (possibly rank-0 or rank-1) literal.
+pub fn literal_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Scalar i32.
+pub fn literal_i32(lit: &xla::Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}
+
+/// The (1,) f32 learning-rate input of `train_b*`.
+pub fn lr_literal(lr: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[lr]).reshape(&[1])?)
+}
+
+/// Batched image literal from a flat buffer (B*H*W*3 f32, NHWC).
+pub fn images_to_literal(flat: &[f32], b: usize, hw: usize) -> Result<xla::Literal> {
+    if flat.len() != b * hw * hw * 3 {
+        return Err(Error::shape(format!(
+            "image buffer {} != {b}x{hw}x{hw}x3",
+            flat.len()
+        )));
+    }
+    Ok(xla::Literal::vec1(flat).reshape(&[b as i64, hw as i64, hw as i64, 3])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_f32(&lit).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn i32_literals() {
+        let lit = i32s_to_literal(&[1, 2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert_eq!(literal_i32(&lit).unwrap(), 1);
+    }
+
+    #[test]
+    fn lr_literal_shape() {
+        let lit = lr_literal(0.25).unwrap();
+        assert_eq!(literal_f32(&lit).unwrap(), 0.25);
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    fn images_shape_checked() {
+        assert!(images_to_literal(&vec![0.0; 2 * 4 * 4 * 3], 2, 4).is_ok());
+        assert!(images_to_literal(&vec![0.0; 5], 2, 4).is_err());
+    }
+}

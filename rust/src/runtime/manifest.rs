@@ -1,0 +1,229 @@
+//! Artifact manifest: the layout contract between the AOT exporter
+//! (python/compile/aot.py) and the rust runtime.
+//!
+//! The manifest pins the *order* in which parameter / BN-stat tensors are
+//! fed to and returned from every executable; `runtime::engine` composes
+//! argument lists from it and `model::ParamSet` allocates from it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::{Error, Json, Result};
+
+/// Shape + name of one tensor crossing the HLO boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static model metadata baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub arch: String,
+    pub width: usize,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub head_scale: f32,
+    pub bn_eps: f32,
+}
+
+/// Parsed artifacts/<preset>/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelMeta,
+    pub params: Vec<TensorSpec>,
+    pub bn_stats: Vec<TensorSpec>,
+    pub num_params: usize,
+    pub batches: Vec<usize>,
+    /// executable key (e.g. "grad_b64") -> file name
+    pub executables: BTreeMap<String, String>,
+    pub flops_fwd_per_example: u64,
+    /// directory the manifest was loaded from (artifact file resolution)
+    pub dir: PathBuf,
+}
+
+fn specs_from(v: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::json(format!("{what}: expected array")))?;
+    arr.iter()
+        .map(|e| {
+            let name = e
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::json("spec name not a string"))?
+                .to_string();
+            let shape = e
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::json("spec shape not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::json("shape dim not a usize"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("{}: {e} (run `make artifacts`)", dir.display()),
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let m = j.req("model")?;
+        let getf = |k: &str| -> Result<f64> {
+            m.req(k)?
+                .as_f64()
+                .ok_or_else(|| Error::json(format!("model.{k} not a number")))
+        };
+        let model = ModelMeta {
+            arch: m
+                .req("arch")?
+                .as_str()
+                .ok_or_else(|| Error::json("model.arch"))?
+                .to_string(),
+            width: getf("width")? as usize,
+            num_classes: getf("num_classes")? as usize,
+            image_size: getf("image_size")? as usize,
+            momentum: getf("momentum")? as f32,
+            weight_decay: getf("weight_decay")? as f32,
+            head_scale: getf("head_scale")? as f32,
+            bn_eps: getf("bn_eps")? as f32,
+        };
+        let params = specs_from(j.req("params")?, "params")?;
+        let bn_stats = specs_from(j.req("bn_stats")?, "bn_stats")?;
+        let num_params = j
+            .req("num_params")?
+            .as_usize()
+            .ok_or_else(|| Error::json("num_params"))?;
+        let declared: usize = params.iter().map(|s| s.numel()).sum();
+        if declared != num_params {
+            return Err(Error::json(format!(
+                "num_params {num_params} != sum of param shapes {declared}"
+            )));
+        }
+        let batches = j
+            .req("batches")?
+            .as_arr()
+            .ok_or_else(|| Error::json("batches"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| Error::json("batch size")))
+            .collect::<Result<Vec<_>>>()?;
+        let executables = j
+            .req("executables")?
+            .as_obj()
+            .ok_or_else(|| Error::json("executables"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    v.as_str()
+                        .ok_or_else(|| Error::json("executable path"))?
+                        .to_string(),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let flops = j
+            .req("flops_fwd_per_example")?
+            .as_f64()
+            .ok_or_else(|| Error::json("flops"))? as u64;
+        Ok(Manifest {
+            preset: j
+                .req("preset")?
+                .as_str()
+                .ok_or_else(|| Error::json("preset"))?
+                .to_string(),
+            model,
+            params,
+            bn_stats,
+            num_params,
+            batches,
+            executables,
+            flops_fwd_per_example: flops,
+            dir,
+        })
+    }
+
+    /// Path of an executable's HLO text by key ("grad_b64", ...).
+    pub fn hlo_path(&self, key: &str) -> Result<PathBuf> {
+        let fname = self
+            .executables
+            .get(key)
+            .ok_or_else(|| Error::config(format!("no executable '{key}' in manifest (have: {:?})",
+                                                 self.executables.keys().collect::<Vec<_>>())))?;
+        Ok(self.dir.join(fname))
+    }
+
+    /// Model weight footprint in bytes (f32) — the all-reduce message size.
+    pub fn param_bytes(&self) -> u64 {
+        self.num_params as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "unit",
+      "model": {"arch":"resnet9s","width":4,"num_classes":10,"image_size":16,
+                "momentum":0.9,"weight_decay":0.0005,"head_scale":0.125,"bn_eps":1e-05},
+      "params": [{"name":"prep.w","shape":[27,4]},{"name":"prep.gamma","shape":[4]}],
+      "bn_stats": [{"name":"prep.mean","shape":[4]},{"name":"prep.var","shape":[4]}],
+      "num_params": 112,
+      "batches": [8],
+      "executables": {"grad_b8": "grad_b8.hlo.txt"},
+      "flops_fwd_per_example": 123
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.preset, "unit");
+        assert_eq!(m.model.num_classes, 10);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 108);
+        assert_eq!(m.num_params, 112);
+        assert_eq!(m.batches, vec![8]);
+        assert_eq!(m.param_bytes(), 448);
+        assert_eq!(
+            m.hlo_path("grad_b8").unwrap(),
+            PathBuf::from("/tmp/x/grad_b8.hlo.txt")
+        );
+        assert!(m.hlo_path("nope").is_err());
+        assert!((m.model.bn_eps - 1e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_wrong_num_params() {
+        let bad = SAMPLE.replace("\"num_params\": 112", "\"num_params\": 999");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+    }
+}

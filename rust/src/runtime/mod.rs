@@ -1,0 +1,12 @@
+//! Runtime layer: the xla-crate PJRT client wrapper that loads and executes
+//! the AOT artifacts (HLO text) produced by `make artifacts`.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+
+pub use engine::{BatchStats, Engine, GradResult, HostBatch};
+pub use manifest::{Manifest, ModelMeta, TensorSpec};

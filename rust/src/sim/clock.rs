@@ -1,0 +1,101 @@
+//! Discrete-event cluster clock with a compute/communication breakdown.
+//!
+//! Phase 1 advances by `compute + allreduce` per synchronous step; phase 2
+//! advances by the max of the (identical) per-worker durations via
+//! `advance_parallel`. Evaluation passes are tracked separately and do NOT
+//! count toward training time (the paper's tables report training time).
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClusterClock {
+    /// modeled training seconds
+    pub seconds: f64,
+    /// breakdown: device compute
+    pub compute: f64,
+    /// breakdown: communication (all-reduce, broadcast)
+    pub comm: f64,
+    /// modeled evaluation seconds (reported, not part of `seconds`)
+    pub eval: f64,
+}
+
+impl ClusterClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance_compute(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.seconds += dt;
+        self.compute += dt;
+    }
+
+    pub fn advance_comm(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.seconds += dt;
+        self.comm += dt;
+    }
+
+    /// Advance by the slowest of parallel worker durations (phase 2: the
+    /// cluster waits for all independent workers to finish).
+    pub fn advance_parallel(&mut self, worker_durations: &[f64]) {
+        let max = worker_durations.iter().cloned().fold(0.0, f64::max);
+        self.advance_compute(max);
+    }
+
+    pub fn note_eval(&mut self, dt: f64) {
+        self.eval += dt;
+    }
+
+    /// Merge a sub-phase clock (e.g. a worker's own clock) serially.
+    pub fn absorb(&mut self, other: &ClusterClock) {
+        self.seconds += other.seconds;
+        self.compute += other.compute;
+        self.comm += other.comm;
+        self.eval += other.eval;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_accumulate() {
+        let mut c = ClusterClock::new();
+        c.advance_compute(1.0);
+        c.advance_comm(0.5);
+        assert_eq!(c.seconds, 1.5);
+        assert_eq!(c.compute, 1.0);
+        assert_eq!(c.comm, 0.5);
+    }
+
+    #[test]
+    fn parallel_takes_max() {
+        let mut c = ClusterClock::new();
+        c.advance_parallel(&[1.0, 3.0, 2.0]);
+        assert_eq!(c.seconds, 3.0);
+        c.advance_parallel(&[]);
+        assert_eq!(c.seconds, 3.0);
+    }
+
+    #[test]
+    fn eval_not_in_training_time() {
+        let mut c = ClusterClock::new();
+        c.advance_compute(1.0);
+        c.note_eval(10.0);
+        assert_eq!(c.seconds, 1.0);
+        assert_eq!(c.eval, 10.0);
+    }
+
+    #[test]
+    fn absorb_sums_components() {
+        let mut a = ClusterClock::new();
+        a.advance_compute(1.0);
+        let mut b = ClusterClock::new();
+        b.advance_comm(2.0);
+        b.note_eval(0.5);
+        a.absorb(&b);
+        assert_eq!(a.seconds, 3.0);
+        assert_eq!(a.comm, 2.0);
+        assert_eq!(a.eval, 0.5);
+    }
+}

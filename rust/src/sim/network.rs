@@ -1,0 +1,89 @@
+//! α–β ring all-reduce cost model (Horovod-style).
+//!
+//! A ring all-reduce of S bytes over W workers moves 2·(W-1)/W · S bytes
+//! through each link in 2·(W-1) latency-bound phases:
+//!
+//! ```text
+//! T = 2 (W-1) α  +  2 (W-1)/W · S / β
+//! ```
+//!
+//! with α the per-message latency and β the link bandwidth. W=1 is free.
+
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// per-message latency α in seconds
+    pub latency: f64,
+    /// link bandwidth β in bytes/sec
+    pub bandwidth: f64,
+}
+
+impl NetModel {
+    /// PCIe/early-NCCL-era constants; calibrated so the W=8 all-reduce of a
+    /// 26 MB ResNet9 gradient costs ~25-40% of a 512-per-worker V100 step,
+    /// the overhead Table 1 implies (see sim::tests).
+    pub fn pcie_like() -> Self {
+        NetModel {
+            latency: 50e-6,
+            bandwidth: 5.0e9,
+        }
+    }
+
+    /// NVLink-like (for ablations: what if the interconnect were faster?).
+    pub fn nvlink_like() -> Self {
+        NetModel {
+            latency: 10e-6,
+            bandwidth: 60.0e9,
+        }
+    }
+
+    pub fn ring_allreduce(&self, bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let w = workers as f64;
+        2.0 * (w - 1.0) * self.latency + 2.0 * (w - 1.0) / w * bytes as f64 / self.bandwidth
+    }
+
+    /// Broadcast of the model (phase transitions): one tree pass.
+    pub fn broadcast(&self, bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let hops = (workers as f64).log2().ceil();
+        hops * (self.latency + bytes as f64 / self.bandwidth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_is_free() {
+        let n = NetModel::pcie_like();
+        assert_eq!(n.ring_allreduce(1 << 30, 1), 0.0);
+        assert_eq!(n.broadcast(1 << 30, 1), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_workers_and_bytes() {
+        let n = NetModel::pcie_like();
+        assert!(n.ring_allreduce(1 << 20, 8) > n.ring_allreduce(1 << 20, 2));
+        assert!(n.ring_allreduce(1 << 24, 8) > n.ring_allreduce(1 << 20, 8));
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_messages() {
+        let n = NetModel::pcie_like();
+        let t = n.ring_allreduce(26_000_000, 8);
+        let bw_term = 2.0 * 7.0 / 8.0 * 26e6 / n.bandwidth;
+        assert!(t > bw_term && t < bw_term * 1.2, "t={t} bw={bw_term}");
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let a = NetModel::pcie_like().ring_allreduce(26_000_000, 8);
+        let b = NetModel::nvlink_like().ring_allreduce(26_000_000, 8);
+        assert!(b < a / 5.0);
+    }
+}

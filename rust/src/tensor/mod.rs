@@ -1,0 +1,251 @@
+//! Host tensors: flat f32 storage + shape, and the vector math the
+//! coordinator needs (optimizer updates, weight averaging, landscape
+//! geometry). Kept free of any XLA types so it unit-tests instantly;
+//! literal conversion lives in `runtime::literal`.
+
+pub mod ops;
+
+pub use ops::*;
+
+use crate::util::{Error, Result};
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    fn check_same_shape(&self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!(
+                "shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // In-place math (the optimizer hot path — no allocation)
+    // ------------------------------------------------------------------
+
+    /// self += alpha * x
+    pub fn axpy(&mut self, alpha: f32, x: &Tensor) -> Result<()> {
+        self.check_same_shape(x)?;
+        for (a, b) in self.data.iter_mut().zip(&x.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// self = alpha*self + beta*x  (fused; used by momentum updates)
+    pub fn axpby(&mut self, alpha: f32, beta: f32, x: &Tensor) -> Result<()> {
+        self.check_same_shape(x)?;
+        for (a, b) in self.data.iter_mut().zip(&x.data) {
+            *a = alpha * *a + beta * b;
+        }
+        Ok(())
+    }
+
+    /// self = (1-t)*self + t*x — linear interpolation (landscape planes,
+    /// running BN stats).
+    pub fn lerp(&mut self, t: f32, x: &Tensor) -> Result<()> {
+        self.axpby(1.0 - t, t, x)
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|a| *a = v);
+    }
+
+    // ------------------------------------------------------------------
+    // Reductions / geometry
+    // ------------------------------------------------------------------
+
+    pub fn dot(&self, other: &Tensor) -> Result<f64> {
+        self.check_same_shape(other)?;
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum())
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|a| *a as f64 * *a as f64).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, a| m.max(a.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|a| *a as f64).sum::<f64>() / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_zeros() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.numel(), 16);
+        assert!(z.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![10.0, 20.0, 30.0]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[6.0, 12.0, 18.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpy_shape_mismatch_errors() {
+        let mut a = Tensor::zeros(vec![3]);
+        let b = Tensor::zeros(vec![4]);
+        assert!(a.axpy(1.0, &b).is_err());
+    }
+
+    #[test]
+    fn axpby_momentum_semantics() {
+        // m = mu*m + g
+        let mut m = Tensor::new(vec![2], vec![1.0, -1.0]).unwrap();
+        let g = Tensor::new(vec![2], vec![0.5, 0.5]).unwrap();
+        m.axpby(0.9, 1.0, &g).unwrap();
+        assert!((m.data()[0] - 1.4).abs() < 1e-6);
+        assert!((m.data()[1] + 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let a0 = Tensor::new(vec![2], vec![0.0, 10.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![4.0, 2.0]).unwrap();
+        let mut a = a0.clone();
+        a.lerp(0.0, &b).unwrap();
+        assert_eq!(a.data(), a0.data());
+        a.lerp(1.0, &b).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn dot_norm_geometry() {
+        let a = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        assert_eq!(a.norm(), 5.0);
+        let b = Tensor::new(vec![2], vec![4.0, -3.0]).unwrap();
+        assert_eq!(a.dot(&b).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let b = a.clone().reshaped(vec![3, 2]).unwrap();
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.data(), a.data());
+        assert!(a.reshaped(vec![4]).is_err());
+    }
+
+    #[test]
+    fn mean_and_max_abs() {
+        let a = Tensor::new(vec![4], vec![1.0, -5.0, 2.0, 2.0]).unwrap();
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.max_abs(), 5.0);
+        assert_eq!(Tensor::zeros(vec![0]).mean(), 0.0);
+    }
+}

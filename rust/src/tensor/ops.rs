@@ -1,0 +1,224 @@
+//! Multi-tensor operations over parameter *sets* (lists of tensors aligned
+//! to the manifest order) — the geometry SWAP's phase 3 and the landscape
+//! visualizations live on.
+
+use super::Tensor;
+use crate::util::{Error, Result};
+
+/// Elementwise mean of several parameter sets: theta_hat = (1/W) sum theta_w.
+/// This is the host-side twin of the L1 `weight_average` Pallas kernel
+/// (integration tests cross-check the two).
+pub fn average_sets(sets: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    if sets.is_empty() {
+        return Err(Error::invalid("average_sets: no sets"));
+    }
+    let w = sets.len() as f32;
+    let mut out = sets[0].clone();
+    for set in &sets[1..] {
+        if set.len() != out.len() {
+            return Err(Error::shape("average_sets: ragged sets"));
+        }
+        for (acc, t) in out.iter_mut().zip(set) {
+            acc.axpy(1.0, t)?;
+        }
+    }
+    for t in &mut out {
+        t.scale(1.0 / w);
+    }
+    Ok(out)
+}
+
+/// sum over tensors of <a_i, b_i> — inner product on the full weight space.
+pub fn sets_dot(a: &[Tensor], b: &[Tensor]) -> Result<f64> {
+    if a.len() != b.len() {
+        return Err(Error::shape("sets_dot: ragged sets"));
+    }
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x.dot(y)?;
+    }
+    Ok(acc)
+}
+
+pub fn sets_sq_norm(a: &[Tensor]) -> f64 {
+    a.iter().map(|t| t.sq_norm()).sum()
+}
+
+pub fn sets_norm(a: &[Tensor]) -> f64 {
+    sets_sq_norm(a).sqrt()
+}
+
+/// Euclidean distance between two parameter sets.
+pub fn sets_distance(a: &[Tensor], b: &[Tensor]) -> Result<f64> {
+    if a.len() != b.len() {
+        return Err(Error::shape("sets_distance: ragged sets"));
+    }
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        if x.shape() != y.shape() {
+            return Err(Error::shape("sets_distance: shape mismatch"));
+        }
+        acc += x
+            .data()
+            .iter()
+            .zip(y.data())
+            .map(|(p, q)| {
+                let d = (*p - *q) as f64;
+                d * d
+            })
+            .sum::<f64>();
+    }
+    Ok(acc.sqrt())
+}
+
+/// b - a as a new set (direction vectors for the landscape plane / Fig 4).
+pub fn sets_sub(b: &[Tensor], a: &[Tensor]) -> Result<Vec<Tensor>> {
+    if a.len() != b.len() {
+        return Err(Error::shape("sets_sub: ragged sets"));
+    }
+    b.iter()
+        .zip(a)
+        .map(|(x, y)| {
+            let mut d = x.clone();
+            d.axpy(-1.0, y)?;
+            Ok(d)
+        })
+        .collect()
+}
+
+/// out = base + alpha * dir (allocates; grid eval in the landscape).
+pub fn sets_add_scaled(base: &[Tensor], alpha: f32, dir: &[Tensor]) -> Result<Vec<Tensor>> {
+    if base.len() != dir.len() {
+        return Err(Error::shape("sets_add_scaled: ragged sets"));
+    }
+    base.iter()
+        .zip(dir)
+        .map(|(b, d)| {
+            let mut t = b.clone();
+            t.axpy(alpha, d)?;
+            Ok(t)
+        })
+        .collect()
+}
+
+/// In-place: acc += alpha * dir.
+pub fn sets_axpy(acc: &mut [Tensor], alpha: f32, dir: &[Tensor]) -> Result<()> {
+    if acc.len() != dir.len() {
+        return Err(Error::shape("sets_axpy: ragged sets"));
+    }
+    for (a, d) in acc.iter_mut().zip(dir) {
+        a.axpy(alpha, d)?;
+    }
+    Ok(())
+}
+
+/// In-place scale of a whole set.
+pub fn sets_scale(acc: &mut [Tensor], alpha: f32) {
+    for a in acc.iter_mut() {
+        a.scale(alpha);
+    }
+}
+
+/// Cosine similarity between two directions in weight space (Fig 4).
+/// Returns 0 for degenerate (zero) vectors.
+pub fn sets_cosine(a: &[Tensor], b: &[Tensor]) -> Result<f64> {
+    let na = sets_norm(a);
+    let nb = sets_norm(b);
+    if na == 0.0 || nb == 0.0 {
+        return Ok(0.0);
+    }
+    Ok(sets_dot(a, b)? / (na * nb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(vals: &[&[f32]]) -> Vec<Tensor> {
+        vals.iter()
+            .map(|v| Tensor::new(vec![v.len()], v.to_vec()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let s = set(&[&[1.0, 2.0], &[3.0]]);
+        let avg = average_sets(&[s.clone(), s.clone(), s.clone()]).unwrap();
+        assert_eq!(avg, s);
+    }
+
+    #[test]
+    fn average_two_sets() {
+        let a = set(&[&[0.0, 2.0]]);
+        let b = set(&[&[4.0, 0.0]]);
+        let avg = average_sets(&[a, b]).unwrap();
+        assert_eq!(avg[0].data(), &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn average_empty_errors() {
+        assert!(average_sets(&[]).is_err());
+    }
+
+    #[test]
+    fn average_inside_convex_hull() {
+        // mean is within [min,max] elementwise — phase-3 geometry invariant
+        let sets: Vec<Vec<Tensor>> = (0..5)
+            .map(|i| set(&[&[i as f32, -(i as f32) * 2.0, 1.0]]))
+            .collect();
+        let avg = average_sets(&sets).unwrap();
+        for (j, &v) in avg[0].data().iter().enumerate() {
+            let col: Vec<f32> = sets.iter().map(|s| s[0].data()[j]).collect();
+            let mn = col.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(v >= mn - 1e-6 && v <= mx + 1e-6);
+        }
+    }
+
+    #[test]
+    fn distance_and_dot() {
+        let a = set(&[&[0.0, 0.0]]);
+        let b = set(&[&[3.0, 4.0]]);
+        assert_eq!(sets_distance(&a, &b).unwrap(), 5.0);
+        assert_eq!(sets_dot(&b, &b).unwrap(), 25.0);
+        assert_eq!(sets_norm(&b), 5.0);
+    }
+
+    #[test]
+    fn sub_add_roundtrip() {
+        let a = set(&[&[1.0, 2.0], &[3.0]]);
+        let b = set(&[&[0.0, 5.0], &[-1.0]]);
+        let d = sets_sub(&b, &a).unwrap();
+        let b2 = sets_add_scaled(&a, 1.0, &d).unwrap();
+        assert_eq!(b2, b);
+    }
+
+    #[test]
+    fn cosine_bounds_and_orthogonality() {
+        let a = set(&[&[1.0, 0.0]]);
+        let b = set(&[&[0.0, 1.0]]);
+        assert_eq!(sets_cosine(&a, &b).unwrap(), 0.0);
+        assert!((sets_cosine(&a, &a).unwrap() - 1.0).abs() < 1e-12);
+        let zero = set(&[&[0.0, 0.0]]);
+        assert_eq!(sets_cosine(&a, &zero).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn axpy_scale_in_place() {
+        let mut a = set(&[&[1.0, 1.0]]);
+        let d = set(&[&[1.0, -1.0]]);
+        sets_axpy(&mut a, 2.0, &d).unwrap();
+        assert_eq!(a[0].data(), &[3.0, -1.0]);
+        sets_scale(&mut a, 0.5);
+        assert_eq!(a[0].data(), &[1.5, -0.5]);
+    }
+
+    #[test]
+    fn ragged_sets_error() {
+        let a = set(&[&[1.0]]);
+        let b = set(&[&[1.0], &[2.0]]);
+        assert!(sets_dot(&a, &b).is_err());
+        assert!(sets_sub(&a, &b).is_err());
+        assert!(average_sets(&[a, b]).is_err());
+    }
+}

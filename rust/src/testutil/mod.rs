@@ -1,0 +1,200 @@
+//! Mini property-based testing framework (the vendored crate set has no
+//! proptest/quickcheck, so we build the substrate ourselves).
+//!
+//! Usage:
+//! ```no_run
+//! use swap::testutil::{property, Gen};
+//! property(100, |g| {
+//!     let xs = g.vec_f32(1..200, -10.0..10.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     // associativity-ish sanity
+//!     assert!((sum - xs.iter().rev().sum::<f32>()).abs() < 1e-3);
+//! });
+//! ```
+//!
+//! On failure the runner re-raises the panic together with the seed of the
+//! failing case; re-running with `SWAP_PROP_SEED=<seed>` reproduces exactly
+//! one case. Shrinking is "lite": integer and vector-length generators bias
+//! a fraction of their draws toward minimal values so small counterexamples
+//! are likely in the first place.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// case index (0-based); case 0..SMALL_CASES bias toward minimal values
+    case: usize,
+}
+
+const SMALL_CASES: usize = 8;
+
+impl Gen {
+    fn new(seed: u64, case: usize) -> Self {
+        Gen { rng: Rng::stream(seed, case as u64), case }
+    }
+
+    /// Uniform usize in range; early cases bias to the low end (shrink-lite).
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end, "empty range");
+        if self.case < SMALL_CASES {
+            let span = (r.end - r.start).min(self.case + 1);
+            r.start + self.rng.below(span)
+        } else {
+            r.start + self.rng.below(r.end - r.start)
+        }
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        assert!(r.start < r.end);
+        let span = (r.end - r.start) as u64;
+        let off = if self.case < SMALL_CASES {
+            self.rng.below(span.min(self.case as u64 + 1) as usize) as u64
+        } else {
+            self.rng.next_u64() % span
+        };
+        r.start + off as i64
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + self.rng.next_f32() * (r.end - r.start)
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.next_f64() * (r.end - r.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Raw RNG access for anything custom.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `f` over `cases` generated inputs. Panics (with seed info) on the
+/// first failing case.
+pub fn property(cases: usize, f: impl Fn(&mut Gen)) {
+    let seed: u64 = std::env::var("SWAP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let only_case: Option<usize> = std::env::var("SWAP_PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+
+    for case in 0..cases {
+        if let Some(oc) = only_case {
+            if case != oc {
+                continue;
+            }
+        }
+        let mut g = Gen::new(seed, case);
+        let result = catch_unwind(AssertUnwindSafe(|| f(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (reproduce with \
+                 SWAP_PROP_SEED={seed} SWAP_PROP_CASE={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// assert_close for floats with a readable message.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "{what}: {a} vs {b} (tol {tol}, scale {scale})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        property(50, |_g| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        count += counter.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn early_cases_are_small() {
+        property(SMALL_CASES, |g| {
+            let n = g.usize_in(1..1000);
+            assert!(n <= SMALL_CASES, "case should be small, got {n}");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SWAP_PROP_SEED")]
+    fn failure_reports_seed() {
+        property(10, |g| {
+            let n = g.usize_in(1..100);
+            assert!(n < 10_000); // passes
+            if g.bool() || true {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        property(200, |g| {
+            let u = g.usize_in(3..17);
+            assert!((3..17).contains(&u));
+            let i = g.i64_in(-5..6);
+            assert!((-5..6).contains(&i));
+            let f = g.f32_in(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(0..9, 0.0..1.0);
+            assert!(v.len() < 9);
+        });
+    }
+
+    #[test]
+    fn assert_close_scales() {
+        assert_close(1000.0, 1000.1, 1e-3, "big");
+        assert_close(0.0, 1e-9, 1e-6, "small");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_when_far() {
+        assert_close(1.0, 2.0, 1e-3, "far");
+    }
+}

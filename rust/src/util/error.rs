@@ -1,0 +1,95 @@
+//! Library error type. The binary/examples use `anyhow`; the library
+//! surfaces a typed error so downstream users can match on failure classes.
+
+use std::fmt;
+
+/// Errors produced by the swap-train library.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem / IO failure.
+    Io(std::io::Error),
+    /// XLA / PJRT failure (compile, execute, literal conversion).
+    Xla(String),
+    /// JSON parse or schema error (manifest, config, metrics).
+    Json(String),
+    /// Configuration error (unknown preset, invalid value, bad CLI flag).
+    Config(String),
+    /// Shape mismatch between host tensors / manifest / literals.
+    Shape(String),
+    /// Anything else that indicates a bug or broken invariant.
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructors used throughout the crate.
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_class_and_message() {
+        let e = Error::config("bad preset");
+        assert_eq!(e.to_string(), "config error: bad preset");
+        let e = Error::shape("want [2,2] got [4]");
+        assert!(e.to_string().contains("want [2,2]"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

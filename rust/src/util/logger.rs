@@ -1,0 +1,66 @@
+//! Tiny leveled stderr logger. `SWAP_LOG=debug|info|warn|quiet` (default
+//! info). No global state beyond one atomic — safe from worker threads.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0 quiet, 1 warn, 2 info, 3 debug
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("SWAP_LOG").as_deref() {
+            Ok("quiet") => 0,
+            Ok("warn") => 1,
+            Ok("debug") => 3,
+            _ => 2,
+        };
+        LEVEL.store(lvl, Ordering::Relaxed);
+        unsafe { START = Some(Instant::now()) };
+    });
+}
+
+fn elapsed() -> f64 {
+    unsafe {
+        #[allow(static_mut_refs)]
+        START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+}
+
+pub fn enabled(level: u8) -> bool {
+    init();
+    LEVEL.load(Ordering::Relaxed) >= level
+}
+
+pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:9.3}s {tag}] {msg}", elapsed());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logger::log(2, "info", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::logger::log(1, "warn", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::logger::log(3, "debug", format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn log_does_not_panic() {
+        crate::info!("hello {}", 1);
+        crate::warn_!("warn {}", 2);
+        crate::debug!("debug {}", 3);
+        assert!(super::elapsed() >= 0.0);
+    }
+}

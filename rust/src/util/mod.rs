@@ -1,0 +1,11 @@
+//! Substrate utilities: typed errors, JSON (no serde), deterministic RNG,
+//! and a tiny stderr logger. Everything else in the crate builds on these.
+
+pub mod error;
+pub mod json;
+pub mod logger;
+pub mod rng;
+
+pub use error::{Error, Result};
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,267 @@
+//! Integration: the full SWAP coordinator on the tiny preset — all three
+//! phases compose, baselines/SWA/local-SGD run, clocks behave, results are
+//! deterministic per seed.
+
+use swap::coordinator::{
+    run_baseline, run_local_sgd, run_swa, run_swap, BaselineConfig, LocalSgdConfig, SwaConfig,
+    SwapConfig, TrainEnv,
+};
+use swap::data::{AugmentSpec, Dataset, Generator, SynthSpec};
+use swap::model::ParamSet;
+use swap::optim::Schedule;
+use swap::runtime::Engine;
+use swap::sim::{ClusterClock, CostModel, DeviceModel, NetModel};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("tiny")
+}
+
+struct Fixture {
+    engine: Engine,
+    cost: CostModel,
+    train: Dataset,
+    test: Dataset,
+}
+
+fn fixture() -> Fixture {
+    let engine = Engine::load(artifacts_dir()).expect("run `make artifacts`");
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 99));
+    let train = gen.sample(96, 10);
+    let test = gen.sample(32, 11);
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    Fixture { engine, cost, train, test }
+}
+
+fn env(f: &Fixture) -> TrainEnv<'_> {
+    TrainEnv {
+        engine: &f.engine,
+        cost: &f.cost,
+        train: &f.train,
+        test: &f.test,
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+    }
+}
+
+fn tiny_swap_config(seed: u64) -> SwapConfig {
+    SwapConfig {
+        workers: 2,
+        group_devices: 1,
+        phase1_max_epochs: 2,
+        phase1_stop_acc: 1.1,
+        phase1_sched: Schedule::Constant(0.08),
+        phase2_epochs: 2,
+        phase2_sched: Schedule::Constant(0.02),
+        seed,
+        snapshot_every: None,
+        phase1_snapshot_every: None,
+    }
+}
+
+#[test]
+fn swap_three_phases_compose() {
+    let f = fixture();
+    let env = env(&f);
+    let r = run_swap(&env, &tiny_swap_config(1)).unwrap();
+
+    // phase 1 ran the full 2 epochs of B=16 (96/16 = 6 steps/epoch)
+    assert_eq!(r.phase1.steps, 12);
+    // two divergent workers
+    assert_eq!(r.worker_params.len(), 2);
+    assert!(
+        r.worker_params[0].distance(&r.worker_params[1]).unwrap() > 0.0,
+        "independent workers must diverge"
+    );
+    // the averaged model is the mean
+    let manual = ParamSet::average(&r.worker_params).unwrap();
+    assert!(manual.distance(&r.final_params).unwrap() < 1e-9);
+    // stats sane
+    assert!(r.final_stats.examples == 32);
+    assert!(r.final_stats.accuracy1() >= 0.0 && r.final_stats.accuracy1() <= 1.0);
+    // clock ordering: phase1 < phase2-end < total; eval not in training time
+    assert!(r.phase1_seconds > 0.0);
+    assert!(r.phase2_seconds > r.phase1_seconds);
+    assert!(r.clock.seconds > r.phase2_seconds, "phase 3 BN must be charged");
+    assert!(r.clock.eval > 0.0);
+    assert!(r.clock.comm > 0.0, "phase 1 all-reduce must be priced");
+}
+
+#[test]
+fn swap_phase2_parallel_time_is_max_not_sum() {
+    let f = fixture();
+    let env = env(&f);
+    let r2 = run_swap(&env, &tiny_swap_config(2)).unwrap();
+    // phase-2 cluster time = steps * step_time (one worker's duration),
+    // NOT workers * that. 2 epochs * 12 steps/epoch at B=8.
+    let per_worker = 24.0 * f.cost.train_step_time(8);
+    let measured = r2.phase2_seconds - r2.phase1_seconds;
+    assert!(
+        (measured - per_worker).abs() < 0.2 * per_worker,
+        "phase2 cluster time {measured} vs one-worker {per_worker}"
+    );
+}
+
+#[test]
+fn swap_deterministic_per_seed() {
+    let f = fixture();
+    let env = env(&f);
+    let a = run_swap(&env, &tiny_swap_config(5)).unwrap();
+    let b = run_swap(&env, &tiny_swap_config(5)).unwrap();
+    assert!(a.final_params.distance(&b.final_params).unwrap() < 1e-9);
+    assert_eq!(a.final_stats.correct1, b.final_stats.correct1);
+    let c = run_swap(&env, &tiny_swap_config(6)).unwrap();
+    assert!(a.final_params.distance(&c.final_params).unwrap() > 0.0);
+}
+
+#[test]
+fn baseline_sb_and_lb_run() {
+    let f = fixture();
+    let env = env(&f);
+    let sb = run_baseline(
+        &env,
+        &BaselineConfig {
+            devices: 1,
+            epochs: 2,
+            sched: Schedule::Constant(0.05),
+            stop_train_acc: 1.1,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    let lb = run_baseline(
+        &env,
+        &BaselineConfig {
+            devices: 4,
+            epochs: 2,
+            sched: Schedule::Constant(0.2),
+            stop_train_acc: 1.1,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    // SB: 12 steps/epoch; LB(4x): 3 steps/epoch
+    assert_eq!(sb.progress.steps, 24);
+    assert_eq!(lb.progress.steps, 6);
+    // large batch trains faster on the virtual cluster
+    assert!(
+        lb.outcome.cluster_seconds < sb.outcome.cluster_seconds,
+        "LB {} !< SB {}",
+        lb.outcome.cluster_seconds,
+        sb.outcome.cluster_seconds
+    );
+    // comm only on the multi-device arm
+    assert_eq!(sb.clock.comm, 0.0);
+    assert!(lb.clock.comm > 0.0);
+}
+
+#[test]
+fn early_stopping_respects_tau() {
+    let f = fixture();
+    let env = env(&f);
+    // tau = 0 stops after the first epoch (any accuracy >= 0)
+    let r = run_baseline(
+        &env,
+        &BaselineConfig {
+            devices: 1,
+            epochs: 50,
+            sched: Schedule::Constant(0.05),
+            stop_train_acc: 0.0,
+            seed: 4,
+        },
+    )
+    .unwrap();
+    assert_eq!(r.progress.steps, 12, "must stop at the first epoch boundary");
+}
+
+#[test]
+fn swa_samples_and_averages() {
+    let f = fixture();
+    let env = env(&f);
+    let mut params = ParamSet::init(f.engine.manifest(), 8);
+    let mut clock = ClusterClock::new();
+    let r = run_swa(
+        &env,
+        &mut params,
+        &SwaConfig {
+            devices: 1,
+            cycles: 3,
+            cycle_epochs: 1,
+            high_lr: 0.05,
+            low_lr: 0.005,
+            seed: 8,
+            seed_stream: 0,
+        },
+        &mut clock,
+    )
+    .unwrap();
+    assert_eq!(r.samples.len(), 3);
+    // samples are distinct iterates
+    assert!(r.samples[0].distance(&r.samples[2]).unwrap() > 0.0);
+    // averaged model equals the mean of samples
+    let manual = ParamSet::average(&r.samples).unwrap();
+    assert!(manual.distance(&r.averaged).unwrap() < 1e-9);
+    assert!(clock.seconds > 0.0);
+}
+
+#[test]
+fn local_sgd_syncs_parameters() {
+    let f = fixture();
+    let env = env(&f);
+    let r = run_local_sgd(
+        &env,
+        &LocalSgdConfig {
+            devices: 2,
+            sync_epochs: 1,
+            sync_sched: Schedule::Constant(0.08),
+            local_epochs: 1,
+            local_sched: Schedule::Constant(0.02),
+            h_steps: 4,
+            seed: 12,
+        },
+    )
+    .unwrap();
+    // 12 local steps at B=8 with H=4 -> 3 sync events
+    assert_eq!(r.sync_events, 3);
+    assert!(r.outcome.test_acc1 >= 0.0 && r.outcome.test_acc1 <= 1.0);
+    assert!(r.outcome.cluster_seconds > 0.0);
+}
+
+#[test]
+fn resumable_swap_reproduces_fresh_run() {
+    use swap::coordinator::{run_swap_resumable, RunDir};
+    let f = fixture();
+    let env = env(&f);
+    let cfg = tiny_swap_config(31);
+    let fresh = run_swap(&env, &cfg).unwrap();
+
+    let dir_path = std::env::temp_dir().join(format!("swap-resume-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+
+    // first resumable run: everything computed + persisted
+    let a = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert!(a.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+            "resumable(fresh) must equal run_swap");
+    assert!((a.clock.seconds - fresh.clock.seconds).abs() < 1e-9);
+
+    // second run: phase 1 + both workers loaded from disk, same outputs
+    assert!(dir.has_phase1());
+    assert_eq!(dir.finished_workers(cfg.workers), vec![0, 1]);
+    let b = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert!(b.final_params.distance(&fresh.final_params).unwrap() < 1e-9);
+    assert!((b.clock.seconds - fresh.clock.seconds).abs() < 1e-6,
+            "modeled time must be identical on resume: {} vs {}",
+            b.clock.seconds, fresh.clock.seconds);
+    assert!(b.wall_seconds < a.wall_seconds, "resume must be faster in wall time");
+
+    // partial resume: delete one worker, keep phase 1
+    std::fs::remove_file(dir_path.join("worker1.ckpt")).unwrap();
+    let c = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert!(c.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+            "partial resume must still reproduce the fresh run");
+    std::fs::remove_dir_all(&dir_path).ok();
+}

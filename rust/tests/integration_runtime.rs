@@ -1,0 +1,183 @@
+//! Integration: the rust runtime executing the real AOT artifacts (tiny
+//! preset). Requires `make artifacts` (the Makefile test target guarantees
+//! this). These tests pin the python↔rust interface numerically:
+//!   * grad/train/eval/bnstats run and return sane shapes/values,
+//!   * the fused on-device SGD update equals the host-side optimizer,
+//!   * training on a fixed batch reduces the loss through the whole stack.
+
+use swap::coordinator::TrainEnv;
+use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
+use swap::model::{BnState, ParamSet};
+use swap::optim::{SgdConfig, SgdOptimizer};
+use swap::runtime::{Engine, HostBatch};
+use swap::sim::{CostModel, DeviceModel, NetModel};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("tiny")
+}
+
+fn engine() -> Engine {
+    Engine::load(artifacts_dir()).expect("tiny artifacts missing — run `make artifacts`")
+}
+
+fn tiny_batch(engine: &Engine, seed: u64) -> HostBatch {
+    let m = engine.manifest();
+    let gen = Generator::new(SynthSpec::for_preset(
+        m.model.num_classes,
+        m.model.image_size,
+        seed,
+    ));
+    let ds = gen.sample(8, 10);
+    let mut b = Batcher::new(8, m.model.image_size, AugmentSpec::none());
+    b.assemble_clean(&ds, &(0..8).collect::<Vec<_>>())
+}
+
+#[test]
+fn manifest_loads_and_matches_model() {
+    let e = engine();
+    let m = e.manifest();
+    assert_eq!(m.preset, "tiny");
+    assert_eq!(m.model.arch, "resnet9s");
+    assert_eq!(m.params.len(), 26);
+    assert_eq!(m.bn_stats.len(), 16);
+    assert!(m.batches.contains(&8));
+}
+
+#[test]
+fn grad_executes_with_correct_shapes() {
+    let e = engine();
+    let params = ParamSet::init(e.manifest(), 0);
+    let hb = tiny_batch(&e, 1);
+    let g = e.grad(params.as_slice(), &hb).unwrap();
+    assert_eq!(g.grads.len(), params.tensors.len());
+    for (gt, pt) in g.grads.iter().zip(&params.tensors) {
+        assert_eq!(gt.shape(), pt.shape());
+    }
+    assert!(g.stats.sum_loss.is_finite() && g.stats.sum_loss > 0.0);
+    assert!(g.stats.correct1 >= 0 && g.stats.correct1 <= 8);
+    assert!(g.stats.correct5 >= g.stats.correct1);
+    // gradients are not all zero
+    let total: f64 = g.grads.iter().map(|t| t.sq_norm()).sum();
+    assert!(total > 0.0);
+}
+
+#[test]
+fn fused_train_step_matches_host_optimizer() {
+    let e = engine();
+    let m = e.manifest();
+    let params0 = ParamSet::init(m, 3);
+    let hb = tiny_batch(&e, 2);
+    let lr = 0.05f32;
+
+    // host path: grads from grad_b8, then host Nesterov update
+    let g = e.grad(params0.as_slice(), &hb).unwrap();
+    let mut host_params = params0.clone();
+    let mut opt = SgdOptimizer::new(
+        SgdConfig { momentum: m.model.momentum, weight_decay: m.model.weight_decay },
+        &host_params,
+    );
+    opt.step(&mut host_params, &g.grads, lr).unwrap();
+
+    // device path: fused train_b8
+    let mut dev_params = params0.clone();
+    let mut dev_mom = params0.zeros_like();
+    let stats = e
+        .train_step(dev_params.as_mut_slice(), dev_mom.as_mut_slice(), &hb, lr)
+        .unwrap();
+    assert!((stats.sum_loss - g.stats.sum_loss).abs() < 1e-2 * g.stats.sum_loss.abs().max(1.0));
+
+    // parity: parameters and momentum agree to f32 noise
+    for ((hp, dp), name) in host_params
+        .tensors
+        .iter()
+        .zip(&dev_params.tensors)
+        .zip(m.params.iter().map(|s| &s.name))
+    {
+        let mut diff = hp.clone();
+        diff.axpy(-1.0, dp).unwrap();
+        let rel = diff.max_abs() / (1e-3 + hp.max_abs());
+        assert!(rel < 2e-3, "param {name} host/device mismatch rel={rel}");
+    }
+    for (hm, dm) in opt.momentum.tensors.iter().zip(&dev_mom.tensors) {
+        let mut diff = hm.clone();
+        diff.axpy(-1.0, dm).unwrap();
+        assert!(diff.max_abs() < 2e-3 + 1e-2 * hm.max_abs());
+    }
+}
+
+#[test]
+fn eval_and_bnstats_execute() {
+    let e = engine();
+    let m = e.manifest();
+    let params = ParamSet::init(m, 5);
+    let hb = tiny_batch(&e, 3);
+
+    let bn = BnState::init(m);
+    let stats = e.eval_batch(params.as_slice(), bn.as_slice(), &hb).unwrap();
+    assert!(stats.sum_loss.is_finite());
+    assert!(stats.correct1 <= 8 && stats.correct5 <= 8);
+
+    let moments = e.bn_moments(params.as_slice(), &hb).unwrap();
+    assert_eq!(moments.len(), m.bn_stats.len());
+    // vars (odd positions) must be nonnegative
+    for (i, t) in moments.iter().enumerate() {
+        if i % 2 == 1 {
+            assert!(t.data().iter().all(|&v| v >= -1e-6), "negative variance");
+        }
+    }
+    // eval with the recomputed stats differs from eval with init stats
+    let bn2 = BnState { tensors: moments };
+    let stats2 = e.eval_batch(params.as_slice(), bn2.as_slice(), &hb).unwrap();
+    assert!((stats2.sum_loss - stats.sum_loss).abs() > 1e-6);
+}
+
+#[test]
+fn fused_training_reduces_loss_on_fixed_batch() {
+    let e = engine();
+    let mut params = ParamSet::init(e.manifest(), 7);
+    let mut mom = params.zeros_like();
+    let hb = tiny_batch(&e, 4);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..6 {
+        let stats = e
+            .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.08)
+            .unwrap();
+        last = stats.sum_loss;
+        first.get_or_insert(stats.sum_loss);
+    }
+    assert!(
+        last < first.unwrap(),
+        "loss did not decrease: {} -> {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn train_env_eval_and_bn_recompute() {
+    let e = engine();
+    let m = e.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 11));
+    let train = gen.sample(64, 10);
+    let test = gen.sample(24, 11);
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    let env = TrainEnv {
+        engine: &e,
+        cost: &cost,
+        train: &train,
+        test: &test,
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+    };
+    let params = ParamSet::init(&m, 1);
+    let mut clock = swap::sim::ClusterClock::new();
+    let bn = env.recompute_bn(&params, 1, &mut clock, true).unwrap();
+    assert_eq!(bn.tensors.len(), m.bn_stats.len());
+    assert!(clock.seconds > 0.0, "bn recompute must be charged");
+    let stats = env.evaluate(&params, &bn, &mut clock).unwrap();
+    assert_eq!(stats.examples, 24);
+    assert!(clock.eval > 0.0);
+}

@@ -1,0 +1,274 @@
+//! Cross-module property tests (own mini-proptest framework,
+//! swap::testutil). These pin the coordinator's invariants listed in
+//! DESIGN.md §Key invariants. No artifacts required.
+
+use swap::coordinator::allreduce;
+use swap::data::{sampler, EpochSampler};
+use swap::optim::Schedule;
+use swap::tensor::{self, Tensor};
+use swap::testutil::{assert_close, property, Gen};
+use swap::util::{Json, Rng};
+
+fn rand_set(g: &mut Gen, ntensors: usize) -> Vec<Tensor> {
+    (0..ntensors)
+        .map(|_| {
+            let n = g.usize_in(1..40);
+            Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_ring_allreduce_is_mean() {
+    property(40, |g| {
+        let w = g.usize_in(1..10);
+        let shapes: Vec<usize> = (0..g.usize_in(1..4)).map(|_| g.usize_in(1..30)).collect();
+        let sets: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|&n| Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap())
+                    .collect()
+            })
+            .collect();
+        let ring = allreduce::ring_mean(&sets).unwrap();
+        let naive = allreduce::naive_mean(&sets).unwrap();
+        for (a, b) in ring.iter().zip(&naive) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_averaging_contracts_toward_any_center() {
+    // ||mean(thetas) - c|| <= max_w ||theta_w - c|| for every c:
+    // phase 3 cannot move farther from the basin center than the worst
+    // worker (convexity of the mean).
+    property(60, |g| {
+        let w = g.usize_in(1..9);
+        let n = g.usize_in(1..50);
+        let sets: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()])
+            .collect();
+        let c = vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()];
+        let avg = tensor::average_sets(&sets).unwrap();
+        let d_avg = tensor::sets_distance(&avg, &c).unwrap();
+        let d_max = sets
+            .iter()
+            .map(|s| tensor::sets_distance(s, &c).unwrap())
+            .fold(0.0, f64::max);
+        assert!(d_avg <= d_max + 1e-6, "{d_avg} > {d_max}");
+    });
+}
+
+#[test]
+fn prop_average_linearity() {
+    // mean(a + t*d) == mean(a) + t*mean(d)
+    property(40, |g| {
+        let w = g.usize_in(1..6);
+        let n = g.usize_in(1..30);
+        let t = g.f32_in(-2.0..2.0);
+        let a: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()])
+            .collect();
+        let d: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()])
+            .collect();
+        let moved: Vec<Vec<Tensor>> = a
+            .iter()
+            .zip(&d)
+            .map(|(ai, di)| tensor::sets_add_scaled(ai, t, di).unwrap())
+            .collect();
+        let lhs = tensor::average_sets(&moved).unwrap();
+        let mut rhs = tensor::average_sets(&a).unwrap();
+        let dm = tensor::average_sets(&d).unwrap();
+        tensor::sets_axpy(&mut rhs, t, &dm).unwrap();
+        for (x, y) in lhs[0].data().iter().zip(rhs[0].data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_cosine_in_unit_interval() {
+    property(60, |g| {
+        let a = rand_set(g, 2);
+        let b: Vec<Tensor> = a
+            .iter()
+            .map(|t| {
+                Tensor::new(
+                    t.shape().to_vec(),
+                    t.data().iter().map(|_| g.normal()).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let c = tensor::sets_cosine(&a, &b).unwrap();
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&c), "cosine {c}");
+    });
+}
+
+#[test]
+fn prop_shard_partition() {
+    property(50, |g| {
+        let w = g.usize_in(1..9);
+        let per = g.usize_in(1..20);
+        let global: Vec<usize> = (0..w * per).map(|i| i * 3 + 1).collect();
+        let shards = sampler::shard(&global, w);
+        let mut seen = std::collections::HashSet::new();
+        for sh in &shards {
+            assert_eq!(sh.len(), per);
+            for &i in *sh {
+                assert!(seen.insert(i), "index {i} in two shards");
+            }
+        }
+        assert_eq!(seen.len(), global.len());
+    });
+}
+
+#[test]
+fn prop_epoch_sampler_is_permutation_every_epoch() {
+    property(30, |g| {
+        let n = g.usize_in(8..120);
+        let batch = g.usize_in(1..(n / 2).max(2));
+        let mut s = EpochSampler::new(n, batch, g.rng().next_u64(), 0);
+        for _epoch in 0..2 {
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..n / batch {
+                for &i in s.next_batch() {
+                    assert!(i < n);
+                    assert!(seen.insert(i), "repeat within epoch");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedules_nonnegative_and_finite() {
+    property(80, |g| {
+        let total = g.usize_in(10..300);
+        let sched = match g.usize_in(0..5) {
+            0 => Schedule::Constant(g.f32_in(0.0..3.0)),
+            1 => Schedule::Triangle {
+                peak: g.f32_in(0.001..3.0),
+                warmup: g.usize_in(1..total),
+                total,
+                end_lr: 0.0,
+            },
+            2 => Schedule::Cyclic {
+                high: g.f32_in(0.5..2.0),
+                low: g.f32_in(0.0..0.5),
+                period: g.usize_in(2..60),
+            },
+            3 => Schedule::Piecewise(vec![
+                (0, g.f32_in(0.0..1.0)),
+                (g.usize_in(1..100), g.f32_in(0.0..1.0)),
+                (g.usize_in(100..300), g.f32_in(0.0..1.0)),
+            ]),
+            _ => Schedule::Sequence(vec![
+                (g.usize_in(1..50), Schedule::Constant(g.f32_in(0.0..1.0))),
+                (
+                    g.usize_in(1..50),
+                    Schedule::Cyclic {
+                        high: g.f32_in(0.1..1.0),
+                        low: 0.0,
+                        period: g.usize_in(2..20),
+                    },
+                ),
+            ]),
+        };
+        for step in 0..total + 50 {
+            let lr = sched.lr(step);
+            assert!(lr.is_finite() && lr >= 0.0, "{lr} at {step}");
+        }
+        // scaling by k scales lr by k
+        let k = g.f32_in(0.1..4.0);
+        let scaled = sched.scaled(k);
+        for step in [0usize, total / 2, total] {
+            assert_close(
+                scaled.lr(step) as f64,
+                (k * sched.lr(step)) as f64,
+                1e-5,
+                "scaled lr",
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth > 2 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e6..1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize_in(0..12))
+                    .map(|_| char::from_u32(g.usize_in(32..1200) as u32).unwrap_or('x'))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0..5)).map(|_| random_json(g, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0..5))
+                    .map(|i| (format!("k{i}"), random_json(g, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property(80, |g| {
+        let v = random_json(g, 0);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn prop_rng_streams_reproducible() {
+    property(30, |g| {
+        let seed = g.rng().next_u64();
+        let id = g.usize_in(0..64) as u64;
+        let mut a = Rng::stream(seed, id);
+        let mut b = Rng::stream(seed, id);
+        for _ in 0..20 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    });
+}
+
+#[test]
+fn prop_sgd_momentum_zero_reduces_to_plain_sgd() {
+    use swap::model::ParamSet;
+    use swap::optim::{SgdConfig, SgdOptimizer};
+    property(30, |g| {
+        let n = g.usize_in(1..40);
+        let p0: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let grad: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let lr = g.f32_in(0.001..0.5);
+        let mut params = ParamSet {
+            tensors: vec![Tensor::new(vec![n], p0.clone()).unwrap()],
+        };
+        let mut opt = SgdOptimizer::new(
+            SgdConfig { momentum: 0.0, weight_decay: 0.0 },
+            &params,
+        );
+        opt.step(
+            &mut params,
+            &[Tensor::new(vec![n], grad.clone()).unwrap()],
+            lr,
+        )
+        .unwrap();
+        for i in 0..n {
+            assert_close(
+                params.tensors[0].data()[i] as f64,
+                (p0[i] - lr * grad[i]) as f64,
+                1e-5,
+                "plain sgd",
+            );
+        }
+    });
+}
