@@ -11,7 +11,7 @@ use swap::config::preset;
 use swap::coordinator::{run_baseline, run_swap};
 use swap::experiments::Lab;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(preset("cifar10sim")?)?;
     let env = lab.env();
     let seed = lab.cfg.seed;

@@ -13,9 +13,10 @@ use swap::coordinator::{run_baseline, run_swap, run_sync_training, SyncTrainConf
 use swap::experiments::Lab;
 use swap::metrics::SeriesLog;
 use swap::model::ParamSet;
+use swap::runtime::Backend;
 use swap::sim::ClusterClock;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(preset("cifar10sim")?)?;
     let env: TrainEnv = lab.env();
     let m = lab.engine.manifest();

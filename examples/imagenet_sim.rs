@@ -8,8 +8,9 @@
 use swap::config::preset;
 use swap::coordinator::{run_baseline, run_swap};
 use swap::experiments::Lab;
+use swap::runtime::Backend;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(preset("imagenetsim")?)?;
     let env = lab.env();
     let seed = lab.cfg.seed;

@@ -11,7 +11,7 @@ use swap::experiments::Lab;
 use swap::landscape::{eval_grid, GridSpec, Plane};
 use swap::sim::ClusterClock;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let mut cfg = preset("cifar10sim")?;
     cfg.apply_kv("n_train", "512")?;
     cfg.apply_kv("n_test", "256")?;

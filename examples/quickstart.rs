@@ -11,7 +11,7 @@ use swap::config::preset;
 use swap::coordinator::run_swap;
 use swap::experiments::Lab;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     // 1. a Lab bundles artifacts (engine), synthetic data, and cost model
     let lab = Lab::new(preset("tiny")?)?;
 

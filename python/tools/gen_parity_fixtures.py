@@ -1,0 +1,195 @@
+"""Generate rust/tests/fixtures/kernel_parity.json.
+
+The JSON pins the numerical behaviour of the python reference kernels
+(python/compile/kernels/ref.py) and of the full ResNet9s model entry points
+(python/compile/model.py) on small deterministic cases.  The rust native
+backend (rust/src/runtime/native/) is asserted against these fixtures in
+rust/tests/kernel_parity.rs to 1e-4 — the cross-language twin of the
+pytest/hypothesis suite that pins the Pallas kernels to the same oracles.
+
+Run from the repo root (requires jax, CPU is fine):
+
+    python3 python/tools/gen_parity_fixtures.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from compile import model as M  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures",
+    "kernel_parity.json")
+
+
+def flat(x):
+    return [float(v) for v in np.asarray(x, dtype=np.float32).reshape(-1)]
+
+
+def tensor(x):
+    a = np.asarray(x, dtype=np.float32)
+    return {"shape": list(a.shape), "data": flat(a)}
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def matmul_case():
+    r = rng(1)
+    a = r.standard_normal((3, 4), dtype=np.float32)
+    b = r.standard_normal((4, 5), dtype=np.float32)
+    bias = r.standard_normal(5, dtype=np.float32)
+    return {
+        "a": tensor(a),
+        "b": tensor(b),
+        "bias": flat(bias),
+        "out_none": flat(ref.matmul_bias_act(a, b, bias, "none")),
+        "out_relu": flat(ref.matmul_bias_act(a, b, bias, "relu")),
+        "out_nobias": flat(ref.matmul_bias_act(a, b, None, "none")),
+    }
+
+
+def sgd_case():
+    r = rng(2)
+    p = jnp.asarray(r.standard_normal(6, dtype=np.float32))
+    m = jnp.asarray(r.standard_normal(6, dtype=np.float32))
+    grads = [r.standard_normal(6, dtype=np.float32) for _ in range(3)]
+    lr, mu, wd = 0.2, 0.9, 0.01
+    p0, m0 = p, m
+    for g in grads:
+        p, m = ref.sgd_nesterov(p, m, jnp.asarray(g), lr, mu=mu, wd=wd)
+    return {
+        "p0": flat(p0), "m0": flat(m0), "grads": [flat(g) for g in grads],
+        "lr": lr, "mu": mu, "wd": wd,
+        "p_final": flat(p), "m_final": flat(m),
+    }
+
+
+def xent_case(seed, logits, labels):
+    logits = jnp.asarray(logits)
+    labels = jnp.asarray(labels, dtype=jnp.int32)
+    loss, c1, c5 = ref.cross_entropy(logits, labels)
+    dl = ref.cross_entropy_grad(logits, labels, dloss=1.0)
+    return {
+        "logits": tensor(logits),
+        "labels": [int(y) for y in labels],
+        "sum_loss": float(loss), "c1": int(c1), "c5": int(c5),
+        "dlogits": flat(dl),
+    }
+
+
+def conv_case():
+    r = rng(4)
+    x = r.standard_normal((2, 4, 5, 3), dtype=np.float32)
+    w = r.standard_normal((27, 4), dtype=np.float32)
+    patches = M.im2col(jnp.asarray(x))
+    y = ref.matmul_bias_act(patches, jnp.asarray(w), None, "none")
+    y = np.asarray(y).reshape(2, 4, 5, 4)
+    return {"x": tensor(x), "w": tensor(w), "y": tensor(y)}
+
+
+def batchnorm_case():
+    r = rng(5)
+    x = r.standard_normal((2, 3, 3, 4), dtype=np.float32)
+    gamma = r.standard_normal(4, dtype=np.float32)
+    beta = r.standard_normal(4, dtype=np.float32)
+    y, (mean, var) = M.batchnorm_train(
+        jnp.asarray(x), jnp.asarray(gamma), jnp.asarray(beta))
+    return {
+        "x": tensor(x), "gamma": flat(gamma), "beta": flat(beta),
+        "y": tensor(y), "mean": flat(mean), "var": flat(var),
+    }
+
+
+def maxpool_case():
+    r = rng(6)
+    x = r.standard_normal((1, 4, 4, 2), dtype=np.float32)
+    y = M.maxpool2(jnp.asarray(x))
+    return {"x": tensor(x), "y": tensor(y)}
+
+
+def model_case():
+    cfg = M.ModelConfig(width=2, num_classes=4, image_size=8,
+                        matmul_backend="xla")
+    params = M.init_params(cfg, seed=0)
+    r = rng(7)
+    batch = 2
+    images = np.tanh(
+        r.standard_normal((batch, 8, 8, 3), dtype=np.float32))
+    labels = np.array([1, 3], dtype=np.int32)
+    ij, lj = jnp.asarray(images), jnp.asarray(labels)
+
+    out = M.grad_step(cfg, params, ij, lj)
+    grads, (sum_loss, c1, c5) = out[:-3], out[-3:]
+
+    moments = M.bnstats_step(cfg, params, ij)
+
+    # eval with the just-computed moments as running stats (var >= 0)
+    bn_stats = list(moments)
+    e_loss, e_c1, e_c5 = M.eval_step(cfg, params, bn_stats, ij, lj)
+
+    new = M.train_step(cfg, params, [jnp.zeros_like(p) for p in params],
+                       ij, lj, jnp.float32(0.1))
+    n = len(params)
+    p_after, m_after = new[:n], new[n:2 * n]
+
+    return {
+        "width": cfg.width, "num_classes": cfg.num_classes,
+        "image_size": cfg.image_size,
+        "momentum": cfg.momentum, "weight_decay": cfg.weight_decay,
+        "param_names": [name for name, _ in M.param_specs(cfg)],
+        "params": [tensor(p) for p in params],
+        "bn_names": [name for name, _ in M.bn_specs(cfg)],
+        "images": flat(images), "labels": [int(y) for y in labels],
+        "batch": batch,
+        "grad": {
+            "sum_loss": float(sum_loss), "c1": int(c1), "c5": int(c5),
+            "grads": [tensor(g) for g in grads],
+        },
+        "bn_moments": [tensor(m) for m in moments],
+        "eval": {"sum_loss": float(e_loss), "c1": int(e_c1),
+                 "c5": int(e_c5)},
+        "train_step": {
+            "lr": 0.1,
+            "params_after": [tensor(p) for p in p_after],
+            "momentum_after": [tensor(m) for m in m_after],
+        },
+    }
+
+
+def main():
+    r3 = rng(3)
+    logits = r3.standard_normal((4, 7), dtype=np.float32)
+    labels = [int(v) for v in r3.integers(0, 7, size=4)]
+    # tie case: duplicate the true logit so rank counts strictly-greater only
+    tie_logits = np.zeros((2, 6), dtype=np.float32)
+    tie_logits[0] = [1.0, 1.0, 0.5, -1.0, 1.0, 0.0]
+    tie_logits[1] = [-2.0, 3.0, 3.0, 3.0, 3.0, 3.0]
+    fixtures = {
+        "matmul": matmul_case(),
+        "sgd": sgd_case(),
+        "xent": xent_case(3, logits, labels),
+        "xent_ties": xent_case(3, tie_logits, [0, 5]),
+        "conv3x3": conv_case(),
+        "batchnorm": batchnorm_case(),
+        "maxpool2": maxpool_case(),
+        "model": model_case(),
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(fixtures, f)
+    print(f"wrote {os.path.abspath(OUT)} "
+          f"({os.path.getsize(OUT) / 1024:.0f} KiB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@
 
 use swap::experiments::{tables, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(swap::config::preset("cifar10sim")?)?;
     let t = tables::dawnbench(&lab, 0.95)?;
     t.print();

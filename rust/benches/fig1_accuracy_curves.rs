@@ -6,7 +6,7 @@
 
 use swap::experiments::{figures, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     // eval-heavy instrumentation: a lighter config keeps this bench fast
     let mut cfg = swap::config::preset("cifar10sim")?;
     cfg.apply_kv("n_train", "512")?;

@@ -8,7 +8,7 @@
 use swap::experiments::{figures, Lab};
 use swap::landscape::GridSpec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let mut cfg = swap::config::preset("cifar10sim")?;
     // landscape runs are eval-heavy; a lighter config keeps this bench fast
     cfg.apply_kv("n_train", "512")?;

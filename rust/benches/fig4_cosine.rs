@@ -7,7 +7,7 @@
 
 use swap::experiments::{figures, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let mut cfg = swap::config::preset("cifar10sim")?;
     cfg.apply_kv("n_train", "512")?;
     cfg.apply_kv("workers", "4")?;

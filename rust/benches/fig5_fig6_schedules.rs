@@ -5,7 +5,7 @@
 
 use swap::experiments::{figures, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(swap::config::preset("imagenetsim")?)?;
     let f5 = figures::fig5(&lab)?;
     println!("fig5: {} rows (lr_original / lr_doubled / lr_swap + batch sizes)", f5.len());

@@ -9,11 +9,14 @@ use swap::coordinator::allreduce;
 use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::ParamSet;
 use swap::optim::{SgdConfig, SgdOptimizer};
-use swap::runtime::Engine;
+use swap::runtime::{Backend, NativeBackend, NativeSpec};
 use swap::util::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::load("artifacts/cifar10sim")?;
+fn main() -> swap::util::Result<()> {
+    // the cifar10sim-shaped model on the native backend (swap for
+    // Engine::load("artifacts/cifar10sim") + --features xla to bench PJRT)
+    let engine =
+        NativeBackend::new(NativeSpec::new("cifar10sim", 8, 10, 32).with_batches(&[64]))?;
     let m = engine.manifest().clone();
     let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 1));
     let ds = gen.sample(256, 10);

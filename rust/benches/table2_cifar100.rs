@@ -3,7 +3,7 @@
 
 use swap::experiments::{tables, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(swap::config::preset("cifar100sim")?)?;
     let t = tables::table2(&lab)?;
     t.print();

@@ -4,7 +4,7 @@
 
 use swap::experiments::{tables, Lab};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swap::util::Result<()> {
     let lab = Lab::new(swap::config::preset("imagenetsim")?)?;
     let t = tables::table3(&lab)?;
     t.print();

@@ -7,6 +7,7 @@ use crate::coordinator::TrainEnv;
 use crate::data::{AugmentSpec, Batcher};
 use crate::metrics::SeriesLog;
 use crate::model::ParamSet;
+use crate::runtime::Backend;
 use crate::tensor;
 use crate::util::{Result, Rng};
 

@@ -136,7 +136,11 @@ Paper reproduction (write results/*.txt + *.csv):
   schedules   fig5 + fig6 LR/batch schedule series
   info        print preset config + artifact manifest
 
-Presets: tiny | cifar10sim | cifar100sim | imagenetsim
+Presets: tiny | native | cifar10sim | cifar100sim | imagenetsim
+Backends (--set backend=...):
+  native    pure-rust engine, no artifacts needed        [default]
+  xla       PJRT over AOT HLO artifacts (build with --features xla,
+            generate artifacts with `python -m compile.aot`)
 Env: SWAP_RUNS=N override runs, SWAP_LOG=debug|info|warn|quiet";
 
 #[cfg(test)]

@@ -9,17 +9,39 @@ pub use presets::preset;
 
 use crate::data::AugmentSpec;
 use crate::optim::{imagenet_piecewise, Schedule};
+use crate::runtime::{Backend, NativeBackend, NativeSpec};
 use crate::util::{Error, Result};
+
+/// The selectable execution backends — the single source for both
+/// `validate()` and `load_backend()`.
+pub const BACKENDS: &[&str] = &["native", "xla"];
+
+fn unknown_backend(name: &str) -> Error {
+    Error::config(format!(
+        "unknown backend '{name}' (expected one of: {})",
+        BACKENDS.join("|")
+    ))
+}
 
 /// All knobs of one experiment family (one dataset preset).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    /// artifact preset directory name (tiny / cifar10sim / ...)
+    /// preset name (tiny / native / cifar10sim / ...)
     pub preset: String,
+    /// execution backend: "native" (pure rust, default) or "xla" (PJRT
+    /// over AOT artifacts; needs `--features xla` and artifacts from
+    /// `python -m compile.aot`)
+    pub backend: String,
     pub artifacts_root: String,
     pub seed: u64,
     /// statistics are collected over this many runs (paper: 10 / 3)
     pub runs: usize,
+
+    // ---- model (resnet9s) ----
+    /// base channel count c (mirrors python/compile/aot.py presets)
+    pub model_width: usize,
+    pub num_classes: usize,
+    pub image_size: usize,
 
     // ---- data ----
     pub n_train: usize,
@@ -71,6 +93,34 @@ pub struct ExperimentConfig {
 impl ExperimentConfig {
     pub fn artifacts_dir(&self) -> std::path::PathBuf {
         std::path::Path::new(&self.artifacts_root).join(&self.preset)
+    }
+
+    /// The native-backend model spec derived from this config.
+    pub fn native_spec(&self) -> NativeSpec {
+        NativeSpec::new(&self.preset, self.model_width, self.num_classes, self.image_size)
+            .with_batches(&[self.exec_batch])
+    }
+
+    /// Instantiate the selected execution backend.
+    pub fn load_backend(&self) -> Result<Box<dyn Backend>> {
+        match self.backend.as_str() {
+            "native" => Ok(Box::new(NativeBackend::new(self.native_spec())?)),
+            "xla" => self.load_xla_backend(),
+            other => Err(unknown_backend(other)),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    fn load_xla_backend(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(crate::runtime::Engine::load(self.artifacts_dir())?))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn load_xla_backend(&self) -> Result<Box<dyn Backend>> {
+        Err(Error::config(
+            "backend 'xla' requires building with `--features xla` \
+             (and AOT artifacts from `python -m compile.aot`)",
+        ))
     }
 
     pub fn augment_spec(&self) -> AugmentSpec {
@@ -141,6 +191,10 @@ impl ExperimentConfig {
         match key.trim() {
             "seed" => self.seed = p(key, value)?,
             "runs" => self.runs = p(key, value)?,
+            "backend" => self.backend = value.trim().to_string(),
+            "model_width" => self.model_width = p(key, value)?,
+            "num_classes" => self.num_classes = p(key, value)?,
+            "image_size" => self.image_size = p(key, value)?,
             "n_train" => self.n_train = p(key, value)?,
             "n_test" => self.n_test = p(key, value)?,
             "augment" => self.augment = p(key, value)?,
@@ -192,6 +246,15 @@ impl ExperimentConfig {
 
     /// Sanity-check cross-field invariants.
     pub fn validate(&self) -> Result<()> {
+        if !BACKENDS.contains(&self.backend.as_str()) {
+            return Err(unknown_backend(&self.backend));
+        }
+        if self.image_size == 0 || self.image_size % 8 != 0 {
+            return Err(Error::config(format!(
+                "image_size {} must be a positive multiple of 8",
+                self.image_size
+            )));
+        }
         if self.lb_devices != self.workers * self.group_devices {
             return Err(Error::config(format!(
                 "lb_devices {} must equal workers {} x group_devices {}",
@@ -223,12 +286,30 @@ mod tests {
 
     #[test]
     fn preset_loads_and_validates() {
-        for name in ["tiny", "cifar10sim", "cifar100sim", "imagenetsim"] {
+        for name in ["tiny", "native", "cifar10sim", "cifar100sim", "imagenetsim"] {
             let cfg = preset(name).unwrap();
             cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(cfg.preset, name);
+            assert_eq!(cfg.backend, "native");
         }
         assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn backend_selection() {
+        let mut cfg = preset("tiny").unwrap();
+        let b = cfg.load_backend().unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.manifest().model.width, cfg.model_width);
+        assert_eq!(b.manifest().model.num_classes, cfg.num_classes);
+        cfg.apply_kv("backend", "nonsense").unwrap();
+        assert!(cfg.validate().is_err());
+        assert!(cfg.load_backend().is_err());
+        // the xla backend needs --features xla and artifacts; without
+        // either, selection must fail with a config/io error, not panic
+        cfg.apply_kv("backend", "xla").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.load_backend().is_err());
     }
 
     #[test]

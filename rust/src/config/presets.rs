@@ -13,9 +13,13 @@ use crate::util::{Error, Result};
 pub fn preset(name: &str) -> Result<ExperimentConfig> {
     let base = ExperimentConfig {
         preset: name.to_string(),
+        backend: "native".to_string(),
         artifacts_root: "artifacts".to_string(),
         seed: 42,
         runs: 3,
+        model_width: 8,
+        num_classes: 10,
+        image_size: 32,
         n_train: 1024,
         n_test: 512,
         augment: true,
@@ -45,6 +49,9 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         // fast unit/integration testing target (B=8 artifacts)
         "tiny" => ExperimentConfig {
             runs: 2,
+            model_width: 4,
+            num_classes: 10,
+            image_size: 16,
             n_train: 96,
             n_test: 32,
             augment: false,
@@ -64,11 +71,38 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
             swa_cycle_epochs: 1,
             ..base
         },
+        // demo preset for the pure-rust engine: tiny model, a bit more
+        // data, CPU-sized batches — `swap-train swap --preset native`
+        // completes a full three-phase run in seconds with no artifacts
+        "native" => ExperimentConfig {
+            runs: 2,
+            model_width: 4,
+            num_classes: 10,
+            image_size: 16,
+            n_train: 512,
+            n_test: 256,
+            exec_batch: 16,
+            bn_batches: 4,
+            workers: 4,
+            lb_devices: 4,
+            sb_epochs: 8,
+            sb_peak_lr: 0.1,
+            lb_epochs: 8,
+            lb_peak_lr: 0.4,
+            phase1_max_epochs: 10,
+            phase1_stop_acc: 0.6,
+            phase2_epochs: 3,
+            phase2_peak_lr: 0.04,
+            swa_cycles: 3,
+            swa_cycle_epochs: 1,
+            ..base.clone()
+        },
         // Table 1 analogue: B1=512 over 8 workers, B2=64, τ scaled
         "cifar10sim" => base,
         // Table 2 analogue: 100 classes; the paper stops phase 1 earlier
         // (τ=90%) and runs a shorter phase 2 (10 epochs -> 3 here)
         "cifar100sim" => ExperimentConfig {
+            num_classes: 100,
             phase1_stop_acc: 0.30, // 100 classes: plateau train acc is lower
             phase2_epochs: 4,
             phase2_peak_lr: 0.05,
@@ -78,6 +112,8 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         // Table 3 analogue: 2 phase-2 workers, each itself data-parallel
         // over 2 devices; LB = 2x batch + 2x LR of SB; piecewise schedule
         "imagenetsim" => ExperimentConfig {
+            model_width: 12,
+            num_classes: 64,
             n_train: 2048,
             n_test: 512,
             workers: 2,
@@ -97,7 +133,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         },
         other => {
             return Err(Error::config(format!(
-                "unknown preset '{other}' (tiny|cifar10sim|cifar100sim|imagenetsim)"
+                "unknown preset '{other}' (tiny|native|cifar10sim|cifar100sim|imagenetsim)"
             )))
         }
     };

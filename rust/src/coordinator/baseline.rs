@@ -6,6 +6,7 @@ use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress
 use crate::metrics::RunOutcome;
 use crate::model::ParamSet;
 use crate::optim::Schedule;
+use crate::runtime::Backend;
 use crate::sim::ClusterClock;
 use crate::util::Result;
 

@@ -12,6 +12,7 @@ use crate::data::{AugmentSpec, Batcher, EpochSampler};
 use crate::metrics::RunOutcome;
 use crate::model::ParamSet;
 use crate::optim::Schedule;
+use crate::runtime::Backend;
 use crate::sim::ClusterClock;
 use crate::util::{Error, Result, Rng};
 

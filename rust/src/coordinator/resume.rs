@@ -21,6 +21,7 @@ use std::path::{Path, PathBuf};
 use super::swap::{SwapConfig, SwapResult};
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
 use crate::model::{load_params, save_params, ParamSet};
+use crate::runtime::Backend;
 use crate::sim::ClusterClock;
 use crate::util::{Error, Json, Result};
 

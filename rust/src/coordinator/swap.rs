@@ -12,7 +12,7 @@
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
 use crate::model::{BnState, ParamSet};
 use crate::optim::Schedule;
-use crate::runtime::BatchStats;
+use crate::runtime::{Backend, BatchStats};
 use crate::sim::ClusterClock;
 use crate::util::{Error, Result};
 
@@ -173,14 +173,8 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
     let final_params = ParamSet::average(&worker_params)?;
     let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
     let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
-    crate::info!(
-        "phase 3 done: test acc {:.4} (workers before avg: {:.4}), cluster {:.3}s",
-        final_stats.accuracy1(),
-        worker_stats.iter().map(|s| s.accuracy1()).sum::<f64>() / cfg.workers as f64,
-        clock.seconds
-    );
 
-    Ok(SwapResult {
+    let result = SwapResult {
         phase1: p1,
         phase1_seconds,
         phase2_seconds,
@@ -194,7 +188,17 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
         snapshots,
         phase1_params,
         phase1_snapshots,
-    })
+    };
+    // one source of truth for the "before averaging" accuracy: the
+    // SwapResult accessor (previously this log divided by cfg.workers
+    // while the accessor divided by worker_stats.len())
+    crate::info!(
+        "phase 3 done: test acc {:.4} (workers before avg: {:.4}), cluster {:.3}s",
+        result.final_stats.accuracy1(),
+        result.before_avg_acc1(),
+        result.clock.seconds
+    );
+    Ok(result)
 }
 
 impl SwapResult {

@@ -6,13 +6,14 @@ use super::allreduce;
 use crate::data::{sequential_batches, AugmentSpec, Batcher, Dataset, EpochSampler, shard};
 use crate::model::{BnState, ParamSet};
 use crate::optim::{Schedule, SgdConfig, SgdOptimizer};
-use crate::runtime::{BatchStats, Engine};
+use crate::runtime::{Backend, BatchStats};
 use crate::sim::{ClusterClock, CostModel};
 use crate::util::{Error, Result, Rng};
 
-/// Everything a training run needs, borrowed once.
+/// Everything a training run needs, borrowed once. The execution backend
+/// is a trait object, so the same loop drives the native and XLA engines.
 pub struct TrainEnv<'a> {
-    pub engine: &'a Engine,
+    pub engine: &'a dyn Backend,
     pub cost: &'a CostModel,
     pub train: &'a Dataset,
     pub test: &'a Dataset,

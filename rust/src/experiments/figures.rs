@@ -9,6 +9,7 @@ use crate::landscape::{eval_grid, GridResult, GridSpec, Plane};
 use crate::metrics::SeriesLog;
 use crate::model::ParamSet;
 use crate::optim::{imagenet_piecewise, Schedule};
+use crate::runtime::Backend;
 use crate::sim::ClusterClock;
 use crate::util::Result;
 

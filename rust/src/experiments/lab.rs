@@ -5,13 +5,13 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::{BaselineConfig, SwaConfig, SwapConfig, TrainEnv};
 use crate::data::{Dataset, Generator, SynthSpec};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::sim::{CostModel, DeviceModel, NetModel};
 use crate::util::Result;
 
 pub struct Lab {
     pub cfg: ExperimentConfig,
-    pub engine: Engine,
+    pub engine: Box<dyn Backend>,
     pub cost: CostModel,
     pub train: Dataset,
     pub test: Dataset,
@@ -20,7 +20,7 @@ pub struct Lab {
 impl Lab {
     pub fn new(cfg: ExperimentConfig) -> Result<Lab> {
         cfg.validate()?;
-        let engine = Engine::load(cfg.artifacts_dir())?;
+        let engine = cfg.load_backend()?;
         let m = engine.manifest().clone();
         let gen = Generator::new(SynthSpec::for_preset(
             m.model.num_classes,
@@ -31,8 +31,9 @@ impl Lab {
         let test = gen.sample(cfg.n_test, 11);
         let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
         crate::info!(
-            "lab ready: preset={} params={} train={} test={}",
+            "lab ready: preset={} backend={} params={} train={} test={}",
             cfg.preset,
+            engine.name(),
             m.num_params,
             train.n,
             test.n
@@ -42,7 +43,7 @@ impl Lab {
 
     pub fn env(&self) -> TrainEnv<'_> {
         TrainEnv {
-            engine: &self.engine,
+            engine: self.engine.as_ref(),
             cost: &self.cost,
             train: &self.train,
             test: &self.test,
@@ -116,5 +117,21 @@ impl Lab {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(self.cfg.runs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn lab_builds_native_backend_without_artifacts() {
+        let lab = Lab::new(preset("tiny").unwrap()).unwrap();
+        assert_eq!(lab.engine.name(), "native");
+        assert_eq!(lab.engine.manifest().model.width, 4);
+        assert_eq!(lab.train.n, 96);
+        assert_eq!(lab.spe(1), 12);
+        assert_eq!(lab.env().exec_batch, 8);
     }
 }

@@ -2,13 +2,23 @@
 //! Large-Batch Training That Generalizes Well" (Gupta, Akle Serrano,
 //! DeCoste — ICLR 2020).
 //!
-//! Three layers (DESIGN.md):
-//! * L3 (this crate): the SWAP coordinator — phase orchestration, gradient
-//!   all-reduce, independent workers, weight averaging, BN recompute,
-//!   schedules, data pipeline, metrics, virtual-cluster clock.
-//! * L2/L1 (python/, build-time only): JAX ResNet9s + Pallas kernels,
-//!   AOT-lowered to HLO text artifacts.
-//! * runtime: PJRT CPU client executing the artifacts.
+//! Layers:
+//! * **coordinator** (L3): the SWAP algorithm — phase orchestration,
+//!   gradient all-reduce, independent workers, weight averaging, BN
+//!   recompute, schedules, data pipeline, metrics, virtual-cluster clock.
+//! * **runtime**: pluggable execution backends behind [`runtime::Backend`]:
+//!   - `native` (default): pure-Rust ResNet9s forward/backward — hermetic,
+//!     deterministic, no external toolchain; what `cargo test` exercises
+//!     end-to-end.
+//!   - `xla` (cargo feature `xla`): PJRT client executing AOT HLO
+//!     artifacts lowered from the JAX/Pallas model (python/, build-time
+//!     only). The checked-in `xla` dependency is a compile-only stub;
+//!     see rust/vendor/xla/README.md.
+//!
+//! Backend selection is a config knob (`--set backend=native|xla`); the
+//! numerical contract between backends is pinned by
+//! rust/tests/kernel_parity.rs against fixtures generated from the python
+//! reference kernels.
 pub mod analysis;
 pub mod bench;
 pub mod cli;

@@ -1,8 +1,9 @@
 //! `swap-train` — the L3 leader binary. Dispatches CLI subcommands onto
 //! the experiment drivers. See `swap-train help` / cli::HELP.
 
-use anyhow::Result;
 use swap::cli::{default_preset_for, Args, HELP};
+use swap::runtime::Backend;
+use swap::util::Result;
 use swap::coordinator::{run_baseline, run_local_sgd, run_swa, run_swap, LocalSgdConfig};
 use swap::experiments::{figures, tables, Lab};
 use swap::landscape::GridSpec;

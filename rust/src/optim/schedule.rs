@@ -25,6 +25,15 @@ pub enum Schedule {
     /// Linear interpolation between (step, lr) breakpoints; clamped at the
     /// ends. Breakpoints must be strictly increasing in step.
     Piecewise(Vec<(usize, f32)>),
+    /// Linear warmup 0→peak over `warmup` steps, then half-cosine decay
+    /// peak→`end_lr` until `total`; clamped at `end_lr` afterwards (the
+    /// standard warmup-cosine schedule, an SWA/large-batch staple).
+    Cosine {
+        peak: f32,
+        warmup: usize,
+        total: usize,
+        end_lr: f32,
+    },
     /// Sawtooth cycles for SWA: within each cycle of `period` steps the LR
     /// decays linearly high→low, then jumps back to high.
     Cyclic {
@@ -65,6 +74,21 @@ impl Schedule {
                     }
                 }
                 points.last().unwrap().1
+            }
+            Schedule::Cosine { peak, warmup, total, end_lr } => {
+                let s = step.min(*total) as f32;
+                let t = *total as f32;
+                // warmup longer than the schedule would otherwise cap lr
+                // below peak forever and never reach end_lr
+                let w = (*warmup as f32).min(t);
+                if s < w {
+                    peak * s / w.max(1.0)
+                } else if t > w {
+                    let frac = ((s - w) / (t - w)).clamp(0.0, 1.0);
+                    end_lr + (peak - end_lr) * 0.5 * (1.0 + (std::f32::consts::PI * frac).cos())
+                } else {
+                    *peak
+                }
             }
             Schedule::Cyclic { high, low, period } => {
                 let pos = (step % period.max(&1)) as f32;
@@ -109,6 +133,12 @@ impl Schedule {
             Schedule::Piecewise(pts) => {
                 Schedule::Piecewise(pts.iter().map(|(s, l)| (*s, l * k)).collect())
             }
+            Schedule::Cosine { peak, warmup, total, end_lr } => Schedule::Cosine {
+                peak: peak * k,
+                warmup: *warmup,
+                total: *total,
+                end_lr: end_lr * k,
+            },
             Schedule::Cyclic { high, low, period } => Schedule::Cyclic {
                 high: high * k,
                 low: low * k,
@@ -167,6 +197,34 @@ mod tests {
             assert!(s.lr(t + 1) <= s.lr(t));
         }
         assert!(s.series(31).iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn cosine_warmup_decay_shape() {
+        let s = Schedule::Cosine { peak: 1.0, warmup: 10, total: 50, end_lr: 0.1 };
+        assert_eq!(s.lr(0), 0.0);
+        assert!((s.lr(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        // halfway through the decay: mean of peak and end
+        assert!((s.lr(30) - 0.55).abs() < 1e-4);
+        assert!((s.lr(50) - 0.1).abs() < 1e-6);
+        assert!((s.lr(500) - 0.1).abs() < 1e-6); // clamped past the end
+        // monotone up through warmup, down through decay
+        for t in 0..9 {
+            assert!(s.lr(t + 1) >= s.lr(t));
+        }
+        for t in 10..49 {
+            assert!(s.lr(t + 1) <= s.lr(t));
+        }
+        // scaling scales both ends
+        let d = s.scaled(2.0);
+        assert!((d.lr(10) - 2.0).abs() < 1e-6);
+        assert!((d.lr(50) - 0.2).abs() < 1e-6);
+        // degenerate warmup > total: clamped so peak is still reached
+        let g = Schedule::Cosine { peak: 1.0, warmup: 10, total: 5, end_lr: 0.0 };
+        assert!((g.lr(2) - 0.4).abs() < 1e-6);
+        assert!((g.lr(5) - 1.0).abs() < 1e-6);
+        assert!((g.lr(100) - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,55 @@
+//! The execution-backend contract.
+//!
+//! The coordinator (trainer / SWAP / baselines / landscape) drives training
+//! exclusively through this trait, so the same Algorithm-1 code runs on
+//! * the **native** backend (`runtime::native`) — pure-Rust ResNet9s
+//!   forward/backward, hermetic, the default; and
+//! * the **PJRT/XLA** backend (`runtime::engine`, cargo feature `xla`) —
+//!   executes the AOT HLO artifacts exported by `python -m compile.aot`.
+//!
+//! The four entry points mirror the four per-preset executables of the
+//! artifact contract (`grad_b*`, `train_b*`, `eval_b*`, `bnstats_b*`);
+//! `manifest()` pins tensor order and model metadata for both.
+
+use super::manifest::Manifest;
+use super::types::{BatchStats, GradResult, HostBatch};
+use crate::tensor::Tensor;
+use crate::util::Result;
+
+/// A model-execution engine: gradients, fused train steps, evaluation and
+/// batch-norm moment recomputation over host tensors.
+pub trait Backend {
+    /// Short backend identifier ("native", "xla") for logs.
+    fn name(&self) -> &'static str;
+
+    /// The layout contract: parameter/BN tensor order + model metadata.
+    fn manifest(&self) -> &Manifest;
+
+    /// Phase-1 entry point: gradients of the *mean* batch loss in manifest
+    /// parameter order, plus loss/accuracy statistics of the batch.
+    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult>;
+
+    /// Phase-2 entry point: fused gradient + Nesterov-SGD update (coupled
+    /// weight decay, constants from the manifest). Updates `params` and
+    /// `momentum` in place.
+    fn train_step(
+        &self,
+        params: &mut [Tensor],
+        momentum: &mut [Tensor],
+        batch: &HostBatch,
+        lr: f32,
+    ) -> Result<BatchStats>;
+
+    /// Evaluation with externally supplied running BN statistics
+    /// (mean/var pairs in manifest `bn_stats` order).
+    fn eval_batch(
+        &self,
+        params: &[Tensor],
+        bn_stats: &[Tensor],
+        batch: &HostBatch,
+    ) -> Result<BatchStats>;
+
+    /// Phase-3 entry point: batch-norm moments (mean, biased var per conv
+    /// layer) of one batch, in manifest `bn_stats` order.
+    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>>;
+}

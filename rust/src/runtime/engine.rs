@@ -1,85 +1,22 @@
-//! PJRT engine: loads AOT HLO-text artifacts, compiles them once per
-//! process, and exposes typed entry points (grad / train / eval / bnstats)
-//! over host tensors. This is the only module that executes XLA code; the
-//! coordinator above it never sees a literal.
+//! PJRT engine (cargo feature `xla`): loads AOT HLO-text artifacts,
+//! compiles them once per process, and exposes the `Backend` entry points
+//! (grad / train / eval / bnstats) over host tensors. This is the only
+//! module that executes XLA code; the coordinator above it never sees a
+//! literal.
+//!
+//! Pattern: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
-use super::literal::{
-    i32s_to_literal, images_to_literal, literal_f32, literal_i32, literal_to_tensor, lr_literal,
-    tensor_to_literal,
-};
+use super::backend::Backend;
+use super::literal::{batch_to_literals, literal_f32, literal_i32, literal_to_tensor, lr_literal, tensor_to_literal};
 use super::manifest::Manifest;
+use super::types::{BatchStats, GradResult, HostBatch};
 use crate::tensor::Tensor;
 use crate::util::{Error, Result};
-
-/// One mini-batch on the host, NHWC images + labels.
-#[derive(Debug, Clone)]
-pub struct HostBatch {
-    pub images: Vec<f32>,
-    pub labels: Vec<i32>,
-    pub batch: usize,
-    pub image_size: usize,
-}
-
-impl HostBatch {
-    pub fn to_literals(&self) -> Result<(xla::Literal, xla::Literal)> {
-        Ok((
-            images_to_literal(&self.images, self.batch, self.image_size)?,
-            i32s_to_literal(&self.labels),
-        ))
-    }
-}
-
-/// Loss/accuracy statistics returned by every executable.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct BatchStats {
-    pub sum_loss: f64,
-    pub correct1: i64,
-    pub correct5: i64,
-    pub examples: i64,
-}
-
-impl BatchStats {
-    pub fn accumulate(&mut self, other: &BatchStats) {
-        self.sum_loss += other.sum_loss;
-        self.correct1 += other.correct1;
-        self.correct5 += other.correct5;
-        self.examples += other.examples;
-    }
-
-    pub fn mean_loss(&self) -> f64 {
-        if self.examples == 0 {
-            0.0
-        } else {
-            self.sum_loss / self.examples as f64
-        }
-    }
-
-    pub fn accuracy1(&self) -> f64 {
-        if self.examples == 0 {
-            0.0
-        } else {
-            self.correct1 as f64 / self.examples as f64
-        }
-    }
-
-    pub fn accuracy5(&self) -> f64 {
-        if self.examples == 0 {
-            0.0
-        } else {
-            self.correct5 as f64 / self.examples as f64
-        }
-    }
-}
-
-/// Gradient result of `grad_b*`.
-pub struct GradResult {
-    pub grads: Vec<Tensor>,
-    pub stats: BatchStats,
-}
 
 /// Compiled-executable cache + typed call surface.
 pub struct Engine {
@@ -161,12 +98,22 @@ impl Engine {
             examples: batch as i64,
         })
     }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
 
     /// Phase-1 gradients: `grad_b{B}`.
-    pub fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
+    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
         let key = format!("grad_b{}", batch.batch);
         let mut args = self.params_to_literals(params)?;
-        let (img, lab) = batch.to_literals()?;
+        let (img, lab) = batch_to_literals(batch)?;
         args.push(img);
         args.push(lab);
         let outs = self.run_raw(&key, &args)?;
@@ -187,7 +134,7 @@ impl Engine {
     }
 
     /// Phase-2 fused step: `train_b{B}`. Updates params/momentum in place.
-    pub fn train_step(
+    fn train_step(
         &self,
         params: &mut [Tensor],
         momentum: &mut [Tensor],
@@ -203,7 +150,7 @@ impl Engine {
                 .map(tensor_to_literal)
                 .collect::<Result<Vec<_>>>()?,
         );
-        let (img, lab) = batch.to_literals()?;
+        let (img, lab) = batch_to_literals(batch)?;
         args.push(img);
         args.push(lab);
         args.push(lr_literal(lr)?);
@@ -225,7 +172,7 @@ impl Engine {
     }
 
     /// Evaluation with running BN stats: `eval_b{B}`.
-    pub fn eval_batch(
+    fn eval_batch(
         &self,
         params: &[Tensor],
         bn_stats: &[Tensor],
@@ -246,7 +193,7 @@ impl Engine {
                 .map(tensor_to_literal)
                 .collect::<Result<Vec<_>>>()?,
         );
-        let (img, lab) = batch.to_literals()?;
+        let (img, lab) = batch_to_literals(batch)?;
         args.push(img);
         args.push(lab);
         let outs = self.run_raw(&key, &args)?;
@@ -254,10 +201,10 @@ impl Engine {
     }
 
     /// BN moments of one batch: `bnstats_b{B}` (phase 3).
-    pub fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
+    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
         let key = format!("bnstats_b{}", batch.batch);
         let mut args = self.params_to_literals(params)?;
-        let (img, _lab) = batch.to_literals()?;
+        let (img, _lab) = batch_to_literals(batch)?;
         args.push(img);
         let outs = self.run_raw(&key, &args)?;
         if outs.len() != self.manifest.bn_stats.len() {

@@ -1,8 +1,18 @@
 //! Host `Tensor` ⇄ XLA `Literal` conversion, plus small scalar helpers.
 //! This is the only file where tensor data crosses the PJRT boundary.
 
+use super::types::HostBatch;
 use crate::tensor::Tensor;
 use crate::util::{Error, Result};
+
+/// A host batch as (images, labels) literals — the trailing inputs of every
+/// executable.
+pub fn batch_to_literals(hb: &HostBatch) -> Result<(xla::Literal, xla::Literal)> {
+    Ok((
+        images_to_literal(&hb.images, hb.batch, hb.image_size)?,
+        i32s_to_literal(&hb.labels),
+    ))
+}
 
 /// Host tensor -> literal with the tensor's shape.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {

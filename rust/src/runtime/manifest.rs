@@ -84,7 +84,10 @@ impl Manifest {
         let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
             Error::Io(std::io::Error::new(
                 e.kind(),
-                format!("{}: {e} (run `make artifacts`)", dir.display()),
+                format!(
+                    "{}: {e} (generate artifacts with `python -m compile.aot`)",
+                    dir.display()
+                ),
             ))
         })?;
         Self::parse(&text, dir)

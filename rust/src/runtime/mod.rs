@@ -1,12 +1,26 @@
-//! Runtime layer: the xla-crate PJRT client wrapper that loads and executes
-//! the AOT artifacts (HLO text) produced by `make artifacts`.
+//! Runtime layer: pluggable execution backends behind the `Backend` trait.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! * `native`  — pure-Rust ResNet9s forward/backward (the default; no
+//!   artifacts or XLA toolchain required, hermetically testable).
+//! * `engine`  — PJRT client executing the AOT HLO artifacts produced by
+//!   `python -m compile.aot` (cargo feature `xla`; the checked-in `xla`
+//!   dependency is a compile-only stub, see rust/vendor/xla/README.md).
+//!
+//! `manifest` is the layout contract both backends share: it pins the
+//! order of parameter / BN-stat tensors crossing the backend boundary.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod literal;
 pub mod manifest;
+pub mod native;
+pub mod types;
 
-pub use engine::{BatchStats, Engine, GradResult, HostBatch};
+pub use backend::Backend;
+#[cfg(feature = "xla")]
+pub use engine::Engine;
 pub use manifest::{Manifest, ModelMeta, TensorSpec};
+pub use native::{NativeBackend, NativeSpec};
+pub use types::{BatchStats, GradResult, HostBatch};

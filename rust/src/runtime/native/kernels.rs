@@ -1,0 +1,563 @@
+//! Pure-Rust kernels for the native backend: im2col 3x3 convolution as
+//! matmul, batch-norm train/eval (+ backward), max pooling, softmax
+//! cross-entropy and the Nesterov-SGD update.
+//!
+//! Each kernel is the host twin of a python reference oracle in
+//! `python/compile/kernels/ref.py` / `python/compile/model.py`;
+//! `rust/tests/kernel_parity.rs` pins them against checked-in JSON fixtures
+//! generated from those oracles (tolerance 1e-4).
+//!
+//! Activations are flat NHWC `Vec<f32>` viewed as row-major (B*H*W, C)
+//! matrices, so convolution is `im2col` + one matmul — the same lowering
+//! the Pallas/MXU path uses.
+
+pub const BN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// matmul family (f32, accumulate in f32; ikj loop order for cache locality)
+// ---------------------------------------------------------------------------
+
+/// out(m,n) = a(m,k) @ b(k,n)
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul.
+pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    let mut out = vec![0.0f32; m * n];
+    for row in 0..r {
+        let arow = &a[row * m..(row + 1) * m];
+        let brow = &b[row * n..(row + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out(m,n) = a @ bᵀ where a is (m,k) and b is (n,k) — the dX matmul.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im for 3x3 SAME convolution
+// ---------------------------------------------------------------------------
+
+/// (B,H,W,C) -> (B*H*W, 9*C) patches; patch channel order is (dy, dx, c)
+/// row-major, matching the (9*Cin, Cout) conv weight layout of
+/// `python/compile/model.py::im2col`.
+pub fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    let mut out = vec![0.0f32; b * h * w * 9 * c];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let row = ((bi * h + y) * w + xx) * 9 * c;
+                for dy in 0..3 {
+                    let iy = y + dy;
+                    if iy < 1 || iy > h {
+                        continue; // zero padding row
+                    }
+                    let iy = iy - 1;
+                    for dx in 0..3 {
+                        let ix = xx + dx;
+                        if ix < 1 || ix > w {
+                            continue; // zero padding col
+                        }
+                        let ix = ix - 1;
+                        let src = ((bi * h + iy) * w + ix) * c;
+                        let dst = row + (dy * 3 + dx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of `im2col`: scatter patch gradients (B*H*W, 9*C) back onto the
+/// input image gradient (B,H,W,C).
+pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    debug_assert_eq!(dp.len(), b * h * w * 9 * c);
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let row = ((bi * h + y) * w + xx) * 9 * c;
+                for dy in 0..3 {
+                    let iy = y + dy;
+                    if iy < 1 || iy > h {
+                        continue;
+                    }
+                    let iy = iy - 1;
+                    for dx_off in 0..3 {
+                        let ix = xx + dx_off;
+                        if ix < 1 || ix > w {
+                            continue;
+                        }
+                        let ix = ix - 1;
+                        let dst = ((bi * h + iy) * w + ix) * c;
+                        let src = row + (dy * 3 + dx_off) * c;
+                        for ci in 0..c {
+                            dx[dst + ci] += dp[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// batch norm (batch statistics in train mode; biased variance)
+// ---------------------------------------------------------------------------
+
+/// Forward with batch statistics over `rows` = B*H*W samples of `c`
+/// channels. Returns (y, xhat, mean, var, invstd); `y` is pre-ReLU.
+pub fn bn_train(
+    u: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(u.len(), rows * c);
+    let inv_n = 1.0 / rows as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for r in 0..rows {
+        let urow = &u[r * c..(r + 1) * c];
+        for (m, &v) in mean.iter_mut().zip(urow) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m *= inv_n;
+    }
+    for r in 0..rows {
+        let urow = &u[r * c..(r + 1) * c];
+        for ((vv, &m), &v) in var.iter_mut().zip(&mean).zip(urow) {
+            let d = v - m;
+            *vv += d * d;
+        }
+    }
+    for vv in var.iter_mut() {
+        *vv *= inv_n;
+    }
+    let invstd: Vec<f32> = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
+    let mut xhat = vec![0.0f32; rows * c];
+    let mut y = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let i = r * c + ci;
+            let xh = (u[i] - mean[ci]) * invstd[ci];
+            xhat[i] = xh;
+            y[i] = gamma[ci] * xh + beta[ci];
+        }
+    }
+    (y, xhat, mean, var, invstd)
+}
+
+/// Backward through train-mode batch norm. `dy` is the gradient w.r.t. the
+/// pre-ReLU output; returns (du, dgamma, dbeta).
+pub fn bn_train_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    invstd: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), rows * c);
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let i = r * c + ci;
+            dgamma[ci] += dy[i] * xhat[i];
+            dbeta[ci] += dy[i];
+        }
+    }
+    let inv_n = 1.0 / rows as f32;
+    // du = gamma * invstd / N * (N*dy - dbeta - xhat * dgamma)
+    let scale: Vec<f32> = gamma
+        .iter()
+        .zip(invstd)
+        .map(|(g, s)| g * s * inv_n)
+        .collect();
+    let n = rows as f32;
+    let mut du = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let i = r * c + ci;
+            du[i] = scale[ci] * (n * dy[i] - dbeta[ci] - xhat[i] * dgamma[ci]);
+        }
+    }
+    (du, dgamma, dbeta)
+}
+
+/// Forward with externally supplied running statistics (evaluation mode).
+pub fn bn_eval(
+    u: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    rows: usize,
+    c: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(u.len(), rows * c);
+    let scale: Vec<f32> = gamma
+        .iter()
+        .zip(var)
+        .map(|(g, v)| g / (v + BN_EPS).sqrt())
+        .collect();
+    let mut y = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let i = r * c + ci;
+            y[i] = (u[i] - mean[ci]) * scale[ci] + beta[ci];
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// ReLU
+// ---------------------------------------------------------------------------
+
+/// a = max(y, 0) as a new buffer (y is kept for the backward mask).
+pub fn relu(y: &[f32]) -> Vec<f32> {
+    y.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// dy = da * [y > 0]
+pub fn relu_bwd(da: &[f32], y: &[f32]) -> Vec<f32> {
+    da.iter()
+        .zip(y)
+        .map(|(&d, &v)| if v > 0.0 { d } else { 0.0 })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// max pooling
+// ---------------------------------------------------------------------------
+
+/// 2x2/stride-2 max pool of (B,H,W,C). Returns the pooled activations and
+/// the flat input index of each window's max (first max wins on ties).
+pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut y = vec![0.0f32; b * ho * wo * c];
+    let mut idx = vec![0u32; b * ho * wo * c];
+    for bi in 0..b {
+        for py in 0..ho {
+            for px in 0..wo {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0usize;
+                    for oy in 0..2 {
+                        for ox in 0..2 {
+                            let i = ((bi * h + 2 * py + oy) * w + 2 * px + ox) * c + ci;
+                            if x[i] > best {
+                                best = x[i];
+                                best_i = i;
+                            }
+                        }
+                    }
+                    let o = ((bi * ho + py) * wo + px) * c + ci;
+                    y[o] = best;
+                    idx[o] = best_i as u32;
+                }
+            }
+        }
+    }
+    (y, idx)
+}
+
+/// Route pooled gradients back to the argmax positions.
+pub fn maxpool2_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), idx.len());
+    let mut dx = vec![0.0f32; in_len];
+    for (&d, &i) in dy.iter().zip(idx) {
+        dx[i as usize] += d;
+    }
+    dx
+}
+
+/// Global max pool over the spatial dims of (B,HW,C) -> (B,C); also returns
+/// flat argmax indices for the backward pass.
+pub fn global_maxpool(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert_eq!(x.len(), b * hw * c);
+    let mut y = vec![f32::NEG_INFINITY; b * c];
+    let mut idx = vec![0u32; b * c];
+    for bi in 0..b {
+        for s in 0..hw {
+            for ci in 0..c {
+                let i = (bi * hw + s) * c + ci;
+                let o = bi * c + ci;
+                if x[i] > y[o] {
+                    y[o] = x[i];
+                    idx[o] = i as u32;
+                }
+            }
+        }
+    }
+    (y, idx)
+}
+
+pub fn global_maxpool_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    maxpool2_bwd(dy, idx, in_len)
+}
+
+// ---------------------------------------------------------------------------
+// softmax cross-entropy (sum over the batch) + top-1/top-5 counts
+// ---------------------------------------------------------------------------
+
+/// Returns (sum_loss, ncorrect1, ncorrect5, d(sum_loss)/dlogits).
+/// Top-k correctness uses the strict rank of the true logit, i.e. ties do
+/// not count against the true class — the `ref.py::cross_entropy` rule.
+pub fn cross_entropy(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    k: usize,
+) -> (f64, i64, i64, Vec<f32>) {
+    debug_assert_eq!(logits.len(), b * k);
+    debug_assert_eq!(labels.len(), b);
+    let mut sum_loss = 0.0f64;
+    let (mut c1, mut c5) = (0i64, 0i64);
+    let mut dl = vec![0.0f32; b * k];
+    for i in 0..b {
+        let row = &logits[i * k..(i + 1) * k];
+        let y = labels[i] as usize;
+        debug_assert!(y < k);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|&l| (l - m).exp()).sum();
+        let lse = z.ln() + m;
+        let t = row[y];
+        sum_loss += (lse - t) as f64;
+        let rank = row.iter().filter(|&&l| l > t).count();
+        if rank < 1 {
+            c1 += 1;
+        }
+        if rank < 5 {
+            c5 += 1;
+        }
+        let drow = &mut dl[i * k..(i + 1) * k];
+        for (d, &l) in drow.iter_mut().zip(row) {
+            *d = (l - m).exp() / z;
+        }
+        drow[y] -= 1.0;
+    }
+    (sum_loss, c1, c5, dl)
+}
+
+// ---------------------------------------------------------------------------
+// Nesterov SGD with coupled weight decay (the L1 sgd kernel's update rule)
+// ---------------------------------------------------------------------------
+
+/// g' = g + wd*p;  m' = mu*m + g';  p' = p - lr*(g' + mu*m')
+pub fn sgd_nesterov_inplace(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32, wd: f32) {
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), g.len());
+    for i in 0..p.len() {
+        let g2 = g[i] + wd * p[i];
+        let m2 = mu * m[i] + g2;
+        p[i] -= lr * (g2 + mu * m2);
+        m[i] = m2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity_and_shapes() {
+        // (2,2) @ I = same
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let eye = [1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a.to_vec());
+        // (1,3)@(3,2)
+        let out = matmul(&[1.0, 2.0, 3.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 1, 3, 2);
+        assert_eq!(out, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_transposed_variants_agree() {
+        // random-ish small case cross-checked against plain matmul
+        let a: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect(); // (2,3)
+        let b: Vec<f32> = (0..8).map(|i| 1.0 - i as f32 * 0.25).collect(); // (2,4)
+        // aᵀ(3,2) @ b(2,4) via matmul_tn(a, b, r=2, m=3, n=4)
+        let tn = matmul_tn(&a, &b, 2, 3, 4);
+        let mut at = vec![0.0f32; 6];
+        for i in 0..2 {
+            for j in 0..3 {
+                at[j * 2 + i] = a[i * 3 + j];
+            }
+        }
+        assert_eq!(tn, matmul(&at, &b, 3, 2, 4));
+        // a(2,3) @ cᵀ where c is (4,3): matmul_nt(a, c, 2, 3, 4)
+        let c: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        let nt = matmul_nt(&a, &c, 2, 3, 4);
+        let mut ct = vec![0.0f32; 12];
+        for i in 0..4 {
+            for j in 0..3 {
+                ct[j * 4 + i] = c[i * 3 + j];
+            }
+        }
+        let want = matmul(&a, &ct, 2, 3, 4);
+        for (x, y) in nt.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn im2col_center_tap_is_identity() {
+        // 1x1 channel: the (dy=1,dx=1) column equals the input pixel
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect(); // (1,3,3,1)
+        let p = im2col(&x, 1, 3, 3, 1);
+        assert_eq!(p.len(), 9 * 9);
+        for pix in 0..9 {
+            assert_eq!(p[pix * 9 + 4], x[pix]);
+        }
+        // top-left output pixel has zero padding at (dy=0,dx=0)
+        assert_eq!(p[0], 0.0);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — adjointness on a small case
+        let (b, h, w, c) = (1, 4, 3, 2);
+        let n = b * h * w * c;
+        let x: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let yv: Vec<f32> = (0..n * 9).map(|i| ((i * 5 + 1) % 13) as f32 - 6.0).collect();
+        let px = im2col(&x, b, h, w, c);
+        let lhs: f64 = px.iter().zip(&yv).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let aty = col2im(&yv, b, h, w, c);
+        let rhs: f64 = x.iter().zip(&aty).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn bn_train_normalizes() {
+        let u = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let (y, xhat, mean, var, invstd) = bn_train(&u, &[1.0, 1.0], &[0.0, 0.0], 4, 2);
+        assert!((mean[0] - 2.5).abs() < 1e-6);
+        assert!((mean[1] - 25.0).abs() < 1e-6);
+        assert!((var[0] - 1.25).abs() < 1e-5);
+        // normalized output has ~zero mean, ~unit variance per channel
+        let m0: f32 = (0..4).map(|r| y[r * 2]).sum::<f32>() / 4.0;
+        assert!(m0.abs() < 1e-5);
+        let v0: f32 = (0..4).map(|r| y[r * 2] * y[r * 2]).sum::<f32>() / 4.0;
+        assert!((v0 - 1.0).abs() < 1e-3);
+        assert_eq!(xhat.len(), 8);
+        assert!(invstd[0] > 0.0);
+    }
+
+    #[test]
+    fn bn_bwd_gradients_sum_to_zero() {
+        // sum over the batch of du must vanish (mean subtraction)
+        let u: Vec<f32> = (0..12).map(|i| (i as f32).cos() * 2.0).collect();
+        let gamma = [0.7f32, -1.2, 0.4];
+        let beta = [0.1f32, 0.0, -0.3];
+        let (_y, xhat, _mean, _var, invstd) = bn_train(&u, &gamma, &beta, 4, 3);
+        let dy: Vec<f32> = (0..12).map(|i| (i as f32 * 1.7).sin()).collect();
+        let (du, dgamma, dbeta) = bn_train_bwd(&dy, &xhat, &invstd, &gamma, 4, 3);
+        for ci in 0..3 {
+            let s: f32 = (0..4).map(|r| du[r * 3 + ci]).sum();
+            assert!(s.abs() < 1e-4, "channel {ci}: du sums to {s}");
+        }
+        assert_eq!(dgamma.len(), 3);
+        assert_eq!(dbeta.len(), 3);
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        #[rustfmt::skip]
+        let x = [1.0f32, 5.0,
+                 3.0, 2.0]; // (1,2,2,1)
+        let (y, idx) = maxpool2(&x, 1, 2, 2, 1);
+        assert_eq!(y, vec![5.0]);
+        let dx = maxpool2_bwd(&[2.0], &idx, 4);
+        assert_eq!(dx, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn global_maxpool_picks_channel_max() {
+        // (1, 3, 2): channel 0 max at s=2, channel 1 max at s=0
+        let x = [0.0f32, 9.0, 1.0, -1.0, 7.0, 3.0];
+        let (y, idx) = global_maxpool(&x, 1, 3, 2);
+        assert_eq!(y, vec![7.0, 9.0]);
+        let dx = global_maxpool_bwd(&[1.0, 1.0], &idx, 6);
+        assert_eq!(dx, vec![0.0, 1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let (loss, c1, c5, dl) = cross_entropy(&[0.0; 8], &[3, 1], 2, 4);
+        // uniform over 4 classes: loss = 2*ln(4); ties -> rank 0 -> correct
+        assert!((loss - 2.0 * (4.0f64).ln()).abs() < 1e-5);
+        assert_eq!(c1, 2);
+        assert_eq!(c5, 2);
+        // gradient rows sum to zero
+        for i in 0..2 {
+            let s: f32 = dl[i * 4..(i + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        assert!((dl[3] - (0.25 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_matches_host_optimizer_rule() {
+        let mut p = [1.0f32];
+        let mut m = [0.0f32];
+        sgd_nesterov_inplace(&mut p, &mut m, &[0.3], 0.2, 0.9, 0.01);
+        // g2 = 0.31, m2 = 0.31, p -= 0.2*(0.31 + 0.279)
+        assert!((m[0] - 0.31).abs() < 1e-6);
+        assert!((p[0] - (1.0 - 0.2 * (0.31 + 0.9 * 0.31))).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,385 @@
+//! The **native** execution backend: pure-Rust ResNet9s forward/backward
+//! (`model`), flat-NHWC kernels (`kernels`), and an in-memory manifest
+//! builder — no AOT artifacts, no XLA toolchain, bitwise-deterministic.
+//!
+//! This is the default backend: it makes the whole SWAP coordinator
+//! hermetically testable (`cargo test` runs end-to-end SWAP on synthetic
+//! data with it) and is the baseline every accelerator backend is checked
+//! against (rust/tests/kernel_parity.rs pins it to the python oracles).
+
+pub mod kernels;
+pub mod model;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::backend::Backend;
+use super::manifest::{Manifest, ModelMeta, TensorSpec};
+use super::types::{BatchStats, GradResult, HostBatch};
+use crate::tensor::Tensor;
+use crate::util::{Error, Result};
+
+use self::model::Dims;
+
+/// Construction parameters of a native backend (the analogue of an AOT
+/// preset's `manifest.json`). Widths/classes mirror `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct NativeSpec {
+    pub preset: String,
+    pub width: usize,
+    pub num_classes: usize,
+    pub image_size: usize,
+    /// Nesterov momentum / coupled weight decay (paper §5.1)
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// advertised batch sizes (informational — the native backend accepts
+    /// any batch size, unlike per-batch AOT executables)
+    pub batches: Vec<usize>,
+}
+
+impl NativeSpec {
+    pub fn new(preset: &str, width: usize, num_classes: usize, image_size: usize) -> Self {
+        NativeSpec {
+            preset: preset.to_string(),
+            width,
+            num_classes,
+            image_size,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            batches: Vec::new(),
+        }
+    }
+
+    pub fn with_batches(mut self, batches: &[usize]) -> Self {
+        self.batches = batches.to_vec();
+        self
+    }
+
+    /// The fast unit/integration-test model (aot.py's `tiny` preset).
+    pub fn tiny() -> Self {
+        NativeSpec::new("tiny", 4, 10, 16).with_batches(&[8])
+    }
+
+    fn dims(&self) -> Dims {
+        Dims {
+            width: self.width,
+            num_classes: self.num_classes,
+            image_size: self.image_size,
+        }
+    }
+}
+
+/// Ordered parameter specs — the manifest/rust layout contract, identical
+/// to `python/compile/model.py::param_specs`.
+pub fn param_specs(spec: &NativeSpec) -> Vec<TensorSpec> {
+    let mut out = Vec::with_capacity(model::NUM_PARAM_TENSORS);
+    for (name, cin, cout, _side) in model::conv_layers(&spec.dims()) {
+        out.push(TensorSpec { name: format!("{name}.w"), shape: vec![cin * 9, cout] });
+        out.push(TensorSpec { name: format!("{name}.gamma"), shape: vec![cout] });
+        out.push(TensorSpec { name: format!("{name}.beta"), shape: vec![cout] });
+    }
+    out.push(TensorSpec {
+        name: "head.w".to_string(),
+        shape: vec![8 * spec.width, spec.num_classes],
+    });
+    out.push(TensorSpec { name: "head.b".to_string(), shape: vec![spec.num_classes] });
+    out
+}
+
+/// Ordered BN running-statistic specs (mean, var per conv layer).
+pub fn bn_specs(spec: &NativeSpec) -> Vec<TensorSpec> {
+    let mut out = Vec::with_capacity(2 * model::NUM_CONV_LAYERS);
+    for (name, _cin, cout, _side) in model::conv_layers(&spec.dims()) {
+        out.push(TensorSpec { name: format!("{name}.mean"), shape: vec![cout] });
+        out.push(TensorSpec { name: format!("{name}.var"), shape: vec![cout] });
+    }
+    out
+}
+
+/// Build the layout contract in memory — the native twin of parsing
+/// `artifacts/<preset>/manifest.json`.
+pub fn native_manifest(spec: &NativeSpec) -> Manifest {
+    let params = param_specs(spec);
+    let num_params = params.iter().map(|s| s.numel()).sum();
+    Manifest {
+        preset: spec.preset.clone(),
+        model: ModelMeta {
+            arch: "resnet9s".to_string(),
+            width: spec.width,
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+            momentum: spec.momentum,
+            weight_decay: spec.weight_decay,
+            head_scale: model::HEAD_SCALE,
+            bn_eps: kernels::BN_EPS,
+        },
+        params,
+        bn_stats: bn_specs(spec),
+        num_params,
+        batches: spec.batches.clone(),
+        executables: BTreeMap::new(),
+        flops_fwd_per_example: model::flops_fwd_per_example(&spec.dims()),
+        dir: PathBuf::new(),
+    }
+}
+
+/// The pure-Rust engine.
+pub struct NativeBackend {
+    manifest: Manifest,
+    dims: Dims,
+}
+
+impl NativeBackend {
+    pub fn new(spec: NativeSpec) -> Result<Self> {
+        if spec.width == 0 || spec.num_classes < 2 {
+            return Err(Error::config(format!(
+                "native backend: width {} / num_classes {} invalid",
+                spec.width, spec.num_classes
+            )));
+        }
+        if spec.image_size == 0 || spec.image_size % 8 != 0 {
+            return Err(Error::config(format!(
+                "native backend: image_size {} must be a positive multiple of 8 \
+                 (three 2x2 pools)",
+                spec.image_size
+            )));
+        }
+        let dims = Dims {
+            width: spec.width,
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+        };
+        Ok(NativeBackend { manifest: native_manifest(&spec), dims })
+    }
+
+    /// The tiny test model (width 4, 10 classes, 16x16 images).
+    pub fn tiny() -> Self {
+        NativeBackend::new(NativeSpec::tiny()).expect("tiny spec is valid")
+    }
+
+    fn check_batch(&self, batch: &HostBatch) -> Result<()> {
+        let im = self.dims.image_size;
+        if batch.image_size != im {
+            return Err(Error::shape(format!(
+                "batch image size {} != model image size {im}",
+                batch.image_size
+            )));
+        }
+        if batch.images.len() != batch.batch * im * im * 3 {
+            return Err(Error::shape(format!(
+                "image buffer {} != {}x{im}x{im}x3",
+                batch.images.len(),
+                batch.batch
+            )));
+        }
+        if batch.labels.len() != batch.batch {
+            return Err(Error::shape("label count != batch size"));
+        }
+        let k = self.dims.num_classes as i32;
+        if batch.labels.iter().any(|&y| y < 0 || y >= k) {
+            return Err(Error::invalid(format!("label out of range [0,{k})")));
+        }
+        Ok(())
+    }
+
+    /// Borrow params as flat slices after validating count + shapes.
+    fn param_slices<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
+        if params.len() != self.manifest.params.len() {
+            return Err(Error::shape(format!(
+                "expected {} param tensors, got {}",
+                self.manifest.params.len(),
+                params.len()
+            )));
+        }
+        for (t, spec) in params.iter().zip(&self.manifest.params) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::shape(format!(
+                    "param {}: shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+        }
+        Ok(params.iter().map(|t| t.data()).collect())
+    }
+
+    fn stats_from(
+        &self,
+        logits: &[f32],
+        batch: &HostBatch,
+    ) -> (BatchStats, Vec<f32>) {
+        let (sum_loss, c1, c5, dl) = kernels::cross_entropy(
+            logits,
+            &batch.labels,
+            batch.batch,
+            self.dims.num_classes,
+        );
+        (
+            BatchStats {
+                sum_loss,
+                correct1: c1,
+                correct5: c5,
+                examples: batch.batch as i64,
+            },
+            dl,
+        )
+    }
+
+    /// Shared grad path: train-mode forward + backward of the mean loss.
+    fn grad_impl(&self, params: &[Tensor], batch: &HostBatch) -> Result<(Vec<Vec<f32>>, BatchStats)> {
+        self.check_batch(batch)?;
+        let p = self.param_slices(params)?;
+        let fwd = model::forward_train(&self.dims, &p, &batch.images, batch.batch);
+        let (stats, mut dl) = self.stats_from(&fwd.logits, batch);
+        // grads of the MEAN batch loss (the python grad_step convention)
+        let inv_b = 1.0 / batch.batch as f32;
+        for d in dl.iter_mut() {
+            *d *= inv_b;
+        }
+        let grads = model::backward(&self.dims, &p, &dl, &fwd.ctx);
+        Ok((grads, stats))
+    }
+
+    fn grads_to_tensors(&self, grads: Vec<Vec<f32>>) -> Result<Vec<Tensor>> {
+        grads
+            .into_iter()
+            .zip(&self.manifest.params)
+            .map(|(g, spec)| Tensor::new(spec.shape.clone(), g))
+            .collect()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
+        let (grads, stats) = self.grad_impl(params, batch)?;
+        Ok(GradResult { grads: self.grads_to_tensors(grads)?, stats })
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [Tensor],
+        momentum: &mut [Tensor],
+        batch: &HostBatch,
+        lr: f32,
+    ) -> Result<BatchStats> {
+        let (grads, stats) = self.grad_impl(params, batch)?;
+        if momentum.len() != params.len() {
+            return Err(Error::shape(format!(
+                "momentum has {} tensors, params {}",
+                momentum.len(),
+                params.len()
+            )));
+        }
+        let (mu, wd) = (self.manifest.model.momentum, self.manifest.model.weight_decay);
+        for ((p, m), g) in params.iter_mut().zip(momentum.iter_mut()).zip(&grads) {
+            if m.shape() != p.shape() {
+                return Err(Error::shape("momentum shape mismatch"));
+            }
+            kernels::sgd_nesterov_inplace(p.data_mut(), m.data_mut(), g, lr, mu, wd);
+        }
+        Ok(stats)
+    }
+
+    fn eval_batch(
+        &self,
+        params: &[Tensor],
+        bn_stats: &[Tensor],
+        batch: &HostBatch,
+    ) -> Result<BatchStats> {
+        self.check_batch(batch)?;
+        let p = self.param_slices(params)?;
+        if bn_stats.len() != self.manifest.bn_stats.len() {
+            return Err(Error::shape(format!(
+                "expected {} bn tensors, got {}",
+                self.manifest.bn_stats.len(),
+                bn_stats.len()
+            )));
+        }
+        let bn: Vec<&[f32]> = bn_stats.iter().map(|t| t.data()).collect();
+        let logits = model::forward_eval(&self.dims, &p, &bn, &batch.images, batch.batch);
+        Ok(self.stats_from(&logits, batch).0)
+    }
+
+    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
+        self.check_batch(batch)?;
+        let p = self.param_slices(params)?;
+        let moments = model::forward_moments(&self.dims, &p, &batch.images, batch.batch);
+        moments
+            .into_iter()
+            .zip(&self.manifest.bn_stats)
+            .map(|(m, spec)| Tensor::new(spec.shape.clone(), m))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_manifest_matches_artifact_contract() {
+        let b = NativeBackend::tiny();
+        let m = b.manifest();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.model.arch, "resnet9s");
+        assert_eq!(m.params.len(), 26);
+        assert_eq!(m.bn_stats.len(), 16);
+        assert_eq!(m.params[0].name, "prep.w");
+        assert_eq!(m.params[0].shape, vec![27, 4]);
+        assert_eq!(m.params[24].name, "head.w");
+        assert_eq!(m.params[24].shape, vec![32, 10]);
+        assert_eq!(m.params[25].name, "head.b");
+        assert_eq!(m.bn_stats[0].name, "prep.mean");
+        assert_eq!(m.bn_stats[15].name, "res3b.var");
+        let declared: usize = m.params.iter().map(|s| s.numel()).sum();
+        assert_eq!(m.num_params, declared);
+        assert!(m.flops_fwd_per_example > 0);
+        assert!(m.batches.contains(&8));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(NativeBackend::new(NativeSpec::new("x", 0, 10, 16)).is_err());
+        assert!(NativeBackend::new(NativeSpec::new("x", 4, 1, 16)).is_err());
+        assert!(NativeBackend::new(NativeSpec::new("x", 4, 10, 12)).is_err());
+        assert!(NativeBackend::new(NativeSpec::new("x", 4, 10, 0)).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_batches_and_params() {
+        use crate::model::ParamSet;
+        let b = NativeBackend::tiny();
+        let params = ParamSet::init(b.manifest(), 0);
+        let bad = HostBatch {
+            images: vec![0.0; 10],
+            labels: vec![0, 1],
+            batch: 2,
+            image_size: 16,
+        };
+        assert!(b.grad(params.as_slice(), &bad).is_err());
+        let good = HostBatch {
+            images: vec![0.0; 2 * 16 * 16 * 3],
+            labels: vec![0, 11], // label out of range
+            batch: 2,
+            image_size: 16,
+        };
+        assert!(b.grad(params.as_slice(), &good).is_err());
+        let ok = HostBatch {
+            images: vec![0.1; 2 * 16 * 16 * 3],
+            labels: vec![0, 3],
+            batch: 2,
+            image_size: 16,
+        };
+        assert!(b.grad(&params.as_slice()[..5], &ok).is_err());
+        assert!(b.grad(params.as_slice(), &ok).is_ok());
+    }
+}

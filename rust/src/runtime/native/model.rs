@@ -1,0 +1,423 @@
+//! Native ResNet9s: the exact topology of `python/compile/model.py`
+//! (davidcpage's DAWNBench CIFAR net, paper §5.1), forward + hand-derived
+//! backward over the flat NHWC kernels in `super::kernels`.
+//!
+//! ```text
+//! prep  : conv3x3( 3 ->  c) + BN + ReLU                      [H]
+//! layer1: conv3x3( c -> 2c) + BN + ReLU + maxpool2           [H -> H/2]
+//! res1  : x + 2 x [conv3x3(2c -> 2c) + BN + ReLU]            [H/2]
+//! layer2: conv3x3(2c -> 4c) + BN + ReLU + maxpool2           [H/2 -> H/4]
+//! layer3: conv3x3(4c -> 8c) + BN + ReLU + maxpool2           [H/4 -> H/8]
+//! res3  : x + 2 x [conv3x3(8c -> 8c) + BN + ReLU]            [H/8]
+//! head  : global maxpool + linear(8c -> classes) * 0.125
+//! ```
+//!
+//! Parameters are the manifest-ordered flat list (per conv layer: w, gamma,
+//! beta; then head.w, head.b — 26 tensors); BN moments are (mean, var) per
+//! conv layer — 16 tensors. The backward pass was validated against
+//! `jax.grad` of the python model (rust/tests/kernel_parity.rs).
+
+use super::kernels as k;
+
+pub const HEAD_SCALE: f32 = 0.125;
+pub const NUM_CONV_LAYERS: usize = 8;
+pub const NUM_PARAM_TENSORS: usize = 3 * NUM_CONV_LAYERS + 2;
+
+/// Static architecture dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct Dims {
+    pub width: usize,
+    pub num_classes: usize,
+    pub image_size: usize,
+}
+
+/// The conv layers in forward order: (name, cin, cout, spatial side at the
+/// conv input). Mirrors `model.py::_conv_layers` + the pooling schedule.
+pub fn conv_layers(d: &Dims) -> [(&'static str, usize, usize, usize); NUM_CONV_LAYERS] {
+    let c = d.width;
+    let h = d.image_size;
+    [
+        ("prep", 3, c, h),
+        ("layer1", c, 2 * c, h),
+        ("res1a", 2 * c, 2 * c, h / 2),
+        ("res1b", 2 * c, 2 * c, h / 2),
+        ("layer2", 2 * c, 4 * c, h / 2),
+        ("layer3", 4 * c, 8 * c, h / 4),
+        ("res3a", 8 * c, 8 * c, h / 8),
+        ("res3b", 8 * c, 8 * c, h / 8),
+    ]
+}
+
+/// Forward FLOPs per example (multiply-adds x2), as `aot.py` computes it.
+pub fn flops_fwd_per_example(d: &Dims) -> u64 {
+    let mut total: u64 = 0;
+    for (_name, cin, cout, side) in conv_layers(d) {
+        total += 2 * (side * side) as u64 * (9 * cin) as u64 * cout as u64;
+    }
+    total += 2 * (8 * d.width) as u64 * d.num_classes as u64;
+    total
+}
+
+/// Per-block saved context for the backward pass.
+struct BlockSave {
+    /// conv input activations (B, side, side, cin), flat NHWC
+    x: Vec<f32>,
+    side: usize,
+    cin: usize,
+    cout: usize,
+    /// normalized conv output
+    xhat: Vec<f32>,
+    invstd: Vec<f32>,
+    /// pre-ReLU block output (ReLU mask)
+    y: Vec<f32>,
+}
+
+/// Everything `backward` needs from the train forward pass.
+pub struct TrainCtx {
+    batch: usize,
+    saves: Vec<BlockSave>,
+    /// (argmax indices, input length) for the three 2x2 pools
+    pools: [(Vec<u32>, usize); 3],
+    /// pooled head features (B, 8c)
+    h: Vec<f32>,
+    /// global-maxpool argmax (into the res3 output)
+    hmax: Vec<u32>,
+    /// res3 output length
+    r3_len: usize,
+}
+
+/// Output of the train-mode forward pass.
+pub struct TrainForward {
+    pub logits: Vec<f32>,
+    /// flat [mean0, var0, mean1, var1, ...] in conv-layer order
+    pub moments: Vec<Vec<f32>>,
+    pub ctx: TrainCtx,
+}
+
+fn block_fwd_train(
+    b: usize,
+    side: usize,
+    cin: usize,
+    cout: usize,
+    x: Vec<f32>,
+    w: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+) -> (Vec<f32>, BlockSave, Vec<f32>, Vec<f32>) {
+    let rows = b * side * side;
+    let patches = k::im2col(&x, b, side, side, cin);
+    let u = k::matmul(&patches, w, rows, 9 * cin, cout);
+    let (y, xhat, mean, var, invstd) = k::bn_train(&u, gamma, beta, rows, cout);
+    let a = k::relu(&y);
+    let save = BlockSave { x, side, cin, cout, xhat, invstd, y };
+    (a, save, mean, var)
+}
+
+fn block_fwd_eval(
+    b: usize,
+    side: usize,
+    cin: usize,
+    cout: usize,
+    x: &[f32],
+    w: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+) -> Vec<f32> {
+    let rows = b * side * side;
+    let patches = k::im2col(x, b, side, side, cin);
+    let u = k::matmul(&patches, w, rows, 9 * cin, cout);
+    k::relu(&k::bn_eval(&u, gamma, beta, mean, var, rows, cout))
+}
+
+/// Backward through one block. Returns (dx (None for the first layer),
+/// dw, dgamma, dbeta).
+#[allow(clippy::type_complexity)]
+fn block_bwd(
+    b: usize,
+    save: &BlockSave,
+    w: &[f32],
+    gamma: &[f32],
+    da: &[f32],
+    need_dx: bool,
+) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = b * save.side * save.side;
+    let dy = k::relu_bwd(da, &save.y);
+    let (du, dgamma, dbeta) = k::bn_train_bwd(&dy, &save.xhat, &save.invstd, gamma, rows, save.cout);
+    let patches = k::im2col(&save.x, b, save.side, save.side, save.cin);
+    let dw = k::matmul_tn(&patches, &du, rows, 9 * save.cin, save.cout);
+    let dx = if need_dx {
+        let dp = k::matmul_nt(&du, w, rows, save.cout, 9 * save.cin);
+        Some(k::col2im(&dp, b, save.side, save.side, save.cin))
+    } else {
+        None
+    };
+    (dx, dw, dgamma, dbeta)
+}
+
+fn add_into(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+/// Train-mode forward pass. `params` is the manifest-ordered list of flat
+/// parameter slices (26 entries).
+pub fn forward_train(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> TrainForward {
+    debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+    let layers = conv_layers(d);
+    let mut saves = Vec::with_capacity(NUM_CONV_LAYERS);
+    let mut moments = Vec::with_capacity(2 * NUM_CONV_LAYERS);
+    let fwd = |li: usize, x: Vec<f32>, saves: &mut Vec<BlockSave>, moments: &mut Vec<Vec<f32>>| {
+        let (_, cin, cout, side) = layers[li];
+        let (a, save, mean, var) = block_fwd_train(
+            b,
+            side,
+            cin,
+            cout,
+            x,
+            params[3 * li],
+            params[3 * li + 1],
+            params[3 * li + 2],
+        );
+        saves.push(save);
+        moments.push(mean);
+        moments.push(var);
+        a
+    };
+
+    let h = d.image_size;
+    let c = d.width;
+    let a0 = fwd(0, images.to_vec(), &mut saves, &mut moments);
+    let a1 = fwd(1, a0, &mut saves, &mut moments);
+    let (p1, i1) = k::maxpool2(&a1, b, h, h, 2 * c);
+    let m1 = fwd(2, p1.clone(), &mut saves, &mut moments);
+    let mut r1 = fwd(3, m1, &mut saves, &mut moments);
+    add_into(&mut r1, &p1); // res1: x + f(x)
+    let a2 = fwd(4, r1, &mut saves, &mut moments);
+    let (p2, i2) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
+    let a3 = fwd(5, p2, &mut saves, &mut moments);
+    let (p3, i3) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
+    let m3 = fwd(6, p3.clone(), &mut saves, &mut moments);
+    let mut r3 = fwd(7, m3, &mut saves, &mut moments);
+    add_into(&mut r3, &p3); // res3: x + f(x)
+
+    let hw3 = (h / 8) * (h / 8);
+    let (hfeat, hmax) = k::global_maxpool(&r3, b, hw3, 8 * c);
+    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes);
+    let bias = params[25];
+    for bi in 0..b {
+        for j in 0..d.num_classes {
+            logits[bi * d.num_classes + j] =
+                (logits[bi * d.num_classes + j] + bias[j]) * HEAD_SCALE;
+        }
+    }
+    let r3_len = r3.len();
+    let ctx = TrainCtx {
+        batch: b,
+        saves,
+        pools: [
+            (i1, b * h * h * 2 * c),
+            (i2, b * (h / 2) * (h / 2) * 4 * c),
+            (i3, b * (h / 4) * (h / 4) * 8 * c),
+        ],
+        h: hfeat,
+        hmax,
+        r3_len,
+    };
+    TrainForward { logits, moments, ctx }
+}
+
+/// Backward pass: gradient of the loss w.r.t. every parameter, given
+/// d(loss)/d(logits). Returns flat gradient buffers in manifest order.
+pub fn backward(d: &Dims, params: &[&[f32]], dlogits: &[f32], ctx: &TrainCtx) -> Vec<Vec<f32>> {
+    let b = ctx.batch;
+    let c8 = 8 * d.width;
+    let nc = d.num_classes;
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); NUM_PARAM_TENSORS];
+
+    // head: logits = (h @ W + bias) * HEAD_SCALE
+    let ds: Vec<f32> = dlogits.iter().map(|&v| v * HEAD_SCALE).collect();
+    grads[24] = k::matmul_tn(&ctx.h, &ds, b, c8, nc);
+    let mut dbias = vec![0.0f32; nc];
+    for bi in 0..b {
+        for j in 0..nc {
+            dbias[j] += ds[bi * nc + j];
+        }
+    }
+    grads[25] = dbias;
+    let dh = k::matmul_nt(&ds, params[24], b, nc, c8);
+
+    // global max pool
+    let dr3 = k::global_maxpool_bwd(&dh, &ctx.hmax, ctx.r3_len);
+
+    let bwd = |li: usize, da: &[f32], need_dx: bool, grads: &mut Vec<Vec<f32>>| {
+        let (dx, dw, dgamma, dbeta) =
+            block_bwd(b, &ctx.saves[li], params[3 * li], params[3 * li + 1], da, need_dx);
+        grads[3 * li] = dw;
+        grads[3 * li + 1] = dgamma;
+        grads[3 * li + 2] = dbeta;
+        dx.unwrap_or_default()
+    };
+
+    // res3: r3 = p3 + res3b(res3a(p3))
+    let dm3 = bwd(7, &dr3, true, &mut grads);
+    let dp3_branch = bwd(6, &dm3, true, &mut grads);
+    let mut dp3 = dr3;
+    add_into(&mut dp3, &dp3_branch);
+
+    // layer3 pool + block
+    let da3 = k::maxpool2_bwd(&dp3, &ctx.pools[2].0, ctx.pools[2].1);
+    let dp2 = bwd(5, &da3, true, &mut grads);
+
+    // layer2 pool + block
+    let da2 = k::maxpool2_bwd(&dp2, &ctx.pools[1].0, ctx.pools[1].1);
+    let dr1 = bwd(4, &da2, true, &mut grads);
+
+    // res1: r1 = p1 + res1b(res1a(p1))
+    let dm1 = bwd(3, &dr1, true, &mut grads);
+    let dp1_branch = bwd(2, &dm1, true, &mut grads);
+    let mut dp1 = dr1;
+    add_into(&mut dp1, &dp1_branch);
+
+    // layer1 pool + block, then prep (no dx needed for the input image)
+    let da1 = k::maxpool2_bwd(&dp1, &ctx.pools[0].0, ctx.pools[0].1);
+    let da0 = bwd(1, &da1, true, &mut grads);
+    let _ = bwd(0, &da0, false, &mut grads);
+
+    grads
+}
+
+/// Moments-only forward pass (phase 3's `bnstats` entry point): runs the
+/// blocks in train mode but keeps neither the backward context nor the
+/// head — the per-layer (mean, biased var) pairs are the only output.
+pub fn forward_moments(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> Vec<Vec<f32>> {
+    debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+    let layers = conv_layers(d);
+    let mut moments = Vec::with_capacity(2 * NUM_CONV_LAYERS);
+    let fwd = |li: usize, x: &[f32], moments: &mut Vec<Vec<f32>>| -> Vec<f32> {
+        let (_, cin, cout, side) = layers[li];
+        let rows = b * side * side;
+        let patches = k::im2col(x, b, side, side, cin);
+        let u = k::matmul(&patches, params[3 * li], rows, 9 * cin, cout);
+        let (y, _xhat, mean, var, _invstd) =
+            k::bn_train(&u, params[3 * li + 1], params[3 * li + 2], rows, cout);
+        moments.push(mean);
+        moments.push(var);
+        k::relu(&y)
+    };
+    let h = d.image_size;
+    let c = d.width;
+    let a0 = fwd(0, images, &mut moments);
+    let a1 = fwd(1, &a0, &mut moments);
+    let (p1, _) = k::maxpool2(&a1, b, h, h, 2 * c);
+    let m1 = fwd(2, &p1, &mut moments);
+    let mut r1 = fwd(3, &m1, &mut moments);
+    add_into(&mut r1, &p1);
+    let a2 = fwd(4, &r1, &mut moments);
+    let (p2, _) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
+    let a3 = fwd(5, &p2, &mut moments);
+    let (p3, _) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
+    let m3 = fwd(6, &p3, &mut moments);
+    let _ = fwd(7, &m3, &mut moments); // res3b moments; output unused
+    moments
+}
+
+/// Eval-mode forward pass with running BN statistics (mean/var pairs per
+/// conv layer, manifest `bn_stats` order). Returns logits.
+pub fn forward_eval(
+    d: &Dims,
+    params: &[&[f32]],
+    bn: &[&[f32]],
+    images: &[f32],
+    b: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+    debug_assert_eq!(bn.len(), 2 * NUM_CONV_LAYERS);
+    let layers = conv_layers(d);
+    let fwd = |li: usize, x: &[f32]| -> Vec<f32> {
+        let (_, cin, cout, side) = layers[li];
+        block_fwd_eval(
+            b,
+            side,
+            cin,
+            cout,
+            x,
+            params[3 * li],
+            params[3 * li + 1],
+            params[3 * li + 2],
+            bn[2 * li],
+            bn[2 * li + 1],
+        )
+    };
+    let h = d.image_size;
+    let c = d.width;
+    let a0 = fwd(0, images);
+    let a1 = fwd(1, &a0);
+    let (p1, _) = k::maxpool2(&a1, b, h, h, 2 * c);
+    let m1 = fwd(2, &p1);
+    let mut r1 = fwd(3, &m1);
+    add_into(&mut r1, &p1);
+    let a2 = fwd(4, &r1);
+    let (p2, _) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
+    let a3 = fwd(5, &p2);
+    let (p3, _) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
+    let m3 = fwd(6, &p3);
+    let mut r3 = fwd(7, &m3);
+    add_into(&mut r3, &p3);
+    let hw3 = (h / 8) * (h / 8);
+    let (hfeat, _) = k::global_maxpool(&r3, b, hw3, 8 * c);
+    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes);
+    let bias = params[25];
+    for bi in 0..b {
+        for j in 0..d.num_classes {
+            logits[bi * d.num_classes + j] =
+                (logits[bi * d.num_classes + j] + bias[j]) * HEAD_SCALE;
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims { width: 2, num_classes: 4, image_size: 8 }
+    }
+
+    #[test]
+    fn conv_layer_table_matches_python() {
+        let d = dims();
+        let l = conv_layers(&d);
+        assert_eq!(l[0], ("prep", 3, 2, 8));
+        assert_eq!(l[1], ("layer1", 2, 4, 8));
+        assert_eq!(l[2], ("res1a", 4, 4, 4));
+        assert_eq!(l[4], ("layer2", 4, 8, 4));
+        assert_eq!(l[5], ("layer3", 8, 16, 2));
+        assert_eq!(l[7], ("res3b", 16, 16, 1));
+    }
+
+    #[test]
+    fn flops_match_aot_formula() {
+        // width 4, image 16 (the tiny preset): recompute by hand
+        let d = Dims { width: 4, num_classes: 10, image_size: 16 };
+        let mut want: u64 = 0;
+        for (cin, cout, side) in [
+            (3usize, 4usize, 16usize),
+            (4, 8, 16),
+            (8, 8, 8),
+            (8, 8, 8),
+            (8, 16, 8),
+            (16, 32, 4),
+            (32, 32, 2),
+            (32, 32, 2),
+        ] {
+            want += 2 * (side * side * 9 * cin * cout) as u64;
+        }
+        want += 2 * 32 * 10;
+        assert_eq!(flops_fwd_per_example(&d), want);
+    }
+}

@@ -1,0 +1,86 @@
+//! Backend-agnostic runtime types: the host-side batch and the statistics
+//! every backend entry point returns. Kept free of any XLA types so the
+//! native backend and the coordinator compile without the `xla` feature.
+
+use crate::tensor::Tensor;
+
+/// One mini-batch on the host, NHWC images + labels.
+#[derive(Debug, Clone)]
+pub struct HostBatch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub image_size: usize,
+}
+
+/// Loss/accuracy statistics returned by every executable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    pub sum_loss: f64,
+    pub correct1: i64,
+    pub correct5: i64,
+    pub examples: i64,
+}
+
+impl BatchStats {
+    pub fn accumulate(&mut self, other: &BatchStats) {
+        self.sum_loss += other.sum_loss;
+        self.correct1 += other.correct1;
+        self.correct5 += other.correct5;
+        self.examples += other.examples;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.sum_loss / self.examples as f64
+        }
+    }
+
+    pub fn accuracy1(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct1 as f64 / self.examples as f64
+        }
+    }
+
+    pub fn accuracy5(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct5 as f64 / self.examples as f64
+        }
+    }
+}
+
+/// Gradient result of a backend `grad` call.
+pub struct GradResult {
+    pub grads: Vec<Tensor>,
+    pub stats: BatchStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate_and_ratios() {
+        let mut a = BatchStats { sum_loss: 2.0, correct1: 1, correct5: 3, examples: 4 };
+        let b = BatchStats { sum_loss: 6.0, correct1: 3, correct5: 3, examples: 4 };
+        a.accumulate(&b);
+        assert_eq!(a.examples, 8);
+        assert_eq!(a.mean_loss(), 1.0);
+        assert_eq!(a.accuracy1(), 0.5);
+        assert_eq!(a.accuracy5(), 0.75);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = BatchStats::default();
+        assert_eq!(s.mean_loss(), 0.0);
+        assert_eq!(s.accuracy1(), 0.0);
+        assert_eq!(s.accuracy5(), 0.0);
+    }
+}

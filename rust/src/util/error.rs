@@ -1,5 +1,5 @@
-//! Library error type. The binary/examples use `anyhow`; the library
-//! surfaces a typed error so downstream users can match on failure classes.
+//! Library error type, shared by the library, the binary and the examples
+//! so downstream users can match on failure classes.
 
 use std::fmt;
 
@@ -48,6 +48,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

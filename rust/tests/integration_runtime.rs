@@ -1,28 +1,22 @@
-//! Integration: the rust runtime executing the real AOT artifacts (tiny
-//! preset). Requires `make artifacts` (the Makefile test target guarantees
-//! this). These tests pin the python↔rust interface numerically:
+//! Integration: the native execution backend behind the `Backend` trait
+//! (tiny model — width 4, 10 classes, 16x16 images). No artifacts or XLA
+//! toolchain required. These tests pin the backend contract numerically:
 //!   * grad/train/eval/bnstats run and return sane shapes/values,
-//!   * the fused on-device SGD update equals the host-side optimizer,
+//!   * the fused train step equals the host-side Nesterov optimizer,
 //!   * training on a fixed batch reduces the loss through the whole stack.
 
 use swap::coordinator::TrainEnv;
 use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::{BnState, ParamSet};
 use swap::optim::{SgdConfig, SgdOptimizer};
-use swap::runtime::{Engine, HostBatch};
+use swap::runtime::{Backend, HostBatch, NativeBackend};
 use swap::sim::{CostModel, DeviceModel, NetModel};
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts")
-        .join("tiny")
+fn engine() -> NativeBackend {
+    NativeBackend::tiny()
 }
 
-fn engine() -> Engine {
-    Engine::load(artifacts_dir()).expect("tiny artifacts missing — run `make artifacts`")
-}
-
-fn tiny_batch(engine: &Engine, seed: u64) -> HostBatch {
+fn tiny_batch(engine: &NativeBackend, seed: u64) -> HostBatch {
     let m = engine.manifest();
     let gen = Generator::new(SynthSpec::for_preset(
         m.model.num_classes,
@@ -35,14 +29,23 @@ fn tiny_batch(engine: &Engine, seed: u64) -> HostBatch {
 }
 
 #[test]
-fn manifest_loads_and_matches_model() {
+fn manifest_matches_model_contract() {
     let e = engine();
     let m = e.manifest();
+    assert_eq!(e.name(), "native");
     assert_eq!(m.preset, "tiny");
     assert_eq!(m.model.arch, "resnet9s");
     assert_eq!(m.params.len(), 26);
     assert_eq!(m.bn_stats.len(), 16);
     assert!(m.batches.contains(&8));
+    // the layout contract of the AOT artifacts: per-conv (w, gamma, beta)
+    assert_eq!(m.params[0].name, "prep.w");
+    assert_eq!(m.params[1].name, "prep.gamma");
+    assert_eq!(m.params[2].name, "prep.beta");
+    assert_eq!(m.params[25].name, "head.b");
+    let declared: usize = m.params.iter().map(|s| s.numel()).sum();
+    assert_eq!(m.num_params, declared);
+    assert!(m.param_bytes() == 4 * declared as u64);
 }
 
 #[test]
@@ -64,14 +67,27 @@ fn grad_executes_with_correct_shapes() {
 }
 
 #[test]
+fn grad_is_deterministic() {
+    let e = engine();
+    let params = ParamSet::init(e.manifest(), 9);
+    let hb = tiny_batch(&e, 2);
+    let a = e.grad(params.as_slice(), &hb).unwrap();
+    let b = e.grad(params.as_slice(), &hb).unwrap();
+    assert_eq!(a.stats.sum_loss.to_bits(), b.stats.sum_loss.to_bits());
+    for (x, y) in a.grads.iter().zip(&b.grads) {
+        assert_eq!(x, y, "native grad must be bitwise deterministic");
+    }
+}
+
+#[test]
 fn fused_train_step_matches_host_optimizer() {
     let e = engine();
-    let m = e.manifest();
-    let params0 = ParamSet::init(m, 3);
+    let m = e.manifest().clone();
+    let params0 = ParamSet::init(&m, 3);
     let hb = tiny_batch(&e, 2);
     let lr = 0.05f32;
 
-    // host path: grads from grad_b8, then host Nesterov update
+    // host path: grads from the backend, then the host Nesterov update
     let g = e.grad(params0.as_slice(), &hb).unwrap();
     let mut host_params = params0.clone();
     let mut opt = SgdOptimizer::new(
@@ -80,13 +96,13 @@ fn fused_train_step_matches_host_optimizer() {
     );
     opt.step(&mut host_params, &g.grads, lr).unwrap();
 
-    // device path: fused train_b8
+    // backend path: fused train step
     let mut dev_params = params0.clone();
     let mut dev_mom = params0.zeros_like();
     let stats = e
         .train_step(dev_params.as_mut_slice(), dev_mom.as_mut_slice(), &hb, lr)
         .unwrap();
-    assert!((stats.sum_loss - g.stats.sum_loss).abs() < 1e-2 * g.stats.sum_loss.abs().max(1.0));
+    assert!((stats.sum_loss - g.stats.sum_loss).abs() < 1e-9 * g.stats.sum_loss.abs().max(1.0));
 
     // parity: parameters and momentum agree to f32 noise
     for ((hp, dp), name) in host_params
@@ -98,12 +114,12 @@ fn fused_train_step_matches_host_optimizer() {
         let mut diff = hp.clone();
         diff.axpy(-1.0, dp).unwrap();
         let rel = diff.max_abs() / (1e-3 + hp.max_abs());
-        assert!(rel < 2e-3, "param {name} host/device mismatch rel={rel}");
+        assert!(rel < 1e-5, "param {name} host/device mismatch rel={rel}");
     }
     for (hm, dm) in opt.momentum.tensors.iter().zip(&dev_mom.tensors) {
         let mut diff = hm.clone();
         diff.axpy(-1.0, dm).unwrap();
-        assert!(diff.max_abs() < 2e-3 + 1e-2 * hm.max_abs());
+        assert!(diff.max_abs() < 1e-5 + 1e-5 * hm.max_abs());
     }
 }
 
@@ -180,4 +196,20 @@ fn train_env_eval_and_bn_recompute() {
     let stats = env.evaluate(&params, &bn, &mut clock).unwrap();
     assert_eq!(stats.examples, 24);
     assert!(clock.eval > 0.0);
+}
+
+#[test]
+fn backend_accepts_any_batch_size() {
+    // unlike per-batch AOT executables, the native backend is batch-agnostic
+    let e = engine();
+    let m = e.manifest();
+    let params = ParamSet::init(m, 2);
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 5));
+    let ds = gen.sample(16, 10);
+    for b in [1usize, 3, 16] {
+        let mut batcher = Batcher::new(b, m.model.image_size, AugmentSpec::none());
+        let hb = batcher.assemble_clean(&ds, &(0..b).collect::<Vec<_>>());
+        let g = e.grad(params.as_slice(), &hb).unwrap();
+        assert_eq!(g.stats.examples, b as i64);
+    }
 }

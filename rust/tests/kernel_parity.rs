@@ -1,0 +1,308 @@
+//! Native-vs-reference kernel parity: asserts the pure-rust kernels and the
+//! full native ResNet9s (forward, backward, BN moments, fused SGD step)
+//! against JSON fixtures generated from the python reference oracles
+//! (`python/compile/kernels/ref.py` + `python/compile/model.py` via
+//! `jax.grad`). Regenerate with:
+//!
+//!     python3 python/tools/gen_parity_fixtures.py
+//!
+//! Tolerance: 1e-4 relative (f32 summation-order noise across languages).
+
+use swap::runtime::native::{kernels, model, NativeBackend, NativeSpec};
+use swap::runtime::{Backend, HostBatch};
+use swap::tensor::Tensor;
+use swap::util::Json;
+
+const TOL: f32 = 1e-4;
+
+fn fixtures() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/kernel_parity.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e} (run gen_parity_fixtures.py)", path.display()));
+    Json::parse(&text).unwrap()
+}
+
+fn floats(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .expect("array of numbers")
+        .iter()
+        .map(|v| v.as_f64().expect("number") as f32)
+        .collect()
+}
+
+fn ints(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .expect("array of ints")
+        .iter()
+        .map(|v| v.as_i64().expect("int") as i32)
+        .collect()
+}
+
+/// (shape, data) of a fixture tensor object.
+fn tensor_of(j: &Json) -> (Vec<usize>, Vec<f32>) {
+    let shape = j
+        .req("shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|d| d.as_usize().unwrap())
+        .collect();
+    (shape, floats(j.req("data").unwrap()))
+}
+
+fn assert_close_slice(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = TOL * (1.0 + w.abs());
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn matmul_matches_reference() {
+    let fx = fixtures();
+    let m = fx.req("matmul").unwrap();
+    let (ashape, a) = tensor_of(m.req("a").unwrap());
+    let (bshape, b) = tensor_of(m.req("b").unwrap());
+    let bias = floats(m.req("bias").unwrap());
+    let (rows, k, n) = (ashape[0], ashape[1], bshape[1]);
+    assert_eq!(bshape[0], k);
+
+    let out = kernels::matmul(&a, &b, rows, k, n);
+    assert_close_slice(&out, &floats(m.req("out_nobias").unwrap()), "matmul");
+
+    let mut with_bias = out.clone();
+    for r in 0..rows {
+        for j in 0..n {
+            with_bias[r * n + j] += bias[j];
+        }
+    }
+    assert_close_slice(&with_bias, &floats(m.req("out_none").unwrap()), "matmul+bias");
+
+    let relu: Vec<f32> = with_bias.iter().map(|&v| v.max(0.0)).collect();
+    assert_close_slice(&relu, &floats(m.req("out_relu").unwrap()), "matmul+bias+relu");
+}
+
+#[test]
+fn sgd_matches_reference_sequence() {
+    let fx = fixtures();
+    let s = fx.req("sgd").unwrap();
+    let mut p = floats(s.req("p0").unwrap());
+    let mut m = floats(s.req("m0").unwrap());
+    let lr = s.req("lr").unwrap().as_f64().unwrap() as f32;
+    let mu = s.req("mu").unwrap().as_f64().unwrap() as f32;
+    let wd = s.req("wd").unwrap().as_f64().unwrap() as f32;
+    for g in s.req("grads").unwrap().as_arr().unwrap() {
+        kernels::sgd_nesterov_inplace(&mut p, &mut m, &floats(g), lr, mu, wd);
+    }
+    assert_close_slice(&p, &floats(s.req("p_final").unwrap()), "sgd p");
+    assert_close_slice(&m, &floats(s.req("m_final").unwrap()), "sgd m");
+}
+
+fn check_xent(case: &Json, what: &str) {
+    let (shape, logits) = tensor_of(case.req("logits").unwrap());
+    let labels = ints(case.req("labels").unwrap());
+    let (b, k) = (shape[0], shape[1]);
+    let (loss, c1, c5, dl) = kernels::cross_entropy(&logits, &labels, b, k);
+    let want_loss = case.req("sum_loss").unwrap().as_f64().unwrap();
+    assert!(
+        (loss - want_loss).abs() <= 1e-4 * (1.0 + want_loss.abs()),
+        "{what}: loss {loss} vs {want_loss}"
+    );
+    assert_eq!(c1, case.req("c1").unwrap().as_i64().unwrap(), "{what}: c1");
+    assert_eq!(c5, case.req("c5").unwrap().as_i64().unwrap(), "{what}: c5");
+    assert_close_slice(&dl, &floats(case.req("dlogits").unwrap()), what);
+}
+
+#[test]
+fn cross_entropy_matches_reference_including_ties() {
+    let fx = fixtures();
+    check_xent(fx.req("xent").unwrap(), "xent");
+    check_xent(fx.req("xent_ties").unwrap(), "xent_ties");
+}
+
+#[test]
+fn conv3x3_matches_reference() {
+    let fx = fixtures();
+    let c = fx.req("conv3x3").unwrap();
+    let (xshape, x) = tensor_of(c.req("x").unwrap());
+    let (wshape, w) = tensor_of(c.req("w").unwrap());
+    let (yshape, y) = tensor_of(c.req("y").unwrap());
+    let (b, h, wd, cin) = (xshape[0], xshape[1], xshape[2], xshape[3]);
+    let cout = wshape[1];
+    assert_eq!(wshape[0], 9 * cin);
+    assert_eq!(yshape, vec![b, h, wd, cout]);
+    let patches = kernels::im2col(&x, b, h, wd, cin);
+    let out = kernels::matmul(&patches, &w, b * h * wd, 9 * cin, cout);
+    assert_close_slice(&out, &y, "conv3x3");
+}
+
+#[test]
+fn batchnorm_matches_reference() {
+    let fx = fixtures();
+    let c = fx.req("batchnorm").unwrap();
+    let (xshape, x) = tensor_of(c.req("x").unwrap());
+    let gamma = floats(c.req("gamma").unwrap());
+    let beta = floats(c.req("beta").unwrap());
+    let rows = xshape[0] * xshape[1] * xshape[2];
+    let ch = xshape[3];
+    let (y, _xhat, mean, var, _invstd) = kernels::bn_train(&x, &gamma, &beta, rows, ch);
+    let (_, want_y) = tensor_of(c.req("y").unwrap());
+    assert_close_slice(&y, &want_y, "bn y");
+    assert_close_slice(&mean, &floats(c.req("mean").unwrap()), "bn mean");
+    assert_close_slice(&var, &floats(c.req("var").unwrap()), "bn var");
+}
+
+#[test]
+fn maxpool_matches_reference() {
+    let fx = fixtures();
+    let c = fx.req("maxpool2").unwrap();
+    let (xshape, x) = tensor_of(c.req("x").unwrap());
+    let (b, h, w, ch) = (xshape[0], xshape[1], xshape[2], xshape[3]);
+    let (y, _idx) = kernels::maxpool2(&x, b, h, w, ch);
+    let (_, want) = tensor_of(c.req("y").unwrap());
+    assert_close_slice(&y, &want, "maxpool2");
+}
+
+/// The full-model case: grad / bnstats / eval / fused train step of the
+/// native backend vs `jax.grad` + the python model entry points.
+struct ModelFixture {
+    backend: NativeBackend,
+    params: Vec<Tensor>,
+    batch: HostBatch,
+    case: Json,
+}
+
+fn model_fixture() -> ModelFixture {
+    let fx = fixtures();
+    let m = fx.req("model").unwrap().clone();
+    let width = m.req("width").unwrap().as_usize().unwrap();
+    let classes = m.req("num_classes").unwrap().as_usize().unwrap();
+    let image = m.req("image_size").unwrap().as_usize().unwrap();
+    let backend = NativeBackend::new(NativeSpec::new("parity", width, classes, image)).unwrap();
+
+    // the manifest layout must match the python param_specs order exactly
+    let names: Vec<String> = m
+        .req("param_names")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|n| n.as_str().unwrap().to_string())
+        .collect();
+    let manifest_names: Vec<String> =
+        backend.manifest().params.iter().map(|s| s.name.clone()).collect();
+    assert_eq!(manifest_names, names, "param order contract");
+
+    let params: Vec<Tensor> = m
+        .req("params")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| {
+            let (shape, data) = tensor_of(t);
+            Tensor::new(shape, data).unwrap()
+        })
+        .collect();
+    let batch = HostBatch {
+        images: floats(m.req("images").unwrap()),
+        labels: ints(m.req("labels").unwrap()),
+        batch: m.req("batch").unwrap().as_usize().unwrap(),
+        image_size: image,
+    };
+    ModelFixture { backend, params, batch, case: m }
+}
+
+#[test]
+fn model_grad_matches_jax() {
+    let f = model_fixture();
+    let g = f.case.req("grad").unwrap();
+    let r = f.backend.grad(&f.params, &f.batch).unwrap();
+    let want_loss = g.req("sum_loss").unwrap().as_f64().unwrap();
+    assert!(
+        (r.stats.sum_loss - want_loss).abs() <= 1e-4 * (1.0 + want_loss.abs()),
+        "sum_loss {} vs {want_loss}",
+        r.stats.sum_loss
+    );
+    assert_eq!(r.stats.correct1, g.req("c1").unwrap().as_i64().unwrap());
+    assert_eq!(r.stats.correct5, g.req("c5").unwrap().as_i64().unwrap());
+    let want = g.req("grads").unwrap().as_arr().unwrap();
+    assert_eq!(r.grads.len(), want.len());
+    for (i, (got, w)) in r.grads.iter().zip(want).enumerate() {
+        let (shape, data) = tensor_of(w);
+        assert_eq!(got.shape(), shape.as_slice(), "grad {i} shape");
+        let name = &f.backend.manifest().params[i].name;
+        assert_close_slice(got.data(), &data, &format!("grad {name}"));
+    }
+}
+
+#[test]
+fn model_bn_moments_match_jax() {
+    let f = model_fixture();
+    let moments = f.backend.bn_moments(&f.params, &f.batch).unwrap();
+    let want = f.case.req("bn_moments").unwrap().as_arr().unwrap();
+    assert_eq!(moments.len(), want.len());
+    for (i, (got, w)) in moments.iter().zip(want).enumerate() {
+        let (_, data) = tensor_of(w);
+        let name = &f.backend.manifest().bn_stats[i].name;
+        assert_close_slice(got.data(), &data, &format!("moment {name}"));
+    }
+}
+
+#[test]
+fn model_eval_matches_jax() {
+    let f = model_fixture();
+    // running stats = the batch moments (what the fixture's eval used)
+    let bn = f.backend.bn_moments(&f.params, &f.batch).unwrap();
+    let stats = f.backend.eval_batch(&f.params, &bn, &f.batch).unwrap();
+    let e = f.case.req("eval").unwrap();
+    let want_loss = e.req("sum_loss").unwrap().as_f64().unwrap();
+    assert!(
+        (stats.sum_loss - want_loss).abs() <= 1e-4 * (1.0 + want_loss.abs()),
+        "eval loss {} vs {want_loss}",
+        stats.sum_loss
+    );
+    assert_eq!(stats.correct1, e.req("c1").unwrap().as_i64().unwrap());
+    assert_eq!(stats.correct5, e.req("c5").unwrap().as_i64().unwrap());
+}
+
+#[test]
+fn model_fused_train_step_matches_jax() {
+    let f = model_fixture();
+    let ts = f.case.req("train_step").unwrap();
+    let lr = ts.req("lr").unwrap().as_f64().unwrap() as f32;
+    let mut params = f.params.clone();
+    let mut momentum: Vec<Tensor> = params
+        .iter()
+        .map(|t| Tensor::zeros(t.shape().to_vec()))
+        .collect();
+    f.backend
+        .train_step(&mut params, &mut momentum, &f.batch, lr)
+        .unwrap();
+    for (i, w) in ts.req("params_after").unwrap().as_arr().unwrap().iter().enumerate() {
+        let (_, data) = tensor_of(w);
+        let name = &f.backend.manifest().params[i].name;
+        assert_close_slice(params[i].data(), &data, &format!("p' {name}"));
+    }
+    for (i, w) in ts.req("momentum_after").unwrap().as_arr().unwrap().iter().enumerate() {
+        let (_, data) = tensor_of(w);
+        let name = &f.backend.manifest().params[i].name;
+        assert_close_slice(momentum[i].data(), &data, &format!("m' {name}"));
+    }
+}
+
+#[test]
+fn model_forward_dims_helpers() {
+    // the conv-layer table the backward pass relies on, at fixture dims
+    let d = model::Dims { width: 2, num_classes: 4, image_size: 8 };
+    let layers = model::conv_layers(&d);
+    assert_eq!(layers[0], ("prep", 3, 2, 8));
+    assert_eq!(layers[7], ("res3b", 16, 16, 1));
+    assert!(model::flops_fwd_per_example(&d) > 0);
+}

@@ -92,6 +92,56 @@ fn prop_average_linearity() {
 }
 
 #[test]
+fn prop_average_sets_permutation_invariant() {
+    // phase 3 must not care which order the workers report in
+    property(40, |g| {
+        let w = g.usize_in(2..8);
+        let n = g.usize_in(1..40);
+        let sets: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()])
+            .collect();
+        let avg = tensor::average_sets(&sets).unwrap();
+        let mut perm: Vec<usize> = (0..w).collect();
+        g.rng().shuffle(&mut perm);
+        let shuffled: Vec<Vec<Tensor>> = perm.iter().map(|&i| sets[i].clone()).collect();
+        let avg2 = tensor::average_sets(&shuffled).unwrap();
+        for (a, b) in avg[0].data().iter().zip(avg2[0].data()) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_average_of_identical_sets_is_identity() {
+    property(40, |g| {
+        let w = g.usize_in(1..9);
+        let s = rand_set(g, 2);
+        let avg = tensor::average_sets(&vec![s.clone(); w]).unwrap();
+        for (t, orig) in avg.iter().zip(&s) {
+            for (a, b) in t.data().iter().zip(orig.data()) {
+                assert_close(*a as f64, *b as f64, 1e-6, "identity mean");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_average_agrees_with_manual_mean() {
+    property(40, |g| {
+        let w = g.usize_in(1..9);
+        let n = g.usize_in(1..40);
+        let sets: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()])
+            .collect();
+        let avg = tensor::average_sets(&sets).unwrap();
+        for j in 0..n {
+            let manual: f64 = sets.iter().map(|s| s[0].data()[j] as f64).sum::<f64>() / w as f64;
+            assert_close(avg[0].data()[j] as f64, manual, 1e-5, "elementwise mean");
+        }
+    });
+}
+
+#[test]
 fn prop_cosine_in_unit_interval() {
     property(60, |g| {
         let a = rand_set(g, 2);
@@ -193,6 +243,60 @@ fn prop_schedules_nonnegative_and_finite() {
                 (k * sched.lr(step)) as f64,
                 1e-5,
                 "scaled lr",
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cosine_schedule_bounded_and_warmup_monotone() {
+    property(60, |g| {
+        let warmup = g.usize_in(1..40);
+        let total = warmup + g.usize_in(1..200);
+        let peak = g.f32_in(0.01..2.0);
+        let end_lr = g.f32_in(0.0..1.0) * peak;
+        let s = Schedule::Cosine { peak, warmup, total, end_lr };
+        let lo = end_lr.min(0.0); // warmup starts at 0
+        for step in 0..total + 30 {
+            let lr = s.lr(step);
+            assert!(lr.is_finite());
+            assert!(
+                lr >= lo - 1e-6 && lr <= peak + 1e-6,
+                "cosine lr {lr} outside [{lo}, {peak}] at {step}"
+            );
+        }
+        // warmup is monotone nondecreasing, decay monotone nonincreasing
+        for t in 0..warmup.saturating_sub(1) {
+            assert!(s.lr(t + 1) >= s.lr(t) - 1e-6, "warmup not monotone at {t}");
+        }
+        for t in warmup..total + 10 {
+            assert!(s.lr(t + 1) <= s.lr(t) + 1e-6, "decay not monotone at {t}");
+        }
+        // endpoints
+        assert!((s.lr(warmup) - peak).abs() < 1e-5);
+        assert!((s.lr(total + 29) - end_lr).abs() < 1e-5);
+    });
+}
+
+#[test]
+fn prop_piecewise_schedule_within_breakpoint_envelope() {
+    // linear interpolation can never leave [min bp, max bp]
+    property(60, |g| {
+        let k = g.usize_in(2..6);
+        let mut step = 0usize;
+        let mut pts = Vec::with_capacity(k);
+        for _ in 0..k {
+            pts.push((step, g.f32_in(0.0..2.0)));
+            step += g.usize_in(1..50);
+        }
+        let lo = pts.iter().map(|(_, l)| *l).fold(f32::INFINITY, f32::min);
+        let hi = pts.iter().map(|(_, l)| *l).fold(f32::NEG_INFINITY, f32::max);
+        let s = Schedule::Piecewise(pts);
+        for t in 0..step + 20 {
+            let lr = s.lr(t);
+            assert!(
+                lr >= lo - 1e-6 && lr <= hi + 1e-6,
+                "piecewise lr {lr} outside [{lo}, {hi}] at {t}"
             );
         }
     });

@@ -1,0 +1,210 @@
+//! Compile-only stub of the `xla` crate (see README.md).
+//!
+//! `Literal` carries real host data so conversion round-trips work; the
+//! PJRT client/executable surface compiles but reports that XLA execution
+//! is unavailable at runtime.
+
+use std::fmt;
+
+/// Stub error type (the real crate wraps XLA status codes).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the compile-only xla stub crate \
+         (rust/vendor/xla); swap it for the real xla crate to execute \
+         HLO artifacts"
+    )))
+}
+
+/// Element types a stub literal can hold.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Marker trait for element types supported by the stub.
+pub trait ElementType: Copy {
+    fn wrap(data: &[Self]) -> Data;
+    fn unwrap(data: &Data) -> Result<Vec<Self>>;
+}
+
+impl ElementType for f32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::F32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>> {
+        match data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => unavailable("Literal element type mismatch (want f32)"),
+        }
+    }
+}
+
+impl ElementType for i32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::I32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>> {
+        match data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => unavailable("Literal element type mismatch (want i32)"),
+        }
+    }
+}
+
+/// Host literal: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    pub fn vec1<T: ElementType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} ({} elements) to {:?}",
+                self.dims,
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    pub fn get_first_element<T: ElementType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element on empty literal".into()))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// The stub never produces tuple literals (only real PJRT execution
+    /// does), so decomposition always fails.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Array shape (dims only — the stub is f32/i32 untyped here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Stub PJRT client: constructible surface, unavailable at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
