@@ -1,11 +1,12 @@
 //! Microbenchmarks of the L3 hot paths (own harness; no criterion in the
 //! vendored set): executable invocation, host SGD update, ring all-reduce,
-//! weight averaging, batch assembly, literal conversion. These are the
-//! §Perf L3 numbers in EXPERIMENTS.md.
+//! weight averaging, batch assembly, literal conversion — plus
+//! sequential-vs-parallel wall time for the kernel-threaded native engine.
+//! These are the §Perf L3 numbers in EXPERIMENTS.md.
 //! Run: cargo bench --bench microbench
 
 use swap::bench::{bench, Table};
-use swap::coordinator::allreduce;
+use swap::coordinator::{allreduce, parallel};
 use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::ParamSet;
 use swap::optim::{SgdConfig, SgdOptimizer};
@@ -17,15 +18,21 @@ fn main() -> swap::util::Result<()> {
     // Engine::load("artifacts/cifar10sim") + --features xla to bench PJRT)
     let engine =
         NativeBackend::new(NativeSpec::new("cifar10sim", 8, 10, 32).with_batches(&[64]))?;
+    let threads = parallel::default_threads();
+    let engine_mt = NativeBackend::new(
+        NativeSpec::new("cifar10sim", 8, 10, 32)
+            .with_batches(&[64])
+            .with_threads(threads),
+    )?;
     let m = engine.manifest().clone();
     let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 1));
     let ds = gen.sample(256, 10);
     let mut rng = Rng::new(0);
-    let mut batcher = Batcher::new(64, m.model.image_size, AugmentSpec::cifar_default());
+    let batcher = Batcher::new(64, m.model.image_size, AugmentSpec::cifar_default());
     let idx: Vec<usize> = (0..64).collect();
 
     let mut t = Table::new(
-        "L3 microbenchmarks (cifar10sim, B=64)",
+        &format!("L3 microbenchmarks (cifar10sim, B=64, threads={threads})"),
         &["op", "mean (ms)", "std (ms)", "min (ms)"],
     );
     let mut row = |name: &str, s: swap::bench::Stats| {
@@ -37,13 +44,15 @@ fn main() -> swap::util::Result<()> {
         ]);
     };
 
-    // batch assembly + augmentation
+    // batch assembly + augmentation into a reused HostBatch (the zero-
+    // allocation hot-loop handoff)
+    let mut reuse = batcher.make_batch();
     let s = bench(3, 20, || {
-        let _ = batcher.assemble(&ds, &idx, &mut rng);
+        batcher.assemble_into(&ds, &idx, &mut rng, &mut reuse);
     });
-    row("batch assemble+augment", s);
+    row("batch assemble+augment (reused)", s);
 
-    // fused train step (the phase-2 hot path, includes literal conversion)
+    // fused train step (the phase-2 hot path), sequential vs parallel
     let mut params = ParamSet::init(&m, 0);
     let mut mom = params.zeros_like();
     let hb = batcher.assemble(&ds, &idx, &mut rng);
@@ -52,13 +61,23 @@ fn main() -> swap::util::Result<()> {
             .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
             .unwrap();
     });
-    row("fused train step (exec)", s);
+    row("fused train step (threads=1)", s);
+    let s = bench(2, 10, || {
+        engine_mt
+            .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
+            .unwrap();
+    });
+    row(&format!("fused train step (threads={threads})"), s);
 
-    // gradient step (phase-1 per-worker call)
+    // gradient step (phase-1 per-worker call), sequential vs parallel
     let s = bench(2, 10, || {
         engine.grad(params.as_slice(), &hb).unwrap();
     });
-    row("grad step (exec)", s);
+    row("grad step (threads=1)", s);
+    let s = bench(2, 10, || {
+        engine_mt.grad(params.as_slice(), &hb).unwrap();
+    });
+    row(&format!("grad step (threads={threads})"), s);
 
     // host SGD update over all tensors
     let g = engine.grad(params.as_slice(), &hb)?;
@@ -81,6 +100,25 @@ fn main() -> swap::util::Result<()> {
         ParamSet::average(&models).unwrap();
     });
     row("weight average (W=8)", s);
+
+    // 8 independent grads on 1 thread vs the shared pool — the shape of
+    // SWAP's phase-2 fan-out, without the training-loop bookkeeping
+    let batches: Vec<_> = (0..8).map(|_| batcher.assemble(&ds, &idx, &mut rng)).collect();
+    let s = bench(1, 5, || {
+        for hb in &batches {
+            engine.grad(params.as_slice(), hb).unwrap();
+        }
+    });
+    row("8 worker grads (sequential)", s);
+    let s = bench(1, 5, || {
+        let rs = parallel::parallel_map(threads, batches.iter().collect(), |_, hb| {
+            engine.grad(params.as_slice(), hb)
+        });
+        for r in rs {
+            r.unwrap();
+        }
+    });
+    row(&format!("8 worker grads (threads={threads})"), s);
 
     t.print();
     std::fs::create_dir_all("results")?;

@@ -1,0 +1,62 @@
+//! Sequential-vs-parallel smoke bench: the same SWAP configuration (W=4
+//! phase-2 workers) at `threads=1` and `threads=N`, end to end. Emits
+//! `BENCH_parallel.json` (and a copy under results/) with both wall times
+//! and verifies the acceptance property along the way: the two runs must
+//! produce BITWISE-identical final parameters.
+//! Run: cargo bench --bench parallel_scaling
+
+use swap::bench::time_once;
+use swap::config::preset;
+use swap::coordinator::{parallel, run_swap};
+use swap::experiments::Lab;
+use swap::util::{Json, Result};
+
+fn run_at(threads: usize) -> Result<(f64, swap::coordinator::SwapResult)> {
+    let mut cfg = preset("native")?;
+    // a small but non-trivial SWAP arm: phase 2 dominates, W=4 workers
+    cfg.apply_kv("workers", "4")?;
+    cfg.apply_kv("lb_devices", "4")?;
+    cfg.apply_kv("phase1_max_epochs", "1")?;
+    cfg.apply_kv("phase1_stop_acc", "1.1")?;
+    cfg.apply_kv("phase2_epochs", "2")?;
+    cfg.apply_kv("threads", &threads.to_string())?;
+    let lab = Lab::new(cfg)?;
+    let (secs, r) = time_once(|| run_swap(&lab.env(), &lab.swap_arm(lab.cfg.seed)));
+    Ok((secs, r?))
+}
+
+fn main() -> Result<()> {
+    let threads = parallel::default_threads().max(2);
+    let (seq_s, seq) = run_at(1)?;
+    let (par_s, par) = run_at(threads)?;
+
+    let identical = seq.final_params == par.final_params;
+    let speedup = seq_s / par_s.max(1e-12);
+    println!(
+        "SWAP W=4: threads=1 {seq_s:.2}s | threads={threads} {par_s:.2}s | \
+         speedup {speedup:.2}x | bitwise identical: {identical}"
+    );
+    assert!(
+        identical,
+        "threads={threads} must produce bitwise-identical final params"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("swap_parallel_scaling".to_string())),
+        ("workers", Json::Num(4.0)),
+        ("threads_sequential", Json::Num(1.0)),
+        ("threads_parallel", Json::Num(threads as f64)),
+        ("sequential_wall_seconds", Json::Num(seq_s)),
+        ("parallel_wall_seconds", Json::Num(par_s)),
+        ("speedup", Json::Num(speedup)),
+        ("bitwise_identical", Json::Bool(identical)),
+        ("final_acc_sequential", Json::Num(seq.final_stats.accuracy1())),
+        ("final_acc_parallel", Json::Num(par.final_stats.accuracy1())),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_parallel.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_parallel.json", &json)?;
+    println!("wrote BENCH_parallel.json");
+    Ok(())
+}

@@ -23,11 +23,12 @@ pub fn cosine_to_target(
     let mut out = SeriesLog::new(&["step", "cosine", "grad_norm", "dist_to_target"]);
     let b = env.exec_batch;
     let mut rng = Rng::stream(seed, 0xF16);
-    let mut batcher = Batcher::new(b, env.image_size(), AugmentSpec::none());
+    let batcher = Batcher::new(b, env.image_size(), AugmentSpec::none());
+    let mut hb = batcher.make_batch();
     for (step, theta) in trail {
         // a random clean training batch for the gradient probe
         let idx: Vec<usize> = (0..b).map(|_| rng.below(env.train.n)).collect();
-        let hb = batcher.assemble_clean(env.train, &idx);
+        batcher.assemble_clean_into(env.train, &idx, &mut hb);
         let g = env.engine.grad(theta.as_slice(), &hb)?;
         // -g direction vs (target - theta)
         let delta = tensor::sets_sub(&target.tensors, &theta.tensors)?;

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! swap-train <command> [--preset NAME] [--config FILE]
-//!            [--set key=value]... [--runs N] [--seed N]
+//!            [--set key=value]... [--runs N] [--seed N] [--threads N]
 //! ```
 //!
 //! Commands: swap | sb | lb | swa | local-sgd | table1 | table2 | table3 |
@@ -23,7 +23,7 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
-const VALUE_FLAGS: &[&str] = &["preset", "config", "set", "runs", "seed", "out"];
+const VALUE_FLAGS: &[&str] = &["preset", "config", "set", "runs", "seed", "threads", "out"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -97,6 +97,9 @@ impl Args {
         if let Some(s) = self.get("seed") {
             cfg.apply_kv("seed", s)?;
         }
+        if let Some(t) = self.get("threads") {
+            cfg.apply_kv("threads", t)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -115,7 +118,7 @@ pub const HELP: &str = "\
 swap-train — SWAP (Stochastic Weight Averaging in Parallel, ICLR 2020)
 
 USAGE:  swap-train <command> [--preset NAME] [--config FILE]
-                   [--set key=value]... [--runs N] [--seed N]
+                   [--set key=value]... [--runs N] [--seed N] [--threads N]
 
 Training commands (print a run summary):
   swap        run the three-phase SWAP algorithm
@@ -141,7 +144,13 @@ Backends (--set backend=...):
   native    pure-rust engine, no artifacts needed        [default]
   xla       PJRT over AOT HLO artifacts (build with --features xla,
             generate artifacts with `python -m compile.aot`)
-Env: SWAP_RUNS=N override runs, SWAP_LOG=debug|info|warn|quiet";
+Threads (--threads N / --set threads=N):
+  0         auto: SWAP_THREADS env var, else available parallelism [default]
+  1         fully sequential execution
+  N         phase-2 workers / phase-1 shards / native kernels on N OS
+            threads; results are bitwise identical for every N
+Env: SWAP_RUNS=N override runs, SWAP_THREADS=N default thread count,
+     SWAP_LOG=debug|info|warn|quiet";
 
 #[cfg(test)]
 mod tests {
@@ -197,6 +206,8 @@ mod tests {
             "9",
             "--seed",
             "77",
+            "--threads",
+            "2",
         ]))
         .unwrap();
         let cfg = a.config("cifar10sim").unwrap();
@@ -204,6 +215,7 @@ mod tests {
         assert_eq!(cfg.n_train, 128);
         assert_eq!(cfg.runs, 9);
         assert_eq!(cfg.seed, 77);
+        assert_eq!(cfg.threads, 2);
     }
 
     #[test]

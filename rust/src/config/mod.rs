@@ -36,6 +36,11 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// statistics are collected over this many runs (paper: 10 / 3)
     pub runs: usize,
+    /// OS worker threads for real parallel execution (phase-2 workers,
+    /// phase-1 device shards, native kernels). 0 = auto (the SWAP_THREADS
+    /// env var if set, else available parallelism); 1 reproduces the fully
+    /// sequential path; every value is bitwise-identical.
+    pub threads: usize,
 
     // ---- model (resnet9s) ----
     /// base channel count c (mirrors python/compile/aot.py presets)
@@ -95,10 +100,21 @@ impl ExperimentConfig {
         std::path::Path::new(&self.artifacts_root).join(&self.preset)
     }
 
+    /// Resolved worker-thread count (0 = auto -> SWAP_THREADS env var or
+    /// available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::coordinator::parallel::default_threads()
+        } else {
+            self.threads
+        }
+    }
+
     /// The native-backend model spec derived from this config.
     pub fn native_spec(&self) -> NativeSpec {
         NativeSpec::new(&self.preset, self.model_width, self.num_classes, self.image_size)
             .with_batches(&[self.exec_batch])
+            .with_threads(self.resolved_threads())
     }
 
     /// Instantiate the selected execution backend.
@@ -191,6 +207,7 @@ impl ExperimentConfig {
         match key.trim() {
             "seed" => self.seed = p(key, value)?,
             "runs" => self.runs = p(key, value)?,
+            "threads" => self.threads = p(key, value)?,
             "backend" => self.backend = value.trim().to_string(),
             "model_width" => self.model_width = p(key, value)?,
             "num_classes" => self.num_classes = p(key, value)?,
@@ -317,6 +334,9 @@ mod tests {
         let mut cfg = preset("tiny").unwrap();
         cfg.apply_kv("runs", "7").unwrap();
         assert_eq!(cfg.runs, 7);
+        cfg.apply_kv("threads", "3").unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.resolved_threads(), 3);
         cfg.apply_kv("sb_peak_lr", "0.42").unwrap();
         assert!((cfg.sb_peak_lr - 0.42).abs() < 1e-6);
         cfg.apply_kv("augment", "false").unwrap();
@@ -344,6 +364,16 @@ mod tests {
         let mut cfg = preset("tiny").unwrap();
         cfg.n_train = 8; // smaller than the LB global batch
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn threads_zero_resolves_to_auto() {
+        let mut cfg = preset("tiny").unwrap();
+        cfg.threads = 0;
+        assert!(cfg.resolved_threads() >= 1);
+        // the native spec inherits the resolved count
+        cfg.threads = 2;
+        assert_eq!(cfg.native_spec().threads, 2);
     }
 
     #[test]

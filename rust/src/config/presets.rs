@@ -17,6 +17,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         artifacts_root: "artifacts".to_string(),
         seed: 42,
         runs: 3,
+        threads: 0, // auto: SWAP_THREADS env or available parallelism
         model_width: 8,
         num_classes: 10,
         image_size: 32,

@@ -7,6 +7,7 @@
 //! devices switch to *local* updates (fused small-batch steps) and average
 //! their PARAMETERS every `h_steps` steps.
 
+use super::parallel;
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
 use crate::data::{AugmentSpec, Batcher, EpochSampler};
 use crate::metrics::RunOutcome;
@@ -72,25 +73,40 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
     let mut samplers: Vec<EpochSampler> = (0..cfg.devices)
         .map(|w| EpochSampler::new(env.train.n, b, cfg.seed, 500 + w as u64))
         .collect();
-    let mut batcher = Batcher::new(b, env.image_size(), env.augment);
+    let batcher = Batcher::new(b, env.image_size(), env.augment);
     let mut aug_rng = Rng::stream(cfg.seed ^ 0x10CA1, 0);
+    // one reused HostBatch per device (no allocation in the step loop)
+    let mut device_batches: Vec<_> = (0..cfg.devices).map(|_| batcher.make_batch()).collect();
 
     let steps_per_epoch = env.train.n / b;
     let total_local_steps = cfg.local_epochs * steps_per_epoch;
     let step_time = env.cost.train_step_time(b);
     let mut sync_events = 0usize;
+    // per-step fan-out only when one local step outweighs a thread spawn
+    let step_work = 3 * env.engine.manifest().flops_fwd_per_example as usize * b;
+    let step_threads = parallel::gate(env.threads, step_work);
 
     for step in 0..total_local_steps {
-        for w in 0..cfg.devices {
+        // sample + assemble in device order on this thread (the shared
+        // augmentation RNG keeps the sequential consumption order) ...
+        for (w, hb) in device_batches.iter_mut().enumerate() {
             let idx = samplers[w].next_batch().to_vec();
-            let hb = batcher.assemble(env.train, &idx, &mut aug_rng);
-            let lr = cfg.local_sched.lr(step);
-            env.engine.train_step(
-                worker_params[w].as_mut_slice(),
-                worker_mom[w].as_mut_slice(),
-                &hb,
-                lr,
-            )?;
+            batcher.assemble_into(env.train, &idx, &mut aug_rng, hb);
+        }
+        // ... then the devices really do step in parallel, each owning its
+        // replica + momentum (disjoint &mut borrows) and reading its batch
+        let lr = cfg.local_sched.lr(step);
+        let items: Vec<_> = worker_params
+            .iter_mut()
+            .zip(worker_mom.iter_mut())
+            .zip(device_batches.iter())
+            .map(|((wp, wm), hb)| (wp, wm, hb))
+            .collect();
+        let results = parallel::parallel_map(step_threads, items, |_, (wp, wm, hb)| {
+            env.engine.train_step(wp.as_mut_slice(), wm.as_mut_slice(), hb, lr)
+        });
+        for r in results {
+            r?;
         }
         // local steps run in parallel on the modeled cluster
         clock.advance_compute(step_time);

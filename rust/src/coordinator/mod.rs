@@ -2,6 +2,8 @@
 //!
 //! * `trainer`   — shared synchronous data-parallel loop + eval + BN
 //! * `allreduce` — ring all-reduce (value) over worker gradient shards
+//! * `parallel`  — real OS-thread execution (`std::thread::scope`), shared
+//!                 by phase-2 workers, phase-1 shards, and native kernels
 //! * `swap`      — Algorithm 1 (three phases)
 //! * `baseline`  — pure small-/large-batch SGD arms (Tables 1-3)
 //! * `swa`       — sequential SWA baseline (Table 4)
@@ -10,6 +12,7 @@
 pub mod allreduce;
 pub mod baseline;
 pub mod local_sgd;
+pub mod parallel;
 pub mod resume;
 pub mod swa;
 pub mod swap;

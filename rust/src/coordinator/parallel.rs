@@ -1,0 +1,291 @@
+//! Real thread-parallel execution, built on `std::thread::scope` — zero
+//! new dependencies. The paper's phase-2 workers "refine … independently
+//! and in parallel"; this module is what makes the executed system match
+//! the modeled one (the `ClusterClock` merely prices that parallelism).
+//!
+//! Determinism contract: every helper partitions work so each output
+//! element is computed by exactly one thread with the same floating-point
+//! operation order as the sequential path. Results are therefore bitwise
+//! identical for every `threads` value, and `threads <= 1` short-circuits
+//! to a plain loop on the calling thread (no thread is ever spawned).
+//!
+//! Used by the SWAP coordinator (phase-2 workers, phase-1 device shards,
+//! local-SGD devices) and by the native backend's im2col/matmul/BN kernels
+//! (`runtime::native::kernels`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    /// True on threads spawned by `parallel_map` — the signal that a
+    /// coarser fan-out already owns the core budget, so the fine-grained
+    /// kernel helpers below stay sequential instead of oversubscribing
+    /// (workers x shards x kernels would otherwise multiply).
+    static IN_PARALLEL_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is itself a `parallel_map` worker.
+pub fn in_parallel_region() -> bool {
+    IN_PARALLEL_REGION.with(|c| c.get())
+}
+
+/// Minimum useful per-item work (very roughly, scalar FLOPs) before a
+/// per-step `parallel_map` fan-out beats its thread spawn/join cost —
+/// callers with a work estimate (e.g. per-shard gradient FLOPs) drop to
+/// `threads = 1` below it. Purely a wall-time knob: results never depend
+/// on it.
+pub const MIN_ITEM_WORK: usize = 1 << 20;
+
+/// Hard cap on threads spawned by one helper call, whatever the `threads`
+/// knob says — `--threads 100000` (a typo for 10) must degrade to a slow
+/// run, not abort the process once the OS thread limit is hit. Results
+/// are identical either way.
+pub const MAX_SPAWN: usize = 256;
+
+/// The spawn gate: use `threads` workers only when one item is worth more
+/// than a thread spawn, else stay sequential. One source of truth for the
+/// coordinator's per-step fan-outs (trainer shards, local-SGD devices).
+pub fn gate(threads: usize, per_item_work: usize) -> usize {
+    if per_item_work >= MIN_ITEM_WORK {
+        threads
+    } else {
+        1
+    }
+}
+
+/// Default worker-thread count: the `SWAP_THREADS` environment variable if
+/// set (CI's parallel lane), else `std::thread::available_parallelism()`.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("SWAP_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` OS threads; results come
+/// back in item order. Items are claimed from a shared queue, so uneven
+/// per-item cost load-balances. With `threads <= 1` (or a single item)
+/// this is a sequential loop on the calling thread — the two paths are
+/// observationally identical because `f(i, item)` owns all per-item state.
+///
+/// A panic inside `f` propagates to the caller (scope joins all workers).
+pub fn parallel_map<I, T, F>(threads: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I) -> T + Sync,
+{
+    let n = items.len();
+    // nested fan-outs (a phase-2 worker's own shard map) stay sequential:
+    // the outer map already owns the cores, and one flat level of real
+    // threads is both faster and easier to reason about
+    if threads <= 1 || n <= 1 || in_parallel_region() {
+        return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let queue: Vec<Mutex<Option<I>>> =
+        items.into_iter().map(|it| Mutex::new(Some(it))).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n).min(MAX_SPAWN);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_PARALLEL_REGION.with(|c| c.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = queue[i].lock().unwrap().take().expect("item claimed once");
+                    let out = f(i, item);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every slot filled"))
+        .collect()
+}
+
+/// Split `out` — a row-major buffer of `row_len`-element rows — into up to
+/// `threads` contiguous row chunks and run `f(first_row, chunk)` on each
+/// concurrently. `f` must compute every row independently of the chunking
+/// (each row's value depends only on its own index), which makes the
+/// result bitwise identical for every `threads`; with one worker `f` sees
+/// the whole buffer, i.e. exactly the sequential loop.
+pub fn parallel_row_chunks<T: Send>(
+    threads: usize,
+    out: &mut [T],
+    row_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if out.is_empty() || row_len == 0 {
+        return;
+    }
+    assert_eq!(out.len() % row_len, 0, "buffer not a whole number of rows");
+    let rows = out.len() / row_len;
+    // a coarser fan-out (phase-2 workers, phase-1 shards) already owns the
+    // cores: stay sequential rather than oversubscribe threads^2
+    let workers = if in_parallel_region() {
+        1
+    } else {
+        threads.min(rows).min(MAX_SPAWN).max(1)
+    };
+    if workers <= 1 {
+        f(0, out);
+        return;
+    }
+    let per = (rows + workers - 1) / workers;
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            let fr = &f;
+            s.spawn(move || fr(ci * per, chunk));
+        }
+    });
+}
+
+/// Two-buffer variant of [`parallel_row_chunks`]: `a` and `b` share the
+/// same row count and are chunked at the same row boundaries (e.g. BN's
+/// `xhat` and `y`, written in one fused loop).
+pub fn parallel_row_chunks2<T: Send, U: Send>(
+    threads: usize,
+    a: &mut [T],
+    b: &mut [U],
+    row_len_a: usize,
+    row_len_b: usize,
+    f: impl Fn(usize, &mut [T], &mut [U]) + Sync,
+) {
+    if a.is_empty() || row_len_a == 0 || row_len_b == 0 {
+        return;
+    }
+    assert_eq!(a.len() % row_len_a, 0, "buffer a not a whole number of rows");
+    assert_eq!(b.len() % row_len_b, 0, "buffer b not a whole number of rows");
+    assert_eq!(
+        a.len() / row_len_a,
+        b.len() / row_len_b,
+        "buffers disagree on row count"
+    );
+    let rows = a.len() / row_len_a;
+    let workers = if in_parallel_region() {
+        1
+    } else {
+        threads.min(rows).min(MAX_SPAWN).max(1)
+    };
+    if workers <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let per = (rows + workers - 1) / workers;
+    std::thread::scope(|s| {
+        for (ci, (ca, cb)) in a
+            .chunks_mut(per * row_len_a)
+            .zip(b.chunks_mut(per * row_len_b))
+            .enumerate()
+        {
+            let fr = &f;
+            s.spawn(move || fr(ci * per, ca, cb));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_runs_all() {
+        for threads in [1, 2, 4, 9] {
+            let items: Vec<usize> = (0..23).collect();
+            let out = parallel_map(threads, items, |i, x| {
+                assert_eq!(i, x);
+                x * 10
+            });
+            assert_eq!(out, (0..23).map(|x| x * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_moves_items_in() {
+        // non-Copy items are owned by the closure invocation
+        let items: Vec<Vec<u8>> = (0..5).map(|i| vec![i as u8; 3]).collect();
+        let out = parallel_map(3, items, |_, v| v.len());
+        assert_eq!(out, vec![3; 5]);
+    }
+
+    #[test]
+    fn map_empty_is_empty() {
+        let out: Vec<usize> = parallel_map(4, Vec::<usize>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn row_chunks_cover_disjointly() {
+        for threads in [1, 2, 3, 8, 100] {
+            let mut buf = vec![0u32; 7 * 4]; // 7 rows of 4
+            parallel_row_chunks(threads, &mut buf, 4, |first_row, chunk| {
+                for (li, row) in chunk.chunks_mut(4).enumerate() {
+                    for v in row.iter_mut() {
+                        *v = (first_row + li) as u32 + 1;
+                    }
+                }
+            });
+            let want: Vec<u32> = (0..7).flat_map(|r| [r + 1; 4]).collect();
+            assert_eq!(buf, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn row_chunks2_share_boundaries() {
+        for threads in [1, 4] {
+            let mut a = vec![0u32; 5 * 2];
+            let mut b = vec![0u32; 5 * 3];
+            parallel_row_chunks2(threads, &mut a, &mut b, 2, 3, |r0, ca, cb| {
+                assert_eq!(ca.len() / 2, cb.len() / 3);
+                for (li, row) in ca.chunks_mut(2).enumerate() {
+                    row.fill((r0 + li) as u32);
+                }
+                for (li, row) in cb.chunks_mut(3).enumerate() {
+                    row.fill((r0 + li) as u32);
+                }
+            });
+            for r in 0..5 {
+                assert!(a[r * 2..(r + 1) * 2].iter().all(|&v| v == r as u32));
+                assert!(b[r * 3..(r + 1) * 3].iter().all(|&v| v == r as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_fanout_degrades_to_sequential() {
+        // inside a parallel_map worker the region flag is set, so nested
+        // maps and row chunks run inline (no threads^2 oversubscription) —
+        // and produce identical results either way
+        assert!(!in_parallel_region());
+        let out = parallel_map(4, vec![0usize, 1], |_, x| {
+            assert!(in_parallel_region());
+            let inner = parallel_map(4, vec![10usize, 20, 30], |_, y| y + x);
+            let mut buf = vec![0u32; 8];
+            parallel_row_chunks(4, &mut buf, 2, |r0, chunk| {
+                for (li, row) in chunk.chunks_mut(2).enumerate() {
+                    row.fill((r0 + li) as u32);
+                }
+            });
+            (inner, buf)
+        });
+        assert_eq!(out[0].0, vec![10, 20, 30]);
+        assert_eq!(out[1].0, vec![11, 21, 31]);
+        assert_eq!(out[0].1, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        // the flag is confined to worker threads, not the caller
+        assert!(!in_parallel_region());
+    }
+}

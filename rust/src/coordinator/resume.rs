@@ -140,49 +140,53 @@ pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Res
     let phase1_params = params.clone();
 
     // ---- phase 2 (skip finished workers) --------------------------------
-    let mut worker_params = Vec::with_capacity(cfg.workers);
-    let mut group_durations = Vec::with_capacity(cfg.workers);
-    for w in 0..cfg.workers {
-        let ckpt = dir.worker_ckpt(w);
-        // every worker's modeled duration counts even when its work is
-        // loaded from disk — the virtual cluster ran it either way
-        let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
-        let mut wclock = ClusterClock::new();
-        if ckpt.exists() {
-            crate::info!("resume: worker {w} loaded");
-            worker_params.push(load_params(&ckpt, env.engine.manifest())?);
-            wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
-            if cfg.group_devices > 1 {
-                for _ in 0..steps {
-                    wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
+    // Unfinished workers train CONCURRENTLY on `env.threads` OS threads
+    // (checkpoint files are per-worker, so the saves are disjoint); worker
+    // k's result is a pure function of (seed, 100 + k) either way, so a
+    // resumed, fresh, sequential or parallel run all agree bitwise.
+    let worker_runs = super::parallel::parallel_map(
+        env.threads,
+        (0..cfg.workers).collect::<Vec<_>>(),
+        |_, w| -> crate::util::Result<(ParamSet, ClusterClock)> {
+            let ckpt = dir.worker_ckpt(w);
+            // every worker's modeled duration counts even when its work is
+            // loaded from disk — the virtual cluster ran it either way
+            let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
+            let mut wclock = ClusterClock::new();
+            if ckpt.exists() {
+                crate::info!("resume: worker {w} loaded");
+                let wp = load_params(&ckpt, env.engine.manifest())?;
+                wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
+                if cfg.group_devices > 1 {
+                    for _ in 0..steps {
+                        wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
+                    }
                 }
+                Ok((wp, wclock))
+            } else {
+                let mut wp = params.clone();
+                let mut wm = wp.zeros_like();
+                run_sync_training(
+                    env,
+                    &mut wp,
+                    &mut wm,
+                    &super::swap::phase2_worker_config(cfg, env, w),
+                    &mut wclock,
+                    |_, _, _| {},
+                )?;
+                save_params(&ckpt, env.engine.manifest(), &wp)?;
+                Ok((wp, wclock))
             }
-        } else {
-            let mut wp = params.clone();
-            let mut wm = wp.zeros_like();
-            run_sync_training(
-                env,
-                &mut wp,
-                &mut wm,
-                &SyncTrainConfig {
-                    devices: cfg.group_devices,
-                    global_batch: cfg.group_devices * env.exec_batch,
-                    max_epochs: cfg.phase2_epochs,
-                    stop_train_acc: 1.1,
-                    sched: cfg.phase2_sched.clone(),
-                    sched_offset: 0,
-                    seed_stream: 100 + w as u64,
-                    seed: cfg.seed,
-                },
-                &mut wclock,
-                |_, _, _| {},
-            )?;
-            save_params(&ckpt, env.engine.manifest(), &wp)?;
-            worker_params.push(wp);
-        }
-        group_durations.push(wclock.seconds);
+        },
+    );
+    let mut worker_params = Vec::with_capacity(cfg.workers);
+    let mut group_clocks = Vec::with_capacity(cfg.workers);
+    for run in worker_runs {
+        let (wp, wclock) = run?;
+        worker_params.push(wp);
+        group_clocks.push(wclock);
     }
-    clock.advance_parallel(&group_durations);
+    clock.advance_parallel(&group_clocks);
     let phase2_seconds = clock.seconds;
 
     // ---- phase 3 (same as run_swap) --------------------------------------

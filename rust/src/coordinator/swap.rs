@@ -9,6 +9,7 @@
 //! Phase 3: the divergent replicas are weight-averaged and the batch-norm
 //!          statistics are recomputed over the training data.
 
+use super::parallel;
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
 use crate::model::{BnState, ParamSet};
 use crate::optim::Schedule;
@@ -47,6 +48,22 @@ impl SwapConfig {
 
 /// Per-worker phase-2 snapshot trail (for Figures 1 and 4).
 pub type Snapshots = Vec<Vec<(usize, ParamSet)>>;
+
+/// The sync-training recipe of phase-2 worker `w` — ONE definition shared
+/// by `run_swap` and `run_swap_resumable`, so a fresh run and a resumed
+/// run can never diverge on the worker configuration.
+pub(crate) fn phase2_worker_config(cfg: &SwapConfig, env: &TrainEnv, w: usize) -> SyncTrainConfig {
+    SyncTrainConfig {
+        devices: cfg.group_devices,
+        global_batch: cfg.group_devices * env.exec_batch,
+        max_epochs: cfg.phase2_epochs,
+        stop_train_acc: 1.1, // never early-stop in phase 2
+        sched: cfg.phase2_sched.clone(),
+        sched_offset: 0,
+        seed_stream: 100 + w as u64, // different randomization per worker
+        seed: cfg.seed,
+    }
+}
 
 /// Everything the tables/figures need from one SWAP run.
 pub struct SwapResult {
@@ -123,44 +140,51 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
 
     // ---------------- Phase 2: independent refinement ------------------
     // Each group starts from the phase-1 weights with fresh momentum and a
-    // distinct data stream; groups run in parallel on the modeled cluster.
+    // distinct data stream. The groups run CONCURRENTLY on real OS threads
+    // (`env.threads` of them) — the system the paper describes, not just
+    // the one the ClusterClock models. Every worker's state (params,
+    // momentum, sampler, augmentation RNG, clock, snapshot trail) is
+    // derived from its own (seed, 100 + w) stream inside the closure, so
+    // the result is bitwise identical for any thread count, including the
+    // fully sequential `threads = 1` path.
+    let snap = cfg.snapshot_every;
+    let worker_runs = parallel::parallel_map(
+        env.threads,
+        (0..cfg.workers).collect::<Vec<_>>(),
+        |_, w| -> Result<(ParamSet, ClusterClock, Vec<(usize, ParamSet)>)> {
+            let mut wp = params.clone();
+            let mut wm = wp.zeros_like();
+            let mut wclock = ClusterClock::new();
+            let mut trail = Vec::new();
+            run_sync_training(
+                env,
+                &mut wp,
+                &mut wm,
+                &phase2_worker_config(cfg, env, w),
+                &mut wclock,
+                |step, ps, _| {
+                    if let Some(every) = snap {
+                        if step % every == 0 {
+                            trail.push((step, ps.clone()));
+                        }
+                    }
+                },
+            )?;
+            Ok((wp, wclock, trail))
+        },
+    );
     let mut worker_params = Vec::with_capacity(cfg.workers);
     let mut snapshots: Snapshots = Vec::with_capacity(cfg.workers);
-    let mut group_durations = Vec::with_capacity(cfg.workers);
-    for w in 0..cfg.workers {
-        let mut wp = params.clone();
-        let mut wm = wp.zeros_like();
-        let mut wclock = ClusterClock::new();
-        let mut trail = Vec::new();
-        let snap = cfg.snapshot_every;
-        run_sync_training(
-            env,
-            &mut wp,
-            &mut wm,
-            &SyncTrainConfig {
-                devices: cfg.group_devices,
-                global_batch: cfg.group_devices * env.exec_batch,
-                max_epochs: cfg.phase2_epochs,
-                stop_train_acc: 1.1, // never early-stop in phase 2
-                sched: cfg.phase2_sched.clone(),
-                sched_offset: 0,
-                seed_stream: 100 + w as u64, // different randomization per worker
-                seed: cfg.seed,
-            },
-            &mut wclock,
-            |step, ps, _| {
-                if let Some(every) = snap {
-                    if step % every == 0 {
-                        trail.push((step, ps.clone()));
-                    }
-                }
-            },
-        )?;
-        group_durations.push(wclock.seconds);
+    let mut group_clocks = Vec::with_capacity(cfg.workers);
+    for run in worker_runs {
+        let (wp, wclock, trail) = run?;
         worker_params.push(wp);
+        group_clocks.push(wclock);
         snapshots.push(trail);
     }
-    clock.advance_parallel(&group_durations);
+    // the modeled cluster waits for the slowest group, absorbing its full
+    // compute/comm breakdown (not booking comm seconds as compute)
+    clock.advance_parallel(&group_clocks);
     let phase2_seconds = clock.seconds;
 
     // reporting-only: each worker's test accuracy before averaging

@@ -3,6 +3,7 @@
 //! batch-norm recomputation.
 
 use super::allreduce;
+use super::parallel;
 use crate::data::{sequential_batches, AugmentSpec, Batcher, Dataset, EpochSampler, shard};
 use crate::model::{BnState, ParamSet};
 use crate::optim::{Schedule, SgdConfig, SgdOptimizer};
@@ -22,6 +23,10 @@ pub struct TrainEnv<'a> {
     pub exec_batch: usize,
     /// training batches used to recompute BN statistics in phase 3
     pub bn_batches: usize,
+    /// OS threads for real parallel execution (phase-2 workers, phase-1
+    /// device shards). 1 = fully sequential; any value is bitwise
+    /// reproducible (see `coordinator::parallel`).
+    pub threads: usize,
 }
 
 impl<'a> TrainEnv<'a> {
@@ -59,16 +64,28 @@ impl<'a> TrainEnv<'a> {
         max_batches: usize,
     ) -> Result<BatchStats> {
         let b = self.exec_batch;
-        let mut batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let mut hb = batcher.make_batch();
         let mut total = BatchStats::default();
+        // sequential_batches yields the ragged final batch, so a full pass
+        // scores ALL ds.n examples (examples == ds.n), not floor(n/b)*b —
+        // except on AOT backends, whose per-batch executables can only run
+        // whole batches (the tail is dropped there, as it always was)
+        let ragged_ok = self.engine.supports_ragged_batch();
         for idx in sequential_batches(ds.n, b).take(max_batches) {
-            let hb = batcher.assemble_clean(ds, &idx);
+            if idx.len() != b && !ragged_ok {
+                break;
+            }
+            batcher.assemble_clean_into(ds, &idx, &mut hb);
             let stats = self.engine.eval_batch(params.as_slice(), bn.as_slice(), &hb)?;
             total.accumulate(&stats);
-            clock.note_eval(self.cost.eval_step_time(b));
+            clock.note_eval(self.cost.eval_step_time(hb.batch));
         }
         if total.examples == 0 {
-            return Err(Error::invalid("dataset smaller than one batch"));
+            return Err(Error::invalid(
+                "evaluate: no runnable batch (dataset empty, or smaller than \
+                 one batch on a backend without ragged-batch support)",
+            ));
         }
         Ok(total)
     }
@@ -86,7 +103,8 @@ impl<'a> TrainEnv<'a> {
     ) -> Result<BnState> {
         let b = self.exec_batch;
         let mut rng = Rng::stream(seed, 0xB7);
-        let mut batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
+        let mut hb = batcher.make_batch();
         let mut moments = Vec::with_capacity(self.bn_batches);
         let mut order = rng.permutation(self.train.n);
         if order.len() < b * self.bn_batches {
@@ -98,7 +116,7 @@ impl<'a> TrainEnv<'a> {
         }
         for k in 0..self.bn_batches {
             let idx = &order[k * b..(k + 1) * b];
-            let hb = batcher.assemble_clean(self.train, idx);
+            batcher.assemble_clean_into(self.train, idx, &mut hb);
             moments.push(self.engine.bn_moments(params.as_slice(), &hb)?);
             let dt = self.cost.eval_step_time(b);
             if charge_clock {
@@ -182,8 +200,12 @@ pub fn run_sync_training(
         momentum: ParamSet { tensors: std::mem::take(&mut momentum.tensors) },
     };
     let mut sampler = EpochSampler::new(env.train.n, cfg.global_batch, cfg.seed, cfg.seed_stream);
-    let mut batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
+    let batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
     let mut aug_rng = Rng::stream(cfg.seed ^ 0xAE6, cfg.seed_stream);
+    // one owned, reused HostBatch per device: the hot loop performs no
+    // per-step allocation, and each grad thread reads its own batch
+    let mut device_batches: Vec<crate::runtime::HostBatch> =
+        (0..cfg.devices).map(|_| batcher.make_batch()).collect();
 
     let steps_per_epoch = sampler.batches_per_epoch();
     let total_steps = cfg.max_epochs * steps_per_epoch;
@@ -194,21 +216,38 @@ pub fn run_sync_training(
 
     let step_compute = env.cost.train_step_time(env.exec_batch);
     let ar_time = env.cost.allreduce_time(cfg.devices);
+    // fan the per-step shard gradients out only when one gradient is worth
+    // more than a thread spawn (fwd+bwd ~ 3x fwd FLOPs per example)
+    let grad_work = 3 * env.engine.manifest().flops_fwd_per_example as usize * env.exec_batch;
+    let shard_threads = parallel::gate(env.threads, grad_work);
 
     'outer: for _ in 0..total_steps {
         let global = sampler.next_batch().to_vec();
         let stats = if cfg.devices == 1 {
-            let hb = batcher.assemble(env.train, &global, &mut aug_rng);
+            let hb = &mut device_batches[0];
+            batcher.assemble_into(env.train, &global, &mut aug_rng, hb);
             let lr = cfg.sched.lr(cfg.sched_offset + steps);
             env.engine
-                .train_step(params.as_mut_slice(), opt.momentum.as_mut_slice(), &hb, lr)?
+                .train_step(params.as_mut_slice(), opt.momentum.as_mut_slice(), hb, lr)?
         } else {
+            // assembly stays on this thread in shard order — the shared
+            // augmentation RNG stream is consumed exactly as in the
+            // sequential path, so any thread count is bitwise identical
             let shards = shard(&global, cfg.devices);
+            for (sh, hb) in shards.iter().zip(device_batches.iter_mut()) {
+                batcher.assemble_into(env.train, sh, &mut aug_rng, hb);
+            }
+            // per-device gradients are pure functions of (params, batch):
+            // compute them on real OS threads, then reduce in device order
+            let results = parallel::parallel_map(
+                shard_threads,
+                device_batches.iter().collect(),
+                |_, hb| env.engine.grad(params.as_slice(), hb),
+            );
             let mut worker_grads = Vec::with_capacity(cfg.devices);
             let mut stats = BatchStats::default();
-            for sh in shards {
-                let hb = batcher.assemble(env.train, sh, &mut aug_rng);
-                let g = env.engine.grad(params.as_slice(), &hb)?;
+            for g in results {
+                let g = g?;
                 stats.accumulate(&g.stats);
                 worker_grads.push(g.grads);
             }

@@ -1,71 +1,109 @@
 //! Batch assembly: gather dataset rows by index, apply augmentation, and
-//! produce the `HostBatch` the runtime uploads. Buffers are reused across
-//! steps (no allocation in the training loop).
+//! produce the `HostBatch` the runtime uploads. The hot training loops
+//! assemble *into* a reused `HostBatch` (`assemble_into`), so steady-state
+//! steps perform no allocation — and an owned `HostBatch` per device is
+//! exactly what the thread-parallel shard/worker paths need.
 
 use super::augment::{augment, AugmentSpec};
 use super::synth::Dataset;
 use crate::runtime::HostBatch;
 use crate::util::Rng;
 
-/// Reusable batch assembler.
+/// Reusable batch assembler. `batch` is the *maximum* batch size; a ragged
+/// final evaluation batch (fewer indices) is allowed and produces a
+/// correspondingly smaller `HostBatch`.
 pub struct Batcher {
     batch: usize,
     image_size: usize,
     augment: AugmentSpec,
-    buf_images: Vec<f32>,
-    buf_labels: Vec<i32>,
 }
 
 impl Batcher {
     pub fn new(batch: usize, image_size: usize, augment: AugmentSpec) -> Self {
-        Batcher {
-            batch,
-            image_size,
-            augment,
-            buf_images: vec![0.0; batch * image_size * image_size * 3],
-            buf_labels: vec![0; batch],
-        }
+        Batcher { batch, image_size, augment }
     }
 
     pub fn batch(&self) -> usize {
         self.batch
     }
 
-    /// Assemble indices into a HostBatch (clones out of the reuse buffers).
-    pub fn assemble(&mut self, ds: &Dataset, idx: &[usize], rng: &mut Rng) -> HostBatch {
-        assert_eq!(idx.len(), self.batch, "index count != batch size");
-        assert_eq!(ds.image_size, self.image_size);
-        let pix = ds.pixels_per_image();
-        for (row, &i) in idx.iter().enumerate() {
-            let dst = &mut self.buf_images[row * pix..(row + 1) * pix];
-            dst.copy_from_slice(ds.image(i));
-            augment(dst, self.image_size, &self.augment, rng);
-            self.buf_labels[row] = ds.labels[i];
-        }
+    /// An empty `HostBatch` with capacity for a full batch, meant to be
+    /// reused across `assemble_into` calls (no per-step allocation).
+    pub fn make_batch(&self) -> HostBatch {
         HostBatch {
-            images: self.buf_images.clone(),
-            labels: self.buf_labels.clone(),
-            batch: self.batch,
+            images: Vec::with_capacity(self.batch * self.image_size * self.image_size * 3),
+            labels: Vec::with_capacity(self.batch),
+            batch: 0,
             image_size: self.image_size,
         }
     }
 
-    /// Assemble without augmentation (eval batches / BN recompute).
-    pub fn assemble_clean(&mut self, ds: &Dataset, idx: &[usize]) -> HostBatch {
+    fn assemble_with(
+        &self,
+        ds: &Dataset,
+        idx: &[usize],
+        rng: &mut Rng,
+        out: &mut HostBatch,
+        spec: &AugmentSpec,
+    ) {
+        assert!(
+            !idx.is_empty() && idx.len() <= self.batch,
+            "index count {} not in 1..={}",
+            idx.len(),
+            self.batch
+        );
+        assert_eq!(ds.image_size, self.image_size);
+        let pix = ds.pixels_per_image();
+        out.batch = idx.len();
+        out.image_size = self.image_size;
+        out.images.resize(idx.len() * pix, 0.0);
+        out.labels.resize(idx.len(), 0);
+        for (row, &i) in idx.iter().enumerate() {
+            let dst = &mut out.images[row * pix..(row + 1) * pix];
+            dst.copy_from_slice(ds.image(i));
+            augment(dst, self.image_size, spec, rng);
+            out.labels[row] = ds.labels[i];
+        }
+    }
+
+    /// Assemble indices directly into `out`, reusing its buffers. Accepts
+    /// `1..=batch` indices (the ragged final eval batch is smaller).
+    pub fn assemble_into(&self, ds: &Dataset, idx: &[usize], rng: &mut Rng, out: &mut HostBatch) {
+        let spec = self.augment;
+        self.assemble_with(ds, idx, rng, out, &spec);
+    }
+
+    /// `assemble_into` without augmentation (eval / BN-recompute batches).
+    pub fn assemble_clean_into(&self, ds: &Dataset, idx: &[usize], out: &mut HostBatch) {
         let mut rng = Rng::new(0);
-        let saved = self.augment;
-        self.augment = AugmentSpec::none();
-        let out = self.assemble(ds, idx, &mut rng);
-        self.augment = saved;
+        self.assemble_with(ds, idx, &mut rng, out, &AugmentSpec::none());
+    }
+
+    /// Convenience: assemble into a freshly allocated `HostBatch` (tests,
+    /// benches, one-off probes — the training loops use `assemble_into`).
+    pub fn assemble(&self, ds: &Dataset, idx: &[usize], rng: &mut Rng) -> HostBatch {
+        let mut out = self.make_batch();
+        self.assemble_into(ds, idx, rng, &mut out);
+        out
+    }
+
+    /// Allocating variant of `assemble_clean_into`.
+    pub fn assemble_clean(&self, ds: &Dataset, idx: &[usize]) -> HostBatch {
+        let mut out = self.make_batch();
+        self.assemble_clean_into(ds, idx, &mut out);
         out
     }
 }
 
-/// Iterate the whole dataset in fixed-size batches (sequential order,
-/// trailing partial batch dropped) — evaluation and BN recompute passes.
+/// Iterate the whole dataset in fixed-size batches (sequential order). The
+/// trailing partial batch IS yielded, so a full pass covers all `n`
+/// examples — evaluation must not silently drop the tail. (The native
+/// backend accepts any batch size; backends with per-batch AOT
+/// executables opt out via `Backend::supports_ragged_batch` and keep the
+/// whole-batches-only behavior.)
 pub fn sequential_batches(n: usize, batch: usize) -> impl Iterator<Item = Vec<usize>> {
-    let full = n / batch;
-    (0..full).map(move |b| ((b * batch)..((b + 1) * batch)).collect())
+    let chunks = (n + batch - 1) / batch;
+    (0..chunks).map(move |b| ((b * batch)..((b + 1) * batch).min(n)).collect())
 }
 
 #[cfg(test)]
@@ -80,7 +118,7 @@ mod tests {
     #[test]
     fn assemble_gathers_rows() {
         let ds = dataset();
-        let mut b = Batcher::new(4, 16, AugmentSpec::none());
+        let b = Batcher::new(4, 16, AugmentSpec::none());
         let hb = b.assemble_clean(&ds, &[3, 1, 0, 2]);
         assert_eq!(hb.batch, 4);
         assert_eq!(hb.labels, vec![ds.labels[3], ds.labels[1], ds.labels[0], ds.labels[2]]);
@@ -91,7 +129,7 @@ mod tests {
     #[test]
     fn augmented_assemble_differs_but_labels_match() {
         let ds = dataset();
-        let mut b = Batcher::new(4, 16, AugmentSpec::cifar_default());
+        let b = Batcher::new(4, 16, AugmentSpec::cifar_default());
         let mut rng = Rng::new(3);
         let hb = b.assemble(&ds, &[0, 1, 2, 3], &mut rng);
         assert_eq!(hb.labels, &ds.labels[..4]);
@@ -102,17 +140,52 @@ mod tests {
     }
 
     #[test]
-    fn sequential_batches_cover_prefix() {
+    fn assemble_into_reuses_buffers_without_allocating() {
+        let ds = dataset();
+        let b = Batcher::new(4, 16, AugmentSpec::none());
+        let mut out = b.make_batch();
+        b.assemble_clean_into(&ds, &[0, 1, 2, 3], &mut out);
+        let cap_i = out.images.capacity();
+        let cap_l = out.labels.capacity();
+        let ptr = out.images.as_ptr();
+        for _ in 0..5 {
+            b.assemble_clean_into(&ds, &[4, 5, 6, 7], &mut out);
+        }
+        assert_eq!(out.images.capacity(), cap_i, "image buffer must be reused");
+        assert_eq!(out.labels.capacity(), cap_l, "label buffer must be reused");
+        assert_eq!(out.images.as_ptr(), ptr, "no reallocation across steps");
+        assert_eq!(out.labels, vec![ds.labels[4], ds.labels[5], ds.labels[6], ds.labels[7]]);
+    }
+
+    #[test]
+    fn ragged_final_batch_assembles_smaller() {
+        let ds = dataset();
+        let b = Batcher::new(16, 16, AugmentSpec::none());
+        let mut out = b.make_batch();
+        b.assemble_clean_into(&ds, &[38, 39], &mut out);
+        assert_eq!(out.batch, 2);
+        assert_eq!(out.labels.len(), 2);
+        assert_eq!(out.images.len(), 2 * ds.pixels_per_image());
+    }
+
+    #[test]
+    fn sequential_batches_cover_whole_dataset() {
         let batches: Vec<Vec<usize>> = sequential_batches(10, 3).collect();
-        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.len(), 4);
         assert_eq!(batches[2], vec![6, 7, 8]);
+        assert_eq!(batches[3], vec![9], "trailing partial batch must be yielded");
+        let flat: Vec<usize> = batches.into_iter().flatten().collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+        // exactly divisible: no empty tail
+        assert_eq!(sequential_batches(9, 3).count(), 3);
+        assert_eq!(sequential_batches(2, 8).collect::<Vec<_>>(), vec![vec![0, 1]]);
     }
 
     #[test]
     #[should_panic(expected = "index count")]
-    fn wrong_index_count_panics() {
+    fn too_many_indices_panics() {
         let ds = dataset();
-        let mut b = Batcher::new(4, 16, AugmentSpec::none());
-        b.assemble_clean(&ds, &[0, 1]);
+        let b = Batcher::new(4, 16, AugmentSpec::none());
+        b.assemble_clean(&ds, &[0, 1, 2, 3, 4]);
     }
 }

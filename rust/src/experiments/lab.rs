@@ -50,6 +50,7 @@ impl Lab {
             augment: self.cfg.augment_spec(),
             exec_batch: self.cfg.exec_batch,
             bn_batches: self.cfg.bn_batches,
+            threads: self.cfg.resolved_threads(),
         }
     }
 

@@ -18,12 +18,28 @@ use crate::util::Result;
 
 /// A model-execution engine: gradients, fused train steps, evaluation and
 /// batch-norm moment recomputation over host tensors.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the coordinator shares one
+/// engine across OS threads (phase-2 workers, phase-1 device shards run
+/// concurrently — see `coordinator::parallel`), so any interior state must
+/// be thread-safe (the PJRT engine guards its executable cache with a
+/// mutex; the native backend is stateless after construction).
+pub trait Backend: Send + Sync {
     /// Short backend identifier ("native", "xla") for logs.
     fn name(&self) -> &'static str;
 
     /// The layout contract: parameter/BN tensor order + model metadata.
     fn manifest(&self) -> &Manifest;
+
+    /// Whether this backend accepts arbitrary batch sizes — in particular
+    /// the ragged final evaluation batch (`n % exec_batch` examples). The
+    /// native backend does; AOT per-batch-size executables don't, and
+    /// evaluation then falls back to whole batches only (the tail is
+    /// dropped, as before ragged support existed) instead of erroring on
+    /// a missing `eval_b{tail}` artifact.
+    fn supports_ragged_batch(&self) -> bool {
+        true
+    }
 
     /// Phase-1 entry point: gradients of the *mean* batch loss in manifest
     /// parameter order, plus loss/accuracy statistics of the batch.

@@ -7,9 +7,9 @@
 //! Pattern: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `client.compile` → `execute`.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use super::backend::Backend;
 use super::literal::{batch_to_literals, literal_f32, literal_i32, literal_to_tensor, lr_literal, tensor_to_literal};
@@ -22,9 +22,13 @@ use crate::util::{Error, Result};
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    // Mutex (not RefCell): `Backend: Send + Sync` so the coordinator can
+    // drive one engine from many worker threads concurrently. Executables
+    // are Arc'd so the cache lock is dropped BEFORE execution — concurrent
+    // callers must not serialize behind each other's execute().
+    execs: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// executions performed, by key (profiling / tests)
-    calls: RefCell<HashMap<String, u64>>,
+    calls: Mutex<HashMap<String, u64>>,
 }
 
 impl Engine {
@@ -35,8 +39,8 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            execs: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            execs: Mutex::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
         })
     }
 
@@ -46,12 +50,16 @@ impl Engine {
 
     /// Number of times each executable ran (keyed by "grad_b64", ...).
     pub fn call_counts(&self) -> HashMap<String, u64> {
-        self.calls.borrow().clone()
+        self.calls.lock().unwrap().clone()
     }
 
-    fn ensure_compiled(&self, key: &str) -> Result<()> {
-        if self.execs.borrow().contains_key(key) {
-            return Ok(());
+    fn ensure_compiled(&self, key: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        // hold the cache lock across the compile: concurrent threads that
+        // miss on the same key must wait for one compilation, not each
+        // redo the expensive compile and discard N-1 results
+        let mut execs = self.execs.lock().unwrap();
+        if let Some(exe) = execs.get(key) {
+            return Ok(exe.clone());
         }
         let path = self.manifest.hlo_path(key)?;
         let proto = xla::HloModuleProto::from_text_file(
@@ -59,20 +67,20 @@ impl Engine {
                 .ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let exe = Arc::new(self.client.compile(&comp)?);
         crate::debug!("compiled {key} from {}", path.display());
-        self.execs.borrow_mut().insert(key.to_string(), exe);
-        Ok(())
+        execs.insert(key.to_string(), exe.clone());
+        Ok(exe)
     }
 
     /// Execute an artifact by key with raw literals; returns the flattened
     /// output tuple. Public so the landscape/analysis modules and tests can
     /// drive executables directly.
     pub fn run_raw(&self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.ensure_compiled(key)?;
-        *self.calls.borrow_mut().entry(key.to_string()).or_insert(0) += 1;
-        let execs = self.execs.borrow();
-        let exe = execs.get(key).unwrap();
+        // the Arc is cloned out of the cache lock, so worker threads run
+        // their executables concurrently (only compilation serializes)
+        let exe = self.ensure_compiled(key)?;
+        *self.calls.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
         let result = exe.execute::<xla::Literal>(args)?;
         let lit = result[0][0].to_literal_sync()?;
         Ok(lit.to_tuple()?)
@@ -107,6 +115,12 @@ impl Backend for Engine {
 
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// AOT executables are compiled per batch size — a ragged tail batch
+    /// has no artifact, so the eval loop must stick to whole batches.
+    fn supports_ragged_batch(&self) -> bool {
+        false
     }
 
     /// Phase-1 gradients: `grad_b{B}`.

@@ -10,148 +10,208 @@
 //! Activations are flat NHWC `Vec<f32>` viewed as row-major (B*H*W, C)
 //! matrices, so convolution is `im2col` + one matmul — the same lowering
 //! the Pallas/MXU path uses.
+//!
+//! The heavy kernels (im2col/col2im, the matmul family, BN normalize/eval)
+//! take a `threads` argument and split their *output rows* across scoped
+//! worker threads (`coordinator::parallel`). Every output element is
+//! produced by exactly one thread with the sequential accumulation order,
+//! so results are bitwise identical for any `threads`; small problems
+//! (below `PAR_MIN_WORK`) stay on the calling thread to dodge spawn
+//! overhead.
+
+use crate::coordinator::parallel::{parallel_row_chunks, parallel_row_chunks2};
 
 pub const BN_EPS: f32 = 1e-5;
 
+/// Minimum per-kernel work (inner-loop ops) before threads are spawned:
+/// below this the spawn cost exceeds the compute. Tuned loosely — the
+/// result never depends on it, only the wall time.
+const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Effective worker count for a kernel invocation of `work` inner ops.
+fn par(threads: usize, work: usize) -> usize {
+    if threads > 1 && work >= PAR_MIN_WORK {
+        threads
+    } else {
+        1
+    }
+}
+
 // ---------------------------------------------------------------------------
-// matmul family (f32, accumulate in f32; ikj loop order for cache locality)
+// matmul family (f32, accumulate in f32; per-element adds in the same order
+// on every path so any thread count is bitwise reproducible)
 // ---------------------------------------------------------------------------
 
-/// out(m,n) = a(m,k) @ b(k,n)
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// out(m,n) = a(m,k) @ b(k,n); ikj loop order for cache locality, output
+/// rows split across `threads`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    parallel_row_chunks(par(threads, m * k * n), &mut out, n, |row0, chunk| {
+        for (li, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + li;
+            let arow = &a[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
-    }
+    });
     out
 }
 
 /// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul.
-pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+/// The reduction over `r` stays innermost-sequential per output row (adds
+/// in ascending `row` order, exactly the single-thread order); only the
+/// output rows are partitioned.
+pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
     let mut out = vec![0.0f32; m * n];
-    for row in 0..r {
-        let arow = &a[row * m..(row + 1) * m];
-        let brow = &b[row * n..(row + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    parallel_row_chunks(par(threads, r * m * n), &mut out, n, |row0, chunk| {
+        let cm = chunk.len() / n;
+        for row in 0..r {
+            let arow = &a[row * m + row0..row * m + row0 + cm];
+            let brow = &b[row * n..(row + 1) * n];
+            for (li, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut chunk[li * n..(li + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
-    }
+    });
     out
 }
 
 /// out(m,n) = a @ bᵀ where a is (m,k) and b is (n,k) — the dX matmul.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
+    parallel_row_chunks(par(threads, m * k * n), &mut out, n, |row0, chunk| {
+        for (li, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + li;
+            let arow = &a[i * k..(i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
             }
-            *o = acc;
         }
-    }
+    });
     out
 }
 
 // ---------------------------------------------------------------------------
-// im2col / col2im for 3x3 SAME convolution
+// im2col / col2im for 3x3 SAME convolution (split across batch images —
+// each image's patch rows / input gradients are disjoint)
 // ---------------------------------------------------------------------------
 
 /// (B,H,W,C) -> (B*H*W, 9*C) patches; patch channel order is (dy, dx, c)
 /// row-major, matching the (9*Cin, Cout) conv weight layout of
 /// `python/compile/model.py::im2col`.
-pub fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+pub fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), b * h * w * c);
-    let mut out = vec![0.0f32; b * h * w * 9 * c];
-    for bi in 0..b {
-        for y in 0..h {
-            for xx in 0..w {
-                let row = ((bi * h + y) * w + xx) * 9 * c;
-                for dy in 0..3 {
-                    let iy = y + dy;
-                    if iy < 1 || iy > h {
-                        continue; // zero padding row
-                    }
-                    let iy = iy - 1;
-                    for dx in 0..3 {
-                        let ix = xx + dx;
-                        if ix < 1 || ix > w {
-                            continue; // zero padding col
+    let per_image = h * w * 9 * c;
+    let mut out = vec![0.0f32; b * per_image];
+    parallel_row_chunks(
+        par(threads, b * per_image),
+        &mut out,
+        per_image,
+        |img0, chunk| {
+            for (li, dst) in chunk.chunks_mut(per_image).enumerate() {
+                let bi = img0 + li;
+                for y in 0..h {
+                    for xx in 0..w {
+                        let row = (y * w + xx) * 9 * c;
+                        for dy in 0..3 {
+                            let iy = y + dy;
+                            if iy < 1 || iy > h {
+                                continue; // zero padding row
+                            }
+                            let iy = iy - 1;
+                            for dx in 0..3 {
+                                let ix = xx + dx;
+                                if ix < 1 || ix > w {
+                                    continue; // zero padding col
+                                }
+                                let ix = ix - 1;
+                                let src = ((bi * h + iy) * w + ix) * c;
+                                let d = row + (dy * 3 + dx) * c;
+                                dst[d..d + c].copy_from_slice(&x[src..src + c]);
+                            }
                         }
-                        let ix = ix - 1;
-                        let src = ((bi * h + iy) * w + ix) * c;
-                        let dst = row + (dy * 3 + dx) * c;
-                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
                     }
                 }
             }
-        }
-    }
+        },
+    );
     out
 }
 
 /// Adjoint of `im2col`: scatter patch gradients (B*H*W, 9*C) back onto the
-/// input image gradient (B,H,W,C).
-pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// input image gradient (B,H,W,C). Patches never cross image boundaries,
+/// so per-image partitioning scatters into disjoint output regions.
+pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(dp.len(), b * h * w * 9 * c);
-    let mut dx = vec![0.0f32; b * h * w * c];
-    for bi in 0..b {
-        for y in 0..h {
-            for xx in 0..w {
-                let row = ((bi * h + y) * w + xx) * 9 * c;
-                for dy in 0..3 {
-                    let iy = y + dy;
-                    if iy < 1 || iy > h {
-                        continue;
-                    }
-                    let iy = iy - 1;
-                    for dx_off in 0..3 {
-                        let ix = xx + dx_off;
-                        if ix < 1 || ix > w {
-                            continue;
-                        }
-                        let ix = ix - 1;
-                        let dst = ((bi * h + iy) * w + ix) * c;
-                        let src = row + (dy * 3 + dx_off) * c;
-                        for ci in 0..c {
-                            dx[dst + ci] += dp[src + ci];
+    let per_in = h * w * c;
+    let per_patch = h * w * 9 * c;
+    let mut dx = vec![0.0f32; b * per_in];
+    parallel_row_chunks(
+        par(threads, b * per_patch),
+        &mut dx,
+        per_in,
+        |img0, chunk| {
+            for (li, dimg) in chunk.chunks_mut(per_in).enumerate() {
+                let bi = img0 + li;
+                for y in 0..h {
+                    for xx in 0..w {
+                        let row = ((bi * h + y) * w + xx) * 9 * c;
+                        for dy in 0..3 {
+                            let iy = y + dy;
+                            if iy < 1 || iy > h {
+                                continue;
+                            }
+                            let iy = iy - 1;
+                            for dx_off in 0..3 {
+                                let ix = xx + dx_off;
+                                if ix < 1 || ix > w {
+                                    continue;
+                                }
+                                let ix = ix - 1;
+                                let dst = (iy * w + ix) * c;
+                                let src = row + (dy * 3 + dx_off) * c;
+                                for ci in 0..c {
+                                    dimg[dst + ci] += dp[src + ci];
+                                }
+                            }
                         }
                     }
                 }
             }
-        }
-    }
+        },
+    );
     dx
 }
 
 // ---------------------------------------------------------------------------
-// batch norm (batch statistics in train mode; biased variance)
+// batch norm (batch statistics in train mode; biased variance). The
+// channel reductions (mean/var, dgamma/dbeta) stay sequential — they are
+// O(rows*c) against the matmuls' O(rows*9c*cout) and a parallel reduction
+// would reorder the f32 sums; the elementwise normalize loops are split.
 // ---------------------------------------------------------------------------
 
 /// Forward with batch statistics over `rows` = B*H*W samples of `c`
@@ -162,6 +222,7 @@ pub fn bn_train(
     beta: &[f32],
     rows: usize,
     c: usize,
+    threads: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     debug_assert_eq!(u.len(), rows * c);
     let inv_n = 1.0 / rows as f32;
@@ -189,14 +250,23 @@ pub fn bn_train(
     let invstd: Vec<f32> = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
     let mut xhat = vec![0.0f32; rows * c];
     let mut y = vec![0.0f32; rows * c];
-    for r in 0..rows {
-        for ci in 0..c {
-            let i = r * c + ci;
-            let xh = (u[i] - mean[ci]) * invstd[ci];
-            xhat[i] = xh;
-            y[i] = gamma[ci] * xh + beta[ci];
-        }
-    }
+    parallel_row_chunks2(
+        par(threads, rows * c),
+        &mut xhat,
+        &mut y,
+        c,
+        c,
+        |row0, cx, cy| {
+            for (li, (xrow, yrow)) in cx.chunks_mut(c).zip(cy.chunks_mut(c)).enumerate() {
+                let r = row0 + li;
+                for ci in 0..c {
+                    let xh = (u[r * c + ci] - mean[ci]) * invstd[ci];
+                    xrow[ci] = xh;
+                    yrow[ci] = gamma[ci] * xh + beta[ci];
+                }
+            }
+        },
+    );
     (y, xhat, mean, var, invstd)
 }
 
@@ -209,6 +279,7 @@ pub fn bn_train_bwd(
     gamma: &[f32],
     rows: usize,
     c: usize,
+    threads: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     debug_assert_eq!(dy.len(), rows * c);
     let mut dgamma = vec![0.0f32; c];
@@ -229,12 +300,15 @@ pub fn bn_train_bwd(
         .collect();
     let n = rows as f32;
     let mut du = vec![0.0f32; rows * c];
-    for r in 0..rows {
-        for ci in 0..c {
-            let i = r * c + ci;
-            du[i] = scale[ci] * (n * dy[i] - dbeta[ci] - xhat[i] * dgamma[ci]);
+    parallel_row_chunks(par(threads, rows * c), &mut du, c, |row0, chunk| {
+        for (li, drow) in chunk.chunks_mut(c).enumerate() {
+            let r = row0 + li;
+            for ci in 0..c {
+                let i = r * c + ci;
+                drow[ci] = scale[ci] * (n * dy[i] - dbeta[ci] - xhat[i] * dgamma[ci]);
+            }
         }
-    }
+    });
     (du, dgamma, dbeta)
 }
 
@@ -247,6 +321,7 @@ pub fn bn_eval(
     var: &[f32],
     rows: usize,
     c: usize,
+    threads: usize,
 ) -> Vec<f32> {
     debug_assert_eq!(u.len(), rows * c);
     let scale: Vec<f32> = gamma
@@ -255,12 +330,14 @@ pub fn bn_eval(
         .map(|(g, v)| g / (v + BN_EPS).sqrt())
         .collect();
     let mut y = vec![0.0f32; rows * c];
-    for r in 0..rows {
-        for ci in 0..c {
-            let i = r * c + ci;
-            y[i] = (u[i] - mean[ci]) * scale[ci] + beta[ci];
+    parallel_row_chunks(par(threads, rows * c), &mut y, c, |row0, chunk| {
+        for (li, yrow) in chunk.chunks_mut(c).enumerate() {
+            let r = row0 + li;
+            for ci in 0..c {
+                yrow[ci] = (u[r * c + ci] - mean[ci]) * scale[ci] + beta[ci];
+            }
         }
-    }
+    });
     y
 }
 
@@ -359,6 +436,7 @@ pub fn global_maxpool_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
 /// Returns (sum_loss, ncorrect1, ncorrect5, d(sum_loss)/dlogits).
 /// Top-k correctness uses the strict rank of the true logit, i.e. ties do
 /// not count against the true class — the `ref.py::cross_entropy` rule.
+/// Sequential: the f64 loss sum must keep one accumulation order.
 pub fn cross_entropy(
     logits: &[f32],
     labels: &[i32],
@@ -420,9 +498,9 @@ mod tests {
         // (2,2) @ I = same
         let a = [1.0, 2.0, 3.0, 4.0];
         let eye = [1.0, 0.0, 0.0, 1.0];
-        assert_eq!(matmul(&a, &eye, 2, 2, 2), a.to_vec());
+        assert_eq!(matmul(&a, &eye, 2, 2, 2, 1), a.to_vec());
         // (1,3)@(3,2)
-        let out = matmul(&[1.0, 2.0, 3.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 1, 3, 2);
+        let out = matmul(&[1.0, 2.0, 3.0], &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 1, 3, 2, 1);
         assert_eq!(out, vec![4.0, 5.0]);
     }
 
@@ -432,34 +510,96 @@ mod tests {
         let a: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect(); // (2,3)
         let b: Vec<f32> = (0..8).map(|i| 1.0 - i as f32 * 0.25).collect(); // (2,4)
         // aᵀ(3,2) @ b(2,4) via matmul_tn(a, b, r=2, m=3, n=4)
-        let tn = matmul_tn(&a, &b, 2, 3, 4);
+        let tn = matmul_tn(&a, &b, 2, 3, 4, 1);
         let mut at = vec![0.0f32; 6];
         for i in 0..2 {
             for j in 0..3 {
                 at[j * 2 + i] = a[i * 3 + j];
             }
         }
-        assert_eq!(tn, matmul(&at, &b, 3, 2, 4));
+        assert_eq!(tn, matmul(&at, &b, 3, 2, 4, 1));
         // a(2,3) @ cᵀ where c is (4,3): matmul_nt(a, c, 2, 3, 4)
         let c: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
-        let nt = matmul_nt(&a, &c, 2, 3, 4);
+        let nt = matmul_nt(&a, &c, 2, 3, 4, 1);
         let mut ct = vec![0.0f32; 12];
         for i in 0..4 {
             for j in 0..3 {
                 ct[j * 4 + i] = c[i * 3 + j];
             }
         }
-        let want = matmul(&a, &ct, 2, 3, 4);
+        let want = matmul(&a, &ct, 2, 3, 4, 1);
         for (x, y) in nt.iter().zip(&want) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    /// Pseudo-random but deterministic test buffer.
+    fn wave(n: usize, f: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * f).sin() * 1.7).collect()
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_match_sequential() {
+        // sizes above PAR_MIN_WORK so the threaded paths actually engage;
+        // every kernel must be bitwise identical across thread counts
+        let (m, k, n) = (512, 36, 16); // m*k*n = 294912 >= 2^18
+        let a = wave(m * k, 0.71);
+        let b = wave(k * n, 1.13);
+        let seq = matmul(&a, &b, m, k, n, 1);
+        for t in [2, 3, 8] {
+            assert_eq!(seq, matmul(&a, &b, m, k, n, t), "matmul t={t}");
+        }
+
+        let (r, tm, tn_) = (512, 36, 16);
+        let ta = wave(r * tm, 0.37);
+        let tb = wave(r * tn_, 0.91);
+        let seq = matmul_tn(&ta, &tb, r, tm, tn_, 1);
+        for t in [2, 5] {
+            assert_eq!(seq, matmul_tn(&ta, &tb, r, tm, tn_, t), "matmul_tn t={t}");
+        }
+
+        let na = wave(m * k, 0.53);
+        let nb = wave(n * k, 0.29);
+        let seq = matmul_nt(&na, &nb, m, k, n, 1);
+        for t in [2, 4] {
+            assert_eq!(seq, matmul_nt(&na, &nb, m, k, n, t), "matmul_nt t={t}");
+        }
+
+        let (ib, ih, iw, ic) = (16, 16, 16, 8); // 16*16*16*9*8 = 294912 >= 2^18
+        let x = wave(ib * ih * iw * ic, 0.61);
+        let seq = im2col(&x, ib, ih, iw, ic, 1);
+        assert_eq!(seq, im2col(&x, ib, ih, iw, ic, 4), "im2col");
+        let dp = wave(ib * ih * iw * 9 * ic, 0.47);
+        let seq = col2im(&dp, ib, ih, iw, ic, 1);
+        assert_eq!(seq, col2im(&dp, ib, ih, iw, ic, 4), "col2im");
+
+        let (rows, c) = (16384, 32);
+        let u = wave(rows * c, 0.83);
+        let gamma = wave(c, 0.19);
+        let beta = wave(c, 0.67);
+        let s = bn_train(&u, &gamma, &beta, rows, c, 1);
+        let p = bn_train(&u, &gamma, &beta, rows, c, 4);
+        assert_eq!(s.0, p.0, "bn_train y");
+        assert_eq!(s.1, p.1, "bn_train xhat");
+        assert_eq!(s.2, p.2, "bn_train mean");
+
+        let dy = wave(rows * c, 0.31);
+        let sb = bn_train_bwd(&dy, &s.1, &s.4, &gamma, rows, c, 1);
+        let pb = bn_train_bwd(&dy, &s.1, &s.4, &gamma, rows, c, 4);
+        assert_eq!(sb.0, pb.0, "bn_train_bwd du");
+        assert_eq!(sb.1, pb.1, "bn_train_bwd dgamma");
+
+        let mean = wave(c, 0.11);
+        let var: Vec<f32> = wave(c, 0.23).iter().map(|v| v * v + 0.5).collect();
+        let se = bn_eval(&u, &gamma, &beta, &mean, &var, rows, c, 1);
+        assert_eq!(se, bn_eval(&u, &gamma, &beta, &mean, &var, rows, c, 4), "bn_eval");
     }
 
     #[test]
     fn im2col_center_tap_is_identity() {
         // 1x1 channel: the (dy=1,dx=1) column equals the input pixel
         let x: Vec<f32> = (0..9).map(|i| i as f32).collect(); // (1,3,3,1)
-        let p = im2col(&x, 1, 3, 3, 1);
+        let p = im2col(&x, 1, 3, 3, 1, 1);
         assert_eq!(p.len(), 9 * 9);
         for pix in 0..9 {
             assert_eq!(p[pix * 9 + 4], x[pix]);
@@ -475,9 +615,9 @@ mod tests {
         let n = b * h * w * c;
         let x: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
         let yv: Vec<f32> = (0..n * 9).map(|i| ((i * 5 + 1) % 13) as f32 - 6.0).collect();
-        let px = im2col(&x, b, h, w, c);
+        let px = im2col(&x, b, h, w, c, 1);
         let lhs: f64 = px.iter().zip(&yv).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
-        let aty = col2im(&yv, b, h, w, c);
+        let aty = col2im(&yv, b, h, w, c, 1);
         let rhs: f64 = x.iter().zip(&aty).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
     }
@@ -485,7 +625,7 @@ mod tests {
     #[test]
     fn bn_train_normalizes() {
         let u = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
-        let (y, xhat, mean, var, invstd) = bn_train(&u, &[1.0, 1.0], &[0.0, 0.0], 4, 2);
+        let (y, xhat, mean, var, invstd) = bn_train(&u, &[1.0, 1.0], &[0.0, 0.0], 4, 2, 1);
         assert!((mean[0] - 2.5).abs() < 1e-6);
         assert!((mean[1] - 25.0).abs() < 1e-6);
         assert!((var[0] - 1.25).abs() < 1e-5);
@@ -504,9 +644,9 @@ mod tests {
         let u: Vec<f32> = (0..12).map(|i| (i as f32).cos() * 2.0).collect();
         let gamma = [0.7f32, -1.2, 0.4];
         let beta = [0.1f32, 0.0, -0.3];
-        let (_y, xhat, _mean, _var, invstd) = bn_train(&u, &gamma, &beta, 4, 3);
+        let (_y, xhat, _mean, _var, invstd) = bn_train(&u, &gamma, &beta, 4, 3, 1);
         let dy: Vec<f32> = (0..12).map(|i| (i as f32 * 1.7).sin()).collect();
-        let (du, dgamma, dbeta) = bn_train_bwd(&dy, &xhat, &invstd, &gamma, 4, 3);
+        let (du, dgamma, dbeta) = bn_train_bwd(&dy, &xhat, &invstd, &gamma, 4, 3, 1);
         for ci in 0..3 {
             let s: f32 = (0..4).map(|r| du[r * 3 + ci]).sum();
             assert!(s.abs() < 1e-4, "channel {ci}: du sums to {s}");

@@ -35,6 +35,10 @@ pub struct NativeSpec {
     /// advertised batch sizes (informational — the native backend accepts
     /// any batch size, unlike per-batch AOT executables)
     pub batches: Vec<usize>,
+    /// worker threads the heavy kernels (im2col/matmul/BN) may split
+    /// output rows across; 1 = fully sequential. Any value produces
+    /// bitwise-identical results (see `coordinator::parallel`).
+    pub threads: usize,
 }
 
 impl NativeSpec {
@@ -47,11 +51,17 @@ impl NativeSpec {
             momentum: 0.9,
             weight_decay: 5e-4,
             batches: Vec::new(),
+            threads: 1,
         }
     }
 
     pub fn with_batches(mut self, batches: &[usize]) -> Self {
         self.batches = batches.to_vec();
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -127,6 +137,8 @@ pub fn native_manifest(spec: &NativeSpec) -> Manifest {
 pub struct NativeBackend {
     manifest: Manifest,
     dims: Dims,
+    /// kernel worker-thread budget (never changes results, only wall time)
+    threads: usize,
 }
 
 impl NativeBackend {
@@ -149,7 +161,8 @@ impl NativeBackend {
             num_classes: spec.num_classes,
             image_size: spec.image_size,
         };
-        Ok(NativeBackend { manifest: native_manifest(&spec), dims })
+        let threads = spec.threads.max(1);
+        Ok(NativeBackend { manifest: native_manifest(&spec), dims, threads })
     }
 
     /// The tiny test model (width 4, 10 classes, 16x16 images).
@@ -230,14 +243,14 @@ impl NativeBackend {
     fn grad_impl(&self, params: &[Tensor], batch: &HostBatch) -> Result<(Vec<Vec<f32>>, BatchStats)> {
         self.check_batch(batch)?;
         let p = self.param_slices(params)?;
-        let fwd = model::forward_train(&self.dims, &p, &batch.images, batch.batch);
+        let fwd = model::forward_train(&self.dims, &p, &batch.images, batch.batch, self.threads);
         let (stats, mut dl) = self.stats_from(&fwd.logits, batch);
         // grads of the MEAN batch loss (the python grad_step convention)
         let inv_b = 1.0 / batch.batch as f32;
         for d in dl.iter_mut() {
             *d *= inv_b;
         }
-        let grads = model::backward(&self.dims, &p, &dl, &fwd.ctx);
+        let grads = model::backward(&self.dims, &p, &dl, &fwd.ctx, self.threads);
         Ok((grads, stats))
     }
 
@@ -305,14 +318,16 @@ impl Backend for NativeBackend {
             )));
         }
         let bn: Vec<&[f32]> = bn_stats.iter().map(|t| t.data()).collect();
-        let logits = model::forward_eval(&self.dims, &p, &bn, &batch.images, batch.batch);
+        let logits =
+            model::forward_eval(&self.dims, &p, &bn, &batch.images, batch.batch, self.threads);
         Ok(self.stats_from(&logits, batch).0)
     }
 
     fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
         self.check_batch(batch)?;
         let p = self.param_slices(params)?;
-        let moments = model::forward_moments(&self.dims, &p, &batch.images, batch.batch);
+        let moments =
+            model::forward_moments(&self.dims, &p, &batch.images, batch.batch, self.threads);
         moments
             .into_iter()
             .zip(&self.manifest.bn_stats)

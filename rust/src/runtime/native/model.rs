@@ -103,11 +103,12 @@ fn block_fwd_train(
     w: &[f32],
     gamma: &[f32],
     beta: &[f32],
+    threads: usize,
 ) -> (Vec<f32>, BlockSave, Vec<f32>, Vec<f32>) {
     let rows = b * side * side;
-    let patches = k::im2col(&x, b, side, side, cin);
-    let u = k::matmul(&patches, w, rows, 9 * cin, cout);
-    let (y, xhat, mean, var, invstd) = k::bn_train(&u, gamma, beta, rows, cout);
+    let patches = k::im2col(&x, b, side, side, cin, threads);
+    let u = k::matmul(&patches, w, rows, 9 * cin, cout, threads);
+    let (y, xhat, mean, var, invstd) = k::bn_train(&u, gamma, beta, rows, cout, threads);
     let a = k::relu(&y);
     let save = BlockSave { x, side, cin, cout, xhat, invstd, y };
     (a, save, mean, var)
@@ -124,11 +125,12 @@ fn block_fwd_eval(
     beta: &[f32],
     mean: &[f32],
     var: &[f32],
+    threads: usize,
 ) -> Vec<f32> {
     let rows = b * side * side;
-    let patches = k::im2col(x, b, side, side, cin);
-    let u = k::matmul(&patches, w, rows, 9 * cin, cout);
-    k::relu(&k::bn_eval(&u, gamma, beta, mean, var, rows, cout))
+    let patches = k::im2col(x, b, side, side, cin, threads);
+    let u = k::matmul(&patches, w, rows, 9 * cin, cout, threads);
+    k::relu(&k::bn_eval(&u, gamma, beta, mean, var, rows, cout, threads))
 }
 
 /// Backward through one block. Returns (dx (None for the first layer),
@@ -141,15 +143,17 @@ fn block_bwd(
     gamma: &[f32],
     da: &[f32],
     need_dx: bool,
+    threads: usize,
 ) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let rows = b * save.side * save.side;
     let dy = k::relu_bwd(da, &save.y);
-    let (du, dgamma, dbeta) = k::bn_train_bwd(&dy, &save.xhat, &save.invstd, gamma, rows, save.cout);
-    let patches = k::im2col(&save.x, b, save.side, save.side, save.cin);
-    let dw = k::matmul_tn(&patches, &du, rows, 9 * save.cin, save.cout);
+    let (du, dgamma, dbeta) =
+        k::bn_train_bwd(&dy, &save.xhat, &save.invstd, gamma, rows, save.cout, threads);
+    let patches = k::im2col(&save.x, b, save.side, save.side, save.cin, threads);
+    let dw = k::matmul_tn(&patches, &du, rows, 9 * save.cin, save.cout, threads);
     let dx = if need_dx {
-        let dp = k::matmul_nt(&du, w, rows, save.cout, 9 * save.cin);
-        Some(k::col2im(&dp, b, save.side, save.side, save.cin))
+        let dp = k::matmul_nt(&du, w, rows, save.cout, 9 * save.cin, threads);
+        Some(k::col2im(&dp, b, save.side, save.side, save.cin, threads))
     } else {
         None
     };
@@ -165,7 +169,13 @@ fn add_into(acc: &mut [f32], x: &[f32]) {
 
 /// Train-mode forward pass. `params` is the manifest-ordered list of flat
 /// parameter slices (26 entries).
-pub fn forward_train(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> TrainForward {
+pub fn forward_train(
+    d: &Dims,
+    params: &[&[f32]],
+    images: &[f32],
+    b: usize,
+    threads: usize,
+) -> TrainForward {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
     let layers = conv_layers(d);
     let mut saves = Vec::with_capacity(NUM_CONV_LAYERS);
@@ -181,6 +191,7 @@ pub fn forward_train(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> T
             params[3 * li],
             params[3 * li + 1],
             params[3 * li + 2],
+            threads,
         );
         saves.push(save);
         moments.push(mean);
@@ -206,7 +217,7 @@ pub fn forward_train(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> T
 
     let hw3 = (h / 8) * (h / 8);
     let (hfeat, hmax) = k::global_maxpool(&r3, b, hw3, 8 * c);
-    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes);
+    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes, threads);
     let bias = params[25];
     for bi in 0..b {
         for j in 0..d.num_classes {
@@ -232,7 +243,13 @@ pub fn forward_train(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> T
 
 /// Backward pass: gradient of the loss w.r.t. every parameter, given
 /// d(loss)/d(logits). Returns flat gradient buffers in manifest order.
-pub fn backward(d: &Dims, params: &[&[f32]], dlogits: &[f32], ctx: &TrainCtx) -> Vec<Vec<f32>> {
+pub fn backward(
+    d: &Dims,
+    params: &[&[f32]],
+    dlogits: &[f32],
+    ctx: &TrainCtx,
+    threads: usize,
+) -> Vec<Vec<f32>> {
     let b = ctx.batch;
     let c8 = 8 * d.width;
     let nc = d.num_classes;
@@ -240,7 +257,7 @@ pub fn backward(d: &Dims, params: &[&[f32]], dlogits: &[f32], ctx: &TrainCtx) ->
 
     // head: logits = (h @ W + bias) * HEAD_SCALE
     let ds: Vec<f32> = dlogits.iter().map(|&v| v * HEAD_SCALE).collect();
-    grads[24] = k::matmul_tn(&ctx.h, &ds, b, c8, nc);
+    grads[24] = k::matmul_tn(&ctx.h, &ds, b, c8, nc, threads);
     let mut dbias = vec![0.0f32; nc];
     for bi in 0..b {
         for j in 0..nc {
@@ -248,14 +265,21 @@ pub fn backward(d: &Dims, params: &[&[f32]], dlogits: &[f32], ctx: &TrainCtx) ->
         }
     }
     grads[25] = dbias;
-    let dh = k::matmul_nt(&ds, params[24], b, nc, c8);
+    let dh = k::matmul_nt(&ds, params[24], b, nc, c8, threads);
 
     // global max pool
     let dr3 = k::global_maxpool_bwd(&dh, &ctx.hmax, ctx.r3_len);
 
     let bwd = |li: usize, da: &[f32], need_dx: bool, grads: &mut Vec<Vec<f32>>| {
-        let (dx, dw, dgamma, dbeta) =
-            block_bwd(b, &ctx.saves[li], params[3 * li], params[3 * li + 1], da, need_dx);
+        let (dx, dw, dgamma, dbeta) = block_bwd(
+            b,
+            &ctx.saves[li],
+            params[3 * li],
+            params[3 * li + 1],
+            da,
+            need_dx,
+            threads,
+        );
         grads[3 * li] = dw;
         grads[3 * li + 1] = dgamma;
         grads[3 * li + 2] = dbeta;
@@ -293,17 +317,23 @@ pub fn backward(d: &Dims, params: &[&[f32]], dlogits: &[f32], ctx: &TrainCtx) ->
 /// Moments-only forward pass (phase 3's `bnstats` entry point): runs the
 /// blocks in train mode but keeps neither the backward context nor the
 /// head — the per-layer (mean, biased var) pairs are the only output.
-pub fn forward_moments(d: &Dims, params: &[&[f32]], images: &[f32], b: usize) -> Vec<Vec<f32>> {
+pub fn forward_moments(
+    d: &Dims,
+    params: &[&[f32]],
+    images: &[f32],
+    b: usize,
+    threads: usize,
+) -> Vec<Vec<f32>> {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
     let layers = conv_layers(d);
     let mut moments = Vec::with_capacity(2 * NUM_CONV_LAYERS);
     let fwd = |li: usize, x: &[f32], moments: &mut Vec<Vec<f32>>| -> Vec<f32> {
         let (_, cin, cout, side) = layers[li];
         let rows = b * side * side;
-        let patches = k::im2col(x, b, side, side, cin);
-        let u = k::matmul(&patches, params[3 * li], rows, 9 * cin, cout);
+        let patches = k::im2col(x, b, side, side, cin, threads);
+        let u = k::matmul(&patches, params[3 * li], rows, 9 * cin, cout, threads);
         let (y, _xhat, mean, var, _invstd) =
-            k::bn_train(&u, params[3 * li + 1], params[3 * li + 2], rows, cout);
+            k::bn_train(&u, params[3 * li + 1], params[3 * li + 2], rows, cout, threads);
         moments.push(mean);
         moments.push(var);
         k::relu(&y)
@@ -333,6 +363,7 @@ pub fn forward_eval(
     bn: &[&[f32]],
     images: &[f32],
     b: usize,
+    threads: usize,
 ) -> Vec<f32> {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
     debug_assert_eq!(bn.len(), 2 * NUM_CONV_LAYERS);
@@ -350,6 +381,7 @@ pub fn forward_eval(
             params[3 * li + 2],
             bn[2 * li],
             bn[2 * li + 1],
+            threads,
         )
     };
     let h = d.image_size;
@@ -369,7 +401,7 @@ pub fn forward_eval(
     add_into(&mut r3, &p3);
     let hw3 = (h / 8) * (h / 8);
     let (hfeat, _) = k::global_maxpool(&r3, b, hw3, 8 * c);
-    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes);
+    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes, threads);
     let bias = params[25];
     for bi in 0..b {
         for j in 0..d.num_classes {

@@ -1,9 +1,10 @@
 //! Discrete-event cluster clock with a compute/communication breakdown.
 //!
 //! Phase 1 advances by `compute + allreduce` per synchronous step; phase 2
-//! advances by the max of the (identical) per-worker durations via
-//! `advance_parallel`. Evaluation passes are tracked separately and do NOT
-//! count toward training time (the paper's tables report training time).
+//! advances by the slowest per-worker clock via `advance_parallel`, which
+//! absorbs that worker's own compute/comm breakdown. Evaluation passes are
+//! tracked separately and do NOT count toward training time (the paper's
+//! tables report training time).
 
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ClusterClock {
@@ -34,11 +35,26 @@ impl ClusterClock {
         self.comm += dt;
     }
 
-    /// Advance by the slowest of parallel worker durations (phase 2: the
-    /// cluster waits for all independent workers to finish).
-    pub fn advance_parallel(&mut self, worker_durations: &[f64]) {
-        let max = worker_durations.iter().cloned().fold(0.0, f64::max);
-        self.advance_compute(max);
+    /// Advance by the slowest of parallel worker clocks (phase 2: the
+    /// cluster waits for all independent workers to finish). The slowest
+    /// worker's own compute/comm breakdown is absorbed — booking its total
+    /// as pure compute would lose the communication component whenever a
+    /// phase-2 group is itself data-parallel (`group_devices > 1`).
+    /// Evaluation seconds are summed over all workers (eval is reported,
+    /// never part of training `seconds`).
+    pub fn advance_parallel(&mut self, workers: &[ClusterClock]) {
+        if let Some(slowest) = workers
+            .iter()
+            .max_by(|a, b| a.seconds.total_cmp(&b.seconds))
+        {
+            debug_assert!(slowest.seconds >= 0.0);
+            self.seconds += slowest.seconds;
+            self.compute += slowest.compute;
+            self.comm += slowest.comm;
+        }
+        for w in workers {
+            self.eval += w.eval;
+        }
     }
 
     pub fn note_eval(&mut self, dt: f64) {
@@ -70,11 +86,37 @@ mod tests {
 
     #[test]
     fn parallel_takes_max() {
+        let worker = |compute: f64, comm: f64| {
+            let mut w = ClusterClock::new();
+            w.advance_compute(compute);
+            w.advance_comm(comm);
+            w
+        };
         let mut c = ClusterClock::new();
-        c.advance_parallel(&[1.0, 3.0, 2.0]);
+        c.advance_parallel(&[worker(1.0, 0.0), worker(2.0, 1.0), worker(2.0, 0.0)]);
         assert_eq!(c.seconds, 3.0);
         c.advance_parallel(&[]);
         assert_eq!(c.seconds, 3.0);
+    }
+
+    #[test]
+    fn parallel_keeps_comm_breakdown() {
+        // the slowest worker's compute/comm split must survive (a phase-2
+        // group with group_devices > 1 pays all-reduce time every step)
+        let mut slow = ClusterClock::new();
+        slow.advance_compute(4.0);
+        slow.advance_comm(2.0);
+        let mut fast = ClusterClock::new();
+        fast.advance_compute(1.0);
+        fast.note_eval(0.5);
+        let mut c = ClusterClock::new();
+        c.advance_compute(10.0); // phase 1
+        c.advance_parallel(&[fast, slow]);
+        assert_eq!(c.seconds, 16.0);
+        assert_eq!(c.compute, 14.0);
+        assert_eq!(c.comm, 2.0);
+        // eval sums over all workers, outside training time
+        assert_eq!(c.eval, 0.5);
     }
 
     #[test]

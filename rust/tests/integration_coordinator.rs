@@ -30,7 +30,7 @@ fn fixture() -> Fixture {
     Fixture { engine, cost, train, test }
 }
 
-fn env(f: &Fixture) -> TrainEnv<'_> {
+fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
     TrainEnv {
         engine: &f.engine,
         cost: &f.cost,
@@ -39,7 +39,16 @@ fn env(f: &Fixture) -> TrainEnv<'_> {
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
+        threads,
     }
+}
+
+/// Default env: real parallelism as configured for the process (the CI
+/// parallel lane sets SWAP_THREADS=4), exercising the threaded paths in
+/// every test below — results are identical either way by contract.
+fn env(f: &Fixture) -> TrainEnv<'_> {
+    let threads = swap::coordinator::parallel::default_threads();
+    env_threads(f, threads)
 }
 
 fn tiny_swap_config(seed: u64) -> SwapConfig {
@@ -360,4 +369,121 @@ fn resumable_swap_reproduces_fresh_run() {
     assert!(c.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
             "partial resume must still reproduce the fresh run");
     std::fs::remove_dir_all(&dir_path).ok();
+}
+
+#[test]
+fn swap_parallel_threads_bitwise_equal_sequential() {
+    // The tentpole acceptance property: running the phase-2 workers (and
+    // phase-1 device shards) on real OS threads must change nothing but
+    // wall time — `threads=N` equals `threads=1` BITWISE, end to end.
+    let f = fixture();
+    let seq_env = env_threads(&f, 1);
+    let par_env = env_threads(&f, 4);
+    let mut cfg = tiny_swap_config(9);
+    cfg.workers = 4;
+    cfg.snapshot_every = Some(6);
+    let a = run_swap(&seq_env, &cfg).unwrap();
+    let b = run_swap(&par_env, &cfg).unwrap();
+    assert_eq!(a.final_params, b.final_params, "threads=4 must equal threads=1 bitwise");
+    for (wa, wb) in a.worker_params.iter().zip(&b.worker_params) {
+        assert_eq!(wa, wb, "every worker replica must match bitwise");
+    }
+    assert_eq!(a.final_stats.correct1, b.final_stats.correct1);
+    assert_eq!(a.final_stats.sum_loss.to_bits(), b.final_stats.sum_loss.to_bits());
+    // snapshot trails (taken inside worker threads) must match too
+    assert_eq!(a.snapshots.len(), b.snapshots.len());
+    for (ta, tb) in a.snapshots.iter().zip(&b.snapshots) {
+        assert_eq!(ta.len(), tb.len());
+        for ((sa, pa), (sb, pb)) in ta.iter().zip(tb) {
+            assert_eq!(sa, sb);
+            assert_eq!(pa, pb);
+        }
+    }
+    // the modeled cluster clock is execution-order independent
+    assert_eq!(a.clock.seconds.to_bits(), b.clock.seconds.to_bits());
+    assert_eq!(a.clock.comm.to_bits(), b.clock.comm.to_bits());
+}
+
+#[test]
+fn swap_parallel_shards_bitwise_with_group_devices() {
+    // group_devices > 1: phase 1 runs 4 shard gradients per step and each
+    // phase-2 group runs 2 — both fan-outs must stay bitwise across
+    // thread counts
+    let f = fixture();
+    let seq_env = env_threads(&f, 1);
+    let par_env = env_threads(&f, 3);
+    let mut cfg = tiny_swap_config(11);
+    cfg.workers = 2;
+    cfg.group_devices = 2;
+    let a = run_swap(&seq_env, &cfg).unwrap();
+    let b = run_swap(&par_env, &cfg).unwrap();
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.final_stats.correct1, b.final_stats.correct1);
+    // a data-parallel phase-2 group pays all-reduce time; the absorbed
+    // slowest-worker clock must carry that comm component (bug fix: it
+    // used to be booked as pure compute)
+    assert!(a.clock.comm > 0.0);
+    // phase 1: 2 epochs of B=32 over 4 devices -> 6 steps, comm each
+    let phase1_comm: f64 = 6.0 * f.cost.allreduce_time(4);
+    assert!(
+        a.clock.comm > phase1_comm * 1.5,
+        "phase-2 group all-reduce must appear in the comm breakdown: \
+         comm {} vs phase-1 only {}",
+        a.clock.comm,
+        phase1_comm
+    );
+}
+
+#[test]
+fn evaluate_covers_ragged_final_batch() {
+    // n_test = 32 isn't interesting (divisible); build a 27-example test
+    // set: examples must be 27, not floor(27/8)*8 = 24
+    let engine = NativeBackend::tiny();
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 5));
+    let train = gen.sample(96, 10);
+    let test = gen.sample(27, 11);
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    let env = TrainEnv {
+        engine: &engine,
+        cost: &cost,
+        train: &train,
+        test: &test,
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+        threads: 1,
+    };
+    let params = ParamSet::init(&m, 3);
+    let mut clock = ClusterClock::new();
+    let stats = env.bn_and_eval(&params, 3, &mut clock).unwrap();
+    assert_eq!(
+        stats.examples, 27,
+        "evaluation must cover the whole test set, including the ragged final batch"
+    );
+    // and through the full SWAP pipeline as well
+    let r = run_swap(&env, &tiny_swap_config(3)).unwrap();
+    assert_eq!(r.final_stats.examples, 27);
+    for ws in &r.worker_stats {
+        assert_eq!(ws.examples, 27);
+    }
+}
+
+#[test]
+fn local_sgd_parallel_matches_sequential() {
+    let f = fixture();
+    let cfg = LocalSgdConfig {
+        devices: 2,
+        sync_epochs: 1,
+        sync_sched: Schedule::Constant(0.08),
+        local_epochs: 1,
+        local_sched: Schedule::Constant(0.02),
+        h_steps: 4,
+        seed: 21,
+    };
+    let a = run_local_sgd(&env_threads(&f, 1), &cfg).unwrap();
+    let b = run_local_sgd(&env_threads(&f, 4), &cfg).unwrap();
+    assert!(a.params.distance(&b.params).unwrap() < 1e-12);
+    assert_eq!(a.sync_events, b.sync_events);
+    assert_eq!(a.outcome.test_acc1, b.outcome.test_acc1);
 }

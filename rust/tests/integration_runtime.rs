@@ -9,7 +9,7 @@ use swap::coordinator::TrainEnv;
 use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::{BnState, ParamSet};
 use swap::optim::{SgdConfig, SgdOptimizer};
-use swap::runtime::{Backend, HostBatch, NativeBackend};
+use swap::runtime::{Backend, HostBatch, NativeBackend, NativeSpec};
 use swap::sim::{CostModel, DeviceModel, NetModel};
 
 fn engine() -> NativeBackend {
@@ -24,7 +24,7 @@ fn tiny_batch(engine: &NativeBackend, seed: u64) -> HostBatch {
         seed,
     ));
     let ds = gen.sample(8, 10);
-    let mut b = Batcher::new(8, m.model.image_size, AugmentSpec::none());
+    let b = Batcher::new(8, m.model.image_size, AugmentSpec::none());
     b.assemble_clean(&ds, &(0..8).collect::<Vec<_>>())
 }
 
@@ -187,6 +187,7 @@ fn train_env_eval_and_bn_recompute() {
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
+        threads: 1,
     };
     let params = ParamSet::init(&m, 1);
     let mut clock = swap::sim::ClusterClock::new();
@@ -207,9 +208,54 @@ fn backend_accepts_any_batch_size() {
     let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 5));
     let ds = gen.sample(16, 10);
     for b in [1usize, 3, 16] {
-        let mut batcher = Batcher::new(b, m.model.image_size, AugmentSpec::none());
+        let batcher = Batcher::new(b, m.model.image_size, AugmentSpec::none());
         let hb = batcher.assemble_clean(&ds, &(0..b).collect::<Vec<_>>());
         let g = e.grad(params.as_slice(), &hb).unwrap();
         assert_eq!(g.stats.examples, b as i64);
     }
+}
+
+#[test]
+fn threaded_backend_is_bitwise_identical() {
+    // a backend with a kernel thread pool must be indistinguishable from
+    // the sequential one, bit for bit, on every entry point — use a model
+    // large enough that the kernels actually cross the spawn threshold
+    let seq = NativeBackend::new(NativeSpec::new("mt", 8, 10, 32).with_batches(&[32])).unwrap();
+    let par = NativeBackend::new(
+        NativeSpec::new("mt", 8, 10, 32).with_batches(&[32]).with_threads(4),
+    )
+    .unwrap();
+    let m = seq.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 17));
+    let ds = gen.sample(32, 10);
+    let b = Batcher::new(32, m.model.image_size, AugmentSpec::none());
+    let hb = b.assemble_clean(&ds, &(0..32).collect::<Vec<_>>());
+    let params = ParamSet::init(&m, 4);
+
+    let gs = seq.grad(params.as_slice(), &hb).unwrap();
+    let gp = par.grad(params.as_slice(), &hb).unwrap();
+    assert_eq!(gs.stats.sum_loss.to_bits(), gp.stats.sum_loss.to_bits());
+    for (a, b) in gs.grads.iter().zip(&gp.grads) {
+        assert_eq!(a, b, "gradients must match bitwise across thread counts");
+    }
+
+    let moments_s = seq.bn_moments(params.as_slice(), &hb).unwrap();
+    let moments_p = par.bn_moments(params.as_slice(), &hb).unwrap();
+    for (a, b) in moments_s.iter().zip(&moments_p) {
+        assert_eq!(a, b, "bn moments must match bitwise");
+    }
+
+    let bn = BnState::from_moments(&[moments_s]).unwrap();
+    let es = seq.eval_batch(params.as_slice(), bn.as_slice(), &hb).unwrap();
+    let ep = par.eval_batch(params.as_slice(), bn.as_slice(), &hb).unwrap();
+    assert_eq!(es.sum_loss.to_bits(), ep.sum_loss.to_bits());
+    assert_eq!(es.correct1, ep.correct1);
+
+    let mut ps = params.clone();
+    let mut ms = ps.zeros_like();
+    let mut pp = params.clone();
+    let mut mp = pp.zeros_like();
+    seq.train_step(ps.as_mut_slice(), ms.as_mut_slice(), &hb, 0.05).unwrap();
+    par.train_step(pp.as_mut_slice(), mp.as_mut_slice(), &hb, 0.05).unwrap();
+    assert_eq!(ps, pp, "fused train step must match bitwise");
 }

@@ -73,7 +73,7 @@ fn matmul_matches_reference() {
     let (rows, k, n) = (ashape[0], ashape[1], bshape[1]);
     assert_eq!(bshape[0], k);
 
-    let out = kernels::matmul(&a, &b, rows, k, n);
+    let out = kernels::matmul(&a, &b, rows, k, n, 1);
     assert_close_slice(&out, &floats(m.req("out_nobias").unwrap()), "matmul");
 
     let mut with_bias = out.clone();
@@ -137,8 +137,8 @@ fn conv3x3_matches_reference() {
     let cout = wshape[1];
     assert_eq!(wshape[0], 9 * cin);
     assert_eq!(yshape, vec![b, h, wd, cout]);
-    let patches = kernels::im2col(&x, b, h, wd, cin);
-    let out = kernels::matmul(&patches, &w, b * h * wd, 9 * cin, cout);
+    let patches = kernels::im2col(&x, b, h, wd, cin, 1);
+    let out = kernels::matmul(&patches, &w, b * h * wd, 9 * cin, cout, 1);
     assert_close_slice(&out, &y, "conv3x3");
 }
 
@@ -151,7 +151,7 @@ fn batchnorm_matches_reference() {
     let beta = floats(c.req("beta").unwrap());
     let rows = xshape[0] * xshape[1] * xshape[2];
     let ch = xshape[3];
-    let (y, _xhat, mean, var, _invstd) = kernels::bn_train(&x, &gamma, &beta, rows, ch);
+    let (y, _xhat, mean, var, _invstd) = kernels::bn_train(&x, &gamma, &beta, rows, ch, 1);
     let (_, want_y) = tensor_of(c.req("y").unwrap());
     assert_close_slice(&y, &want_y, "bn y");
     assert_close_slice(&mean, &floats(c.req("mean").unwrap()), "bn mean");
