@@ -1,0 +1,272 @@
+//! Weight-space arena bench: old-vs-new wall time for every hot path the
+//! flat-arena refactor rewrote — fused SGD step, ring all-reduce, phase-3
+//! averaging, and landscape plane-grid materialization — sequential and
+//! chunk-parallel. Emits `BENCH_weightspace.json` (and a copy under
+//! results/) with per-row timings plus legacy/flat speedups, and asserts
+//! bitwise old-vs-new parity along the way.
+//! Run: cargo bench --bench weightspace
+
+use swap::bench::{bench, Stats, Table};
+use swap::coordinator::{allreduce, parallel};
+use swap::landscape::Plane;
+use swap::model::{FlatParams, ParamSet};
+use swap::runtime::native::{native_manifest, NativeSpec};
+use swap::tensor::{self, flat, Tensor};
+use swap::util::{Json, Result};
+
+const W: usize = 8;
+const GRID_POINTS: usize = 16;
+
+fn flatten(tensors: &[Tensor]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for t in tensors {
+        out.extend_from_slice(t.data());
+    }
+    out
+}
+
+/// The pre-refactor per-tensor optimizer loop (legacy reference).
+fn legacy_sgd_step(params: &mut [Tensor], momentum: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    let (mu, wd) = (0.9f32, 5e-4f32);
+    for ((p, m), g) in params.iter_mut().zip(momentum.iter_mut()).zip(grads) {
+        let (pd, md, gd) = (p.data_mut(), m.data_mut(), g.data());
+        for i in 0..pd.len() {
+            let g2 = gd[i] + wd * pd[i];
+            let m2 = mu * md[i] + g2;
+            pd[i] -= lr * (g2 + mu * m2);
+            md[i] = m2;
+        }
+    }
+}
+
+/// The pre-refactor `ParamSet::average`: a W-way deep clone feeding the
+/// per-tensor `average_sets` (legacy reference).
+fn legacy_average(sets: &[Vec<Tensor>]) -> Vec<Tensor> {
+    let slices: Vec<Vec<Tensor>> = sets.to_vec();
+    tensor::average_sets(&slices).unwrap()
+}
+
+struct Row {
+    op: &'static str,
+    impl_name: &'static str,
+    threads: usize,
+    stats: Stats,
+}
+
+fn main() -> Result<()> {
+    let m = native_manifest(&NativeSpec::new("weightspace", 16, 10, 32));
+    let threads = parallel::default_threads().max(2);
+    let n = m.num_params;
+    println!("weightspace bench: {} params, W={W}, threads={threads}", n);
+
+    // W model-shaped weight vectors, both representations
+    let models: Vec<ParamSet> = (0..W).map(|w| ParamSet::init(&m, w as u64)).collect();
+    let tensor_sets: Vec<Vec<Tensor>> = models.iter().map(|p| p.to_tensors()).collect();
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- fused SGD step ------------------------------------------------
+    let grads_flat = models[1].data().to_vec();
+    let grads_t = tensor_sets[1].clone();
+    let step_legacy = {
+        let mut p = tensor_sets[0].clone();
+        let mut mom: Vec<Tensor> = p.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect();
+        bench(3, 30, || legacy_sgd_step(&mut p, &mut mom, &grads_t, 0.01))
+    };
+    rows.push(Row { op: "step", impl_name: "legacy", threads: 1, stats: step_legacy });
+    let step_flat_seq = {
+        let mut p = models[0].clone();
+        let mut mom = p.zeros_like();
+        bench(3, 30, || {
+            flat::sgd_step(1, p.as_mut_slice(), mom.as_mut_slice(), &grads_flat, 0.01, 0.9, 5e-4)
+        })
+    };
+    rows.push(Row { op: "step", impl_name: "flat", threads: 1, stats: step_flat_seq });
+    let step_flat_par = {
+        let mut p = models[0].clone();
+        let mut mom = p.zeros_like();
+        bench(3, 30, || {
+            flat::sgd_step(
+                threads,
+                p.as_mut_slice(),
+                mom.as_mut_slice(),
+                &grads_flat,
+                0.01,
+                0.9,
+                5e-4,
+            )
+        })
+    };
+    rows.push(Row { op: "step", impl_name: "flat", threads, stats: step_flat_par });
+
+    // parity: one legacy step vs one flat step, bitwise
+    {
+        let mut lp = tensor_sets[0].clone();
+        let mut lm: Vec<Tensor> =
+            lp.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect();
+        legacy_sgd_step(&mut lp, &mut lm, &grads_t, 0.01);
+        let mut fp = models[0].clone();
+        let mut fm = fp.zeros_like();
+        flat::sgd_step(1, fp.as_mut_slice(), fm.as_mut_slice(), &grads_flat, 0.01, 0.9, 5e-4);
+        assert_eq!(fp.data(), flatten(&lp).as_slice(), "step parity");
+    }
+
+    // ---- ring all-reduce -----------------------------------------------
+    let ring_legacy = bench(2, 15, || {
+        allreduce::ring_mean_reference(&tensor_sets).unwrap();
+    });
+    rows.push(Row { op: "ring", impl_name: "legacy", threads: 1, stats: ring_legacy });
+    let ring_flat = {
+        // in-place: each run reduces the previous run's buffers — values
+        // grow but the arithmetic (and its wall time) is identical
+        let mut bufs: Vec<Vec<f32>> = models.iter().map(|p| p.data().to_vec()).collect();
+        bench(2, 15, || {
+            allreduce::ring_mean_inplace(&mut bufs).unwrap();
+        })
+    };
+    rows.push(Row { op: "ring", impl_name: "flat", threads: 1, stats: ring_flat });
+
+    // parity: flat in-place ring equals the legacy ring bitwise
+    {
+        let reference = allreduce::ring_mean_reference(&tensor_sets).unwrap();
+        let mut bufs: Vec<Vec<f32>> = models.iter().map(|p| p.data().to_vec()).collect();
+        allreduce::ring_mean_inplace(&mut bufs).unwrap();
+        assert_eq!(bufs[0], flatten(&reference), "ring parity");
+    }
+
+    // ---- phase-3 averaging ----------------------------------------------
+    let avg_legacy = bench(2, 20, || {
+        legacy_average(&tensor_sets);
+    });
+    rows.push(Row { op: "average", impl_name: "legacy", threads: 1, stats: avg_legacy });
+    let avg_flat_seq = bench(2, 20, || {
+        FlatParams::average_mt(&models, 1).unwrap();
+    });
+    rows.push(Row { op: "average", impl_name: "flat", threads: 1, stats: avg_flat_seq });
+    let avg_flat_par = bench(2, 20, || {
+        FlatParams::average_mt(&models, threads).unwrap();
+    });
+    rows.push(Row { op: "average", impl_name: "flat", threads, stats: avg_flat_par });
+
+    // parity
+    assert_eq!(
+        FlatParams::average_mt(&models, threads).unwrap().data(),
+        flatten(&legacy_average(&tensor_sets)).as_slice(),
+        "average parity"
+    );
+
+    // ---- plane grid materialization -------------------------------------
+    let plane = Plane::through(&models[0], &models[1], &models[2]).unwrap();
+    // the same three anchors in the legacy per-tensor representation
+    let (t1_t, t2_t, t3_t) = (&tensor_sets[0], &tensor_sets[1], &tensor_sets[2]);
+    let lo = t1_t.clone();
+    // legacy basis: the pre-refactor sets_* pipeline
+    let legacy_u;
+    let legacy_v;
+    {
+        let d2 = tensor::sets_sub(t2_t, t1_t).unwrap();
+        let d3 = tensor::sets_sub(t3_t, t1_t).unwrap();
+        let n2 = tensor::sets_norm(&d2);
+        let mut u = d2;
+        tensor::sets_scale(&mut u, (1.0 / n2) as f32);
+        let a3 = tensor::sets_dot(&d3, &u).unwrap();
+        let mut v = d3;
+        tensor::sets_axpy(&mut v, -a3 as f32, &u).unwrap();
+        let nv = tensor::sets_norm(&v);
+        tensor::sets_scale(&mut v, (1.0 / nv) as f32);
+        legacy_u = u;
+        legacy_v = v;
+    }
+    let plane_legacy = bench(1, 10, || {
+        for k in 0..GRID_POINTS {
+            let alpha = k as f64 * 0.1;
+            let mut t = lo.clone();
+            tensor::sets_axpy(&mut t, alpha as f32, &legacy_u).unwrap();
+            tensor::sets_axpy(&mut t, 0.5, &legacy_v).unwrap();
+        }
+    });
+    rows.push(Row { op: "plane_grid", impl_name: "legacy", threads: 1, stats: plane_legacy });
+    let plane_flat_seq = bench(1, 10, || {
+        for k in 0..GRID_POINTS {
+            plane.point_mt(k as f64 * 0.1, 0.5, 1).unwrap();
+        }
+    });
+    rows.push(Row { op: "plane_grid", impl_name: "flat", threads: 1, stats: plane_flat_seq });
+    let plane_flat_par = bench(1, 10, || {
+        for k in 0..GRID_POINTS {
+            plane.point_mt(k as f64 * 0.1, 0.5, threads).unwrap();
+        }
+    });
+    rows.push(Row { op: "plane_grid", impl_name: "flat", threads, stats: plane_flat_par });
+
+    // ---- report ----------------------------------------------------------
+    let mut t = Table::new(
+        &format!("weight-space arena: legacy vs flat ({n} params, W={W})"),
+        &["op", "impl", "threads", "mean (ms)", "std (ms)", "min (ms)"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.op.to_string(),
+            r.impl_name.to_string(),
+            r.threads.to_string(),
+            format!("{:.3}", r.stats.mean * 1e3),
+            format!("{:.3}", r.stats.std * 1e3),
+            format!("{:.3}", r.stats.min * 1e3),
+        ]);
+    }
+    t.print();
+
+    let seq_mean = |op: &str, imp: &str| -> f64 {
+        rows.iter()
+            .find(|r| r.op == op && r.impl_name == imp && r.threads == 1)
+            .map(|r| r.stats.mean)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = |op: &str| seq_mean(op, "legacy") / seq_mean(op, "flat").max(1e-12);
+    let (s_step, s_ring, s_avg, s_plane) = (
+        speedup("step"),
+        speedup("ring"),
+        speedup("average"),
+        speedup("plane_grid"),
+    );
+    println!(
+        "legacy/flat speedups (sequential): step {s_step:.2}x | ring {s_ring:.2}x | \
+         average {s_avg:.2}x | plane {s_plane:.2}x"
+    );
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("op", Json::Str(r.op.to_string())),
+                ("impl", Json::Str(r.impl_name.to_string())),
+                ("threads", Json::Num(r.threads as f64)),
+                ("mean_seconds", Json::Num(r.stats.mean)),
+                ("std_seconds", Json::Num(r.stats.std)),
+                ("min_seconds", Json::Num(r.stats.min)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("weightspace".to_string())),
+        ("num_params", Json::Num(n as f64)),
+        ("workers", Json::Num(W as f64)),
+        ("threads_parallel", Json::Num(threads as f64)),
+        ("rows", Json::Arr(json_rows)),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("step", Json::Num(s_step)),
+                ("ring", Json::Num(s_ring)),
+                ("average", Json::Num(s_avg)),
+                ("plane_grid", Json::Num(s_plane)),
+            ]),
+        ),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_weightspace.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_weightspace.json", &json)?;
+    println!("wrote BENCH_weightspace.json");
+    Ok(())
+}

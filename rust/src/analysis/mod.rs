@@ -1,14 +1,15 @@
 //! Training-dynamics analysis (§4.2, Figure 4): cosine similarity between
 //! the descent direction −g_t and the direction toward the SWAP average
 //! Δθ = θ_swap − θ_t, plus weight-travel statistics (Hoffer et al.-style
-//! distance from initialization).
+//! distance from initialization). All the geometry runs on flat arenas —
+//! the backend's gradient arena is wrapped into a `FlatParams` over the
+//! model's shared layout without copying or reshaping.
 
 use crate::coordinator::TrainEnv;
 use crate::data::{AugmentSpec, Batcher};
 use crate::metrics::SeriesLog;
-use crate::model::ParamSet;
+use crate::model::{FlatParams, ParamSet};
 use crate::runtime::Backend;
-use crate::tensor;
 use crate::util::{Result, Rng};
 
 /// Cosine series along a snapshot trail: for every (step, theta_t) compute
@@ -31,16 +32,11 @@ pub fn cosine_to_target(
         batcher.assemble_clean_into(env.train, &idx, &mut hb);
         let g = env.engine.grad(theta.as_slice(), &hb)?;
         // -g direction vs (target - theta)
-        let delta = tensor::sets_sub(&target.tensors, &theta.tensors)?;
-        let mut neg = g.grads;
-        tensor::sets_scale(&mut neg, -1.0);
-        let cos = tensor::sets_cosine(&neg, &delta)?;
-        out.push(&[
-            *step as f64,
-            cos,
-            tensor::sets_norm(&neg),
-            tensor::sets_norm(&delta),
-        ]);
+        let delta = target.sub(theta)?;
+        let mut neg = FlatParams::from_data(theta.layout().clone(), g.grads)?;
+        neg.scale(-1.0, 1);
+        let cos = neg.cosine(&delta, 1)?;
+        out.push(&[*step as f64, cos, neg.norm(1), delta.norm(1)]);
     }
     Ok(out)
 }
@@ -58,12 +54,9 @@ pub fn travel_series(trail: &[(usize, ParamSet)], reference: &ParamSet) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::Tensor;
 
     fn pset(vals: Vec<f32>) -> ParamSet {
-        ParamSet {
-            tensors: vec![Tensor::new(vec![vals.len()], vals).unwrap()],
-        }
+        ParamSet::from_vec(vals)
     }
 
     #[test]

@@ -3,16 +3,44 @@
 //! plus the trivial mean as an oracle. The property tests assert the ring
 //! schedule produces exactly the arithmetic mean; the α–β *cost* of the
 //! ring lives in `sim::NetModel`.
+//!
+//! Since the flat-arena refactor gradients arrive already flattened
+//! (manifest order), so [`ring_mean_inplace`] runs the whole schedule in
+//! place with ZERO allocation: within one ring step no (worker, chunk)
+//! pair is both read and written — the receiver adds the sender's send
+//! chunk into its own copy of that same chunk, while each worker only ever
+//! writes a *different* chunk of its own buffer — so the per-step chunk
+//! snapshots the legacy implementation cloned were pure overhead. The
+//! element order of every addition is unchanged, so the result is bitwise
+//! identical to the legacy path (pinned by rust/tests/weightspace.rs).
+//!
+//! [`ring_mean_reference`] keeps the legacy `Vec<Tensor>` implementation
+//! as the oracle for parity tests and the old-vs-new bench rows.
+
+use std::ops::Range;
 
 use crate::tensor::Tensor;
 use crate::util::{Error, Result};
 
-/// Naive oracle: elementwise mean of the workers' gradient sets.
+/// Naive oracle: elementwise mean of the workers' gradient sets (legacy
+/// per-tensor representation).
 pub fn naive_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
     crate::tensor::average_sets(worker_grads)
 }
 
-/// Ring all-reduce over W workers' flattened gradients.
+/// Split borrow of two distinct worker buffers: (&mut xs[i], &xs[j]).
+fn pair_mut<'a>(xs: &'a mut [Vec<f32>], i: usize, j: usize) -> (&'a mut [f32], &'a [f32]) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (lo, hi) = xs.split_at_mut(j);
+        (lo[i].as_mut_slice(), hi[0].as_slice())
+    } else {
+        let (lo, hi) = xs.split_at_mut(i);
+        (hi[0].as_mut_slice(), lo[j].as_slice())
+    }
+}
+
+/// Ring all-reduce over W workers' flat gradient arenas, fully in place.
 ///
 /// Implements the standard two-phase schedule on W chunks:
 ///   * reduce-scatter: in step s, worker w sends chunk (w - s) and adds the
@@ -20,8 +48,66 @@ pub fn naive_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
 ///     the fully-reduced chunk (w + 1).
 ///   * all-gather: the owned chunks circulate for W-1 more steps.
 ///
-/// Returns the averaged gradient set (divided by W at the end).
-pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+/// On return every buffer holds the full elementwise SUM and `workers[0]`
+/// has been divided by W — i.e. `workers[0]` is the averaged gradient
+/// arena. No allocation takes place.
+pub fn ring_mean_inplace(workers: &mut [Vec<f32>]) -> Result<()> {
+    let w = workers.len();
+    if w == 0 {
+        return Err(Error::invalid("ring_mean: no workers"));
+    }
+    let total = workers[0].len();
+    if workers.iter().any(|v| v.len() != total) {
+        return Err(Error::shape("ring_mean: inconsistent gradient sizes"));
+    }
+    if w == 1 {
+        return Ok(()); // the mean of one worker is itself
+    }
+    // chunk boundaries (W chunks, last one takes the remainder)
+    let chunk = |c: usize| -> Range<usize> {
+        let per = total / w;
+        let start = c * per;
+        let end = if c == w - 1 { total } else { start + per };
+        start..end
+    };
+
+    // reduce-scatter: worker r receives the chunk its ring predecessor
+    // sends and accumulates it in place
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let sender = (r + w - 1) % w;
+            let c = (sender + w - s) % w;
+            let rng = chunk(c);
+            let (dst, src) = pair_mut(workers, r, sender);
+            for (d, &v) in dst[rng.clone()].iter_mut().zip(&src[rng]) {
+                *d += v;
+            }
+        }
+    }
+    // after reduce-scatter, worker r owns fully-reduced chunk (r + 1) % w
+    // all-gather: the owned chunks circulate
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let sender = (r + w - 1) % w;
+            let c = (sender + 1 + w - s) % w;
+            let rng = chunk(c);
+            let (dst, src) = pair_mut(workers, r, sender);
+            dst[rng.clone()].copy_from_slice(&src[rng]);
+        }
+    }
+
+    // every worker now holds the identical full sum; divide worker 0
+    let inv = 1.0 / w as f32;
+    for x in workers[0].iter_mut() {
+        *x *= inv;
+    }
+    Ok(())
+}
+
+/// Legacy reference: the same ring schedule over per-tensor sets, with
+/// explicit flatten + per-step snapshot copies. Kept as the bitwise oracle
+/// for [`ring_mean_inplace`] (tests) and the old-vs-new bench rows.
+pub fn ring_mean_reference(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
     let w = worker_grads.len();
     if w == 0 {
         return Err(Error::invalid("ring_mean: no workers"));
@@ -29,8 +115,6 @@ pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
     if w == 1 {
         return Ok(worker_grads[0].clone());
     }
-    // Flatten each worker's set into one vector (the real implementation
-    // fuses tensors into buckets exactly like this).
     let shapes: Vec<Vec<usize>> = worker_grads[0].iter().map(|t| t.shape().to_vec()).collect();
     let total: usize = worker_grads[0].iter().map(|t| t.numel()).sum();
     let mut flat: Vec<Vec<f32>> = worker_grads
@@ -49,18 +133,14 @@ pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
     if flat.iter().any(|v| v.len() != total) {
         return Err(Error::shape("ring_mean: inconsistent gradient sizes"));
     }
-
-    // chunk boundaries (W chunks, last one takes the remainder)
-    let chunk = |c: usize| -> std::ops::Range<usize> {
+    let chunk = |c: usize| -> Range<usize> {
         let per = total / w;
         let start = c * per;
         let end = if c == w - 1 { total } else { start + per };
         start..end
     };
-
-    // reduce-scatter
+    // reduce-scatter with per-step snapshots (the legacy allocation)
     for s in 0..w - 1 {
-        // worker r receives chunk (r - s - 1) from worker (r - 1)
         let snapshots: Vec<Vec<f32>> = (0..w)
             .map(|r| {
                 let c = (r + w - s) % w; // chunk each worker SENDS this step
@@ -77,12 +157,11 @@ pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
             }
         }
     }
-    // after reduce-scatter, worker r owns fully-reduced chunk (r + 1) % w
     // all-gather
     for s in 0..w - 1 {
         let snapshots: Vec<(usize, Vec<f32>)> = (0..w)
             .map(|r| {
-                let c = (r + 1 + w - s) % w; // chunk each worker sends
+                let c = (r + 1 + w - s) % w;
                 (c, flat[r][chunk(c)].to_vec())
             })
             .collect();
@@ -93,8 +172,6 @@ pub fn ring_mean(worker_grads: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
             flat[r][rng].copy_from_slice(data);
         }
     }
-
-    // every worker now holds the identical full sum; divide and un-flatten
     let inv = 1.0 / w as f32;
     let result = &mut flat[0];
     for x in result.iter_mut() {
@@ -115,21 +192,9 @@ mod tests {
     use super::*;
     use crate::testutil::property;
 
-    fn rand_sets(g: &mut crate::testutil::Gen, w: usize) -> Vec<Vec<Tensor>> {
-        let shapes: Vec<Vec<usize>> = vec![
-            vec![g.usize_in(1..20)],
-            vec![g.usize_in(1..7), g.usize_in(1..7)],
-        ];
+    fn rand_flat_sets(g: &mut crate::testutil::Gen, w: usize, n: usize) -> Vec<Vec<f32>> {
         (0..w)
-            .map(|_| {
-                shapes
-                    .iter()
-                    .map(|s| {
-                        let n: usize = s.iter().product();
-                        Tensor::new(s.clone(), (0..n).map(|_| g.normal()).collect()).unwrap()
-                    })
-                    .collect()
-            })
+            .map(|_| (0..n).map(|_| g.normal()).collect())
             .collect()
     }
 
@@ -137,45 +202,94 @@ mod tests {
     fn ring_equals_naive_mean_property() {
         property(60, |g| {
             let w = g.usize_in(1..9);
-            let sets = rand_sets(g, w);
-            let ring = ring_mean(&sets).unwrap();
-            let naive = naive_mean(&sets).unwrap();
-            for (a, b) in ring.iter().zip(&naive) {
-                assert_eq!(a.shape(), b.shape());
-                for (x, y) in a.data().iter().zip(b.data()) {
-                    assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()), "{x} vs {y} (W={w})");
-                }
+            let n = g.usize_in(1..60);
+            let sets = rand_flat_sets(g, w, n);
+            let mut ring = sets.clone();
+            ring_mean_inplace(&mut ring).unwrap();
+            for j in 0..n {
+                let naive: f64 =
+                    sets.iter().map(|s| s[j] as f64).sum::<f64>() / w as f64;
+                let got = ring[0][j] as f64;
+                assert!(
+                    (got - naive).abs() <= 1e-5 * (1.0 + naive.abs()),
+                    "{got} vs {naive} (W={w}, j={j})"
+                );
             }
         });
     }
 
     #[test]
+    fn inplace_matches_reference_bitwise() {
+        // the no-snapshot schedule must reproduce the legacy ring exactly
+        property(40, |g| {
+            let w = g.usize_in(2..8);
+            let shapes = [g.usize_in(1..20), g.usize_in(1..9)];
+            let tensor_sets: Vec<Vec<Tensor>> = (0..w)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|&n| {
+                            Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut flat_sets: Vec<Vec<f32>> = tensor_sets
+                .iter()
+                .map(|set| {
+                    let mut v = Vec::new();
+                    for t in set {
+                        v.extend_from_slice(t.data());
+                    }
+                    v
+                })
+                .collect();
+            let reference = ring_mean_reference(&tensor_sets).unwrap();
+            ring_mean_inplace(&mut flat_sets).unwrap();
+            let mut ref_flat = Vec::new();
+            for t in &reference {
+                ref_flat.extend_from_slice(t.data());
+            }
+            assert_eq!(flat_sets[0], ref_flat, "W={w}");
+        });
+    }
+
+    #[test]
     fn single_worker_identity() {
-        let set = vec![vec![Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap()]];
-        assert_eq!(ring_mean(&set).unwrap(), set[0]);
+        let mut set = vec![vec![1.0f32, 2.0, 3.0]];
+        ring_mean_inplace(&mut set).unwrap();
+        assert_eq!(set[0], vec![1.0, 2.0, 3.0]);
     }
 
     #[test]
     fn two_workers_mean() {
+        let mut sets = vec![vec![0.0f32, 4.0], vec![2.0f32, 0.0]];
+        ring_mean_inplace(&mut sets).unwrap();
+        assert_eq!(sets[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn tiny_buffer_fewer_elements_than_workers() {
+        // total elements < W exercises the degenerate chunking path
+        let mut sets: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
+        ring_mean_inplace(&mut sets).unwrap();
+        assert!((sets[0][0] - 2.0).abs() < 1e-6);
+        assert!((sets[0][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ragged_and_empty_error() {
+        assert!(ring_mean_inplace(&mut []).is_err());
+        let mut ragged = vec![vec![1.0f32], vec![1.0f32, 2.0]];
+        assert!(ring_mean_inplace(&mut ragged).is_err());
+        assert!(ring_mean_reference(&[]).is_err());
+    }
+
+    #[test]
+    fn reference_two_workers_mean() {
         let a = vec![Tensor::new(vec![2], vec![0.0, 4.0]).unwrap()];
         let b = vec![Tensor::new(vec![2], vec![2.0, 0.0]).unwrap()];
-        let m = ring_mean(&[a, b]).unwrap();
+        let m = ring_mean_reference(&[a, b]).unwrap();
         assert_eq!(m[0].data(), &[1.0, 2.0]);
-    }
-
-    #[test]
-    fn tiny_tensor_fewer_elements_than_workers() {
-        // total elements < W exercises the degenerate chunking path
-        let sets: Vec<Vec<Tensor>> = (0..5)
-            .map(|i| vec![Tensor::new(vec![2], vec![i as f32, 1.0]).unwrap()])
-            .collect();
-        let m = ring_mean(&sets).unwrap();
-        assert!((m[0].data()[0] - 2.0).abs() < 1e-6);
-        assert!((m[0].data()[1] - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn empty_errors() {
-        assert!(ring_mean(&[]).is_err());
     }
 }

@@ -111,7 +111,7 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
         // local steps run in parallel on the modeled cluster
         clock.advance_compute(step_time);
         if (step + 1) % cfg.h_steps == 0 {
-            let avg = ParamSet::average(&worker_params)?;
+            let avg = ParamSet::average_mt(&worker_params, env.threads)?;
             for wp in &mut worker_params {
                 *wp = avg.clone();
             }
@@ -121,7 +121,7 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
     }
 
     // final consensus model
-    params = ParamSet::average(&worker_params)?;
+    params = ParamSet::average_mt(&worker_params, env.threads)?;
     if total_local_steps % cfg.h_steps != 0 {
         clock.advance_comm(env.cost.allreduce_time(cfg.devices));
         sync_events += 1;

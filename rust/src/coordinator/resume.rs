@@ -194,7 +194,7 @@ pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Res
     for wp in &worker_params {
         worker_stats.push(env.bn_and_eval(wp, cfg.seed, &mut clock)?);
     }
-    let final_params = ParamSet::average(&worker_params)?;
+    let final_params = ParamSet::average_mt(&worker_params, env.threads)?;
     let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
     let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
 

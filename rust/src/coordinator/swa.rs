@@ -82,8 +82,9 @@ pub fn run_swa(
     // reporting-only: the last SGD iterate before averaging
     let last_stats = env.bn_and_eval(params, cfg.seed, clock)?;
 
-    // average + BN recompute (charged, as in SWAP phase 3)
-    let averaged = ParamSet::average(&samples)?;
+    // average + BN recompute (charged, as in SWAP phase 3) — streaming
+    // flat-arena mean, no per-sample clones
+    let averaged = ParamSet::average_mt(&samples, env.threads)?;
     let final_bn = env.recompute_bn(&averaged, cfg.seed, clock, true)?;
     let final_stats = env.evaluate(&averaged, &final_bn, clock)?;
 

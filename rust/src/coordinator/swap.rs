@@ -194,7 +194,9 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
     }
 
     // ---------------- Phase 3: average + BN recompute ------------------
-    let final_params = ParamSet::average(&worker_params)?;
+    // streaming flat-arena mean: one output allocation, no W-way clone,
+    // chunk-parallel across env.threads (bitwise-identical to sequential)
+    let final_params = ParamSet::average_mt(&worker_params, env.threads)?;
     let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
     let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
 

@@ -5,7 +5,7 @@
 use super::allreduce;
 use super::parallel;
 use crate::data::{sequential_batches, AugmentSpec, Batcher, Dataset, EpochSampler, shard};
-use crate::model::{BnState, ParamSet};
+use crate::model::{BnState, ParamLayout, ParamSet};
 use crate::optim::{Schedule, SgdConfig, SgdOptimizer};
 use crate::runtime::{Backend, BatchStats};
 use crate::sim::{ClusterClock, CostModel};
@@ -105,7 +105,7 @@ impl<'a> TrainEnv<'a> {
         let mut rng = Rng::stream(seed, 0xB7);
         let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
         let mut hb = batcher.make_batch();
-        let mut moments = Vec::with_capacity(self.bn_batches);
+        let mut moments: Vec<Vec<f32>> = Vec::with_capacity(self.bn_batches);
         let mut order = rng.permutation(self.train.n);
         if order.len() < b * self.bn_batches {
             // small datasets: wrap around
@@ -125,7 +125,7 @@ impl<'a> TrainEnv<'a> {
                 clock.note_eval(dt);
             }
         }
-        BnState::from_moments(&moments)
+        BnState::from_moments(ParamLayout::of_bn(self.engine.manifest()), &moments)
     }
 
     /// Convenience: recompute BN (uncharged) then evaluate.
@@ -195,10 +195,9 @@ pub fn run_sync_training(
         return Err(Error::config("global batch larger than the dataset"));
     }
     let sgd = env.sgd_config();
-    let mut opt = SgdOptimizer {
-        cfg: sgd,
-        momentum: ParamSet { tensors: std::mem::take(&mut momentum.tensors) },
-    };
+    // zero-copy ownership handoff of the momentum arena for the segment
+    // (flat::sgd_step gates its own fan-out on the arena size)
+    let mut opt = SgdOptimizer { cfg: sgd, momentum: momentum.take() };
     let mut sampler = EpochSampler::new(env.train.n, cfg.global_batch, cfg.seed, cfg.seed_stream);
     let batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
     let mut aug_rng = Rng::stream(cfg.seed ^ 0xAE6, cfg.seed_stream);
@@ -244,18 +243,17 @@ pub fn run_sync_training(
                 device_batches.iter().collect(),
                 |_, hb| env.engine.grad(params.as_slice(), hb),
             );
-            let mut worker_grads = Vec::with_capacity(cfg.devices);
+            let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(cfg.devices);
             let mut stats = BatchStats::default();
             for g in results {
                 let g = g?;
                 stats.accumulate(&g.stats);
                 worker_grads.push(g.grads);
             }
-            let mean = allreduce::ring_mean(&worker_grads)?;
+            // in-place ring: after this, worker_grads[0] is the mean arena
+            allreduce::ring_mean_inplace(&mut worker_grads)?;
             let lr = cfg.sched.lr(cfg.sched_offset + steps);
-            let mut pslice = ParamSet { tensors: std::mem::take(&mut params.tensors) };
-            opt.step(&mut pslice, &mean, lr)?;
-            params.tensors = pslice.tensors;
+            opt.step_mt(params, &worker_grads[0], lr, env.threads)?;
             stats
         };
         // cluster time: all devices compute in parallel, then sync
@@ -282,7 +280,7 @@ pub fn run_sync_training(
             }
         }
     }
-    momentum.tensors = opt.momentum.tensors;
+    *momentum = opt.momentum;
     Ok(TrainProgress {
         steps,
         epochs: steps as f64 / steps_per_epoch as f64,

@@ -62,7 +62,7 @@ pub fn eval_grid(
     for i in 0..spec.n {
         for j in 0..spec.n {
             let (alpha, beta) = (lin(&bx, i), lin(&by, j));
-            let theta = plane.point(alpha, beta)?;
+            let theta = plane.point_mt(alpha, beta, env.threads)?;
             let bn = env.recompute_bn(&theta, seed, clock, false)?;
             let tr = env.evaluate_on(env.train, &theta, &bn, clock, spec.max_eval_batches)?;
             let te = env.evaluate_on(env.test, &theta, &bn, clock, spec.max_eval_batches)?;

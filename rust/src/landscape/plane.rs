@@ -2,43 +2,46 @@
 //! device of §4 (Garipov et al. / Izmailov et al. style). Figures 2 and 3
 //! plot train/test error over the plane spanned by {LB, SGD, SWAP} or
 //! {SGD1, SGD2, SGD3} with SWAP projected in.
+//!
+//! The basis vectors are flat arenas and all the geometry (axpy / dot /
+//! norm) runs on contiguous slices via `model::flat` — grid evaluation
+//! materializes each probe point with two fused axpys over one buffer.
 
-use crate::model::ParamSet;
-use crate::tensor::{self, Tensor};
+use crate::model::{FlatParams, ParamSet};
 use crate::util::{Error, Result};
 
 /// Orthonormal basis (u, v) of the plane through theta1, theta2, theta3,
 /// with theta1 as origin.
 pub struct Plane {
     pub origin: ParamSet,
-    pub u: Vec<Tensor>,
-    pub v: Vec<Tensor>,
+    pub u: FlatParams,
+    pub v: FlatParams,
     /// plane coordinates of the three anchors
     pub anchors: [(f64, f64); 3],
 }
 
 impl Plane {
     pub fn through(theta1: &ParamSet, theta2: &ParamSet, theta3: &ParamSet) -> Result<Plane> {
-        let d2 = tensor::sets_sub(&theta2.tensors, &theta1.tensors)?;
-        let d3 = tensor::sets_sub(&theta3.tensors, &theta1.tensors)?;
-        let n2 = tensor::sets_norm(&d2);
+        let d2 = theta2.sub(theta1)?;
+        let d3 = theta3.sub(theta1)?;
+        let n2 = d2.norm(1);
         if n2 == 0.0 {
             return Err(Error::invalid("plane: theta2 == theta1"));
         }
         let mut u = d2;
-        tensor::sets_scale(&mut u, (1.0 / n2) as f32);
+        u.scale((1.0 / n2) as f32, 1);
         // Gram-Schmidt
-        let a3 = tensor::sets_dot(&d3, &u)?;
-        let n3 = tensor::sets_norm(&d3);
+        let a3 = d3.dot(&u, 1)?;
+        let n3 = d3.norm(1);
         let mut vres = d3;
-        tensor::sets_axpy(&mut vres, -a3 as f32, &u)?;
-        let nv = tensor::sets_norm(&vres);
+        vres.axpy(-a3 as f32, &u, 1)?;
+        let nv = vres.norm(1);
         // relative threshold: f32 Gram-Schmidt leaves ~1e-7 of residual on
         // exactly collinear points
         if nv < 1e-5 * n3.max(1e-12) {
             return Err(Error::invalid("plane: three points are collinear"));
         }
-        tensor::sets_scale(&mut vres, (1.0 / nv) as f32);
+        vres.scale((1.0 / nv) as f32, 1);
         Ok(Plane {
             origin: theta1.clone(),
             u,
@@ -49,16 +52,26 @@ impl Plane {
 
     /// The weight vector at plane coordinates (alpha, beta).
     pub fn point(&self, alpha: f64, beta: f64) -> Result<ParamSet> {
+        self.point_mt(alpha, beta, 1)
+    }
+
+    /// Chunk-parallel variant (grid evaluation); bitwise identical to
+    /// `point` for any thread count.
+    pub fn point_mt(&self, alpha: f64, beta: f64, threads: usize) -> Result<ParamSet> {
         let mut t = self.origin.clone();
-        tensor::sets_axpy(&mut t.tensors, alpha as f32, &self.u)?;
-        tensor::sets_axpy(&mut t.tensors, beta as f32, &self.v)?;
+        t.axpy(alpha as f32, &self.u, threads)?;
+        t.axpy(beta as f32, &self.v, threads)?;
         Ok(t)
     }
 
     /// Project an arbitrary weight vector onto plane coordinates.
     pub fn project(&self, theta: &ParamSet) -> Result<(f64, f64)> {
-        let d = tensor::sets_sub(&theta.tensors, &self.origin.tensors)?;
-        Ok((tensor::sets_dot(&d, &self.u)?, tensor::sets_dot(&d, &self.v)?))
+        self.project_mt(theta, 1)
+    }
+
+    pub fn project_mt(&self, theta: &ParamSet, threads: usize) -> Result<(f64, f64)> {
+        let d = theta.sub_mt(&self.origin, threads)?;
+        Ok((d.dot(&self.u, threads)?, d.dot(&self.v, threads)?))
     }
 
     /// Distance from the plane (how far off-plane a projected point is).
@@ -95,9 +108,7 @@ mod tests {
     use crate::testutil::property;
 
     fn pset(vals: Vec<f32>) -> ParamSet {
-        ParamSet {
-            tensors: vec![Tensor::new(vec![vals.len()], vals).unwrap()],
-        }
+        ParamSet::from_vec(vals)
     }
 
     #[test]
@@ -108,9 +119,9 @@ mod tests {
             &pset(vec![1.0, 3.0, 0.0]),
         )
         .unwrap();
-        assert!((tensor::sets_norm(&p.u) - 1.0).abs() < 1e-6);
-        assert!((tensor::sets_norm(&p.v) - 1.0).abs() < 1e-6);
-        assert!(tensor::sets_dot(&p.u, &p.v).unwrap().abs() < 1e-6);
+        assert!((p.u.norm(1) - 1.0).abs() < 1e-6);
+        assert!((p.v.norm(1) - 1.0).abs() < 1e-6);
+        assert!(p.u.dot(&p.v, 1).unwrap().abs() < 1e-6);
     }
 
     #[test]
@@ -145,6 +156,22 @@ mod tests {
             // points ON the plane have ~zero residual
             assert!(p.residual(&theta).unwrap() < 1e-3);
         });
+    }
+
+    #[test]
+    fn point_and_project_threads_bitwise() {
+        let t1 = pset((0..4097).map(|i| (i as f32 * 0.013).sin()).collect());
+        let t2 = pset((0..4097).map(|i| (i as f32 * 0.031).cos()).collect());
+        let t3 = pset((0..4097).map(|i| (i as f32 * 0.007).sin() + 0.1).collect());
+        let p = Plane::through(&t1, &t2, &t3).unwrap();
+        let seq = p.point(0.7, -1.3).unwrap();
+        let sp = p.project(&t3).unwrap();
+        for threads in [2, 4] {
+            assert_eq!(seq, p.point_mt(0.7, -1.3, threads).unwrap());
+            let pp = p.project_mt(&t3, threads).unwrap();
+            assert_eq!(sp.0.to_bits(), pp.0.to_bits());
+            assert_eq!(sp.1.to_bits(), pp.1.to_bits());
+        }
     }
 
     #[test]

@@ -10,14 +10,55 @@
 //!
 //! Used for: phase-1 -> phase-2 handoff on disk, SWA model banks, and the
 //! landscape tools (they reload the LB/SGD/SWAP anchor points).
+//!
+//! The flat-arena entry points (`save_flat` / `load_flat`) keep the same
+//! on-disk format but read/write each weight vector through ONE contiguous
+//! buffer: records are emitted straight from `ParamLayout` subslices and
+//! loaded back into a single `Vec<f32>` arena — no per-tensor
+//! materialization. Checkpoints written before the refactor load
+//! unchanged.
+//!
+//! Every header field is validated against the remaining buffer length
+//! BEFORE any allocation or read, so a truncated or hostile file errors
+//! cleanly instead of over-allocating.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use super::flat::ParamLayout;
 use crate::tensor::Tensor;
 use crate::util::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"SWAPCKP1";
+/// Checkpoints never hold tensors beyond rank 16 (the model is rank <= 2).
+const MAX_RANK: usize = 16;
+/// Minimum bytes one tensor record can occupy (empty name, rank 0, no
+/// data): u32 name_len + u32 rank.
+const MIN_RECORD_BYTES: usize = 8;
+
+fn write_record(buf: &mut Vec<u8>, name: &str, shape: &[usize], data: &[f32]) {
+    let nb = name.as_bytes();
+    buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+    buf.extend_from_slice(nb);
+    buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+    for d in shape {
+        buf.extend_from_slice(&(*d as u64).to_le_bytes());
+    }
+    for x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn publish(path: impl AsRef<Path>, buf: &[u8]) -> Result<()> {
+    let tmp = path.as_ref().with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path.as_ref())?; // atomic publish
+    Ok(())
+}
 
 /// Save named tensors (order preserved).
 pub fn save(path: impl AsRef<Path>, named: &[(String, &Tensor)]) -> Result<()> {
@@ -25,25 +66,88 @@ pub fn save(path: impl AsRef<Path>, named: &[(String, &Tensor)]) -> Result<()> {
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&(named.len() as u32).to_le_bytes());
     for (name, t) in named {
-        let nb = name.as_bytes();
-        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
-        buf.extend_from_slice(nb);
-        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
-        for d in t.shape() {
-            buf.extend_from_slice(&(*d as u64).to_le_bytes());
-        }
-        for x in t.data() {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
+        write_record(&mut buf, name, t.shape(), t.data());
     }
-    let tmp = path.as_ref().with_extension("tmp");
-    {
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&buf)?;
-        f.sync_all()?;
+    publish(path, &buf)
+}
+
+/// Save a flat arena under its layout's names — each record is written
+/// from the arena subslice directly (one contiguous source per vector).
+pub fn save_flat(path: impl AsRef<Path>, layout: &ParamLayout, data: &[f32]) -> Result<()> {
+    if data.len() != layout.total() {
+        return Err(Error::shape(format!(
+            "save_flat: arena has {} elements, layout wants {}",
+            data.len(),
+            layout.total()
+        )));
     }
-    std::fs::rename(&tmp, path.as_ref())?; // atomic publish
-    Ok(())
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(layout.len() as u32).to_le_bytes());
+    for i in 0..layout.len() {
+        let spec = layout.spec(i);
+        write_record(&mut buf, &spec.name, &spec.shape, &data[layout.range(i)]);
+    }
+    publish(path, &buf)
+}
+
+/// Parse one record header, validating every field against the remaining
+/// buffer before any allocation. Returns (name, shape).
+fn read_header(r: &mut Reader) -> Result<(String, Vec<usize>)> {
+    let name_len = r.u32()? as usize;
+    if name_len > r.remaining() {
+        return Err(Error::invalid("checkpoint name extends past end of file"));
+    }
+    let name = String::from_utf8(r.take(name_len)?.to_vec())
+        .map_err(|_| Error::invalid("bad checkpoint name"))?;
+    let rank = r.u32()? as usize;
+    if rank > MAX_RANK {
+        return Err(Error::invalid("implausible tensor rank"));
+    }
+    if rank.saturating_mul(8) > r.remaining() {
+        return Err(Error::invalid("checkpoint shape extends past end of file"));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let d = usize::try_from(r.u64()?)
+            .map_err(|_| Error::invalid("shape dim overflows usize"))?;
+        shape.push(d);
+    }
+    Ok((name, shape))
+}
+
+/// Element count of a validated shape; errors if the product overflows or
+/// the implied data bytes exceed what is left in the buffer.
+fn checked_numel(shape: &[usize], remaining: usize) -> Result<usize> {
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| Error::invalid("tensor shape product overflows"))?;
+    let bytes = n
+        .checked_mul(4)
+        .ok_or_else(|| Error::invalid("tensor byte size overflows"))?;
+    if bytes > remaining {
+        return Err(Error::invalid("tensor data extends past end of file"));
+    }
+    Ok(n)
+}
+
+fn open_reader<'a>(buf: &'a [u8], path: &Path) -> Result<(Reader<'a>, usize)> {
+    let mut r = Reader { b: buf, i: 0 };
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        return Err(Error::invalid(format!(
+            "{}: not a swap checkpoint",
+            path.display()
+        )));
+    }
+    let count = r.u32()? as usize;
+    // every record occupies at least MIN_RECORD_BYTES, so a hostile count
+    // cannot force a huge Vec::with_capacity
+    if count > r.remaining() / MIN_RECORD_BYTES {
+        return Err(Error::invalid("implausible tensor count"));
+    }
+    Ok((r, count))
 }
 
 /// Load all tensors with their names, in file order.
@@ -51,29 +155,11 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
     let mut f = std::fs::File::open(path.as_ref())?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf)?;
-    let mut r = Reader { b: &buf, i: 0 };
-    let magic = r.take(8)?;
-    if magic != MAGIC {
-        return Err(Error::invalid(format!(
-            "{}: not a swap checkpoint",
-            path.as_ref().display()
-        )));
-    }
-    let count = r.u32()? as usize;
+    let (mut r, count) = open_reader(&buf, path.as_ref())?;
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
-        let name_len = r.u32()? as usize;
-        let name = String::from_utf8(r.take(name_len)?.to_vec())
-            .map_err(|_| Error::invalid("bad checkpoint name"))?;
-        let rank = r.u32()? as usize;
-        if rank > 16 {
-            return Err(Error::invalid("implausible tensor rank"));
-        }
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(r.u64()? as usize);
-        }
-        let n: usize = shape.iter().product();
+        let (name, shape) = read_header(&mut r)?;
+        let n = checked_numel(&shape, r.remaining())?;
         let bytes = r.take(n * 4)?;
         let data: Vec<f32> = bytes
             .chunks_exact(4)
@@ -85,6 +171,49 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
         return Err(Error::invalid("trailing bytes in checkpoint"));
     }
     Ok(out)
+}
+
+/// Load a checkpoint straight into a flat arena, verifying the record
+/// names and shapes against `layout` (one contiguous destination).
+pub fn load_flat(path: impl AsRef<Path>, layout: &ParamLayout) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let (mut r, count) = open_reader(&buf, path.as_ref())?;
+    if count != layout.len() {
+        return Err(Error::invalid(format!(
+            "checkpoint has {} tensors, layout wants {}",
+            count,
+            layout.len()
+        )));
+    }
+    let mut arena = vec![0.0f32; layout.total()];
+    for i in 0..count {
+        let (name, shape) = read_header(&mut r)?;
+        let spec = layout.spec(i);
+        if name != spec.name {
+            return Err(Error::invalid(format!(
+                "checkpoint tensor '{name}' where '{}' expected",
+                spec.name
+            )));
+        }
+        if shape != spec.shape {
+            return Err(Error::invalid(format!(
+                "checkpoint tensor '{name}': shape {shape:?} != layout {:?}",
+                spec.shape
+            )));
+        }
+        let n = checked_numel(&shape, r.remaining())?;
+        let bytes = r.take(n * 4)?;
+        let dst = &mut arena[layout.range(i)];
+        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+    if r.i != buf.len() {
+        return Err(Error::invalid("trailing bytes in checkpoint"));
+    }
+    Ok(arena)
 }
 
 /// Save a plain tensor list with synthesized names (param sets).
@@ -131,13 +260,20 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        let end = self.i + n;
+        let end = self
+            .i
+            .checked_add(n)
+            .ok_or_else(|| Error::invalid("checkpoint offset overflows"))?;
         let s = self
             .b
             .get(self.i..end)
             .ok_or_else(|| Error::invalid("truncated checkpoint"))?;
         self.i = end;
         Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -156,6 +292,7 @@ impl<'a> Reader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::TensorSpec;
 
     fn tmpfile(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("swap-ckpt-tests");
@@ -174,6 +311,59 @@ mod tests {
         assert_eq!(loaded[0].0, "a");
         assert_eq!(loaded[0].1, a);
         assert_eq!(loaded[1].1, b);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn flat_roundtrip_and_legacy_compat() {
+        let p = tmpfile("flat-roundtrip");
+        let layout = ParamLayout::from_specs(vec![
+            TensorSpec { name: "x.w".into(), shape: vec![2, 2] },
+            TensorSpec { name: "x.b".into(), shape: vec![3] },
+        ]);
+        let arena: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, -1.0, -2.0, -3.0];
+        save_flat(&p, &layout, &arena).unwrap();
+        // flat reload
+        assert_eq!(load_flat(&p, &layout).unwrap(), arena);
+        // the per-tensor loader reads the very same file
+        let named = load(&p).unwrap();
+        assert_eq!(named[0].0, "x.w");
+        assert_eq!(named[0].1.shape(), &[2, 2]);
+        assert_eq!(named[1].1.data(), &[-1.0, -2.0, -3.0]);
+        // and a file written per-tensor flat-loads
+        let named_refs: Vec<(String, &Tensor)> = vec![
+            ("x.w".into(), &named[0].1),
+            ("x.b".into(), &named[1].1),
+        ];
+        save(&p, &named_refs).unwrap();
+        assert_eq!(load_flat(&p, &layout).unwrap(), arena);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_flat_checks_names_and_shapes() {
+        let p = tmpfile("flat-names");
+        let layout = ParamLayout::from_specs(vec![TensorSpec {
+            name: "x".into(),
+            shape: vec![3],
+        }]);
+        save_flat(&p, &layout, &[1.0, 2.0, 3.0]).unwrap();
+        let wrong_name = ParamLayout::from_specs(vec![TensorSpec {
+            name: "y".into(),
+            shape: vec![3],
+        }]);
+        assert!(load_flat(&p, &wrong_name).is_err());
+        let wrong_shape = ParamLayout::from_specs(vec![TensorSpec {
+            name: "x".into(),
+            shape: vec![1, 3],
+        }]);
+        assert!(load_flat(&p, &wrong_shape).is_err());
+        let wrong_count = ParamLayout::from_specs(vec![
+            TensorSpec { name: "x".into(), shape: vec![3] },
+            TensorSpec { name: "z".into(), shape: vec![1] },
+        ]);
+        assert!(load_flat(&p, &wrong_count).is_err());
+        assert!(save_flat(&p, &layout, &[1.0]).is_err());
         std::fs::remove_file(&p).ok();
     }
 
@@ -204,6 +394,67 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
         assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Hostile headers must error cleanly BEFORE any big allocation.
+    #[test]
+    fn rejects_hostile_headers() {
+        let p = tmpfile("hostile");
+        let mut base: Vec<u8> = Vec::new();
+        base.extend_from_slice(MAGIC);
+
+        // count far beyond what the buffer could hold
+        let mut b = base.clone();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(load(&p).is_err());
+
+        // name_len beyond the end of the file
+        let mut b = base.clone();
+        b.extend_from_slice(&1u32.to_le_bytes()); // count = 1
+        b.extend_from_slice(&1_000_000u32.to_le_bytes()); // name_len
+        std::fs::write(&p, &b).unwrap();
+        assert!(load(&p).is_err());
+
+        // implausible rank
+        let mut b = base.clone();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes()); // name_len = 1
+        b.push(b'x');
+        b.extend_from_slice(&17u32.to_le_bytes()); // rank 17 > MAX_RANK
+        std::fs::write(&p, &b).unwrap();
+        assert!(load(&p).is_err());
+
+        // shape product that overflows usize
+        let mut b = base.clone();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        b.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        b.extend_from_slice(&4u64.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(load(&p).is_err());
+
+        // plausible-looking shape whose data would extend past the end
+        let mut b = base.clone();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        b.extend_from_slice(&1_000_000u64.to_le_bytes()); // 4MB of data...
+        b.extend_from_slice(&[0u8; 16]); // ...but only 16 bytes present
+        std::fs::write(&p, &b).unwrap();
+        assert!(load(&p).is_err());
+
+        // the flat loader applies the same validation
+        let layout = ParamLayout::from_specs(vec![TensorSpec {
+            name: "x".into(),
+            shape: vec![1_000_000],
+        }]);
+        assert!(load_flat(&p, &layout).is_err());
+
         std::fs::remove_file(&p).ok();
     }
 }

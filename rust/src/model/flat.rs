@@ -1,0 +1,466 @@
+//! The flat weight-space arena — the canonical representation of every
+//! weight-shaped vector in the system (parameters, gradients, momentum,
+//! BN moments, SWA/SWAP model banks, snapshot trails).
+//!
+//! A [`FlatParams`] is one contiguous `Vec<f32>` plus a shared
+//! [`ParamLayout`] (`Arc`, built once from the manifest) that records the
+//! named offsets and shapes of the tensors packed inside, in manifest
+//! order. All weight-space arithmetic — the fused optimizer step, ring
+//! all-reduce, phase-3 averaging, and the landscape-plane geometry — runs
+//! directly on the arena through the chunk-parallel kernels in
+//! [`crate::tensor::flat`]; per-tensor [`Tensor`] views exist only at the
+//! backend/manifest edge (fixtures, legacy oracles, conversions).
+//!
+//! Flattening convention: tensors are packed back-to-back in manifest
+//! order (`params[0]`, `params[1]`, ...), each in its own row-major
+//! layout. `layout.range(i)` is tensor `i`'s subslice of the arena.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::runtime::manifest::{Manifest, TensorSpec};
+use crate::tensor::{flat, Tensor};
+use crate::util::{Error, Result, Rng};
+
+/// Immutable layout of a flat arena: named tensor specs (manifest order)
+/// plus their precomputed offsets. Built once, shared via `Arc` by every
+/// weight vector of the same model.
+#[derive(Debug, PartialEq)]
+pub struct ParamLayout {
+    specs: Vec<TensorSpec>,
+    /// offsets.len() == specs.len() + 1; offsets[i]..offsets[i+1] is
+    /// tensor i's subslice
+    offsets: Vec<usize>,
+}
+
+impl ParamLayout {
+    /// Build a layout from ordered tensor specs.
+    pub fn from_specs(specs: Vec<TensorSpec>) -> Arc<Self> {
+        let mut offsets = Vec::with_capacity(specs.len() + 1);
+        let mut off = 0usize;
+        offsets.push(0);
+        for s in &specs {
+            off += s.numel();
+            offsets.push(off);
+        }
+        Arc::new(ParamLayout { specs, offsets })
+    }
+
+    /// The parameter layout of a manifest (what `ParamSet` uses).
+    pub fn of_params(m: &Manifest) -> Arc<Self> {
+        Self::from_specs(m.params.clone())
+    }
+
+    /// The BN running-statistics layout of a manifest (what `BnState` uses).
+    pub fn of_bn(m: &Manifest) -> Arc<Self> {
+        Self::from_specs(m.bn_stats.clone())
+    }
+
+    /// A synthetic single-tensor layout (tests / ad-hoc vectors).
+    pub fn single(n: usize) -> Arc<Self> {
+        Self::from_specs(vec![TensorSpec { name: "t0".to_string(), shape: vec![n] }])
+    }
+
+    /// Number of tensors in the layout.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Total element count of the arena.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().expect("offsets never empty")
+    }
+
+    pub fn spec(&self, i: usize) -> &TensorSpec {
+        &self.specs[i]
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    /// Arena subrange of tensor `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
+    /// All per-tensor ranges, in order (reduction chunk boundaries).
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        (0..self.len()).map(|i| self.range(i)).collect()
+    }
+
+    /// Index of a tensor by manifest name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+}
+
+/// One weight vector: a contiguous f32 arena over a shared layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatParams {
+    layout: Arc<ParamLayout>,
+    data: Vec<f32>,
+}
+
+impl FlatParams {
+    /// All-zeros arena for a layout.
+    pub fn zeros(layout: Arc<ParamLayout>) -> Self {
+        let n = layout.total();
+        FlatParams { layout, data: vec![0.0; n] }
+    }
+
+    /// Wrap an existing arena, validating its length against the layout.
+    pub fn from_data(layout: Arc<ParamLayout>, data: Vec<f32>) -> Result<Self> {
+        if data.len() != layout.total() {
+            return Err(Error::shape(format!(
+                "flat arena has {} elements, layout wants {}",
+                data.len(),
+                layout.total()
+            )));
+        }
+        Ok(FlatParams { layout, data })
+    }
+
+    /// A single-tensor vector (tests / ad-hoc weight-space points).
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        let layout = ParamLayout::single(data.len());
+        FlatParams { layout, data }
+    }
+
+    /// Flatten per-tensor views into an arena, validating count + shapes
+    /// against the layout (the backend/manifest edge, fixtures).
+    pub fn from_tensors(layout: Arc<ParamLayout>, tensors: &[Tensor]) -> Result<Self> {
+        if tensors.len() != layout.len() {
+            return Err(Error::shape(format!(
+                "{} tensors for a {}-tensor layout",
+                tensors.len(),
+                layout.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(layout.total());
+        for (t, spec) in tensors.iter().zip(layout.specs()) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::shape(format!(
+                    "tensor {}: shape {:?} != layout {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+            data.extend_from_slice(t.data());
+        }
+        Ok(FlatParams { layout, data })
+    }
+
+    /// He-normal parameter initialization from the manifest (conv weights
+    /// `.w` He-scaled, `.gamma` ones, beta/biases zero). Consumes the RNG
+    /// stream in manifest order, exactly like the legacy per-tensor init.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let layout = ParamLayout::of_params(manifest);
+        let mut data = vec![0.0f32; layout.total()];
+        let mut rng = Rng::stream(seed, 0x9a9a);
+        for i in 0..layout.len() {
+            let r = layout.range(i);
+            let spec = layout.spec(i);
+            let slice = &mut data[r];
+            if spec.name.ends_with(".w") {
+                let fan_in = spec.shape[0] as f32;
+                let sigma = (2.0 / fan_in).sqrt();
+                for v in slice.iter_mut() {
+                    *v = rng.normal_scaled(0.0, sigma);
+                }
+            } else if spec.name.ends_with(".gamma") {
+                for v in slice.iter_mut() {
+                    *v = 1.0;
+                }
+            }
+            // beta / biases stay zero
+        }
+        FlatParams { layout, data }
+    }
+
+    /// All-zeros vector with the same layout (momentum buffers).
+    pub fn zeros_like(&self) -> Self {
+        FlatParams {
+            layout: self.layout.clone(),
+            data: vec![0.0; self.data.len()],
+        }
+    }
+
+    pub fn layout(&self) -> &Arc<ParamLayout> {
+        &self.layout
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The whole arena — what crosses the `Backend` boundary.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat view of tensor `i` (manifest order).
+    pub fn view(&self, i: usize) -> &[f32] {
+        &self.data[self.layout.range(i)]
+    }
+
+    pub fn view_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.layout.range(i);
+        &mut self.data[r]
+    }
+
+    /// Materialize tensor `i` (backend/manifest edge only).
+    pub fn tensor(&self, i: usize) -> Tensor {
+        Tensor::new(self.layout.spec(i).shape.clone(), self.view(i).to_vec())
+            .expect("layout shapes are consistent by construction")
+    }
+
+    /// Materialize the whole per-tensor list (legacy oracles, fixtures).
+    pub fn to_tensors(&self) -> Vec<Tensor> {
+        (0..self.layout.len()).map(|i| self.tensor(i)).collect()
+    }
+
+    /// Move the arena out, leaving an empty (0-element) shell behind —
+    /// the zero-copy ownership handoff the trainer's optimizer uses.
+    pub fn take(&mut self) -> FlatParams {
+        FlatParams {
+            layout: self.layout.clone(),
+            data: std::mem::take(&mut self.data),
+        }
+    }
+
+    fn check_same(&self, other: &FlatParams) -> Result<()> {
+        if Arc::ptr_eq(&self.layout, &other.layout) || self.layout == other.layout {
+            Ok(())
+        } else {
+            Err(Error::shape("flat params: layout mismatch"))
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Weight-space arithmetic (chunk-parallel flat kernels; results are
+    // bitwise-identical for every `threads` value)
+    // ------------------------------------------------------------------
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|a| *a = v);
+    }
+
+    /// self += alpha * x
+    pub fn axpy(&mut self, alpha: f32, x: &FlatParams, threads: usize) -> Result<()> {
+        self.check_same(x)?;
+        flat::axpy(threads, &mut self.data, alpha, &x.data);
+        Ok(())
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32, threads: usize) {
+        flat::scale(threads, &mut self.data, alpha);
+    }
+
+    /// self - other, as a new vector (landscape direction vectors).
+    pub fn sub(&self, other: &FlatParams) -> Result<FlatParams> {
+        self.sub_mt(other, 1)
+    }
+
+    /// Chunk-parallel subtraction; bitwise identical for any thread count.
+    pub fn sub_mt(&self, other: &FlatParams, threads: usize) -> Result<FlatParams> {
+        self.check_same(other)?;
+        let mut out = self.clone();
+        flat::axpy(threads, &mut out.data, -1.0, &other.data);
+        Ok(out)
+    }
+
+    /// Full weight-space inner product (f64, per-tensor partial order).
+    pub fn dot(&self, x: &FlatParams, threads: usize) -> Result<f64> {
+        self.check_same(x)?;
+        Ok(flat::dot_ranges(threads, &self.data, &x.data, &self.layout.ranges()))
+    }
+
+    pub fn sq_norm(&self, threads: usize) -> f64 {
+        flat::sq_norm_ranges(threads, &self.data, &self.layout.ranges())
+    }
+
+    pub fn norm(&self, threads: usize) -> f64 {
+        self.sq_norm(threads).sqrt()
+    }
+
+    /// Cosine similarity; 0 for degenerate (zero) vectors — the Figure-4
+    /// convention of the legacy `sets_cosine`.
+    pub fn cosine(&self, x: &FlatParams, threads: usize) -> Result<f64> {
+        let na = self.norm(threads);
+        let nb = x.norm(threads);
+        if na == 0.0 || nb == 0.0 {
+            return Ok(0.0);
+        }
+        Ok(self.dot(x, threads)? / (na * nb))
+    }
+
+    /// Euclidean distance (weight-travel statistics).
+    pub fn distance(&self, other: &FlatParams) -> Result<f64> {
+        self.check_same(other)?;
+        Ok(flat::distance_ranges(&self.data, &other.data, &self.layout.ranges()))
+    }
+
+    /// Streaming mean of several weight vectors — SWAP phase 3. One output
+    /// allocation, no per-worker clones, chunk-parallel across `threads`.
+    pub fn average_mt(sets: &[FlatParams], threads: usize) -> Result<FlatParams> {
+        let first = sets
+            .first()
+            .ok_or_else(|| Error::invalid("average: no sets"))?;
+        for s in &sets[1..] {
+            first.check_same(s)?;
+        }
+        let mut out = FlatParams {
+            layout: first.layout.clone(),
+            data: vec![0.0; first.data.len()],
+        };
+        let views: Vec<&[f32]> = sets.iter().map(|s| s.data.as_slice()).collect();
+        flat::mean_into(threads, &mut out.data, &views);
+        Ok(out)
+    }
+
+    /// Sequential mean (same bits as `average_mt` for any thread count).
+    pub fn average(sets: &[FlatParams]) -> Result<FlatParams> {
+        Self::average_mt(sets, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "a.w".to_string(), shape: vec![2, 3] },
+            TensorSpec { name: "a.gamma".to_string(), shape: vec![3] },
+            TensorSpec { name: "b".to_string(), shape: vec![] },
+        ]
+    }
+
+    #[test]
+    fn layout_offsets_and_lookup() {
+        let l = ParamLayout::from_specs(specs());
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.total(), 10);
+        assert_eq!(l.range(0), 0..6);
+        assert_eq!(l.range(1), 6..9);
+        assert_eq!(l.range(2), 9..10);
+        assert_eq!(l.index_of("a.gamma"), Some(1));
+        assert_eq!(l.index_of("nope"), None);
+        assert_eq!(l.ranges(), vec![0..6, 6..9, 9..10]);
+    }
+
+    #[test]
+    fn tensors_roundtrip_through_arena() {
+        let l = ParamLayout::from_specs(specs());
+        let tensors = vec![
+            Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap(),
+            Tensor::new(vec![3], vec![7.0, 8.0, 9.0]).unwrap(),
+            Tensor::scalar(-1.0),
+        ];
+        let fp = FlatParams::from_tensors(l.clone(), &tensors).unwrap();
+        assert_eq!(fp.numel(), 10);
+        assert_eq!(fp.view(1), &[7.0, 8.0, 9.0]);
+        assert_eq!(fp.to_tensors(), tensors);
+    }
+
+    #[test]
+    fn from_tensors_validates_shapes() {
+        let l = ParamLayout::from_specs(specs());
+        let bad = vec![
+            Tensor::new(vec![3, 2], vec![0.0; 6]).unwrap(), // transposed
+            Tensor::new(vec![3], vec![0.0; 3]).unwrap(),
+            Tensor::scalar(0.0),
+        ];
+        assert!(FlatParams::from_tensors(l.clone(), &bad).is_err());
+        assert!(FlatParams::from_tensors(l.clone(), &[]).is_err());
+        assert!(FlatParams::from_data(l, vec![0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn arithmetic_and_layout_mismatch() {
+        let mut a = FlatParams::from_vec(vec![1.0, 1.0]);
+        let d = FlatParams::from_vec(vec![1.0, -1.0]);
+        a.axpy(2.0, &d, 1).unwrap();
+        assert_eq!(a.data(), &[3.0, -1.0]);
+        a.scale(0.5, 1);
+        assert_eq!(a.data(), &[1.5, -0.5]);
+        let other = FlatParams::from_vec(vec![0.0; 3]);
+        assert!(a.axpy(1.0, &other, 1).is_err());
+        assert!(a.dot(&other, 1).is_err());
+        assert!(a.distance(&other).is_err());
+    }
+
+    #[test]
+    fn geometry_matches_tensor_oracle() {
+        let a = FlatParams::from_vec(vec![3.0, 4.0]);
+        let z = a.zeros_like();
+        assert_eq!(a.norm(1), 5.0);
+        assert_eq!(a.distance(&z).unwrap(), 5.0);
+        let b = FlatParams::from_vec(vec![4.0, -3.0]);
+        assert_eq!(a.dot(&b, 1).unwrap(), 0.0);
+        assert_eq!(a.cosine(&b, 1).unwrap(), 0.0);
+        assert!((a.cosine(&a, 1).unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(a.cosine(&z, 1).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let a = FlatParams::from_vec(vec![0.0, 2.0]);
+        let b = FlatParams::from_vec(vec![4.0, 0.0]);
+        let avg = FlatParams::average(&[a.clone(), b]).unwrap();
+        assert_eq!(avg.data(), &[2.0, 1.0]);
+        assert!(FlatParams::average(&[]).is_err());
+        let same = FlatParams::average(&[a.clone()]).unwrap();
+        assert_eq!(same, a);
+    }
+
+    #[test]
+    fn average_parallel_bitwise_equals_sequential() {
+        // crosses the spawn gate so the chunked path really runs
+        let n = 250_001;
+        let sets: Vec<FlatParams> = (0..5)
+            .map(|w| {
+                FlatParams::from_data(
+                    ParamLayout::single(n),
+                    (0..n).map(|i| ((i * 31 + w * 7) as f32 * 0.01).sin()).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let seq = FlatParams::average_mt(&sets, 1).unwrap();
+        for threads in [2, 4, 9] {
+            assert_eq!(seq, FlatParams::average_mt(&sets, threads).unwrap());
+        }
+    }
+
+    #[test]
+    fn take_leaves_empty_shell() {
+        let mut a = FlatParams::from_vec(vec![1.0, 2.0]);
+        let b = a.take();
+        assert_eq!(b.data(), &[1.0, 2.0]);
+        assert!(a.data().is_empty());
+    }
+}

@@ -1,31 +1,35 @@
-//! Model-state layer: parameter sets aligned to the manifest, batch-norm
-//! running statistics, weight averaging, and checkpointing.
+//! Model-state layer: the flat weight-space arena (`FlatParams` +
+//! `ParamLayout`), parameter sets and batch-norm statistics aligned to the
+//! manifest, weight averaging, and checkpointing.
 
 pub mod checkpoint;
+pub mod flat;
 pub mod params;
 
+pub use flat::{FlatParams, ParamLayout};
 pub use params::{BnState, ParamSet};
 
 use crate::runtime::Manifest;
 use crate::util::Result;
 
-/// Save a ParamSet (+ optional momentum) under the manifest's tensor names.
+/// Save a ParamSet under the manifest's tensor names — one contiguous
+/// read per vector straight from the arena.
 pub fn save_params(
     path: impl AsRef<std::path::Path>,
     manifest: &Manifest,
     params: &ParamSet,
 ) -> Result<()> {
-    let names: Vec<String> = manifest.params.iter().map(|s| s.name.clone()).collect();
-    checkpoint::save_tensors(path, &names, &params.tensors)
+    let layout = ParamLayout::of_params(manifest);
+    checkpoint::save_flat(path, &layout, params.data())
 }
 
-/// Load a ParamSet saved by `save_params`, verifying names.
+/// Load a ParamSet saved by `save_params`, verifying names and shapes
+/// against the manifest layout — one contiguous write per vector.
 pub fn load_params(
     path: impl AsRef<std::path::Path>,
     manifest: &Manifest,
 ) -> Result<ParamSet> {
-    let names: Vec<String> = manifest.params.iter().map(|s| s.name.clone()).collect();
-    Ok(ParamSet {
-        tensors: checkpoint::load_tensors(path, &names)?,
-    })
+    let layout = ParamLayout::of_params(manifest);
+    let data = checkpoint::load_flat(path, &layout)?;
+    ParamSet::from_data(layout, data)
 }

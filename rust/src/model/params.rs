@@ -1,115 +1,85 @@
 //! Parameter / BN-state containers aligned to the artifact manifest order.
 //!
+//! Since the flat-arena refactor both are contiguous [`FlatParams`] arenas
+//! over a shared [`ParamLayout`]: `ParamSet` IS a flat weight vector (the
+//! alias keeps the coordinator's vocabulary), and `BnState` wraps one over
+//! the manifest's `bn_stats` layout.
+//!
 //! Initialization matches python/compile/model.py's scheme (He-normal conv
 //! weights, BN gamma=1 beta=0, zero biases) — the *values* need not match
-//! python (training starts from rust-side init), only the convention.
+//! python (training starts from rust-side init), only the convention, and
+//! the RNG stream is consumed in manifest order exactly as the legacy
+//! per-tensor init did (bitwise-identical seeds).
 
-use crate::runtime::manifest::{Manifest, TensorSpec};
-use crate::tensor::Tensor;
-use crate::util::{Result, Rng};
+use std::sync::Arc;
 
-/// An ordered set of parameter tensors (manifest order).
-#[derive(Debug, Clone, PartialEq)]
-pub struct ParamSet {
-    pub tensors: Vec<Tensor>,
-}
+use super::flat::{FlatParams, ParamLayout};
+use crate::runtime::manifest::Manifest;
+use crate::util::{Error, Result};
 
-impl ParamSet {
-    /// He-normal initialization from the manifest specs.
-    pub fn init(manifest: &Manifest, seed: u64) -> Self {
-        let mut rng = Rng::stream(seed, 0x9a9a);
-        let tensors = manifest
-            .params
-            .iter()
-            .map(|spec| init_tensor(spec, &mut rng))
-            .collect();
-        ParamSet { tensors }
-    }
+/// An ordered set of parameters — one contiguous arena in manifest order.
+pub type ParamSet = FlatParams;
 
-    /// All-zeros set with matching shapes (momentum buffers).
-    pub fn zeros_like(&self) -> Self {
-        ParamSet {
-            tensors: self
-                .tensors
-                .iter()
-                .map(|t| Tensor::zeros(t.shape().to_vec()))
-                .collect(),
-        }
-    }
-
-    pub fn numel(&self) -> usize {
-        self.tensors.iter().map(|t| t.numel()).sum()
-    }
-
-    pub fn as_slice(&self) -> &[Tensor] {
-        &self.tensors
-    }
-
-    pub fn as_mut_slice(&mut self) -> &mut [Tensor] {
-        &mut self.tensors
-    }
-
-    /// Euclidean distance to another set (weight-travel statistics).
-    pub fn distance(&self, other: &ParamSet) -> Result<f64> {
-        crate::tensor::sets_distance(&self.tensors, &other.tensors)
-    }
-
-    /// Mean of several sets — SWAP phase 3 (host-side path).
-    pub fn average(sets: &[ParamSet]) -> Result<ParamSet> {
-        let slices: Vec<Vec<Tensor>> = sets.iter().map(|s| s.tensors.clone()).collect();
-        Ok(ParamSet {
-            tensors: crate::tensor::average_sets(&slices)?,
-        })
-    }
-}
-
-fn init_tensor(spec: &TensorSpec, rng: &mut Rng) -> Tensor {
-    let name = spec.name.as_str();
-    if name.ends_with(".w") {
-        let fan_in = spec.shape[0] as f32;
-        let sigma = (2.0 / fan_in).sqrt();
-        Tensor::from_fn(spec.shape.clone(), |_| rng.normal_scaled(0.0, sigma))
-    } else if name.ends_with(".gamma") {
-        Tensor::full(spec.shape.clone(), 1.0)
-    } else {
-        // beta, biases
-        Tensor::zeros(spec.shape.clone())
-    }
-}
-
-/// Running batch-norm statistics (mean=0, var=1 until recomputed).
+/// Running batch-norm statistics (mean=0, var=1 until recomputed), as a
+/// flat arena over the manifest's `bn_stats` layout.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BnState {
-    pub tensors: Vec<Tensor>,
+    pub flat: FlatParams,
 }
 
 impl BnState {
     pub fn init(manifest: &Manifest) -> Self {
-        let tensors = manifest
-            .bn_stats
-            .iter()
-            .map(|spec| {
-                if spec.name.ends_with(".var") {
-                    Tensor::full(spec.shape.clone(), 1.0)
-                } else {
-                    Tensor::zeros(spec.shape.clone())
-                }
-            })
-            .collect();
-        BnState { tensors }
+        let layout = ParamLayout::of_bn(manifest);
+        let mut flat = FlatParams::zeros(layout.clone());
+        for i in 0..layout.len() {
+            if layout.spec(i).name.ends_with(".var") {
+                flat.view_mut(i).iter_mut().for_each(|v| *v = 1.0);
+            }
+        }
+        BnState { flat }
     }
 
-    /// Average a list of per-batch moment sets into running statistics —
-    /// phase 3 of SWAP (Algorithm 1, line 28). Plain arithmetic mean over
-    /// batches of the batch means/vars, the SWA-standard recompute.
-    pub fn from_moments(moment_batches: &[Vec<Tensor>]) -> Result<Self> {
-        Ok(BnState {
-            tensors: crate::tensor::average_sets(moment_batches)?,
-        })
+    /// Wrap an existing flat moment arena (backend `bn_moments` output).
+    pub fn from_flat(flat: FlatParams) -> Self {
+        BnState { flat }
     }
 
-    pub fn as_slice(&self) -> &[Tensor] {
-        &self.tensors
+    /// Average a list of per-batch flat moment arenas into running
+    /// statistics — phase 3 of SWAP (Algorithm 1, line 28). Plain
+    /// arithmetic mean over batches, the SWA-standard recompute.
+    pub fn from_moments(layout: Arc<ParamLayout>, batches: &[Vec<f32>]) -> Result<Self> {
+        let first = batches
+            .first()
+            .ok_or_else(|| Error::invalid("bn from_moments: no batches"))?;
+        if first.len() != layout.total() {
+            return Err(Error::shape(format!(
+                "bn moments have {} elements, layout wants {}",
+                first.len(),
+                layout.total()
+            )));
+        }
+        if batches.iter().any(|b| b.len() != first.len()) {
+            return Err(Error::shape("bn from_moments: ragged batches"));
+        }
+        let mut flat = FlatParams::zeros(layout);
+        let views: Vec<&[f32]> = batches.iter().map(|b| b.as_slice()).collect();
+        crate::tensor::flat::mean_into(1, flat.data_mut(), &views);
+        Ok(BnState { flat })
+    }
+
+    /// The flat mean/var arena (manifest `bn_stats` order) — what crosses
+    /// the `Backend::eval_batch` boundary.
+    pub fn as_slice(&self) -> &[f32] {
+        self.flat.data()
+    }
+
+    /// Flat view of stat tensor `i`.
+    pub fn view(&self, i: usize) -> &[f32] {
+        self.flat.view(i)
+    }
+
+    pub fn layout(&self) -> &Arc<ParamLayout> {
+        self.flat.layout()
     }
 }
 
@@ -141,16 +111,17 @@ mod tests {
     fn init_shapes_and_conventions() {
         let m = manifest();
         let p = ParamSet::init(&m, 0);
-        assert_eq!(p.tensors.len(), 4);
+        assert_eq!(p.layout().len(), 4);
         assert_eq!(p.numel(), 126);
         // gamma all ones, beta/bias all zeros
-        assert!(p.tensors[1].data().iter().all(|&x| x == 1.0));
-        assert!(p.tensors[2].data().iter().all(|&x| x == 0.0));
-        assert!(p.tensors[3].data().iter().all(|&x| x == 0.0));
+        assert!(p.view(1).iter().all(|&x| x == 1.0));
+        assert!(p.view(2).iter().all(|&x| x == 0.0));
+        assert!(p.view(3).iter().all(|&x| x == 0.0));
         // conv weights: nonzero, roughly He-scaled
-        let w = &p.tensors[0];
-        assert!(w.data().iter().any(|&x| x != 0.0));
-        let std = (w.sq_norm() / w.numel() as f64).sqrt();
+        let w = p.view(0);
+        assert!(w.iter().any(|&x| x != 0.0));
+        let sq: f64 = w.iter().map(|&x| x as f64 * x as f64).sum();
+        let std = (sq / w.len() as f64).sqrt();
         let expect = (2.0f64 / 27.0).sqrt();
         assert!((std - expect).abs() < expect * 0.5, "std {std} vs {expect}");
     }
@@ -168,7 +139,7 @@ mod tests {
         let p = ParamSet::init(&m, 0);
         let z = p.zeros_like();
         assert_eq!(z.numel(), p.numel());
-        assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+        assert!(z.data().iter().all(|&x| x == 0.0));
     }
 
     #[test]
@@ -188,22 +159,29 @@ mod tests {
     fn bn_state_init_mean0_var1() {
         let m = manifest();
         let bn = BnState::init(&m);
-        assert!(bn.tensors[0].data().iter().all(|&x| x == 0.0));
-        assert!(bn.tensors[1].data().iter().all(|&x| x == 1.0));
+        assert!(bn.view(0).iter().all(|&x| x == 0.0));
+        assert!(bn.view(1).iter().all(|&x| x == 1.0));
     }
 
     #[test]
     fn bn_from_moments_averages() {
-        let b1 = vec![
-            Tensor::new(vec![2], vec![0.0, 2.0]).unwrap(),
-            Tensor::new(vec![2], vec![1.0, 1.0]).unwrap(),
-        ];
-        let b2 = vec![
-            Tensor::new(vec![2], vec![2.0, 0.0]).unwrap(),
-            Tensor::new(vec![2], vec![3.0, 1.0]).unwrap(),
-        ];
-        let bn = BnState::from_moments(&[b1, b2]).unwrap();
-        assert_eq!(bn.tensors[0].data(), &[1.0, 1.0]);
-        assert_eq!(bn.tensors[1].data(), &[2.0, 1.0]);
+        let m = manifest();
+        let layout = ParamLayout::of_bn(&m); // (mean[4], var[4])
+        let b1 = vec![0.0, 2.0, 0.0, 2.0, 1.0, 1.0, 1.0, 1.0];
+        let b2 = vec![2.0, 0.0, 2.0, 0.0, 3.0, 1.0, 3.0, 1.0];
+        let bn = BnState::from_moments(layout, &[b1, b2]).unwrap();
+        assert_eq!(bn.view(0), &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(bn.view(1), &[2.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn bn_from_moments_validates() {
+        let m = manifest();
+        let layout = ParamLayout::of_bn(&m);
+        assert!(BnState::from_moments(layout.clone(), &[]).is_err());
+        assert!(BnState::from_moments(layout.clone(), &[vec![0.0; 3]]).is_err());
+        assert!(
+            BnState::from_moments(layout, &[vec![0.0; 8], vec![0.0; 7]]).is_err()
+        );
     }
 }

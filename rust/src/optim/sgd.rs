@@ -8,10 +8,15 @@
 //! p' = p - lr * (g' + mu * m')
 //! ```
 //!
+//! Since the flat-arena refactor the update is ONE fused pass over the
+//! contiguous parameter/momentum/gradient arenas (`tensor::flat::sgd_step`)
+//! instead of a per-tensor scalar loop — same elementwise order, bitwise
+//! identical, and chunk-parallelizable (`step_mt`).
+//!
 //! `rust/tests/integration_runtime.rs` asserts host-vs-device parity.
 
 use crate::model::ParamSet;
-use crate::tensor::Tensor;
+use crate::tensor::flat;
 use crate::util::{Error, Result};
 
 /// Optimizer constants (per preset; paper §5.1: mu=0.9, wd=5e-4).
@@ -21,7 +26,7 @@ pub struct SgdConfig {
     pub weight_decay: f32,
 }
 
-/// SGD state = momentum buffers aligned with the param set.
+/// SGD state = one flat momentum arena aligned with the param arena.
 pub struct SgdOptimizer {
     pub cfg: SgdConfig,
     pub momentum: ParamSet,
@@ -35,42 +40,49 @@ impl SgdOptimizer {
         }
     }
 
-    /// One update step over the full parameter set.
-    pub fn step(&mut self, params: &mut ParamSet, grads: &[Tensor], lr: f32) -> Result<()> {
-        if grads.len() != params.tensors.len() {
+    /// One update step over the full parameter arena (sequential).
+    pub fn step(&mut self, params: &mut ParamSet, grads: &[f32], lr: f32) -> Result<()> {
+        self.step_mt(params, grads, lr, 1)
+    }
+
+    /// Chunk-parallel update; bitwise identical for every thread count.
+    pub fn step_mt(
+        &mut self,
+        params: &mut ParamSet,
+        grads: &[f32],
+        lr: f32,
+        threads: usize,
+    ) -> Result<()> {
+        if grads.len() != params.numel() {
             return Err(Error::shape(format!(
-                "sgd: {} grads for {} params",
+                "sgd: {} gradient elements for {} params",
                 grads.len(),
-                params.tensors.len()
+                params.numel()
             )));
         }
-        let (mu, wd) = (self.cfg.momentum, self.cfg.weight_decay);
-        for ((p, m), g) in params
-            .tensors
-            .iter_mut()
-            .zip(self.momentum.tensors.iter_mut())
-            .zip(grads)
-        {
-            if p.shape() != g.shape() {
-                return Err(Error::shape("sgd: grad shape mismatch"));
-            }
-            let (pd, md, gd) = (p.data_mut(), m.data_mut(), g.data());
-            for i in 0..pd.len() {
-                let g2 = gd[i] + wd * pd[i];
-                let m2 = mu * md[i] + g2;
-                pd[i] -= lr * (g2 + mu * m2);
-                md[i] = m2;
-            }
+        if self.momentum.numel() != params.numel() {
+            return Err(Error::shape(format!(
+                "sgd: momentum has {} elements for {} params",
+                self.momentum.numel(),
+                params.numel()
+            )));
         }
+        flat::sgd_step(
+            threads,
+            params.as_mut_slice(),
+            self.momentum.as_mut_slice(),
+            grads,
+            lr,
+            self.cfg.momentum,
+            self.cfg.weight_decay,
+        );
         Ok(())
     }
 
     /// Reset momentum (paper: phase transitions restart the schedule; we
     /// keep momentum by default but expose reset for ablations).
     pub fn reset(&mut self) {
-        for t in &mut self.momentum.tensors {
-            t.fill(0.0);
-        }
+        self.momentum.fill(0.0);
     }
 }
 
@@ -79,41 +91,39 @@ mod tests {
     use super::*;
 
     fn one_param(vals: &[f32]) -> ParamSet {
-        ParamSet {
-            tensors: vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()],
-        }
+        ParamSet::from_vec(vals.to_vec())
     }
 
     #[test]
     fn plain_sgd_no_momentum_no_wd() {
         let mut p = one_param(&[1.0, 2.0]);
-        let g = vec![Tensor::new(vec![2], vec![0.5, -0.5]).unwrap()];
+        let g = vec![0.5f32, -0.5];
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.0, weight_decay: 0.0 }, &p);
         opt.step(&mut p, &g, 0.1).unwrap();
-        assert!((p.tensors[0].data()[0] - 0.95).abs() < 1e-7);
-        assert!((p.tensors[0].data()[1] - 2.05).abs() < 1e-7);
+        assert!((p.data()[0] - 0.95).abs() < 1e-7);
+        assert!((p.data()[1] - 2.05).abs() < 1e-7);
     }
 
     #[test]
     fn nesterov_first_step_scales_by_one_plus_mu() {
         // m=0: p' = p - lr*(g + mu*g) = p - lr*(1+mu)*g
         let mut p = one_param(&[0.0]);
-        let g = vec![Tensor::new(vec![1], vec![1.0]).unwrap()];
+        let g = vec![1.0f32];
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
         opt.step(&mut p, &g, 0.1).unwrap();
-        assert!((p.tensors[0].data()[0] + 0.1 * 1.9).abs() < 1e-7);
+        assert!((p.data()[0] + 0.1 * 1.9).abs() < 1e-7);
         // momentum buffer now holds g
-        assert!((opt.momentum.tensors[0].data()[0] - 1.0).abs() < 1e-7);
+        assert!((opt.momentum.data()[0] - 1.0).abs() < 1e-7);
     }
 
     #[test]
     fn weight_decay_pulls_toward_zero() {
         let mut p = one_param(&[10.0]);
-        let g = vec![Tensor::new(vec![1], vec![0.0]).unwrap()];
+        let g = vec![0.0f32];
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.0, weight_decay: 0.1 }, &p);
         opt.step(&mut p, &g, 0.5).unwrap();
         // g' = 0 + 0.1*10 = 1; p' = 10 - 0.5*1 = 9.5
-        assert!((p.tensors[0].data()[0] - 9.5).abs() < 1e-6);
+        assert!((p.data()[0] - 9.5).abs() < 1e-6);
     }
 
     #[test]
@@ -131,27 +141,45 @@ mod tests {
         let mut p = one_param(&[1.0]);
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: mu, weight_decay: wd }, &p);
         for g in grads {
-            let gt = vec![Tensor::new(vec![1], vec![g]).unwrap()];
-            opt.step(&mut p, &gt, lr).unwrap();
+            opt.step(&mut p, &[g], lr).unwrap();
         }
-        assert!((p.tensors[0].data()[0] - pr).abs() < 1e-6);
-        assert!((opt.momentum.tensors[0].data()[0] - mr).abs() < 1e-6);
+        assert!((p.data()[0] - pr).abs() < 1e-6);
+        assert!((opt.momentum.data()[0] - mr).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_step_bitwise_equals_sequential() {
+        // crosses the spawn gate (6n > MIN_ITEM_WORK)
+        let n = 200_003;
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).sin()).collect();
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.29).cos()).collect();
+        let cfg = SgdConfig { momentum: 0.9, weight_decay: 5e-4 };
+        let mut p1 = ParamSet::from_vec(init.clone());
+        let mut o1 = SgdOptimizer::new(cfg, &p1);
+        o1.step(&mut p1, &g, 0.05).unwrap();
+        for threads in [2, 4] {
+            let mut p2 = ParamSet::from_vec(init.clone());
+            let mut o2 = SgdOptimizer::new(cfg, &p2);
+            o2.step_mt(&mut p2, &g, 0.05, threads).unwrap();
+            assert_eq!(p1, p2, "threads={threads}");
+            assert_eq!(o1.momentum, o2.momentum, "threads={threads}");
+        }
     }
 
     #[test]
     fn reset_zeroes_momentum() {
         let mut p = one_param(&[1.0]);
-        let g = vec![Tensor::new(vec![1], vec![1.0]).unwrap()];
+        let g = vec![1.0f32];
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
         opt.step(&mut p, &g, 0.1).unwrap();
         opt.reset();
-        assert_eq!(opt.momentum.tensors[0].data(), &[0.0]);
+        assert_eq!(opt.momentum.data(), &[0.0]);
     }
 
     #[test]
     fn shape_mismatch_errors() {
         let mut p = one_param(&[1.0, 2.0]);
-        let bad = vec![Tensor::new(vec![3], vec![0.0; 3]).unwrap()];
+        let bad = vec![0.0f32; 3];
         let mut opt = SgdOptimizer::new(SgdConfig { momentum: 0.9, weight_decay: 0.0 }, &p);
         assert!(opt.step(&mut p, &bad, 0.1).is_err());
     }

@@ -7,17 +7,23 @@
 //! * the **PJRT/XLA** backend (`runtime::engine`, cargo feature `xla`) —
 //!   executes the AOT HLO artifacts exported by `python -m compile.aot`.
 //!
+//! Weight-shaped state crosses this boundary as **flat arenas**: one
+//! contiguous `&[f32]` per vector, tensors packed back-to-back in manifest
+//! order (`model::flat`'s convention). Backends slice per-tensor views out
+//! of the arena with their manifest's shapes — per-tensor materialization
+//! exists only at this edge (e.g. XLA literals), never on the coordinator
+//! side.
+//!
 //! The four entry points mirror the four per-preset executables of the
 //! artifact contract (`grad_b*`, `train_b*`, `eval_b*`, `bnstats_b*`);
 //! `manifest()` pins tensor order and model metadata for both.
 
 use super::manifest::Manifest;
 use super::types::{BatchStats, GradResult, HostBatch};
-use crate::tensor::Tensor;
 use crate::util::Result;
 
 /// A model-execution engine: gradients, fused train steps, evaluation and
-/// batch-norm moment recomputation over host tensors.
+/// batch-norm moment recomputation over flat host arenas.
 ///
 /// `Send + Sync` is part of the contract: the coordinator shares one
 /// engine across OS threads (phase-2 workers, phase-1 device shards run
@@ -41,31 +47,33 @@ pub trait Backend: Send + Sync {
         true
     }
 
-    /// Phase-1 entry point: gradients of the *mean* batch loss in manifest
-    /// parameter order, plus loss/accuracy statistics of the batch.
-    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult>;
+    /// Phase-1 entry point: gradients of the *mean* batch loss as one
+    /// manifest-ordered arena, plus loss/accuracy statistics of the batch.
+    /// `params` is the manifest-ordered parameter arena (`num_params`
+    /// f32s).
+    fn grad(&self, params: &[f32], batch: &HostBatch) -> Result<GradResult>;
 
     /// Phase-2 entry point: fused gradient + Nesterov-SGD update (coupled
-    /// weight decay, constants from the manifest). Updates `params` and
-    /// `momentum` in place.
+    /// weight decay, constants from the manifest). Updates the `params`
+    /// and `momentum` arenas in place.
     fn train_step(
         &self,
-        params: &mut [Tensor],
-        momentum: &mut [Tensor],
+        params: &mut [f32],
+        momentum: &mut [f32],
         batch: &HostBatch,
         lr: f32,
     ) -> Result<BatchStats>;
 
-    /// Evaluation with externally supplied running BN statistics
-    /// (mean/var pairs in manifest `bn_stats` order).
+    /// Evaluation with externally supplied running BN statistics (the
+    /// flat mean/var arena in manifest `bn_stats` order).
     fn eval_batch(
         &self,
-        params: &[Tensor],
-        bn_stats: &[Tensor],
+        params: &[f32],
+        bn_stats: &[f32],
         batch: &HostBatch,
     ) -> Result<BatchStats>;
 
     /// Phase-3 entry point: batch-norm moments (mean, biased var per conv
-    /// layer) of one batch, in manifest `bn_stats` order.
-    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>>;
+    /// layer) of one batch, as a flat arena in manifest `bn_stats` order.
+    fn bn_moments(&self, params: &[f32], batch: &HostBatch) -> Result<Vec<f32>>;
 }

@@ -12,16 +12,20 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use super::backend::Backend;
-use super::literal::{batch_to_literals, literal_f32, literal_i32, literal_to_tensor, lr_literal, tensor_to_literal};
+use super::literal::{batch_to_literals, literal_f32, literal_i32, lr_literal, slice_to_literal};
 use super::manifest::Manifest;
 use super::types::{BatchStats, GradResult, HostBatch};
-use crate::tensor::Tensor;
+use crate::model::ParamLayout;
 use crate::util::{Error, Result};
 
 /// Compiled-executable cache + typed call surface.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
+    /// arena packing convention (per-tensor offsets), built once from the
+    /// manifest — shared with `model::flat`'s flattening convention
+    param_layout: Arc<ParamLayout>,
+    bn_layout: Arc<ParamLayout>,
     // Mutex (not RefCell): `Backend: Send + Sync` so the coordinator can
     // drive one engine from many worker threads concurrently. Executables
     // are Arc'd so the cache lock is dropped BEFORE execution — concurrent
@@ -36,9 +40,13 @@ impl Engine {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()?;
+        let param_layout = ParamLayout::of_params(&manifest);
+        let bn_layout = ParamLayout::of_bn(&manifest);
         Ok(Engine {
             client,
             manifest,
+            param_layout,
+            bn_layout,
             execs: Mutex::new(HashMap::new()),
             calls: Mutex::new(HashMap::new()),
         })
@@ -86,15 +94,54 @@ impl Engine {
         Ok(lit.to_tuple()?)
     }
 
-    fn params_to_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
-        if params.len() != self.manifest.params.len() {
+    /// Carve per-tensor literals out of a contiguous manifest-ordered
+    /// arena — the only place parameter data is materialized per tensor.
+    /// Offsets come from the shared `ParamLayout`, never a second walk.
+    fn arena_to_literals(
+        layout: &ParamLayout,
+        arena: &[f32],
+        what: &str,
+    ) -> Result<Vec<xla::Literal>> {
+        if arena.len() != layout.total() {
             return Err(Error::shape(format!(
-                "expected {} param tensors, got {}",
-                self.manifest.params.len(),
-                params.len()
+                "{what} arena has {} f32s, manifest wants {}",
+                arena.len(),
+                layout.total()
             )));
         }
-        params.iter().map(tensor_to_literal).collect()
+        let mut out = Vec::with_capacity(layout.len());
+        for i in 0..layout.len() {
+            out.push(slice_to_literal(&arena[layout.range(i)], &layout.spec(i).shape)?);
+        }
+        Ok(out)
+    }
+
+    fn params_to_literals(&self, params: &[f32]) -> Result<Vec<xla::Literal>> {
+        Self::arena_to_literals(&self.param_layout, params, "param")
+    }
+
+    /// Copy per-tensor output literals back into a contiguous arena,
+    /// validating each tensor's element count against the layout.
+    fn literals_into_arena(
+        layout: &ParamLayout,
+        outs: &[xla::Literal],
+        arena: &mut [f32],
+        what: &str,
+    ) -> Result<()> {
+        for (i, lit) in outs.iter().enumerate().take(layout.len()) {
+            let v = lit.to_vec::<f32>()?;
+            let r = layout.range(i);
+            if v.len() != r.len() {
+                return Err(Error::shape(format!(
+                    "{what} output {}: {} elements, manifest wants {}",
+                    layout.spec(i).name,
+                    v.len(),
+                    r.len()
+                )));
+            }
+            arena[r].copy_from_slice(&v);
+        }
+        Ok(())
     }
 
     fn stats_from(&self, outs: &[xla::Literal], batch: usize) -> Result<BatchStats> {
@@ -124,7 +171,7 @@ impl Backend for Engine {
     }
 
     /// Phase-1 gradients: `grad_b{B}`.
-    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
+    fn grad(&self, params: &[f32], batch: &HostBatch) -> Result<GradResult> {
         let key = format!("grad_b{}", batch.batch);
         let mut args = self.params_to_literals(params)?;
         let (img, lab) = batch_to_literals(batch)?;
@@ -139,31 +186,32 @@ impl Backend for Engine {
                 np + 3
             )));
         }
-        let grads = outs[..np]
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<Vec<_>>>()?;
+        let mut grads = vec![0.0f32; self.manifest.num_params];
+        Self::literals_into_arena(&self.param_layout, &outs[..np], &mut grads, "grad")?;
         let stats = self.stats_from(&outs, batch.batch)?;
         Ok(GradResult { grads, stats })
     }
 
-    /// Phase-2 fused step: `train_b{B}`. Updates params/momentum in place.
+    /// Phase-2 fused step: `train_b{B}`. Updates the params/momentum
+    /// arenas in place.
     fn train_step(
         &self,
-        params: &mut [Tensor],
-        momentum: &mut [Tensor],
+        params: &mut [f32],
+        momentum: &mut [f32],
         batch: &HostBatch,
         lr: f32,
     ) -> Result<BatchStats> {
         let key = format!("train_b{}", batch.batch);
         let np = self.manifest.params.len();
+        if momentum.len() != params.len() {
+            return Err(Error::shape(format!(
+                "momentum arena has {} f32s, params {}",
+                momentum.len(),
+                params.len()
+            )));
+        }
         let mut args = self.params_to_literals(params)?;
-        args.extend(
-            momentum
-                .iter()
-                .map(tensor_to_literal)
-                .collect::<Result<Vec<_>>>()?,
-        );
+        args.extend(Self::arena_to_literals(&self.param_layout, momentum, "momentum")?);
         let (img, lab) = batch_to_literals(batch)?;
         args.push(img);
         args.push(lab);
@@ -176,37 +224,26 @@ impl Backend for Engine {
                 2 * np + 3
             )));
         }
-        for (t, lit) in params.iter_mut().zip(&outs[..np]) {
-            *t = literal_to_tensor(lit)?;
-        }
-        for (t, lit) in momentum.iter_mut().zip(&outs[np..2 * np]) {
-            *t = literal_to_tensor(lit)?;
-        }
+        Self::literals_into_arena(&self.param_layout, &outs[..np], params, "train params")?;
+        Self::literals_into_arena(
+            &self.param_layout,
+            &outs[np..2 * np],
+            momentum,
+            "train momentum",
+        )?;
         self.stats_from(&outs, batch.batch)
     }
 
     /// Evaluation with running BN stats: `eval_b{B}`.
     fn eval_batch(
         &self,
-        params: &[Tensor],
-        bn_stats: &[Tensor],
+        params: &[f32],
+        bn_stats: &[f32],
         batch: &HostBatch,
     ) -> Result<BatchStats> {
         let key = format!("eval_b{}", batch.batch);
-        if bn_stats.len() != self.manifest.bn_stats.len() {
-            return Err(Error::shape(format!(
-                "expected {} bn tensors, got {}",
-                self.manifest.bn_stats.len(),
-                bn_stats.len()
-            )));
-        }
         let mut args = self.params_to_literals(params)?;
-        args.extend(
-            bn_stats
-                .iter()
-                .map(tensor_to_literal)
-                .collect::<Result<Vec<_>>>()?,
-        );
+        args.extend(Self::arena_to_literals(&self.bn_layout, bn_stats, "bn")?);
         let (img, lab) = batch_to_literals(batch)?;
         args.push(img);
         args.push(lab);
@@ -215,7 +252,7 @@ impl Backend for Engine {
     }
 
     /// BN moments of one batch: `bnstats_b{B}` (phase 3).
-    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
+    fn bn_moments(&self, params: &[f32], batch: &HostBatch) -> Result<Vec<f32>> {
         let key = format!("bnstats_b{}", batch.batch);
         let mut args = self.params_to_literals(params)?;
         let (img, _lab) = batch_to_literals(batch)?;
@@ -228,6 +265,8 @@ impl Backend for Engine {
                 self.manifest.bn_stats.len()
             )));
         }
-        outs.iter().map(literal_to_tensor).collect()
+        let mut flat = vec![0.0f32; self.bn_layout.total()];
+        Self::literals_into_arena(&self.bn_layout, &outs, &mut flat, "bnstats")?;
+        Ok(flat)
     }
 }

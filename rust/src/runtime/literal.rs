@@ -14,15 +14,21 @@ pub fn batch_to_literals(hb: &HostBatch) -> Result<(xla::Literal, xla::Literal)>
     ))
 }
 
-/// Host tensor -> literal with the tensor's shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let flat = xla::Literal::vec1(t.data());
-    if t.shape().is_empty() {
+/// Flat arena view -> literal with an explicit shape (the flat-params
+/// boundary: per-tensor literals are carved out of one contiguous arena).
+pub fn slice_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(data);
+    if shape.is_empty() {
         // rank-0: reshape to scalar
         return Ok(flat.reshape(&[])?);
     }
-    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
     Ok(flat.reshape(&dims)?)
+}
+
+/// Host tensor -> literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    slice_to_literal(t.data(), t.shape())
 }
 
 /// Literal (f32) -> host tensor, preserving the literal's shape.

@@ -12,11 +12,12 @@ pub mod model;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use super::backend::Backend;
 use super::manifest::{Manifest, ModelMeta, TensorSpec};
 use super::types::{BatchStats, GradResult, HostBatch};
-use crate::tensor::Tensor;
+use crate::model::ParamLayout;
 use crate::util::{Error, Result};
 
 use self::model::Dims;
@@ -136,6 +137,10 @@ pub fn native_manifest(spec: &NativeSpec) -> Manifest {
 /// The pure-Rust engine.
 pub struct NativeBackend {
     manifest: Manifest,
+    /// the arena packing convention, built once from the manifest — the
+    /// single source of per-tensor offsets for every entry point
+    param_layout: Arc<ParamLayout>,
+    bn_layout: Arc<ParamLayout>,
     dims: Dims,
     /// kernel worker-thread budget (never changes results, only wall time)
     threads: usize,
@@ -162,7 +167,10 @@ impl NativeBackend {
             image_size: spec.image_size,
         };
         let threads = spec.threads.max(1);
-        Ok(NativeBackend { manifest: native_manifest(&spec), dims, threads })
+        let manifest = native_manifest(&spec);
+        let param_layout = ParamLayout::of_params(&manifest);
+        let bn_layout = ParamLayout::of_bn(&manifest);
+        Ok(NativeBackend { manifest, param_layout, bn_layout, dims, threads })
     }
 
     /// The tiny test model (width 4, 10 classes, 16x16 images).
@@ -195,26 +203,11 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Borrow params as flat slices after validating count + shapes.
-    fn param_slices<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
-        if params.len() != self.manifest.params.len() {
-            return Err(Error::shape(format!(
-                "expected {} param tensors, got {}",
-                self.manifest.params.len(),
-                params.len()
-            )));
-        }
-        for (t, spec) in params.iter().zip(&self.manifest.params) {
-            if t.shape() != spec.shape.as_slice() {
-                return Err(Error::shape(format!(
-                    "param {}: shape {:?} != manifest {:?}",
-                    spec.name,
-                    t.shape(),
-                    spec.shape
-                )));
-            }
-        }
-        Ok(params.iter().map(|t| t.data()).collect())
+    /// Slice per-tensor views out of the contiguous parameter arena after
+    /// validating its total length (the arena IS the shape contract — the
+    /// kernels read manifest-ordered subslices of one buffer).
+    fn param_views<'a>(&self, params: &'a [f32]) -> Result<Vec<&'a [f32]>> {
+        layout_views(&self.param_layout, params, "param")
     }
 
     fn stats_from(
@@ -239,10 +232,11 @@ impl NativeBackend {
         )
     }
 
-    /// Shared grad path: train-mode forward + backward of the mean loss.
-    fn grad_impl(&self, params: &[Tensor], batch: &HostBatch) -> Result<(Vec<Vec<f32>>, BatchStats)> {
+    /// Shared grad path: train-mode forward + backward of the mean loss,
+    /// flattened into one manifest-ordered gradient arena.
+    fn grad_impl(&self, params: &[f32], batch: &HostBatch) -> Result<(Vec<f32>, BatchStats)> {
         self.check_batch(batch)?;
-        let p = self.param_slices(params)?;
+        let p = self.param_views(params)?;
         let fwd = model::forward_train(&self.dims, &p, &batch.images, batch.batch, self.threads);
         let (stats, mut dl) = self.stats_from(&fwd.logits, batch);
         // grads of the MEAN batch loss (the python grad_step convention)
@@ -251,16 +245,36 @@ impl NativeBackend {
             *d *= inv_b;
         }
         let grads = model::backward(&self.dims, &p, &dl, &fwd.ctx, self.threads);
-        Ok((grads, stats))
+        let mut flat = Vec::with_capacity(self.manifest.num_params);
+        for g in &grads {
+            flat.extend_from_slice(g);
+        }
+        if flat.len() != self.manifest.num_params {
+            return Err(Error::shape(format!(
+                "backward produced {} gradient elements, manifest wants {}",
+                flat.len(),
+                self.manifest.num_params
+            )));
+        }
+        Ok((flat, stats))
     }
+}
 
-    fn grads_to_tensors(&self, grads: Vec<Vec<f32>>) -> Result<Vec<Tensor>> {
-        grads
-            .into_iter()
-            .zip(&self.manifest.params)
-            .map(|(g, spec)| Tensor::new(spec.shape.clone(), g))
-            .collect()
+/// Manifest-ordered immutable views over a contiguous arena, sliced at
+/// the layout's per-tensor boundaries (no second copy of the offset walk).
+fn layout_views<'a>(
+    layout: &ParamLayout,
+    arena: &'a [f32],
+    what: &str,
+) -> Result<Vec<&'a [f32]>> {
+    if arena.len() != layout.total() {
+        return Err(Error::shape(format!(
+            "{what} arena has {} f32s, manifest wants {}",
+            arena.len(),
+            layout.total()
+        )));
     }
+    Ok((0..layout.len()).map(|i| &arena[layout.range(i)]).collect())
 }
 
 impl Backend for NativeBackend {
@@ -272,67 +286,64 @@ impl Backend for NativeBackend {
         &self.manifest
     }
 
-    fn grad(&self, params: &[Tensor], batch: &HostBatch) -> Result<GradResult> {
+    fn grad(&self, params: &[f32], batch: &HostBatch) -> Result<GradResult> {
         let (grads, stats) = self.grad_impl(params, batch)?;
-        Ok(GradResult { grads: self.grads_to_tensors(grads)?, stats })
+        Ok(GradResult { grads, stats })
     }
 
     fn train_step(
         &self,
-        params: &mut [Tensor],
-        momentum: &mut [Tensor],
+        params: &mut [f32],
+        momentum: &mut [f32],
         batch: &HostBatch,
         lr: f32,
     ) -> Result<BatchStats> {
         let (grads, stats) = self.grad_impl(params, batch)?;
         if momentum.len() != params.len() {
             return Err(Error::shape(format!(
-                "momentum has {} tensors, params {}",
+                "momentum arena has {} f32s, params {}",
                 momentum.len(),
                 params.len()
             )));
         }
         let (mu, wd) = (self.manifest.model.momentum, self.manifest.model.weight_decay);
-        for ((p, m), g) in params.iter_mut().zip(momentum.iter_mut()).zip(&grads) {
-            if m.shape() != p.shape() {
-                return Err(Error::shape("momentum shape mismatch"));
-            }
-            kernels::sgd_nesterov_inplace(p.data_mut(), m.data_mut(), g, lr, mu, wd);
-        }
+        // one fused pass over the whole arena (same elementwise order as
+        // the legacy per-tensor loop — bitwise identical, chunk-parallel)
+        crate::tensor::flat::sgd_step(self.threads, params, momentum, &grads, lr, mu, wd);
         Ok(stats)
     }
 
     fn eval_batch(
         &self,
-        params: &[Tensor],
-        bn_stats: &[Tensor],
+        params: &[f32],
+        bn_stats: &[f32],
         batch: &HostBatch,
     ) -> Result<BatchStats> {
         self.check_batch(batch)?;
-        let p = self.param_slices(params)?;
-        if bn_stats.len() != self.manifest.bn_stats.len() {
-            return Err(Error::shape(format!(
-                "expected {} bn tensors, got {}",
-                self.manifest.bn_stats.len(),
-                bn_stats.len()
-            )));
-        }
-        let bn: Vec<&[f32]> = bn_stats.iter().map(|t| t.data()).collect();
+        let p = self.param_views(params)?;
+        let bn = layout_views(&self.bn_layout, bn_stats, "bn")?;
         let logits =
             model::forward_eval(&self.dims, &p, &bn, &batch.images, batch.batch, self.threads);
         Ok(self.stats_from(&logits, batch).0)
     }
 
-    fn bn_moments(&self, params: &[Tensor], batch: &HostBatch) -> Result<Vec<Tensor>> {
+    fn bn_moments(&self, params: &[f32], batch: &HostBatch) -> Result<Vec<f32>> {
         self.check_batch(batch)?;
-        let p = self.param_slices(params)?;
+        let p = self.param_views(params)?;
         let moments =
             model::forward_moments(&self.dims, &p, &batch.images, batch.batch, self.threads);
-        moments
-            .into_iter()
-            .zip(&self.manifest.bn_stats)
-            .map(|(m, spec)| Tensor::new(spec.shape.clone(), m))
-            .collect()
+        let total = self.bn_layout.total();
+        let mut flat = Vec::with_capacity(total);
+        for m in &moments {
+            flat.extend_from_slice(m);
+        }
+        if flat.len() != total {
+            return Err(Error::shape(format!(
+                "bn moments produced {} elements, manifest wants {total}",
+                flat.len()
+            )));
+        }
+        Ok(flat)
     }
 }
 

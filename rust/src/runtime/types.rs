@@ -2,8 +2,6 @@
 //! every backend entry point returns. Kept free of any XLA types so the
 //! native backend and the coordinator compile without the `xla` feature.
 
-use crate::tensor::Tensor;
-
 /// One mini-batch on the host, NHWC images + labels.
 #[derive(Debug, Clone)]
 pub struct HostBatch {
@@ -55,9 +53,11 @@ impl BatchStats {
     }
 }
 
-/// Gradient result of a backend `grad` call.
+/// Gradient result of a backend `grad` call: one contiguous arena in
+/// manifest parameter order (the weight-space flattening convention of
+/// `model::flat`), plus the batch statistics.
 pub struct GradResult {
-    pub grads: Vec<Tensor>,
+    pub grads: Vec<f32>,
     pub stats: BatchStats,
 }
 

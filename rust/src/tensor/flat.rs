@@ -1,0 +1,243 @@
+//! Flat weight-space kernels: the arithmetic every hot path outside the
+//! forward/backward pass runs on — the fused SGD/Nesterov step, phase-3
+//! averaging, and the landscape geometry — expressed over contiguous
+//! `&[f32]` arenas instead of ragged tensor lists.
+//!
+//! Determinism contract (same as `coordinator::parallel`): every kernel
+//! produces bitwise-identical results for every `threads` value.
+//! * Elementwise kernels (`axpy`, `scale`, `sgd_step`, `mean_into`) compute
+//!   each element independently, so chunking the arena across threads
+//!   cannot change any bit.
+//! * Reductions (`dot_ranges`, `sq_norm_ranges`, `distance_ranges`) keep
+//!   f64 partial sums per *layout range* (the per-tensor boundaries of the
+//!   manifest, fixed at model-build time — NOT per thread chunk) and add
+//!   the partials in range order. This reproduces the legacy per-tensor
+//!   accumulation order of `tensor::ops::sets_dot` exactly, whatever the
+//!   thread count.
+//!
+//! Threading is gated on total work via `coordinator::parallel::gate` —
+//! tiny vectors never pay a spawn.
+
+use std::ops::Range;
+
+use crate::coordinator::parallel;
+
+/// acc += alpha * x, chunk-parallel.
+pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "axpy: length mismatch");
+    let t = parallel::gate(threads, acc.len() * 2);
+    parallel::parallel_row_chunks(t, acc, 1, |first, chunk| {
+        for (a, &b) in chunk.iter_mut().zip(&x[first..first + chunk.len()]) {
+            *a += alpha * b;
+        }
+    });
+}
+
+/// acc *= alpha, chunk-parallel.
+pub fn scale(threads: usize, acc: &mut [f32], alpha: f32) {
+    let t = parallel::gate(threads, acc.len());
+    parallel::parallel_row_chunks(t, acc, 1, |_, chunk| {
+        for a in chunk.iter_mut() {
+            *a *= alpha;
+        }
+    });
+}
+
+/// out = elementwise mean of `sets`, chunk-parallel and allocation-free:
+/// out[i] = ((s0[i] + s1[i]) + s2[i] + ...) * (1/W) — the exact add order
+/// of the legacy `tensor::ops::average_sets`, so the two agree bitwise.
+pub fn mean_into(threads: usize, out: &mut [f32], sets: &[&[f32]]) {
+    assert!(!sets.is_empty(), "mean_into: no sets");
+    for s in sets {
+        assert_eq!(s.len(), out.len(), "mean_into: length mismatch");
+    }
+    let inv = 1.0 / sets.len() as f32;
+    let t = parallel::gate(threads, out.len() * (sets.len() + 1));
+    parallel::parallel_row_chunks(t, out, 1, |first, chunk| {
+        let end = first + chunk.len();
+        chunk.copy_from_slice(&sets[0][first..end]);
+        for s in &sets[1..] {
+            for (o, &v) in chunk.iter_mut().zip(&s[first..end]) {
+                *o += v;
+            }
+        }
+        for o in chunk.iter_mut() {
+            *o *= inv;
+        }
+    });
+}
+
+/// Fused SGD + Nesterov momentum + coupled weight decay over the whole
+/// arena (the phase-1/phase-2 optimizer update; see `optim::sgd`):
+///
+/// ```text
+/// g' = g + wd * p;  m' = mu * m + g';  p' = p - lr * (g' + mu * m')
+/// ```
+///
+/// Elementwise, hence bitwise-identical for any `threads` and to the
+/// per-tensor legacy loop.
+pub fn sgd_step(
+    threads: usize,
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    mu: f32,
+    wd: f32,
+) {
+    assert_eq!(p.len(), m.len(), "sgd_step: momentum length mismatch");
+    assert_eq!(p.len(), g.len(), "sgd_step: gradient length mismatch");
+    let t = parallel::gate(threads, p.len() * 6);
+    parallel::parallel_row_chunks2(t, p, m, 1, 1, |first, pc, mc| {
+        let gc = &g[first..first + pc.len()];
+        for i in 0..pc.len() {
+            let g2 = gc[i] + wd * pc[i];
+            let m2 = mu * mc[i] + g2;
+            pc[i] -= lr * (g2 + mu * m2);
+            mc[i] = m2;
+        }
+    });
+}
+
+/// sum over ranges of <a[r], b[r]> in f64 — partials per layout range,
+/// combined in range order (thread-count independent).
+pub fn dot_ranges(threads: usize, a: &[f32], b: &[f32], ranges: &[Range<usize>]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot_ranges: length mismatch");
+    let t = parallel::gate(threads, a.len() * 2);
+    let partials = parallel::parallel_map(t, ranges.to_vec(), |_, r| {
+        a[r.clone()]
+            .iter()
+            .zip(&b[r])
+            .map(|(x, y)| *x as f64 * *y as f64)
+            .sum::<f64>()
+    });
+    partials.into_iter().sum()
+}
+
+/// Squared Euclidean norm with per-range f64 partials.
+pub fn sq_norm_ranges(threads: usize, a: &[f32], ranges: &[Range<usize>]) -> f64 {
+    let t = parallel::gate(threads, a.len());
+    let partials = parallel::parallel_map(t, ranges.to_vec(), |_, r| {
+        a[r].iter().map(|x| *x as f64 * *x as f64).sum::<f64>()
+    });
+    partials.into_iter().sum()
+}
+
+/// Euclidean distance with per-range f64 partials (sequential — not a hot
+/// path; matches the legacy `sets_distance` accumulation order).
+pub fn distance_ranges(a: &[f32], b: &[f32], ranges: &[Range<usize>]) -> f64 {
+    assert_eq!(a.len(), b.len(), "distance_ranges: length mismatch");
+    let mut acc = 0.0f64;
+    for r in ranges {
+        acc += a[r.clone()]
+            .iter()
+            .zip(&b[r.clone()])
+            .map(|(p, q)| {
+                let d = (*p - *q) as f64;
+                d * d
+            })
+            .sum::<f64>();
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn whole(n: usize) -> Vec<Range<usize>> {
+        vec![0..n]
+    }
+
+    #[test]
+    fn axpy_scale_mean_elementwise() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        axpy(1, &mut a, 0.5, &[10.0, 20.0, 30.0]);
+        assert_eq!(a, vec![6.0, 12.0, 18.0]);
+        scale(1, &mut a, 2.0);
+        assert_eq!(a, vec![12.0, 24.0, 36.0]);
+        let mut out = vec![0.0f32; 2];
+        mean_into(1, &mut out, &[&[0.0, 4.0], &[2.0, 0.0]]);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn kernels_bitwise_identical_across_threads() {
+        // big enough that the work gate actually engages the thread pool
+        let n = 600_007;
+        let a0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let ranges = vec![0..100, 100..50_000, 50_000..n];
+        let mut seq = a0.clone();
+        axpy(1, &mut seq, 1.5, &b);
+        let d_seq = dot_ranges(1, &seq, &b, &ranges);
+        let n_seq = sq_norm_ranges(1, &seq, &ranges);
+        for threads in [2, 4, 7] {
+            let mut par = a0.clone();
+            axpy(threads, &mut par, 1.5, &b);
+            assert_eq!(seq, par, "axpy threads={threads}");
+            assert_eq!(
+                d_seq.to_bits(),
+                dot_ranges(threads, &par, &b, &ranges).to_bits(),
+                "dot threads={threads}"
+            );
+            assert_eq!(
+                n_seq.to_bits(),
+                sq_norm_ranges(threads, &par, &ranges).to_bits(),
+                "sq_norm threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_step_matches_scalar_reference() {
+        let (lr, mu, wd) = (0.2f32, 0.9f32, 0.01f32);
+        let g = [0.3f32, -0.1, 0.05];
+        let mut p = vec![1.0f32; 3];
+        let mut m = vec![0.0f32; 3];
+        sgd_step(1, &mut p, &mut m, &g, lr, mu, wd);
+        for i in 0..3 {
+            let g2 = g[i] + wd * 1.0;
+            let m2 = mu * 0.0 + g2;
+            let want = 1.0 - lr * (g2 + mu * m2);
+            assert!((p[i] - want).abs() < 1e-7);
+            assert!((m[i] - m2).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn sgd_step_threads_bitwise() {
+        // crosses the spawn gate (6n > MIN_ITEM_WORK)
+        let n = 200_003;
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let p0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut p1 = p0.clone();
+        let mut m1 = vec![0.1f32; n];
+        sgd_step(1, &mut p1, &mut m1, &g, 0.05, 0.9, 5e-4);
+        for threads in [2, 5] {
+            let mut p2 = p0.clone();
+            let mut m2 = vec![0.1f32; n];
+            sgd_step(threads, &mut p2, &mut m2, &g, 0.05, 0.9, 5e-4);
+            assert_eq!(p1, p2);
+            assert_eq!(m1, m2);
+        }
+    }
+
+    #[test]
+    fn distance_and_dot_geometry() {
+        let a = [3.0f32, 4.0];
+        let z = [0.0f32, 0.0];
+        assert_eq!(distance_ranges(&a, &z, &whole(2)), 5.0);
+        assert_eq!(dot_ranges(1, &a, &a, &whole(2)), 25.0);
+        let b = [4.0f32, -3.0];
+        assert_eq!(dot_ranges(1, &a, &b, &whole(2)), 0.0);
+    }
+
+    #[test]
+    fn mean_into_of_identical_is_identity() {
+        let s = [1.5f32, -2.0, 0.25];
+        let mut out = vec![0.0f32; 3];
+        mean_into(1, &mut out, &[&s, &s, &s]);
+        assert_eq!(out, s.to_vec());
+    }
+}

@@ -3,6 +3,7 @@
 //! geometry). Kept free of any XLA types so it unit-tests instantly;
 //! literal conversion lives in `runtime::literal`.
 
+pub mod flat;
 pub mod ops;
 
 pub use ops::*;

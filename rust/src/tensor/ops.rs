@@ -1,6 +1,11 @@
 //! Multi-tensor operations over parameter *sets* (lists of tensors aligned
-//! to the manifest order) — the geometry SWAP's phase 3 and the landscape
-//! visualizations live on.
+//! to the manifest order).
+//!
+//! Since the flat-arena refactor the hot paths run on contiguous arenas
+//! via [`crate::tensor::flat`] and [`crate::model::flat`]; these per-tensor
+//! versions are retained as the LEGACY REFERENCE implementations — the
+//! bitwise oracles the parity tests (rust/tests/weightspace.rs) and the
+//! old-vs-new `weightspace` bench compare against.
 
 use super::Tensor;
 use crate::util::{Error, Result};

@@ -1,0 +1,97 @@
+//! Allocation regression tests for the flat weight-space hot paths.
+//!
+//! The pre-refactor `ParamSet::average` built a full `Vec<Vec<Tensor>>`
+//! copy of every worker's tensors before averaging — O(W·P) intermediate
+//! bytes for a P-parameter model and W workers. The flat arena's
+//! streaming `average_mt` allocates exactly one output arena; the
+//! in-place ring all-reduce allocates nothing at all. This file pins both
+//! with a counting global allocator.
+//!
+//! The file contains a single #[test] so no concurrent test can perturb
+//! the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use swap::coordinator::allreduce;
+use swap::model::{FlatParams, ParamLayout};
+
+struct CountingAlloc;
+
+static BYTES: AtomicUsize = AtomicUsize::new(0);
+static CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size, Ordering::Relaxed);
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn measured<T>(f: impl FnOnce() -> T) -> (T, usize, usize) {
+    let b0 = BYTES.load(Ordering::Relaxed);
+    let c0 = CALLS.load(Ordering::Relaxed);
+    let out = f();
+    (
+        out,
+        BYTES.load(Ordering::Relaxed) - b0,
+        CALLS.load(Ordering::Relaxed) - c0,
+    )
+}
+
+#[test]
+fn average_and_ring_allocation_budgets() {
+    const W: usize = 8;
+    const N: usize = 40_000;
+
+    // ---- phase-3 averaging: one output arena, never O(W·P) clones ------
+    let layout = ParamLayout::single(N);
+    let sets: Vec<FlatParams> = (0..W)
+        .map(|w| {
+            FlatParams::from_data(
+                layout.clone(),
+                (0..N).map(|i| ((i + w * 131) as f32 * 0.01).sin()).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let (avg, avg_bytes, _calls) = measured(|| FlatParams::average_mt(&sets, 1).unwrap());
+    assert_eq!(avg.numel(), N);
+    let arena_bytes = N * 4;
+    let legacy_floor = W * arena_bytes; // what the old W-way clone copied
+    assert!(
+        avg_bytes < legacy_floor / 2,
+        "average allocated {avg_bytes}B — regressed toward the legacy \
+         O(W*P) clone ({legacy_floor}B)"
+    );
+    assert!(
+        avg_bytes <= 2 * arena_bytes + 16_384,
+        "average allocated {avg_bytes}B, budget is one {arena_bytes}B output \
+         arena (+slack)"
+    );
+
+    // ---- in-place ring all-reduce: ZERO allocation ---------------------
+    let mut bufs: Vec<Vec<f32>> = sets.iter().map(|s| s.data().to_vec()).collect();
+    let ((), ring_bytes, ring_calls) =
+        measured(|| allreduce::ring_mean_inplace(&mut bufs).unwrap());
+    assert!(
+        ring_bytes < 1024,
+        "in-place ring allocated {ring_bytes}B across {ring_calls} calls; \
+         the schedule must run without per-step snapshots"
+    );
+}

@@ -1,13 +1,13 @@
 //! Integration: the native execution backend behind the `Backend` trait
 //! (tiny model — width 4, 10 classes, 16x16 images). No artifacts or XLA
 //! toolchain required. These tests pin the backend contract numerically:
-//!   * grad/train/eval/bnstats run and return sane shapes/values,
+//!   * grad/train/eval/bnstats run over flat arenas and return sane values,
 //!   * the fused train step equals the host-side Nesterov optimizer,
 //!   * training on a fixed batch reduces the loss through the whole stack.
 
 use swap::coordinator::TrainEnv;
 use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
-use swap::model::{BnState, ParamSet};
+use swap::model::{BnState, FlatParams, ParamLayout, ParamSet};
 use swap::optim::{SgdConfig, SgdOptimizer};
 use swap::runtime::{Backend, HostBatch, NativeBackend, NativeSpec};
 use swap::sim::{CostModel, DeviceModel, NetModel};
@@ -28,6 +28,16 @@ fn tiny_batch(engine: &NativeBackend, seed: u64) -> HostBatch {
     b.assemble_clean(&ds, &(0..8).collect::<Vec<_>>())
 }
 
+fn max_abs(s: &[f32]) -> f32 {
+    s.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
 #[test]
 fn manifest_matches_model_contract() {
     let e = engine();
@@ -46,6 +56,11 @@ fn manifest_matches_model_contract() {
     let declared: usize = m.params.iter().map(|s| s.numel()).sum();
     assert_eq!(m.num_params, declared);
     assert!(m.param_bytes() == 4 * declared as u64);
+    // the arena layout mirrors the manifest exactly
+    let layout = ParamLayout::of_params(m);
+    assert_eq!(layout.total(), m.num_params);
+    assert_eq!(layout.len(), m.params.len());
+    assert_eq!(layout.index_of("head.w"), Some(24));
 }
 
 #[test]
@@ -54,15 +69,14 @@ fn grad_executes_with_correct_shapes() {
     let params = ParamSet::init(e.manifest(), 0);
     let hb = tiny_batch(&e, 1);
     let g = e.grad(params.as_slice(), &hb).unwrap();
-    assert_eq!(g.grads.len(), params.tensors.len());
-    for (gt, pt) in g.grads.iter().zip(&params.tensors) {
-        assert_eq!(gt.shape(), pt.shape());
-    }
+    // one contiguous arena in manifest order
+    assert_eq!(g.grads.len(), e.manifest().num_params);
+    assert_eq!(g.grads.len(), params.numel());
     assert!(g.stats.sum_loss.is_finite() && g.stats.sum_loss > 0.0);
     assert!(g.stats.correct1 >= 0 && g.stats.correct1 <= 8);
     assert!(g.stats.correct5 >= g.stats.correct1);
     // gradients are not all zero
-    let total: f64 = g.grads.iter().map(|t| t.sq_norm()).sum();
+    let total: f64 = g.grads.iter().map(|&v| v as f64 * v as f64).sum();
     assert!(total > 0.0);
 }
 
@@ -74,9 +88,7 @@ fn grad_is_deterministic() {
     let a = e.grad(params.as_slice(), &hb).unwrap();
     let b = e.grad(params.as_slice(), &hb).unwrap();
     assert_eq!(a.stats.sum_loss.to_bits(), b.stats.sum_loss.to_bits());
-    for (x, y) in a.grads.iter().zip(&b.grads) {
-        assert_eq!(x, y, "native grad must be bitwise deterministic");
-    }
+    assert_eq!(a.grads, b.grads, "native grad must be bitwise deterministic");
 }
 
 #[test]
@@ -104,22 +116,17 @@ fn fused_train_step_matches_host_optimizer() {
         .unwrap();
     assert!((stats.sum_loss - g.stats.sum_loss).abs() < 1e-9 * g.stats.sum_loss.abs().max(1.0));
 
-    // parity: parameters and momentum agree to f32 noise
-    for ((hp, dp), name) in host_params
-        .tensors
-        .iter()
-        .zip(&dev_params.tensors)
-        .zip(m.params.iter().map(|s| &s.name))
-    {
-        let mut diff = hp.clone();
-        diff.axpy(-1.0, dp).unwrap();
-        let rel = diff.max_abs() / (1e-3 + hp.max_abs());
+    // parity: parameters and momentum agree to f32 noise, per tensor
+    let layout = host_params.layout().clone();
+    for i in 0..layout.len() {
+        let name = &layout.spec(i).name;
+        let hp = host_params.view(i);
+        let dp = dev_params.view(i);
+        let rel = max_abs_diff(hp, dp) / (1e-3 + max_abs(hp));
         assert!(rel < 1e-5, "param {name} host/device mismatch rel={rel}");
-    }
-    for (hm, dm) in opt.momentum.tensors.iter().zip(&dev_mom.tensors) {
-        let mut diff = hm.clone();
-        diff.axpy(-1.0, dm).unwrap();
-        assert!(diff.max_abs() < 1e-5 + 1e-5 * hm.max_abs());
+        let hm = opt.momentum.view(i);
+        let dm = dev_mom.view(i);
+        assert!(max_abs_diff(hm, dm) < 1e-5 + 1e-5 * max_abs(hm));
     }
 }
 
@@ -135,16 +142,22 @@ fn eval_and_bnstats_execute() {
     assert!(stats.sum_loss.is_finite());
     assert!(stats.correct1 <= 8 && stats.correct5 <= 8);
 
+    let bn_layout = ParamLayout::of_bn(m);
     let moments = e.bn_moments(params.as_slice(), &hb).unwrap();
-    assert_eq!(moments.len(), m.bn_stats.len());
-    // vars (odd positions) must be nonnegative
-    for (i, t) in moments.iter().enumerate() {
+    assert_eq!(moments.len(), bn_layout.total());
+    // vars (odd layout positions) must be nonnegative
+    let flat = FlatParams::from_data(bn_layout.clone(), moments).unwrap();
+    for i in 0..bn_layout.len() {
         if i % 2 == 1 {
-            assert!(t.data().iter().all(|&v| v >= -1e-6), "negative variance");
+            assert!(
+                flat.view(i).iter().all(|&v| v >= -1e-6),
+                "negative variance in {}",
+                bn_layout.spec(i).name
+            );
         }
     }
     // eval with the recomputed stats differs from eval with init stats
-    let bn2 = BnState { tensors: moments };
+    let bn2 = BnState::from_flat(flat);
     let stats2 = e.eval_batch(params.as_slice(), bn2.as_slice(), &hb).unwrap();
     assert!((stats2.sum_loss - stats.sum_loss).abs() > 1e-6);
 }
@@ -192,7 +205,7 @@ fn train_env_eval_and_bn_recompute() {
     let params = ParamSet::init(&m, 1);
     let mut clock = swap::sim::ClusterClock::new();
     let bn = env.recompute_bn(&params, 1, &mut clock, true).unwrap();
-    assert_eq!(bn.tensors.len(), m.bn_stats.len());
+    assert_eq!(bn.layout().len(), m.bn_stats.len());
     assert!(clock.seconds > 0.0, "bn recompute must be charged");
     let stats = env.evaluate(&params, &bn, &mut clock).unwrap();
     assert_eq!(stats.examples, 24);
@@ -235,17 +248,13 @@ fn threaded_backend_is_bitwise_identical() {
     let gs = seq.grad(params.as_slice(), &hb).unwrap();
     let gp = par.grad(params.as_slice(), &hb).unwrap();
     assert_eq!(gs.stats.sum_loss.to_bits(), gp.stats.sum_loss.to_bits());
-    for (a, b) in gs.grads.iter().zip(&gp.grads) {
-        assert_eq!(a, b, "gradients must match bitwise across thread counts");
-    }
+    assert_eq!(gs.grads, gp.grads, "gradients must match bitwise across thread counts");
 
     let moments_s = seq.bn_moments(params.as_slice(), &hb).unwrap();
     let moments_p = par.bn_moments(params.as_slice(), &hb).unwrap();
-    for (a, b) in moments_s.iter().zip(&moments_p) {
-        assert_eq!(a, b, "bn moments must match bitwise");
-    }
+    assert_eq!(moments_s, moments_p, "bn moments must match bitwise");
 
-    let bn = BnState::from_moments(&[moments_s]).unwrap();
+    let bn = BnState::from_moments(ParamLayout::of_bn(&m), &[moments_s]).unwrap();
     let es = seq.eval_batch(params.as_slice(), bn.as_slice(), &hb).unwrap();
     let ep = par.eval_batch(params.as_slice(), bn.as_slice(), &hb).unwrap();
     assert_eq!(es.sum_loss.to_bits(), ep.sum_loss.to_bits());

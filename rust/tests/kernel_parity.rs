@@ -8,6 +8,7 @@
 //!
 //! Tolerance: 1e-4 relative (f32 summation-order noise across languages).
 
+use swap::model::{FlatParams, ParamLayout};
 use swap::runtime::native::{kernels, model, NativeBackend, NativeSpec};
 use swap::runtime::{Backend, HostBatch};
 use swap::tensor::Tensor;
@@ -170,10 +171,12 @@ fn maxpool_matches_reference() {
 }
 
 /// The full-model case: grad / bnstats / eval / fused train step of the
-/// native backend vs `jax.grad` + the python model entry points.
+/// native backend vs `jax.grad` + the python model entry points. The
+/// per-tensor fixture data is flattened into the manifest-ordered arena
+/// the backend consumes.
 struct ModelFixture {
     backend: NativeBackend,
-    params: Vec<Tensor>,
+    params: FlatParams,
     batch: HostBatch,
     case: Json,
 }
@@ -199,7 +202,7 @@ fn model_fixture() -> ModelFixture {
         backend.manifest().params.iter().map(|s| s.name.clone()).collect();
     assert_eq!(manifest_names, names, "param order contract");
 
-    let params: Vec<Tensor> = m
+    let tensors: Vec<Tensor> = m
         .req("params")
         .unwrap()
         .as_arr()
@@ -210,6 +213,9 @@ fn model_fixture() -> ModelFixture {
             Tensor::new(shape, data).unwrap()
         })
         .collect();
+    // flatten through the manifest layout — validates fixture shapes too
+    let params =
+        FlatParams::from_tensors(ParamLayout::of_params(backend.manifest()), &tensors).unwrap();
     let batch = HostBatch {
         images: floats(m.req("images").unwrap()),
         labels: ints(m.req("labels").unwrap()),
@@ -223,7 +229,7 @@ fn model_fixture() -> ModelFixture {
 fn model_grad_matches_jax() {
     let f = model_fixture();
     let g = f.case.req("grad").unwrap();
-    let r = f.backend.grad(&f.params, &f.batch).unwrap();
+    let r = f.backend.grad(f.params.as_slice(), &f.batch).unwrap();
     let want_loss = g.req("sum_loss").unwrap().as_f64().unwrap();
     assert!(
         (r.stats.sum_loss - want_loss).abs() <= 1e-4 * (1.0 + want_loss.abs()),
@@ -233,25 +239,29 @@ fn model_grad_matches_jax() {
     assert_eq!(r.stats.correct1, g.req("c1").unwrap().as_i64().unwrap());
     assert_eq!(r.stats.correct5, g.req("c5").unwrap().as_i64().unwrap());
     let want = g.req("grads").unwrap().as_arr().unwrap();
-    assert_eq!(r.grads.len(), want.len());
-    for (i, (got, w)) in r.grads.iter().zip(want).enumerate() {
+    let layout = f.params.layout().clone();
+    assert_eq!(r.grads.len(), layout.total());
+    assert_eq!(layout.len(), want.len());
+    for (i, w) in want.iter().enumerate() {
         let (shape, data) = tensor_of(w);
-        assert_eq!(got.shape(), shape.as_slice(), "grad {i} shape");
-        let name = &f.backend.manifest().params[i].name;
-        assert_close_slice(got.data(), &data, &format!("grad {name}"));
+        assert_eq!(layout.spec(i).shape, shape, "grad {i} shape");
+        let name = &layout.spec(i).name;
+        assert_close_slice(&r.grads[layout.range(i)], &data, &format!("grad {name}"));
     }
 }
 
 #[test]
 fn model_bn_moments_match_jax() {
     let f = model_fixture();
-    let moments = f.backend.bn_moments(&f.params, &f.batch).unwrap();
+    let moments = f.backend.bn_moments(f.params.as_slice(), &f.batch).unwrap();
     let want = f.case.req("bn_moments").unwrap().as_arr().unwrap();
-    assert_eq!(moments.len(), want.len());
-    for (i, (got, w)) in moments.iter().zip(want).enumerate() {
+    let bn_layout = ParamLayout::of_bn(f.backend.manifest());
+    assert_eq!(moments.len(), bn_layout.total());
+    assert_eq!(bn_layout.len(), want.len());
+    for (i, w) in want.iter().enumerate() {
         let (_, data) = tensor_of(w);
-        let name = &f.backend.manifest().bn_stats[i].name;
-        assert_close_slice(got.data(), &data, &format!("moment {name}"));
+        let name = &bn_layout.spec(i).name;
+        assert_close_slice(&moments[bn_layout.range(i)], &data, &format!("moment {name}"));
     }
 }
 
@@ -259,8 +269,11 @@ fn model_bn_moments_match_jax() {
 fn model_eval_matches_jax() {
     let f = model_fixture();
     // running stats = the batch moments (what the fixture's eval used)
-    let bn = f.backend.bn_moments(&f.params, &f.batch).unwrap();
-    let stats = f.backend.eval_batch(&f.params, &bn, &f.batch).unwrap();
+    let bn = f.backend.bn_moments(f.params.as_slice(), &f.batch).unwrap();
+    let stats = f
+        .backend
+        .eval_batch(f.params.as_slice(), &bn, &f.batch)
+        .unwrap();
     let e = f.case.req("eval").unwrap();
     let want_loss = e.req("sum_loss").unwrap().as_f64().unwrap();
     assert!(
@@ -278,22 +291,19 @@ fn model_fused_train_step_matches_jax() {
     let ts = f.case.req("train_step").unwrap();
     let lr = ts.req("lr").unwrap().as_f64().unwrap() as f32;
     let mut params = f.params.clone();
-    let mut momentum: Vec<Tensor> = params
-        .iter()
-        .map(|t| Tensor::zeros(t.shape().to_vec()))
-        .collect();
+    let mut momentum = params.zeros_like();
     f.backend
-        .train_step(&mut params, &mut momentum, &f.batch, lr)
+        .train_step(params.as_mut_slice(), momentum.as_mut_slice(), &f.batch, lr)
         .unwrap();
     for (i, w) in ts.req("params_after").unwrap().as_arr().unwrap().iter().enumerate() {
         let (_, data) = tensor_of(w);
         let name = &f.backend.manifest().params[i].name;
-        assert_close_slice(params[i].data(), &data, &format!("p' {name}"));
+        assert_close_slice(params.view(i), &data, &format!("p' {name}"));
     }
     for (i, w) in ts.req("momentum_after").unwrap().as_arr().unwrap().iter().enumerate() {
         let (_, data) = tensor_of(w);
         let name = &f.backend.manifest().params[i].name;
-        assert_close_slice(momentum[i].data(), &data, &format!("m' {name}"));
+        assert_close_slice(momentum.view(i), &data, &format!("m' {name}"));
     }
 }
 

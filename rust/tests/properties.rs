@@ -22,16 +22,38 @@ fn rand_set(g: &mut Gen, ntensors: usize) -> Vec<Tensor> {
 fn prop_ring_allreduce_is_mean() {
     property(40, |g| {
         let w = g.usize_in(1..10);
+        let n = g.usize_in(1..80);
+        let sets: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| g.normal()).collect())
+            .collect();
+        let mut ring = sets.clone();
+        allreduce::ring_mean_inplace(&mut ring).unwrap();
+        let mut naive = vec![0.0f32; n];
+        let views: Vec<&[f32]> = sets.iter().map(|s| s.as_slice()).collect();
+        tensor::flat::mean_into(1, &mut naive, &views);
+        for (x, y) in ring[0].iter().zip(&naive) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_ring_reference_matches_tensor_naive_mean() {
+    // the retained legacy oracle still equals the naive per-tensor mean
+    property(30, |g| {
+        let w = g.usize_in(1..8);
         let shapes: Vec<usize> = (0..g.usize_in(1..4)).map(|_| g.usize_in(1..30)).collect();
         let sets: Vec<Vec<Tensor>> = (0..w)
             .map(|_| {
                 shapes
                     .iter()
-                    .map(|&n| Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap())
+                    .map(|&n| {
+                        Tensor::new(vec![n], (0..n).map(|_| g.normal()).collect()).unwrap()
+                    })
                     .collect()
             })
             .collect();
-        let ring = allreduce::ring_mean(&sets).unwrap();
+        let ring = allreduce::ring_mean_reference(&sets).unwrap();
         let naive = allreduce::naive_mean(&sets).unwrap();
         for (a, b) in ring.iter().zip(&naive) {
             for (x, y) in a.data().iter().zip(b.data()) {
@@ -353,22 +375,15 @@ fn prop_sgd_momentum_zero_reduces_to_plain_sgd() {
         let p0: Vec<f32> = (0..n).map(|_| g.normal()).collect();
         let grad: Vec<f32> = (0..n).map(|_| g.normal()).collect();
         let lr = g.f32_in(0.001..0.5);
-        let mut params = ParamSet {
-            tensors: vec![Tensor::new(vec![n], p0.clone()).unwrap()],
-        };
+        let mut params = ParamSet::from_vec(p0.clone());
         let mut opt = SgdOptimizer::new(
             SgdConfig { momentum: 0.0, weight_decay: 0.0 },
             &params,
         );
-        opt.step(
-            &mut params,
-            &[Tensor::new(vec![n], grad.clone()).unwrap()],
-            lr,
-        )
-        .unwrap();
+        opt.step(&mut params, &grad, lr).unwrap();
         for i in 0..n {
             assert_close(
-                params.tensors[0].data()[i] as f64,
+                params.data()[i] as f64,
                 (p0[i] - lr * grad[i]) as f64,
                 1e-5,
                 "plain sgd",

@@ -1,0 +1,286 @@
+//! Flat weight-space arena: old-vs-new parity + round-trip properties.
+//!
+//! The flat-arena refactor (model::flat + tensor::flat) replaced the
+//! per-tensor `Vec<Tensor>` hot paths with contiguous-arena kernels. These
+//! tests pin the refactor bitwise against the retained legacy reference
+//! implementations (`tensor::ops::sets_*`, `allreduce::ring_mean_reference`
+//! and a literal transcription of the old per-tensor optimizer loop):
+//! * flatten/unflatten round-trips over random layouts,
+//! * the fused SGD step,
+//! * the in-place ring all-reduce,
+//! * phase-3 weight averaging,
+//! * `Plane::point` / `Plane::project`.
+
+use swap::coordinator::allreduce;
+use swap::landscape::Plane;
+use swap::model::{FlatParams, ParamLayout, ParamSet};
+use swap::runtime::native::{native_manifest, NativeSpec};
+use swap::runtime::TensorSpec;
+use swap::tensor::{self, flat, Tensor};
+use swap::testutil::{property, Gen};
+
+/// Random layout of 1..6 tensors with random rank-0/1/2 shapes.
+fn rand_specs(g: &mut Gen) -> Vec<TensorSpec> {
+    let k = g.usize_in(1..6);
+    (0..k)
+        .map(|i| {
+            let shape = match g.usize_in(0..3) {
+                0 => vec![],
+                1 => vec![g.usize_in(1..20)],
+                _ => vec![g.usize_in(1..6), g.usize_in(1..6)],
+            };
+            TensorSpec { name: format!("t{i}"), shape }
+        })
+        .collect()
+}
+
+fn rand_tensors(g: &mut Gen, specs: &[TensorSpec]) -> Vec<Tensor> {
+    specs
+        .iter()
+        .map(|s| {
+            let n = s.numel();
+            Tensor::new(s.shape.clone(), (0..n).map(|_| g.normal()).collect()).unwrap()
+        })
+        .collect()
+}
+
+fn flatten(tensors: &[Tensor]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for t in tensors {
+        out.extend_from_slice(t.data());
+    }
+    out
+}
+
+#[test]
+fn prop_flatten_unflatten_roundtrip_random_layouts() {
+    property(60, |g| {
+        let specs = rand_specs(g);
+        let layout = ParamLayout::from_specs(specs.clone());
+        let tensors = rand_tensors(g, &specs);
+        let fp = FlatParams::from_tensors(layout.clone(), &tensors).unwrap();
+        // arena is the back-to-back manifest-order packing
+        assert_eq!(fp.data(), flatten(&tensors).as_slice());
+        // per-tensor views slice the arena exactly
+        for (i, t) in tensors.iter().enumerate() {
+            assert_eq!(fp.view(i), t.data());
+            assert_eq!(&layout.spec(i).shape, &t.shape().to_vec());
+        }
+        // unflatten reproduces the originals bitwise
+        assert_eq!(fp.to_tensors(), tensors);
+        // raw-data round trip
+        let data = fp.clone().into_data();
+        let fp2 = FlatParams::from_data(layout, data).unwrap();
+        assert_eq!(fp, fp2);
+    });
+}
+
+#[test]
+fn real_manifest_init_roundtrips() {
+    let m = native_manifest(&NativeSpec::tiny());
+    let p = ParamSet::init(&m, 42);
+    assert_eq!(p.numel(), m.num_params);
+    let tensors = p.to_tensors();
+    assert_eq!(tensors.len(), m.params.len());
+    let back = FlatParams::from_tensors(ParamLayout::of_params(&m), &tensors).unwrap();
+    assert_eq!(p, back);
+}
+
+/// The pre-refactor optimizer: a literal transcription of the per-tensor
+/// scalar loop `SgdOptimizer::step` used to run.
+fn legacy_sgd_step(
+    params: &mut [Tensor],
+    momentum: &mut [Tensor],
+    grads: &[Tensor],
+    lr: f32,
+    mu: f32,
+    wd: f32,
+) {
+    for ((p, m), g) in params.iter_mut().zip(momentum.iter_mut()).zip(grads) {
+        let (pd, md, gd) = (p.data_mut(), m.data_mut(), g.data());
+        for i in 0..pd.len() {
+            let g2 = gd[i] + wd * pd[i];
+            let m2 = mu * md[i] + g2;
+            pd[i] -= lr * (g2 + mu * m2);
+            md[i] = m2;
+        }
+    }
+}
+
+#[test]
+fn prop_sgd_step_flat_bitwise_matches_legacy() {
+    property(40, |g| {
+        let specs = rand_specs(g);
+        let layout = ParamLayout::from_specs(specs.clone());
+        let p0 = rand_tensors(g, &specs);
+        let m0 = rand_tensors(g, &specs);
+        let gr = rand_tensors(g, &specs);
+        let (lr, mu, wd) = (g.f32_in(0.001..0.5), g.f32_in(0.0..0.99), g.f32_in(0.0..0.01));
+
+        let mut lp = p0.clone();
+        let mut lm = m0.clone();
+        legacy_sgd_step(&mut lp, &mut lm, &gr, lr, mu, wd);
+
+        let gflat = flatten(&gr);
+        for threads in [1usize, 3] {
+            let mut fp = FlatParams::from_tensors(layout.clone(), &p0).unwrap();
+            let mut fm = FlatParams::from_tensors(layout.clone(), &m0).unwrap();
+            flat::sgd_step(
+                threads,
+                fp.as_mut_slice(),
+                fm.as_mut_slice(),
+                &gflat,
+                lr,
+                mu,
+                wd,
+            );
+            assert_eq!(fp.data(), flatten(&lp).as_slice(), "params, threads={threads}");
+            assert_eq!(fm.data(), flatten(&lm).as_slice(), "momentum, threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_ring_flat_bitwise_matches_legacy() {
+    property(40, |g| {
+        let w = g.usize_in(2..9);
+        let specs = rand_specs(g);
+        let tensor_sets: Vec<Vec<Tensor>> =
+            (0..w).map(|_| rand_tensors(g, &specs)).collect();
+        let reference = allreduce::ring_mean_reference(&tensor_sets).unwrap();
+        let mut flat_sets: Vec<Vec<f32>> = tensor_sets.iter().map(|s| flatten(s)).collect();
+        allreduce::ring_mean_inplace(&mut flat_sets).unwrap();
+        assert_eq!(flat_sets[0], flatten(&reference), "W={w}");
+    });
+}
+
+#[test]
+fn prop_average_flat_bitwise_matches_legacy() {
+    property(40, |g| {
+        let w = g.usize_in(1..9);
+        let specs = rand_specs(g);
+        let layout = ParamLayout::from_specs(specs.clone());
+        let tensor_sets: Vec<Vec<Tensor>> =
+            (0..w).map(|_| rand_tensors(g, &specs)).collect();
+        // legacy phase 3: per-tensor clone-accumulate-scale
+        let legacy = tensor::average_sets(&tensor_sets).unwrap();
+        let flat_sets: Vec<FlatParams> = tensor_sets
+            .iter()
+            .map(|s| FlatParams::from_tensors(layout.clone(), s).unwrap())
+            .collect();
+        for threads in [1usize, 4] {
+            let avg = FlatParams::average_mt(&flat_sets, threads).unwrap();
+            assert_eq!(
+                avg.data(),
+                flatten(&legacy).as_slice(),
+                "W={w}, threads={threads}"
+            );
+        }
+    });
+}
+
+/// The pre-refactor plane math, transcribed over the retained legacy
+/// `tensor::ops::sets_*` reference functions.
+struct LegacyPlane {
+    origin: Vec<Tensor>,
+    u: Vec<Tensor>,
+    v: Vec<Tensor>,
+    anchors: [(f64, f64); 3],
+}
+
+fn legacy_plane(t1: &[Tensor], t2: &[Tensor], t3: &[Tensor]) -> Option<LegacyPlane> {
+    let d2 = tensor::sets_sub(t2, t1).unwrap();
+    let d3 = tensor::sets_sub(t3, t1).unwrap();
+    let n2 = tensor::sets_norm(&d2);
+    if n2 == 0.0 {
+        return None;
+    }
+    let mut u = d2;
+    tensor::sets_scale(&mut u, (1.0 / n2) as f32);
+    let a3 = tensor::sets_dot(&d3, &u).unwrap();
+    let n3 = tensor::sets_norm(&d3);
+    let mut v = d3;
+    tensor::sets_axpy(&mut v, -a3 as f32, &u).unwrap();
+    let nv = tensor::sets_norm(&v);
+    if nv < 1e-5 * n3.max(1e-12) {
+        return None;
+    }
+    tensor::sets_scale(&mut v, (1.0 / nv) as f32);
+    Some(LegacyPlane {
+        origin: t1.to_vec(),
+        u,
+        v,
+        anchors: [(0.0, 0.0), (n2, 0.0), (a3, nv)],
+    })
+}
+
+impl LegacyPlane {
+    fn point(&self, alpha: f64, beta: f64) -> Vec<Tensor> {
+        let mut t = self.origin.clone();
+        tensor::sets_axpy(&mut t, alpha as f32, &self.u).unwrap();
+        tensor::sets_axpy(&mut t, beta as f32, &self.v).unwrap();
+        t
+    }
+
+    fn project(&self, theta: &[Tensor]) -> (f64, f64) {
+        let d = tensor::sets_sub(theta, &self.origin).unwrap();
+        (
+            tensor::sets_dot(&d, &self.u).unwrap(),
+            tensor::sets_dot(&d, &self.v).unwrap(),
+        )
+    }
+}
+
+#[test]
+fn prop_plane_point_project_bitwise_matches_legacy() {
+    property(40, |g| {
+        let specs = rand_specs(g);
+        let layout = ParamLayout::from_specs(specs.clone());
+        let t1 = rand_tensors(g, &specs);
+        let t2 = rand_tensors(g, &specs);
+        let t3 = rand_tensors(g, &specs);
+        let legacy = match legacy_plane(&t1, &t2, &t3) {
+            Some(p) => p,
+            None => return, // degenerate draw
+        };
+        let f1 = FlatParams::from_tensors(layout.clone(), &t1).unwrap();
+        let f2 = FlatParams::from_tensors(layout.clone(), &t2).unwrap();
+        let f3 = FlatParams::from_tensors(layout.clone(), &t3).unwrap();
+        let plane = Plane::through(&f1, &f2, &f3).unwrap();
+
+        // identical basis and anchor coordinates, bitwise
+        assert_eq!(plane.u.data(), flatten(&legacy.u).as_slice());
+        assert_eq!(plane.v.data(), flatten(&legacy.v).as_slice());
+        for (a, b) in plane.anchors.iter().zip(&legacy.anchors) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+
+        // point + project agree bitwise, sequential and chunk-parallel
+        let (alpha, beta) = (g.f64_in(-2.0..2.0), g.f64_in(-2.0..2.0));
+        let legacy_pt = flatten(&legacy.point(alpha, beta));
+        let legacy_proj = legacy.project(&t3);
+        for threads in [1usize, 3] {
+            let pt = plane.point_mt(alpha, beta, threads).unwrap();
+            assert_eq!(pt.data(), legacy_pt.as_slice(), "threads={threads}");
+            let proj = plane.project_mt(&f3, threads).unwrap();
+            assert_eq!(proj.0.to_bits(), legacy_proj.0.to_bits());
+            assert_eq!(proj.1.to_bits(), legacy_proj.1.to_bits());
+        }
+    });
+}
+
+#[test]
+fn checkpoint_flat_roundtrip_via_real_manifest() {
+    // save_params/load_params stream the arena contiguously; the loaded
+    // vector must be bitwise identical and share the manifest layout
+    let m = native_manifest(&NativeSpec::tiny());
+    let p = ParamSet::init(&m, 7);
+    let dir = std::env::temp_dir().join("swap-weightspace-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("flat-{}.ckpt", std::process::id()));
+    swap::model::save_params(&path, &m, &p).unwrap();
+    let loaded = swap::model::load_params(&path, &m).unwrap();
+    assert_eq!(p, loaded);
+    std::fs::remove_file(&path).ok();
+}
