@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""Generate the tiny CIFAR-10-binary-format fixture used by
+rust/tests/data_source.rs.
+
+The files follow the standard record layout (1 label byte + 3072
+channel-planar pixel bytes) with a deterministic pattern, so the Rust
+loader test can recompute every expected value independently:
+
+    record i: label = i % 10
+              plane byte (c, p) = (i*7 + c*31 + p*13) % 256
+
+The fixture is committed (it is ~25 KB); rerun this script only if the
+pattern or the record counts change, and keep the Rust twin of the
+pattern (`data::cifar::fixture_record`) in sync.
+
+Usage: python3 python/tools/gen_cifar_fixture.py [out_dir]
+       (default out_dir: rust/tests/fixtures/cifar10)
+"""
+
+import os
+import sys
+
+PLANE = 32 * 32
+TRAIN_RECORDS = 6
+TEST_RECORDS = 2
+
+
+def record(i: int) -> bytes:
+    b = bytearray([i % 10])
+    for c in range(3):
+        for p in range(PLANE):
+            b.append((i * 7 + c * 31 + p * 13) % 256)
+    return bytes(b)
+
+
+def write(path: str, indices) -> None:
+    with open(path, "wb") as f:
+        for i in indices:
+            f.write(record(i))
+    print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "rust/tests/fixtures/cifar10"
+    os.makedirs(out, exist_ok=True)
+    write(os.path.join(out, "data_batch_1.bin"), range(TRAIN_RECORDS))
+    write(os.path.join(out, "test_batch.bin"),
+          range(TRAIN_RECORDS, TRAIN_RECORDS + TEST_RECORDS))
+
+
+if __name__ == "__main__":
+    main()

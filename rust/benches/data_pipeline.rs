@@ -1,0 +1,209 @@
+//! Input-pipeline bench: assembly throughput, synth vs disk source load
+//! rates, pipeline overlap capacity (serial vs prefetched step time), and
+//! the end-to-end training win. Emits `BENCH_data.json` (+ a copy under
+//! results/) and asserts the bitwise contract along the way: prefetched
+//! assembly must equal serial assembly exactly.
+//! Run: cargo bench --bench data_pipeline
+
+use swap::bench::{bench, time_once};
+use swap::config::preset;
+use swap::coordinator::{parallel, run_baseline, BaselineConfig};
+use swap::data::{
+    cifar, prefetch, AugStream, AugmentSpec, Batcher, CifarSource, CifarVariant, DataSource,
+    Generator, SynthSpec,
+};
+use swap::experiments::Lab;
+use swap::model::ParamSet;
+use swap::optim::Schedule;
+use swap::runtime::{Backend, HostBatch, NativeBackend, NativeSpec};
+use swap::util::{Json, Result};
+
+/// Write a deterministic CIFAR-10-format directory (for the disk-source
+/// rows — the shared fixture pattern from `data::cifar::fixture_record`).
+fn write_cifar_dir(dir: &std::path::Path, train: usize, test: usize) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut bytes = Vec::new();
+    for i in 0..train {
+        bytes.extend_from_slice(&cifar::fixture_record(CifarVariant::Cifar10, i));
+    }
+    std::fs::write(dir.join("data_batch_1.bin"), &bytes)?;
+    bytes.clear();
+    for i in train..train + test {
+        bytes.extend_from_slice(&cifar::fixture_record(CifarVariant::Cifar10, i));
+    }
+    std::fs::write(dir.join("test_batch.bin"), &bytes)?;
+    Ok(())
+}
+
+/// One end-to-end single-device training arm (the native preset), with
+/// the input pipeline serial or prefetched. Returns (wall s, steps, params).
+fn train_at(threads: usize, prefetch: bool) -> Result<(f64, usize, ParamSet)> {
+    let mut cfg = preset("native")?;
+    cfg.apply_kv("threads", &threads.to_string())?;
+    let lab = Lab::new(cfg)?;
+    let mut env = lab.env();
+    env.prefetch = prefetch; // explicit: immune to SWAP_PREFETCH overrides
+    let arm = BaselineConfig {
+        devices: 1,
+        epochs: 3,
+        sched: Schedule::Constant(0.05),
+        stop_train_acc: 1.1,
+        seed: lab.cfg.seed,
+    };
+    let (secs, r) = time_once(|| run_baseline(&env, &arm));
+    let r = r?;
+    Ok((secs, r.progress.steps, r.params))
+}
+
+fn main() -> Result<()> {
+    let threads = parallel::default_threads().max(2);
+
+    // ---- assembly throughput (counter-keyed augmentation) --------------
+    let gen = Generator::new(SynthSpec::for_preset(10, 32, 1));
+    let ds = gen.sample(256, 10);
+    let idx: Vec<usize> = (0..64).collect();
+    let aug = AugStream { seed: 0, stream: 0 };
+    let mut batcher = Batcher::new(64, 32, AugmentSpec::cifar_default());
+    let mut hb = batcher.make_batch();
+    let mut step = 0u64;
+    let s_aug = bench(3, 30, || {
+        batcher.assemble_step_into(&ds, &idx, aug, step, 0, &mut hb);
+        step += 1;
+    });
+    let clean = Batcher::new(64, 32, AugmentSpec::none());
+    let s_clean = bench(3, 30, || {
+        clean.assemble_clean_into(&ds, &idx, &mut hb);
+    });
+    let aug_ips = 64.0 / s_aug.mean;
+    let clean_ips = 64.0 / s_clean.mean;
+    println!("assembly: augmented {aug_ips:.0} img/s | clean {clean_ips:.0} img/s");
+
+    // ---- synth vs disk source ------------------------------------------
+    let (synth_secs, synth_ds) = time_once(|| gen.sample(512, 10));
+    let dir = std::env::temp_dir().join(format!("swap-bench-cifar-{}", std::process::id()));
+    write_cifar_dir(&dir, 512, 64)?;
+    let source = CifarSource::new(CifarVariant::Cifar10, &dir, 512, 64);
+    let (disk_secs, loaded) = time_once(|| source.load());
+    let (disk_train, _) = loaded?;
+    assert_eq!(disk_train.n, synth_ds.n);
+    let synth_ips = 512.0 / synth_secs;
+    let disk_ips = 512.0 / disk_secs;
+    println!("sources (512 imgs): synth {synth_ips:.0} img/s | disk {disk_ips:.0} img/s");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- pipeline overlap capacity (input-bound regime) ----------------
+    // produce = real augmented assembly of a 256-image batch; consume = a
+    // cheap device step (tiny-model forward on 8 of the produced rows).
+    // When assembly cost rivals compute, the prefetched pipeline must run
+    // at ~max(produce, consume) instead of their sum.
+    let engine = NativeBackend::new(NativeSpec::new("bench", 4, 10, 16).with_batches(&[8]))?;
+    let m = engine.manifest().clone();
+    let pgen = Generator::new(SynthSpec::for_preset(10, 16, 2));
+    let pds = pgen.sample(512, 10);
+    let params = ParamSet::init(&m, 0);
+    let pidx: Vec<usize> = (0..256).collect();
+    let pix = pds.pixels_per_image();
+    const MICRO_STEPS: usize = 40;
+    let (pds_ref, pidx_ref) = (&pds, &pidx);
+    let mut run_micro = |overlap: bool| -> Result<(f64, u64)> {
+        let mut pb = Batcher::new(256, 16, AugmentSpec::cifar_default());
+        let slots: Vec<HostBatch> = (0..2).map(|_| pb.make_batch()).collect();
+        let mut sub = HostBatch {
+            images: vec![0.0; 8 * pix],
+            labels: vec![0; 8],
+            batch: 8,
+            image_size: 16,
+        };
+        let mut checksum = 0u64;
+        let produce = move |s: usize, out: &mut HostBatch| {
+            pb.assemble_step_into(pds_ref, pidx_ref, aug, s as u64, 0, out);
+        };
+        let (secs, out) = time_once(|| {
+            prefetch::run_pipeline(MICRO_STEPS, slots, overlap, produce, |_, out| {
+                sub.images.copy_from_slice(&out.images[..8 * pix]);
+                sub.labels.copy_from_slice(&out.labels[..8]);
+                let moments = engine.bn_moments(params.as_slice(), &sub)?;
+                checksum = checksum
+                    .wrapping_add(moments.iter().map(|x| x.to_bits() as u64).sum::<u64>())
+                    .wrapping_add(out.labels.iter().map(|&l| l as u64).sum::<u64>());
+                Ok(true)
+            })
+        });
+        out?;
+        Ok((secs, checksum))
+    };
+    let (micro_serial, sum_serial) = run_micro(false)?;
+    let (micro_pre, sum_pre) = run_micro(true)?;
+    assert_eq!(
+        sum_serial, sum_pre,
+        "prefetched pipeline must consume bitwise-identical batches"
+    );
+    let micro_serial_ms = micro_serial * 1e3 / MICRO_STEPS as f64;
+    let micro_pre_ms = micro_pre * 1e3 / MICRO_STEPS as f64;
+    println!(
+        "pipeline micro (B=256 assembly + B=8 forward): serial {micro_serial_ms:.3} ms/step \
+         | prefetched {micro_pre_ms:.3} ms/step | speedup {:.2}x",
+        micro_serial_ms / micro_pre_ms
+    );
+
+    // ---- end-to-end training (native preset, devices=1) ----------------
+    let (train_serial, steps, p_serial) = train_at(threads, false)?;
+    let (train_pre, steps_b, p_pre) = train_at(threads, true)?;
+    assert_eq!(steps, steps_b);
+    let identical = p_serial == p_pre;
+    assert!(identical, "prefetched training must be bitwise identical to serial assembly");
+    let train_serial_ms = train_serial * 1e3 / steps as f64;
+    let train_pre_ms = train_pre * 1e3 / steps as f64;
+    println!(
+        "train ({steps} steps, threads={threads}): serial {train_serial_ms:.3} ms/step | \
+         prefetched {train_pre_ms:.3} ms/step | bitwise identical: {identical}"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("data_pipeline".to_string())),
+        (
+            "assembly",
+            Json::obj(vec![
+                ("batch", Json::Num(64.0)),
+                ("image_size", Json::Num(32.0)),
+                ("augmented_images_per_sec", Json::Num(aug_ips)),
+                ("clean_images_per_sec", Json::Num(clean_ips)),
+            ]),
+        ),
+        (
+            "sources",
+            Json::obj(vec![
+                ("images", Json::Num(512.0)),
+                ("synth_images_per_sec", Json::Num(synth_ips)),
+                ("disk_images_per_sec", Json::Num(disk_ips)),
+            ]),
+        ),
+        (
+            "pipeline_micro",
+            Json::obj(vec![
+                ("steps", Json::Num(MICRO_STEPS as f64)),
+                ("serial_step_ms", Json::Num(micro_serial_ms)),
+                ("prefetched_step_ms", Json::Num(micro_pre_ms)),
+                ("speedup", Json::Num(micro_serial_ms / micro_pre_ms)),
+                ("bitwise_identical", Json::Bool(sum_serial == sum_pre)),
+            ]),
+        ),
+        (
+            "train",
+            Json::obj(vec![
+                ("steps", Json::Num(steps as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("serial_step_ms", Json::Num(train_serial_ms)),
+                ("prefetched_step_ms", Json::Num(train_pre_ms)),
+                ("speedup", Json::Num(train_serial_ms / train_pre_ms)),
+                ("bitwise_identical", Json::Bool(identical)),
+            ]),
+        ),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_data.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_data.json", &json)?;
+    println!("wrote BENCH_data.json");
+    Ok(())
+}

@@ -7,11 +7,10 @@
 
 use swap::bench::{bench, Table};
 use swap::coordinator::{allreduce, parallel};
-use swap::data::{AugmentSpec, Batcher, Generator, SynthSpec};
+use swap::data::{AugStream, AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::ParamSet;
 use swap::optim::{SgdConfig, SgdOptimizer};
 use swap::runtime::{Backend, NativeBackend, NativeSpec};
-use swap::util::Rng;
 
 fn main() -> swap::util::Result<()> {
     // the cifar10sim-shaped model on the native backend (swap for
@@ -27,8 +26,8 @@ fn main() -> swap::util::Result<()> {
     let m = engine.manifest().clone();
     let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 1));
     let ds = gen.sample(256, 10);
-    let mut rng = Rng::new(0);
-    let batcher = Batcher::new(64, m.model.image_size, AugmentSpec::cifar_default());
+    let aug = AugStream { seed: 0, stream: 0 };
+    let mut batcher = Batcher::new(64, m.model.image_size, AugmentSpec::cifar_default());
     let idx: Vec<usize> = (0..64).collect();
 
     let mut t = Table::new(
@@ -44,18 +43,20 @@ fn main() -> swap::util::Result<()> {
         ]);
     };
 
-    // batch assembly + augmentation into a reused HostBatch (the zero-
-    // allocation hot-loop handoff)
+    // batch assembly + counter-keyed augmentation into a reused HostBatch
+    // (the zero-allocation hot-loop handoff)
     let mut reuse = batcher.make_batch();
+    let mut asm_step = 0u64;
     let s = bench(3, 20, || {
-        batcher.assemble_into(&ds, &idx, &mut rng, &mut reuse);
+        batcher.assemble_step_into(&ds, &idx, aug, asm_step, 0, &mut reuse);
+        asm_step += 1;
     });
     row("batch assemble+augment (reused)", s);
 
     // fused train step (the phase-2 hot path), sequential vs parallel
     let mut params = ParamSet::init(&m, 0);
     let mut mom = params.zeros_like();
-    let hb = batcher.assemble(&ds, &idx, &mut rng);
+    let hb = batcher.assemble_step(&ds, &idx, aug, 1000, 0);
     let s = bench(2, 10, || {
         engine
             .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
@@ -106,7 +107,9 @@ fn main() -> swap::util::Result<()> {
 
     // 8 independent grads on 1 thread vs the shared pool — the shape of
     // SWAP's phase-2 fan-out, without the training-loop bookkeeping
-    let batches: Vec<_> = (0..8).map(|_| batcher.assemble(&ds, &idx, &mut rng)).collect();
+    let batches: Vec<_> = (0..8u64)
+        .map(|w| batcher.assemble_step(&ds, &idx, aug, 2000, w * 64))
+        .collect();
     let s = bench(1, 5, || {
         for hb in &batches {
             engine.grad(params.as_slice(), hb).unwrap();

@@ -144,13 +144,20 @@ Backends (--set backend=...):
   native    pure-rust engine, no artifacts needed        [default]
   xla       PJRT over AOT HLO artifacts (build with --features xla,
             generate artifacts with `python -m compile.aot`)
+Data (--set data=... [--set data_dir=DIR]):
+  synth     generated dataset (hermetic)                 [default]
+  cifar10   on-disk CIFAR-10 binaries (data_batch_*.bin in data_dir)
+  cifar100  on-disk CIFAR-100 binaries (train.bin/test.bin in data_dir)
+Prefetch (--set prefetch=true|false):
+  true      assemble step t+1 on a background thread while the backend
+            computes step t (bitwise identical either way)     [default]
 Threads (--threads N / --set threads=N):
   0         auto: SWAP_THREADS env var, else available parallelism [default]
   1         fully sequential execution
   N         phase-2 workers / phase-1 shards / native kernels on N OS
             threads; results are bitwise identical for every N
 Env: SWAP_RUNS=N override runs, SWAP_THREADS=N default thread count,
-     SWAP_LOG=debug|info|warn|quiet";
+     SWAP_PREFETCH=0|1 override prefetch, SWAP_LOG=debug|info|warn|quiet";
 
 #[cfg(test)]
 mod tests {

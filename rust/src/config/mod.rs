@@ -7,7 +7,7 @@ pub mod presets;
 
 pub use presets::preset;
 
-use crate::data::AugmentSpec;
+use crate::data::{cifar, AugmentSpec, CifarSource, CifarVariant, DataSource, SynthSource};
 use crate::optim::{imagenet_piecewise, Schedule};
 use crate::runtime::{Backend, NativeBackend, NativeSpec};
 use crate::util::{Error, Result};
@@ -16,10 +16,20 @@ use crate::util::{Error, Result};
 /// `validate()` and `load_backend()`.
 pub const BACKENDS: &[&str] = &["native", "xla"];
 
+/// The selectable dataset sources (`data` knob).
+pub const DATA_SOURCES: &[&str] = &["synth", "cifar10", "cifar100"];
+
 fn unknown_backend(name: &str) -> Error {
     Error::config(format!(
         "unknown backend '{name}' (expected one of: {})",
         BACKENDS.join("|")
+    ))
+}
+
+fn unknown_data(name: &str) -> Error {
+    Error::config(format!(
+        "unknown data source '{name}' (expected one of: {})",
+        DATA_SOURCES.join("|")
     ))
 }
 
@@ -49,9 +59,19 @@ pub struct ExperimentConfig {
     pub image_size: usize,
 
     // ---- data ----
+    /// dataset source: "synth" (generated, default) or an on-disk
+    /// "cifar10" / "cifar100" binary directory (see `data_dir`)
+    pub data: String,
+    /// directory holding the CIFAR binary files (data_batch_*.bin /
+    /// train.bin + the test file); unused for "synth"
+    pub data_dir: String,
     pub n_train: usize,
     pub n_test: usize,
     pub augment: bool,
+    /// overlap batch assembly with backend compute (double-buffered
+    /// background producer). Bitwise-free: only wall/modeled data time
+    /// changes. SWAP_PREFETCH env var overrides.
+    pub prefetch: bool,
     /// per-executable batch size (must exist in the artifact manifest)
     pub exec_batch: usize,
     /// batches for phase-3 BN recomputation
@@ -107,6 +127,34 @@ impl ExperimentConfig {
             crate::coordinator::parallel::default_threads()
         } else {
             self.threads
+        }
+    }
+
+    /// Resolved prefetch mode (the SWAP_PREFETCH env var overrides the
+    /// config knob — CI's prefetch lane).
+    pub fn resolved_prefetch(&self) -> bool {
+        crate::data::prefetch::env_override().unwrap_or(self.prefetch)
+    }
+
+    /// Instantiate the selected dataset source.
+    pub fn data_source(&self) -> Result<Box<dyn DataSource>> {
+        match self.data.as_str() {
+            "synth" => Ok(Box::new(SynthSource {
+                num_classes: self.num_classes,
+                image_size: self.image_size,
+                seed: self.seed,
+                n_train: self.n_train,
+                n_test: self.n_test,
+            })),
+            other => match CifarVariant::from_name(other) {
+                Some(variant) => Ok(Box::new(CifarSource::new(
+                    variant,
+                    &self.data_dir,
+                    self.n_train,
+                    self.n_test,
+                ))),
+                None => Err(unknown_data(other)),
+            },
         }
     }
 
@@ -212,9 +260,12 @@ impl ExperimentConfig {
             "model_width" => self.model_width = p(key, value)?,
             "num_classes" => self.num_classes = p(key, value)?,
             "image_size" => self.image_size = p(key, value)?,
+            "data" => self.data = value.trim().to_string(),
+            "data_dir" => self.data_dir = value.trim().to_string(),
             "n_train" => self.n_train = p(key, value)?,
             "n_test" => self.n_test = p(key, value)?,
             "augment" => self.augment = p(key, value)?,
+            "prefetch" => self.prefetch = p(key, value)?,
             "exec_batch" => self.exec_batch = p(key, value)?,
             "bn_batches" => self.bn_batches = p(key, value)?,
             "workers" => self.workers = p(key, value)?,
@@ -271,6 +322,37 @@ impl ExperimentConfig {
                 "image_size {} must be a positive multiple of 8",
                 self.image_size
             )));
+        }
+        match self.data.as_str() {
+            "synth" => {}
+            other => {
+                let Some(variant) = CifarVariant::from_name(other) else {
+                    return Err(unknown_data(other));
+                };
+                if self.data_dir.is_empty() {
+                    return Err(Error::config(format!(
+                        "data = {} needs data_dir (the directory holding the \
+                         binary batch files)",
+                        self.data
+                    )));
+                }
+                if self.image_size != cifar::CIFAR_HW {
+                    return Err(Error::config(format!(
+                        "data = {} requires image_size {}, config has {}",
+                        self.data,
+                        cifar::CIFAR_HW,
+                        self.image_size
+                    )));
+                }
+                if self.num_classes != variant.num_classes() {
+                    return Err(Error::config(format!(
+                        "data = {} has {} classes, config has num_classes {}",
+                        self.data,
+                        variant.num_classes(),
+                        self.num_classes
+                    )));
+                }
+            }
         }
         if self.lb_devices != self.workers * self.group_devices {
             return Err(Error::config(format!(
@@ -364,6 +446,45 @@ mod tests {
         let mut cfg = preset("tiny").unwrap();
         cfg.n_train = 8; // smaller than the LB global batch
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn data_knob_selects_and_validates() {
+        let mut cfg = preset("cifar10sim").unwrap();
+        assert_eq!(cfg.data, "synth");
+        assert_eq!(cfg.data_source().unwrap().name(), "synth");
+        // cifar10 needs a data_dir
+        cfg.apply_kv("data", "cifar10").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.apply_kv("data_dir", "/tmp/cifar").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.data_source().unwrap().name(), "cifar10");
+        // class-count mismatch fails loudly
+        cfg.apply_kv("data", "cifar100").unwrap();
+        assert!(cfg.validate().is_err());
+        // wrong image size (tiny preset is 16x16)
+        let mut tiny = preset("tiny").unwrap();
+        tiny.apply_kv("data", "cifar10").unwrap();
+        tiny.apply_kv("data_dir", "/tmp/cifar").unwrap();
+        assert!(tiny.validate().is_err());
+        // unknown source rejected by both paths
+        let mut bad = preset("tiny").unwrap();
+        bad.apply_kv("data", "imagenet").unwrap();
+        assert!(bad.validate().is_err());
+        assert!(bad.data_source().is_err());
+    }
+
+    #[test]
+    fn prefetch_knob_parses() {
+        let mut cfg = preset("tiny").unwrap();
+        assert!(cfg.prefetch, "prefetch defaults on");
+        cfg.apply_kv("prefetch", "false").unwrap();
+        assert!(!cfg.prefetch);
+        assert!(cfg.apply_kv("prefetch", "maybe").is_err());
+        // without the env override the knob is authoritative
+        if std::env::var("SWAP_PREFETCH").is_err() {
+            assert!(!cfg.resolved_prefetch());
+        }
     }
 
     #[test]

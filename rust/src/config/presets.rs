@@ -21,9 +21,12 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         model_width: 8,
         num_classes: 10,
         image_size: 32,
+        data: "synth".to_string(),
+        data_dir: String::new(),
         n_train: 1024,
         n_test: 512,
         augment: true,
+        prefetch: true,
         exec_batch: 64,
         bn_batches: 8,
         workers: 8,

@@ -9,13 +9,13 @@
 
 use super::parallel;
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
-use crate::data::{AugmentSpec, Batcher, EpochSampler};
+use crate::data::{prefetch, AugStream, Batcher, EpochSampler};
 use crate::metrics::RunOutcome;
 use crate::model::ParamSet;
 use crate::optim::Schedule;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, HostBatch};
 use crate::sim::ClusterClock;
-use crate::util::{Error, Result, Rng};
+use crate::util::{Error, Result};
 
 #[derive(Debug, Clone)]
 pub struct LocalSgdConfig {
@@ -68,38 +68,48 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
 
     // Phase B: local SGD with periodic parameter averaging.
     let b = env.exec_batch;
-    let mut worker_params: Vec<ParamSet> = (0..cfg.devices).map(|_| params.clone()).collect();
+    let devices = cfg.devices;
+    let mut worker_params: Vec<ParamSet> = (0..devices).map(|_| params.clone()).collect();
     let mut worker_mom: Vec<ParamSet> = worker_params.iter().map(|p| p.zeros_like()).collect();
-    let mut samplers: Vec<EpochSampler> = (0..cfg.devices)
+    let mut samplers: Vec<EpochSampler> = (0..devices)
         .map(|w| EpochSampler::new(env.train.n, b, cfg.seed, 500 + w as u64))
         .collect();
-    let batcher = Batcher::new(b, env.image_size(), env.augment);
-    let mut aug_rng = Rng::stream(cfg.seed ^ 0x10CA1, 0);
-    // one reused HostBatch per device (no allocation in the step loop)
-    let mut device_batches: Vec<_> = (0..cfg.devices).map(|_| batcher.make_batch()).collect();
+    let mut batcher = Batcher::new(b, env.image_size(), env.augment);
+    // counter-keyed augmentation: device w owns global rows [w*b, (w+1)*b)
+    // of each local step, so assembly is order-free (see data::augment)
+    let aug = AugStream { seed: cfg.seed ^ 0x10CA1, stream: 0 };
+    let train = env.train;
 
     let steps_per_epoch = env.train.n / b;
     let total_local_steps = cfg.local_epochs * steps_per_epoch;
     let step_time = env.cost.train_step_time(b);
+    let data_time = env.cost.assembly_time(devices * b);
     let mut sync_events = 0usize;
     // per-step fan-out only when one local step outweighs a thread spawn
     let step_work = 3 * env.engine.manifest().flops_fwd_per_example as usize * b;
     let step_threads = parallel::gate(env.threads, step_work);
 
-    for step in 0..total_local_steps {
-        // sample + assemble in device order on this thread (the shared
-        // augmentation RNG keeps the sequential consumption order) ...
-        for (w, hb) in device_batches.iter_mut().enumerate() {
-            let idx = samplers[w].next_batch().to_vec();
-            batcher.assemble_into(env.train, &idx, &mut aug_rng, hb);
+    // the input pipeline: reused per-device HostBatches, double-buffered
+    // when the prefetch producer may overlap with the device steps
+    let overlap = env.spawn_prefetch();
+    let slots: Vec<Vec<HostBatch>> =
+        prefetch::make_slots(overlap, || (0..devices).map(|_| batcher.make_batch()).collect());
+
+    let produce = move |step: usize, out: &mut Vec<HostBatch>| {
+        for (w, hb) in out.iter_mut().enumerate() {
+            let idx = samplers[w].next_batch();
+            batcher.assemble_step_into(train, idx, aug, step as u64, (w * b) as u64, hb);
         }
-        // ... then the devices really do step in parallel, each owning its
-        // replica + momentum (disjoint &mut borrows) and reading its batch
+    };
+
+    let consume = |step: usize, batches: &mut Vec<HostBatch>| -> Result<bool> {
+        // the devices really do step in parallel, each owning its replica
+        // + momentum (disjoint &mut borrows) and reading its own batch
         let lr = cfg.local_sched.lr(step);
         let items: Vec<_> = worker_params
             .iter_mut()
             .zip(worker_mom.iter_mut())
-            .zip(device_batches.iter())
+            .zip(batches.iter())
             .map(|((wp, wm), hb)| (wp, wm, hb))
             .collect();
         let results = parallel::parallel_map(step_threads, items, |_, (wp, wm, hb)| {
@@ -108,8 +118,10 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
         for r in results {
             r?;
         }
-        // local steps run in parallel on the modeled cluster
+        // local steps run in parallel on the modeled cluster; assembly of
+        // the next step hides behind them when the pipeline overlaps
         clock.advance_compute(step_time);
+        clock.note_data(data_time, step_time, env.prefetch);
         if (step + 1) % cfg.h_steps == 0 {
             let avg = ParamSet::average_mt(&worker_params, env.threads)?;
             for wp in &mut worker_params {
@@ -118,7 +130,10 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
             clock.advance_comm(env.cost.allreduce_time(cfg.devices));
             sync_events += 1;
         }
-    }
+        Ok(true)
+    };
+
+    prefetch::run_pipeline(total_local_steps, slots, overlap, produce, consume)?;
 
     // final consensus model
     params = ParamSet::average_mt(&worker_params, env.threads)?;
@@ -127,7 +142,6 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
         sync_events += 1;
     }
     let stats = env.bn_and_eval(&params, cfg.seed, &mut clock)?;
-    let _ = AugmentSpec::none(); // (explicit import use)
     Ok(LocalSgdResult {
         outcome: RunOutcome {
             test_acc1: stats.accuracy1(),

@@ -71,6 +71,8 @@ impl RunDir {
             ("seconds", Json::Num(clock.seconds)),
             ("compute", Json::Num(clock.compute)),
             ("comm", Json::Num(clock.comm)),
+            ("data_hidden", Json::Num(clock.data_hidden)),
+            ("data_exposed", Json::Num(clock.data_exposed)),
         ]);
         std::fs::write(self.phase1_meta(), meta.to_string_pretty())?;
         Ok(())
@@ -90,10 +92,16 @@ impl RunDir {
             train_acc: f("train_acc")?,
             train_loss: f("train_loss")?,
         };
+        // data fields are absent in pre-pipeline checkpoints: default 0
+        let opt = |k: &str| -> f64 {
+            meta.req(k).ok().and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
         let clock = ClusterClock {
             seconds: f("seconds")?,
             compute: f("compute")?,
             comm: f("comm")?,
+            data_hidden: opt("data_hidden"),
+            data_exposed: opt("data_exposed"),
             eval: 0.0,
         };
         Ok((params, progress, clock))
@@ -161,6 +169,19 @@ pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Res
                     for _ in 0..steps {
                         wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
                     }
+                }
+                // the original run priced its input pipeline every step;
+                // the same booking (hidden vs exposed per env.prefetch)
+                // must reappear on resume
+                let step_budget = env.cost.train_step_time(env.exec_batch)
+                    + if cfg.group_devices > 1 {
+                        env.cost.allreduce_time(cfg.group_devices)
+                    } else {
+                        0.0
+                    };
+                let data_time = env.cost.assembly_time(cfg.group_devices * env.exec_batch);
+                for _ in 0..steps {
+                    wclock.note_data(data_time, step_budget, env.prefetch);
                 }
                 Ok((wp, wclock))
             } else {

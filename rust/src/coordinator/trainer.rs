@@ -1,13 +1,25 @@
 //! Shared training machinery: the synchronous data-parallel loop (phase 1,
 //! the LB/SB baselines, and each phase-2 sync *group*), evaluation, and
 //! batch-norm recomputation.
+//!
+//! The input side is the pipelined subsystem of `data/`: augmentation is
+//! keyed by a stateless counter (`(seed, stream, step, row)`), so batch
+//! assembly is a pure function of the step index — any thread may build
+//! any shard in any order. `run_sync_training` exploits that through
+//! `data::prefetch::run_pipeline`, double-buffering the per-device
+//! `HostBatch`es and assembling step t+1 on a background thread while the
+//! backend computes step t. Prefetching is bitwise-free by construction;
+//! only wall time and the `ClusterClock` data accounting (hidden vs
+//! exposed) change.
 
 use super::allreduce;
 use super::parallel;
-use crate::data::{sequential_batches, AugmentSpec, Batcher, Dataset, EpochSampler, shard};
+use crate::data::{
+    prefetch, sequential_batches, AugStream, AugmentSpec, Batcher, Dataset, EpochSampler,
+};
 use crate::model::{BnState, ParamLayout, ParamSet};
 use crate::optim::{Schedule, SgdConfig, SgdOptimizer};
-use crate::runtime::{Backend, BatchStats};
+use crate::runtime::{Backend, BatchStats, HostBatch};
 use crate::sim::{ClusterClock, CostModel};
 use crate::util::{Error, Result, Rng};
 
@@ -27,6 +39,10 @@ pub struct TrainEnv<'a> {
     /// device shards). 1 = fully sequential; any value is bitwise
     /// reproducible (see `coordinator::parallel`).
     pub threads: usize,
+    /// overlap batch assembly with backend compute (the input pipeline).
+    /// Bitwise-free either way; governs the ClusterClock's data accounting
+    /// (hidden behind compute vs exposed on the critical path).
+    pub prefetch: bool,
 }
 
 impl<'a> TrainEnv<'a> {
@@ -54,7 +70,9 @@ impl<'a> TrainEnv<'a> {
     }
 
     /// Evaluate on an arbitrary dataset (landscape grids measure *train*
-    /// error too), over at most `max_batches` leading batches.
+    /// error too), over at most `max_batches` leading batches. Runs on the
+    /// same prefetch pipeline as training: batch k is a pure function of
+    /// k, so assembly of batch k+1 overlaps the backend's eval of batch k.
     pub fn evaluate_on(
         &self,
         ds: &Dataset,
@@ -65,22 +83,28 @@ impl<'a> TrainEnv<'a> {
     ) -> Result<BatchStats> {
         let b = self.exec_batch;
         let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
-        let mut hb = batcher.make_batch();
-        let mut total = BatchStats::default();
         // sequential_batches yields the ragged final batch, so a full pass
         // scores ALL ds.n examples (examples == ds.n), not floor(n/b)*b —
         // except on AOT backends, whose per-batch executables can only run
         // whole batches (the tail is dropped there, as it always was)
         let ragged_ok = self.engine.supports_ragged_batch();
-        for idx in sequential_batches(ds.n, b).take(max_batches) {
-            if idx.len() != b && !ragged_ok {
-                break;
-            }
-            batcher.assemble_clean_into(ds, &idx, &mut hb);
-            let stats = self.engine.eval_batch(params.as_slice(), bn.as_slice(), &hb)?;
+        let idx_lists: Vec<Vec<usize>> = sequential_batches(ds.n, b)
+            .take(max_batches)
+            .take_while(|idx| ragged_ok || idx.len() == b)
+            .collect();
+        let steps = idx_lists.len();
+        let overlap = self.spawn_prefetch();
+        let slots = prefetch::make_slots(overlap, || batcher.make_batch());
+        let produce = move |k: usize, out: &mut HostBatch| {
+            batcher.assemble_clean_into(ds, &idx_lists[k], out);
+        };
+        let mut total = BatchStats::default();
+        prefetch::run_pipeline(steps, slots, overlap, produce, |_, hb: &mut HostBatch| {
+            let stats = self.engine.eval_batch(params.as_slice(), bn.as_slice(), hb)?;
             total.accumulate(&stats);
             clock.note_eval(self.cost.eval_step_time(hb.batch));
-        }
+            Ok(true)
+        })?;
         if total.examples == 0 {
             return Err(Error::invalid(
                 "evaluate: no runnable batch (dataset empty, or smaller than \
@@ -101,10 +125,14 @@ impl<'a> TrainEnv<'a> {
         clock: &mut ClusterClock,
         charge_clock: bool,
     ) -> Result<BnState> {
+        if self.train.n == 0 {
+            // the wrap-around fill below can never grow on an empty
+            // dataset — error out instead of spinning forever
+            return Err(Error::invalid("recompute_bn: training dataset is empty"));
+        }
         let b = self.exec_batch;
         let mut rng = Rng::stream(seed, 0xB7);
         let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
-        let mut hb = batcher.make_batch();
         let mut moments: Vec<Vec<f32>> = Vec::with_capacity(self.bn_batches);
         let mut order = rng.permutation(self.train.n);
         if order.len() < b * self.bn_batches {
@@ -114,17 +142,24 @@ impl<'a> TrainEnv<'a> {
                 order.extend(extra);
             }
         }
-        for k in 0..self.bn_batches {
-            let idx = &order[k * b..(k + 1) * b];
-            batcher.assemble_clean_into(self.train, idx, &mut hb);
-            moments.push(self.engine.bn_moments(params.as_slice(), &hb)?);
+        // batch k is a pure function of k (the order is fixed up front),
+        // so BN recomputation rides the same prefetch pipeline
+        let train = self.train;
+        let overlap = self.spawn_prefetch();
+        let slots = prefetch::make_slots(overlap, || batcher.make_batch());
+        let produce = move |k: usize, out: &mut HostBatch| {
+            batcher.assemble_clean_into(train, &order[k * b..(k + 1) * b], out);
+        };
+        prefetch::run_pipeline(self.bn_batches, slots, overlap, produce, |_, hb| {
+            moments.push(self.engine.bn_moments(params.as_slice(), hb)?);
             let dt = self.cost.eval_step_time(b);
             if charge_clock {
                 clock.advance_compute(dt);
             } else {
                 clock.note_eval(dt);
             }
-        }
+            Ok(true)
+        })?;
         BnState::from_moments(ParamLayout::of_bn(self.engine.manifest()), &moments)
     }
 
@@ -137,6 +172,14 @@ impl<'a> TrainEnv<'a> {
     ) -> Result<BatchStats> {
         let bn = self.recompute_bn(params, seed, clock, false)?;
         self.evaluate(params, &bn, clock)
+    }
+
+    /// Whether a run may actually spawn the prefetch producer thread:
+    /// requested, with a thread budget, and not already inside a coarser
+    /// fan-out (phase-2 workers own the cores). Never affects results or
+    /// the modeled clock — only wall time.
+    pub(crate) fn spawn_prefetch(&self) -> bool {
+        self.prefetch && self.threads > 1 && !parallel::in_parallel_region()
     }
 }
 
@@ -199,12 +242,14 @@ pub fn run_sync_training(
     // (flat::sgd_step gates its own fan-out on the arena size)
     let mut opt = SgdOptimizer { cfg: sgd, momentum: momentum.take() };
     let mut sampler = EpochSampler::new(env.train.n, cfg.global_batch, cfg.seed, cfg.seed_stream);
-    let batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
-    let mut aug_rng = Rng::stream(cfg.seed ^ 0xAE6, cfg.seed_stream);
-    // one owned, reused HostBatch per device: the hot loop performs no
-    // per-step allocation, and each grad thread reads its own batch
-    let mut device_batches: Vec<crate::runtime::HostBatch> =
-        (0..cfg.devices).map(|_| batcher.make_batch()).collect();
+    let mut batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
+    // stateless counter-keyed augmentation: global row r of step t draws
+    // from Rng::counter(seed ^ 0xAE6, stream, t, r) — a pure function, so
+    // the producer thread (or any shard order) reproduces the serial
+    // assembly bit for bit
+    let aug = AugStream { seed: cfg.seed ^ 0xAE6, stream: cfg.seed_stream };
+    let devices = cfg.devices;
+    let train = env.train;
 
     let steps_per_epoch = sampler.batches_per_epoch();
     let total_steps = cfg.max_epochs * steps_per_epoch;
@@ -215,35 +260,54 @@ pub fn run_sync_training(
 
     let step_compute = env.cost.train_step_time(env.exec_batch);
     let ar_time = env.cost.allreduce_time(cfg.devices);
+    let data_time = env.cost.assembly_time(cfg.global_batch);
+    // assembly of step t+1 can hide behind the whole device-side step t
+    let step_budget = step_compute + if devices > 1 { ar_time } else { 0.0 };
     // fan the per-step shard gradients out only when one gradient is worth
     // more than a thread spawn (fwd+bwd ~ 3x fwd FLOPs per example)
     let grad_work = 3 * env.engine.manifest().flops_fwd_per_example as usize * env.exec_batch;
     let shard_threads = parallel::gate(env.threads, grad_work);
 
-    'outer: for _ in 0..total_steps {
-        let global = sampler.next_batch().to_vec();
-        let stats = if cfg.devices == 1 {
-            let hb = &mut device_batches[0];
-            batcher.assemble_into(env.train, &global, &mut aug_rng, hb);
-            let lr = cfg.sched.lr(cfg.sched_offset + steps);
-            env.engine
-                .train_step(params.as_mut_slice(), opt.momentum.as_mut_slice(), hb, lr)?
+    // double-buffer per-device HostBatches when the producer thread may
+    // run; a single slot otherwise (assemble-then-compute, same bits)
+    let overlap = env.spawn_prefetch();
+    let slots: Vec<Vec<HostBatch>> =
+        prefetch::make_slots(overlap, || (0..devices).map(|_| batcher.make_batch()).collect());
+
+    // the producer: a pure function of the step index (sampler order is
+    // deterministic, augmentation is counter-keyed)
+    let produce = move |step: usize, out: &mut Vec<HostBatch>| {
+        let global = sampler.next_batch();
+        if devices == 1 {
+            batcher.assemble_step_into(train, global, aug, step as u64, 0, &mut out[0]);
         } else {
-            // assembly stays on this thread in shard order — the shared
-            // augmentation RNG stream is consumed exactly as in the
-            // sequential path, so any thread count is bitwise identical
-            let shards = shard(&global, cfg.devices);
-            for (sh, hb) in shards.iter().zip(device_batches.iter_mut()) {
-                batcher.assemble_into(env.train, sh, &mut aug_rng, hb);
+            let per = global.len() / devices;
+            for (d, hb) in out.iter_mut().enumerate() {
+                let rows = &global[d * per..(d + 1) * per];
+                batcher.assemble_step_into(train, rows, aug, step as u64, (d * per) as u64, hb);
             }
+        }
+    };
+
+    // the consumer: the device-side step + bookkeeping (main thread)
+    let consume = |step: usize, batches: &mut Vec<HostBatch>| -> Result<bool> {
+        let lr = cfg.sched.lr(cfg.sched_offset + step);
+        let stats = if devices == 1 {
+            env.engine.train_step(
+                params.as_mut_slice(),
+                opt.momentum.as_mut_slice(),
+                &batches[0],
+                lr,
+            )?
+        } else {
             // per-device gradients are pure functions of (params, batch):
             // compute them on real OS threads, then reduce in device order
             let results = parallel::parallel_map(
                 shard_threads,
-                device_batches.iter().collect(),
+                batches.iter().collect(),
                 |_, hb| env.engine.grad(params.as_slice(), hb),
             );
-            let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(cfg.devices);
+            let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(devices);
             let mut stats = BatchStats::default();
             for g in results {
                 let g = g?;
@@ -252,15 +316,16 @@ pub fn run_sync_training(
             }
             // in-place ring: after this, worker_grads[0] is the mean arena
             allreduce::ring_mean_inplace(&mut worker_grads)?;
-            let lr = cfg.sched.lr(cfg.sched_offset + steps);
             opt.step_mt(params, &worker_grads[0], lr, env.threads)?;
             stats
         };
-        // cluster time: all devices compute in parallel, then sync
+        // cluster time: all devices compute in parallel, then sync; input
+        // assembly hides behind the step when the pipeline overlaps
         clock.advance_compute(step_compute);
-        if cfg.devices > 1 {
+        if devices > 1 {
             clock.advance_comm(ar_time);
         }
+        clock.note_data(data_time, step_budget, env.prefetch);
         epoch_stats.accumulate(&stats);
         steps += 1;
         observer(cfg.sched_offset + steps - 1, params, &stats);
@@ -276,10 +341,14 @@ pub fn run_sync_training(
             );
             epoch_stats = BatchStats::default();
             if last_epoch_acc >= cfg.stop_train_acc {
-                break 'outer;
+                return Ok(false);
             }
         }
-    }
+        Ok(true)
+    };
+
+    prefetch::run_pipeline(total_steps, slots, overlap, produce, consume)?;
+
     *momentum = opt.momentum;
     Ok(TrainProgress {
         steps,

@@ -3,6 +3,15 @@
 //! (DeVries & Taylor 2017 — explicitly used by the paper, §5.1).
 //!
 //! All ops work in-place on a single NHWC image slice (H*W*3 f32).
+//!
+//! Randomness is **counter-based and stateless**: example `row` of step
+//! `step` in stream `(seed, stream)` is augmented with
+//! `Rng::counter(seed, stream, step, row)` — a pure function of the key,
+//! never a draw from a shared sequential stream. Augmenting an example
+//! therefore does not depend on which examples were augmented before it,
+//! so batch assembly is order-free: any thread may assemble any shard in
+//! any interleaving and produce bitwise-identical batches (the property
+//! the prefetching input pipeline is built on).
 
 use crate::util::Rng;
 
@@ -24,10 +33,58 @@ impl AugmentSpec {
     pub fn none() -> Self {
         AugmentSpec { flip: false, shift: 0, cutout: 0 }
     }
+
+    /// True when the policy cannot change any pixel (no RNG is consulted).
+    pub fn is_noop(&self) -> bool {
+        !self.flip && self.shift == 0 && self.cutout == 0
+    }
 }
 
-/// Apply the policy to one image in place.
-pub fn augment(img: &mut [f32], hw: usize, spec: &AugmentSpec, rng: &mut Rng) {
+/// Identity of one augmentation stream: which `(seed, stream)` family a
+/// batch belongs to (worker / phase identity). The per-example generator
+/// is derived on demand from `(step, row)` — see the module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct AugStream {
+    pub seed: u64,
+    pub stream: u64,
+}
+
+impl AugStream {
+    /// The pure per-example generator for global row `row` of step `step`.
+    pub fn rng(&self, step: u64, row: u64) -> Rng {
+        Rng::counter(self.seed, self.stream, step, row)
+    }
+}
+
+/// Apply the policy to one image in place, keyed by `(key, step, row)`.
+/// `scratch` is a reusable buffer for [`shift`] (no per-example
+/// allocation once it has grown to one image).
+pub fn augment_at(
+    img: &mut [f32],
+    hw: usize,
+    spec: &AugmentSpec,
+    scratch: &mut Vec<f32>,
+    key: AugStream,
+    step: u64,
+    row: u64,
+) {
+    if spec.is_noop() {
+        return;
+    }
+    let mut rng = key.rng(step, row);
+    augment_with(img, hw, spec, scratch, &mut rng);
+}
+
+/// Apply the policy with an explicit generator. The draw order (flip,
+/// shift dy, shift dx, cutout cy, cutout cx) is part of the determinism
+/// contract — changing it changes every augmented pixel stream.
+pub fn augment_with(
+    img: &mut [f32],
+    hw: usize,
+    spec: &AugmentSpec,
+    scratch: &mut Vec<f32>,
+    rng: &mut Rng,
+) {
     debug_assert_eq!(img.len(), hw * hw * 3);
     if spec.flip && rng.coin(0.5) {
         hflip(img, hw);
@@ -36,7 +93,7 @@ pub fn augment(img: &mut [f32], hw: usize, spec: &AugmentSpec, rng: &mut Rng) {
         let dy = rng.below(2 * spec.shift + 1) as isize - spec.shift as isize;
         let dx = rng.below(2 * spec.shift + 1) as isize - spec.shift as isize;
         if dy != 0 || dx != 0 {
-            shift(img, hw, dy, dx);
+            shift(img, hw, dy, dx, scratch);
         }
     }
     if spec.cutout > 0 {
@@ -61,8 +118,11 @@ pub fn hflip(img: &mut [f32], hw: usize) {
 }
 
 /// Translate by (dy, dx), zero-filling exposed pixels (pad-and-crop).
-pub fn shift(img: &mut [f32], hw: usize, dy: isize, dx: isize) {
-    let src = img.to_vec();
+/// `scratch` holds the source copy; its capacity is reused across calls,
+/// so the steady-state hot loop performs no allocation.
+pub fn shift(img: &mut [f32], hw: usize, dy: isize, dx: isize, scratch: &mut Vec<f32>) {
+    scratch.clear();
+    scratch.extend_from_slice(img);
     img.iter_mut().for_each(|p| *p = 0.0);
     for y in 0..hw as isize {
         let sy = y - dy;
@@ -76,7 +136,7 @@ pub fn shift(img: &mut [f32], hw: usize, dy: isize, dx: isize) {
             }
             let d = ((y as usize) * hw + x as usize) * 3;
             let s = ((sy as usize) * hw + sx as usize) * 3;
-            img[d..d + 3].copy_from_slice(&src[s..s + 3]);
+            img[d..d + 3].copy_from_slice(&scratch[s..s + 3]);
         }
     }
 }
@@ -128,7 +188,8 @@ mod tests {
     fn shift_zero_fills() {
         let hw = 4;
         let mut img = vec![1.0; hw * hw * 3];
-        shift(&mut img, hw, 1, 0); // down by one: first row zero
+        let mut scratch = Vec::new();
+        shift(&mut img, hw, 1, 0, &mut scratch); // down by one: first row zero
         assert!(img[..hw * 3].iter().all(|&p| p == 0.0));
         assert!(img[hw * 3..].iter().all(|&p| p == 1.0));
     }
@@ -138,8 +199,9 @@ mod tests {
         let hw = 6;
         let orig = ramp(hw);
         let mut img = orig.clone();
-        shift(&mut img, hw, 1, 1);
-        shift(&mut img, hw, -1, -1);
+        let mut scratch = Vec::new();
+        shift(&mut img, hw, 1, 1, &mut scratch);
+        shift(&mut img, hw, -1, -1, &mut scratch);
         // interior pixels identical
         for y in 0..hw - 1 {
             for x in 0..hw - 1 {
@@ -147,6 +209,21 @@ mod tests {
                 assert_eq!(img[d], orig[d], "pixel {y},{x}");
             }
         }
+    }
+
+    #[test]
+    fn shift_reuses_scratch_capacity() {
+        let hw = 8;
+        let mut img = vec![1.0; hw * hw * 3];
+        let mut scratch = Vec::new();
+        shift(&mut img, hw, 1, 0, &mut scratch);
+        let cap = scratch.capacity();
+        let ptr = scratch.as_ptr();
+        for d in 1..4isize {
+            shift(&mut img, hw, d % 3 - 1, -d % 2, &mut scratch);
+        }
+        assert_eq!(scratch.capacity(), cap, "scratch must not regrow");
+        assert_eq!(scratch.as_ptr(), ptr, "scratch must not reallocate");
     }
 
     #[test]
@@ -173,19 +250,49 @@ mod tests {
         let hw = 4;
         let orig = ramp(hw);
         let mut img = orig.clone();
-        let mut rng = crate::util::Rng::new(0);
-        augment(&mut img, hw, &AugmentSpec::none(), &mut rng);
+        let mut scratch = Vec::new();
+        let key = AugStream { seed: 0, stream: 0 };
+        augment_at(&mut img, hw, &AugmentSpec::none(), &mut scratch, key, 0, 0);
         assert_eq!(img, orig);
+        assert!(scratch.is_empty(), "noop must not touch the scratch");
     }
 
     #[test]
-    fn augment_deterministic_per_seed() {
+    fn augment_at_is_pure_per_key() {
+        // the same (key, step, row) always produces the same pixels, no
+        // matter what was augmented before — the order-free contract
         let hw = 8;
         let spec = AugmentSpec::cifar_default();
+        let key = AugStream { seed: 5, stream: 2 };
+        let mut scratch = Vec::new();
         let mut a = ramp(hw);
+        augment_at(&mut a, hw, &spec, &mut scratch, key, 3, 7);
+        // interleave unrelated work on the same scratch
+        let mut other = ramp(hw);
+        augment_at(&mut other, hw, &spec, &mut scratch, key, 9, 1);
         let mut b = ramp(hw);
-        augment(&mut a, hw, &spec, &mut crate::util::Rng::new(5));
-        augment(&mut b, hw, &spec, &mut crate::util::Rng::new(5));
+        augment_at(&mut b, hw, &spec, &mut scratch, key, 3, 7);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn augment_at_varies_with_step_and_row() {
+        let hw = 8;
+        let spec = AugmentSpec::cifar_default();
+        let key = AugStream { seed: 5, stream: 2 };
+        let mut scratch = Vec::new();
+        let base = {
+            let mut img = ramp(hw);
+            augment_at(&mut img, hw, &spec, &mut scratch, key, 0, 0);
+            img
+        };
+        // over many (step, row) coordinates, at least one must differ from
+        // the base draw (overwhelmingly likely for all of them)
+        let varies = (1..16u64).any(|k| {
+            let mut img = ramp(hw);
+            augment_at(&mut img, hw, &spec, &mut scratch, key, k, k);
+            img != base
+        });
+        assert!(varies, "counter coordinates must change the augmentation");
     }
 }

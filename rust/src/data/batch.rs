@@ -1,13 +1,16 @@
 //! Batch assembly: gather dataset rows by index, apply augmentation, and
 //! produce the `HostBatch` the runtime uploads. The hot training loops
-//! assemble *into* a reused `HostBatch` (`assemble_into`), so steady-state
-//! steps perform no allocation — and an owned `HostBatch` per device is
-//! exactly what the thread-parallel shard/worker paths need.
+//! assemble *into* a reused `HostBatch` (`assemble_step_into`), so
+//! steady-state steps perform no allocation — and because augmentation is
+//! keyed by a stateless counter (`(seed, stream, step, row)`), assembly is
+//! **order-free**: any thread may assemble any shard of any step in any
+//! interleaving and produce bitwise-identical batches. That property is
+//! what lets the prefetcher build step t+1 on a background thread while
+//! the backend computes step t.
 
-use super::augment::{augment, AugmentSpec};
+use super::augment::{augment_at, AugStream, AugmentSpec};
 use super::synth::Dataset;
 use crate::runtime::HostBatch;
-use crate::util::Rng;
 
 /// Reusable batch assembler. `batch` is the *maximum* batch size; a ragged
 /// final evaluation batch (fewer indices) is allowed and produces a
@@ -16,11 +19,13 @@ pub struct Batcher {
     batch: usize,
     image_size: usize,
     augment: AugmentSpec,
+    /// scratch for `augment::shift` — grown once, reused for every example
+    scratch: Vec<f32>,
 }
 
 impl Batcher {
     pub fn new(batch: usize, image_size: usize, augment: AugmentSpec) -> Self {
-        Batcher { batch, image_size, augment }
+        Batcher { batch, image_size, augment, scratch: Vec::new() }
     }
 
     pub fn batch(&self) -> usize {
@@ -28,7 +33,7 @@ impl Batcher {
     }
 
     /// An empty `HostBatch` with capacity for a full batch, meant to be
-    /// reused across `assemble_into` calls (no per-step allocation).
+    /// reused across `assemble_*_into` calls (no per-step allocation).
     pub fn make_batch(&self) -> HostBatch {
         HostBatch {
             images: Vec::with_capacity(self.batch * self.image_size * self.image_size * 3),
@@ -38,14 +43,8 @@ impl Batcher {
         }
     }
 
-    fn assemble_with(
-        &self,
-        ds: &Dataset,
-        idx: &[usize],
-        rng: &mut Rng,
-        out: &mut HostBatch,
-        spec: &AugmentSpec,
-    ) {
+    /// Gather rows into `out` (shared by the augmented and clean paths).
+    fn gather(&self, ds: &Dataset, idx: &[usize], out: &mut HostBatch) {
         assert!(
             !idx.is_empty() && idx.len() <= self.batch,
             "index count {} not in 1..={}",
@@ -59,31 +58,55 @@ impl Batcher {
         out.images.resize(idx.len() * pix, 0.0);
         out.labels.resize(idx.len(), 0);
         for (row, &i) in idx.iter().enumerate() {
-            let dst = &mut out.images[row * pix..(row + 1) * pix];
-            dst.copy_from_slice(ds.image(i));
-            augment(dst, self.image_size, spec, rng);
+            out.images[row * pix..(row + 1) * pix].copy_from_slice(ds.image(i));
             out.labels[row] = ds.labels[i];
         }
     }
 
-    /// Assemble indices directly into `out`, reusing its buffers. Accepts
-    /// `1..=batch` indices (the ragged final eval batch is smaller).
-    pub fn assemble_into(&self, ds: &Dataset, idx: &[usize], rng: &mut Rng, out: &mut HostBatch) {
+    /// Counter-keyed augmented assembly: global row `row0 + r` of step
+    /// `step` is augmented with `Rng::counter(key.seed, key.stream, step,
+    /// row0 + r)`. Shards of one step assemble the same pixels regardless
+    /// of which `Batcher`, thread, or call order produced them.
+    pub fn assemble_step_into(
+        &mut self,
+        ds: &Dataset,
+        idx: &[usize],
+        key: AugStream,
+        step: u64,
+        row0: u64,
+        out: &mut HostBatch,
+    ) {
+        self.gather(ds, idx, out);
+        if self.augment.is_noop() {
+            return;
+        }
         let spec = self.augment;
-        self.assemble_with(ds, idx, rng, out, &spec);
+        let hw = self.image_size;
+        let pix = ds.pixels_per_image();
+        for r in 0..idx.len() {
+            let img = &mut out.images[r * pix..(r + 1) * pix];
+            augment_at(img, hw, &spec, &mut self.scratch, key, step, row0 + r as u64);
+        }
     }
 
-    /// `assemble_into` without augmentation (eval / BN-recompute batches).
+    /// Assembly without augmentation (eval / BN-recompute batches) — no
+    /// RNG is constructed at all.
     pub fn assemble_clean_into(&self, ds: &Dataset, idx: &[usize], out: &mut HostBatch) {
-        let mut rng = Rng::new(0);
-        self.assemble_with(ds, idx, &mut rng, out, &AugmentSpec::none());
+        self.gather(ds, idx, out);
     }
 
-    /// Convenience: assemble into a freshly allocated `HostBatch` (tests,
-    /// benches, one-off probes — the training loops use `assemble_into`).
-    pub fn assemble(&self, ds: &Dataset, idx: &[usize], rng: &mut Rng) -> HostBatch {
+    /// Convenience: augmented assembly into a fresh `HostBatch` (tests,
+    /// benches — the training loops use `assemble_step_into`).
+    pub fn assemble_step(
+        &mut self,
+        ds: &Dataset,
+        idx: &[usize],
+        key: AugStream,
+        step: u64,
+        row0: u64,
+    ) -> HostBatch {
         let mut out = self.make_batch();
-        self.assemble_into(ds, idx, rng, &mut out);
+        self.assemble_step_into(ds, idx, key, step, row0, &mut out);
         out
     }
 
@@ -115,6 +138,10 @@ mod tests {
         Generator::new(SynthSpec::for_preset(10, 16, 7)).sample(40, 10)
     }
 
+    fn key() -> AugStream {
+        AugStream { seed: 9, stream: 3 }
+    }
+
     #[test]
     fn assemble_gathers_rows() {
         let ds = dataset();
@@ -129,9 +156,8 @@ mod tests {
     #[test]
     fn augmented_assemble_differs_but_labels_match() {
         let ds = dataset();
-        let b = Batcher::new(4, 16, AugmentSpec::cifar_default());
-        let mut rng = Rng::new(3);
-        let hb = b.assemble(&ds, &[0, 1, 2, 3], &mut rng);
+        let mut b = Batcher::new(4, 16, AugmentSpec::cifar_default());
+        let hb = b.assemble_step(&ds, &[0, 1, 2, 3], key(), 0, 0);
         assert_eq!(hb.labels, &ds.labels[..4]);
         let pix = ds.pixels_per_image();
         // with flip+shift+cutout, at least one image must change
@@ -140,16 +166,37 @@ mod tests {
     }
 
     #[test]
+    fn counter_assembly_is_order_free() {
+        // THE pipelining property: assembling a step as one whole batch,
+        // as two shards, shards in reverse order, or with a different
+        // Batcher instance — all bitwise identical.
+        let ds = dataset();
+        let pix = ds.pixels_per_image();
+        let mut a = Batcher::new(8, 16, AugmentSpec::cifar_default());
+        let whole = a.assemble_step(&ds, &[0, 1, 2, 3, 4, 5, 6, 7], key(), 5, 0);
+
+        let mut b = Batcher::new(8, 16, AugmentSpec::cifar_default());
+        let hi = b.assemble_step(&ds, &[4, 5, 6, 7], key(), 5, 4); // second shard FIRST
+        let lo = b.assemble_step(&ds, &[0, 1, 2, 3], key(), 5, 0);
+        assert_eq!(&whole.images[..4 * pix], &lo.images[..]);
+        assert_eq!(&whole.images[4 * pix..], &hi.images[..]);
+
+        // different step or row offset -> different augmentation stream
+        let other_step = b.assemble_step(&ds, &[0, 1, 2, 3, 4, 5, 6, 7], key(), 6, 0);
+        assert_ne!(whole.images, other_step.images);
+    }
+
+    #[test]
     fn assemble_into_reuses_buffers_without_allocating() {
         let ds = dataset();
-        let b = Batcher::new(4, 16, AugmentSpec::none());
+        let mut b = Batcher::new(4, 16, AugmentSpec::cifar_default());
         let mut out = b.make_batch();
-        b.assemble_clean_into(&ds, &[0, 1, 2, 3], &mut out);
+        b.assemble_step_into(&ds, &[0, 1, 2, 3], key(), 0, 0, &mut out);
         let cap_i = out.images.capacity();
         let cap_l = out.labels.capacity();
         let ptr = out.images.as_ptr();
-        for _ in 0..5 {
-            b.assemble_clean_into(&ds, &[4, 5, 6, 7], &mut out);
+        for step in 1..6 {
+            b.assemble_step_into(&ds, &[4, 5, 6, 7], key(), step, 0, &mut out);
         }
         assert_eq!(out.images.capacity(), cap_i, "image buffer must be reused");
         assert_eq!(out.labels.capacity(), cap_l, "label buffer must be reused");

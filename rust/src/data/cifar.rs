@@ -1,0 +1,367 @@
+//! On-disk CIFAR-10 / CIFAR-100 loader for the standard binary record
+//! format (`data_batch_*.bin` / `train.bin`): each record is
+//! `label_bytes` label bytes followed by one 32x32x3 image stored
+//! channel-planar (1024-byte R plane, then G, then B; row-major within a
+//! plane). CIFAR-100 records carry two label bytes (coarse, fine); the
+//! fine label is used. Pixels are mapped to f32 in [-1, 1] and transposed
+//! to the NHWC layout the runtime expects.
+//!
+//! Validation is hardened the same way `checkpoint::load` is: every
+//! length and label is checked against the actual bytes BEFORE the pixel
+//! buffer is allocated, so a truncated, mis-sized, or hostile file errors
+//! cleanly instead of producing garbage tensors or over-allocating.
+
+use std::path::{Path, PathBuf};
+
+use super::synth::Dataset;
+use crate::util::{Error, Result};
+
+/// CIFAR images are always 32x32 RGB.
+pub const CIFAR_HW: usize = 32;
+const PLANE: usize = CIFAR_HW * CIFAR_HW;
+const REC_PIXELS: usize = 3 * PLANE;
+
+/// Which binary flavor a directory holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CifarVariant {
+    Cifar10,
+    Cifar100,
+}
+
+impl CifarVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            CifarVariant::Cifar10 => "cifar10",
+            CifarVariant::Cifar100 => "cifar100",
+        }
+    }
+
+    /// The single `data`-knob-name -> variant resolver (config validation
+    /// and source construction must never drift apart).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "cifar10" => Some(CifarVariant::Cifar10),
+            "cifar100" => Some(CifarVariant::Cifar100),
+            _ => None,
+        }
+    }
+
+    pub fn num_classes(self) -> usize {
+        match self {
+            CifarVariant::Cifar10 => 10,
+            CifarVariant::Cifar100 => 100,
+        }
+    }
+
+    /// Label bytes per record; the *last* one is the (fine) label.
+    pub fn label_bytes(self) -> usize {
+        match self {
+            CifarVariant::Cifar10 => 1,
+            CifarVariant::Cifar100 => 2,
+        }
+    }
+
+    pub fn record_bytes(self) -> usize {
+        self.label_bytes() + REC_PIXELS
+    }
+
+    /// The training files present in `dir` (standard names), in order.
+    /// CIFAR-10 accepts a contiguous `data_batch_1..k` prefix (small
+    /// fixtures) but a GAP — a later batch present while an earlier one
+    /// is missing — is a broken download and errors loudly rather than
+    /// silently training on a reshuffled subset.
+    fn train_files(self, dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut files: Vec<PathBuf> = Vec::new();
+        match self {
+            CifarVariant::Cifar10 => {
+                let mut first_missing = None;
+                for i in 1..=5usize {
+                    let p = dir.join(format!("data_batch_{i}.bin"));
+                    if !p.exists() {
+                        first_missing.get_or_insert(i);
+                    } else if let Some(j) = first_missing {
+                        return Err(Error::invalid(format!(
+                            "cifar10 training files in {} have a gap: \
+                             data_batch_{j}.bin is missing but data_batch_{i}.bin exists",
+                            dir.display()
+                        )));
+                    } else {
+                        files.push(p);
+                    }
+                }
+            }
+            CifarVariant::Cifar100 => {
+                let p = dir.join("train.bin");
+                if p.exists() {
+                    files.push(p);
+                }
+            }
+        }
+        if files.is_empty() {
+            return Err(Error::invalid(format!(
+                "no {} training files in {} (expected {})",
+                self.name(),
+                dir.display(),
+                match self {
+                    CifarVariant::Cifar10 => "data_batch_1.bin ...",
+                    CifarVariant::Cifar100 => "train.bin",
+                }
+            )));
+        }
+        Ok(files)
+    }
+
+    fn test_file(self, dir: &Path) -> PathBuf {
+        match self {
+            CifarVariant::Cifar10 => dir.join("test_batch.bin"),
+            CifarVariant::Cifar100 => dir.join("test.bin"),
+        }
+    }
+}
+
+/// Train or test half of a directory.
+#[derive(Debug, Clone, Copy)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Decode up to `limit` of one file's records, appending to the caller's
+/// buffers (so a multi-file split accumulates into ONE reserved
+/// allocation). The file's length and EVERY label — including records
+/// past `limit` — are validated before the f32 pixel buffer grows, so a
+/// hostile tail cannot hide behind a small n_train.
+pub fn parse_records_into(
+    bytes: &[u8],
+    variant: CifarVariant,
+    what: &str,
+    limit: usize,
+    images: &mut Vec<f32>,
+    labels: &mut Vec<i32>,
+) -> Result<()> {
+    let rec = variant.record_bytes();
+    if bytes.is_empty() {
+        return Err(Error::invalid(format!("{what}: empty {} file", variant.name())));
+    }
+    if bytes.len() % rec != 0 {
+        return Err(Error::invalid(format!(
+            "{what}: {} bytes is not a whole number of {rec}-byte records \
+             (truncated, or not the {} binary format)",
+            bytes.len(),
+            variant.name()
+        )));
+    }
+    let count = bytes.len() / rec;
+    let lb = variant.label_bytes();
+    for r in 0..count {
+        let label = bytes[r * rec + lb - 1] as usize;
+        if label >= variant.num_classes() {
+            return Err(Error::invalid(format!(
+                "{what}: record {r} has label {label}, out of range for {} \
+                 ({} classes)",
+                variant.name(),
+                variant.num_classes()
+            )));
+        }
+    }
+    let decode = count.min(limit);
+    let base = images.len();
+    images.resize(base + decode * REC_PIXELS, 0.0);
+    labels.reserve(decode);
+    for r in 0..decode {
+        let src = &bytes[r * rec..(r + 1) * rec];
+        labels.push(src[lb - 1] as i32);
+        let pix = &src[lb..];
+        let dst = &mut images[base + r * REC_PIXELS..base + (r + 1) * REC_PIXELS];
+        // channel-planar -> interleaved NHWC, bytes -> [-1, 1]
+        for c in 0..3 {
+            for (p, &v) in pix[c * PLANE..(c + 1) * PLANE].iter().enumerate() {
+                dst[p * 3 + c] = v as f32 / 127.5 - 1.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode one file's records into fresh buffers (tests / one-off probes).
+pub fn parse_records(
+    bytes: &[u8],
+    variant: CifarVariant,
+    what: &str,
+) -> Result<(Vec<f32>, Vec<i32>)> {
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    parse_records_into(bytes, variant, what, usize::MAX, &mut images, &mut labels)?;
+    Ok((images, labels))
+}
+
+fn split_files(variant: CifarVariant, dir: &Path, split: Split) -> Result<Vec<PathBuf>> {
+    match split {
+        Split::Train => variant.train_files(dir),
+        Split::Test => {
+            let f = variant.test_file(dir);
+            if !f.exists() {
+                return Err(Error::invalid(format!(
+                    "missing {} test file {}",
+                    variant.name(),
+                    f.display()
+                )));
+            }
+            Ok(vec![f])
+        }
+    }
+}
+
+/// Load one whole split of a CIFAR directory as a `Dataset`.
+pub fn load_split(variant: CifarVariant, dir: &Path, split: Split) -> Result<Dataset> {
+    load_prefix(variant, dir, split, usize::MAX, "load_split")
+}
+
+/// Load the first `want` examples of a split (the config's
+/// n_train/n_test), erroring when the split holds fewer — asking for
+/// more data than exists must fail loudly, not train silently on a short
+/// epoch. Only the requested prefix is decoded and retained: a 50k-record
+/// directory serving n_train=1024 neither converts nor keeps the rest
+/// (`usize::MAX` = the whole split).
+pub fn load_prefix(
+    variant: CifarVariant,
+    dir: &Path,
+    split: Split,
+    want: usize,
+    what: &str,
+) -> Result<Dataset> {
+    let files = split_files(variant, dir, split)?;
+    // availability check from the on-disk sizes: every file's length must
+    // be whole records (re-validated against the actual bytes when read)
+    let rec = variant.record_bytes();
+    let mut total = 0usize;
+    for f in &files {
+        let len = std::fs::metadata(f)?.len() as usize;
+        if len == 0 || len % rec != 0 {
+            return Err(Error::invalid(format!(
+                "{}: {len} bytes is not a whole number of {rec}-byte records \
+                 (truncated, or not the {} binary format)",
+                f.display(),
+                variant.name()
+            )));
+        }
+        total += len / rec;
+    }
+    let want = if want == usize::MAX { total } else { want };
+    if want == 0 || want > total {
+        return Err(Error::invalid(format!(
+            "{what} = {want}, but the on-disk split holds {total} examples"
+        )));
+    }
+    let mut images: Vec<f32> = Vec::with_capacity(want * REC_PIXELS);
+    let mut labels: Vec<i32> = Vec::with_capacity(want);
+    for f in &files {
+        if labels.len() == want {
+            break;
+        }
+        let bytes = std::fs::read(f)?;
+        let need = want - labels.len();
+        let what = f.display().to_string();
+        parse_records_into(&bytes, variant, &what, need, &mut images, &mut labels)?;
+    }
+    if labels.len() != want {
+        // a file shrank between the size scan and the read (concurrent
+        // re-download): fail loudly, never train on a short epoch
+        return Err(Error::invalid(format!(
+            "{what} = {want}, but only {} examples could be read",
+            labels.len()
+        )));
+    }
+    Ok(Dataset {
+        n: want,
+        images,
+        labels,
+        image_size: CIFAR_HW,
+        num_classes: variant.num_classes(),
+    })
+}
+
+/// One record of the deterministic fixture pattern shared by the loader
+/// tests, the `data_pipeline` bench, and
+/// `python/tools/gen_cifar_fixture.py`: label = `i % classes`, plane byte
+/// `(c, p)` = `(i*7 + c*31 + p*13) % 256`. Test support, not loader API.
+#[doc(hidden)]
+pub fn fixture_record(variant: CifarVariant, i: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(variant.record_bytes());
+    if variant.label_bytes() == 2 {
+        b.push(0); // coarse label (ignored by the loader)
+    }
+    b.push((i % variant.num_classes()) as u8);
+    for c in 0..3 {
+        for p in 0..PLANE {
+            b.push(((i * 7 + c * 31 + p * 13) % 256) as u8);
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One well-formed record with the shared deterministic pattern.
+    fn record(variant: CifarVariant, i: usize) -> Vec<u8> {
+        fixture_record(variant, i)
+    }
+
+    #[test]
+    fn parse_roundtrips_labels_and_layout() {
+        for variant in [CifarVariant::Cifar10, CifarVariant::Cifar100] {
+            let mut bytes = Vec::new();
+            for i in 0..3 {
+                bytes.extend_from_slice(&record(variant, i));
+            }
+            let (images, labels) = parse_records(&bytes, variant, "t").unwrap();
+            assert_eq!(labels, vec![0, 1, 2]);
+            assert_eq!(images.len(), 3 * REC_PIXELS);
+            // record 1, channel 2, plane offset 5 lands at NHWC index 5*3+2
+            let want = ((7 + 2 * 31 + 5 * 13) % 256) as f32 / 127.5 - 1.0;
+            assert_eq!(images[REC_PIXELS + 5 * 3 + 2], want);
+            assert!(images.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn truncated_and_empty_files_error() {
+        let variant = CifarVariant::Cifar10;
+        assert!(parse_records(&[], variant, "t").is_err());
+        let mut bytes = record(variant, 0);
+        bytes.pop(); // cut one byte mid-record
+        let err = parse_records(&bytes, variant, "t").unwrap_err();
+        assert!(err.to_string().contains("records"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_label_errors_before_decoding() {
+        let variant = CifarVariant::Cifar10;
+        let mut bytes = record(variant, 0);
+        bytes[0] = 10; // only 0..=9 are valid
+        let err = parse_records(&bytes, variant, "t").unwrap_err();
+        assert!(err.to_string().contains("label"), "{err}");
+    }
+
+    #[test]
+    fn parse_limit_decodes_prefix_but_validates_all_labels() {
+        let variant = CifarVariant::Cifar10;
+        let mut bytes = Vec::new();
+        for i in 0..4 {
+            bytes.extend_from_slice(&record(variant, i));
+        }
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        parse_records_into(&bytes, variant, "t", 2, &mut images, &mut labels).unwrap();
+        assert_eq!(labels, vec![0, 1]);
+        assert_eq!(images.len(), 2 * REC_PIXELS);
+        // a hostile label BEYOND the decode limit must still be caught
+        let rec = variant.record_bytes();
+        bytes[3 * rec] = 99;
+        let err = parse_records_into(&bytes, variant, "t", 2, &mut images, &mut labels)
+            .unwrap_err();
+        assert!(err.to_string().contains("label"), "{err}");
+    }
+}

@@ -1,13 +1,21 @@
-//! Data pipeline: synthetic datasets, per-epoch shuffling + sharding, and
-//! the paper's augmentation (flip / shift / cutout). See DESIGN.md for why
-//! synthetic data substitutes CIFAR/ImageNet in this environment.
+//! The input subsystem: pluggable dataset sources (synthetic generator,
+//! on-disk CIFAR binaries), per-epoch shuffling + sharding, the paper's
+//! augmentation (flip / shift / cutout) keyed by a stateless counter RNG,
+//! and the prefetch pipeline that overlaps batch assembly with backend
+//! compute. See DESIGN.md for why synthetic data substitutes
+//! CIFAR/ImageNet in this environment.
 
 pub mod augment;
 pub mod batch;
+pub mod cifar;
+pub mod prefetch;
 pub mod sampler;
+pub mod source;
 pub mod synth;
 
-pub use augment::AugmentSpec;
+pub use augment::{AugStream, AugmentSpec};
 pub use batch::{sequential_batches, Batcher};
+pub use cifar::CifarVariant;
 pub use sampler::{shard, EpochSampler};
+pub use source::{CifarSource, DataSource, SynthSource};
 pub use synth::{Dataset, Generator, SynthSpec};

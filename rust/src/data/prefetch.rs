@@ -1,0 +1,329 @@
+//! Input prefetching: overlap batch assembly with backend compute.
+//!
+//! Because augmentation is a stateless counter-keyed pure function
+//! (`data::augment`), assembling step t+1 on a background thread while
+//! the backend computes step t cannot change a single bit of any batch —
+//! prefetching is purely a wall-clock optimization. The machinery is a
+//! bounded slot queue (double buffer) built on the same zero-dependency
+//! std primitives as `coordinator::parallel`: slots cycle
+//! producer -> ready -> consumer -> free -> producer, so the steady state
+//! allocates nothing.
+//!
+//! `run_pipeline` is the single entry point the training loops use; with
+//! `overlap = false` (or a single slot) it degrades to the plain
+//! assemble-then-compute loop on the calling thread, producing the same
+//! results by construction.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::util::Result;
+
+/// Bounded hand-off queue for reusable slots (the double buffer).
+pub struct PrefetchQueue<T> {
+    state: Mutex<QueueState<T>>,
+    free_cv: Condvar,
+    ready_cv: Condvar,
+}
+
+struct QueueState<T> {
+    free: VecDeque<T>,
+    ready: VecDeque<T>,
+    /// producer has published its last slot
+    finished: bool,
+    /// hard stop (consumer error / early exit): both sides unblock
+    shutdown: bool,
+}
+
+impl<T> PrefetchQueue<T> {
+    pub fn new(slots: Vec<T>) -> Self {
+        PrefetchQueue {
+            state: Mutex::new(QueueState {
+                free: slots.into(),
+                ready: VecDeque::new(),
+                finished: false,
+                shutdown: false,
+            }),
+            free_cv: Condvar::new(),
+            ready_cv: Condvar::new(),
+        }
+    }
+
+    /// Producer side: wait for a recycled slot. `None` after `shutdown`.
+    pub fn acquire_free(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if let Some(t) = st.free.pop_front() {
+                return Some(t);
+            }
+            st = self.free_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Producer side: hand a filled slot to the consumer.
+    pub fn publish(&self, t: T) {
+        let mut st = self.state.lock().unwrap();
+        st.ready.push_back(t);
+        drop(st);
+        self.ready_cv.notify_one();
+    }
+
+    /// Consumer side: wait for the next filled slot (FIFO — a single
+    /// producer publishes steps in order). Already-published slots are
+    /// drained even after `finish`/`shutdown`; `None` once the queue is
+    /// empty and no more slots are coming.
+    pub fn acquire_ready(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = st.ready.pop_front() {
+                return Some(t);
+            }
+            if st.shutdown || st.finished {
+                return None;
+            }
+            st = self.ready_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Consumer side: recycle a consumed slot's buffers.
+    pub fn release(&self, t: T) {
+        let mut st = self.state.lock().unwrap();
+        st.free.push_back(t);
+        drop(st);
+        self.free_cv.notify_one();
+    }
+
+    /// Producer side: no more slots will be published.
+    pub fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.finished = true;
+        drop(st);
+        self.ready_cv.notify_all();
+    }
+
+    /// Either side: abort — every blocked call returns `None`.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.free_cv.notify_all();
+        self.ready_cv.notify_all();
+    }
+}
+
+/// Drive `steps` pipeline steps: `produce(step, slot)` fills a slot (batch
+/// assembly), `consume(step, slot)` uses it (the training step; returns
+/// `Ok(false)` to stop early, e.g. the epoch-accuracy early exit).
+///
+/// With `overlap` set and at least two slots, production runs on ONE
+/// background thread (scoped — joined before return) while consumption
+/// stays on the calling thread, double-buffering through the slot queue;
+/// otherwise both run interleaved on the calling thread. The two modes
+/// are bitwise-identical because `produce` must be a pure function of
+/// `step` (the counter-RNG contract) — only wall time changes.
+pub fn run_pipeline<S, P, C>(
+    steps: usize,
+    mut slots: Vec<S>,
+    overlap: bool,
+    mut produce: P,
+    mut consume: C,
+) -> Result<()>
+where
+    S: Send,
+    P: FnMut(usize, &mut S) + Send,
+    C: FnMut(usize, &mut S) -> Result<bool>,
+{
+    assert!(!slots.is_empty(), "run_pipeline needs at least one slot");
+    if steps == 0 {
+        return Ok(());
+    }
+    if !overlap || slots.len() < 2 || steps == 1 {
+        for step in 0..steps {
+            produce(step, &mut slots[0]);
+            if !consume(step, &mut slots[0])? {
+                break;
+            }
+        }
+        return Ok(());
+    }
+    let queue = PrefetchQueue::new(slots);
+    let q = &queue;
+    std::thread::scope(|scope| -> Result<()> {
+        // shut the queue on EVERY exit path of either side — early stop,
+        // error, or panic — so the other side can never stay blocked
+        // while the scope joins (already-published slots still drain)
+        struct Shutdown<'a, T>(&'a PrefetchQueue<T>);
+        impl<T> Drop for Shutdown<'_, T> {
+            fn drop(&mut self) {
+                self.0.shutdown();
+            }
+        }
+        scope.spawn(move || {
+            let _guard = Shutdown(q);
+            for step in 0..steps {
+                let Some(mut slot) = q.acquire_free() else { return };
+                produce(step, &mut slot);
+                q.publish(slot);
+            }
+            q.finish();
+        });
+        let _guard = Shutdown(q);
+        for step in 0..steps {
+            let Some(mut slot) = q.acquire_ready() else { break };
+            let cont = consume(step, &mut slot)?;
+            q.release(slot);
+            if !cont {
+                break;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// The standard slot set for [`run_pipeline`]: a double buffer when the
+/// producer may overlap with compute, a single reused slot otherwise.
+/// ONE definition of the pipeline depth, shared by every consumer.
+pub fn make_slots<S>(overlap: bool, mut make: impl FnMut() -> S) -> Vec<S> {
+    (0..if overlap { 2 } else { 1 }).map(|_| make()).collect()
+}
+
+/// `SWAP_PREFETCH` environment override for the `prefetch` config knob:
+/// `0|false|off|no` disables, `1|true|on|yes` enables, unset (or
+/// unrecognized) leaves the knob in charge.
+pub fn env_override() -> Option<bool> {
+    let v = std::env::var("SWAP_PREFETCH").ok()?;
+    match v.trim().to_ascii_lowercase().as_str() {
+        "0" | "false" | "off" | "no" => Some(false),
+        "1" | "true" | "on" | "yes" => Some(true),
+        _ => None,
+    }
+}
+
+/// Default prefetch mode when nothing is configured: the env override if
+/// set, else on (overlap is bitwise-free).
+pub fn default_prefetch() -> bool {
+    env_override().unwrap_or(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_matches_serial_bitwise() {
+        // produce is a pure function of step -> overlap changes nothing
+        let run = |overlap: bool| -> Vec<u64> {
+            let mut seen = Vec::new();
+            let slots: Vec<u64> = vec![0, 0];
+            run_pipeline(
+                17,
+                slots,
+                overlap,
+                |step, slot| *slot = (step as u64).wrapping_mul(0x9E37_79B9) ^ 7,
+                |step, slot| {
+                    assert_eq!(*slot, (step as u64).wrapping_mul(0x9E37_79B9) ^ 7);
+                    seen.push(*slot);
+                    Ok(true)
+                },
+            )
+            .unwrap();
+            seen
+        };
+        assert_eq!(run(false), run(true));
+        assert_eq!(run(true).len(), 17);
+    }
+
+    #[test]
+    fn pipeline_consumes_steps_in_order() {
+        let mut order = Vec::new();
+        run_pipeline(
+            9,
+            vec![0usize, 0],
+            true,
+            |step, slot| *slot = step,
+            |step, slot| {
+                assert_eq!(*slot, step);
+                order.push(step);
+                Ok(true)
+            },
+        )
+        .unwrap();
+        assert_eq!(order, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn early_stop_unblocks_producer() {
+        // the consumer stops at step 2 while the producer wants 1000
+        // steps; shutdown must let the scoped producer exit (this test
+        // hanging = the bug)
+        let mut n = 0;
+        run_pipeline(
+            1000,
+            vec![(); 2],
+            true,
+            |_, _| {},
+            |step, _| {
+                n += 1;
+                Ok(step < 2)
+            },
+        )
+        .unwrap();
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn consumer_error_propagates_and_joins() {
+        let err = run_pipeline(
+            100,
+            vec![(); 2],
+            true,
+            |_, _| {},
+            |step, _| {
+                if step == 1 {
+                    Err(crate::util::Error::invalid("boom"))
+                } else {
+                    Ok(true)
+                }
+            },
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn zero_steps_is_a_noop() {
+        run_pipeline(0, vec![0u8], true, |_, _| {}, |_, _| Ok(true)).unwrap();
+    }
+
+    #[test]
+    fn single_slot_degrades_to_serial() {
+        let mut seen = Vec::new();
+        run_pipeline(
+            4,
+            vec![0usize],
+            true, // requested, but one slot cannot overlap
+            |step, slot| *slot = step * 2,
+            |_, slot| {
+                seen.push(*slot);
+                Ok(true)
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn env_override_parses() {
+        // don't touch the process env (tests run threaded) — only the
+        // pure parsing path is exercised here via default_prefetch's
+        // contract: with no env var set it must default to on
+        if std::env::var("SWAP_PREFETCH").is_err() {
+            assert!(default_prefetch());
+        } else {
+            // CI's prefetch lane sets it: override must agree
+            assert!(env_override().is_some());
+        }
+    }
+}

@@ -4,10 +4,10 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{BaselineConfig, SwaConfig, SwapConfig, TrainEnv};
-use crate::data::{Dataset, Generator, SynthSpec};
+use crate::data::Dataset;
 use crate::runtime::Backend;
 use crate::sim::{CostModel, DeviceModel, NetModel};
-use crate::util::Result;
+use crate::util::{Error, Result};
 
 pub struct Lab {
     pub cfg: ExperimentConfig,
@@ -22,18 +22,30 @@ impl Lab {
         cfg.validate()?;
         let engine = cfg.load_backend()?;
         let m = engine.manifest().clone();
-        let gen = Generator::new(SynthSpec::for_preset(
-            m.model.num_classes,
-            m.model.image_size,
-            cfg.seed,
-        ));
-        let train = gen.sample(cfg.n_train, 10);
-        let test = gen.sample(cfg.n_test, 11);
+        let source = cfg.data_source()?;
+        let (train, test) = source.load()?;
+        // the loaded data must fit the model contract, whatever fed it
+        for (ds, what) in [(&train, "train"), (&test, "test")] {
+            if ds.num_classes != m.model.num_classes || ds.image_size != m.model.image_size {
+                return Err(Error::config(format!(
+                    "data source '{}' {what} split is {}x{} with {} classes, \
+                     but the model wants {}x{} with {} classes",
+                    source.name(),
+                    ds.image_size,
+                    ds.image_size,
+                    ds.num_classes,
+                    m.model.image_size,
+                    m.model.image_size,
+                    m.model.num_classes
+                )));
+            }
+        }
         let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
         crate::info!(
-            "lab ready: preset={} backend={} params={} train={} test={}",
+            "lab ready: preset={} backend={} data={} params={} train={} test={}",
             cfg.preset,
             engine.name(),
+            source.name(),
             m.num_params,
             train.n,
             test.n
@@ -51,6 +63,7 @@ impl Lab {
             exec_batch: self.cfg.exec_batch,
             bn_batches: self.cfg.bn_batches,
             threads: self.cfg.resolved_threads(),
+            prefetch: self.cfg.resolved_prefetch(),
         }
     }
 

@@ -1,10 +1,16 @@
-//! Discrete-event cluster clock with a compute/communication breakdown.
+//! Discrete-event cluster clock with a compute/communication/data
+//! breakdown.
 //!
 //! Phase 1 advances by `compute + allreduce` per synchronous step; phase 2
 //! advances by the slowest per-worker clock via `advance_parallel`, which
-//! absorbs that worker's own compute/comm breakdown. Evaluation passes are
-//! tracked separately and do NOT count toward training time (the paper's
-//! tables report training time).
+//! absorbs that worker's own compute/comm/data breakdown. Input-pipeline
+//! (batch assembly) time is booked via `note_data`: when the prefetcher
+//! overlaps assembly with the device step it hides behind compute
+//! (`data_hidden`, not on the critical path); serial assembly — or the
+//! part of an oversized assembly that compute cannot cover — lands in
+//! `data_exposed` and extends `seconds`. Evaluation passes are tracked
+//! separately and do NOT count toward training time (the paper's tables
+//! report training time).
 
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ClusterClock {
@@ -14,6 +20,11 @@ pub struct ClusterClock {
     pub compute: f64,
     /// breakdown: communication (all-reduce, broadcast)
     pub comm: f64,
+    /// input assembly hidden behind device work (prefetch overlap; NOT
+    /// part of `seconds`)
+    pub data_hidden: f64,
+    /// input assembly exposed on the critical path (part of `seconds`)
+    pub data_exposed: f64,
     /// modeled evaluation seconds (reported, not part of `seconds`)
     pub eval: f64,
 }
@@ -35,6 +46,27 @@ impl ClusterClock {
         self.comm += dt;
     }
 
+    /// Book one step's input-assembly time against a device-work budget.
+    /// `overlapped` (the prefetching pipeline): up to `budget` seconds
+    /// hide behind the device step, only the excess reaches the critical
+    /// path. Serial input: the full `dt` is exposed. The accounting
+    /// follows the *configured* pipeline, never the host's execution
+    /// strategy, so the modeled clock is identical for every thread count.
+    pub fn note_data(&mut self, dt: f64, budget: f64, overlapped: bool) {
+        debug_assert!(dt >= 0.0 && budget >= 0.0);
+        let exposed = if overlapped {
+            let hidden = dt.min(budget);
+            self.data_hidden += hidden;
+            dt - hidden
+        } else {
+            dt
+        };
+        if exposed > 0.0 {
+            self.data_exposed += exposed;
+            self.seconds += exposed;
+        }
+    }
+
     /// Advance by the slowest of parallel worker clocks (phase 2: the
     /// cluster waits for all independent workers to finish). The slowest
     /// worker's own compute/comm breakdown is absorbed — booking its total
@@ -51,6 +83,8 @@ impl ClusterClock {
             self.seconds += slowest.seconds;
             self.compute += slowest.compute;
             self.comm += slowest.comm;
+            self.data_hidden += slowest.data_hidden;
+            self.data_exposed += slowest.data_exposed;
         }
         for w in workers {
             self.eval += w.eval;
@@ -66,6 +100,8 @@ impl ClusterClock {
         self.seconds += other.seconds;
         self.compute += other.compute;
         self.comm += other.comm;
+        self.data_hidden += other.data_hidden;
+        self.data_exposed += other.data_exposed;
         self.eval += other.eval;
     }
 }
@@ -117,6 +153,51 @@ mod tests {
         assert_eq!(c.comm, 2.0);
         // eval sums over all workers, outside training time
         assert_eq!(c.eval, 0.5);
+    }
+
+    #[test]
+    fn data_time_hidden_vs_exposed() {
+        // serial input: fully on the critical path
+        let mut serial = ClusterClock::new();
+        serial.advance_compute(1.0);
+        serial.note_data(0.2, 1.0, false);
+        assert_eq!(serial.seconds, 1.2);
+        assert_eq!(serial.data_exposed, 0.2);
+        assert_eq!(serial.data_hidden, 0.0);
+
+        // prefetched input that fits the budget: entirely hidden
+        let mut pre = ClusterClock::new();
+        pre.advance_compute(1.0);
+        pre.note_data(0.2, 1.0, true);
+        assert_eq!(pre.seconds, 1.0);
+        assert_eq!(pre.data_hidden, 0.2);
+        assert_eq!(pre.data_exposed, 0.0);
+
+        // oversized assembly: only the excess is exposed
+        let mut big = ClusterClock::new();
+        big.advance_compute(1.0);
+        big.note_data(1.5, 1.0, true);
+        assert_eq!(big.seconds, 1.5);
+        assert_eq!(big.data_hidden, 1.0);
+        assert_eq!(big.data_exposed, 0.5);
+    }
+
+    #[test]
+    fn parallel_and_absorb_carry_data_breakdown() {
+        let mut w = ClusterClock::new();
+        w.advance_compute(2.0);
+        w.note_data(0.5, 2.0, true);
+        w.note_data(0.3, 0.0, false);
+        let mut c = ClusterClock::new();
+        c.advance_parallel(&[w]);
+        assert_eq!(c.data_hidden, 0.5);
+        assert_eq!(c.data_exposed, 0.3);
+        assert_eq!(c.seconds, 2.3);
+        let mut d = ClusterClock::new();
+        d.absorb(&c);
+        assert_eq!(d.data_hidden, 0.5);
+        assert_eq!(d.data_exposed, 0.3);
+        assert_eq!(d.seconds, 2.3);
     }
 
     #[test]

@@ -21,6 +21,11 @@ pub use clock::ClusterClock;
 pub use device::DeviceModel;
 pub use network::NetModel;
 
+/// Host-side input assembly (gather + augment) cost per example — the
+/// coordinator work the prefetcher hides behind device compute. Roughly a
+/// 3 KB image copy plus flip/shift/cutout on a modern core.
+pub const HOST_ASSEMBLY_PER_EXAMPLE: f64 = 5.0e-7;
+
 /// Everything needed to price an experiment on the virtual cluster.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -30,6 +35,8 @@ pub struct CostModel {
     pub flops_fwd_per_example: u64,
     /// model size in bytes (gradient all-reduce message)
     pub param_bytes: u64,
+    /// host batch-assembly seconds per example (input pipeline)
+    pub host_assembly_per_example: f64,
 }
 
 impl CostModel {
@@ -39,6 +46,7 @@ impl CostModel {
             net,
             flops_fwd_per_example: manifest.flops_fwd_per_example,
             param_bytes: manifest.param_bytes(),
+            host_assembly_per_example: HOST_ASSEMBLY_PER_EXAMPLE,
         }
     }
 
@@ -56,6 +64,11 @@ impl CostModel {
     /// Gradient ring all-reduce across `workers` devices.
     pub fn allreduce_time(&self, workers: usize) -> f64 {
         self.net.ring_allreduce(self.param_bytes, workers)
+    }
+
+    /// Host input assembly (gather + augment) of one step's `examples`.
+    pub fn assembly_time(&self, examples: usize) -> f64 {
+        examples as f64 * self.host_assembly_per_example
     }
 }
 
@@ -90,6 +103,9 @@ mod tests {
         assert!(cm.allreduce_time(8) > cm.allreduce_time(2));
         // eval cheaper than train
         assert!(cm.eval_step_time(64) < t64);
+        // assembly scales linearly and is far cheaper than device compute
+        assert_eq!(cm.assembly_time(128), 2.0 * cm.assembly_time(64));
+        assert!(cm.assembly_time(64) < cm.train_step_time(64));
     }
 
     #[test]
@@ -102,6 +118,7 @@ mod tests {
             net: NetModel::pcie_like(),
             flops_fwd_per_example: 250_000_000,
             param_bytes: 26_000_000,
+            host_assembly_per_example: HOST_ASSEMBLY_PER_EXAMPLE,
         };
         let ratio = cm.allreduce_time(8) / cm.train_step_time(512);
         assert!((0.2..0.6).contains(&ratio), "allreduce/step = {ratio}");

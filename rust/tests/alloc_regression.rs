@@ -1,11 +1,15 @@
-//! Allocation regression tests for the flat weight-space hot paths.
+//! Allocation regression tests for the flat weight-space and input
+//! hot paths.
 //!
 //! The pre-refactor `ParamSet::average` built a full `Vec<Vec<Tensor>>`
 //! copy of every worker's tensors before averaging — O(W·P) intermediate
 //! bytes for a P-parameter model and W workers. The flat arena's
 //! streaming `average_mt` allocates exactly one output arena; the
-//! in-place ring all-reduce allocates nothing at all. This file pins both
-//! with a counting global allocator.
+//! in-place ring all-reduce allocates nothing at all. Likewise,
+//! `augment::shift` used to clone every image it touched (`img.to_vec()`
+//! per augmented example); assembly now reuses one scratch buffer, so the
+//! steady-state augmented batch-assembly loop allocates ZERO bytes. This
+//! file pins all three with a counting global allocator.
 //!
 //! The file contains a single #[test] so no concurrent test can perturb
 //! the counters.
@@ -14,6 +18,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use swap::coordinator::allreduce;
+use swap::data::{AugStream, AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::{FlatParams, ParamLayout};
 
 struct CountingAlloc;
@@ -93,5 +98,27 @@ fn average_and_ring_allocation_budgets() {
         ring_bytes < 1024,
         "in-place ring allocated {ring_bytes}B across {ring_calls} calls; \
          the schedule must run without per-step snapshots"
+    );
+
+    // ---- augmented batch assembly: steady-state ZERO allocation --------
+    // (regression: shift() cloned every image with img.to_vec())
+    let ds = Generator::new(SynthSpec::for_preset(10, 16, 3)).sample(32, 10);
+    let mut batcher = Batcher::new(8, 16, AugmentSpec::cifar_default());
+    let mut hb = batcher.make_batch();
+    let key = AugStream { seed: 1, stream: 0 };
+    let idx: Vec<usize> = (0..8).collect();
+    // warmup grows the HostBatch buffers and the shift scratch once
+    for step in 0..3u64 {
+        batcher.assemble_step_into(&ds, &idx, key, step, 0, &mut hb);
+    }
+    let ((), asm_bytes, asm_calls) = measured(|| {
+        for step in 3..53u64 {
+            batcher.assemble_step_into(&ds, &idx, key, step, 0, &mut hb);
+        }
+    });
+    assert_eq!(
+        asm_bytes, 0,
+        "augmented assembly allocated {asm_bytes}B over {asm_calls} allocs; \
+         the hot loop must reuse the scratch + HostBatch buffers"
     );
 }

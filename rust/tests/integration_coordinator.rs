@@ -40,7 +40,16 @@ fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
         exec_batch: 8,
         bn_batches: 2,
         threads,
+        // the CI prefetch lane (SWAP_PREFETCH=1) turns the overlapped
+        // input pipeline on for this whole suite — results are identical
+        // by contract, only the data-time accounting moves
+        prefetch: swap::data::prefetch::default_prefetch(),
     }
+}
+
+/// Env with every knob explicit (the prefetch-vs-serial comparisons).
+fn env_with(f: &Fixture, threads: usize, prefetch: bool) -> TrainEnv<'_> {
+    TrainEnv { prefetch, ..env_threads(f, threads) }
 }
 
 /// Default env: real parallelism as configured for the process (the CI
@@ -435,6 +444,106 @@ fn swap_parallel_shards_bitwise_with_group_devices() {
 }
 
 #[test]
+fn prefetched_swap_bitwise_equals_serial_assembly() {
+    // THE input-pipeline acceptance property: with augmentation ON (the
+    // path that actually consumes randomness), a SWAP run with the
+    // double-buffered background producer must equal the serial
+    // assemble-then-compute path BITWISE — params, stats, and snapshot
+    // trails — for any thread count.
+    let f = fixture();
+    let aug_env = |threads: usize, prefetch: bool| TrainEnv {
+        augment: AugmentSpec::cifar_default(),
+        ..env_with(&f, threads, prefetch)
+    };
+    let mut cfg = tiny_swap_config(13);
+    cfg.workers = 4;
+    cfg.snapshot_every = Some(4);
+    let serial = run_swap(&aug_env(1, false), &cfg).unwrap();
+    let pre1 = run_swap(&aug_env(1, true), &cfg).unwrap();
+    let pre4 = run_swap(&aug_env(4, true), &cfg).unwrap();
+
+    for (tag, r) in [("threads=1", &pre1), ("threads=4", &pre4)] {
+        assert_eq!(
+            serial.final_params, r.final_params,
+            "{tag}: prefetched final params must equal serial assembly"
+        );
+        for (wa, wb) in serial.worker_params.iter().zip(&r.worker_params) {
+            assert_eq!(wa, wb, "{tag}: worker replicas must match bitwise");
+        }
+        assert_eq!(serial.final_stats.correct1, r.final_stats.correct1);
+        assert_eq!(
+            serial.final_stats.sum_loss.to_bits(),
+            r.final_stats.sum_loss.to_bits()
+        );
+        assert_eq!(serial.snapshots.len(), r.snapshots.len());
+        for (ta, tb) in serial.snapshots.iter().zip(&r.snapshots) {
+            assert_eq!(ta, tb, "{tag}: snapshot trails must match");
+        }
+    }
+
+    // the modeled clock accounts data time differently — that is the
+    // point: serial assembly sits on the critical path, the prefetched
+    // pipeline hides it behind compute
+    assert!(serial.clock.data_exposed > 0.0, "serial input must be exposed");
+    assert_eq!(serial.clock.data_hidden, 0.0);
+    assert!(pre4.clock.data_hidden > 0.0, "prefetched input must hide");
+    assert_eq!(pre4.clock.data_exposed, 0.0, "tiny batches fit the budget");
+    assert!(pre4.clock.seconds < serial.clock.seconds);
+    // and the accounting is execution-strategy independent: threads=1 and
+    // threads=4 prefetched runs model the identical cluster
+    assert_eq!(pre1.clock.seconds.to_bits(), pre4.clock.seconds.to_bits());
+    assert_eq!(pre1.clock.data_hidden.to_bits(), pre4.clock.data_hidden.to_bits());
+}
+
+#[test]
+fn local_sgd_prefetch_matches_serial() {
+    let f = fixture();
+    let cfg = LocalSgdConfig {
+        devices: 2,
+        sync_epochs: 1,
+        sync_sched: Schedule::Constant(0.08),
+        local_epochs: 1,
+        local_sched: Schedule::Constant(0.02),
+        h_steps: 4,
+        seed: 33,
+    };
+    let a = run_local_sgd(&env_with(&f, 1, false), &cfg).unwrap();
+    let b = run_local_sgd(&env_with(&f, 4, true), &cfg).unwrap();
+    assert_eq!(a.params, b.params, "prefetched local SGD must match serial bitwise");
+    assert_eq!(a.sync_events, b.sync_events);
+    assert_eq!(a.outcome.test_acc1, b.outcome.test_acc1);
+    assert!(a.outcome.cluster_seconds >= b.outcome.cluster_seconds);
+}
+
+#[test]
+fn recompute_bn_errors_on_empty_dataset() {
+    // regression: the wrap-around order fill used to spin forever when
+    // train.n == 0 — it must be a clean error now
+    let engine = NativeBackend::tiny();
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 5));
+    let train = gen.sample(0, 10);
+    let test = gen.sample(8, 11);
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    let env = TrainEnv {
+        engine: &engine,
+        cost: &cost,
+        train: &train,
+        test: &test,
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+        threads: 1,
+        prefetch: false,
+    };
+    let params = ParamSet::init(&m, 3);
+    let mut clock = ClusterClock::new();
+    let err = env.recompute_bn(&params, 3, &mut clock, false);
+    assert!(err.is_err(), "empty training set must error, not hang");
+    assert!(err.unwrap_err().to_string().contains("empty"));
+}
+
+#[test]
 fn evaluate_covers_ragged_final_batch() {
     // n_test = 32 isn't interesting (divisible); build a 27-example test
     // set: examples must be 27, not floor(27/8)*8 = 24
@@ -453,6 +562,7 @@ fn evaluate_covers_ragged_final_batch() {
         exec_batch: 8,
         bn_batches: 2,
         threads: 1,
+        prefetch: false,
     };
     let params = ParamSet::init(&m, 3);
     let mut clock = ClusterClock::new();

@@ -201,6 +201,7 @@ fn train_env_eval_and_bn_recompute() {
         exec_batch: 8,
         bn_batches: 2,
         threads: 1,
+        prefetch: false,
     };
     let params = ParamSet::init(&m, 1);
     let mut clock = swap::sim::ClusterClock::new();
