@@ -1,0 +1,129 @@
+//! Blocked-GEMM smoke bench: GFLOP/s per ResNet9s conv shape (the paper's
+//! width-64 CIFAR net), blocked-vs-reference at threads 1 and 4, plus the
+//! fused im2col-packing conv path. Emits `BENCH_gemm.json` (and a copy
+//! under results/) — the compute baseline of the perf trajectory — and
+//! asserts blocked-vs-reference BITWISE parity on every shape along the
+//! way.
+//! Run: cargo bench --bench gemm
+
+use swap::bench::time_once;
+use swap::runtime::native::gemm::{conv3x3_into, matmul_into, GemmScratch};
+use swap::runtime::native::kernels::{im2col, matmul_reference};
+use swap::runtime::native::model::{conv_layers, Dims};
+use swap::util::{Json, Result};
+
+const BATCH: usize = 8;
+const THREADS_PAR: usize = 4;
+
+fn wave(n: usize, f: f32) -> Vec<f32> {
+    (0..n).map(|i| (i as f32 * f + 0.2).sin() * 0.9).collect()
+}
+
+fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// Best-of-`runs` wall seconds for `f`.
+fn best_of(runs: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs {
+        let (s, ()) = time_once(&mut f);
+        best = best.min(s);
+    }
+    best
+}
+
+fn main() -> Result<()> {
+    // the paper's DAWNBench ResNet9s: width 64 on 32x32 images
+    let d = Dims { width: 64, num_classes: 10, image_size: 32 };
+    let mut scratch = GemmScratch::default();
+    let mut rows = Vec::new();
+    println!(
+        "blocked GEMM vs reference, ResNet9s width {} image {} batch {BATCH}:",
+        d.width, d.image_size
+    );
+    for (name, cin, cout, side) in conv_layers(&d) {
+        let (m, k, n) = (BATCH * side * side, 9 * cin, cout);
+        let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        // the conv input image (for the fused-packing path) and its
+        // materialized patch matrix (the reference operand)
+        let x = wave(BATCH * side * side * cin, 0.37);
+        let patches = im2col(&x, BATCH, side, side, cin, 1);
+        let wts = wave(k * n, 0.73);
+
+        // warmup (also the parity baseline), then the same best-of
+        // harness as the blocked tier so the speedup is apples-to-apples
+        let want = matmul_reference(&patches, &wts, m, k, n, 1);
+        let want_tn = matmul_reference(&patches, &wts, m, k, n, THREADS_PAR);
+        assert_bitwise(&want_tn, &want, &format!("{name}: reference t{THREADS_PAR} vs t1"));
+        let ref_t1_s = best_of(2, || {
+            matmul_reference(&patches, &wts, m, k, n, 1);
+        });
+        let ref_tn_s = best_of(2, || {
+            matmul_reference(&patches, &wts, m, k, n, THREADS_PAR);
+        });
+
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(&mut out, &patches, &wts, m, k, n, 1, &mut scratch);
+        assert_bitwise(&out, &want, &format!("{name}: blocked t1 vs reference"));
+        let blk_t1_s = best_of(3, || {
+            matmul_into(&mut out, &patches, &wts, m, k, n, 1, &mut scratch)
+        });
+        matmul_into(&mut out, &patches, &wts, m, k, n, THREADS_PAR, &mut scratch);
+        assert_bitwise(&out, &want, &format!("{name}: blocked t{THREADS_PAR} vs reference"));
+        let blk_tn_s = best_of(3, || {
+            matmul_into(&mut out, &patches, &wts, m, k, n, THREADS_PAR, &mut scratch)
+        });
+
+        // fused packing: conv straight from the NHWC image
+        conv3x3_into(&mut out, &x, BATCH, side, side, cin, &wts, n, THREADS_PAR, &mut scratch);
+        assert_bitwise(&out, &want, &format!("{name}: fused conv vs reference"));
+        let fused_tn_s = best_of(3, || {
+            conv3x3_into(&mut out, &x, BATCH, side, side, cin, &wts, n, THREADS_PAR, &mut scratch)
+        });
+
+        let speedup_tn = ref_tn_s / blk_tn_s.max(1e-12);
+        println!(
+            "  {name:<7} m={m:<6} k={k:<5} n={n:<4} | ref {:.2}/{:.2} GF/s | \
+             blocked {:.2}/{:.2} GF/s | fused {:.2} GF/s | speedup(t{THREADS_PAR}) {speedup_tn:.2}x",
+            gflop / ref_t1_s,
+            gflop / ref_tn_s,
+            gflop / blk_t1_s,
+            gflop / blk_tn_s,
+            gflop / fused_tn_s,
+        );
+        rows.push(Json::obj(vec![
+            ("layer", Json::str(name)),
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+            ("gflop", Json::Num(gflop)),
+            ("ref_t1_gflops", Json::Num(gflop / ref_t1_s)),
+            ("ref_tn_gflops", Json::Num(gflop / ref_tn_s)),
+            ("blocked_t1_gflops", Json::Num(gflop / blk_t1_s)),
+            ("blocked_tn_gflops", Json::Num(gflop / blk_tn_s)),
+            ("fused_conv_tn_gflops", Json::Num(gflop / fused_tn_s)),
+            ("speedup_t1", Json::Num(ref_t1_s / blk_t1_s.max(1e-12))),
+            ("speedup_tn", Json::Num(speedup_tn)),
+            ("bitwise_identical", Json::Bool(true)), // asserted above
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("gemm_microkernels")),
+        ("batch", Json::Num(BATCH as f64)),
+        ("width", Json::Num(d.width as f64)),
+        ("image_size", Json::Num(d.image_size as f64)),
+        ("threads_parallel", Json::Num(THREADS_PAR as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_gemm.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_gemm.json", &json)?;
+    println!("wrote BENCH_gemm.json");
+    Ok(())
+}

@@ -1,14 +1,20 @@
 //! Sequential-vs-parallel smoke bench: the same SWAP configuration (W=4
-//! phase-2 workers) at `threads=1` and `threads=N`, end to end. Emits
-//! `BENCH_parallel.json` (and a copy under results/) with both wall times
-//! and verifies the acceptance property along the way: the two runs must
-//! produce BITWISE-identical final parameters.
+//! phase-2 workers) at `threads=1` and `threads=N`, end to end, plus a
+//! dawnbench-shaped single-step row (fused train step on a width-16
+//! ResNet9s over 32x32 images — the end-to-end step time the blocked
+//! GEMM + workspace path is accountable for). Emits `BENCH_parallel.json`
+//! (and a copy under results/) with all wall times and verifies the
+//! acceptance property along the way: the two SWAP runs must produce
+//! BITWISE-identical final parameters.
 //! Run: cargo bench --bench parallel_scaling
 
 use swap::bench::time_once;
 use swap::config::preset;
 use swap::coordinator::{parallel, run_swap};
+use swap::data::{AugStream, AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::experiments::Lab;
+use swap::model::ParamSet;
+use swap::runtime::{Backend, NativeBackend, NativeSpec};
 use swap::util::{Json, Result};
 
 fn run_at(threads: usize) -> Result<(f64, swap::coordinator::SwapResult)> {
@@ -23,6 +29,39 @@ fn run_at(threads: usize) -> Result<(f64, swap::coordinator::SwapResult)> {
     let lab = Lab::new(cfg)?;
     let (secs, r) = time_once(|| run_swap(&lab.env(), &lab.swap_arm(lab.cfg.seed)));
     Ok((secs, r?))
+}
+
+/// Best-of-3 fused train-step seconds on a dawnbench-shaped native model.
+fn dawnbench_step(threads: usize) -> Result<(f64, f64)> {
+    const WIDTH: usize = 16;
+    const IMAGE: usize = 32;
+    const BATCH: usize = 32;
+    let engine = NativeBackend::new(
+        NativeSpec::new("dawnbench", WIDTH, 10, IMAGE)
+            .with_batches(&[BATCH])
+            .with_threads(threads),
+    )?;
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(10, IMAGE, 1));
+    let ds = gen.sample(2 * BATCH, 10);
+    let mut batcher = Batcher::new(BATCH, IMAGE, AugmentSpec::cifar_default());
+    let idx: Vec<usize> = (0..BATCH).collect();
+    let hb = batcher.assemble_step(&ds, &idx, AugStream { seed: 0, stream: 0 }, 0, 0);
+    let mut params = ParamSet::init(&m, 0);
+    let mut mom = params.zeros_like();
+    // warmup builds the engine workspace + packed panels
+    engine.train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)?;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let (s, r) = time_once(|| {
+            engine.train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
+        });
+        r?;
+        best = best.min(s);
+    }
+    // fwd+bwd ~ 3x forward FLOPs: the usual training-step accounting
+    let gflop = 3.0 * m.flops_fwd_per_example as f64 * BATCH as f64 / 1e9;
+    Ok((best, gflop / best))
 }
 
 fn main() -> Result<()> {
@@ -41,6 +80,15 @@ fn main() -> Result<()> {
         "threads={threads} must produce bitwise-identical final params"
     );
 
+    let (db_seq_s, db_seq_gflops) = dawnbench_step(1)?;
+    let (db_par_s, db_par_gflops) = dawnbench_step(threads)?;
+    println!(
+        "dawnbench step (w16, 32x32, B=32): threads=1 {:.1}ms ({db_seq_gflops:.2} GF/s) | \
+         threads={threads} {:.1}ms ({db_par_gflops:.2} GF/s)",
+        db_seq_s * 1e3,
+        db_par_s * 1e3,
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("swap_parallel_scaling".to_string())),
         ("workers", Json::Num(4.0)),
@@ -52,6 +100,16 @@ fn main() -> Result<()> {
         ("bitwise_identical", Json::Bool(identical)),
         ("final_acc_sequential", Json::Num(seq.final_stats.accuracy1())),
         ("final_acc_parallel", Json::Num(par.final_stats.accuracy1())),
+        ("dawnbench_step_width", Json::Num(16.0)),
+        ("dawnbench_step_batch", Json::Num(32.0)),
+        ("dawnbench_step_threads1_seconds", Json::Num(db_seq_s)),
+        ("dawnbench_step_threadsN_seconds", Json::Num(db_par_s)),
+        ("dawnbench_step_threads1_gflops", Json::Num(db_seq_gflops)),
+        ("dawnbench_step_threadsN_gflops", Json::Num(db_par_gflops)),
+        (
+            "dawnbench_step_speedup",
+            Json::Num(db_seq_s / db_par_s.max(1e-12)),
+        ),
     ])
     .to_string_pretty();
     std::fs::write("BENCH_parallel.json", &json)?;

@@ -54,6 +54,19 @@ pub fn gate(threads: usize, per_item_work: usize) -> usize {
     }
 }
 
+/// Per-chunk spawn gate: the worker count such that every spawned thread
+/// gets at least `min_work` of `total_work`. The old all-or-nothing gate
+/// spawned the full `threads` once *total* work crossed the threshold, so
+/// a tiny-N kernel (the 8c -> classes head matmul) could fan out into
+/// threads that each did sub-threshold work and lost the spawn cost.
+/// Purely a wall-time knob: results never depend on the worker count.
+pub fn gate_per_chunk(threads: usize, total_work: usize, min_work: usize) -> usize {
+    if threads <= 1 {
+        return 1;
+    }
+    (total_work / min_work.max(1)).clamp(1, threads)
+}
+
 /// Default worker-thread count: the `SWAP_THREADS` environment variable if
 /// set (CI's parallel lane), else `std::thread::available_parallelism()`.
 pub fn default_threads() -> usize {
@@ -145,6 +158,58 @@ pub fn parallel_row_chunks<T: Send>(
         for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
             let fr = &f;
             s.spawn(move || fr(ci * per, chunk));
+        }
+    });
+}
+
+/// [`parallel_row_chunks`] with a per-worker scratch: chunk `ci` runs with
+/// exclusive access to `scratch[ci]` (the blocked-GEMM packing buffers).
+/// Chunk row counts are rounded up to `granule` rows so tile-shaped work
+/// splits on tile boundaries. The scratch slice bounds the worker count
+/// (`workers <= scratch.len()`), and — as everywhere in this module — `f`
+/// must compute each row independently of the chunking, which keeps the
+/// result bitwise identical for every `threads` value.
+pub fn parallel_row_chunks_scratch<T: Send, S: Send>(
+    threads: usize,
+    out: &mut [T],
+    row_len: usize,
+    granule: usize,
+    scratch: &mut [S],
+    f: impl Fn(usize, &mut [T], &mut S) + Sync,
+) {
+    if out.is_empty() || row_len == 0 {
+        return;
+    }
+    assert_eq!(out.len() % row_len, 0, "buffer not a whole number of rows");
+    assert!(!scratch.is_empty(), "need at least one scratch slot");
+    let rows = out.len() / row_len;
+    let g = granule.max(1);
+    let max_chunks = (rows + g - 1) / g;
+    let workers = if in_parallel_region() {
+        1
+    } else {
+        threads
+            .min(max_chunks)
+            .min(scratch.len())
+            .min(MAX_SPAWN)
+            .max(1)
+    };
+    if workers <= 1 {
+        f(0, out, &mut scratch[0]);
+        return;
+    }
+    let per = ((rows + workers - 1) / workers + g - 1) / g * g;
+    std::thread::scope(|s| {
+        for (ci, (chunk, sc)) in out
+            .chunks_mut(per * row_len)
+            .zip(scratch.iter_mut())
+            .enumerate()
+        {
+            let fr = &f;
+            s.spawn(move || {
+                IN_PARALLEL_REGION.with(|c| c.set(true));
+                fr(ci * per, chunk, sc)
+            });
         }
     });
 }
@@ -263,6 +328,37 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn per_chunk_gate_scales_with_work() {
+        // below one chunk of work: sequential
+        assert_eq!(gate_per_chunk(8, 100, 1000), 1);
+        // enough for exactly three chunks
+        assert_eq!(gate_per_chunk(8, 3000, 1000), 3);
+        // work for more chunks than threads: capped
+        assert_eq!(gate_per_chunk(4, 100_000, 1000), 4);
+        assert_eq!(gate_per_chunk(1, 100_000, 1000), 1);
+    }
+
+    #[test]
+    fn row_chunks_scratch_granule_and_exclusive_scratch() {
+        for threads in [1, 2, 3, 8] {
+            let mut buf = vec![0u32; 21 * 2]; // 21 rows of 2
+            let mut scratch = vec![0usize; 8];
+            parallel_row_chunks_scratch(threads, &mut buf, 2, 4, &mut scratch, |r0, chunk, s| {
+                // granule 4: every chunk starts on a multiple of 4 rows
+                assert_eq!(r0 % 4, 0);
+                for (li, row) in chunk.chunks_mut(2).enumerate() {
+                    row.fill((r0 + li) as u32 + 1);
+                }
+                *s += chunk.len() / 2;
+            });
+            let want: Vec<u32> = (0..21).flat_map(|r| [r + 1; 2]).collect();
+            assert_eq!(buf, want, "threads={threads}");
+            let covered: usize = scratch.iter().sum();
+            assert_eq!(covered, 21, "threads={threads}");
+        }
     }
 
     #[test]

@@ -29,7 +29,9 @@ use crate::util::Result;
 /// engine across OS threads (phase-2 workers, phase-1 device shards run
 /// concurrently — see `coordinator::parallel`), so any interior state must
 /// be thread-safe (the PJRT engine guards its executable cache with a
-/// mutex; the native backend is stateless after construction).
+/// mutex; the native backend keeps a mutex-guarded pool of kernel
+/// workspaces — each concurrent caller pops its own, so calls never
+/// contend inside a step).
 pub trait Backend: Send + Sync {
     /// Short backend identifier ("native", "xla") for logs.
     fn name(&self) -> &'static str;

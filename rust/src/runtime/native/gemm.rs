@@ -1,0 +1,587 @@
+//! Cache-blocked, register-tiled GEMM micro-kernels with panel packing —
+//! the production matmul family of the native backend.
+//!
+//! ## Why this is fast
+//!
+//! The reference kernels in `super::kernels` (`matmul_reference` et al.)
+//! walk the operands in place with a branchy scalar ikj loop: every inner
+//! iteration re-derives slice bounds, tests `av == 0.0` (which defeats
+//! vectorization on dense data) and streams the full B matrix per output
+//! row. The blocked path instead:
+//!
+//! * packs the left operand into `MR`-wide, k-major **A panels** and the
+//!   right operand into `NR`-wide, k-major **B panels**, so the micro-
+//!   kernel reads two contiguous streams;
+//! * computes an `MR x NR` register tile per output block with a straight
+//!   (branch-free) multiply-add loop the auto-vectorizer can lower to SIMD;
+//! * blocks the reduction dimension at `KC` and the packed rows at `MC` so
+//!   the panels live in L1/L2 across the sweep.
+//!
+//! The im2col patch matrix of the 3x3 convolutions is never materialized:
+//! [`ASrc::Im2col`] / [`ASrc::Im2colCols`] pack conv patches straight from
+//! the NHWC image into the A panels (forward `patches @ W` and backward
+//! `patchesᵀ @ dU` respectively), skipping the (B·H·W, 9·C)
+//! materialize-then-repack round trip.
+//!
+//! ## Why it is still bitwise deterministic
+//!
+//! Every output element is an f32 accumulation chain that starts at 0.0
+//! and adds `a[i][p] * b[p][j]` in ascending-`p` order — exactly the
+//! per-element order of the reference kernels. Tiling never reorders a
+//! chain: the first `KC` block initializes the register tile from zero,
+//! later blocks reload the partial result (f32 store/load is exact) and
+//! keep adding in ascending `p` order. Threads partition **output rows
+//! only** (the reduction is never split), so `threads = N` is bitwise
+//! identical to `threads = 1`, and the whole family is bitwise identical
+//! to the reference kernels on finite inputs (the reference's
+//! `av == 0.0` skip only diverges when B holds NaN/Inf — pinned by
+//! `rust/tests/gemm_oracle.rs`).
+//!
+//! All entry points are `*_into`: outputs and packing buffers come from
+//! the caller (the per-engine [`super::workspace::Workspace`]), so a
+//! steady-state call performs zero heap allocations.
+
+use crate::coordinator::parallel;
+
+/// Register micro-tile rows (output rows per tile).
+pub const MR: usize = 8;
+/// Register micro-tile columns (output columns per tile).
+pub const NR: usize = 8;
+/// Packed row-block height: `MC x KC` A panels are packed per thread.
+pub const MC: usize = 64;
+/// Reduction block: panels cover `KC` of the k dimension at a time.
+pub const KC: usize = 256;
+
+/// Minimum multiply-add ops per worker before the row partition spawns
+/// another thread (wall-time knob only; results never depend on it).
+const GEMM_MIN_WORK: usize = 1 << 18;
+
+/// Per-thread packing scratch (the A panels of one row chunk).
+#[derive(Default)]
+pub struct PackBuf {
+    a: Vec<f32>,
+}
+
+/// Call-shared GEMM scratch owned by the engine workspace: one packed
+/// B-panel buffer (read by every worker) plus one [`PackBuf`] per worker.
+/// Buffers grow to the largest shape seen and are then reused verbatim.
+#[derive(Default)]
+pub struct GemmScratch {
+    bpack: Vec<f32>,
+    packs: Vec<PackBuf>,
+}
+
+/// Left operand of a blocked GEMM: how to pack `MR`-wide k-major A panels.
+#[derive(Clone, Copy)]
+pub enum ASrc<'a> {
+    /// Dense row-major `(m, lda)` matrix; element `(i, p) = a[i * lda + p]`.
+    Rows { a: &'a [f32], lda: usize },
+    /// Dense row-major `(k, lda)` matrix read transposed; element
+    /// `(i, p) = a[p * lda + i]` (the `matmul_tn` left operand).
+    Cols { a: &'a [f32], lda: usize },
+    /// Virtual im2col patch matrix of a 3x3 SAME conv over NHWC `x`:
+    /// `(b*h*w, 9*c)`, element `(row, p)` = patch channel `p` of output
+    /// pixel `row` (zero at the padding taps).
+    Im2col { x: &'a [f32], b: usize, h: usize, w: usize, c: usize },
+    /// The transposed virtual patch matrix: element `(i, p)` = patch
+    /// channel `i` of output pixel `p` (the dW left operand).
+    Im2colCols { x: &'a [f32], b: usize, h: usize, w: usize, c: usize },
+}
+
+/// Right operand: how to pack `NR`-wide k-major B panels.
+#[derive(Clone, Copy)]
+pub enum BSrc<'a> {
+    /// Dense row-major `(k, n)`; element `(p, j) = b[p * n + j]`.
+    Rows { b: &'a [f32] },
+    /// Dense row-major `(n, k)` read transposed; element
+    /// `(p, j) = b[j * k + p]` (the `matmul_nt` right operand).
+    Cols { b: &'a [f32] },
+}
+
+/// out(m,n) = a(m,k) @ b(k,n), blocked. Bitwise equal to
+/// `kernels::matmul_reference` on finite inputs, for every `threads`.
+pub fn matmul_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_into(
+        out,
+        ASrc::Rows { a, lda: k },
+        BSrc::Rows { b },
+        m,
+        k,
+        n,
+        threads,
+        scratch,
+    );
+}
+
+/// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul.
+pub fn matmul_tn_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    gemm_into(
+        out,
+        ASrc::Cols { a, lda: m },
+        BSrc::Rows { b },
+        m,
+        r,
+        n,
+        threads,
+        scratch,
+    );
+}
+
+/// out(m,n) = a(m,k) @ bᵀ where b is (n,k) — the dX matmul.
+pub fn matmul_nt_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm_into(
+        out,
+        ASrc::Rows { a, lda: k },
+        BSrc::Cols { b },
+        m,
+        k,
+        n,
+        threads,
+        scratch,
+    );
+}
+
+/// Fused 3x3 SAME convolution forward: out(b*h*w, cout) = im2col(x) @ w,
+/// packing patches straight from the NHWC image (no patch matrix).
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_into(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    weights: &[f32],
+    cout: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(weights.len(), 9 * c * cout);
+    gemm_into(
+        out,
+        ASrc::Im2col { x, b, h, w, c },
+        BSrc::Rows { b: weights },
+        b * h * w,
+        9 * c,
+        cout,
+        threads,
+        scratch,
+    );
+}
+
+/// Fused conv weight gradient: out(9*c, cout) = im2col(x)ᵀ @ du, packing
+/// transposed patches straight from the NHWC image.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_dw_into(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    du: &[f32],
+    cout: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(du.len(), b * h * w * cout);
+    gemm_into(
+        out,
+        ASrc::Im2colCols { x, b, h, w, c },
+        BSrc::Rows { b: du },
+        9 * c,
+        b * h * w,
+        cout,
+        threads,
+        scratch,
+    );
+}
+
+/// The shared blocked driver: pack B once (before any thread is spawned),
+/// partition output rows across workers, and run the packed micro-kernel
+/// sweep per chunk with that worker's own A-panel scratch.
+#[allow(clippy::too_many_arguments)]
+fn gemm_into(
+    out: &mut [f32],
+    a: ASrc<'_>,
+    b: BSrc<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        return;
+    }
+    pack_b(b, k, n, threads, &mut scratch.bpack);
+    let workers = parallel::gate_per_chunk(threads, m * k * n, GEMM_MIN_WORK);
+    if scratch.packs.len() < workers.max(1) {
+        scratch.packs.resize_with(workers.max(1), PackBuf::default);
+    }
+    let bpack = &scratch.bpack[..];
+    parallel::parallel_row_chunks_scratch(
+        workers,
+        out,
+        n,
+        MR,
+        &mut scratch.packs,
+        |row0, chunk, pack| gemm_chunk(a, bpack, row0, k, n, chunk, pack),
+    );
+}
+
+/// One worker's share: rows `[row0, row0 + chunk.len()/n)` of the output.
+fn gemm_chunk(
+    a: ASrc<'_>,
+    bpack: &[f32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    chunk: &mut [f32],
+    pack: &mut PackBuf,
+) {
+    let rows = chunk.len() / n;
+    let nstrips = (n + NR - 1) / NR;
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        let mut ic = 0;
+        while ic < rows {
+            let mc = MC.min(rows - ic);
+            pack_a(a, row0 + ic, mc, pc, kc, &mut pack.a);
+            let groups = (mc + MR - 1) / MR;
+            for g in 0..groups {
+                let ir = g * MR;
+                let mr = MR.min(mc - ir);
+                let apanel = &pack.a[g * kc * MR..(g + 1) * kc * MR];
+                for s in 0..nstrips {
+                    let j0 = s * NR;
+                    let nr = NR.min(n - j0);
+                    let bpanel = &bpack[s * k * NR + pc * NR..s * k * NR + (pc + kc) * NR];
+                    micro_kernel(kc, apanel, bpanel, chunk, ic + ir, j0, n, mr, nr, pc == 0);
+                }
+            }
+            ic += mc;
+        }
+        pc += kc;
+    }
+}
+
+/// The register micro-kernel: an `MR x NR` accumulator tile swept over one
+/// `kc`-long panel pair. `first` selects init-from-zero (first k block)
+/// vs reload of the stored partial (later blocks); either way each
+/// element's chain is ascending-k from 0.0, the reference order.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    kc: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    chunk: &mut [f32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    nr: usize,
+    first: bool,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if !first {
+        for (i, arow) in acc.iter_mut().enumerate().take(mr) {
+            let base = (crow + i) * n + j0;
+            arow[..nr].copy_from_slice(&chunk[base..base + nr]);
+        }
+    }
+    for p in 0..kc {
+        let av = &apanel[p * MR..p * MR + MR];
+        let bv = &bpanel[p * NR..p * NR + NR];
+        for (i, arow) in acc.iter_mut().enumerate() {
+            let ai = av[i];
+            for (j, cell) in arow.iter_mut().enumerate() {
+                *cell += ai * bv[j];
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let base = (crow + i) * n + j0;
+        chunk[base..base + nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// Pack rows `[row0, row0 + mc)` x reduction `[pc, pc + kc)` of the left
+/// operand into `MR`-row groups, k-major (`buf[g][p * MR + i]`), zero-
+/// padding the ragged last group so the micro-kernel reads full tiles.
+fn pack_a(a: ASrc<'_>, row0: usize, mc: usize, pc: usize, kc: usize, buf: &mut Vec<f32>) {
+    let groups = (mc + MR - 1) / MR;
+    buf.clear();
+    buf.resize(groups * kc * MR, 0.0);
+    match a {
+        ASrc::Rows { a, lda } => {
+            for g in 0..groups {
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kc * MR..(g + 1) * kc * MR];
+                for il in 0..mr {
+                    let row = row0 + g * MR + il;
+                    let src = &a[row * lda + pc..row * lda + pc + kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        dst[p * MR + il] = v;
+                    }
+                }
+            }
+        }
+        ASrc::Cols { a, lda } => {
+            for g in 0..groups {
+                let i0 = row0 + g * MR;
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kc * MR..(g + 1) * kc * MR];
+                for p in 0..kc {
+                    let src = &a[(pc + p) * lda + i0..(pc + p) * lda + i0 + mr];
+                    dst[p * MR..p * MR + mr].copy_from_slice(src);
+                }
+            }
+        }
+        ASrc::Im2col { x, b: _, h, w, c } => {
+            for g in 0..groups {
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kc * MR..(g + 1) * kc * MR];
+                for il in 0..mr {
+                    let r = row0 + g * MR + il;
+                    let bi = r / (h * w);
+                    let rem = r % (h * w);
+                    let y = rem / w;
+                    let xx = rem % w;
+                    // walk the (dy, dx, ci) taps overlapping [pc, pc+kc)
+                    let mut p = pc;
+                    while p < pc + kc {
+                        let tap = p / c;
+                        let ci0 = p % c;
+                        let take = (c - ci0).min(pc + kc - p);
+                        let (dy, dxo) = (tap / 3, tap % 3);
+                        let iy = y + dy;
+                        let ix = xx + dxo;
+                        if iy >= 1 && iy <= h && ix >= 1 && ix <= w {
+                            let src = ((bi * h + iy - 1) * w + ix - 1) * c + ci0;
+                            for q in 0..take {
+                                dst[(p - pc + q) * MR + il] = x[src + q];
+                            }
+                        }
+                        p += take;
+                    }
+                }
+            }
+        }
+        ASrc::Im2colCols { x, b: _, h, w, c } => {
+            for g in 0..groups {
+                let i0 = row0 + g * MR;
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kc * MR..(g + 1) * kc * MR];
+                // per-lane tap offsets of patch columns i0..i0+mr
+                let mut dys = [0usize; MR];
+                let mut dxs = [0usize; MR];
+                let mut cis = [0usize; MR];
+                for il in 0..mr {
+                    let tap = (i0 + il) / c;
+                    dys[il] = tap / 3;
+                    dxs[il] = tap % 3;
+                    cis[il] = (i0 + il) % c;
+                }
+                for p in 0..kc {
+                    let r = pc + p;
+                    let bi = r / (h * w);
+                    let rem = r % (h * w);
+                    let y = rem / w;
+                    let xx = rem % w;
+                    let drow = &mut dst[p * MR..p * MR + MR];
+                    for il in 0..mr {
+                        let iy = y + dys[il];
+                        let ix = xx + dxs[il];
+                        if iy >= 1 && iy <= h && ix >= 1 && ix <= w {
+                            drow[il] = x[((bi * h + iy - 1) * w + ix - 1) * c + cis[il]];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack the right operand into `NR`-column strips, k-major per strip
+/// (`out[s][p * NR + jj]`), zero-padding the ragged last strip. Strips
+/// are independent, so the fill is split across workers (this matters
+/// for the dW GEMMs, where B = dU is the largest operand of the call);
+/// each strip's bytes are a pure function of `b`, so the packed panel is
+/// identical for every worker count.
+fn pack_b(b: BSrc<'_>, k: usize, n: usize, threads: usize, out: &mut Vec<f32>) {
+    let nstrips = (n + NR - 1) / NR;
+    out.clear();
+    out.resize(nstrips * k * NR, 0.0);
+    let workers = parallel::gate_per_chunk(threads, k * n, GEMM_MIN_WORK);
+    parallel::parallel_row_chunks(workers, &mut out[..], k * NR, |s0, chunk| {
+        for (ls, dst) in chunk.chunks_mut(k * NR).enumerate() {
+            let j0 = (s0 + ls) * NR;
+            let nr = NR.min(n - j0);
+            match b {
+                BSrc::Rows { b } => {
+                    for p in 0..k {
+                        dst[p * NR..p * NR + nr]
+                            .copy_from_slice(&b[p * n + j0..p * n + j0 + nr]);
+                    }
+                }
+                BSrc::Cols { b } => {
+                    for jj in 0..nr {
+                        let src = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+                        for (p, &v) in src.iter().enumerate() {
+                            dst[p * NR + jj] = v;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wave(n: usize, f: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * f).sin() * 1.3).collect()
+    }
+
+    /// Plain triple loop in the reference accumulation order.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    out[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive_over_odd_shapes() {
+        let mut scratch = GemmScratch::default();
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (8, 8, 8),
+            (9, 300, 17),
+            (70, 33, 9),
+            (130, 520, 12),
+        ] {
+            let a = wave(m * k, 0.37);
+            let b = wave(k * n, 0.73);
+            let want = naive(&a, &b, m, k, n);
+            for threads in [1, 2, 4] {
+                let mut out = vec![f32::NAN; m * n];
+                matmul_into(&mut out, &a, &b, m, k, n, threads, &mut scratch);
+                assert_eq!(out, want, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transposes() {
+        let mut scratch = GemmScratch::default();
+        let (r, m, n) = (41, 13, 11);
+        let a = wave(r * m, 0.51);
+        let b = wave(r * n, 0.29);
+        let mut at = vec![0.0f32; m * r];
+        for i in 0..r {
+            for j in 0..m {
+                at[j * r + i] = a[i * m + j];
+            }
+        }
+        let want = naive(&at, &b, m, r, n);
+        let mut out = vec![0.0f32; m * n];
+        matmul_tn_into(&mut out, &a, &b, r, m, n, 2, &mut scratch);
+        assert_eq!(out, want, "tn");
+
+        let (m2, k2, n2) = (17, 23, 9);
+        let a2 = wave(m2 * k2, 0.61);
+        let b2 = wave(n2 * k2, 0.43); // (n, k)
+        let mut bt = vec![0.0f32; k2 * n2];
+        for i in 0..n2 {
+            for j in 0..k2 {
+                bt[j * n2 + i] = b2[i * k2 + j];
+            }
+        }
+        let want = naive(&a2, &bt, m2, k2, n2);
+        let mut out = vec![0.0f32; m2 * n2];
+        matmul_nt_into(&mut out, &a2, &b2, m2, k2, n2, 3, &mut scratch);
+        assert_eq!(out, want, "nt");
+    }
+
+    #[test]
+    fn fused_conv_matches_materialized_patches() {
+        let mut scratch = GemmScratch::default();
+        let (b, h, w, c, cout) = (2usize, 5usize, 4usize, 3usize, 6usize);
+        let x = wave(b * h * w * c, 0.77);
+        let wts = wave(9 * c * cout, 0.31);
+        let patches = super::super::kernels::im2col(&x, b, h, w, c, 1);
+        let want = naive(&patches, &wts, b * h * w, 9 * c, cout);
+        let mut out = vec![0.0f32; b * h * w * cout];
+        conv3x3_into(&mut out, &x, b, h, w, c, &wts, cout, 2, &mut scratch);
+        assert_eq!(out, want, "fused conv fwd");
+
+        // dW: patchesᵀ @ du
+        let du = wave(b * h * w * cout, 0.23);
+        let mut pt = vec![0.0f32; 9 * c * b * h * w];
+        let (rr, mm) = (b * h * w, 9 * c);
+        for i in 0..rr {
+            for j in 0..mm {
+                pt[j * rr + i] = patches[i * mm + j];
+            }
+        }
+        let want = naive(&pt, &du, mm, rr, cout);
+        let mut out = vec![0.0f32; mm * cout];
+        conv3x3_dw_into(&mut out, &x, b, h, w, c, &du, cout, 2, &mut scratch);
+        assert_eq!(out, want, "fused conv dW");
+    }
+}

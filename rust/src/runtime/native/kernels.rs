@@ -1,6 +1,6 @@
-//! Pure-Rust kernels for the native backend: im2col 3x3 convolution as
-//! matmul, batch-norm train/eval (+ backward), max pooling, softmax
-//! cross-entropy and the Nesterov-SGD update.
+//! Pure-Rust kernels for the native backend: 3x3 convolution lowering
+//! (im2col/col2im), the matmul family, batch-norm train/eval (+ backward),
+//! max pooling, softmax cross-entropy and the Nesterov-SGD update.
 //!
 //! Each kernel is the host twin of a python reference oracle in
 //! `python/compile/kernels/ref.py` / `python/compile/model.py`;
@@ -11,40 +11,92 @@
 //! matrices, so convolution is `im2col` + one matmul — the same lowering
 //! the Pallas/MXU path uses.
 //!
-//! The heavy kernels (im2col/col2im, the matmul family, BN normalize/eval)
-//! take a `threads` argument and split their *output rows* across scoped
-//! worker threads (`coordinator::parallel`). Every output element is
-//! produced by exactly one thread with the sequential accumulation order,
-//! so results are bitwise identical for any `threads`; small problems
-//! (below `PAR_MIN_WORK`) stay on the calling thread to dodge spawn
-//! overhead.
+//! ## Two matmul tiers
+//!
+//! The production matmul family lives in [`super::gemm`]: cache-blocked,
+//! register-tiled, panel-packed, branch-free. The original branchy scalar
+//! ikj loops are kept here as `*_reference` oracles; on finite inputs the
+//! two tiers are **bitwise identical** (same per-element ascending-k
+//! accumulation chain — `rust/tests/gemm_oracle.rs` pins this over random
+//! and model-emitted shapes). The allocating `matmul`/`matmul_tn`/
+//! `matmul_nt` wrappers below route to the blocked tier; hot paths call
+//! the `gemm::*_into` entry points with workspace-owned buffers instead.
+//!
+//! The heavy kernels take a `threads` argument and split their *output
+//! rows* across scoped worker threads (`coordinator::parallel`). Every
+//! output element is produced by exactly one thread with the sequential
+//! accumulation order, so results are bitwise identical for any
+//! `threads`; the spawn gate is per-chunk — a thread is only spawned if
+//! its own share of the work exceeds `PAR_MIN_WORK`, so tiny kernels (the
+//! 8c -> classes head) never fan out.
+//!
+//! Most kernels come in two forms: an `*_into` variant writing into
+//! caller-owned buffers (what the zero-allocation model hot path uses)
+//! and an allocating convenience wrapper for tests and benches.
 
-use crate::coordinator::parallel::{parallel_row_chunks, parallel_row_chunks2};
+use super::gemm;
+use crate::coordinator::parallel::{
+    gate_per_chunk, parallel_row_chunks, parallel_row_chunks2,
+};
 
 pub const BN_EPS: f32 = 1e-5;
 
-/// Minimum per-kernel work (inner-loop ops) before threads are spawned:
-/// below this the spawn cost exceeds the compute. Tuned loosely — the
-/// result never depends on it, only the wall time.
+/// Minimum per-worker work (inner-loop ops) for the spawn gate: a worker
+/// thread is only worth spawning if its chunk exceeds this. Tuned loosely
+/// — the result never depends on it, only the wall time.
 const PAR_MIN_WORK: usize = 1 << 18;
 
-/// Effective worker count for a kernel invocation of `work` inner ops.
+/// Effective worker count for a kernel invocation of `work` inner ops:
+/// enough workers that each gets at least `PAR_MIN_WORK`, capped at the
+/// thread budget.
 fn par(threads: usize, work: usize) -> usize {
-    if threads > 1 && work >= PAR_MIN_WORK {
-        threads
-    } else {
-        1
-    }
+    gate_per_chunk(threads, work, PAR_MIN_WORK)
 }
 
 // ---------------------------------------------------------------------------
 // matmul family (f32, accumulate in f32; per-element adds in the same order
-// on every path so any thread count is bitwise reproducible)
+// on every path so any thread count — and either tier — is bitwise
+// reproducible)
 // ---------------------------------------------------------------------------
 
-/// out(m,n) = a(m,k) @ b(k,n); ikj loop order for cache locality, output
-/// rows split across `threads`.
+/// out(m,n) = a(m,k) @ b(k,n) via the blocked GEMM tier (allocating
+/// convenience wrapper; hot paths use `gemm::matmul_into`).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = gemm::GemmScratch::default();
+    gemm::matmul_into(&mut out, a, b, m, k, n, threads, &mut scratch);
+    out
+}
+
+/// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul,
+/// blocked tier.
+pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = gemm::GemmScratch::default();
+    gemm::matmul_tn_into(&mut out, a, b, r, m, n, threads, &mut scratch);
+    out
+}
+
+/// out(m,n) = a @ bᵀ where a is (m,k) and b is (n,k) — the dX matmul,
+/// blocked tier.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = gemm::GemmScratch::default();
+    gemm::matmul_nt_into(&mut out, a, b, m, k, n, threads, &mut scratch);
+    out
+}
+
+/// Reference oracle: the original branchy scalar ikj matmul (with the
+/// historical `av == 0.0` skip, which only diverges from the blocked
+/// tier on NaN/Inf inputs).
+pub fn matmul_reference(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -66,11 +118,18 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize
     out
 }
 
-/// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul.
-/// The reduction over `r` stays innermost-sequential per output row (adds
-/// in ascending `row` order, exactly the single-thread order); only the
-/// output rows are partitioned.
-pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize, threads: usize) -> Vec<f32> {
+/// Reference oracle for the dW matmul: out(m,n) = aᵀ @ b with a (r,m),
+/// b (r,n). The reduction over `r` stays innermost-sequential per output
+/// row (adds in ascending `row` order); only the output rows are
+/// partitioned.
+pub fn matmul_tn_reference(
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
     let mut out = vec![0.0f32; m * n];
@@ -93,8 +152,16 @@ pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize, threads: us
     out
 }
 
-/// out(m,n) = a @ bᵀ where a is (m,k) and b is (n,k) — the dX matmul.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+/// Reference oracle for the dX matmul: out(m,n) = a @ bᵀ with a (m,k),
+/// b (n,k).
+pub fn matmul_nt_reference(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
@@ -117,7 +184,11 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: us
 
 // ---------------------------------------------------------------------------
 // im2col / col2im for 3x3 SAME convolution (split across batch images —
-// each image's patch rows / input gradients are disjoint)
+// each image's patch rows / input gradients are disjoint). The forward
+// and dW GEMMs never materialize the patch matrix (gemm::ASrc::Im2col
+// packs panels straight from the image); im2col itself remains as the
+// oracle definition of that virtual matrix, and col2im as the backward
+// scatter of the (materialized) patch gradients.
 // ---------------------------------------------------------------------------
 
 /// (B,H,W,C) -> (B*H*W, 9*C) patches; patch channel order is (dy, dx, c)
@@ -162,48 +233,59 @@ pub fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize)
     out
 }
 
-/// Adjoint of `im2col`: scatter patch gradients (B*H*W, 9*C) back onto the
-/// input image gradient (B,H,W,C). Patches never cross image boundaries,
-/// so per-image partitioning scatters into disjoint output regions.
-pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
+/// Adjoint of `im2col` into a caller buffer: scatter patch gradients
+/// (B*H*W, 9*C) back onto the input image gradient (B,H,W,C). Patches
+/// never cross image boundaries, so per-image partitioning scatters into
+/// disjoint output regions.
+pub fn col2im_into(
+    dp: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    threads: usize,
+    dx: &mut [f32],
+) {
     debug_assert_eq!(dp.len(), b * h * w * 9 * c);
+    debug_assert_eq!(dx.len(), b * h * w * c);
     let per_in = h * w * c;
     let per_patch = h * w * 9 * c;
-    let mut dx = vec![0.0f32; b * per_in];
-    parallel_row_chunks(
-        par(threads, b * per_patch),
-        &mut dx,
-        per_in,
-        |img0, chunk| {
-            for (li, dimg) in chunk.chunks_mut(per_in).enumerate() {
-                let bi = img0 + li;
-                for y in 0..h {
-                    for xx in 0..w {
-                        let row = ((bi * h + y) * w + xx) * 9 * c;
-                        for dy in 0..3 {
-                            let iy = y + dy;
-                            if iy < 1 || iy > h {
+    parallel_row_chunks(par(threads, b * per_patch), dx, per_in, |img0, chunk| {
+        for (li, dimg) in chunk.chunks_mut(per_in).enumerate() {
+            dimg.fill(0.0);
+            let bi = img0 + li;
+            for y in 0..h {
+                for xx in 0..w {
+                    let row = ((bi * h + y) * w + xx) * 9 * c;
+                    for dy in 0..3 {
+                        let iy = y + dy;
+                        if iy < 1 || iy > h {
+                            continue;
+                        }
+                        let iy = iy - 1;
+                        for dx_off in 0..3 {
+                            let ix = xx + dx_off;
+                            if ix < 1 || ix > w {
                                 continue;
                             }
-                            let iy = iy - 1;
-                            for dx_off in 0..3 {
-                                let ix = xx + dx_off;
-                                if ix < 1 || ix > w {
-                                    continue;
-                                }
-                                let ix = ix - 1;
-                                let dst = (iy * w + ix) * c;
-                                let src = row + (dy * 3 + dx_off) * c;
-                                for ci in 0..c {
-                                    dimg[dst + ci] += dp[src + ci];
-                                }
+                            let ix = ix - 1;
+                            let dst = (iy * w + ix) * c;
+                            let src = row + (dy * 3 + dx_off) * c;
+                            for ci in 0..c {
+                                dimg[dst + ci] += dp[src + ci];
                             }
                         }
                     }
                 }
             }
-        },
-    );
+        }
+    });
+}
+
+/// Allocating wrapper over [`col2im_into`].
+pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; b * h * w * c];
+    col2im_into(dp, b, h, w, c, threads, &mut dx);
     dx
 }
 
@@ -215,19 +297,30 @@ pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize
 // ---------------------------------------------------------------------------
 
 /// Forward with batch statistics over `rows` = B*H*W samples of `c`
-/// channels. Returns (y, xhat, mean, var, invstd); `y` is pre-ReLU.
-pub fn bn_train(
+/// channels, into caller buffers. `y` is pre-ReLU.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_train_into(
     u: &[f32],
     gamma: &[f32],
     beta: &[f32],
     rows: usize,
     c: usize,
     threads: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    y: &mut [f32],
+    xhat: &mut [f32],
+    mean: &mut [f32],
+    var: &mut [f32],
+    invstd: &mut [f32],
+) {
     debug_assert_eq!(u.len(), rows * c);
+    debug_assert_eq!(y.len(), rows * c);
+    debug_assert_eq!(xhat.len(), rows * c);
+    debug_assert_eq!(mean.len(), c);
+    debug_assert_eq!(var.len(), c);
+    debug_assert_eq!(invstd.len(), c);
     let inv_n = 1.0 / rows as f32;
-    let mut mean = vec![0.0f32; c];
-    let mut var = vec![0.0f32; c];
+    mean.fill(0.0);
+    var.fill(0.0);
     for r in 0..rows {
         let urow = &u[r * c..(r + 1) * c];
         for (m, &v) in mean.iter_mut().zip(urow) {
@@ -239,7 +332,7 @@ pub fn bn_train(
     }
     for r in 0..rows {
         let urow = &u[r * c..(r + 1) * c];
-        for ((vv, &m), &v) in var.iter_mut().zip(&mean).zip(urow) {
+        for ((vv, &m), &v) in var.iter_mut().zip(mean.iter()).zip(urow) {
             let d = v - m;
             *vv += d * d;
         }
@@ -247,32 +340,57 @@ pub fn bn_train(
     for vv in var.iter_mut() {
         *vv *= inv_n;
     }
-    let invstd: Vec<f32> = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
-    let mut xhat = vec![0.0f32; rows * c];
-    let mut y = vec![0.0f32; rows * c];
+    for (s, &v) in invstd.iter_mut().zip(var.iter()) {
+        *s = 1.0 / (v + BN_EPS).sqrt();
+    }
+    let meanr: &[f32] = mean;
+    let invstdr: &[f32] = invstd;
     parallel_row_chunks2(
         par(threads, rows * c),
-        &mut xhat,
-        &mut y,
+        xhat,
+        y,
         c,
         c,
         |row0, cx, cy| {
             for (li, (xrow, yrow)) in cx.chunks_mut(c).zip(cy.chunks_mut(c)).enumerate() {
                 let r = row0 + li;
                 for ci in 0..c {
-                    let xh = (u[r * c + ci] - mean[ci]) * invstd[ci];
+                    let xh = (u[r * c + ci] - meanr[ci]) * invstdr[ci];
                     xrow[ci] = xh;
                     yrow[ci] = gamma[ci] * xh + beta[ci];
                 }
             }
         },
     );
+}
+
+/// Allocating wrapper over [`bn_train_into`]: returns
+/// (y, xhat, mean, var, invstd).
+#[allow(clippy::type_complexity)]
+pub fn bn_train(
+    u: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    c: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * c];
+    let mut xhat = vec![0.0f32; rows * c];
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    let mut invstd = vec![0.0f32; c];
+    bn_train_into(
+        u, gamma, beta, rows, c, threads, &mut y, &mut xhat, &mut mean, &mut var, &mut invstd,
+    );
     (y, xhat, mean, var, invstd)
 }
 
-/// Backward through train-mode batch norm. `dy` is the gradient w.r.t. the
-/// pre-ReLU output; returns (du, dgamma, dbeta).
-pub fn bn_train_bwd(
+/// Backward through train-mode batch norm, into caller buffers. `dy` is
+/// the gradient w.r.t. the pre-ReLU output; fills (du, dgamma, dbeta).
+/// `scale` is a c-length scratch for the per-channel factor.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_train_bwd_into(
     dy: &[f32],
     xhat: &[f32],
     invstd: &[f32],
@@ -280,10 +398,18 @@ pub fn bn_train_bwd(
     rows: usize,
     c: usize,
     threads: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    du: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    scale: &mut [f32],
+) {
     debug_assert_eq!(dy.len(), rows * c);
-    let mut dgamma = vec![0.0f32; c];
-    let mut dbeta = vec![0.0f32; c];
+    debug_assert_eq!(du.len(), rows * c);
+    debug_assert_eq!(dgamma.len(), c);
+    debug_assert_eq!(dbeta.len(), c);
+    debug_assert_eq!(scale.len(), c);
+    dgamma.fill(0.0);
+    dbeta.fill(0.0);
     for r in 0..rows {
         for ci in 0..c {
             let i = r * c + ci;
@@ -293,26 +419,79 @@ pub fn bn_train_bwd(
     }
     let inv_n = 1.0 / rows as f32;
     // du = gamma * invstd / N * (N*dy - dbeta - xhat * dgamma)
-    let scale: Vec<f32> = gamma
-        .iter()
-        .zip(invstd)
-        .map(|(g, s)| g * s * inv_n)
-        .collect();
+    for ((s, &g), &is) in scale.iter_mut().zip(gamma).zip(invstd) {
+        *s = g * is * inv_n;
+    }
     let n = rows as f32;
-    let mut du = vec![0.0f32; rows * c];
-    parallel_row_chunks(par(threads, rows * c), &mut du, c, |row0, chunk| {
+    let scaler: &[f32] = scale;
+    let dgammar: &[f32] = dgamma;
+    let dbetar: &[f32] = dbeta;
+    parallel_row_chunks(par(threads, rows * c), du, c, |row0, chunk| {
         for (li, drow) in chunk.chunks_mut(c).enumerate() {
             let r = row0 + li;
             for ci in 0..c {
                 let i = r * c + ci;
-                drow[ci] = scale[ci] * (n * dy[i] - dbeta[ci] - xhat[i] * dgamma[ci]);
+                drow[ci] = scaler[ci] * (n * dy[i] - dbetar[ci] - xhat[i] * dgammar[ci]);
             }
         }
     });
+}
+
+/// Allocating wrapper over [`bn_train_bwd_into`]: returns
+/// (du, dgamma, dbeta).
+pub fn bn_train_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    invstd: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    c: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut du = vec![0.0f32; rows * c];
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    let mut scale = vec![0.0f32; c];
+    bn_train_bwd_into(
+        dy, xhat, invstd, gamma, rows, c, threads, &mut du, &mut dgamma, &mut dbeta, &mut scale,
+    );
     (du, dgamma, dbeta)
 }
 
-/// Forward with externally supplied running statistics (evaluation mode).
+/// Forward with externally supplied running statistics (evaluation mode),
+/// into a caller buffer. `scale` is a c-length scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_eval_into(
+    u: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    rows: usize,
+    c: usize,
+    threads: usize,
+    y: &mut [f32],
+    scale: &mut [f32],
+) {
+    debug_assert_eq!(u.len(), rows * c);
+    debug_assert_eq!(y.len(), rows * c);
+    debug_assert_eq!(scale.len(), c);
+    for ((s, &g), &v) in scale.iter_mut().zip(gamma).zip(var) {
+        *s = g / (v + BN_EPS).sqrt();
+    }
+    let scaler: &[f32] = scale;
+    parallel_row_chunks(par(threads, rows * c), y, c, |row0, chunk| {
+        for (li, yrow) in chunk.chunks_mut(c).enumerate() {
+            let r = row0 + li;
+            for ci in 0..c {
+                yrow[ci] = (u[r * c + ci] - mean[ci]) * scaler[ci] + beta[ci];
+            }
+        }
+    });
+}
+
+/// Allocating wrapper over [`bn_eval_into`].
+#[allow(clippy::too_many_arguments)]
 pub fn bn_eval(
     u: &[f32],
     gamma: &[f32],
@@ -323,21 +502,9 @@ pub fn bn_eval(
     c: usize,
     threads: usize,
 ) -> Vec<f32> {
-    debug_assert_eq!(u.len(), rows * c);
-    let scale: Vec<f32> = gamma
-        .iter()
-        .zip(var)
-        .map(|(g, v)| g / (v + BN_EPS).sqrt())
-        .collect();
     let mut y = vec![0.0f32; rows * c];
-    parallel_row_chunks(par(threads, rows * c), &mut y, c, |row0, chunk| {
-        for (li, yrow) in chunk.chunks_mut(c).enumerate() {
-            let r = row0 + li;
-            for ci in 0..c {
-                yrow[ci] = (u[r * c + ci] - mean[ci]) * scale[ci] + beta[ci];
-            }
-        }
-    });
+    let mut scale = vec![0.0f32; c];
+    bn_eval_into(u, gamma, beta, mean, var, rows, c, threads, &mut y, &mut scale);
     y
 }
 
@@ -345,30 +512,57 @@ pub fn bn_eval(
 // ReLU
 // ---------------------------------------------------------------------------
 
-/// a = max(y, 0) as a new buffer (y is kept for the backward mask).
-pub fn relu(y: &[f32]) -> Vec<f32> {
-    y.iter().map(|&v| v.max(0.0)).collect()
+/// a = max(y, 0) into a caller buffer (y is kept for the backward mask).
+pub fn relu_into(y: &[f32], a: &mut [f32]) {
+    debug_assert_eq!(y.len(), a.len());
+    for (o, &v) in a.iter_mut().zip(y) {
+        *o = v.max(0.0);
+    }
 }
 
-/// dy = da * [y > 0]
+/// Allocating wrapper over [`relu_into`].
+pub fn relu(y: &[f32]) -> Vec<f32> {
+    let mut a = vec![0.0f32; y.len()];
+    relu_into(y, &mut a);
+    a
+}
+
+/// dy = da * [y > 0] into a caller buffer.
+pub fn relu_bwd_into(da: &[f32], y: &[f32], dy: &mut [f32]) {
+    debug_assert_eq!(da.len(), y.len());
+    debug_assert_eq!(da.len(), dy.len());
+    for ((o, &d), &v) in dy.iter_mut().zip(da).zip(y) {
+        *o = if v > 0.0 { d } else { 0.0 };
+    }
+}
+
+/// Allocating wrapper over [`relu_bwd_into`].
 pub fn relu_bwd(da: &[f32], y: &[f32]) -> Vec<f32> {
-    da.iter()
-        .zip(y)
-        .map(|(&d, &v)| if v > 0.0 { d } else { 0.0 })
-        .collect()
+    let mut dy = vec![0.0f32; da.len()];
+    relu_bwd_into(da, y, &mut dy);
+    dy
 }
 
 // ---------------------------------------------------------------------------
 // max pooling
 // ---------------------------------------------------------------------------
 
-/// 2x2/stride-2 max pool of (B,H,W,C). Returns the pooled activations and
-/// the flat input index of each window's max (first max wins on ties).
-pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+/// 2x2/stride-2 max pool of (B,H,W,C) into caller buffers: the pooled
+/// activations and the flat input index of each window's max (first max
+/// wins on ties).
+pub fn maxpool2_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    y: &mut [f32],
+    idx: &mut [u32],
+) {
     debug_assert_eq!(x.len(), b * h * w * c);
     let (ho, wo) = (h / 2, w / 2);
-    let mut y = vec![0.0f32; b * ho * wo * c];
-    let mut idx = vec![0u32; b * ho * wo * c];
+    debug_assert_eq!(y.len(), b * ho * wo * c);
+    debug_assert_eq!(idx.len(), b * ho * wo * c);
     for bi in 0..b {
         for py in 0..ho {
             for px in 0..wo {
@@ -391,25 +585,49 @@ pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>,
             }
         }
     }
+}
+
+/// Allocating wrapper over [`maxpool2_into`].
+pub fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let (ho, wo) = (h / 2, w / 2);
+    let mut y = vec![0.0f32; b * ho * wo * c];
+    let mut idx = vec![0u32; b * ho * wo * c];
+    maxpool2_into(x, b, h, w, c, &mut y, &mut idx);
     (y, idx)
 }
 
-/// Route pooled gradients back to the argmax positions.
-pub fn maxpool2_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+/// Route pooled gradients back to the argmax positions (zeroes `dx`
+/// first).
+pub fn maxpool2_bwd_into(dy: &[f32], idx: &[u32], dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), idx.len());
-    let mut dx = vec![0.0f32; in_len];
+    dx.fill(0.0);
     for (&d, &i) in dy.iter().zip(idx) {
         dx[i as usize] += d;
     }
+}
+
+/// Allocating wrapper over [`maxpool2_bwd_into`].
+pub fn maxpool2_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; in_len];
+    maxpool2_bwd_into(dy, idx, &mut dx);
     dx
 }
 
-/// Global max pool over the spatial dims of (B,HW,C) -> (B,C); also returns
-/// flat argmax indices for the backward pass.
-pub fn global_maxpool(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+/// Global max pool over the spatial dims of (B,HW,C) -> (B,C) into caller
+/// buffers; also fills flat argmax indices for the backward pass.
+pub fn global_maxpool_into(
+    x: &[f32],
+    b: usize,
+    hw: usize,
+    c: usize,
+    y: &mut [f32],
+    idx: &mut [u32],
+) {
     debug_assert_eq!(x.len(), b * hw * c);
-    let mut y = vec![f32::NEG_INFINITY; b * c];
-    let mut idx = vec![0u32; b * c];
+    debug_assert_eq!(y.len(), b * c);
+    debug_assert_eq!(idx.len(), b * c);
+    y.fill(f32::NEG_INFINITY);
+    idx.fill(0);
     for bi in 0..b {
         for s in 0..hw {
             for ci in 0..c {
@@ -422,6 +640,13 @@ pub fn global_maxpool(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Ve
             }
         }
     }
+}
+
+/// Allocating wrapper over [`global_maxpool_into`].
+pub fn global_maxpool(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let mut y = vec![0.0f32; b * c];
+    let mut idx = vec![0u32; b * c];
+    global_maxpool_into(x, b, hw, c, &mut y, &mut idx);
     (y, idx)
 }
 
@@ -433,21 +658,23 @@ pub fn global_maxpool_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
 // softmax cross-entropy (sum over the batch) + top-1/top-5 counts
 // ---------------------------------------------------------------------------
 
-/// Returns (sum_loss, ncorrect1, ncorrect5, d(sum_loss)/dlogits).
-/// Top-k correctness uses the strict rank of the true logit, i.e. ties do
-/// not count against the true class — the `ref.py::cross_entropy` rule.
-/// Sequential: the f64 loss sum must keep one accumulation order.
-pub fn cross_entropy(
+/// Fills `dl` with d(sum_loss)/dlogits and returns
+/// (sum_loss, ncorrect1, ncorrect5). Top-k correctness uses the strict
+/// rank of the true logit, i.e. ties do not count against the true class
+/// — the `ref.py::cross_entropy` rule. Sequential: the f64 loss sum must
+/// keep one accumulation order.
+pub fn cross_entropy_into(
     logits: &[f32],
     labels: &[i32],
     b: usize,
     k: usize,
-) -> (f64, i64, i64, Vec<f32>) {
+    dl: &mut [f32],
+) -> (f64, i64, i64) {
     debug_assert_eq!(logits.len(), b * k);
     debug_assert_eq!(labels.len(), b);
+    debug_assert_eq!(dl.len(), b * k);
     let mut sum_loss = 0.0f64;
     let (mut c1, mut c5) = (0i64, 0i64);
-    let mut dl = vec![0.0f32; b * k];
     for i in 0..b {
         let row = &logits[i * k..(i + 1) * k];
         let y = labels[i] as usize;
@@ -470,6 +697,19 @@ pub fn cross_entropy(
         }
         drow[y] -= 1.0;
     }
+    (sum_loss, c1, c5)
+}
+
+/// Allocating wrapper over [`cross_entropy_into`]: returns
+/// (sum_loss, ncorrect1, ncorrect5, d(sum_loss)/dlogits).
+pub fn cross_entropy(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    k: usize,
+) -> (f64, i64, i64, Vec<f32>) {
+    let mut dl = vec![0.0f32; b * k];
+    let (sum_loss, c1, c5) = cross_entropy_into(logits, labels, b, k, &mut dl);
     (sum_loss, c1, c5, dl)
 }
 
@@ -539,24 +779,74 @@ mod tests {
     }
 
     #[test]
+    fn blocked_equals_reference_bitwise_including_zeros() {
+        // exact zeros scattered into A exercise the removed `av == 0.0`
+        // sparsity branch: the reference skips those terms, the blocked
+        // tier adds them — bitwise identical on finite data
+        let (m, k, n) = (37, 29, 13);
+        let mut a = wave(m * k, 0.59);
+        for v in a.iter_mut().step_by(7) {
+            *v = 0.0;
+        }
+        let b = wave(k * n, 0.41);
+        for t in [1, 4] {
+            assert_eq!(
+                matmul(&a, &b, m, k, n, t),
+                matmul_reference(&a, &b, m, k, n, t),
+                "matmul t={t}"
+            );
+        }
+        let (r, tm, tn_) = (29, 13, 11);
+        let mut ta = wave(r * tm, 0.33);
+        for v in ta.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        let tb = wave(r * tn_, 0.21);
+        for t in [1, 3] {
+            assert_eq!(
+                matmul_tn(&ta, &tb, r, tm, tn_, t),
+                matmul_tn_reference(&ta, &tb, r, tm, tn_, t),
+                "matmul_tn t={t}"
+            );
+        }
+        let (nm, nk, nn) = (19, 31, 7);
+        let na = wave(nm * nk, 0.87);
+        let nb = wave(nn * nk, 0.93);
+        for t in [1, 2] {
+            assert_eq!(
+                matmul_nt(&na, &nb, nm, nk, nn, t),
+                matmul_nt_reference(&na, &nb, nm, nk, nn, t),
+                "matmul_nt t={t}"
+            );
+        }
+    }
+
+    #[test]
     fn parallel_kernels_bitwise_match_sequential() {
-        // sizes above PAR_MIN_WORK so the threaded paths actually engage;
-        // every kernel must be bitwise identical across thread counts
-        let (m, k, n) = (512, 36, 16); // m*k*n = 294912 >= 2^18
+        // sizes above the per-chunk spawn gate so the threaded paths
+        // actually engage; every kernel must be bitwise identical across
+        // thread counts
+        let (m, k, n) = (2048, 36, 16); // m*k*n = 1.18M >= 2 chunks of 2^18
         let a = wave(m * k, 0.71);
         let b = wave(k * n, 1.13);
         let seq = matmul(&a, &b, m, k, n, 1);
         for t in [2, 3, 8] {
             assert_eq!(seq, matmul(&a, &b, m, k, n, t), "matmul t={t}");
         }
+        let seq_ref = matmul_reference(&a, &b, m, k, n, 1);
+        assert_eq!(seq, seq_ref, "blocked vs reference");
+        for t in [2, 8] {
+            assert_eq!(seq_ref, matmul_reference(&a, &b, m, k, n, t), "reference t={t}");
+        }
 
-        let (r, tm, tn_) = (512, 36, 16);
+        let (r, tm, tn_) = (2048, 36, 16);
         let ta = wave(r * tm, 0.37);
         let tb = wave(r * tn_, 0.91);
         let seq = matmul_tn(&ta, &tb, r, tm, tn_, 1);
         for t in [2, 5] {
             assert_eq!(seq, matmul_tn(&ta, &tb, r, tm, tn_, t), "matmul_tn t={t}");
         }
+        assert_eq!(seq, matmul_tn_reference(&ta, &tb, r, tm, tn_, 1), "tn vs reference");
 
         let na = wave(m * k, 0.53);
         let nb = wave(n * k, 0.29);
@@ -564,8 +854,9 @@ mod tests {
         for t in [2, 4] {
             assert_eq!(seq, matmul_nt(&na, &nb, m, k, n, t), "matmul_nt t={t}");
         }
+        assert_eq!(seq, matmul_nt_reference(&na, &nb, m, k, n, 1), "nt vs reference");
 
-        let (ib, ih, iw, ic) = (16, 16, 16, 8); // 16*16*16*9*8 = 294912 >= 2^18
+        let (ib, ih, iw, ic) = (64, 16, 16, 8); // 64*16*16*9*8 = 1.18M
         let x = wave(ib * ih * iw * ic, 0.61);
         let seq = im2col(&x, ib, ih, iw, ic, 1);
         assert_eq!(seq, im2col(&x, ib, ih, iw, ic, 4), "im2col");

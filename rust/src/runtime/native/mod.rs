@@ -1,18 +1,29 @@
 //! The **native** execution backend: pure-Rust ResNet9s forward/backward
-//! (`model`), flat-NHWC kernels (`kernels`), and an in-memory manifest
-//! builder — no AOT artifacts, no XLA toolchain, bitwise-deterministic.
+//! (`model`), flat-NHWC kernels (`kernels`), the blocked GEMM tier
+//! (`gemm`), the persistent kernel workspace (`workspace`) and an
+//! in-memory manifest builder — no AOT artifacts, no XLA toolchain,
+//! bitwise-deterministic.
 //!
 //! This is the default backend: it makes the whole SWAP coordinator
 //! hermetically testable (`cargo test` runs end-to-end SWAP on synthetic
 //! data with it) and is the baseline every accelerator backend is checked
 //! against (rust/tests/kernel_parity.rs pins it to the python oracles).
+//!
+//! The engine owns a pool of [`workspace::Workspace`]s behind a mutex:
+//! every entry point pops one workspace for the duration of the call and
+//! returns it afterwards, so concurrent callers (SWAP phase-2 workers,
+//! phase-1 shards) never contend inside a step and a steady-state
+//! `train_step` performs **zero heap allocations**
+//! (rust/tests/alloc_regression.rs).
 
+pub mod gemm;
 pub mod kernels;
 pub mod model;
+pub mod workspace;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::backend::Backend;
 use super::manifest::{Manifest, ModelMeta, TensorSpec};
@@ -21,6 +32,13 @@ use crate::model::ParamLayout;
 use crate::util::{Error, Result};
 
 use self::model::Dims;
+use self::workspace::Workspace;
+
+/// Upper bound on pooled workspaces: enough for any realistic concurrent
+/// fan-out (phase-2 workers are capped far below this); beyond it a
+/// returning workspace is simply dropped. The pool vector is pre-reserved
+/// to this capacity so returning a workspace never reallocates.
+const WORKSPACE_POOL_CAP: usize = 64;
 
 /// Construction parameters of a native backend (the analogue of an AOT
 /// preset's `manifest.json`). Widths/classes mirror `python/compile/aot.py`.
@@ -36,7 +54,7 @@ pub struct NativeSpec {
     /// advertised batch sizes (informational — the native backend accepts
     /// any batch size, unlike per-batch AOT executables)
     pub batches: Vec<usize>,
-    /// worker threads the heavy kernels (im2col/matmul/BN) may split
+    /// worker threads the heavy kernels (GEMM/BN/col2im) may split
     /// output rows across; 1 = fully sequential. Any value produces
     /// bitwise-identical results (see `coordinator::parallel`).
     pub threads: usize,
@@ -144,6 +162,9 @@ pub struct NativeBackend {
     dims: Dims,
     /// kernel worker-thread budget (never changes results, only wall time)
     threads: usize,
+    /// persistent kernel workspaces: one per concurrent caller, reused
+    /// across steps (the zero-allocation steady state)
+    workspaces: Mutex<Vec<Box<Workspace>>>,
 }
 
 impl NativeBackend {
@@ -170,7 +191,14 @@ impl NativeBackend {
         let manifest = native_manifest(&spec);
         let param_layout = ParamLayout::of_params(&manifest);
         let bn_layout = ParamLayout::of_bn(&manifest);
-        Ok(NativeBackend { manifest, param_layout, bn_layout, dims, threads })
+        Ok(NativeBackend {
+            manifest,
+            param_layout,
+            bn_layout,
+            dims,
+            threads,
+            workspaces: Mutex::new(Vec::with_capacity(WORKSPACE_POOL_CAP)),
+        })
     }
 
     /// The tiny test model (width 4, 10 classes, 16x16 images).
@@ -203,78 +231,100 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Slice per-tensor views out of the contiguous parameter arena after
-    /// validating its total length (the arena IS the shape contract — the
-    /// kernels read manifest-ordered subslices of one buffer).
-    fn param_views<'a>(&self, params: &'a [f32]) -> Result<Vec<&'a [f32]>> {
-        layout_views(&self.param_layout, params, "param")
+    /// Run `f` with a pooled workspace: pop one (or build the pool's
+    /// first on a cold start), hand it to `f`, return it afterwards.
+    /// Steady-state this allocates nothing — the pool vector is
+    /// pre-reserved and the workspace buffers are grow-only.
+    fn with_workspace<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let popped = self.workspaces.lock().unwrap().pop();
+        let mut ws = match popped {
+            Some(w) => w,
+            None => Box::new(Workspace::new()),
+        };
+        let out = f(&mut ws);
+        let mut pool = self.workspaces.lock().unwrap();
+        if pool.len() < pool.capacity() {
+            pool.push(ws);
+        }
+        out
     }
 
-    fn stats_from(
+    /// Manifest-ordered immutable views over the parameter arena, sliced
+    /// at the layout's per-tensor boundaries (a fixed-size array: no
+    /// allocation on the hot path).
+    fn param_views<'a>(
         &self,
-        logits: &[f32],
-        batch: &HostBatch,
-    ) -> (BatchStats, Vec<f32>) {
-        let (sum_loss, c1, c5, dl) = kernels::cross_entropy(
-            logits,
-            &batch.labels,
-            batch.batch,
-            self.dims.num_classes,
-        );
-        (
-            BatchStats {
-                sum_loss,
-                correct1: c1,
-                correct5: c5,
-                examples: batch.batch as i64,
-            },
-            dl,
-        )
-    }
-
-    /// Shared grad path: train-mode forward + backward of the mean loss,
-    /// flattened into one manifest-ordered gradient arena.
-    fn grad_impl(&self, params: &[f32], batch: &HostBatch) -> Result<(Vec<f32>, BatchStats)> {
-        self.check_batch(batch)?;
-        let p = self.param_views(params)?;
-        let fwd = model::forward_train(&self.dims, &p, &batch.images, batch.batch, self.threads);
-        let (stats, mut dl) = self.stats_from(&fwd.logits, batch);
-        // grads of the MEAN batch loss (the python grad_step convention)
-        let inv_b = 1.0 / batch.batch as f32;
-        for d in dl.iter_mut() {
-            *d *= inv_b;
-        }
-        let grads = model::backward(&self.dims, &p, &dl, &fwd.ctx, self.threads);
-        let mut flat = Vec::with_capacity(self.manifest.num_params);
-        for g in &grads {
-            flat.extend_from_slice(g);
-        }
-        if flat.len() != self.manifest.num_params {
+        params: &'a [f32],
+    ) -> Result<[&'a [f32]; model::NUM_PARAM_TENSORS]> {
+        if params.len() != self.param_layout.total() {
             return Err(Error::shape(format!(
-                "backward produced {} gradient elements, manifest wants {}",
-                flat.len(),
-                self.manifest.num_params
+                "param arena has {} f32s, manifest wants {}",
+                params.len(),
+                self.param_layout.total()
             )));
         }
-        Ok((flat, stats))
+        debug_assert_eq!(self.param_layout.len(), model::NUM_PARAM_TENSORS);
+        let mut v = [&params[0..0]; model::NUM_PARAM_TENSORS];
+        for (i, slot) in v.iter_mut().enumerate() {
+            *slot = &params[self.param_layout.range(i)];
+        }
+        Ok(v)
     }
-}
 
-/// Manifest-ordered immutable views over a contiguous arena, sliced at
-/// the layout's per-tensor boundaries (no second copy of the offset walk).
-fn layout_views<'a>(
-    layout: &ParamLayout,
-    arena: &'a [f32],
-    what: &str,
-) -> Result<Vec<&'a [f32]>> {
-    if arena.len() != layout.total() {
-        return Err(Error::shape(format!(
-            "{what} arena has {} f32s, manifest wants {}",
-            arena.len(),
-            layout.total()
-        )));
+    /// Manifest-ordered views over the BN running-statistics arena.
+    fn bn_views<'a>(
+        &self,
+        bn_stats: &'a [f32],
+    ) -> Result<[&'a [f32]; 2 * model::NUM_CONV_LAYERS]> {
+        if bn_stats.len() != self.bn_layout.total() {
+            return Err(Error::shape(format!(
+                "bn arena has {} f32s, manifest wants {}",
+                bn_stats.len(),
+                self.bn_layout.total()
+            )));
+        }
+        debug_assert_eq!(self.bn_layout.len(), 2 * model::NUM_CONV_LAYERS);
+        let mut v = [&bn_stats[0..0]; 2 * model::NUM_CONV_LAYERS];
+        for (i, slot) in v.iter_mut().enumerate() {
+            *slot = &bn_stats[self.bn_layout.range(i)];
+        }
+        Ok(v)
     }
-    Ok((0..layout.len()).map(|i| &arena[layout.range(i)]).collect())
+
+    /// Shared grad path: train-mode forward + backward of the mean loss
+    /// into the workspace's flat gradient arena (`ws.grads`).
+    fn grad_into_ws(
+        &self,
+        params: &[f32],
+        batch: &HostBatch,
+        ws: &mut Workspace,
+    ) -> Result<BatchStats> {
+        self.check_batch(batch)?;
+        let p = self.param_views(params)?;
+        let b = batch.batch;
+        let nc = self.dims.num_classes;
+        model::forward_train_ws(&self.dims, &p, &batch.images, b, self.threads, ws);
+        let (sum_loss, c1, c5) = kernels::cross_entropy_into(
+            &ws.logits[..b * nc],
+            &batch.labels,
+            b,
+            nc,
+            &mut ws.dl[..b * nc],
+        );
+        // grads of the MEAN batch loss (the python grad_step convention)
+        let inv_b = 1.0 / b as f32;
+        for d in ws.dl[..b * nc].iter_mut() {
+            *d *= inv_b;
+        }
+        model::backward_ws(&self.dims, &p, b, self.threads, ws);
+        debug_assert!(ws.grads.len() >= self.manifest.num_params);
+        Ok(BatchStats {
+            sum_loss,
+            correct1: c1,
+            correct5: c5,
+            examples: b as i64,
+        })
+    }
 }
 
 impl Backend for NativeBackend {
@@ -287,8 +337,13 @@ impl Backend for NativeBackend {
     }
 
     fn grad(&self, params: &[f32], batch: &HostBatch) -> Result<GradResult> {
-        let (grads, stats) = self.grad_impl(params, batch)?;
-        Ok(GradResult { grads, stats })
+        self.with_workspace(|ws| {
+            let stats = self.grad_into_ws(params, batch, ws)?;
+            // the trait returns an owned arena: one copy out of the
+            // workspace (train_step, the steady-state path, avoids it)
+            let grads = ws.grads[..self.manifest.num_params].to_vec();
+            Ok(GradResult { grads, stats })
+        })
     }
 
     fn train_step(
@@ -298,7 +353,6 @@ impl Backend for NativeBackend {
         batch: &HostBatch,
         lr: f32,
     ) -> Result<BatchStats> {
-        let (grads, stats) = self.grad_impl(params, batch)?;
         if momentum.len() != params.len() {
             return Err(Error::shape(format!(
                 "momentum arena has {} f32s, params {}",
@@ -307,10 +361,21 @@ impl Backend for NativeBackend {
             )));
         }
         let (mu, wd) = (self.manifest.model.momentum, self.manifest.model.weight_decay);
-        // one fused pass over the whole arena (same elementwise order as
-        // the legacy per-tensor loop — bitwise identical, chunk-parallel)
-        crate::tensor::flat::sgd_step(self.threads, params, momentum, &grads, lr, mu, wd);
-        Ok(stats)
+        self.with_workspace(|ws| {
+            let stats = self.grad_into_ws(params, batch, ws)?;
+            // one fused pass over the whole arena (same elementwise order
+            // as the legacy per-tensor loop — bitwise identical)
+            crate::tensor::flat::sgd_step(
+                self.threads,
+                params,
+                momentum,
+                &ws.grads[..self.manifest.num_params],
+                lr,
+                mu,
+                wd,
+            );
+            Ok(stats)
+        })
     }
 
     fn eval_batch(
@@ -321,29 +386,56 @@ impl Backend for NativeBackend {
     ) -> Result<BatchStats> {
         self.check_batch(batch)?;
         let p = self.param_views(params)?;
-        let bn = layout_views(&self.bn_layout, bn_stats, "bn")?;
-        let logits =
-            model::forward_eval(&self.dims, &p, &bn, &batch.images, batch.batch, self.threads);
-        Ok(self.stats_from(&logits, batch).0)
+        let bn = self.bn_views(bn_stats)?;
+        let b = batch.batch;
+        let nc = self.dims.num_classes;
+        self.with_workspace(|ws| {
+            model::forward_eval_ws(&self.dims, &p, &bn, &batch.images, b, self.threads, ws);
+            let (sum_loss, c1, c5) = kernels::cross_entropy_into(
+                &ws.logits[..b * nc],
+                &batch.labels,
+                b,
+                nc,
+                &mut ws.dl[..b * nc],
+            );
+            Ok(BatchStats {
+                sum_loss,
+                correct1: c1,
+                correct5: c5,
+                examples: b as i64,
+            })
+        })
     }
 
     fn bn_moments(&self, params: &[f32], batch: &HostBatch) -> Result<Vec<f32>> {
         self.check_batch(batch)?;
         let p = self.param_views(params)?;
-        let moments =
-            model::forward_moments(&self.dims, &p, &batch.images, batch.batch, self.threads);
-        let total = self.bn_layout.total();
-        let mut flat = Vec::with_capacity(total);
-        for m in &moments {
-            flat.extend_from_slice(m);
-        }
-        if flat.len() != total {
-            return Err(Error::shape(format!(
-                "bn moments produced {} elements, manifest wants {total}",
-                flat.len()
-            )));
-        }
-        Ok(flat)
+        self.with_workspace(|ws| {
+            // train-mode forward: the per-layer batch moments are exactly
+            // the bnstats entry point's output (the head is negligible)
+            model::forward_train_ws(
+                &self.dims,
+                &p,
+                &batch.images,
+                batch.batch,
+                self.threads,
+                ws,
+            );
+            let total = self.bn_layout.total();
+            let mut flat = Vec::with_capacity(total);
+            let layers = model::conv_layers(&self.dims);
+            for (li, (_name, _cin, cout, _side)) in layers.iter().enumerate() {
+                flat.extend_from_slice(&ws.mean[li][..*cout]);
+                flat.extend_from_slice(&ws.var[li][..*cout]);
+            }
+            if flat.len() != total {
+                return Err(Error::shape(format!(
+                    "bn moments produced {} elements, manifest wants {total}",
+                    flat.len()
+                )));
+            }
+            Ok(flat)
+        })
     }
 }
 
@@ -407,5 +499,34 @@ mod tests {
         };
         assert!(b.grad(&params.as_slice()[..5], &ok).is_err());
         assert!(b.grad(params.as_slice(), &ok).is_ok());
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_stable() {
+        // the pooled workspace is dirty after the first call; every
+        // buffer must be fully (re)written, so repeated calls are
+        // bitwise identical — including across intervening batch sizes
+        use crate::model::ParamSet;
+        let b = NativeBackend::tiny();
+        let params = ParamSet::init(b.manifest(), 7);
+        let mk = |n: usize| HostBatch {
+            images: (0..n * 16 * 16 * 3)
+                .map(|i| ((i % 17) as f32 - 8.0) * 0.1)
+                .collect(),
+            labels: (0..n).map(|i| (i % 10) as i32).collect(),
+            batch: n,
+            image_size: 16,
+        };
+        let hb = mk(4);
+        let g1 = b.grad(params.as_slice(), &hb).unwrap();
+        let big = mk(8); // grows the pooled workspace
+        let _ = b.grad(params.as_slice(), &big).unwrap();
+        let g2 = b.grad(params.as_slice(), &hb).unwrap();
+        assert_eq!(g1.grads, g2.grads);
+        assert_eq!(g1.stats.sum_loss.to_bits(), g2.stats.sum_loss.to_bits());
+        // moments are sliced to the true cout even on the grown workspace
+        let m1 = b.bn_moments(params.as_slice(), &hb).unwrap();
+        let m2 = b.bn_moments(params.as_slice(), &hb).unwrap();
+        assert_eq!(m1, m2);
     }
 }

@@ -1,6 +1,7 @@
 //! Native ResNet9s: the exact topology of `python/compile/model.py`
 //! (davidcpage's DAWNBench CIFAR net, paper §5.1), forward + hand-derived
-//! backward over the flat NHWC kernels in `super::kernels`.
+//! backward over the flat NHWC kernels in `super::kernels` and the
+//! blocked GEMM tier in `super::gemm`.
 //!
 //! ```text
 //! prep  : conv3x3( 3 ->  c) + BN + ReLU                      [H]
@@ -16,8 +17,17 @@
 //! beta; then head.w, head.b — 26 tensors); BN moments are (mean, var) per
 //! conv layer — 16 tensors. The backward pass was validated against
 //! `jax.grad` of the python model (rust/tests/kernel_parity.rs).
+//!
+//! Every entry point threads a [`Workspace`] through: activations, BN
+//! saves, pool argmaxes, patch-gradient scratch and the flat gradient
+//! arena all live in per-engine persistent buffers, so a steady-state
+//! step allocates nothing (rust/tests/alloc_regression.rs). The conv
+//! GEMMs pack im2col patches straight from the NHWC activations
+//! (`gemm::ASrc::Im2col`), never materializing the patch matrix.
 
+use super::gemm::{self, GemmScratch};
 use super::kernels as k;
+use super::workspace::Workspace;
 
 pub const HEAD_SCALE: f32 = 0.125;
 pub const NUM_CONV_LAYERS: usize = 8;
@@ -58,106 +68,17 @@ pub fn flops_fwd_per_example(d: &Dims) -> u64 {
     total
 }
 
-/// Per-block saved context for the backward pass.
-struct BlockSave {
-    /// conv input activations (B, side, side, cin), flat NHWC
-    x: Vec<f32>,
-    side: usize,
-    cin: usize,
-    cout: usize,
-    /// normalized conv output
-    xhat: Vec<f32>,
-    invstd: Vec<f32>,
-    /// pre-ReLU block output (ReLU mask)
-    y: Vec<f32>,
-}
+type Layers = [(&'static str, usize, usize, usize); NUM_CONV_LAYERS];
 
-/// Everything `backward` needs from the train forward pass.
-pub struct TrainCtx {
-    batch: usize,
-    saves: Vec<BlockSave>,
-    /// (argmax indices, input length) for the three 2x2 pools
-    pools: [(Vec<u32>, usize); 3],
-    /// pooled head features (B, 8c)
-    h: Vec<f32>,
-    /// global-maxpool argmax (into the res3 output)
-    hmax: Vec<u32>,
-    /// res3 output length
-    r3_len: usize,
-}
-
-/// Output of the train-mode forward pass.
-pub struct TrainForward {
-    pub logits: Vec<f32>,
-    /// flat [mean0, var0, mean1, var1, ...] in conv-layer order
-    pub moments: Vec<Vec<f32>>,
-    pub ctx: TrainCtx,
-}
-
-fn block_fwd_train(
-    b: usize,
-    side: usize,
-    cin: usize,
-    cout: usize,
-    x: Vec<f32>,
-    w: &[f32],
-    gamma: &[f32],
-    beta: &[f32],
-    threads: usize,
-) -> (Vec<f32>, BlockSave, Vec<f32>, Vec<f32>) {
-    let rows = b * side * side;
-    let patches = k::im2col(&x, b, side, side, cin, threads);
-    let u = k::matmul(&patches, w, rows, 9 * cin, cout, threads);
-    let (y, xhat, mean, var, invstd) = k::bn_train(&u, gamma, beta, rows, cout, threads);
-    let a = k::relu(&y);
-    let save = BlockSave { x, side, cin, cout, xhat, invstd, y };
-    (a, save, mean, var)
-}
-
-fn block_fwd_eval(
-    b: usize,
-    side: usize,
-    cin: usize,
-    cout: usize,
-    x: &[f32],
-    w: &[f32],
-    gamma: &[f32],
-    beta: &[f32],
-    mean: &[f32],
-    var: &[f32],
-    threads: usize,
-) -> Vec<f32> {
-    let rows = b * side * side;
-    let patches = k::im2col(x, b, side, side, cin, threads);
-    let u = k::matmul(&patches, w, rows, 9 * cin, cout, threads);
-    k::relu(&k::bn_eval(&u, gamma, beta, mean, var, rows, cout, threads))
-}
-
-/// Backward through one block. Returns (dx (None for the first layer),
-/// dw, dgamma, dbeta).
-#[allow(clippy::type_complexity)]
-fn block_bwd(
-    b: usize,
-    save: &BlockSave,
-    w: &[f32],
-    gamma: &[f32],
-    da: &[f32],
-    need_dx: bool,
-    threads: usize,
-) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let rows = b * save.side * save.side;
-    let dy = k::relu_bwd(da, &save.y);
-    let (du, dgamma, dbeta) =
-        k::bn_train_bwd(&dy, &save.xhat, &save.invstd, gamma, rows, save.cout, threads);
-    let patches = k::im2col(&save.x, b, save.side, save.side, save.cin, threads);
-    let dw = k::matmul_tn(&patches, &du, rows, 9 * save.cin, save.cout, threads);
-    let dx = if need_dx {
-        let dp = k::matmul_nt(&du, w, rows, save.cout, 9 * save.cin, threads);
-        Some(k::col2im(&dp, b, save.side, save.side, save.cin, threads))
-    } else {
-        None
-    };
-    (dx, dw, dgamma, dbeta)
+/// Offset of layer `li`'s first parameter (its conv weight) in the flat
+/// manifest-ordered arena; `li == NUM_CONV_LAYERS` gives the head.w
+/// offset. Matches `param_specs` exactly: per layer w, gamma, beta.
+fn param_offset(layers: &Layers, li: usize) -> usize {
+    let mut off = 0;
+    for (_, cin, cout, _) in layers.iter().take(li) {
+        off += 9 * cin * cout + 2 * cout;
+    }
+    off
 }
 
 fn add_into(acc: &mut [f32], x: &[f32]) {
@@ -167,249 +88,489 @@ fn add_into(acc: &mut [f32], x: &[f32]) {
     }
 }
 
-/// Train-mode forward pass. `params` is the manifest-ordered list of flat
-/// parameter slices (26 entries).
-pub fn forward_train(
+/// One conv+BN+ReLU block, train mode: conv into the `u` scratch (fused
+/// im2col packing), batch statistics + normalize into the layer's saves,
+/// ReLU into `out`.
+#[allow(clippy::too_many_arguments)]
+fn block_fwd_train(
+    li: usize,
+    layers: &Layers,
+    params: &[&[f32]],
+    b: usize,
+    threads: usize,
+    x: &[f32],
+    out: &mut [f32],
+    u: &mut [f32],
+    xhat: &mut [Vec<f32>; NUM_CONV_LAYERS],
+    yact: &mut [Vec<f32>; NUM_CONV_LAYERS],
+    mean: &mut [Vec<f32>; NUM_CONV_LAYERS],
+    var: &mut [Vec<f32>; NUM_CONV_LAYERS],
+    invstd: &mut [Vec<f32>; NUM_CONV_LAYERS],
+    gs: &mut GemmScratch,
+) {
+    let (_, cin, cout, side) = layers[li];
+    let rows = b * side * side;
+    let n = rows * cout;
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(out.len(), n);
+    let us = &mut u[..n];
+    gemm::conv3x3_into(us, x, b, side, side, cin, params[3 * li], cout, threads, gs);
+    k::bn_train_into(
+        us,
+        params[3 * li + 1],
+        params[3 * li + 2],
+        rows,
+        cout,
+        threads,
+        &mut yact[li][..n],
+        &mut xhat[li][..n],
+        &mut mean[li][..cout],
+        &mut var[li][..cout],
+        &mut invstd[li][..cout],
+    );
+    k::relu_into(&yact[li][..n], out);
+}
+
+/// One conv+BN+ReLU block, eval mode with running statistics.
+#[allow(clippy::too_many_arguments)]
+fn block_fwd_eval(
+    li: usize,
+    layers: &Layers,
+    params: &[&[f32]],
+    bn: &[&[f32]],
+    b: usize,
+    threads: usize,
+    x: &[f32],
+    out: &mut [f32],
+    u: &mut [f32],
+    v: &mut [f32],
+    scale: &mut [f32],
+    gs: &mut GemmScratch,
+) {
+    let (_, cin, cout, side) = layers[li];
+    let rows = b * side * side;
+    let n = rows * cout;
+    let us = &mut u[..n];
+    gemm::conv3x3_into(us, x, b, side, side, cin, params[3 * li], cout, threads, gs);
+    k::bn_eval_into(
+        us,
+        params[3 * li + 1],
+        params[3 * li + 2],
+        bn[2 * li],
+        bn[2 * li + 1],
+        rows,
+        cout,
+        threads,
+        &mut v[..n],
+        &mut scale[..cout],
+    );
+    k::relu_into(&v[..n], out);
+}
+
+/// Backward through one block: `da` is the gradient w.r.t. the post-ReLU
+/// output; writes dw/dgamma/dbeta straight into the flat `grads` arena
+/// and, when `dx` is given, the gradient w.r.t. the conv input.
+#[allow(clippy::too_many_arguments)]
+fn block_bwd(
+    li: usize,
+    layers: &Layers,
+    params: &[&[f32]],
+    b: usize,
+    threads: usize,
+    x: &[f32],
+    da: &[f32],
+    dx: Option<&mut [f32]>,
+    xhat: &[Vec<f32>; NUM_CONV_LAYERS],
+    yact: &[Vec<f32>; NUM_CONV_LAYERS],
+    invstd: &[Vec<f32>; NUM_CONV_LAYERS],
+    u: &mut [f32],
+    v: &mut [f32],
+    scale: &mut [f32],
+    dp: &mut [f32],
+    grads: &mut [f32],
+    gs: &mut GemmScratch,
+) {
+    let (_, cin, cout, side) = layers[li];
+    let rows = b * side * side;
+    let n = rows * cout;
+    debug_assert_eq!(da.len(), n);
+    // dy = da * [y > 0]
+    k::relu_bwd_into(da, &yact[li][..n], &mut u[..n]);
+    // carve this layer's (w, gamma, beta) gradient slices out of the arena
+    let off = param_offset(layers, li);
+    let wlen = 9 * cin * cout;
+    let (dw, rest) = grads[off..off + wlen + 2 * cout].split_at_mut(wlen);
+    let (dgamma, dbeta) = rest.split_at_mut(cout);
+    k::bn_train_bwd_into(
+        &u[..n],
+        &xhat[li][..n],
+        &invstd[li][..cout],
+        params[3 * li + 1],
+        rows,
+        cout,
+        threads,
+        &mut v[..n],
+        dgamma,
+        dbeta,
+        &mut scale[..cout],
+    );
+    // dW = patchesᵀ @ du, packing patches straight from the saved input
+    gemm::conv3x3_dw_into(dw, x, b, side, side, cin, &v[..n], cout, threads, gs);
+    if let Some(dx) = dx {
+        let np = rows * 9 * cin;
+        gemm::matmul_nt_into(
+            &mut dp[..np],
+            &v[..n],
+            params[3 * li],
+            rows,
+            cout,
+            9 * cin,
+            threads,
+            gs,
+        );
+        k::col2im_into(&dp[..np], b, side, side, cin, threads, dx);
+    }
+}
+
+/// Train-mode forward pass into the workspace: fills `ws.logits`, the
+/// per-layer BN saves/moments and every buffer the backward pass needs.
+/// `params` is the manifest-ordered list of flat parameter views (26).
+pub fn forward_train_ws(
     d: &Dims,
     params: &[&[f32]],
     images: &[f32],
     b: usize,
     threads: usize,
-) -> TrainForward {
+    ws: &mut Workspace,
+) {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+    ws.ensure(d, b);
     let layers = conv_layers(d);
-    let mut saves = Vec::with_capacity(NUM_CONV_LAYERS);
-    let mut moments = Vec::with_capacity(2 * NUM_CONV_LAYERS);
-    let fwd = |li: usize, x: Vec<f32>, saves: &mut Vec<BlockSave>, moments: &mut Vec<Vec<f32>>| {
-        let (_, cin, cout, side) = layers[li];
-        let (a, save, mean, var) = block_fwd_train(
-            b,
-            side,
-            cin,
-            cout,
-            x,
-            params[3 * li],
-            params[3 * li + 1],
-            params[3 * li + 2],
-            threads,
-        );
-        saves.push(save);
-        moments.push(mean);
-        moments.push(var);
-        a
-    };
-
     let h = d.image_size;
     let c = d.width;
-    let a0 = fwd(0, images.to_vec(), &mut saves, &mut moments);
-    let a1 = fwd(1, a0, &mut saves, &mut moments);
-    let (p1, i1) = k::maxpool2(&a1, b, h, h, 2 * c);
-    let m1 = fwd(2, p1.clone(), &mut saves, &mut moments);
-    let mut r1 = fwd(3, m1, &mut saves, &mut moments);
-    add_into(&mut r1, &p1); // res1: x + f(x)
-    let a2 = fwd(4, r1, &mut saves, &mut moments);
-    let (p2, i2) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
-    let a3 = fwd(5, p2, &mut saves, &mut moments);
-    let (p3, i3) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
-    let m3 = fwd(6, p3.clone(), &mut saves, &mut moments);
-    let mut r3 = fwd(7, m3, &mut saves, &mut moments);
-    add_into(&mut r3, &p3); // res3: x + f(x)
+    let nc = d.num_classes;
+    let Workspace {
+        gemm: gs,
+        x0,
+        x1,
+        x2,
+        x3,
+        x4,
+        x5,
+        x6,
+        x7,
+        xhat,
+        yact,
+        mean,
+        var,
+        invstd,
+        pool_idx,
+        hmax,
+        u,
+        act,
+        r3,
+        hfeat,
+        logits,
+        ..
+    } = ws;
+
+    macro_rules! fwd {
+        ($li:expr, $x:expr, $out:expr) => {
+            block_fwd_train(
+                $li, &layers, params, b, threads, $x, $out, u, xhat, yact, mean, var, invstd, gs,
+            )
+        };
+    }
+
+    let n0 = b * h * h * 3;
+    x0[..n0].copy_from_slice(&images[..n0]);
+    let x1n = b * h * h * c;
+    fwd!(0, &x0[..n0], &mut x1[..x1n]);
+    let a1n = b * h * h * 2 * c;
+    fwd!(1, &x1[..x1n], &mut act[..a1n]);
+    let p1n = b * (h / 2) * (h / 2) * 2 * c;
+    k::maxpool2_into(
+        &act[..a1n],
+        b,
+        h,
+        h,
+        2 * c,
+        &mut x2[..p1n],
+        &mut pool_idx[0][..p1n],
+    );
+    fwd!(2, &x2[..p1n], &mut x3[..p1n]);
+    fwd!(3, &x3[..p1n], &mut x4[..p1n]);
+    add_into(&mut x4[..p1n], &x2[..p1n]); // res1: x + f(x)
+    let a4n = b * (h / 2) * (h / 2) * 4 * c;
+    fwd!(4, &x4[..p1n], &mut act[..a4n]);
+    let p2n = b * (h / 4) * (h / 4) * 4 * c;
+    k::maxpool2_into(
+        &act[..a4n],
+        b,
+        h / 2,
+        h / 2,
+        4 * c,
+        &mut x5[..p2n],
+        &mut pool_idx[1][..p2n],
+    );
+    let a5n = b * (h / 4) * (h / 4) * 8 * c;
+    fwd!(5, &x5[..p2n], &mut act[..a5n]);
+    let p3n = b * (h / 8) * (h / 8) * 8 * c;
+    k::maxpool2_into(
+        &act[..a5n],
+        b,
+        h / 4,
+        h / 4,
+        8 * c,
+        &mut x6[..p3n],
+        &mut pool_idx[2][..p3n],
+    );
+    fwd!(6, &x6[..p3n], &mut x7[..p3n]);
+    fwd!(7, &x7[..p3n], &mut r3[..p3n]);
+    add_into(&mut r3[..p3n], &x6[..p3n]); // res3: x + f(x)
 
     let hw3 = (h / 8) * (h / 8);
-    let (hfeat, hmax) = k::global_maxpool(&r3, b, hw3, 8 * c);
-    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes, threads);
+    let c8 = 8 * c;
+    k::global_maxpool_into(&r3[..p3n], b, hw3, c8, &mut hfeat[..b * c8], &mut hmax[..b * c8]);
+    gemm::matmul_into(
+        &mut logits[..b * nc],
+        &hfeat[..b * c8],
+        params[24],
+        b,
+        c8,
+        nc,
+        threads,
+        gs,
+    );
     let bias = params[25];
     for bi in 0..b {
-        for j in 0..d.num_classes {
-            logits[bi * d.num_classes + j] =
-                (logits[bi * d.num_classes + j] + bias[j]) * HEAD_SCALE;
-        }
-    }
-    let r3_len = r3.len();
-    let ctx = TrainCtx {
-        batch: b,
-        saves,
-        pools: [
-            (i1, b * h * h * 2 * c),
-            (i2, b * (h / 2) * (h / 2) * 4 * c),
-            (i3, b * (h / 4) * (h / 4) * 8 * c),
-        ],
-        h: hfeat,
-        hmax,
-        r3_len,
-    };
-    TrainForward { logits, moments, ctx }
-}
-
-/// Backward pass: gradient of the loss w.r.t. every parameter, given
-/// d(loss)/d(logits). Returns flat gradient buffers in manifest order.
-pub fn backward(
-    d: &Dims,
-    params: &[&[f32]],
-    dlogits: &[f32],
-    ctx: &TrainCtx,
-    threads: usize,
-) -> Vec<Vec<f32>> {
-    let b = ctx.batch;
-    let c8 = 8 * d.width;
-    let nc = d.num_classes;
-    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); NUM_PARAM_TENSORS];
-
-    // head: logits = (h @ W + bias) * HEAD_SCALE
-    let ds: Vec<f32> = dlogits.iter().map(|&v| v * HEAD_SCALE).collect();
-    grads[24] = k::matmul_tn(&ctx.h, &ds, b, c8, nc, threads);
-    let mut dbias = vec![0.0f32; nc];
-    for bi in 0..b {
         for j in 0..nc {
-            dbias[j] += ds[bi * nc + j];
+            logits[bi * nc + j] = (logits[bi * nc + j] + bias[j]) * HEAD_SCALE;
         }
     }
-    grads[25] = dbias;
-    let dh = k::matmul_nt(&ds, params[24], b, nc, c8, threads);
-
-    // global max pool
-    let dr3 = k::global_maxpool_bwd(&dh, &ctx.hmax, ctx.r3_len);
-
-    let bwd = |li: usize, da: &[f32], need_dx: bool, grads: &mut Vec<Vec<f32>>| {
-        let (dx, dw, dgamma, dbeta) = block_bwd(
-            b,
-            &ctx.saves[li],
-            params[3 * li],
-            params[3 * li + 1],
-            da,
-            need_dx,
-            threads,
-        );
-        grads[3 * li] = dw;
-        grads[3 * li + 1] = dgamma;
-        grads[3 * li + 2] = dbeta;
-        dx.unwrap_or_default()
-    };
-
-    // res3: r3 = p3 + res3b(res3a(p3))
-    let dm3 = bwd(7, &dr3, true, &mut grads);
-    let dp3_branch = bwd(6, &dm3, true, &mut grads);
-    let mut dp3 = dr3;
-    add_into(&mut dp3, &dp3_branch);
-
-    // layer3 pool + block
-    let da3 = k::maxpool2_bwd(&dp3, &ctx.pools[2].0, ctx.pools[2].1);
-    let dp2 = bwd(5, &da3, true, &mut grads);
-
-    // layer2 pool + block
-    let da2 = k::maxpool2_bwd(&dp2, &ctx.pools[1].0, ctx.pools[1].1);
-    let dr1 = bwd(4, &da2, true, &mut grads);
-
-    // res1: r1 = p1 + res1b(res1a(p1))
-    let dm1 = bwd(3, &dr1, true, &mut grads);
-    let dp1_branch = bwd(2, &dm1, true, &mut grads);
-    let mut dp1 = dr1;
-    add_into(&mut dp1, &dp1_branch);
-
-    // layer1 pool + block, then prep (no dx needed for the input image)
-    let da1 = k::maxpool2_bwd(&dp1, &ctx.pools[0].0, ctx.pools[0].1);
-    let da0 = bwd(1, &da1, true, &mut grads);
-    let _ = bwd(0, &da0, false, &mut grads);
-
-    grads
 }
 
-/// Moments-only forward pass (phase 3's `bnstats` entry point): runs the
-/// blocks in train mode but keeps neither the backward context nor the
-/// head — the per-layer (mean, biased var) pairs are the only output.
-pub fn forward_moments(
-    d: &Dims,
-    params: &[&[f32]],
-    images: &[f32],
-    b: usize,
-    threads: usize,
-) -> Vec<Vec<f32>> {
+/// Backward pass: reads `ws.dl` (gradient of the *mean* batch loss w.r.t.
+/// the logits, pre head-scale) plus the forward saves, and fills the flat
+/// manifest-ordered `ws.grads` arena.
+pub fn backward_ws(d: &Dims, params: &[&[f32]], b: usize, threads: usize, ws: &mut Workspace) {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
     let layers = conv_layers(d);
-    let mut moments = Vec::with_capacity(2 * NUM_CONV_LAYERS);
-    let fwd = |li: usize, x: &[f32], moments: &mut Vec<Vec<f32>>| -> Vec<f32> {
-        let (_, cin, cout, side) = layers[li];
-        let rows = b * side * side;
-        let patches = k::im2col(x, b, side, side, cin, threads);
-        let u = k::matmul(&patches, params[3 * li], rows, 9 * cin, cout, threads);
-        let (y, _xhat, mean, var, _invstd) =
-            k::bn_train(&u, params[3 * li + 1], params[3 * li + 2], rows, cout, threads);
-        moments.push(mean);
-        moments.push(var);
-        k::relu(&y)
-    };
     let h = d.image_size;
     let c = d.width;
-    let a0 = fwd(0, images, &mut moments);
-    let a1 = fwd(1, &a0, &mut moments);
-    let (p1, _) = k::maxpool2(&a1, b, h, h, 2 * c);
-    let m1 = fwd(2, &p1, &mut moments);
-    let mut r1 = fwd(3, &m1, &mut moments);
-    add_into(&mut r1, &p1);
-    let a2 = fwd(4, &r1, &mut moments);
-    let (p2, _) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
-    let a3 = fwd(5, &p2, &mut moments);
-    let (p3, _) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
-    let m3 = fwd(6, &p3, &mut moments);
-    let _ = fwd(7, &m3, &mut moments); // res3b moments; output unused
-    moments
+    let nc = d.num_classes;
+    let c8 = 8 * c;
+    let Workspace {
+        gemm: gs,
+        x0,
+        x1,
+        x2,
+        x3,
+        x4,
+        x5,
+        x6,
+        x7,
+        xhat,
+        yact,
+        invstd,
+        pool_idx,
+        hmax,
+        u,
+        v,
+        hfeat,
+        scale,
+        dl,
+        dh,
+        ga,
+        gb,
+        gres,
+        dp,
+        grads,
+        ..
+    } = ws;
+
+    // head: logits = (h @ W + bias) * HEAD_SCALE
+    let ndl = b * nc;
+    for dv in dl[..ndl].iter_mut() {
+        *dv *= HEAD_SCALE;
+    }
+    let hw_off = param_offset(&layers, NUM_CONV_LAYERS);
+    let hw_len = c8 * nc;
+    gemm::matmul_tn_into(
+        &mut grads[hw_off..hw_off + hw_len],
+        &hfeat[..b * c8],
+        &dl[..ndl],
+        b,
+        c8,
+        nc,
+        threads,
+        gs,
+    );
+    {
+        let dbias = &mut grads[hw_off + hw_len..hw_off + hw_len + nc];
+        dbias.fill(0.0);
+        for bi in 0..b {
+            for j in 0..nc {
+                dbias[j] += dl[bi * nc + j];
+            }
+        }
+    }
+    gemm::matmul_nt_into(&mut dh[..b * c8], &dl[..ndl], params[24], b, nc, c8, threads, gs);
+
+    // global max pool: route dh back onto the res3 output
+    let p3n = b * (h / 8) * (h / 8) * c8;
+    k::maxpool2_bwd_into(&dh[..b * c8], &hmax[..b * c8], &mut gres[..p3n]);
+
+    macro_rules! bwd {
+        ($li:expr, $x:expr, $da:expr, $dx:expr) => {
+            block_bwd(
+                $li, &layers, params, b, threads, $x, $da, $dx, xhat, yact, invstd, u, v, scale,
+                dp, grads, gs,
+            )
+        };
+    }
+
+    // res3: r3 = p3 + res3b(res3a(p3))
+    bwd!(7, &x7[..p3n], &gres[..p3n], Some(&mut ga[..p3n]));
+    bwd!(6, &x6[..p3n], &ga[..p3n], Some(&mut gb[..p3n]));
+    add_into(&mut gres[..p3n], &gb[..p3n]);
+
+    // layer3 pool + block
+    let a5n = b * (h / 4) * (h / 4) * 8 * c;
+    k::maxpool2_bwd_into(&gres[..p3n], &pool_idx[2][..p3n], &mut ga[..a5n]);
+    let p2n = b * (h / 4) * (h / 4) * 4 * c;
+    bwd!(5, &x5[..p2n], &ga[..a5n], Some(&mut gb[..p2n]));
+
+    // layer2 pool + block
+    let a4n = b * (h / 2) * (h / 2) * 4 * c;
+    k::maxpool2_bwd_into(&gb[..p2n], &pool_idx[1][..p2n], &mut ga[..a4n]);
+    let p1n = b * (h / 2) * (h / 2) * 2 * c;
+    bwd!(4, &x4[..p1n], &ga[..a4n], Some(&mut gres[..p1n]));
+
+    // res1: r1 = p1 + res1b(res1a(p1))
+    bwd!(3, &x3[..p1n], &gres[..p1n], Some(&mut ga[..p1n]));
+    bwd!(2, &x2[..p1n], &ga[..p1n], Some(&mut gb[..p1n]));
+    add_into(&mut gres[..p1n], &gb[..p1n]);
+
+    // layer1 pool + block, then prep (no dx needed for the input image)
+    let a1n = b * h * h * 2 * c;
+    k::maxpool2_bwd_into(&gres[..p1n], &pool_idx[0][..p1n], &mut ga[..a1n]);
+    let x1n = b * h * h * c;
+    bwd!(1, &x1[..x1n], &ga[..a1n], Some(&mut gb[..x1n]));
+    let n0 = b * h * h * 3;
+    bwd!(0, &x0[..n0], &gb[..x1n], None);
 }
 
 /// Eval-mode forward pass with running BN statistics (mean/var pairs per
-/// conv layer, manifest `bn_stats` order). Returns logits.
-pub fn forward_eval(
+/// conv layer, manifest `bn_stats` order). Fills `ws.logits`.
+pub fn forward_eval_ws(
     d: &Dims,
     params: &[&[f32]],
     bn: &[&[f32]],
     images: &[f32],
     b: usize,
     threads: usize,
-) -> Vec<f32> {
+    ws: &mut Workspace,
+) {
     debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
     debug_assert_eq!(bn.len(), 2 * NUM_CONV_LAYERS);
+    ws.ensure(d, b);
     let layers = conv_layers(d);
-    let fwd = |li: usize, x: &[f32]| -> Vec<f32> {
-        let (_, cin, cout, side) = layers[li];
-        block_fwd_eval(
-            b,
-            side,
-            cin,
-            cout,
-            x,
-            params[3 * li],
-            params[3 * li + 1],
-            params[3 * li + 2],
-            bn[2 * li],
-            bn[2 * li + 1],
-            threads,
-        )
-    };
     let h = d.image_size;
     let c = d.width;
-    let a0 = fwd(0, images);
-    let a1 = fwd(1, &a0);
-    let (p1, _) = k::maxpool2(&a1, b, h, h, 2 * c);
-    let m1 = fwd(2, &p1);
-    let mut r1 = fwd(3, &m1);
-    add_into(&mut r1, &p1);
-    let a2 = fwd(4, &r1);
-    let (p2, _) = k::maxpool2(&a2, b, h / 2, h / 2, 4 * c);
-    let a3 = fwd(5, &p2);
-    let (p3, _) = k::maxpool2(&a3, b, h / 4, h / 4, 8 * c);
-    let m3 = fwd(6, &p3);
-    let mut r3 = fwd(7, &m3);
-    add_into(&mut r3, &p3);
+    let nc = d.num_classes;
+    let Workspace {
+        gemm: gs,
+        x1,
+        x2,
+        x3,
+        x4,
+        x5,
+        x6,
+        x7,
+        pool_idx,
+        hmax,
+        u,
+        v,
+        act,
+        r3,
+        hfeat,
+        logits,
+        scale,
+        ..
+    } = ws;
+
+    macro_rules! fwd {
+        ($li:expr, $x:expr, $out:expr) => {
+            block_fwd_eval($li, &layers, params, bn, b, threads, $x, $out, u, v, scale, gs)
+        };
+    }
+
+    let n0 = b * h * h * 3;
+    let x1n = b * h * h * c;
+    fwd!(0, &images[..n0], &mut x1[..x1n]);
+    let a1n = b * h * h * 2 * c;
+    fwd!(1, &x1[..x1n], &mut act[..a1n]);
+    let p1n = b * (h / 2) * (h / 2) * 2 * c;
+    k::maxpool2_into(
+        &act[..a1n],
+        b,
+        h,
+        h,
+        2 * c,
+        &mut x2[..p1n],
+        &mut pool_idx[0][..p1n],
+    );
+    fwd!(2, &x2[..p1n], &mut x3[..p1n]);
+    fwd!(3, &x3[..p1n], &mut x4[..p1n]);
+    add_into(&mut x4[..p1n], &x2[..p1n]);
+    let a4n = b * (h / 2) * (h / 2) * 4 * c;
+    fwd!(4, &x4[..p1n], &mut act[..a4n]);
+    let p2n = b * (h / 4) * (h / 4) * 4 * c;
+    k::maxpool2_into(
+        &act[..a4n],
+        b,
+        h / 2,
+        h / 2,
+        4 * c,
+        &mut x5[..p2n],
+        &mut pool_idx[1][..p2n],
+    );
+    let a5n = b * (h / 4) * (h / 4) * 8 * c;
+    fwd!(5, &x5[..p2n], &mut act[..a5n]);
+    let p3n = b * (h / 8) * (h / 8) * 8 * c;
+    k::maxpool2_into(
+        &act[..a5n],
+        b,
+        h / 4,
+        h / 4,
+        8 * c,
+        &mut x6[..p3n],
+        &mut pool_idx[2][..p3n],
+    );
+    fwd!(6, &x6[..p3n], &mut x7[..p3n]);
+    fwd!(7, &x7[..p3n], &mut r3[..p3n]);
+    add_into(&mut r3[..p3n], &x6[..p3n]);
+
     let hw3 = (h / 8) * (h / 8);
-    let (hfeat, _) = k::global_maxpool(&r3, b, hw3, 8 * c);
-    let mut logits = k::matmul(&hfeat, params[24], b, 8 * c, d.num_classes, threads);
+    let c8 = 8 * c;
+    k::global_maxpool_into(&r3[..p3n], b, hw3, c8, &mut hfeat[..b * c8], &mut hmax[..b * c8]);
+    gemm::matmul_into(
+        &mut logits[..b * nc],
+        &hfeat[..b * c8],
+        params[24],
+        b,
+        c8,
+        nc,
+        threads,
+        gs,
+    );
     let bias = params[25];
     for bi in 0..b {
-        for j in 0..d.num_classes {
-            logits[bi * d.num_classes + j] =
-                (logits[bi * d.num_classes + j] + bias[j]) * HEAD_SCALE;
+        for j in 0..nc {
+            logits[bi * nc + j] = (logits[bi * nc + j] + bias[j]) * HEAD_SCALE;
         }
     }
-    logits
 }
 
 #[cfg(test)]
@@ -451,5 +612,16 @@ mod tests {
         }
         want += 2 * 32 * 10;
         assert_eq!(flops_fwd_per_example(&d), want);
+    }
+
+    #[test]
+    fn param_offsets_walk_the_manifest_order() {
+        let d = dims();
+        let layers = conv_layers(&d);
+        assert_eq!(param_offset(&layers, 0), 0);
+        // prep: 27*2 w + 2 gamma + 2 beta
+        assert_eq!(param_offset(&layers, 1), 27 * 2 + 4);
+        let total: usize = layers.iter().map(|(_, ci, co, _)| 9 * ci * co + 2 * co).sum();
+        assert_eq!(param_offset(&layers, NUM_CONV_LAYERS), total);
     }
 }

@@ -1,0 +1,186 @@
+//! The per-engine persistent kernel workspace: every buffer the native
+//! ResNet9s forward/backward/eval/BN-recompute paths write, owned in one
+//! place and reused across steps so a steady-state training step performs
+//! **zero heap allocations** (pinned by `rust/tests/alloc_regression.rs`).
+//!
+//! [`Workspace::ensure`] sizes all sub-arenas from the model [`Dims`] and
+//! the batch size; buffers only ever grow (to the largest batch seen), so
+//! after the first step of a run every call is pure reuse. The engine
+//! keeps a pool of workspaces behind a mutex (`NativeBackend`): each
+//! concurrent caller (SWAP phase-2 workers, phase-1 shards) pops its own
+//! workspace for the duration of one entry point, so the pool adds no
+//! cross-thread contention inside a step.
+//!
+//! Nothing here is numeric: the workspace is pure storage. The bitwise
+//! determinism story lives in `gemm`/`kernels` (fixed k-order, output
+//! tiles partitioned) and is unaffected by where the buffers come from.
+
+use super::gemm::GemmScratch;
+use super::model::{conv_layers, Dims, NUM_CONV_LAYERS};
+
+/// All mutable state of one native forward/backward invocation.
+#[derive(Default)]
+pub struct Workspace {
+    /// packed GEMM panels: shared B panel + per-worker A packing buffers
+    pub gemm: GemmScratch,
+
+    // -- saved conv-input activations (x0 = a copy of the images) -------
+    pub x0: Vec<f32>,
+    pub x1: Vec<f32>,
+    pub x2: Vec<f32>,
+    pub x3: Vec<f32>,
+    pub x4: Vec<f32>,
+    pub x5: Vec<f32>,
+    pub x6: Vec<f32>,
+    pub x7: Vec<f32>,
+
+    // -- per-layer BN saves for the backward pass -----------------------
+    pub xhat: [Vec<f32>; NUM_CONV_LAYERS],
+    /// pre-ReLU block outputs (the ReLU mask)
+    pub yact: [Vec<f32>; NUM_CONV_LAYERS],
+    pub mean: [Vec<f32>; NUM_CONV_LAYERS],
+    pub var: [Vec<f32>; NUM_CONV_LAYERS],
+    pub invstd: [Vec<f32>; NUM_CONV_LAYERS],
+
+    // -- pooling argmaxes ----------------------------------------------
+    pub pool_idx: [Vec<u32>; 3],
+    pub hmax: Vec<u32>,
+
+    // -- forward chain scratch -----------------------------------------
+    /// conv output pre-BN (max rows x cout over layers)
+    pub u: Vec<f32>,
+    /// second rows x cout scratch: BN-eval output on the eval path,
+    /// ReLU-backward dy on the grad path
+    pub v: Vec<f32>,
+    /// post-ReLU pre-pool activations (layer1/layer2/layer3)
+    pub act: Vec<f32>,
+    /// res3 block output (residual sum)
+    pub r3: Vec<f32>,
+    /// pooled head features (B, 8c)
+    pub hfeat: Vec<f32>,
+    pub logits: Vec<f32>,
+    /// per-channel BN scratch (max cout)
+    pub scale: Vec<f32>,
+
+    // -- backward chain scratch ----------------------------------------
+    /// d(mean loss)/dlogits, rescaled in place by the head scale
+    pub dl: Vec<f32>,
+    /// gradient w.r.t. the pooled head features
+    pub dh: Vec<f32>,
+    /// activation-gradient ping/pong + retained residual-branch gradient
+    pub ga: Vec<f32>,
+    pub gb: Vec<f32>,
+    pub gres: Vec<f32>,
+    /// conv patch gradients (max rows x 9 cin)
+    pub dp: Vec<f32>,
+    /// the flat manifest-ordered gradient arena
+    pub grads: Vec<f32>,
+}
+
+fn grow_f32(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+fn grow_u32(v: &mut Vec<u32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0);
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Size every sub-arena for a batch of `b` examples of model `d`.
+    /// Grow-only: steady-state calls with a batch no larger than the
+    /// biggest seen allocate nothing.
+    pub fn ensure(&mut self, d: &Dims, b: usize) {
+        let layers = conv_layers(d);
+        let h = d.image_size;
+        let c = d.width;
+        let nc = d.num_classes;
+
+        let xs: [&mut Vec<f32>; NUM_CONV_LAYERS] = [
+            &mut self.x0,
+            &mut self.x1,
+            &mut self.x2,
+            &mut self.x3,
+            &mut self.x4,
+            &mut self.x5,
+            &mut self.x6,
+            &mut self.x7,
+        ];
+        let mut max_uc = 0usize; // max rows*cout
+        let mut max_act = 0usize; // max of rows*cin and rows*cout
+        let mut max_dp = 0usize; // max rows*9cin
+        let mut num_params = 0usize;
+        for (li, x) in xs.into_iter().enumerate() {
+            let (_name, cin, cout, side) = layers[li];
+            let rows = b * side * side;
+            grow_f32(x, rows * cin);
+            grow_f32(&mut self.xhat[li], rows * cout);
+            grow_f32(&mut self.yact[li], rows * cout);
+            grow_f32(&mut self.mean[li], cout);
+            grow_f32(&mut self.var[li], cout);
+            grow_f32(&mut self.invstd[li], cout);
+            max_uc = max_uc.max(rows * cout);
+            max_act = max_act.max(rows * cin.max(cout));
+            max_dp = max_dp.max(rows * 9 * cin);
+            num_params += 9 * cin * cout + 2 * cout;
+        }
+        num_params += 8 * c * nc + nc;
+
+        grow_u32(&mut self.pool_idx[0], b * (h / 2) * (h / 2) * 2 * c);
+        grow_u32(&mut self.pool_idx[1], b * (h / 4) * (h / 4) * 4 * c);
+        grow_u32(&mut self.pool_idx[2], b * (h / 8) * (h / 8) * 8 * c);
+        grow_u32(&mut self.hmax, b * 8 * c);
+
+        grow_f32(&mut self.u, max_uc);
+        grow_f32(&mut self.v, max_uc);
+        grow_f32(&mut self.act, max_uc);
+        grow_f32(&mut self.r3, b * (h / 8) * (h / 8) * 8 * c);
+        grow_f32(&mut self.hfeat, b * 8 * c);
+        grow_f32(&mut self.logits, b * nc);
+        grow_f32(&mut self.scale, 8 * c);
+
+        grow_f32(&mut self.dl, b * nc);
+        grow_f32(&mut self.dh, b * 8 * c);
+        grow_f32(&mut self.ga, max_act);
+        grow_f32(&mut self.gb, max_act);
+        grow_f32(&mut self.gres, max_act);
+        grow_f32(&mut self.dp, max_dp);
+        grow_f32(&mut self.grads, num_params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_sizes_match_model_and_is_idempotent() {
+        let d = Dims { width: 4, num_classes: 10, image_size: 16 };
+        let mut ws = Workspace::new();
+        ws.ensure(&d, 8);
+        // x0 holds the images, grads the whole parameter arena
+        assert_eq!(ws.x0.len(), 8 * 16 * 16 * 3);
+        let num_params: usize = conv_layers(&d)
+            .iter()
+            .map(|(_, cin, cout, _)| 9 * cin * cout + 2 * cout)
+            .sum::<usize>()
+            + 8 * 4 * 10
+            + 10;
+        assert_eq!(ws.grads.len(), num_params);
+        assert_eq!(ws.logits.len(), 8 * 10);
+        let u_len = ws.u.len();
+        // growing for a smaller batch is a no-op
+        ws.ensure(&d, 4);
+        assert_eq!(ws.u.len(), u_len);
+        // a larger batch grows
+        ws.ensure(&d, 16);
+        assert!(ws.u.len() > u_len);
+    }
+}

@@ -15,8 +15,11 @@
 //!   accumulation order of `tensor::ops::sets_dot` exactly, whatever the
 //!   thread count.
 //!
-//! Threading is gated on total work via `coordinator::parallel::gate` —
-//! tiny vectors never pay a spawn.
+//! Threading is gated per chunk via `coordinator::parallel::gate_per_chunk`
+//! — a worker is only spawned if its own share of the work is worth a
+//! spawn, so tiny vectors (and modest ones at high thread counts) never
+//! pay for idle threads. Purely a wall-time knob: every kernel here is
+//! bitwise identical for any worker count.
 
 use std::ops::Range;
 
@@ -25,7 +28,7 @@ use crate::coordinator::parallel;
 /// acc += alpha * x, chunk-parallel.
 pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
     assert_eq!(acc.len(), x.len(), "axpy: length mismatch");
-    let t = parallel::gate(threads, acc.len() * 2);
+    let t = parallel::gate_per_chunk(threads, acc.len() * 2, parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, acc, 1, |first, chunk| {
         for (a, &b) in chunk.iter_mut().zip(&x[first..first + chunk.len()]) {
             *a += alpha * b;
@@ -35,7 +38,7 @@ pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
 
 /// acc *= alpha, chunk-parallel.
 pub fn scale(threads: usize, acc: &mut [f32], alpha: f32) {
-    let t = parallel::gate(threads, acc.len());
+    let t = parallel::gate_per_chunk(threads, acc.len(), parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, acc, 1, |_, chunk| {
         for a in chunk.iter_mut() {
             *a *= alpha;
@@ -52,7 +55,8 @@ pub fn mean_into(threads: usize, out: &mut [f32], sets: &[&[f32]]) {
         assert_eq!(s.len(), out.len(), "mean_into: length mismatch");
     }
     let inv = 1.0 / sets.len() as f32;
-    let t = parallel::gate(threads, out.len() * (sets.len() + 1));
+    let t =
+        parallel::gate_per_chunk(threads, out.len() * (sets.len() + 1), parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, out, 1, |first, chunk| {
         let end = first + chunk.len();
         chunk.copy_from_slice(&sets[0][first..end]);
@@ -87,7 +91,7 @@ pub fn sgd_step(
 ) {
     assert_eq!(p.len(), m.len(), "sgd_step: momentum length mismatch");
     assert_eq!(p.len(), g.len(), "sgd_step: gradient length mismatch");
-    let t = parallel::gate(threads, p.len() * 6);
+    let t = parallel::gate_per_chunk(threads, p.len() * 6, parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks2(t, p, m, 1, 1, |first, pc, mc| {
         let gc = &g[first..first + pc.len()];
         for i in 0..pc.len() {
@@ -103,7 +107,7 @@ pub fn sgd_step(
 /// combined in range order (thread-count independent).
 pub fn dot_ranges(threads: usize, a: &[f32], b: &[f32], ranges: &[Range<usize>]) -> f64 {
     assert_eq!(a.len(), b.len(), "dot_ranges: length mismatch");
-    let t = parallel::gate(threads, a.len() * 2);
+    let t = parallel::gate_per_chunk(threads, a.len() * 2, parallel::MIN_ITEM_WORK);
     let partials = parallel::parallel_map(t, ranges.to_vec(), |_, r| {
         a[r.clone()]
             .iter()
@@ -116,7 +120,7 @@ pub fn dot_ranges(threads: usize, a: &[f32], b: &[f32], ranges: &[Range<usize>])
 
 /// Squared Euclidean norm with per-range f64 partials.
 pub fn sq_norm_ranges(threads: usize, a: &[f32], ranges: &[Range<usize>]) -> f64 {
-    let t = parallel::gate(threads, a.len());
+    let t = parallel::gate_per_chunk(threads, a.len(), parallel::MIN_ITEM_WORK);
     let partials = parallel::parallel_map(t, ranges.to_vec(), |_, r| {
         a[r].iter().map(|x| *x as f64 * *x as f64).sum::<f64>()
     });
@@ -163,8 +167,8 @@ mod tests {
 
     #[test]
     fn kernels_bitwise_identical_across_threads() {
-        // big enough that the work gate actually engages the thread pool
-        let n = 600_007;
+        // big enough that the per-chunk gate actually spawns workers
+        let n = 2_100_007;
         let a0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
         let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
         let ranges = vec![0..100, 100..50_000, 50_000..n];
@@ -207,8 +211,8 @@ mod tests {
 
     #[test]
     fn sgd_step_threads_bitwise() {
-        // crosses the spawn gate (6n > MIN_ITEM_WORK)
-        let n = 200_003;
+        // crosses the per-chunk spawn gate (6n >= 2 * MIN_ITEM_WORK)
+        let n = 400_003;
         let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
         let p0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
         let mut p1 = p0.clone();

@@ -1,5 +1,5 @@
-//! Allocation regression tests for the flat weight-space and input
-//! hot paths.
+//! Allocation regression tests for the flat weight-space, input and
+//! native-kernel hot paths.
 //!
 //! The pre-refactor `ParamSet::average` built a full `Vec<Vec<Tensor>>`
 //! copy of every worker's tensors before averaging — O(W·P) intermediate
@@ -8,8 +8,14 @@
 //! in-place ring all-reduce allocates nothing at all. Likewise,
 //! `augment::shift` used to clone every image it touched (`img.to_vec()`
 //! per augmented example); assembly now reuses one scratch buffer, so the
-//! steady-state augmented batch-assembly loop allocates ZERO bytes. This
-//! file pins all three with a counting global allocator.
+//! steady-state augmented batch-assembly loop allocates ZERO bytes. And
+//! the native backend used to `vec![0.0; …]` every im2col/activation/
+//! gradient buffer per forward/backward call — it now runs out of a
+//! pooled persistent `Workspace` (blocked GEMM panels included), so a
+//! full steady-state training step (batch assembly + forward + backward
+//! + fused SGD — the per-step work of the prefetched phase-2 hot loop)
+//! allocates ZERO bytes too. This file pins all of it with a counting
+//! global allocator.
 //!
 //! The file contains a single #[test] so no concurrent test can perturb
 //! the counters.
@@ -120,5 +126,38 @@ fn average_and_ring_allocation_budgets() {
         asm_bytes, 0,
         "augmented assembly allocated {asm_bytes}B over {asm_calls} allocs; \
          the hot loop must reuse the scratch + HostBatch buffers"
+    );
+
+    // ---- steady-state native training step: ZERO allocation ------------
+    // assembly + gradients (forward/backward into the pooled workspace,
+    // blocked GEMM panels included) + the fused whole-arena SGD step —
+    // the exact per-step work the prefetched training loop performs.
+    // threads = 1 (the tiny preset): the measured loop must not even
+    // spawn a thread. Warmup builds the workspace pool, the packed GEMM
+    // panel buffers and the batch buffers once; after that, nothing.
+    use swap::model::ParamSet;
+    use swap::runtime::{Backend, NativeBackend};
+    let engine = NativeBackend::tiny();
+    let mut params = ParamSet::init(engine.manifest(), 3);
+    let mut mom = params.zeros_like();
+    for step in 60..63u64 {
+        batcher.assemble_step_into(&ds, &idx, key, step, 0, &mut hb);
+        engine
+            .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
+            .unwrap();
+    }
+    let ((), step_bytes, step_calls) = measured(|| {
+        for step in 63..113u64 {
+            batcher.assemble_step_into(&ds, &idx, key, step, 0, &mut hb);
+            engine
+                .train_step(params.as_mut_slice(), mom.as_mut_slice(), &hb, 0.01)
+                .unwrap();
+        }
+    });
+    assert_eq!(
+        step_bytes, 0,
+        "steady-state train step allocated {step_bytes}B over {step_calls} \
+         allocs; forward/backward/SGD must run entirely out of the engine \
+         workspace"
     );
 }

@@ -1,0 +1,185 @@
+//! Blocked-GEMM oracle tests: the production blocked/packed kernels
+//! (`runtime::native::gemm`) must be **bitwise** identical to the
+//! original scalar ikj reference kernels (`kernels::*_reference`) —
+//! over randomized shapes, over every (m, k, n) the ResNet9s actually
+//! emits (forward, dW and dX matmuls plus the head), at thread counts
+//! 1..4, and on inputs laced with exact zeros (the reference's historic
+//! `av == 0.0` sparsity skip only diverges on NaN/Inf data, which no
+//! training path produces).
+//!
+//! The fused im2col packing (`conv3x3_into` / `conv3x3_dw_into`) is also
+//! pinned against materialize-then-multiply with the reference kernels.
+
+use swap::runtime::native::gemm::{
+    conv3x3_dw_into, conv3x3_into, matmul_into, matmul_nt_into, matmul_tn_into, GemmScratch,
+};
+use swap::runtime::native::kernels::{
+    im2col, matmul_nt_reference, matmul_reference, matmul_tn_reference,
+};
+use swap::runtime::native::model::{conv_layers, Dims};
+
+/// Deterministic pseudo-random buffer with exact zeros sprinkled in so
+/// the reference's sparsity branch actually takes both sides.
+fn wave(n: usize, f: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if i % 13 == 7 {
+                0.0
+            } else {
+                (i as f32 * f + 0.1).sin() * 1.9
+            }
+        })
+        .collect()
+}
+
+fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}[{i}]: blocked {g} vs reference {w}"
+        );
+    }
+}
+
+/// out(m,n) = a(m,k) @ b(k,n), blocked vs reference, threads 1..4.
+fn check_nn(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(m * k, 0.37);
+    let b = wave(k * n, 0.73);
+    let want = matmul_reference(&a, &b, m, k, n, 1);
+    assert_bitwise(
+        &want,
+        &matmul_reference(&a, &b, m, k, n, 4),
+        "reference t-invariance",
+    );
+    for threads in 1..=4 {
+        let mut out = vec![f32::NAN; m * n];
+        matmul_into(&mut out, &a, &b, m, k, n, threads, scratch);
+        assert_bitwise(&out, &want, &format!("nn m={m} k={k} n={n} t={threads}"));
+    }
+}
+
+/// out(m,n) = a(r,m)ᵀ @ b(r,n), blocked vs reference, threads 1..4.
+fn check_tn(r: usize, m: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(r * m, 0.53);
+    let b = wave(r * n, 0.41);
+    let want = matmul_tn_reference(&a, &b, r, m, n, 1);
+    for threads in 1..=4 {
+        let mut out = vec![f32::NAN; m * n];
+        matmul_tn_into(&mut out, &a, &b, r, m, n, threads, scratch);
+        assert_bitwise(&out, &want, &format!("tn r={r} m={m} n={n} t={threads}"));
+    }
+}
+
+/// out(m,n) = a(m,k) @ b(n,k)ᵀ, blocked vs reference, threads 1..4.
+fn check_nt(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(m * k, 0.61);
+    let b = wave(n * k, 0.29);
+    let want = matmul_nt_reference(&a, &b, m, k, n, 1);
+    for threads in 1..=4 {
+        let mut out = vec![f32::NAN; m * n];
+        matmul_nt_into(&mut out, &a, &b, m, k, n, threads, scratch);
+        assert_bitwise(&out, &want, &format!("nt m={m} k={k} n={n} t={threads}"));
+    }
+}
+
+fn check_triple(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
+    check_nn(m, k, n, scratch);
+    check_tn(k, m, n, scratch);
+    check_nt(m, k, n, scratch);
+}
+
+#[test]
+fn blocked_matches_reference_on_randomized_shapes() {
+    let mut scratch = GemmScratch::default();
+    // a small LCG over odd shapes, crossing every tile edge case
+    let mut state = 0x2545f491u64;
+    let mut next = |lo: usize, hi: usize| {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        lo + ((state >> 33) as usize) % (hi - lo + 1)
+    };
+    for _ in 0..14 {
+        let m = next(1, 40);
+        let k = next(1, 70);
+        let n = next(1, 24);
+        check_triple(m, k, n, &mut scratch);
+    }
+    // tile-boundary exact shapes
+    for &(m, k, n) in &[(8usize, 8usize, 8usize), (16, 256, 8), (64, 257, 16), (65, 256, 9)] {
+        check_triple(m, k, n, &mut scratch);
+    }
+}
+
+#[test]
+fn blocked_matches_reference_on_resnet9s_shapes() {
+    let mut scratch = GemmScratch::default();
+    // the tiny test preset and a wider model, small batches: every
+    // (m, k, n) orientation the model's forward/backward actually emits
+    for (d, b) in [
+        (Dims { width: 4, num_classes: 10, image_size: 16 }, 3usize),
+        (Dims { width: 16, num_classes: 10, image_size: 32 }, 1),
+    ] {
+        for (_name, cin, cout, side) in conv_layers(&d) {
+            let rows = b * side * side;
+            // forward: patches(rows, 9cin) @ W(9cin, cout)
+            check_nn(rows, 9 * cin, cout, &mut scratch);
+            // dW: patches(rows, 9cin)ᵀ @ dU(rows, cout)
+            check_tn(rows, 9 * cin, cout, &mut scratch);
+            // dX: dU(rows, cout) @ W(9cin, cout)ᵀ
+            check_nt(rows, cout, 9 * cin, &mut scratch);
+        }
+        // the head matmul (tiny m: the per-chunk spawn gate keeps it
+        // sequential, which must not change any bit) + its dW/dX twins
+        check_nn(b, 8 * d.width, d.num_classes, &mut scratch);
+        check_tn(b, 8 * d.width, d.num_classes, &mut scratch);
+        check_nt(b, d.num_classes, 8 * d.width, &mut scratch);
+    }
+}
+
+#[test]
+fn fused_im2col_packing_matches_materialized_patches() {
+    let mut scratch = GemmScratch::default();
+    for (bs, h, w, c, cout) in [(2usize, 8usize, 8usize, 4usize, 8usize), (1, 6, 10, 3, 5)] {
+        let x = wave(bs * h * w * c, 0.83);
+        let wts = wave(9 * c * cout, 0.47);
+        let patches = im2col(&x, bs, h, w, c, 1);
+        let rows = bs * h * w;
+
+        let want = matmul_reference(&patches, &wts, rows, 9 * c, cout, 1);
+        for threads in 1..=4 {
+            let mut out = vec![f32::NAN; rows * cout];
+            conv3x3_into(&mut out, &x, bs, h, w, c, &wts, cout, threads, &mut scratch);
+            assert_bitwise(&out, &want, &format!("fused conv t={threads}"));
+        }
+
+        let du = wave(rows * cout, 0.31);
+        let want = matmul_tn_reference(&patches, &du, rows, 9 * c, cout, 1);
+        for threads in 1..=4 {
+            let mut out = vec![f32::NAN; 9 * c * cout];
+            conv3x3_dw_into(&mut out, &x, bs, h, w, c, &du, cout, threads, &mut scratch);
+            assert_bitwise(&out, &want, &format!("fused dW t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_across_shapes_is_clean() {
+    // one scratch across wildly different shapes: panels are re-packed
+    // fully per call, so stale bytes from a bigger previous call must
+    // never leak into a smaller one
+    let mut scratch = GemmScratch::default();
+    let (m1, k1, n1) = (70, 300, 20);
+    let a = wave(m1 * k1, 0.71);
+    let b = wave(k1 * n1, 0.13);
+    let mut big = vec![0.0f32; m1 * n1];
+    matmul_into(&mut big, &a, &b, m1, k1, n1, 4, &mut scratch);
+
+    let (m2, k2, n2) = (3, 5, 2);
+    let a2 = wave(m2 * k2, 0.91);
+    let b2 = wave(k2 * n2, 0.57);
+    let want = matmul_reference(&a2, &b2, m2, k2, n2, 1);
+    let mut out = vec![f32::NAN; m2 * n2];
+    matmul_into(&mut out, &a2, &b2, m2, k2, n2, 4, &mut scratch);
+    assert_bitwise(&out, &want, "small after big");
+}
