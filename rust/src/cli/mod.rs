@@ -6,9 +6,9 @@
 //!            [--set key=value]... [--runs N] [--seed N] [--threads N]
 //! ```
 //!
-//! Commands: swap | sb | lb | swa | local-sgd | table1 | table2 | table3 |
-//!           table4 | dawnbench | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 |
-//!           schedules | info | help
+//! Commands: swap | serve | join | swap-resume | sb | lb | swa | local-sgd |
+//!           table1 | table2 | table3 | table4 | dawnbench | fig1 | fig2 |
+//!           fig3 | fig4 | fig5 | fig6 | schedules | info | help
 
 use crate::config::{preset, ExperimentConfig};
 use crate::util::{Error, Result};
@@ -23,7 +23,8 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
-const VALUE_FLAGS: &[&str] = &["preset", "config", "set", "runs", "seed", "threads", "out"];
+const VALUE_FLAGS: &[&str] =
+    &["preset", "config", "set", "runs", "seed", "threads", "out", "addr", "worker"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -121,7 +122,16 @@ USAGE:  swap-train <command> [--preset NAME] [--config FILE]
                    [--set key=value]... [--runs N] [--seed N] [--threads N]
 
 Training commands (print a run summary):
-  swap        run the three-phase SWAP algorithm
+  swap        run the three-phase SWAP algorithm (phase 2 in-process)
+  swap-resume restartable SWAP: phase checkpoints under --out DIR
+  serve       coordinator: phase 1 locally, then serve phase 2 to remote
+              `join` processes on --addr (TCP host:port or a unix socket
+              path); workers that crash, hang, or straggle are dropped
+              from the average under the failure policy; state persists
+              under --out so a re-serve retries only the dropped workers
+  join        worker: connect to a `serve` coordinator at --addr, train
+              one phase-2 replica, upload it (--worker N requests a
+              specific unfinished worker id when rejoining)
   sb          small-batch SGD baseline
   lb          large-batch SGD baseline
   swa         sequential SWA from a small-batch run
@@ -156,6 +166,14 @@ Threads (--threads N / --set threads=N):
   1         fully sequential execution
   N         phase-2 workers / phase-1 shards / native kernels on N OS
             threads; results are bitwise identical for every N
+Failure policy (serve/join, all settable via --set):
+  min_workers=N          fewest phase-2 survivors to average    [1]
+  connect_timeout_ms=N   serve: join window after phase 1       [60000]
+  io_timeout_ms=N        drop a worker silent this long         [10000]
+  heartbeat_ms=N         worker heartbeat interval              [1000]
+  straggler_ms=N         grace after the first finished worker  [600000]
+  join_retries=N         client connect attempts                [60]
+  retry_backoff_ms=N     linear backoff between attempts        [500]
 Env: SWAP_RUNS=N override runs, SWAP_THREADS=N default thread count,
      SWAP_PREFETCH=0|1 override prefetch, SWAP_LOG=debug|info|warn|quiet";
 
@@ -231,6 +249,19 @@ mod tests {
         assert!(a.config("tiny").is_err());
         let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--set", "zzz=1"])).unwrap();
         assert!(a.config("tiny").is_err());
+    }
+
+    #[test]
+    fn serve_join_flags_take_values() {
+        let a = Args::parse(&argv(&[
+            "join", "--addr", "127.0.0.1:9000", "--worker", "3", "--preset", "tiny",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "join");
+        assert_eq!(a.get("addr"), Some("127.0.0.1:9000"));
+        assert_eq!(a.get("worker"), Some("3"));
+        let a = Args::parse(&argv(&["serve", "--addr=/tmp/swap.sock"])).unwrap();
+        assert_eq!(a.get("addr"), Some("/tmp/swap.sock"));
     }
 
     #[test]

@@ -87,6 +87,27 @@ pub struct ExperimentConfig {
     /// devices for the large-batch baseline arm (= workers*group_devices)
     pub lb_devices: usize,
 
+    // ---- phase-2 transport / failure policy ----
+    /// socket address for `serve`/`join`: "host:port" (TCP) or a
+    /// filesystem path (Unix socket). Empty = phase 2 stays in-process.
+    pub addr: String,
+    /// fewest phase-2 survivors the phase-3 average may be taken over
+    /// (1 = any non-empty subset, the paper's minimum)
+    pub min_workers: usize,
+    /// serve: join window for workers to connect after phase 1 (ms);
+    /// join: overall connect deadline is join_retries x retry_backoff_ms
+    pub connect_timeout_ms: u64,
+    /// per-link silence tolerated before a worker is declared dead (ms)
+    pub io_timeout_ms: u64,
+    /// interval at which a joined worker heartbeats (ms)
+    pub heartbeat_ms: u64,
+    /// straggler deadline after the first finished worker (ms)
+    pub straggler_ms: u64,
+    /// client-side connect attempts before `join` gives up
+    pub join_retries: usize,
+    /// linear backoff between connect attempts (ms)
+    pub retry_backoff_ms: u64,
+
     // ---- small-batch baseline schedule ----
     pub sb_epochs: usize,
     pub sb_peak_lr: f32,
@@ -233,6 +254,20 @@ impl ExperimentConfig {
         }
     }
 
+    /// The phase-2 failure policy derived from the `*_ms` knobs.
+    pub fn failure_policy(&self) -> crate::coordinator::FailurePolicy {
+        use std::time::Duration;
+        crate::coordinator::FailurePolicy {
+            min_workers: self.min_workers,
+            connect_timeout: Duration::from_millis(self.connect_timeout_ms),
+            io_timeout: Duration::from_millis(self.io_timeout_ms),
+            heartbeat: Duration::from_millis(self.heartbeat_ms),
+            straggler_grace: Duration::from_millis(self.straggler_ms),
+            join_retries: self.join_retries,
+            retry_backoff: Duration::from_millis(self.retry_backoff_ms),
+        }
+    }
+
     /// SWAP phase 2: no warmup, decay from the (lower) phase-2 peak to 0
     /// (Appendix A: warm-up epochs 0).
     pub fn phase2_schedule(&self, spe: usize) -> Schedule {
@@ -272,6 +307,14 @@ impl ExperimentConfig {
             "group_devices" => self.group_devices = p(key, value)?,
             "sb_devices" => self.sb_devices = p(key, value)?,
             "lb_devices" => self.lb_devices = p(key, value)?,
+            "addr" => self.addr = value.trim().to_string(),
+            "min_workers" => self.min_workers = p(key, value)?,
+            "connect_timeout_ms" => self.connect_timeout_ms = p(key, value)?,
+            "io_timeout_ms" => self.io_timeout_ms = p(key, value)?,
+            "heartbeat_ms" => self.heartbeat_ms = p(key, value)?,
+            "straggler_ms" => self.straggler_ms = p(key, value)?,
+            "join_retries" => self.join_retries = p(key, value)?,
+            "retry_backoff_ms" => self.retry_backoff_ms = p(key, value)?,
             "sb_epochs" => self.sb_epochs = p(key, value)?,
             "sb_peak_lr" => self.sb_peak_lr = p(key, value)?,
             "sb_warmup_frac" => self.sb_warmup_frac = p(key, value)?,
@@ -375,6 +418,19 @@ impl ExperimentConfig {
         if self.runs == 0 {
             return Err(Error::config("runs must be >= 1"));
         }
+        if self.min_workers == 0 || self.min_workers > self.workers {
+            return Err(Error::config(format!(
+                "min_workers {} must be in 1..={} (workers)",
+                self.min_workers, self.workers
+            )));
+        }
+        if self.heartbeat_ms >= self.io_timeout_ms {
+            return Err(Error::config(format!(
+                "heartbeat_ms {} must be below io_timeout_ms {} or live \
+                 workers get dropped between heartbeats",
+                self.heartbeat_ms, self.io_timeout_ms
+            )));
+        }
         Ok(())
     }
 }
@@ -446,6 +502,36 @@ mod tests {
         let mut cfg = preset("tiny").unwrap();
         cfg.n_train = 8; // smaller than the LB global batch
         assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_kv("min_workers", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.apply_kv("min_workers", "99").unwrap();
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_kv("heartbeat_ms", "5000").unwrap();
+        cfg.apply_kv("io_timeout_ms", "1000").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn failure_policy_knobs_flow_through() {
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_kv("addr", "127.0.0.1:7070").unwrap();
+        cfg.apply_kv("min_workers", "2").unwrap();
+        cfg.apply_kv("io_timeout_ms", "2500").unwrap();
+        cfg.apply_kv("heartbeat_ms", "250").unwrap();
+        cfg.apply_kv("straggler_ms", "4000").unwrap();
+        cfg.apply_kv("join_retries", "7").unwrap();
+        cfg.apply_kv("retry_backoff_ms", "100").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:7070");
+        let p = cfg.failure_policy();
+        assert_eq!(p.min_workers, 2);
+        assert_eq!(p.io_timeout.as_millis(), 2500);
+        assert_eq!(p.heartbeat.as_millis(), 250);
+        assert_eq!(p.straggler_grace.as_millis(), 4000);
+        assert_eq!(p.join_retries, 7);
+        assert_eq!(p.retry_backoff.as_millis(), 100);
     }
 
     #[test]

@@ -33,6 +33,14 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         group_devices: 1,
         sb_devices: 1,
         lb_devices: 8,
+        addr: String::new(),
+        min_workers: 1,
+        connect_timeout_ms: 60_000,
+        io_timeout_ms: 10_000,
+        heartbeat_ms: 1_000,
+        straggler_ms: 600_000,
+        join_retries: 60,
+        retry_backoff_ms: 500,
         sb_epochs: 20,
         sb_peak_lr: 0.15,
         sb_warmup_frac: 0.3,

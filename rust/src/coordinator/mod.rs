@@ -5,6 +5,9 @@
 //! * `parallel`  — real OS-thread execution (`std::thread::scope`), shared
 //!                 by phase-2 workers, phase-1 shards, and native kernels
 //! * `swap`      — Algorithm 1 (three phases)
+//! * `transport` — how phase 2 executes: in-process threads or remote
+//!                 processes over sockets, with a per-worker failure
+//!                 policy (timeouts, stragglers, elastic drop-out)
 //! * `baseline`  — pure small-/large-batch SGD arms (Tables 1-3)
 //! * `swa`       — sequential SWA baseline (Table 4)
 //! * `local_sgd` — post-local SGD extension (§2/§6 related method)
@@ -17,10 +20,14 @@ pub mod resume;
 pub mod swa;
 pub mod swap;
 pub mod trainer;
+pub mod transport;
 
 pub use baseline::{run_baseline, BaselineConfig, BaselineResult};
 pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdResult};
-pub use resume::{run_swap_resumable, RunDir};
+pub use resume::{run_swap_resumable, run_swap_resumable_with, RunDir};
 pub use swa::{run_swa, SwaConfig, SwaResult};
-pub use swap::{run_swap, SwapConfig, SwapResult};
+pub use swap::{run_swap, run_swap_with, SwapConfig, SwapResult};
 pub use trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+pub use transport::{
+    join_run, FailurePolicy, JoinSummary, MemoryTransport, NetStats, SocketTransport, Transport,
+};

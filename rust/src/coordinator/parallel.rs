@@ -14,7 +14,8 @@
 //! (`runtime::native::kernels`).
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 thread_local! {
@@ -84,7 +85,11 @@ pub fn default_threads() -> usize {
 /// this is a sequential loop on the calling thread — the two paths are
 /// observationally identical because `f(i, item)` owns all per-item state.
 ///
-/// A panic inside `f` propagates to the caller (scope joins all workers).
+/// A panic inside `f` is caught on the worker, siblings finish their
+/// current item and stop claiming new ones, and the FIRST panic is then
+/// re-raised on the caller — no worker ever dies holding a queue/slot
+/// mutex, so siblings never see a spurious `PoisonError` in place of the
+/// real panic message.
 pub fn parallel_map<I, T, F>(threads: usize, items: Vec<I>, f: F) -> Vec<T>
 where
     I: Send,
@@ -102,23 +107,39 @@ where
         items.into_iter().map(|it| Mutex::new(Some(it))).collect();
     let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     let workers = threads.min(n).min(MAX_SPAWN);
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
                 IN_PARALLEL_REGION.with(|c| c.set(true));
                 loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
                     let item = queue[i].lock().unwrap().take().expect("item claimed once");
-                    let out = f(i, item);
-                    *slots[i].lock().unwrap() = Some(out);
+                    match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
+                        Ok(out) => *slots[i].lock().unwrap() = Some(out),
+                        Err(payload) => {
+                            abort.store(true, Ordering::Relaxed);
+                            let mut slot = first_panic.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(payload);
+                            }
+                        }
+                    }
                 }
             });
         }
     });
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("every slot filled"))
@@ -328,6 +349,29 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn panicking_item_propagates_original_panic() {
+        // the original panic message must reach the caller (not a
+        // PoisonError from a sibling tripping over a poisoned mutex)
+        for threads in [1, 4] {
+            let caught = std::panic::catch_unwind(|| {
+                parallel_map(threads, (0..16).collect::<Vec<usize>>(), |_, x| {
+                    if x == 3 {
+                        panic!("worker 3 exploded");
+                    }
+                    x * 2
+                })
+            });
+            let payload = caught.expect_err("the panic must propagate");
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            assert!(msg.contains("worker 3 exploded"), "threads={threads}: got {msg:?}");
+        }
     }
 
     #[test]

@@ -7,10 +7,16 @@
 //! missing piece. File layout under a run directory:
 //!
 //! ```text
+//! run/run.meta.json        config fingerprint this directory belongs to
 //! run/phase1.ckpt          phase-1 weights
 //! run/phase1.meta.json     steps/epochs/train-acc/cluster-clock
 //! run/worker<k>.ckpt       finished phase-2 replicas
 //! ```
+//!
+//! The fingerprint (see `transport::run_fingerprint`) pins the model,
+//! dataset, and full phase recipe: resuming the directory with a different
+//! seed / workers / group_devices / dataset hard-errors instead of
+//! silently averaging incompatible weights.
 //!
 //! Determinism note: a resumed run reproduces the fresh run exactly —
 //! worker k always uses seed stream `100 + k` regardless of which process
@@ -18,8 +24,12 @@
 
 use std::path::{Path, PathBuf};
 
-use super::swap::{SwapConfig, SwapResult};
+use super::swap::{finish_swap, modeled_phase2_clock, SwapConfig, SwapResult};
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use super::transport::{
+    self, FailurePolicy, MemoryTransport, NetStats, Phase2Ctx, Phase2Report, Transport,
+    WorkerOutcome,
+};
 use crate::model::{load_params, save_params, ParamSet};
 use crate::runtime::Backend;
 use crate::sim::ClusterClock;
@@ -35,6 +45,10 @@ impl RunDir {
         Ok(RunDir { dir: dir.as_ref().to_path_buf() })
     }
 
+    fn run_meta(&self) -> PathBuf {
+        self.dir.join("run.meta.json")
+    }
+
     fn phase1_ckpt(&self) -> PathBuf {
         self.dir.join("phase1.ckpt")
     }
@@ -43,7 +57,7 @@ impl RunDir {
         self.dir.join("phase1.meta.json")
     }
 
-    fn worker_ckpt(&self, w: usize) -> PathBuf {
+    pub(crate) fn worker_ckpt(&self, w: usize) -> PathBuf {
         self.dir.join(format!("worker{w}.ckpt"))
     }
 
@@ -53,6 +67,33 @@ impl RunDir {
 
     pub fn finished_workers(&self, total: usize) -> Vec<usize> {
         (0..total).filter(|w| self.worker_ckpt(*w).exists()).collect()
+    }
+
+    /// Bind this directory to one config fingerprint: the first run writes
+    /// `run.meta.json`, every later run must present the identical string.
+    /// Without this check a directory seeded by a different
+    /// seed/workers/group_devices/dataset would hand back checkpoints that
+    /// average into garbage.
+    pub fn check_fingerprint(&self, fingerprint: &str) -> Result<()> {
+        let path = self.run_meta();
+        if path.exists() {
+            let meta = Json::parse(&std::fs::read_to_string(&path)?)?;
+            let have = meta
+                .req("fingerprint")?
+                .as_str()
+                .ok_or_else(|| Error::json("run meta: fingerprint must be a string"))?
+                .to_string();
+            if have != fingerprint {
+                return Err(Error::config(format!(
+                    "run dir {} belongs to a different configuration;\n  on disk:  {have}\n  this run: {fingerprint}\nuse a fresh --run-dir (or delete the old one) instead of mixing runs",
+                    self.dir.display()
+                )));
+            }
+        } else {
+            let meta = Json::obj(vec![("fingerprint", Json::str(fingerprint))]);
+            std::fs::write(path, meta.to_string_pretty())?;
+        }
+        Ok(())
     }
 
     pub fn save_phase1(
@@ -73,6 +114,8 @@ impl RunDir {
             ("comm", Json::Num(clock.comm)),
             ("data_hidden", Json::Num(clock.data_hidden)),
             ("data_exposed", Json::Num(clock.data_exposed)),
+            ("eval", Json::Num(clock.eval)),
+            ("lost", Json::Num(clock.lost)),
         ]);
         std::fs::write(self.phase1_meta(), meta.to_string_pretty())?;
         Ok(())
@@ -92,7 +135,7 @@ impl RunDir {
             train_acc: f("train_acc")?,
             train_loss: f("train_loss")?,
         };
-        // data fields are absent in pre-pipeline checkpoints: default 0
+        // fields absent in checkpoints from older layouts default to 0
         let opt = |k: &str| -> f64 {
             meta.req(k).ok().and_then(|v| v.as_f64()).unwrap_or(0.0)
         };
@@ -102,7 +145,8 @@ impl RunDir {
             comm: f("comm")?,
             data_hidden: opt("data_hidden"),
             data_exposed: opt("data_exposed"),
-            eval: 0.0,
+            eval: opt("eval"),
+            lost: opt("lost"),
         };
         Ok((params, progress, clock))
     }
@@ -113,11 +157,32 @@ impl RunDir {
 /// SwapResult a fresh `run_swap` would (modulo the snapshot trails, which
 /// are not persisted).
 pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Result<SwapResult> {
+    run_swap_resumable_with(env, cfg, dir, &MemoryTransport::new(), &FailurePolicy::default())
+}
+
+/// [`run_swap_resumable`] with an explicit phase-2 [`Transport`] and
+/// [`FailurePolicy`]. Only the *unfinished* workers go through the
+/// transport — with sockets, a rejoining `swap join` process can request
+/// its old worker id and adopt the slot. Workers the transport drops are
+/// excluded from the average; their checkpoints simply never appear, so a
+/// later resume of the same directory retries exactly those ids.
+pub fn run_swap_resumable_with(
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    dir: &RunDir,
+    transport: &dyn Transport,
+    policy: &FailurePolicy,
+) -> Result<SwapResult> {
+    if cfg.workers == 0 || cfg.group_devices == 0 {
+        return Err(Error::config("swap: workers/group_devices must be > 0"));
+    }
     let wall0 = std::time::Instant::now();
+    let fingerprint = transport::run_fingerprint(env, cfg);
+    dir.check_fingerprint(&fingerprint)?;
     let devices = cfg.total_devices();
 
     // ---- phase 1 (or resume) -------------------------------------------
-    let (params, p1, mut clock) = if dir.has_phase1() {
+    let (params, p1, clock) = if dir.has_phase1() {
         crate::info!("resume: phase 1 loaded from {}", dir.dir.display());
         dir.load_phase1(env)?
     } else {
@@ -147,91 +212,54 @@ pub fn run_swap_resumable(env: &TrainEnv, cfg: &SwapConfig, dir: &RunDir) -> Res
     let phase1_seconds = clock.seconds;
     let phase1_params = params.clone();
 
-    // ---- phase 2 (skip finished workers) --------------------------------
-    // Unfinished workers train CONCURRENTLY on `env.threads` OS threads
-    // (checkpoint files are per-worker, so the saves are disjoint); worker
-    // k's result is a pure function of (seed, 100 + k) either way, so a
-    // resumed, fresh, sequential or parallel run all agree bitwise.
-    let worker_runs = super::parallel::parallel_map(
-        env.threads,
-        (0..cfg.workers).collect::<Vec<_>>(),
-        |_, w| -> crate::util::Result<(ParamSet, ClusterClock)> {
-            let ckpt = dir.worker_ckpt(w);
-            // every worker's modeled duration counts even when its work is
-            // loaded from disk — the virtual cluster ran it either way
-            let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
-            let mut wclock = ClusterClock::new();
-            if ckpt.exists() {
-                crate::info!("resume: worker {w} loaded");
-                let wp = load_params(&ckpt, env.engine.manifest())?;
-                wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
-                if cfg.group_devices > 1 {
-                    for _ in 0..steps {
-                        wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
-                    }
-                }
-                // the original run priced its input pipeline every step;
-                // the same booking (hidden vs exposed per env.prefetch)
-                // must reappear on resume
-                let step_budget = env.cost.train_step_time(env.exec_batch)
-                    + if cfg.group_devices > 1 {
-                        env.cost.allreduce_time(cfg.group_devices)
-                    } else {
-                        0.0
-                    };
-                let data_time = env.cost.assembly_time(cfg.group_devices * env.exec_batch);
-                for _ in 0..steps {
-                    wclock.note_data(data_time, step_budget, env.prefetch);
-                }
-                Ok((wp, wclock))
-            } else {
-                let mut wp = params.clone();
-                let mut wm = wp.zeros_like();
-                run_sync_training(
-                    env,
-                    &mut wp,
-                    &mut wm,
-                    &super::swap::phase2_worker_config(cfg, env, w),
-                    &mut wclock,
-                    |_, _, _| {},
-                )?;
-                save_params(&ckpt, env.engine.manifest(), &wp)?;
-                Ok((wp, wclock))
-            }
-        },
-    );
-    let mut worker_params = Vec::with_capacity(cfg.workers);
-    let mut group_clocks = Vec::with_capacity(cfg.workers);
-    for run in worker_runs {
-        let (wp, wclock) = run?;
-        worker_params.push(wp);
-        group_clocks.push(wclock);
+    // ---- phase 2: load finished workers, run the rest -------------------
+    // Every worker's modeled duration counts even when its work is loaded
+    // from disk — the virtual cluster ran it either way. Worker k's result
+    // is a pure function of (seed, 100 + k), so a resumed, fresh,
+    // sequential, parallel, or remote run all agree bitwise.
+    let finished = dir.finished_workers(cfg.workers);
+    let pending: Vec<usize> =
+        (0..cfg.workers).filter(|w| !finished.contains(w)).collect();
+    let mut outcomes: Vec<(usize, WorkerOutcome)> = Vec::with_capacity(cfg.workers);
+    for &w in &finished {
+        crate::info!("resume: worker {w} loaded");
+        let wp = load_params(dir.worker_ckpt(w), env.engine.manifest())?;
+        outcomes.push((
+            w,
+            WorkerOutcome::Done {
+                params: wp,
+                clock: modeled_phase2_clock(env, cfg),
+                trail: Vec::new(),
+            },
+        ));
     }
-    clock.advance_parallel(&group_clocks);
-    let phase2_seconds = clock.seconds;
-
-    // ---- phase 3 (same as run_swap) --------------------------------------
-    let mut worker_stats = Vec::with_capacity(cfg.workers);
-    for wp in &worker_params {
-        worker_stats.push(env.bn_and_eval(wp, cfg.seed, &mut clock)?);
+    let mut net = NetStats::default();
+    if !pending.is_empty() {
+        let report = transport.run_phase2(&Phase2Ctx {
+            env,
+            cfg,
+            start: &params,
+            pending: &pending,
+            policy,
+            run_dir: Some(dir),
+            fingerprint,
+        })?;
+        outcomes.extend(report.outcomes);
+        net = report.net;
     }
-    let final_params = ParamSet::average_mt(&worker_params, env.threads)?;
-    let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
-    let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
 
-    Ok(SwapResult {
-        phase1: p1,
+    // ---- phases 2½ + 3 (same tail as run_swap_with) ---------------------
+    finish_swap(
+        env,
+        cfg,
+        policy,
+        transport.name(),
+        Phase2Report { outcomes, net },
+        p1,
         phase1_seconds,
-        phase2_seconds,
-        worker_params,
-        worker_stats,
-        final_params,
-        final_bn,
-        final_stats,
-        clock,
-        wall_seconds: wall0.elapsed().as_secs_f64(),
-        snapshots: Vec::new(),
         phase1_params,
-        phase1_snapshots: Vec::new(),
-    })
+        Vec::new(),
+        clock,
+        wall0,
+    )
 }

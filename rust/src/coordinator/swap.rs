@@ -9,8 +9,11 @@
 //! Phase 3: the divergent replicas are weight-averaged and the batch-norm
 //!          statistics are recomputed over the training data.
 
-use super::parallel;
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use super::transport::{
+    self, FailurePolicy, MemoryTransport, NetStats, Phase2Ctx, Phase2Report, Transport,
+    WorkerOutcome,
+};
 use crate::model::{BnState, ParamSet};
 use crate::optim::Schedule;
 use crate::runtime::{Backend, BatchStats};
@@ -90,10 +93,30 @@ pub struct SwapResult {
     pub phase1_params: ParamSet,
     /// phase-1 snapshot trail if requested
     pub phase1_snapshots: Vec<(usize, ParamSet)>,
+    /// workers excluded from the phase-3 average (id, reason) — empty on
+    /// a fully healthy run
+    pub dropped: Vec<(usize, String)>,
+    /// wire traffic the phase-2 transport actually moved (zero in-memory)
+    pub net: NetStats,
 }
 
-/// Run the full three-phase SWAP algorithm.
+/// Run the full three-phase SWAP algorithm in-process with the default
+/// failure policy — the historical entry point, bitwise-unchanged.
 pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
+    run_swap_with(env, cfg, &MemoryTransport::new(), &FailurePolicy::default())
+}
+
+/// Run SWAP with an explicit phase-2 [`Transport`] and [`FailurePolicy`].
+/// A worker the transport reports as `Dropped` (crash, hang, disconnect,
+/// straggler) is excluded from the phase-3 average instead of aborting
+/// the run; the run fails only when fewer than `policy.min_workers`
+/// replicas survive.
+pub fn run_swap_with(
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    transport: &dyn Transport,
+    policy: &FailurePolicy,
+) -> Result<SwapResult> {
     if cfg.workers == 0 || cfg.group_devices == 0 {
         return Err(Error::config("swap: workers/group_devices must be > 0"));
     }
@@ -140,62 +163,134 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
 
     // ---------------- Phase 2: independent refinement ------------------
     // Each group starts from the phase-1 weights with fresh momentum and a
-    // distinct data stream. The groups run CONCURRENTLY on real OS threads
-    // (`env.threads` of them) — the system the paper describes, not just
-    // the one the ClusterClock models. Every worker's state (params,
-    // momentum, sampler, augmentation RNG, clock, snapshot trail) is
-    // derived from its own (seed, 100 + w) stream inside the closure, so
-    // the result is bitwise identical for any thread count, including the
-    // fully sequential `threads = 1` path.
-    let snap = cfg.snapshot_every;
-    let worker_runs = parallel::parallel_map(
-        env.threads,
-        (0..cfg.workers).collect::<Vec<_>>(),
-        |_, w| -> Result<(ParamSet, ClusterClock, Vec<(usize, ParamSet)>)> {
-            let mut wp = params.clone();
-            let mut wm = wp.zeros_like();
-            let mut wclock = ClusterClock::new();
-            let mut trail = Vec::new();
-            run_sync_training(
-                env,
-                &mut wp,
-                &mut wm,
-                &phase2_worker_config(cfg, env, w),
-                &mut wclock,
-                |step, ps, _| {
-                    if let Some(every) = snap {
-                        if step % every == 0 {
-                            trail.push((step, ps.clone()));
-                        }
-                    }
-                },
-            )?;
-            Ok((wp, wclock, trail))
-        },
-    );
-    let mut worker_params = Vec::with_capacity(cfg.workers);
-    let mut snapshots: Snapshots = Vec::with_capacity(cfg.workers);
-    let mut group_clocks = Vec::with_capacity(cfg.workers);
-    for run in worker_runs {
-        let (wp, wclock, trail) = run?;
-        worker_params.push(wp);
-        group_clocks.push(wclock);
-        snapshots.push(trail);
+    // distinct data stream; how/where they execute (in-process threads,
+    // remote processes over sockets) is the transport's business. Worker
+    // w's replica is a pure function of (cfg.seed, 100 + w), so the
+    // transport can never change the result, only where it is computed.
+    let pending: Vec<usize> = (0..cfg.workers).collect();
+    let report = transport.run_phase2(&Phase2Ctx {
+        env,
+        cfg,
+        start: &params,
+        pending: &pending,
+        policy,
+        run_dir: None,
+        fingerprint: transport::run_fingerprint(env, cfg),
+    })?;
+    finish_swap(
+        env,
+        cfg,
+        policy,
+        transport.name(),
+        report,
+        p1,
+        phase1_seconds,
+        phase1_params,
+        phase1_snapshots,
+        clock,
+        wall0,
+    )
+}
+
+/// The modeled duration of ONE phase-2 worker — exactly what the live
+/// per-worker `ClusterClock` accumulates over the worker's steps. Used to
+/// price workers whose result is loaded from a checkpoint (resume) and to
+/// book the time a dropped worker wasted (`ClusterClock::lost`).
+pub(crate) fn modeled_phase2_clock(env: &TrainEnv, cfg: &SwapConfig) -> ClusterClock {
+    let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
+    let mut wclock = ClusterClock::new();
+    wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
+    if cfg.group_devices > 1 {
+        for _ in 0..steps {
+            wclock.advance_comm(env.cost.allreduce_time(cfg.group_devices));
+        }
     }
-    // the modeled cluster waits for the slowest group, absorbing its full
-    // compute/comm breakdown (not booking comm seconds as compute)
+    // the original run priced its input pipeline every step; the same
+    // booking (hidden vs exposed per env.prefetch) must reappear here
+    let step_budget = env.cost.train_step_time(env.exec_batch)
+        + if cfg.group_devices > 1 {
+            env.cost.allreduce_time(cfg.group_devices)
+        } else {
+            0.0
+        };
+    let data_time = env.cost.assembly_time(cfg.group_devices * env.exec_batch);
+    for _ in 0..steps {
+        wclock.note_data(data_time, step_budget, env.prefetch);
+    }
+    wclock
+}
+
+/// Phases 2½ and 3, shared by `run_swap_with` and `run_swap_resumable_with`:
+/// split the transport's outcomes into survivors and drops, enforce the
+/// failure policy, advance the clock, then average + recompute BN + eval
+/// exactly as the historical code did (a zero-drop run is bitwise
+/// identical to it).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_swap(
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    policy: &FailurePolicy,
+    transport_name: &str,
+    report: Phase2Report,
+    p1: TrainProgress,
+    phase1_seconds: f64,
+    phase1_params: ParamSet,
+    phase1_snapshots: Vec<(usize, ParamSet)>,
+    mut clock: ClusterClock,
+    wall0: std::time::Instant,
+) -> Result<SwapResult> {
+    let mut outcomes = report.outcomes;
+    outcomes.sort_by_key(|(w, _)| *w);
+    let mut worker_params = Vec::with_capacity(cfg.workers);
+    let mut group_clocks = Vec::with_capacity(cfg.workers);
+    let mut snapshots: Snapshots = Vec::with_capacity(cfg.workers);
+    let mut dropped: Vec<(usize, String)> = Vec::new();
+    for (w, outcome) in outcomes {
+        match outcome {
+            WorkerOutcome::Done { params, clock: wclock, trail } => {
+                worker_params.push(params);
+                group_clocks.push(wclock);
+                snapshots.push(trail);
+            }
+            WorkerOutcome::Dropped { reason } => {
+                crate::warn_!(
+                    "phase 2 ({transport_name}): worker {w} dropped from the average: {reason}"
+                );
+                dropped.push((w, reason));
+            }
+        }
+    }
+    if worker_params.len() < policy.min_workers.max(1) {
+        return Err(Error::invalid(format!(
+            "phase 2 ({transport_name}): only {}/{} workers survived, need at least {}",
+            worker_params.len(),
+            cfg.workers,
+            policy.min_workers.max(1)
+        )));
+    }
+    // the modeled cluster waits for the slowest surviving group, absorbing
+    // its full compute/comm breakdown (not booking comm as compute); each
+    // dropped worker's full modeled phase-2 slot is booked as lost
     clock.advance_parallel(&group_clocks);
+    if !dropped.is_empty() {
+        let wasted = modeled_phase2_clock(env, cfg).seconds;
+        for _ in &dropped {
+            clock.note_drop(wasted);
+        }
+    }
     let phase2_seconds = clock.seconds;
 
-    // reporting-only: each worker's test accuracy before averaging
-    let mut worker_stats = Vec::with_capacity(cfg.workers);
+    // reporting-only: each survivor's test accuracy before averaging
+    let mut worker_stats = Vec::with_capacity(worker_params.len());
     for wp in &worker_params {
         worker_stats.push(env.bn_and_eval(wp, cfg.seed, &mut clock)?);
     }
 
     // ---------------- Phase 3: average + BN recompute ------------------
-    // streaming flat-arena mean: one output allocation, no W-way clone,
-    // chunk-parallel across env.threads (bitwise-identical to sequential)
+    // streaming flat-arena mean over the SURVIVORS (the paper's average is
+    // well-defined for any non-empty subset): one output allocation, no
+    // W-way clone, chunk-parallel across env.threads (bitwise-identical
+    // to sequential)
     let final_params = ParamSet::average_mt(&worker_params, env.threads)?;
     let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
     let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
@@ -214,14 +309,17 @@ pub fn run_swap(env: &TrainEnv, cfg: &SwapConfig) -> Result<SwapResult> {
         snapshots,
         phase1_params,
         phase1_snapshots,
+        dropped,
+        net: report.net,
     };
     // one source of truth for the "before averaging" accuracy: the
     // SwapResult accessor (previously this log divided by cfg.workers
     // while the accessor divided by worker_stats.len())
     crate::info!(
-        "phase 3 done: test acc {:.4} (workers before avg: {:.4}), cluster {:.3}s",
+        "phase 3 done: test acc {:.4} (workers before avg: {:.4}, {} dropped), cluster {:.3}s",
         result.final_stats.accuracy1(),
         result.before_avg_acc1(),
+        result.dropped.len(),
         result.clock.seconds
     );
     Ok(result)

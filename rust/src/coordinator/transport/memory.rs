@@ -1,0 +1,91 @@
+//! In-process transport: phase-2 workers as OS threads via
+//! `parallel_map`, exactly the execution the coordinator always had. On
+//! the zero-failure path this is bitwise-identical to the historical
+//! `run_swap` (same closure, same float-op order, same collection order —
+//! pinned by rust/tests/transport.rs); what changed is only that a worker
+//! `Err` now becomes a `Dropped` outcome instead of killing the run.
+
+use super::super::parallel;
+use super::super::swap::phase2_worker_config;
+use super::super::trainer::run_sync_training;
+use super::{Phase2Ctx, Phase2Report, Transport, WorkerOutcome};
+use crate::model::{save_params, ParamSet};
+use crate::runtime::Backend;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result};
+
+/// Phase-2 workers on in-process OS threads (`env.threads` of them).
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTransport {
+    /// Test-only fault injection: these worker ids fail instead of
+    /// training (the in-memory analogue of a crashed remote process).
+    pub fail_workers: Vec<usize>,
+}
+
+impl MemoryTransport {
+    pub fn new() -> Self {
+        MemoryTransport::default()
+    }
+}
+
+impl Transport for MemoryTransport {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn run_phase2(&self, ctx: &Phase2Ctx) -> Result<Phase2Report> {
+        let env = ctx.env;
+        let cfg = ctx.cfg;
+        let snap = cfg.snapshot_every;
+        // Each worker's state (params, momentum, sampler, augmentation
+        // RNG, clock, snapshot trail) is derived from its own
+        // (seed, 100 + w) stream inside the closure, so the result is
+        // bitwise identical for any thread count, including the fully
+        // sequential `threads = 1` path.
+        type Run = (ParamSet, ClusterClock, Vec<(usize, ParamSet)>);
+        let runs = parallel::parallel_map(
+            env.threads,
+            ctx.pending.to_vec(),
+            |_, w| -> (usize, Result<Run>) {
+                if self.fail_workers.contains(&w) {
+                    return (w, Err(Error::invalid(format!("injected fault: worker {w}"))));
+                }
+                let run = (|| {
+                    let mut wp = ctx.start.clone();
+                    let mut wm = wp.zeros_like();
+                    let mut wclock = ClusterClock::new();
+                    let mut trail = Vec::new();
+                    run_sync_training(
+                        env,
+                        &mut wp,
+                        &mut wm,
+                        &phase2_worker_config(cfg, env, w),
+                        &mut wclock,
+                        |step, ps, _| {
+                            if let Some(every) = snap {
+                                if step % every == 0 {
+                                    trail.push((step, ps.clone()));
+                                }
+                            }
+                        },
+                    )?;
+                    // persist immediately (resumable runs): a later crash
+                    // only loses the workers still in flight
+                    if let Some(dir) = ctx.run_dir {
+                        save_params(dir.worker_ckpt(w), env.engine.manifest(), &wp)?;
+                    }
+                    Ok((wp, wclock, trail))
+                })();
+                (w, run)
+            },
+        );
+        let outcomes = runs
+            .into_iter()
+            .map(|(w, run)| match run {
+                Ok((params, clock, trail)) => (w, WorkerOutcome::Done { params, clock, trail }),
+                Err(e) => (w, WorkerOutcome::Dropped { reason: e.to_string() }),
+            })
+            .collect();
+        Ok(Phase2Report { outcomes, net: Default::default() })
+    }
+}

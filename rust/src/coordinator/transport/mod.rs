@@ -1,0 +1,178 @@
+//! Phase-2 execution transports: how the coordinator hands the phase-1
+//! weights to its W independent workers and collects the refined replicas
+//! back, with a per-worker failure policy in between.
+//!
+//! The paper's phase-3 average is well-defined over ANY non-empty subset
+//! of replicas (Algorithm 1 line 27 is a plain mean over workers), which
+//! is exactly what makes SWAP elastic: a crashed, hung, or disconnected
+//! worker should cost its contribution, not the run. The old coordinator
+//! threw that property away — a single worker `Err` propagated out of
+//! `run_swap` and destroyed every surviving worker's finished model. A
+//! `Transport` instead reports a per-worker [`WorkerOutcome`] (`Done` or
+//! `Dropped`), and the coordinator averages the survivors, logging each
+//! drop and booking its wasted modeled time in `ClusterClock::lost`.
+//!
+//! Two implementations:
+//! * [`MemoryTransport`] — phase-2 workers as in-process OS threads via
+//!   `parallel_map`, exactly the historical execution; the zero-failure
+//!   path is bitwise-identical to it (pinned by rust/tests/transport.rs).
+//! * [`SocketTransport`] — workers as separate processes over TCP or a
+//!   Unix socket (`swap-train serve` / `swap-train join`), speaking the
+//!   length-prefix framed protocol of [`wire`]: join handshake, phase-1
+//!   weight broadcast, heartbeats, worker-done weight upload.
+
+pub mod memory;
+pub mod socket;
+pub mod wire;
+
+pub use memory::MemoryTransport;
+pub use socket::{join_run, JoinSummary, SocketTransport};
+
+use std::time::Duration;
+
+use super::resume::RunDir;
+use super::swap::SwapConfig;
+use super::trainer::TrainEnv;
+use crate::model::ParamSet;
+use crate::runtime::Backend;
+use crate::sim::ClusterClock;
+use crate::util::{Json, Result};
+
+/// When to give up on a phase-2 worker instead of the whole run. All
+/// timeouts govern the *executing* cluster (wall time), never the modeled
+/// `ClusterClock` — a dropped worker changes which replicas are averaged,
+/// not how the survivors' time is priced.
+#[derive(Debug, Clone)]
+pub struct FailurePolicy {
+    /// fewest phase-2 survivors the phase-3 average may be taken over;
+    /// below this the run errors out (1 = any non-empty subset, the
+    /// paper's minimum for a well-defined average)
+    pub min_workers: usize,
+    /// join window: how long the coordinator waits for workers to connect
+    /// after phase 1 before the missing ones are dropped
+    pub connect_timeout: Duration,
+    /// per-link silence (no heartbeat, progress, or upload) tolerated
+    /// before a worker is declared dead
+    pub io_timeout: Duration,
+    /// interval at which a joined worker sends heartbeats
+    pub heartbeat: Duration,
+    /// straggler deadline: once the first worker uploads its replica, the
+    /// rest have this much longer before they are dropped
+    pub straggler_grace: Duration,
+    /// client-side connect attempts before `join` gives up (the server
+    /// may still be in phase 1 when a worker starts)
+    pub join_retries: usize,
+    /// backoff between connect attempts (linear: attempt k waits k times
+    /// this long)
+    pub retry_backoff: Duration,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        FailurePolicy {
+            min_workers: 1,
+            connect_timeout: Duration::from_secs(60),
+            io_timeout: Duration::from_secs(10),
+            heartbeat: Duration::from_secs(1),
+            straggler_grace: Duration::from_secs(600),
+            join_retries: 60,
+            retry_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+/// What one phase-2 worker came back with.
+pub enum WorkerOutcome {
+    /// The worker finished and delivered its refined replica.
+    Done {
+        params: ParamSet,
+        clock: ClusterClock,
+        /// phase-2 snapshot trail if requested (memory transport only —
+        /// trails are figure instrumentation and are not shipped over
+        /// the wire)
+        trail: Vec<(usize, ParamSet)>,
+    },
+    /// The worker crashed, hung, disconnected, or never joined: it is
+    /// excluded from the phase-3 average.
+    Dropped { reason: String },
+}
+
+/// Everything a transport needs to run the pending phase-2 workers.
+pub struct Phase2Ctx<'a> {
+    pub env: &'a TrainEnv<'a>,
+    pub cfg: &'a SwapConfig,
+    /// the phase-1 weights every worker starts from
+    pub start: &'a ParamSet,
+    /// worker ids still to run, ascending (a resumed run omits the ids
+    /// already finished on disk)
+    pub pending: &'a [usize],
+    pub policy: &'a FailurePolicy,
+    /// persist each finished worker immediately (resumable runs), so a
+    /// crash mid-phase-2 only loses in-flight workers
+    pub run_dir: Option<&'a RunDir>,
+    /// config fingerprint of this run — socket joins must present the
+    /// identical string (see [`run_fingerprint`])
+    pub fingerprint: String,
+}
+
+/// Wire-traffic accounting for one phase-2 round (zero for the in-memory
+/// transport). Both directions are counted: the phase-1 broadcast down to
+/// each worker and the finished replica uploaded back.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetStats {
+    /// total framed bytes moved (length prefixes, tags, and payloads)
+    pub framed_bytes: u64,
+    /// raw f32 weight payload inside those frames — comparable to
+    /// `CostModel::phase2_comm_bytes`, which predicts exactly this
+    pub param_bytes: u64,
+}
+
+/// Outcome of one phase-2 round over a transport.
+#[derive(Default)]
+pub struct Phase2Report {
+    /// one entry per id in `Phase2Ctx::pending` (any order; the
+    /// coordinator sorts by worker id before averaging)
+    pub outcomes: Vec<(usize, WorkerOutcome)>,
+    pub net: NetStats,
+}
+
+/// How phase 2 is executed: in-process threads or remote processes. The
+/// contract every implementation must honor: worker `w` trains with
+/// `phase2_worker_config(cfg, env, w)` from `ctx.start`, so its replica is
+/// a pure function of `(cfg.seed, 100 + w)` — transports can never change
+/// the result, only where it is computed.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+    fn run_phase2(&self, ctx: &Phase2Ctx) -> Result<Phase2Report>;
+}
+
+/// Everything that must agree for two processes (or two sessions of one
+/// process) to contribute replicas to the same average: the model, the
+/// data distribution, and the full phase recipe. Serialized as canonical
+/// JSON (sorted keys) so equality is a string compare; written to
+/// `run.meta.json` by resumable runs and exchanged in the socket join
+/// handshake.
+pub fn run_fingerprint(env: &TrainEnv, cfg: &SwapConfig) -> String {
+    let m = env.engine.manifest();
+    Json::obj(vec![
+        ("arch", Json::str(m.model.arch.clone())),
+        ("model_width", Json::Num(m.model.width as f64)),
+        ("num_params", Json::Num(m.num_params as f64)),
+        ("num_classes", Json::Num(env.train.num_classes as f64)),
+        ("image_size", Json::Num(env.train.image_size as f64)),
+        ("n_train", Json::Num(env.train.n as f64)),
+        ("n_test", Json::Num(env.test.n as f64)),
+        ("augment", Json::str(format!("{:?}", env.augment))),
+        ("exec_batch", Json::Num(env.exec_batch as f64)),
+        ("bn_batches", Json::Num(env.bn_batches as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("group_devices", Json::Num(cfg.group_devices as f64)),
+        ("phase1_max_epochs", Json::Num(cfg.phase1_max_epochs as f64)),
+        ("phase1_stop_acc", Json::Num(cfg.phase1_stop_acc)),
+        ("phase1_sched", Json::str(format!("{:?}", cfg.phase1_sched))),
+        ("phase2_epochs", Json::Num(cfg.phase2_epochs as f64)),
+        ("phase2_sched", Json::str(format!("{:?}", cfg.phase2_sched))),
+    ])
+    .to_string()
+}

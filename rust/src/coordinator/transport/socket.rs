@@ -1,0 +1,592 @@
+//! Socket transport: phase-2 workers as separate processes over TCP or a
+//! Unix domain socket, speaking the framed protocol of [`super::wire`].
+//!
+//! Coordinator side (`serve_phase2`, via `swap-train serve`): after phase
+//! 1 the coordinator listens on `addr`, admits workers during a join
+//! window (checking each one's config fingerprint, assigning unfinished
+//! worker ids — a rejoining process may request a specific id), broadcasts
+//! the phase-1 weights, then supervises one reader thread per link. A
+//! worker that uploads its replica is `Done`; one that disconnects, stays
+//! silent past `FailurePolicy::io_timeout`, or outlives the straggler
+//! deadline (first finisher + `straggler_grace`) is `Dropped` — its link
+//! is shut down and the run proceeds without it.
+//!
+//! Worker side ([`join_run`], via `swap-train join`): connect with bounded
+//! retry/backoff (the coordinator may still be in phase 1), present the
+//! fingerprint, receive a worker id + phase-1 weights, train the worker's
+//! deterministic `(seed, 100 + w)` recipe while heartbeating, and upload
+//! the replica. The weight arenas cross the wire as exact little-endian
+//! f32 bytes, so a socket run is bitwise-identical to an in-memory run.
+//!
+//! `addr` selects the family: anything containing ':' is a TCP
+//! host:port, anything else is a Unix socket path.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::super::swap::{phase2_worker_config, SwapConfig};
+use super::super::trainer::{run_sync_training, TrainEnv};
+use super::wire::{self, Msg};
+use super::{FailurePolicy, NetStats, Phase2Ctx, Phase2Report, Transport, WorkerOutcome};
+use crate::model::{save_params, ParamLayout, ParamSet};
+use crate::runtime::Backend;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result};
+
+/// Phase-2 workers as remote processes; see the module docs.
+#[derive(Debug, Clone)]
+pub struct SocketTransport {
+    /// "host:port" for TCP, a filesystem path for a Unix socket
+    pub addr: String,
+}
+
+impl SocketTransport {
+    pub fn new(addr: impl Into<String>) -> Self {
+        SocketTransport { addr: addr.into() }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn run_phase2(&self, ctx: &Phase2Ctx) -> Result<Phase2Report> {
+        serve_phase2(&self.addr, ctx)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Address-family abstraction
+// ---------------------------------------------------------------------
+
+fn is_tcp(addr: &str) -> bool {
+    addr.contains(':')
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn connect(addr: &str) -> io::Result<Conn> {
+        if is_tcp(addr) {
+            return Ok(Conn::Tcp(TcpStream::connect(addr)?));
+        }
+        #[cfg(unix)]
+        {
+            Ok(Conn::Unix(UnixStream::connect(addr)?))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                format!("addr '{addr}' is a unix socket path, unsupported on this platform"),
+            ))
+        }
+    }
+
+    fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => Ok(Conn::Tcp(s.try_clone()?)),
+            #[cfg(unix)]
+            Conn::Unix(s) => Ok(Conn::Unix(s.try_clone()?)),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Force any blocked read on a clone of this stream to return.
+    fn shutdown(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &str) -> Result<Listener> {
+        if is_tcp(addr) {
+            return Ok(Listener::Tcp(TcpListener::bind(addr)?));
+        }
+        #[cfg(unix)]
+        {
+            // a previous run's socket file would make bind fail
+            let _ = std::fs::remove_file(addr);
+            Ok(Listener::Unix(UnixListener::bind(addr)?))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(Error::config(format!(
+                "addr '{addr}' is a unix socket path, unsupported on this platform"
+            )))
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => Ok(Conn::Tcp(l.accept()?.0)),
+            #[cfg(unix)]
+            Listener::Unix(l) => Ok(Conn::Unix(l.accept()?.0)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------
+
+/// Per-link state shared between its reader thread and the supervisor.
+struct LinkState {
+    worker: usize,
+    outcome: Mutex<Option<WorkerOutcome>>,
+    last_heard: Mutex<Instant>,
+}
+
+/// First writer wins: the supervisor may drop a link (timeout, straggler)
+/// in the same instant its reader delivers a verdict.
+fn set_once(slot: &Mutex<Option<WorkerOutcome>>, outcome: WorkerOutcome) {
+    let mut g = slot.lock().unwrap();
+    if g.is_none() {
+        *g = Some(outcome);
+    }
+}
+
+fn serve_phase2(addr: &str, ctx: &Phase2Ctx) -> Result<Phase2Report> {
+    let policy = ctx.policy;
+    let listener = Listener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    crate::info!(
+        "serve: listening on {addr} for {} phase-2 workers (join window {:?})",
+        ctx.pending.len(),
+        policy.connect_timeout
+    );
+
+    let sent = AtomicU64::new(0);
+    let recvd = AtomicU64::new(0);
+    let payload = AtomicU64::new(0);
+
+    // ---- join window ---------------------------------------------------
+    let mut links: Vec<(usize, Conn)> = Vec::new();
+    let mut unassigned: Vec<usize> = ctx.pending.to_vec();
+    let deadline = Instant::now() + policy.connect_timeout;
+    while !unassigned.is_empty() && Instant::now() < deadline {
+        match listener.accept() {
+            Ok(conn) => {
+                if let Some((w, conn)) =
+                    handshake(conn, ctx, &mut unassigned, &sent, &recvd, &payload)
+                {
+                    crate::info!("serve: worker {w} joined");
+                    links.push((w, conn));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut outcomes: Vec<(usize, WorkerOutcome)> = unassigned
+        .iter()
+        .map(|&w| {
+            (
+                w,
+                WorkerOutcome::Dropped {
+                    reason: format!("no worker joined within {:?}", policy.connect_timeout),
+                },
+            )
+        })
+        .collect();
+
+    // ---- supervise one reader thread per link --------------------------
+    let layout = ctx.start.layout().clone();
+    let mut states: Vec<LinkState> = Vec::with_capacity(links.len());
+    let mut ctls: Vec<Conn> = Vec::with_capacity(links.len());
+    let mut conns: Vec<Conn> = Vec::with_capacity(links.len());
+    for (w, conn) in links {
+        ctls.push(conn.try_clone()?);
+        states.push(LinkState {
+            worker: w,
+            outcome: Mutex::new(None),
+            last_heard: Mutex::new(Instant::now()),
+        });
+        conns.push(conn);
+    }
+    std::thread::scope(|s| {
+        for (i, conn) in conns.into_iter().enumerate() {
+            let st = &states[i];
+            let layout = &layout;
+            let recvd = &recvd;
+            let payload = &payload;
+            s.spawn(move || reader_loop(conn, st, ctx, layout, recvd, payload));
+        }
+        // the supervisor: polls liveness and applies the failure policy,
+        // shutting down a link to force its blocked reader to return
+        let mut first_done: Option<Instant> = None;
+        loop {
+            let now = Instant::now();
+            let mut open = 0usize;
+            let mut any_done = false;
+            for st in &states {
+                match &*st.outcome.lock().unwrap() {
+                    Some(WorkerOutcome::Done { .. }) => any_done = true,
+                    Some(WorkerOutcome::Dropped { .. }) => {}
+                    None => open += 1,
+                }
+            }
+            if any_done && first_done.is_none() {
+                first_done = Some(now);
+            }
+            if open == 0 {
+                break;
+            }
+            for (st, ctl) in states.iter().zip(&ctls) {
+                if st.outcome.lock().unwrap().is_some() {
+                    continue;
+                }
+                let silent = now.duration_since(*st.last_heard.lock().unwrap());
+                if silent > policy.io_timeout {
+                    set_once(
+                        &st.outcome,
+                        WorkerOutcome::Dropped {
+                            reason: format!("no heartbeat within {:?}", policy.io_timeout),
+                        },
+                    );
+                    ctl.shutdown();
+                } else if let Some(t0) = first_done {
+                    if now.duration_since(t0) > policy.straggler_grace {
+                        set_once(
+                            &st.outcome,
+                            WorkerOutcome::Dropped {
+                                reason: format!(
+                                    "straggler: unfinished {:?} after the first worker",
+                                    policy.straggler_grace
+                                ),
+                            },
+                        );
+                        ctl.shutdown();
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    });
+    for st in states {
+        let outcome = st.outcome.into_inner().unwrap().unwrap_or(WorkerOutcome::Dropped {
+            reason: "link reader exited without a verdict".to_string(),
+        });
+        outcomes.push((st.worker, outcome));
+    }
+    Ok(Phase2Report {
+        outcomes,
+        net: NetStats {
+            framed_bytes: sent.load(Ordering::Relaxed) + recvd.load(Ordering::Relaxed),
+            param_bytes: payload.load(Ordering::Relaxed),
+        },
+    })
+}
+
+/// Admit one candidate connection: read its Join, check the fingerprint,
+/// assign a worker id (the requested unfinished id if free, else the
+/// lowest), send the phase-1 weights. `None` drops the candidate without
+/// consuming a worker slot.
+fn handshake(
+    conn: Conn,
+    ctx: &Phase2Ctx,
+    unassigned: &mut Vec<usize>,
+    sent: &AtomicU64,
+    recvd: &AtomicU64,
+    payload: &AtomicU64,
+) -> Option<(usize, Conn)> {
+    let mut conn = conn;
+    // the listener is non-blocking; the handshake itself must not be (but
+    // also must not hang the join loop on a silent client)
+    conn.set_nonblocking(false).ok()?;
+    conn.set_read_timeout(Some(ctx.policy.io_timeout)).ok()?;
+    let (msg, nb) = match wire::read_msg(&mut conn) {
+        Ok(x) => x,
+        Err(e) => {
+            crate::warn_!("serve: handshake failed: {e}");
+            return None;
+        }
+    };
+    recvd.fetch_add(nb, Ordering::Relaxed);
+    let Msg::Join { fingerprint, resume } = msg else {
+        crate::warn_!("serve: candidate spoke out of protocol, dropped");
+        return None;
+    };
+    if fingerprint != ctx.fingerprint {
+        crate::warn_!("serve: rejected join with a mismatched config fingerprint");
+        let reject = Msg::Reject {
+            reason: format!(
+                "config fingerprint mismatch: coordinator runs {}, you presented {}",
+                ctx.fingerprint, fingerprint
+            ),
+        };
+        if let Ok(nb) = wire::write_msg(&mut conn, &reject) {
+            sent.fetch_add(nb, Ordering::Relaxed);
+        }
+        return None;
+    }
+    let w = match resume {
+        Some(r) if unassigned.contains(&r) => r,
+        _ => *unassigned.iter().min()?,
+    };
+    let assign = Msg::Assign { worker: w, params: ctx.start.data().to_vec() };
+    match wire::write_msg(&mut conn, &assign) {
+        Ok(nb) => {
+            sent.fetch_add(nb, Ordering::Relaxed);
+            payload.fetch_add(4 * ctx.start.numel() as u64, Ordering::Relaxed);
+        }
+        Err(e) => {
+            crate::warn_!("serve: could not send weights to a joining worker: {e}");
+            return None;
+        }
+    }
+    conn.set_read_timeout(None).ok()?;
+    unassigned.retain(|&x| x != w);
+    Some((w, conn))
+}
+
+fn reader_loop(
+    mut conn: Conn,
+    st: &LinkState,
+    ctx: &Phase2Ctx,
+    layout: &Arc<ParamLayout>,
+    recvd: &AtomicU64,
+    payload: &AtomicU64,
+) {
+    let w = st.worker;
+    loop {
+        match wire::read_msg(&mut conn) {
+            Ok((msg, nb)) => {
+                recvd.fetch_add(nb, Ordering::Relaxed);
+                *st.last_heard.lock().unwrap() = Instant::now();
+                match msg {
+                    Msg::Heartbeat { .. } => {}
+                    Msg::Done { worker: _, params, clock } => {
+                        payload.fetch_add(4 * params.len() as u64, Ordering::Relaxed);
+                        let outcome = match ParamSet::from_data(layout.clone(), params) {
+                            Ok(wp) => {
+                                if let Some(dir) = ctx.run_dir {
+                                    if let Err(e) =
+                                        save_params(dir.worker_ckpt(w), ctx.env.engine.manifest(), &wp)
+                                    {
+                                        crate::warn_!("serve: checkpoint of worker {w} failed: {e}");
+                                    }
+                                }
+                                WorkerOutcome::Done { params: wp, clock, trail: Vec::new() }
+                            }
+                            Err(e) => WorkerOutcome::Dropped {
+                                reason: format!("bad weight upload: {e}"),
+                            },
+                        };
+                        set_once(&st.outcome, outcome);
+                        break;
+                    }
+                    Msg::Abort { worker: _, reason } => {
+                        set_once(
+                            &st.outcome,
+                            WorkerOutcome::Dropped { reason: format!("worker aborted: {reason}") },
+                        );
+                        break;
+                    }
+                    _ => {
+                        set_once(
+                            &st.outcome,
+                            WorkerOutcome::Dropped { reason: "spoke out of protocol".to_string() },
+                        );
+                        conn.shutdown();
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                // EOF, reset, or a supervisor-initiated shutdown (in which
+                // case the outcome is already set and this is a no-op)
+                set_once(
+                    &st.outcome,
+                    WorkerOutcome::Dropped { reason: format!("connection lost: {e}") },
+                );
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// What a successful `join_run` did, for CLI reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct JoinSummary {
+    pub worker: usize,
+    pub steps: usize,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+/// Join a coordinator at `addr` as one phase-2 worker: connect (with
+/// bounded retry — the coordinator may still be in phase 1), present this
+/// process's config fingerprint, train the assigned worker's deterministic
+/// recipe from the broadcast phase-1 weights, and upload the replica.
+/// `want` asks to adopt a specific unfinished worker id (rejoining after
+/// a crash); the coordinator honors it when free.
+pub fn join_run(
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    addr: &str,
+    policy: &FailurePolicy,
+    want: Option<usize>,
+) -> Result<JoinSummary> {
+    let fingerprint = super::run_fingerprint(env, cfg);
+    let mut conn = None;
+    for attempt in 0..=policy.join_retries {
+        match Conn::connect(addr) {
+            Ok(c) => {
+                conn = Some(c);
+                break;
+            }
+            Err(e) => {
+                if attempt == policy.join_retries {
+                    return Err(Error::config(format!(
+                        "join: cannot reach {addr} after {} attempts: {e}",
+                        attempt + 1
+                    )));
+                }
+                std::thread::sleep(policy.retry_backoff * (attempt as u32 + 1));
+            }
+        }
+    }
+    let mut conn = conn.expect("loop either set a connection or returned");
+    let mut sent = 0u64;
+    let mut recvd = 0u64;
+    sent += wire::write_msg(&mut conn, &Msg::Join { fingerprint, resume: want })?;
+    conn.set_read_timeout(Some(policy.io_timeout))?;
+    let (msg, nb) = wire::read_msg(&mut conn)?;
+    recvd += nb;
+    let (w, start) = match msg {
+        Msg::Assign { worker, params } => {
+            let layout = ParamLayout::of_params(env.engine.manifest());
+            (worker, ParamSet::from_data(layout, params)?)
+        }
+        Msg::Reject { reason } => return Err(Error::config(format!("join rejected: {reason}"))),
+        _ => return Err(Error::invalid("join: coordinator spoke out of protocol")),
+    };
+    conn.set_read_timeout(None)?;
+    crate::info!("join: assigned worker {w}, training");
+
+    let mut wp = start;
+    let mut wm = wp.zeros_like();
+    let mut wclock = ClusterClock::new();
+    let mut last_hb = Instant::now();
+    let mut hb_dead = false;
+    let progress = run_sync_training(
+        env,
+        &mut wp,
+        &mut wm,
+        &phase2_worker_config(cfg, env, w),
+        &mut wclock,
+        |step, _, _| {
+            if !hb_dead && last_hb.elapsed() >= policy.heartbeat {
+                match wire::write_msg(&mut conn, &Msg::Heartbeat { worker: w, step: step as u64 }) {
+                    Ok(nb) => {
+                        sent += nb;
+                        last_hb = Instant::now();
+                    }
+                    // the coordinator is gone or dropped us; keep training
+                    // (the result is still correct) and let the final
+                    // upload surface the error
+                    Err(_) => hb_dead = true,
+                }
+            }
+        },
+    );
+    match progress {
+        Ok(p) => {
+            sent += wire::write_msg(
+                &mut conn,
+                &Msg::Done { worker: w, params: wp.into_data(), clock: wclock },
+            )?;
+            crate::info!("join: worker {w} done after {} steps", p.steps);
+            Ok(JoinSummary { worker: w, steps: p.steps, bytes_sent: sent, bytes_received: recvd })
+        }
+        Err(e) => {
+            let _ = wire::write_msg(
+                &mut conn,
+                &Msg::Abort { worker: w, reason: e.to_string() },
+            );
+            Err(e)
+        }
+    }
+}

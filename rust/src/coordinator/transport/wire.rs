@@ -1,0 +1,336 @@
+//! Length-prefix framed wire protocol for the socket transport.
+//!
+//! Every message is one frame: a `u32` little-endian payload length, then
+//! the payload — a one-byte tag followed by the tag's fields. Fields are
+//! fixed-width little-endian scalars, `u32`-length-prefixed UTF-8 strings,
+//! and `u32`-count-prefixed `f32` arenas (the weight payload is the flat
+//! parameter arena verbatim, so a replica round-trips bit-exactly).
+//!
+//! ```text
+//! Join      { fingerprint: str, resume: u64 (MAX = none) }   worker -> coord
+//! Assign    { worker: u64, params: f32s }                    coord  -> worker
+//! Reject    { reason: str }                                  coord  -> worker
+//! Heartbeat { worker: u64, step: u64 }                       worker -> coord
+//! Done      { worker: u64, params: f32s, clock: 6 x f64 }    worker -> coord
+//! Abort     { worker: u64, reason: str }                     worker -> coord
+//! ```
+//!
+//! Every encode/decode returns the exact framed byte count, feeding the
+//! transport's `NetStats` — the byte-accounting tests compare those
+//! measurements against `CostModel::phase2_comm_bytes` and the frame-size
+//! formulas below.
+
+use std::io::{Read, Write};
+
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result};
+
+/// Hard upper bound on one frame's payload (hostile-input guard; the
+/// largest legitimate frame is a weight upload, well under this).
+pub const MAX_FRAME: usize = 1 << 30;
+
+const TAG_JOIN: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_HEARTBEAT: u8 = 4;
+const TAG_DONE: u8 = 5;
+const TAG_ABORT: u8 = 6;
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker asks to participate, presenting its config fingerprint and
+    /// (optionally) the unfinished worker id it wants to adopt.
+    Join { fingerprint: String, resume: Option<usize> },
+    /// Coordinator assigns a worker id and broadcasts the phase-1 weights.
+    Assign { worker: usize, params: Vec<f32> },
+    /// Coordinator refuses a join (fingerprint mismatch, no free slot).
+    Reject { reason: String },
+    /// Worker liveness signal, sent every `FailurePolicy::heartbeat`.
+    Heartbeat { worker: usize, step: u64 },
+    /// Worker uploads its finished replica and its modeled clock.
+    Done { worker: usize, params: Vec<f32>, clock: ClusterClock },
+    /// Worker reports a terminal error (it will be dropped, not retried).
+    Abort { worker: usize, reason: String },
+}
+
+/// Encoded size of a `params` field (count prefix + f32 payload).
+pub fn params_field_bytes(n: usize) -> u64 {
+    4 + 4 * n as u64
+}
+
+/// Total framed size of an `Assign` carrying `n` parameters.
+pub fn assign_frame_bytes(n: usize) -> u64 {
+    4 + 1 + 8 + params_field_bytes(n)
+}
+
+/// Total framed size of a `Done` carrying `n` parameters.
+pub fn done_frame_bytes(n: usize) -> u64 {
+    4 + 1 + 8 + params_field_bytes(n) + 6 * 8
+}
+
+fn put_u32(p: &mut Vec<u8>, v: u32) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(p: &mut Vec<u8>, v: u64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(p: &mut Vec<u8>, v: f64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    put_u32(p, s.len() as u32);
+    p.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(p: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(p, xs.len() as u32);
+    p.reserve(4 * xs.len());
+    for x in xs {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Write one framed message; returns the exact bytes put on the wire.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<u64> {
+    let mut p = Vec::new();
+    match msg {
+        Msg::Join { fingerprint, resume } => {
+            p.push(TAG_JOIN);
+            put_str(&mut p, fingerprint);
+            put_u64(&mut p, resume.map(|r| r as u64).unwrap_or(u64::MAX));
+        }
+        Msg::Assign { worker, params } => {
+            p.push(TAG_ASSIGN);
+            put_u64(&mut p, *worker as u64);
+            put_f32s(&mut p, params);
+        }
+        Msg::Reject { reason } => {
+            p.push(TAG_REJECT);
+            put_str(&mut p, reason);
+        }
+        Msg::Heartbeat { worker, step } => {
+            p.push(TAG_HEARTBEAT);
+            put_u64(&mut p, *worker as u64);
+            put_u64(&mut p, *step);
+        }
+        Msg::Done { worker, params, clock } => {
+            p.push(TAG_DONE);
+            put_u64(&mut p, *worker as u64);
+            put_f32s(&mut p, params);
+            put_f64(&mut p, clock.seconds);
+            put_f64(&mut p, clock.compute);
+            put_f64(&mut p, clock.comm);
+            put_f64(&mut p, clock.data_hidden);
+            put_f64(&mut p, clock.data_exposed);
+            put_f64(&mut p, clock.eval);
+        }
+        Msg::Abort { worker, reason } => {
+            p.push(TAG_ABORT);
+            put_u64(&mut p, *worker as u64);
+            put_str(&mut p, reason);
+        }
+    }
+    if p.len() > MAX_FRAME {
+        return Err(Error::invalid(format!("wire: frame too large ({} bytes)", p.len())));
+    }
+    w.write_all(&(p.len() as u32).to_le_bytes())?;
+    w.write_all(&p)?;
+    w.flush()?;
+    Ok(4 + p.len() as u64)
+}
+
+/// Read one framed message; returns it with the exact bytes consumed.
+/// IO errors (including read timeouts set on the stream) pass through as
+/// `Error::Io`; malformed frames are `Error::Invalid`.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<(Msg, u64)> {
+    let mut lb = [0u8; 4];
+    r.read_exact(&mut lb)?;
+    let len = u32::from_le_bytes(lb) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(Error::invalid(format!("wire: bad frame length {len}")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok((decode(&buf)?, 4 + len as u64))
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            return Err(Error::invalid("wire: truncated frame"));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str_(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| Error::invalid("wire: non-UTF-8 string"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn clock(&mut self) -> Result<ClusterClock> {
+        Ok(ClusterClock {
+            seconds: self.f64()?,
+            compute: self.f64()?,
+            comm: self.f64()?,
+            data_hidden: self.f64()?,
+            data_exposed: self.f64()?,
+            eval: self.f64()?,
+            lost: 0.0, // coordinator-side bookkeeping, never on the wire
+        })
+    }
+}
+
+fn decode(b: &[u8]) -> Result<Msg> {
+    let mut c = Cur { b, i: 0 };
+    let msg = match c.u8()? {
+        TAG_JOIN => {
+            let fingerprint = c.str_()?;
+            let resume = match c.u64()? {
+                u64::MAX => None,
+                r => Some(r as usize),
+            };
+            Msg::Join { fingerprint, resume }
+        }
+        TAG_ASSIGN => Msg::Assign { worker: c.u64()? as usize, params: c.f32s()? },
+        TAG_REJECT => Msg::Reject { reason: c.str_()? },
+        TAG_HEARTBEAT => Msg::Heartbeat { worker: c.u64()? as usize, step: c.u64()? },
+        TAG_DONE => Msg::Done {
+            worker: c.u64()? as usize,
+            params: c.f32s()?,
+            clock: c.clock()?,
+        },
+        TAG_ABORT => Msg::Abort { worker: c.u64()? as usize, reason: c.str_()? },
+        other => return Err(Error::invalid(format!("wire: unknown message tag {other}"))),
+    };
+    if c.i != b.len() {
+        return Err(Error::invalid("wire: trailing bytes in frame"));
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: Msg) -> (Msg, u64, u64) {
+        let mut buf = Vec::new();
+        let wrote = write_msg(&mut buf, &msg).unwrap();
+        assert_eq!(wrote as usize, buf.len());
+        let mut r: &[u8] = &buf;
+        let (back, read) = read_msg(&mut r).unwrap();
+        assert!(r.is_empty(), "frame fully consumed");
+        (back, wrote, read)
+    }
+
+    #[test]
+    fn all_messages_round_trip_bit_exact() {
+        let mut clock = ClusterClock::new();
+        clock.advance_compute(1.5);
+        clock.advance_comm(0.25);
+        clock.note_eval(0.125);
+        let msgs = vec![
+            Msg::Join { fingerprint: "{\"seed\":42}".into(), resume: None },
+            Msg::Join { fingerprint: String::new(), resume: Some(3) },
+            Msg::Assign { worker: 2, params: vec![1.0, -0.5, f32::MIN_POSITIVE, 3.25e-7] },
+            Msg::Reject { reason: "fingerprint mismatch".into() },
+            Msg::Heartbeat { worker: 7, step: 123456 },
+            Msg::Done { worker: 0, params: vec![0.1, 0.2, 0.3], clock },
+            Msg::Abort { worker: 1, reason: "io error: oh no".into() },
+        ];
+        for msg in msgs {
+            let (back, wrote, read) = round_trip(msg.clone());
+            assert_eq!(back, msg);
+            assert_eq!(wrote, read);
+        }
+    }
+
+    #[test]
+    fn frame_size_formulas_are_exact() {
+        let params = vec![0.5f32; 17];
+        let mut buf = Vec::new();
+        let wrote = write_msg(&mut buf, &Msg::Assign { worker: 1, params: params.clone() }).unwrap();
+        assert_eq!(wrote, assign_frame_bytes(17));
+        let mut buf = Vec::new();
+        let wrote = write_msg(
+            &mut buf,
+            &Msg::Done { worker: 1, params, clock: ClusterClock::new() },
+        )
+        .unwrap();
+        assert_eq!(wrote, done_frame_bytes(17));
+    }
+
+    #[test]
+    fn hostile_frames_rejected() {
+        // zero / oversized length prefix
+        for lb in [0u32, (MAX_FRAME + 1) as u32] {
+            let mut r: &[u8] = &lb.to_le_bytes();
+            assert!(read_msg(&mut r).is_err());
+        }
+        // truncated payload
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Heartbeat { worker: 1, step: 2 }).unwrap();
+        let mut r: &[u8] = &buf[..buf.len() - 3];
+        assert!(read_msg(&mut r).is_err());
+        // unknown tag
+        let mut r: &[u8] = &[1, 0, 0, 0, 99];
+        assert!(read_msg(&mut r).is_err());
+        // short heartbeat body (frame ends mid-field)
+        let mut frame = vec![6, 0, 0, 0, TAG_HEARTBEAT];
+        frame.extend_from_slice(&[0; 5]); // heartbeat wants 16 body bytes
+        let mut r: &[u8] = &frame;
+        assert!(read_msg(&mut r).is_err());
+        // trailing bytes after a complete message
+        let mut p = vec![TAG_HEARTBEAT];
+        p.extend_from_slice(&[0; 16]);
+        p.push(0xAA); // one byte too many
+        let mut frame = (p.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&p);
+        let mut r: &[u8] = &frame;
+        assert!(read_msg(&mut r).is_err());
+        // truncated string inside a join
+        let mut p = vec![TAG_JOIN];
+        p.extend_from_slice(&100u32.to_le_bytes()); // claims 100 chars
+        p.extend_from_slice(b"short");
+        let mut frame = (p.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&p);
+        let mut r: &[u8] = &frame;
+        assert!(read_msg(&mut r).is_err());
+    }
+}

@@ -3,8 +3,11 @@
 
 use swap::cli::{default_preset_for, Args, HELP};
 use swap::runtime::Backend;
-use swap::util::Result;
-use swap::coordinator::{run_baseline, run_local_sgd, run_swa, run_swap, LocalSgdConfig};
+use swap::util::{Error, Result};
+use swap::coordinator::{
+    join_run, run_baseline, run_local_sgd, run_swa, run_swap, run_swap_resumable_with,
+    LocalSgdConfig, RunDir, SocketTransport,
+};
 use swap::experiments::{figures, tables, Lab};
 use swap::landscape::GridSpec;
 
@@ -149,13 +152,81 @@ fn main() -> Result<()> {
                 .map(|s| s.to_string())
                 .unwrap_or_else(|| format!("runs/{}", cfg.preset));
             let lab = Lab::new(cfg)?;
-            let dir = swap::coordinator::RunDir::new(&out)?;
+            let dir = RunDir::new(&out)?;
             let r = swap::coordinator::run_swap_resumable(&lab.env(), &lab.swap_arm(lab.cfg.seed), &dir)?;
             println!(
                 "SWAP (resumable, state in {out}): after avg {:.4} | modeled {:.2}s | wall {:.1}s",
                 r.final_stats.accuracy1(),
                 r.clock.seconds,
                 r.wall_seconds
+            );
+        }
+        "serve" => {
+            // coordinator for multi-process SWAP: phase 1 runs here, phase
+            // 2 is served to `join` processes over the socket; checkpoints
+            // live under --out, so re-serving retries only dropped workers
+            let addr = args
+                .get("addr")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| cfg.addr.clone());
+            if addr.is_empty() {
+                return Err(Error::config(
+                    "serve needs an address: --addr host:port (TCP) or --addr /path/to.sock",
+                ));
+            }
+            let out = args
+                .get("out")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("runs/{}", cfg.preset));
+            let policy = cfg.failure_policy();
+            let lab = Lab::new(cfg)?;
+            let dir = RunDir::new(&out)?;
+            let transport = SocketTransport::new(addr.clone());
+            let r = run_swap_resumable_with(
+                &lab.env(),
+                &lab.swap_arm(lab.cfg.seed),
+                &dir,
+                &transport,
+                &policy,
+            )?;
+            println!(
+                "SWAP (served on {addr}, state in {out}): after avg {:.4} | {}/{} workers averaged, {} dropped | {:.1} MiB moved | modeled {:.2}s (+{:.2}s lost)",
+                r.final_stats.accuracy1(),
+                r.worker_params.len(),
+                lab.cfg.workers,
+                r.dropped.len(),
+                r.net.framed_bytes as f64 / (1024.0 * 1024.0),
+                r.clock.seconds,
+                r.clock.lost
+            );
+            for (w, reason) in &r.dropped {
+                println!("  dropped worker {w}: {reason}");
+            }
+        }
+        "join" => {
+            // one phase-2 worker process: train the assigned replica
+            // against a `serve` coordinator and upload it
+            let addr = args
+                .get("addr")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| cfg.addr.clone());
+            if addr.is_empty() {
+                return Err(Error::config(
+                    "join needs an address: --addr host:port (TCP) or --addr /path/to.sock",
+                ));
+            }
+            let want = match args.get("worker") {
+                Some(s) => Some(s.parse::<usize>().map_err(|_| {
+                    Error::config(format!("--worker wants a worker id, got '{s}'"))
+                })?),
+                None => None,
+            };
+            let policy = cfg.failure_policy();
+            let lab = Lab::new(cfg)?;
+            let s = join_run(&lab.env(), &lab.swap_arm(lab.cfg.seed), &addr, &policy, want)?;
+            println!(
+                "joined {addr} as worker {}: {} steps | sent {} B, received {} B",
+                s.worker, s.steps, s.bytes_sent, s.bytes_received
             );
         }
         "ablate-workers" | "ablate-tau" | "ablate-phase2" | "ablate-freq" | "ablate-net" => {

@@ -27,6 +27,10 @@ pub struct ClusterClock {
     pub data_exposed: f64,
     /// modeled evaluation seconds (reported, not part of `seconds`)
     pub eval: f64,
+    /// modeled seconds burned by phase-2 workers that were dropped from
+    /// the average (reported, not part of `seconds` — the surviving
+    /// cluster never waits on a dropped worker)
+    pub lost: f64,
 }
 
 impl ClusterClock {
@@ -88,11 +92,20 @@ impl ClusterClock {
         }
         for w in workers {
             self.eval += w.eval;
+            self.lost += w.lost;
         }
     }
 
     pub fn note_eval(&mut self, dt: f64) {
         self.eval += dt;
+    }
+
+    /// Book the modeled time a dropped phase-2 worker wasted. The drop
+    /// changes which replicas are averaged, never the survivors' critical
+    /// path, so `seconds` is untouched.
+    pub fn note_drop(&mut self, modeled_seconds: f64) {
+        debug_assert!(modeled_seconds >= 0.0);
+        self.lost += modeled_seconds;
     }
 
     /// Merge a sub-phase clock (e.g. a worker's own clock) serially.
@@ -103,6 +116,7 @@ impl ClusterClock {
         self.data_hidden += other.data_hidden;
         self.data_exposed += other.data_exposed;
         self.eval += other.eval;
+        self.lost += other.lost;
     }
 }
 
@@ -207,6 +221,23 @@ mod tests {
         c.note_eval(10.0);
         assert_eq!(c.seconds, 1.0);
         assert_eq!(c.eval, 10.0);
+    }
+
+    #[test]
+    fn dropped_worker_time_reported_outside_training_time() {
+        let mut c = ClusterClock::new();
+        c.advance_compute(1.0);
+        c.note_drop(7.0);
+        assert_eq!(c.seconds, 1.0);
+        assert_eq!(c.lost, 7.0);
+        // lost survives parallel merges and serial absorbs
+        let mut outer = ClusterClock::new();
+        outer.advance_parallel(&[c]);
+        assert_eq!(outer.lost, 7.0);
+        assert_eq!(outer.seconds, 1.0);
+        let mut top = ClusterClock::new();
+        top.absorb(&outer);
+        assert_eq!(top.lost, 7.0);
     }
 
     #[test]

@@ -70,6 +70,15 @@ impl CostModel {
     pub fn assembly_time(&self, examples: usize) -> f64 {
         examples as f64 * self.host_assembly_per_example
     }
+
+    /// Weight bytes a real phase-2 transport moves for `workers` workers:
+    /// the phase-1 broadcast down to each worker plus each refined replica
+    /// uploaded back — 2 × workers × param_bytes. On a zero-drop socket
+    /// run the measured `NetStats::param_bytes` must equal this exactly
+    /// (asserted in rust/tests/transport.rs).
+    pub fn phase2_comm_bytes(&self, workers: usize) -> u64 {
+        2 * workers as u64 * self.param_bytes
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +115,8 @@ mod tests {
         // assembly scales linearly and is far cheaper than device compute
         assert_eq!(cm.assembly_time(128), 2.0 * cm.assembly_time(64));
         assert!(cm.assembly_time(64) < cm.train_step_time(64));
+        // phase-2 wire traffic: one broadcast down + one upload up per worker
+        assert_eq!(cm.phase2_comm_bytes(4), 8 * cm.param_bytes);
     }
 
     #[test]

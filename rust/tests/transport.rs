@@ -1,0 +1,450 @@
+//! Phase-2 transport integration: the elastic fault-tolerance contract.
+//!
+//! * Zero-failure socket runs are BITWISE identical to in-memory runs —
+//!   the transport decides where workers execute, never what they compute.
+//! * An injected fault (worker error, crashed process, hung process)
+//!   drops that worker from the phase-3 average; the survivors' average
+//!   is bitwise equal to averaging the same replicas from an honest run,
+//!   and the drop is recorded in `SwapResult::dropped` + `clock.lost`.
+//! * Measured wire traffic matches `CostModel::phase2_comm_bytes`.
+//! * Run directories are pinned to one config fingerprint; resume retries
+//!   exactly the dropped workers.
+
+use std::time::Duration;
+
+use swap::coordinator::transport::wire::{self, Msg};
+use swap::coordinator::transport::run_fingerprint;
+use swap::coordinator::{
+    join_run, run_swap, run_swap_resumable, run_swap_resumable_with, run_swap_with,
+    FailurePolicy, MemoryTransport, NetStats, RunDir, SocketTransport, SwapConfig, TrainEnv,
+    TrainProgress,
+};
+use swap::data::{AugmentSpec, Dataset, Generator, SynthSpec};
+use swap::model::ParamSet;
+use swap::optim::Schedule;
+use swap::runtime::{Backend, NativeBackend};
+use swap::sim::{ClusterClock, CostModel, DeviceModel, NetModel};
+
+struct Fixture {
+    engine: NativeBackend,
+    cost: CostModel,
+    train: Dataset,
+    test: Dataset,
+}
+
+fn fixture() -> Fixture {
+    let engine = NativeBackend::tiny();
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 99));
+    let train = gen.sample(96, 10);
+    let test = gen.sample(32, 11);
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    Fixture { engine, cost, train, test }
+}
+
+fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
+    TrainEnv {
+        engine: &f.engine,
+        cost: &f.cost,
+        train: &f.train,
+        test: &f.test,
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+        threads,
+        prefetch: swap::data::prefetch::default_prefetch(),
+    }
+}
+
+fn env(f: &Fixture) -> TrainEnv<'_> {
+    env_threads(f, swap::coordinator::parallel::default_threads())
+}
+
+fn tiny_swap_config(seed: u64) -> SwapConfig {
+    SwapConfig {
+        workers: 2,
+        group_devices: 1,
+        phase1_max_epochs: 2,
+        phase1_stop_acc: 1.1,
+        phase1_sched: Schedule::Constant(0.08),
+        phase2_epochs: 2,
+        phase2_sched: Schedule::Constant(0.02),
+        seed,
+        snapshot_every: None,
+        phase1_snapshot_every: None,
+    }
+}
+
+/// Socket-test failure policy: quick heartbeats and retries, generous
+/// deadlines (nothing should be dropped on a healthy run even on a
+/// heavily loaded CI machine).
+fn fast_policy() -> FailurePolicy {
+    FailurePolicy {
+        min_workers: 1,
+        connect_timeout: Duration::from_secs(60),
+        io_timeout: Duration::from_secs(20),
+        heartbeat: Duration::from_millis(50),
+        straggler_grace: Duration::from_secs(60),
+        join_retries: 600,
+        retry_backoff: Duration::from_millis(25),
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("swap-transport-{tag}-{}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// In-memory transport: fault injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn memory_fault_injection_averages_survivors() {
+    // THE bug this module exists to fix: one failing worker used to kill
+    // the run. Now it must be dropped, and the final model must be the
+    // bitwise average of the SURVIVING replicas — which are themselves
+    // bitwise identical to the same workers in a fully honest run,
+    // because worker w's replica is a pure function of (seed, 100 + w).
+    let f = fixture();
+    let env = env(&f);
+    let mut cfg = tiny_swap_config(15);
+    cfg.workers = 3;
+
+    let honest = run_swap(&env, &cfg).unwrap();
+    assert!(honest.dropped.is_empty());
+    assert_eq!(honest.clock.lost, 0.0);
+
+    let faulty = MemoryTransport { fail_workers: vec![1] };
+    let r = run_swap_with(&env, &cfg, &faulty, &FailurePolicy::default()).unwrap();
+
+    // the drop is booked, not fatal
+    assert_eq!(r.dropped.len(), 1);
+    assert_eq!(r.dropped[0].0, 1);
+    assert!(r.dropped[0].1.contains("injected fault"), "reason: {}", r.dropped[0].1);
+    assert!(r.clock.lost > 0.0, "a dropped worker's modeled time must be booked as lost");
+    assert_eq!(r.net, NetStats::default(), "in-memory transport moves no wire bytes");
+
+    // survivors are the honest run's workers 0 and 2, bit for bit
+    assert_eq!(r.worker_params.len(), 2);
+    assert_eq!(r.worker_params[0], honest.worker_params[0]);
+    assert_eq!(r.worker_params[1], honest.worker_params[2]);
+
+    // and the final model is exactly their 2-way average
+    let expected = ParamSet::average_mt(
+        &[honest.worker_params[0].clone(), honest.worker_params[2].clone()],
+        env.threads,
+    )
+    .unwrap();
+    assert_eq!(r.final_params, expected, "survivor average must be bitwise exact");
+}
+
+#[test]
+fn min_workers_floor_is_enforced() {
+    let f = fixture();
+    let env = env(&f);
+    let cfg = tiny_swap_config(16);
+
+    // every worker failing must still error out (an empty average is
+    // undefined) even under the most permissive policy
+    let all_fail = MemoryTransport { fail_workers: vec![0, 1] };
+    let err = run_swap_with(&env, &cfg, &all_fail, &FailurePolicy::default()).unwrap_err();
+    assert!(err.to_string().contains("0/2"), "unexpected error: {err}");
+
+    // a stricter floor turns one drop into a failure
+    let one_fail = MemoryTransport { fail_workers: vec![1] };
+    let strict = FailurePolicy { min_workers: 2, ..FailurePolicy::default() };
+    let err = run_swap_with(&env, &cfg, &one_fail, &strict).unwrap_err();
+    assert!(err.to_string().contains("1/2"), "unexpected error: {err}");
+
+    // the same drop under the default floor succeeds
+    assert!(run_swap_with(&env, &cfg, &one_fail, &FailurePolicy::default()).is_ok());
+}
+
+// ---------------------------------------------------------------------
+// Run-directory fingerprint + resume-after-drop
+// ---------------------------------------------------------------------
+
+#[test]
+fn phase1_meta_round_trips_eval_and_lost_seconds() {
+    // regression: eval (and now lost) seconds used to vanish across a
+    // save/load of the phase-1 meta, so a resumed run under-reported the
+    // cluster's evaluation time
+    let f = fixture();
+    let env = env(&f);
+    let dir_path = tmp_dir("meta");
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+
+    let params = ParamSet::init(f.engine.manifest(), 3);
+    let progress = TrainProgress { steps: 12, epochs: 2.0, train_acc: 0.5, train_loss: 1.25 };
+    let mut clock = ClusterClock::new();
+    clock.advance_compute(2.0);
+    clock.note_eval(1.25);
+    clock.note_drop(0.5);
+
+    dir.save_phase1(&env, &params, &progress, &clock).unwrap();
+    let (_, p, back) = dir.load_phase1(&env).unwrap();
+    assert_eq!(p.steps, 12);
+    assert!((back.seconds - clock.seconds).abs() < 1e-9);
+    assert!((back.eval - 1.25).abs() < 1e-9, "eval seconds must survive the round trip");
+    assert!((back.lost - 0.5).abs() < 1e-9, "lost seconds must survive the round trip");
+    std::fs::remove_dir_all(&dir_path).ok();
+}
+
+#[test]
+fn resume_rejects_mismatched_fingerprint() {
+    // a run dir belongs to ONE configuration: resuming it with a
+    // different recipe must hard-error instead of averaging checkpoints
+    // from two different runs
+    let f = fixture();
+    let env = env(&f);
+    let dir_path = tmp_dir("fingerprint");
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+
+    let cfg = tiny_swap_config(31);
+    run_swap_resumable(&env, &cfg, &dir).unwrap();
+
+    let other_seed = tiny_swap_config(32);
+    let err = run_swap_resumable(&env, &other_seed, &dir).unwrap_err();
+    assert!(
+        err.to_string().contains("different configuration"),
+        "unexpected error: {err}"
+    );
+
+    let mut other_workers = tiny_swap_config(31);
+    other_workers.workers = 3;
+    assert!(run_swap_resumable(&env, &other_workers, &dir).is_err());
+
+    // the original configuration still resumes cleanly
+    assert!(run_swap_resumable(&env, &cfg, &dir).is_ok());
+    std::fs::remove_dir_all(&dir_path).ok();
+}
+
+#[test]
+fn resumable_run_retries_only_dropped_workers() {
+    // a drop leaves no checkpoint, so re-entering the same run dir
+    // retries exactly the dropped ids — and reproduces the honest run
+    let f = fixture();
+    let env = env(&f);
+    let cfg = tiny_swap_config(33);
+    let fresh = run_swap(&env, &cfg).unwrap();
+
+    let dir_path = tmp_dir("retry");
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+
+    let faulty = MemoryTransport { fail_workers: vec![1] };
+    let r1 =
+        run_swap_resumable_with(&env, &cfg, &dir, &faulty, &FailurePolicy::default()).unwrap();
+    assert_eq!(r1.dropped.len(), 1);
+    assert_eq!(r1.dropped[0].0, 1);
+    assert_eq!(
+        dir.finished_workers(cfg.workers),
+        vec![0],
+        "the dropped worker must not leave a checkpoint"
+    );
+
+    // second pass: worker 0 loads from disk, worker 1 retrains
+    let r2 = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert!(r2.dropped.is_empty());
+    assert!(
+        r2.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+        "resume-after-drop must converge to the honest run"
+    );
+    std::fs::remove_dir_all(&dir_path).ok();
+}
+
+// ---------------------------------------------------------------------
+// Socket transport (unix sockets: hermetic, no port collisions)
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+fn sock_addr(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("swap-{tag}-{}.sock", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[cfg(unix)]
+fn connect_retry(addr: &str) -> std::os::unix::net::UnixStream {
+    for _ in 0..2400 {
+        if let Ok(s) = std::os::unix::net::UnixStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("could not connect to {addr}");
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_transport_bitwise_equals_memory() {
+    // the acceptance property: a multi-process socket run computes the
+    // IDENTICAL model — weights cross the wire as exact little-endian f32
+    // bytes and worker w's recipe is pinned by its id — at any thread
+    // count on either side
+    let f = fixture();
+    let cfg = tiny_swap_config(9);
+    let policy = fast_policy();
+
+    for threads in [1usize, 4] {
+        let env = env_threads(&f, threads);
+        let mem = run_swap(&env, &cfg).unwrap();
+
+        let addr = sock_addr(&format!("zf{threads}"));
+        let transport = SocketTransport::new(addr.clone());
+        let sock = std::thread::scope(|s| {
+            let server = s.spawn(|| run_swap_with(&env, &cfg, &transport, &policy));
+            let joins: Vec<_> = (0..cfg.workers)
+                .map(|_| s.spawn(|| join_run(&env, &cfg, &addr, &policy, None)))
+                .collect();
+            let mut ids: Vec<usize> =
+                joins.into_iter().map(|j| j.join().unwrap().unwrap().worker).collect();
+            ids.sort();
+            assert_eq!(ids, vec![0, 1], "each join must adopt a distinct worker id");
+            server.join().unwrap()
+        })
+        .unwrap();
+        std::fs::remove_file(&addr).ok();
+
+        assert!(sock.dropped.is_empty(), "healthy run must drop nobody");
+        assert_eq!(
+            sock.final_params, mem.final_params,
+            "threads={threads}: socket must equal memory bitwise"
+        );
+        assert_eq!(sock.worker_params.len(), mem.worker_params.len());
+        for (a, b) in sock.worker_params.iter().zip(&mem.worker_params) {
+            assert_eq!(a, b, "threads={threads}: every replica must match bitwise");
+        }
+        assert_eq!(sock.final_stats.correct1, mem.final_stats.correct1);
+        assert_eq!(
+            sock.clock.seconds.to_bits(),
+            mem.clock.seconds.to_bits(),
+            "worker clocks cross the wire bit-exactly"
+        );
+
+        // byte accounting: the cost model's prediction is exactly the f32
+        // payload a zero-drop run moves (broadcast down + upload up per
+        // worker); framing adds a measurable but small overhead on top
+        assert_eq!(sock.net.param_bytes, f.cost.phase2_comm_bytes(cfg.workers));
+        assert!(
+            sock.net.framed_bytes > sock.net.param_bytes,
+            "framing overhead must be accounted: framed {} vs payload {}",
+            sock.net.framed_bytes,
+            sock.net.param_bytes
+        );
+        assert_eq!(mem.net, NetStats::default());
+    }
+}
+
+/// A worker process that joins, takes its assignment, then misbehaves:
+/// `hang = false` closes the connection immediately (a crash mid-phase-2);
+/// `hang = true` stays connected but silent until the coordinator's
+/// `io_timeout` drops it and shuts the link down.
+#[cfg(unix)]
+fn faulty_client(addr: &str, fingerprint: &str, want: usize, hang: bool) {
+    let mut conn = connect_retry(addr);
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    wire::write_msg(
+        &mut conn,
+        &Msg::Join { fingerprint: fingerprint.to_string(), resume: Some(want) },
+    )
+    .unwrap();
+    let (msg, _) = wire::read_msg(&mut conn).unwrap();
+    let Msg::Assign { worker, .. } = msg else {
+        panic!("faulty client expected Assign, got {msg:?}")
+    };
+    assert_eq!(worker, want, "a free requested id must be honored");
+    if hang {
+        let r = wire::read_msg(&mut conn);
+        assert!(r.is_err(), "the silent link must be shut down by the coordinator");
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_crash_and_hang_workers_are_dropped() {
+    // one honest worker, one that crashes right after assignment, one
+    // that hangs silently: the run must complete on the single survivor,
+    // with both failures booked as drops
+    let f = fixture();
+    let env = env(&f);
+    let mut cfg = tiny_swap_config(17);
+    cfg.workers = 3;
+    let honest = run_swap(&env, &cfg).unwrap();
+
+    let policy = FailurePolicy {
+        io_timeout: Duration::from_millis(1500),
+        straggler_grace: Duration::from_secs(60),
+        ..fast_policy()
+    };
+    let addr = sock_addr("fault");
+    let fp = run_fingerprint(&env, &cfg);
+    let transport = SocketTransport::new(addr.clone());
+    let (r, summary) = std::thread::scope(|s| {
+        let server = s.spawn(|| run_swap_with(&env, &cfg, &transport, &policy));
+        let worker = s.spawn(|| join_run(&env, &cfg, &addr, &policy, Some(0)));
+        s.spawn(|| faulty_client(&addr, &fp, 1, false)); // crash
+        s.spawn(|| faulty_client(&addr, &fp, 2, true)); // hang
+        (server.join().unwrap().unwrap(), worker.join().unwrap().unwrap())
+    });
+    std::fs::remove_file(&addr).ok();
+
+    // the honest worker got the id it asked for and trained to the end
+    assert_eq!(summary.worker, 0);
+    assert_eq!(summary.steps, 24, "2 epochs x 12 steps at B=8");
+    let numel = f.engine.manifest().num_params;
+    assert_eq!(summary.bytes_received, wire::assign_frame_bytes(numel));
+    assert!(summary.bytes_sent >= wire::done_frame_bytes(numel));
+
+    // both misbehaving workers were dropped, the survivor carried the run
+    assert_eq!(r.worker_params.len(), 1);
+    let mut dropped_ids: Vec<usize> = r.dropped.iter().map(|(w, _)| *w).collect();
+    dropped_ids.sort();
+    assert_eq!(dropped_ids, vec![1, 2], "drops: {:?}", r.dropped);
+    assert!(r.clock.lost > 0.0);
+
+    // a single-survivor "average" is that replica verbatim, and the
+    // replica is bitwise the honest run's worker 0
+    assert_eq!(r.final_params, honest.worker_params[0]);
+
+    // actual payload: 3 broadcasts down, 1 upload back — less than the
+    // zero-drop prediction of 2 x 3 x param_bytes
+    assert_eq!(r.net.param_bytes, 4 * f.cost.param_bytes);
+    assert!(r.net.param_bytes < f.cost.phase2_comm_bytes(cfg.workers));
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_rejects_mismatched_fingerprint_then_admits_honest_join() {
+    // a join presenting a different config fingerprint must be refused
+    // WITHOUT consuming a worker slot; a correct join afterwards succeeds
+    let f = fixture();
+    let env = env(&f);
+    let mut cfg = tiny_swap_config(19);
+    cfg.workers = 1;
+    let policy = fast_policy();
+    let addr = sock_addr("reject");
+    let transport = SocketTransport::new(addr.clone());
+    let r = std::thread::scope(|s| {
+        let server = s.spawn(|| run_swap_with(&env, &cfg, &transport, &policy));
+        let client = s.spawn(|| {
+            let wrong = tiny_swap_config(20); // different seed => fingerprint
+            let err = join_run(&env, &wrong, &addr, &policy, None).unwrap_err();
+            assert!(
+                err.to_string().contains("rejected"),
+                "unexpected error: {err}"
+            );
+            join_run(&env, &cfg, &addr, &policy, None).unwrap()
+        });
+        assert_eq!(client.join().unwrap().worker, 0);
+        server.join().unwrap()
+    })
+    .unwrap();
+    std::fs::remove_file(&addr).ok();
+    assert!(r.dropped.is_empty());
+    assert_eq!(r.worker_params.len(), 1);
+}
