@@ -1,0 +1,228 @@
+//! Averaging-policy ablation bench: the four pluggable policies (uniform /
+//! swa / hierarchical / adaptive) head to head — micro-level streaming
+//! overhead against the legacy terminal `ParamSet::average_mt`, and
+//! end-to-end SWAP runs on the tiny native backend with per-policy test
+//! accuracy and modeled time-to-result. Asserts along the way that the
+//! Uniform policy is BITWISE-identical to the legacy mean at threads 1
+//! and 4 (the refactor's acceptance criterion). Emits
+//! `BENCH_averaging.json` (and a copy under results/).
+//! Run: cargo bench --bench averaging
+
+use swap::bench::{bench, Stats, Table};
+use swap::coordinator::{
+    parallel, run_swap, AveragingPolicy, AveragingSpec, Candidate, CandidateKind, SwapConfig,
+    TrainEnv,
+};
+use swap::data::{AugmentSpec, Generator, SynthSpec};
+use swap::model::ParamSet;
+use swap::optim::Schedule;
+use swap::runtime::native::{native_manifest, NativeSpec};
+use swap::runtime::{Backend, NativeBackend};
+use swap::sim::{CostModel, DeviceModel, NetModel};
+use swap::util::{Json, Result};
+
+const W: usize = 8;
+
+fn observe_all(policy: &mut dyn AveragingPolicy, sets: &[ParamSet], threads: usize) {
+    for (k, s) in sets.iter().enumerate() {
+        policy
+            .observe(
+                s,
+                Candidate { kind: CandidateKind::Worker(k), val_acc: Some(0.5) },
+                threads,
+            )
+            .unwrap();
+    }
+}
+
+struct MicroRow {
+    policy: String,
+    threads: usize,
+    stats: Stats,
+}
+
+struct AblationRow {
+    policy: String,
+    test_acc1: f64,
+    before_avg_acc1: f64,
+    modeled_seconds: f64,
+    contributing: usize,
+}
+
+fn main() -> Result<()> {
+    let threads = parallel::default_threads().max(2);
+
+    // ---- micro: streaming-policy overhead vs the legacy terminal mean ----
+    let m = native_manifest(&NativeSpec::new("averaging", 16, 10, 32));
+    let models: Vec<ParamSet> = (0..W).map(|w| ParamSet::init(&m, w as u64)).collect();
+    println!("averaging bench: {} params, W={W}, threads={threads}", m.num_params);
+
+    let mut micro: Vec<MicroRow> = Vec::new();
+    let legacy_seq = bench(2, 20, || {
+        ParamSet::average_mt(&models, 1).unwrap();
+    });
+    micro.push(MicroRow { policy: "legacy_average_mt".into(), threads: 1, stats: legacy_seq });
+    let legacy_par = bench(2, 20, || {
+        ParamSet::average_mt(&models, threads).unwrap();
+    });
+    micro.push(MicroRow { policy: "legacy_average_mt".into(), threads, stats: legacy_par });
+
+    let specs = [
+        AveragingSpec::Uniform,
+        AveragingSpec::Swa,
+        AveragingSpec::Hierarchical { groups: 2 },
+        AveragingSpec::Adaptive { window: 4, min_improve: 1.0 },
+    ];
+    for spec in &specs {
+        for t in [1usize, threads] {
+            let stats = bench(2, 20, || {
+                let mut pol = spec.build();
+                observe_all(pol.as_mut(), &models, t);
+                pol.average(t).unwrap();
+            });
+            micro.push(MicroRow { policy: spec.id(), threads: t, stats });
+        }
+    }
+
+    // the acceptance parity, in-bench: Uniform streams to EXACTLY the bits
+    // the legacy terminal mean produces, sequential and chunk-parallel
+    for t in [1usize, 4] {
+        let legacy = ParamSet::average_mt(&models, t).unwrap();
+        let mut pol = AveragingSpec::Uniform.build();
+        observe_all(pol.as_mut(), &models, t);
+        assert_eq!(
+            pol.average(t).unwrap(),
+            legacy,
+            "uniform policy parity vs legacy average_mt (threads={t})"
+        );
+    }
+    println!("parity: uniform == legacy average_mt bitwise at threads 1 and 4");
+
+    // ---- end-to-end: SWAP under each policy on the tiny backend ----------
+    let engine = NativeBackend::tiny();
+    let mf = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(mf.model.num_classes, mf.model.image_size, 99));
+    let train = gen.sample(96, 10);
+    let test = gen.sample(32, 11);
+    let val = gen.sample(24, 12); // held-out split for the adaptive gate
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &mf);
+    let env = TrainEnv {
+        engine: &engine,
+        cost: &cost,
+        train: &train,
+        test: &test,
+        val: Some(&val),
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+        threads,
+        prefetch: false,
+    };
+    let swap_cfg = |averaging: AveragingSpec| SwapConfig {
+        workers: 4,
+        group_devices: 1,
+        phase1_max_epochs: 2,
+        phase1_stop_acc: 1.1,
+        phase1_sched: Schedule::Constant(0.08),
+        phase2_epochs: 2,
+        phase2_sched: Schedule::Constant(0.02),
+        seed: 7,
+        averaging,
+        snapshot_every: None,
+        phase1_snapshot_every: None,
+    };
+    let mut ablation: Vec<AblationRow> = Vec::new();
+    for spec in &specs {
+        let r = run_swap(&env, &swap_cfg(spec.clone()))?;
+        if *spec == AveragingSpec::Uniform {
+            let legacy = ParamSet::average_mt(&r.worker_params, threads)?;
+            assert_eq!(
+                r.final_params, legacy,
+                "uniform SWAP phase 3 must remain bitwise the legacy mean"
+            );
+        }
+        let contributing = r
+            .averaging_state
+            .get("contributing")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        ablation.push(AblationRow {
+            policy: spec.id(),
+            test_acc1: r.final_stats.accuracy1(),
+            before_avg_acc1: r.before_avg_acc1(),
+            modeled_seconds: r.clock.seconds,
+            contributing,
+        });
+    }
+
+    // ---- report ----------------------------------------------------------
+    let mut tm = Table::new(
+        &format!("averaging policies — streaming overhead ({} params, W={W})", m.num_params),
+        &["policy", "threads", "mean (ms)", "std (ms)", "min (ms)"],
+    );
+    for r in &micro {
+        tm.row(&[
+            r.policy.clone(),
+            r.threads.to_string(),
+            format!("{:.3}", r.stats.mean * 1e3),
+            format!("{:.3}", r.stats.std * 1e3),
+            format!("{:.3}", r.stats.min * 1e3),
+        ]);
+    }
+    tm.print();
+
+    let mut ta = Table::new(
+        "averaging policies — SWAP end-to-end (tiny backend, W=4)",
+        &["policy", "before avg (%)", "after avg (%)", "modeled time (s)", "contributing"],
+    );
+    for r in &ablation {
+        ta.row(&[
+            r.policy.clone(),
+            format!("{:.2}", r.before_avg_acc1 * 100.0),
+            format!("{:.2}", r.test_acc1 * 100.0),
+            format!("{:.3}", r.modeled_seconds),
+            r.contributing.to_string(),
+        ]);
+    }
+    ta.print();
+
+    let micro_rows: Vec<Json> = micro
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("policy", Json::Str(r.policy.clone())),
+                ("threads", Json::Num(r.threads as f64)),
+                ("mean_seconds", Json::Num(r.stats.mean)),
+                ("std_seconds", Json::Num(r.stats.std)),
+                ("min_seconds", Json::Num(r.stats.min)),
+            ])
+        })
+        .collect();
+    let ablation_rows: Vec<Json> = ablation
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("policy", Json::Str(r.policy.clone())),
+                ("test_acc1", Json::Num(r.test_acc1)),
+                ("before_avg_acc1", Json::Num(r.before_avg_acc1)),
+                ("modeled_seconds", Json::Num(r.modeled_seconds)),
+                ("contributing", Json::Num(r.contributing as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("averaging")),
+        ("num_params", Json::Num(m.num_params as f64)),
+        ("workers", Json::Num(W as f64)),
+        ("threads_parallel", Json::Num(threads as f64)),
+        ("uniform_bitwise_vs_legacy", Json::Bool(true)),
+        ("micro_rows", Json::Arr(micro_rows)),
+        ("swap_ablation", Json::Arr(ablation_rows)),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_averaging.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_averaging.json", &json)?;
+    println!("wrote BENCH_averaging.json");
+    Ok(())
+}

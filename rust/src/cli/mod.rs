@@ -166,6 +166,16 @@ Threads (--threads N / --set threads=N):
   1         fully sequential execution
   N         phase-2 workers / phase-1 shards / native kernels on N OS
             threads; results are bitwise identical for every N
+Averaging (--set averaging=..., applies to SWAP phase 3, swa, local-sgd):
+  uniform       plain mean over candidates (bitwise the historical
+                behaviour)                                       [default]
+  swa           incremental running average (Izmailov et al. recurrence)
+  hierarchical  within-group running means, then across-group mean
+                (avg_groups=N round-robin groups)                [groups 2]
+  adaptive      start averaging once validation accuracy stops improving
+                by avg_min_improve, keep the last avg_window candidates
+                (needs val_examples>0; synth mints a disjoint split,
+                disk sources carve the train tail)    [window 4, improve 0]
 Failure policy (serve/join, all settable via --set):
   min_workers=N          fewest phase-2 survivors to average    [1]
   connect_timeout_ms=N   serve: join window after phase 1       [60000]

@@ -131,6 +131,24 @@ pub struct ExperimentConfig {
     pub swa_high_lr: f32,
     pub swa_low_lr: f32,
 
+    // ---- averaging policy (phase 3 / SWA samples / local-SGD consensus) ----
+    /// how candidate models are combined: "uniform" (bitwise the
+    /// historical mean, default), "swa" (incremental running average),
+    /// "hierarchical" (within-group then across-group), "adaptive"
+    /// (validation-gated start + last-`avg_window` window)
+    pub averaging: String,
+    /// hierarchical: number of round-robin candidate groups
+    pub avg_groups: usize,
+    /// adaptive: size of the late averaging window (last-k)
+    pub avg_window: usize,
+    /// adaptive: minimum validation-accuracy improvement that keeps the
+    /// gate closed (candidates still improving are not yet averaged)
+    pub avg_min_improve: f64,
+    /// held-out validation examples for validation-gated policies
+    /// (0 = no validation split; synth mints a disjoint split, disk
+    /// sources carve the train tail)
+    pub val_examples: usize,
+
     /// use the piecewise ImageNet-style schedule (Fig 5) instead of the
     /// warmup-triangle for the baselines/phase 1
     pub imagenet_style: bool,
@@ -254,6 +272,17 @@ impl ExperimentConfig {
         }
     }
 
+    /// The averaging policy spec derived from the `averaging`/`avg_*`
+    /// knobs (validated: unknown names and out-of-range parameters error).
+    pub fn averaging_spec(&self) -> Result<crate::coordinator::AveragingSpec> {
+        crate::coordinator::AveragingSpec::from_knobs(
+            &self.averaging,
+            self.avg_groups,
+            self.avg_window,
+            self.avg_min_improve,
+        )
+    }
+
     /// The phase-2 failure policy derived from the `*_ms` knobs.
     pub fn failure_policy(&self) -> crate::coordinator::FailurePolicy {
         use std::time::Duration;
@@ -329,6 +358,11 @@ impl ExperimentConfig {
             "swa_cycle_epochs" => self.swa_cycle_epochs = p(key, value)?,
             "swa_high_lr" => self.swa_high_lr = p(key, value)?,
             "swa_low_lr" => self.swa_low_lr = p(key, value)?,
+            "averaging" => self.averaging = value.trim().to_string(),
+            "avg_groups" => self.avg_groups = p(key, value)?,
+            "avg_window" => self.avg_window = p(key, value)?,
+            "avg_min_improve" => self.avg_min_improve = p(key, value)?,
+            "val_examples" => self.val_examples = p(key, value)?,
             "artifacts_root" => self.artifacts_root = value.trim().to_string(),
             "imagenet_style" => self.imagenet_style = p(key, value)?,
             other => {
@@ -430,6 +464,26 @@ impl ExperimentConfig {
                  workers get dropped between heartbeats",
                 self.heartbeat_ms, self.io_timeout_ms
             )));
+        }
+        let spec = self.averaging_spec()?;
+        if spec.needs_validation() && self.val_examples == 0 {
+            return Err(Error::config(format!(
+                "averaging = {} scores candidates on a validation split; \
+                 set val_examples > 0",
+                self.averaging
+            )));
+        }
+        if self.val_examples > 0 && self.data != "synth" {
+            // disk sources carve the split off the train tail, so the
+            // remaining train set must still feed every baseline's batch
+            let widest = self.lb_devices.max(self.sb_devices) * self.exec_batch;
+            if self.val_examples + widest > self.n_train {
+                return Err(Error::config(format!(
+                    "val_examples {} leaves fewer than one global batch \
+                     ({widest}) of the {} train examples",
+                    self.val_examples, self.n_train
+                )));
+            }
         }
         Ok(())
     }
@@ -558,6 +612,53 @@ mod tests {
         bad.apply_kv("data", "imagenet").unwrap();
         assert!(bad.validate().is_err());
         assert!(bad.data_source().is_err());
+    }
+
+    #[test]
+    fn averaging_knobs_parse_and_validate() {
+        use crate::coordinator::AveragingSpec;
+        let mut cfg = preset("tiny").unwrap();
+        assert_eq!(cfg.averaging, "uniform");
+        assert_eq!(cfg.averaging_spec().unwrap(), AveragingSpec::Uniform);
+        cfg.apply_kv("averaging", "swa").unwrap();
+        assert_eq!(cfg.averaging_spec().unwrap(), AveragingSpec::Swa);
+        cfg.validate().unwrap();
+        cfg.apply_kv("averaging", "hierarchical").unwrap();
+        cfg.apply_kv("avg_groups", "3").unwrap();
+        assert_eq!(
+            cfg.averaging_spec().unwrap(),
+            AveragingSpec::Hierarchical { groups: 3 }
+        );
+        cfg.validate().unwrap();
+        // adaptive needs a validation split
+        cfg.apply_kv("averaging", "adaptive").unwrap();
+        cfg.apply_kv("avg_window", "2").unwrap();
+        cfg.apply_kv("avg_min_improve", "0.01").unwrap();
+        assert!(cfg.validate().is_err(), "adaptive without val_examples");
+        cfg.apply_kv("val_examples", "16").unwrap();
+        cfg.validate().unwrap();
+        match cfg.averaging_spec().unwrap() {
+            AveragingSpec::Adaptive { window, min_improve } => {
+                assert_eq!(window, 2);
+                assert!((min_improve - 0.01).abs() < 1e-12);
+            }
+            other => panic!("wrong spec: {other:?}"),
+        }
+        // unknown policy / degenerate parameters fail loudly
+        cfg.apply_kv("averaging", "nonsense").unwrap();
+        assert!(cfg.averaging_spec().is_err());
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("tiny").unwrap();
+        cfg.apply_kv("averaging", "hierarchical").unwrap();
+        cfg.apply_kv("avg_groups", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        // disk sources carve val off the train tail — it must leave at
+        // least one global batch standing
+        let mut cfg = preset("cifar10sim").unwrap();
+        cfg.apply_kv("data", "cifar10").unwrap();
+        cfg.apply_kv("data_dir", "/tmp/cifar").unwrap();
+        cfg.apply_kv("val_examples", "100000").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -55,6 +55,11 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         swa_cycle_epochs: 2,
         swa_high_lr: 0.06,
         swa_low_lr: 0.006,
+        averaging: "uniform".to_string(),
+        avg_groups: 2,
+        avg_window: 4,
+        avg_min_improve: 0.0,
+        val_examples: 0,
         imagenet_style: false,
     };
     let cfg = match name {

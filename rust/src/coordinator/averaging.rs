@@ -1,0 +1,756 @@
+//! Pluggable averaging policies — the "what and when to average" axis of
+//! the paper (phase 3 of Algorithm 1), refactored from a single hard-coded
+//! terminal mean into an experimentable subsystem.
+//!
+//! A policy *observes* candidate weight vectors as they are produced —
+//! phase-2 worker replicas ([`CandidateKind::Worker`]), SWA end-of-cycle
+//! samples ([`CandidateKind::CycleEnd`]), or periodic checkpoints /
+//! local-SGD replicas ([`CandidateKind::Checkpoint`]) — and maintains a
+//! **streaming** running average on the flat arena via the chunk-parallel
+//! `tensor::flat` kernels. No policy retains O(candidates x W) clones; the
+//! only exception is the last-k window of the adaptive policy, which is
+//! bounded by its (small, configured) window cap.
+//!
+//! The four policies and their lineage (PAPERS.md):
+//! * [`AveragingSpec::Uniform`] — the paper's phase-3 mean over all
+//!   candidates, streamed in observation order. **Bitwise-pinned** against
+//!   the legacy `ParamSet::average_mt`: a running sum built by one
+//!   elementwise `flat::add` per candidate followed by a single terminal
+//!   `scale(1/n)` reproduces `flat::mean_into`'s accumulation order
+//!   `((s0 + s1) + s2 + ...) * (1/n)` bit for bit.
+//! * [`AveragingSpec::Swa`] — Izmailov et al. 2018: the incremental SWA
+//!   recurrence `avg <- (avg * n + x) / (n + 1)` over cyclic-LR samples.
+//!   Same mathematical mean as Uniform, different f32 rounding (the
+//!   historical SWA implementation's arithmetic).
+//! * [`AveragingSpec::Hierarchical`] — Gu et al. (Hierarchical Weight
+//!   Averaging): candidates are routed to `groups` round-robin by id
+//!   (`id % groups`), each group keeps an *online* streaming mean, and the
+//!   final average is the *offline* mean of the group means. With
+//!   `groups = 1` this degenerates to Uniform exactly (bitwise: the
+//!   across-group `mean_into` over one set multiplies by 1.0, which is
+//!   IEEE-exact).
+//! * [`AveragingSpec::Adaptive`] — validation-gated late-window averaging:
+//!   Demir & Ünal's Adaptive SWA start rule (begin averaging when the
+//!   held-out validation accuracy stops improving) combined with Ajroldi
+//!   et al.'s LAWA-style last-k checkpoint window. Requires candidates
+//!   scored on a validation split (`Candidate::val_acc`); callers thread
+//!   one through `TrainEnv::val` / the `val_examples` config knob.
+//!
+//! Determinism contract: every policy is elementwise over the arena, so
+//! results are bitwise-identical for every `threads` value, and a policy's
+//! output is a pure function of the observation sequence — transports,
+//! resume, and thread counts can never change which bits come out.
+
+use std::fmt;
+
+use super::trainer::TrainEnv;
+use crate::model::ParamSet;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Json, Result};
+
+/// The selectable policy names (config `averaging` knob) — single source
+/// for parsing and error messages.
+pub const POLICIES: &[&str] = &["uniform", "swa", "hierarchical", "adaptive"];
+
+/// A parsed, validated averaging-policy configuration: which policy plus
+/// its knobs. Cheap to clone; `build()` mints the stateful policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AveragingSpec {
+    /// the paper's phase-3 uniform mean, streamed (bitwise == legacy)
+    Uniform,
+    /// incremental SWA recurrence (Izmailov et al.)
+    Swa,
+    /// online within-group + offline across-group (Gu et al.)
+    Hierarchical { groups: usize },
+    /// validation-gated start + last-k window (Demir; Ajroldi et al.)
+    Adaptive { window: usize, min_improve: f64 },
+}
+
+impl Default for AveragingSpec {
+    fn default() -> Self {
+        AveragingSpec::Uniform
+    }
+}
+
+impl fmt::Display for AveragingSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.id())
+    }
+}
+
+impl AveragingSpec {
+    /// Build a spec from the flat config knobs, validating ranges.
+    pub fn from_knobs(
+        name: &str,
+        groups: usize,
+        window: usize,
+        min_improve: f64,
+    ) -> Result<AveragingSpec> {
+        match name.trim() {
+            "uniform" => Ok(AveragingSpec::Uniform),
+            "swa" => Ok(AveragingSpec::Swa),
+            "hierarchical" => {
+                if groups == 0 {
+                    return Err(Error::config("averaging: avg_groups must be >= 1"));
+                }
+                Ok(AveragingSpec::Hierarchical { groups })
+            }
+            "adaptive" => {
+                if window == 0 {
+                    return Err(Error::config("averaging: avg_window must be >= 1"));
+                }
+                if !(0.0..=1.0).contains(&min_improve) {
+                    return Err(Error::config(format!(
+                        "averaging: avg_min_improve {min_improve} must be in [0, 1]"
+                    )));
+                }
+                Ok(AveragingSpec::Adaptive { window, min_improve })
+            }
+            other => Err(Error::config(format!(
+                "unknown averaging policy '{other}' (expected one of: {})",
+                POLICIES.join("|")
+            ))),
+        }
+    }
+
+    /// Canonical identity string — joins the run fingerprint, so resuming
+    /// a run directory under a different policy hard-errors.
+    pub fn id(&self) -> String {
+        match self {
+            AveragingSpec::Uniform => "uniform".to_string(),
+            AveragingSpec::Swa => "swa".to_string(),
+            AveragingSpec::Hierarchical { groups } => format!("hierarchical(groups={groups})"),
+            AveragingSpec::Adaptive { window, min_improve } => {
+                format!("adaptive(window={window},min_improve={min_improve})")
+            }
+        }
+    }
+
+    /// Whether candidates must arrive scored on a held-out validation
+    /// split (`Candidate::val_acc`).
+    pub fn needs_validation(&self) -> bool {
+        matches!(self, AveragingSpec::Adaptive { .. })
+    }
+
+    /// Mint a fresh stateful policy.
+    pub fn build(&self) -> Box<dyn AveragingPolicy> {
+        match self {
+            AveragingSpec::Uniform => Box::new(UniformPolicy::new()),
+            AveragingSpec::Swa => Box::new(SwaPolicy::new()),
+            AveragingSpec::Hierarchical { groups } => Box::new(HierarchicalPolicy::new(*groups)),
+            AveragingSpec::Adaptive { window, min_improve } => {
+                Box::new(AdaptivePolicy::new(*window, *min_improve))
+            }
+        }
+    }
+}
+
+/// Where a candidate weight vector came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateKind {
+    /// phase-2 worker replica (SWAP phase 3); id = worker id
+    Worker(usize),
+    /// end-of-cycle low-LR sample (SWA); id = cycle index
+    CycleEnd(usize),
+    /// periodic checkpoint / local-SGD replica; id = ordinal
+    Checkpoint(usize),
+}
+
+impl CandidateKind {
+    /// The stable id hierarchical grouping routes on.
+    pub fn id(&self) -> usize {
+        match self {
+            CandidateKind::Worker(w) => *w,
+            CandidateKind::CycleEnd(c) => *c,
+            CandidateKind::Checkpoint(k) => *k,
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            CandidateKind::Worker(w) => format!("worker {w}"),
+            CandidateKind::CycleEnd(c) => format!("cycle {c}"),
+            CandidateKind::Checkpoint(k) => format!("checkpoint {k}"),
+        }
+    }
+}
+
+/// Metadata accompanying one observed candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub kind: CandidateKind,
+    /// held-out validation top-1 accuracy of this candidate, if the caller
+    /// has a validation split (required by validation-gated policies)
+    pub val_acc: Option<f64>,
+}
+
+/// A streaming averaging policy over the flat weight arena.
+///
+/// Contract: `observe` is called once per candidate, in a deterministic
+/// order fixed by the caller (workers sorted by id, cycles in sequence);
+/// `average` may be called at any point after at least one observation and
+/// does not consume the policy. All arena arithmetic must go through the
+/// chunk-parallel `tensor::flat` kernels so results are bitwise-identical
+/// for every `threads` value.
+pub trait AveragingPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether this policy requires `Candidate::val_acc` to be present.
+    fn needs_validation(&self) -> bool {
+        false
+    }
+
+    /// Feed one candidate weight vector into the running state.
+    fn observe(&mut self, params: &ParamSet, meta: Candidate, threads: usize) -> Result<()>;
+
+    /// The current averaged model (errors before the first observation).
+    fn average(&self, threads: usize) -> Result<ParamSet>;
+
+    /// Number of candidates contributing to the current average.
+    fn contributing(&self) -> usize;
+
+    /// Serializable policy state (scalars, never weights) — persisted in
+    /// `run.meta.json` by resumable runs.
+    fn state(&self) -> Json;
+}
+
+// ----------------------------------------------------------------------
+// Streaming mean primitive
+// ----------------------------------------------------------------------
+
+/// Running sum + count with a terminal scale: the streaming form of
+/// `flat::mean_into`. Candidate 0 is cloned into the sum arena; each later
+/// candidate is added elementwise (`flat::add`) in observation order; the
+/// mean is `sum * (1/n)` computed once at read time. Per element that is
+/// `((s0 + s1) + s2 + ...) * (1/n)` — exactly `mean_into`'s accumulation
+/// order, so the streamed mean is bitwise-identical to the legacy terminal
+/// `ParamSet::average_mt` while holding ONE arena instead of n.
+#[derive(Debug, Default)]
+pub struct StreamingMean {
+    sum: Option<ParamSet>,
+    n: usize,
+}
+
+impl StreamingMean {
+    pub fn new() -> StreamingMean {
+        StreamingMean { sum: None, n: 0 }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn push(&mut self, x: &ParamSet, threads: usize) -> Result<()> {
+        match &mut self.sum {
+            None => self.sum = Some(x.clone()),
+            Some(sum) => sum.add_assign_mt(x, threads)?,
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    pub fn mean(&self, threads: usize) -> Result<ParamSet> {
+        let sum = self
+            .sum
+            .as_ref()
+            .ok_or_else(|| Error::invalid("averaging: no candidates observed"))?;
+        let mut out = sum.clone();
+        out.scale(1.0 / self.n as f32, threads);
+        Ok(out)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Uniform — the paper's phase 3, streamed (bitwise-pinned vs legacy)
+// ----------------------------------------------------------------------
+
+/// Uniform mean over every observed candidate. The default everywhere;
+/// bitwise-identical to the pre-refactor `ParamSet::average_mt` (pinned by
+/// rust/tests/averaging_policy.rs and the `averaging` bench).
+pub struct UniformPolicy {
+    mean: StreamingMean,
+}
+
+impl UniformPolicy {
+    pub fn new() -> UniformPolicy {
+        UniformPolicy { mean: StreamingMean::new() }
+    }
+}
+
+impl Default for UniformPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AveragingPolicy for UniformPolicy {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn observe(&mut self, params: &ParamSet, _meta: Candidate, threads: usize) -> Result<()> {
+        self.mean.push(params, threads)
+    }
+
+    fn average(&self, threads: usize) -> Result<ParamSet> {
+        self.mean.mean(threads)
+    }
+
+    fn contributing(&self) -> usize {
+        self.mean.count()
+    }
+
+    fn state(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str("uniform")),
+            ("observed", Json::Num(self.mean.count() as f64)),
+            ("contributing", Json::Num(self.contributing() as f64)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// SWA — Izmailov et al.'s incremental recurrence
+// ----------------------------------------------------------------------
+
+/// The incremental SWA update `avg <- (avg * n + x) / (n + 1)`, kept
+/// in-place on one arena. Mathematically the same uniform mean, but with
+/// the rounding profile of the published SWA implementations (one
+/// rescale per sample instead of a terminal scale).
+pub struct SwaPolicy {
+    avg: Option<ParamSet>,
+    n: usize,
+}
+
+impl SwaPolicy {
+    pub fn new() -> SwaPolicy {
+        SwaPolicy { avg: None, n: 0 }
+    }
+}
+
+impl Default for SwaPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AveragingPolicy for SwaPolicy {
+    fn name(&self) -> &'static str {
+        "swa"
+    }
+
+    fn observe(&mut self, params: &ParamSet, _meta: Candidate, threads: usize) -> Result<()> {
+        match &mut self.avg {
+            None => self.avg = Some(params.clone()),
+            Some(avg) => {
+                avg.scale(self.n as f32, threads);
+                avg.add_assign_mt(params, threads)?;
+                avg.scale(1.0 / (self.n + 1) as f32, threads);
+            }
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    fn average(&self, _threads: usize) -> Result<ParamSet> {
+        self.avg
+            .clone()
+            .ok_or_else(|| Error::invalid("averaging: no candidates observed"))
+    }
+
+    fn contributing(&self) -> usize {
+        self.n
+    }
+
+    fn state(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str("swa")),
+            ("observed", Json::Num(self.n as f64)),
+            ("contributing", Json::Num(self.n as f64)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// Hierarchical — Gu et al.: online within-group, offline across-group
+// ----------------------------------------------------------------------
+
+/// Candidates are routed round-robin to `groups` by `kind.id() % groups`;
+/// each group keeps an online streaming mean and the final model is the
+/// offline mean of the (non-empty) group means. `groups = 1` is bitwise
+/// Uniform.
+pub struct HierarchicalPolicy {
+    groups: Vec<StreamingMean>,
+}
+
+impl HierarchicalPolicy {
+    pub fn new(groups: usize) -> HierarchicalPolicy {
+        assert!(groups >= 1, "hierarchical: groups must be >= 1");
+        HierarchicalPolicy {
+            groups: (0..groups).map(|_| StreamingMean::new()).collect(),
+        }
+    }
+}
+
+impl AveragingPolicy for HierarchicalPolicy {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn observe(&mut self, params: &ParamSet, meta: Candidate, threads: usize) -> Result<()> {
+        let g = meta.kind.id() % self.groups.len();
+        self.groups[g].push(params, threads)
+    }
+
+    fn average(&self, threads: usize) -> Result<ParamSet> {
+        // online step: each non-empty group's streamed mean; offline step:
+        // the terminal mean across groups (group order is fixed, so the
+        // accumulation order — and hence every bit — is too)
+        let mut group_means = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            if g.count() > 0 {
+                group_means.push(g.mean(threads)?);
+            }
+        }
+        if group_means.is_empty() {
+            return Err(Error::invalid("averaging: no candidates observed"));
+        }
+        ParamSet::average_mt(&group_means, threads)
+    }
+
+    fn contributing(&self) -> usize {
+        self.groups.iter().map(|g| g.count()).sum()
+    }
+
+    fn state(&self) -> Json {
+        let counts: Vec<usize> = self.groups.iter().map(|g| g.count()).collect();
+        Json::obj(vec![
+            ("policy", Json::str("hierarchical")),
+            ("groups", Json::Num(self.groups.len() as f64)),
+            ("group_counts", Json::arr_usize(&counts)),
+            ("observed", Json::Num(self.contributing() as f64)),
+            ("contributing", Json::Num(self.contributing() as f64)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// Adaptive — validation-gated start + last-k (LAWA-style) window
+// ----------------------------------------------------------------------
+
+/// Averaging starts once the held-out validation accuracy plateaus (the
+/// first candidate that fails to beat the running best by more than
+/// `min_improve` opens the gate and is included); from then on the model
+/// is the uniform mean of the last `window` candidates. If the gate never
+/// opens the average falls back to the last observed candidate (the most
+/// trained model). The window retains at most `window` arenas — the one
+/// policy with (bounded, configured) candidate retention, which is what
+/// "late-window" means.
+pub struct AdaptivePolicy {
+    window_cap: usize,
+    min_improve: f64,
+    window: Vec<ParamSet>,
+    /// fallback when the gate never opens (kept only pre-gate)
+    last: Option<ParamSet>,
+    best: Option<f64>,
+    started: bool,
+    /// observation ordinal (0-based) at which the gate opened
+    opened_at: Option<usize>,
+    seen: usize,
+}
+
+impl AdaptivePolicy {
+    pub fn new(window: usize, min_improve: f64) -> AdaptivePolicy {
+        assert!(window >= 1, "adaptive: window must be >= 1");
+        AdaptivePolicy {
+            window_cap: window,
+            min_improve,
+            window: Vec::new(),
+            last: None,
+            best: None,
+            started: false,
+            opened_at: None,
+            seen: 0,
+        }
+    }
+}
+
+impl AveragingPolicy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn needs_validation(&self) -> bool {
+        true
+    }
+
+    fn observe(&mut self, params: &ParamSet, meta: Candidate, _threads: usize) -> Result<()> {
+        let acc = meta.val_acc.ok_or_else(|| {
+            Error::config(format!(
+                "averaging policy 'adaptive' needs validation-scored candidates \
+                 but {} arrived unscored: set val_examples > 0 so a held-out \
+                 validation split is threaded through the run",
+                meta.kind.label()
+            ))
+        })?;
+        if !self.started {
+            match self.best {
+                // the first candidate only seeds the running best
+                None => self.best = Some(acc),
+                Some(best) if acc > best + self.min_improve => self.best = Some(acc),
+                // no meaningful improvement: the plateau begins here
+                _ => {
+                    self.started = true;
+                    self.opened_at = Some(self.seen);
+                }
+            }
+        }
+        if self.started {
+            self.last = None; // the window supersedes the fallback
+            self.window.push(params.clone());
+            if self.window.len() > self.window_cap {
+                // ParamSet is a thin handle (Vec + Arc), so evicting the
+                // oldest entry shifts pointers, not weights
+                self.window.remove(0);
+            }
+        } else {
+            self.last = Some(params.clone());
+        }
+        self.seen += 1;
+        Ok(())
+    }
+
+    fn average(&self, threads: usize) -> Result<ParamSet> {
+        if !self.window.is_empty() {
+            return ParamSet::average_mt(&self.window, threads);
+        }
+        self.last
+            .clone()
+            .ok_or_else(|| Error::invalid("averaging: no candidates observed"))
+    }
+
+    fn contributing(&self) -> usize {
+        if self.window.is_empty() {
+            usize::from(self.last.is_some())
+        } else {
+            self.window.len()
+        }
+    }
+
+    fn state(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str("adaptive")),
+            ("observed", Json::Num(self.seen as f64)),
+            ("contributing", Json::Num(self.contributing() as f64)),
+            ("started", Json::Bool(self.started)),
+            (
+                "opened_at",
+                self.opened_at.map_or(Json::Null, |k| Json::Num(k as f64)),
+            ),
+            ("best_val_acc", self.best.map_or(Json::Null, Json::Num)),
+            ("window", Json::Num(self.window.len() as f64)),
+            ("window_cap", Json::Num(self.window_cap as f64)),
+            ("min_improve", Json::Num(self.min_improve)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// Helpers shared by the coordinators
+// ----------------------------------------------------------------------
+
+/// One-shot consensus over a fixed set of replicas (local-SGD's every-H
+/// sync and final model): a fresh policy observes each replica in index
+/// order and the average is read once. With the default Uniform spec this
+/// is bitwise-identical to the legacy `ParamSet::average_mt` call it
+/// replaces. Validation-gated policies error here — a consensus round has
+/// no scored candidates (and no plateau to detect).
+pub fn consensus(spec: &AveragingSpec, replicas: &[ParamSet], threads: usize) -> Result<ParamSet> {
+    if spec.needs_validation() {
+        return Err(Error::config(format!(
+            "averaging policy '{}' is validation-gated and cannot drive a \
+             local-SGD consensus round; use uniform, swa, or hierarchical",
+            spec.id()
+        )));
+    }
+    let mut policy = spec.build();
+    for (k, p) in replicas.iter().enumerate() {
+        policy.observe(
+            p,
+            Candidate { kind: CandidateKind::Checkpoint(k), val_acc: None },
+            threads,
+        )?;
+    }
+    policy.average(threads)
+}
+
+/// Score a candidate for a validation-gated policy: `None` when the
+/// policy doesn't need scores OR the environment has no validation split
+/// (the policy's `observe` then raises the actionable config error).
+/// Validation forward passes are booked as eval time, like the
+/// reporting-only per-worker evaluations.
+pub fn maybe_val_acc(
+    policy: &dyn AveragingPolicy,
+    env: &TrainEnv,
+    params: &ParamSet,
+    seed: u64,
+    clock: &mut ClusterClock,
+) -> Result<Option<f64>> {
+    if !policy.needs_validation() {
+        return Ok(None);
+    }
+    env.val_acc(params, seed, clock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(v: &[f32]) -> ParamSet {
+        ParamSet::from_vec(v.to_vec())
+    }
+
+    fn observe_all(policy: &mut dyn AveragingPolicy, sets: &[ParamSet]) {
+        for (k, s) in sets.iter().enumerate() {
+            policy
+                .observe(
+                    s,
+                    Candidate { kind: CandidateKind::Worker(k), val_acc: Some(0.5) },
+                    1,
+                )
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn spec_parsing_and_ids() {
+        assert_eq!(
+            AveragingSpec::from_knobs("uniform", 2, 4, 0.0).unwrap(),
+            AveragingSpec::Uniform
+        );
+        assert_eq!(AveragingSpec::from_knobs("swa", 2, 4, 0.0).unwrap(), AveragingSpec::Swa);
+        assert_eq!(
+            AveragingSpec::from_knobs("hierarchical", 3, 4, 0.0).unwrap().id(),
+            "hierarchical(groups=3)"
+        );
+        assert!(AveragingSpec::from_knobs("adaptive", 2, 4, 0.01)
+            .unwrap()
+            .needs_validation());
+        assert!(AveragingSpec::from_knobs("nope", 2, 4, 0.0).is_err());
+        assert!(AveragingSpec::from_knobs("hierarchical", 0, 4, 0.0).is_err());
+        assert!(AveragingSpec::from_knobs("adaptive", 2, 0, 0.0).is_err());
+        assert!(AveragingSpec::from_knobs("adaptive", 2, 4, 1.5).is_err());
+        assert_eq!(AveragingSpec::default(), AveragingSpec::Uniform);
+    }
+
+    #[test]
+    fn uniform_streams_bitwise_equal_to_terminal_mean() {
+        let sets = vec![p(&[1.0, 0.25, -3.5]), p(&[0.5, 2.0, 1.0]), p(&[-0.125, 4.0, 0.75])];
+        let legacy = ParamSet::average_mt(&sets, 1).unwrap();
+        let mut pol = UniformPolicy::new();
+        observe_all(&mut pol, &sets);
+        assert_eq!(pol.average(1).unwrap(), legacy);
+        assert_eq!(pol.contributing(), 3);
+    }
+
+    #[test]
+    fn swa_recurrence_matches_scalar_reference() {
+        let sets = vec![p(&[1.0]), p(&[2.0]), p(&[4.0])];
+        let mut pol = SwaPolicy::new();
+        observe_all(&mut pol, &sets);
+        // ((1*1 + 2)/2 * 2 + 4)/3 in f32
+        let mut want = 1.0f32;
+        for (n, x) in [2.0f32, 4.0].iter().enumerate() {
+            want = (want * (n + 1) as f32 + x) * (1.0 / (n + 2) as f32);
+        }
+        assert_eq!(pol.average(1).unwrap().data(), &[want]);
+    }
+
+    #[test]
+    fn hierarchical_groups_round_robin() {
+        // groups=2: ids 0,2 -> group 0 (mean 2.0); id 1 -> group 1 (4.0);
+        // final = (2.0 + 4.0) / 2 = 3.0
+        let sets = vec![p(&[1.0]), p(&[4.0]), p(&[3.0])];
+        let mut pol = HierarchicalPolicy::new(2);
+        observe_all(&mut pol, &sets);
+        assert_eq!(pol.average(1).unwrap().data(), &[3.0]);
+        assert_eq!(pol.contributing(), 3);
+        let st = pol.state();
+        assert_eq!(st.get("groups").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn hierarchical_single_group_is_bitwise_uniform() {
+        let sets = vec![p(&[0.1, -0.2]), p(&[0.7, 0.3]), p(&[-1.1, 0.9])];
+        let mut uni = UniformPolicy::new();
+        let mut hier = HierarchicalPolicy::new(1);
+        observe_all(&mut uni, &sets);
+        observe_all(&mut hier, &sets);
+        assert_eq!(uni.average(1).unwrap(), hier.average(1).unwrap());
+    }
+
+    #[test]
+    fn adaptive_gates_on_plateau_and_windows() {
+        let mut pol = AdaptivePolicy::new(2, 0.0);
+        let obs = |pol: &mut AdaptivePolicy, v: f32, acc: f64, k: usize| {
+            pol.observe(
+                &p(&[v]),
+                Candidate { kind: CandidateKind::CycleEnd(k), val_acc: Some(acc) },
+                1,
+            )
+            .unwrap();
+        };
+        // rising: 0.2 -> 0.4 (gate closed, fallback tracks the last)
+        obs(&mut pol, 1.0, 0.2, 0);
+        obs(&mut pol, 2.0, 0.4, 1);
+        assert_eq!(pol.average(1).unwrap().data(), &[2.0]);
+        assert_eq!(pol.contributing(), 1);
+        // plateau at 0.4: gate opens, window starts here
+        obs(&mut pol, 4.0, 0.4, 2);
+        obs(&mut pol, 6.0, 0.41, 3);
+        obs(&mut pol, 8.0, 0.39, 4);
+        // window cap 2 keeps the last two: (6 + 8) / 2
+        assert_eq!(pol.average(1).unwrap().data(), &[7.0]);
+        let st = pol.state();
+        assert_eq!(st.get("started").unwrap().as_bool(), Some(true));
+        assert_eq!(st.get("opened_at").unwrap().as_usize(), Some(2));
+        assert_eq!(st.get("observed").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn adaptive_requires_val_scores() {
+        let mut pol = AdaptivePolicy::new(2, 0.0);
+        let err = pol
+            .observe(
+                &p(&[1.0]),
+                Candidate { kind: CandidateKind::Worker(0), val_acc: None },
+                1,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("val_examples"), "{err}");
+    }
+
+    #[test]
+    fn consensus_uniform_matches_average_mt() {
+        let sets = vec![p(&[1.0, 2.0]), p(&[3.0, -4.0]), p(&[0.5, 0.5])];
+        let legacy = ParamSet::average_mt(&sets, 1).unwrap();
+        let got = consensus(&AveragingSpec::Uniform, &sets, 1).unwrap();
+        assert_eq!(got, legacy);
+        // validation-gated policies cannot drive a consensus round
+        let spec = AveragingSpec::Adaptive { window: 2, min_improve: 0.0 };
+        assert!(consensus(&spec, &sets, 1).is_err());
+    }
+
+    #[test]
+    fn empty_policies_error() {
+        for spec in [
+            AveragingSpec::Uniform,
+            AveragingSpec::Swa,
+            AveragingSpec::Hierarchical { groups: 2 },
+            AveragingSpec::Adaptive { window: 2, min_improve: 0.0 },
+        ] {
+            assert!(spec.build().average(1).is_err(), "{}", spec.id());
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! devices switch to *local* updates (fused small-batch steps) and average
 //! their PARAMETERS every `h_steps` steps.
 
+use super::averaging::{self, AveragingSpec};
 use super::parallel;
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
 use crate::data::{prefetch, AugStream, Batcher, EpochSampler};
@@ -29,6 +30,10 @@ pub struct LocalSgdConfig {
     /// parameter-averaging period in local steps (H)
     pub h_steps: usize,
     pub seed: u64,
+    /// how the replicas reach consensus at every sync event and at the
+    /// end (default Uniform — bitwise the historical mean; the
+    /// validation-gated adaptive policy is rejected here)
+    pub averaging: AveragingSpec,
 }
 
 pub struct LocalSgdResult {
@@ -80,7 +85,7 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
     let aug = AugStream { seed: cfg.seed ^ 0x10CA1, stream: 0 };
     let train = env.train;
 
-    let steps_per_epoch = env.train.n / b;
+    let steps_per_epoch = EpochSampler::steps_per_epoch(env.train.n, b);
     let total_local_steps = cfg.local_epochs * steps_per_epoch;
     let step_time = env.cost.train_step_time(b);
     let data_time = env.cost.assembly_time(devices * b);
@@ -123,7 +128,7 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
         clock.advance_compute(step_time);
         clock.note_data(data_time, step_time, env.prefetch);
         if (step + 1) % cfg.h_steps == 0 {
-            let avg = ParamSet::average_mt(&worker_params, env.threads)?;
+            let avg = averaging::consensus(&cfg.averaging, &worker_params, env.threads)?;
             for wp in &mut worker_params {
                 *wp = avg.clone();
             }
@@ -136,7 +141,7 @@ pub fn run_local_sgd(env: &TrainEnv, cfg: &LocalSgdConfig) -> Result<LocalSgdRes
     prefetch::run_pipeline(total_local_steps, slots, overlap, produce, consume)?;
 
     // final consensus model
-    params = ParamSet::average_mt(&worker_params, env.threads)?;
+    params = averaging::consensus(&cfg.averaging, &worker_params, env.threads)?;
     if total_local_steps % cfg.h_steps != 0 {
         clock.advance_comm(env.cost.allreduce_time(cfg.devices));
         sync_events += 1;

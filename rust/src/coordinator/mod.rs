@@ -4,6 +4,9 @@
 //! * `allreduce` — ring all-reduce (value) over worker gradient shards
 //! * `parallel`  — real OS-thread execution (`std::thread::scope`), shared
 //!                 by phase-2 workers, phase-1 shards, and native kernels
+//! * `averaging` — pluggable phase-3/SWA averaging policies (uniform,
+//!                 swa, hierarchical, adaptive/late-window) streaming over
+//!                 the flat arena
 //! * `swap`      — Algorithm 1 (three phases)
 //! * `transport` — how phase 2 executes: in-process threads or remote
 //!                 processes over sockets, with a per-worker failure
@@ -13,6 +16,7 @@
 //! * `local_sgd` — post-local SGD extension (§2/§6 related method)
 
 pub mod allreduce;
+pub mod averaging;
 pub mod baseline;
 pub mod local_sgd;
 pub mod parallel;
@@ -22,6 +26,7 @@ pub mod swap;
 pub mod trainer;
 pub mod transport;
 
+pub use averaging::{AveragingPolicy, AveragingSpec, Candidate, CandidateKind, StreamingMean};
 pub use baseline::{run_baseline, BaselineConfig, BaselineResult};
 pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdResult};
 pub use resume::{run_swap_resumable, run_swap_resumable_with, RunDir};

@@ -96,6 +96,38 @@ impl RunDir {
         Ok(())
     }
 
+    /// Persist the phase-3 averaging policy's final scalar state into
+    /// `run.meta.json` (merged alongside the fingerprint — scalars only,
+    /// never weights). A later resume of the same directory recomputes
+    /// the identical state from the checkpointed replicas; keeping it on
+    /// disk makes the run's averaging decision auditable and lets tests
+    /// pin the round-trip.
+    pub fn save_averaging_state(&self, state: &Json) -> Result<()> {
+        let path = self.run_meta();
+        let mut meta = if path.exists() {
+            Json::parse(&std::fs::read_to_string(&path)?)?
+        } else {
+            Json::obj(Vec::new())
+        };
+        if let Json::Obj(m) = &mut meta {
+            m.insert("averaging".to_string(), state.clone());
+        } else {
+            return Err(Error::json("run meta: not a JSON object"));
+        }
+        std::fs::write(path, meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// The persisted averaging-policy state, if a finished run wrote one.
+    pub fn load_averaging_state(&self) -> Result<Option<Json>> {
+        let path = self.run_meta();
+        if !path.exists() {
+            return Ok(None);
+        }
+        let meta = Json::parse(&std::fs::read_to_string(&path)?)?;
+        Ok(meta.get("averaging").cloned())
+    }
+
     pub fn save_phase1(
         &self,
         env: &TrainEnv,
@@ -249,7 +281,7 @@ pub fn run_swap_resumable_with(
     }
 
     // ---- phases 2½ + 3 (same tail as run_swap_with) ---------------------
-    finish_swap(
+    let result = finish_swap(
         env,
         cfg,
         policy,
@@ -261,5 +293,7 @@ pub fn run_swap_resumable_with(
         Vec::new(),
         clock,
         wall0,
-    )
+    )?;
+    dir.save_averaging_state(&result.averaging_state)?;
+    Ok(result)
 }

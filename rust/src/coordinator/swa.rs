@@ -3,16 +3,24 @@
 //!
 //! A cyclic (sawtooth) learning-rate schedule runs for `cycles` cycles of
 //! `cycle_epochs` each on ONE model; a weight sample is taken at the end of
-//! every cycle (the low-LR point); the samples are averaged and BN is
+//! every cycle (the low-LR point) and streamed into the configured
+//! [`AveragingPolicy`]; the running average is finalized and BN is
 //! recomputed. Unlike SWAP the samples are sequential, so the cluster time
 //! is the *sum* of all cycles (on the devices used), not the max.
+//!
+//! Memory: samples stream into the policy as they are produced — nothing
+//! retains O(cycles x W) clones (pinned by rust/tests/alloc_regression.rs).
+//! The full per-cycle trail is opt-in via `keep_samples` for the analysis
+//! figures that genuinely need every point.
 
+use super::averaging::{maybe_val_acc, AveragingSpec, Candidate, CandidateKind};
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv};
+use crate::data::EpochSampler;
 use crate::model::{BnState, ParamSet};
 use crate::optim::Schedule;
 use crate::runtime::BatchStats;
 use crate::sim::ClusterClock;
-use crate::util::Result;
+use crate::util::{Error, Json, Result};
 
 #[derive(Debug, Clone)]
 pub struct SwaConfig {
@@ -25,16 +33,25 @@ pub struct SwaConfig {
     pub low_lr: f32,
     pub seed: u64,
     pub seed_stream: u64,
+    /// how the end-of-cycle samples are combined (default Uniform — the
+    /// historical terminal mean, bitwise-pinned)
+    pub averaging: AveragingSpec,
+    /// retain a clone of every end-of-cycle sample in `SwaResult::samples`
+    /// (figure instrumentation only; the averaging itself streams)
+    pub keep_samples: bool,
 }
 
 pub struct SwaResult {
-    /// the sampled models (one per cycle)
+    /// the sampled models (one per cycle) — empty unless
+    /// `SwaConfig::keep_samples` was set
     pub samples: Vec<ParamSet>,
     /// last iterate before averaging and its test stats
     pub last_stats: BatchStats,
     pub averaged: ParamSet,
     pub final_bn: BnState,
     pub final_stats: BatchStats,
+    /// the averaging policy's final scalar state (diagnostics / persistence)
+    pub averaging_state: Json,
     pub clock: ClusterClock,
     pub wall_seconds: f64,
 }
@@ -48,9 +65,15 @@ pub fn run_swa(
 ) -> Result<SwaResult> {
     let wall0 = std::time::Instant::now();
     let mut momentum = params.zeros_like();
-    let mut samples = Vec::with_capacity(cfg.cycles);
+    let mut samples = Vec::with_capacity(if cfg.keep_samples { cfg.cycles } else { 0 });
+    let mut policy = cfg.averaging.build();
 
-    let steps_per_epoch = env.train.n / (cfg.devices * env.exec_batch);
+    // the cyclic period and the trainer's step count MUST come from the
+    // same definition (EpochSampler::steps_per_epoch), or on a
+    // non-divisible n the sawtooth's low-LR point drifts off the true
+    // end-of-cycle sample (the hard check below pins the alignment)
+    let global_batch = cfg.devices * env.exec_batch;
+    let steps_per_epoch = EpochSampler::steps_per_epoch(env.train.n, global_batch);
     let period = cfg.cycle_epochs * steps_per_epoch;
     let sched = Schedule::Cyclic {
         high: cfg.high_lr,
@@ -58,14 +81,14 @@ pub fn run_swa(
         period: period.max(1),
     };
 
-    for _cycle in 0..cfg.cycles {
-        run_sync_training(
+    for cycle in 0..cfg.cycles {
+        let prog = run_sync_training(
             env,
             params,
             &mut momentum,
             &SyncTrainConfig {
                 devices: cfg.devices,
-                global_batch: cfg.devices * env.exec_batch,
+                global_batch,
                 max_epochs: cfg.cycle_epochs,
                 stop_train_acc: 1.1,
                 sched: sched.clone(),
@@ -76,15 +99,33 @@ pub fn run_swa(
             clock,
             |_, _, _| {},
         )?;
-        samples.push(params.clone());
+        if prog.steps != period {
+            return Err(Error::invalid(format!(
+                "swa: cycle {cycle} ran {} steps but the cyclic schedule \
+                 period is {period} ({} epochs x {steps_per_epoch} steps/epoch \
+                 on n={} batch={global_batch}) — the end-of-cycle sample \
+                 would drift off the low-LR point",
+                prog.steps, cfg.cycle_epochs, env.train.n
+            )));
+        }
+        let val_acc = maybe_val_acc(policy.as_ref(), env, params, cfg.seed, clock)?;
+        policy.observe(
+            params,
+            Candidate { kind: CandidateKind::CycleEnd(cycle), val_acc },
+            env.threads,
+        )?;
+        if cfg.keep_samples {
+            samples.push(params.clone());
+        }
     }
 
     // reporting-only: the last SGD iterate before averaging
     let last_stats = env.bn_and_eval(params, cfg.seed, clock)?;
 
-    // average + BN recompute (charged, as in SWAP phase 3) — streaming
-    // flat-arena mean, no per-sample clones
-    let averaged = ParamSet::average_mt(&samples, env.threads)?;
+    // finalize the streamed average + BN recompute (charged, as in SWAP
+    // phase 3)
+    let averaged = policy.average(env.threads)?;
+    let averaging_state = policy.state();
     let final_bn = env.recompute_bn(&averaged, cfg.seed, clock, true)?;
     let final_stats = env.evaluate(&averaged, &final_bn, clock)?;
 
@@ -94,6 +135,7 @@ pub fn run_swa(
         averaged,
         final_bn,
         final_stats,
+        averaging_state,
         clock: *clock,
         wall_seconds: wall0.elapsed().as_secs_f64(),
     })

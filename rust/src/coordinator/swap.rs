@@ -9,16 +9,18 @@
 //! Phase 3: the divergent replicas are weight-averaged and the batch-norm
 //!          statistics are recomputed over the training data.
 
+use super::averaging::{maybe_val_acc, AveragingSpec, Candidate, CandidateKind};
 use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
 use super::transport::{
     self, FailurePolicy, MemoryTransport, NetStats, Phase2Ctx, Phase2Report, Transport,
     WorkerOutcome,
 };
+use crate::data::EpochSampler;
 use crate::model::{BnState, ParamSet};
 use crate::optim::Schedule;
 use crate::runtime::{Backend, BatchStats};
 use crate::sim::ClusterClock;
-use crate::util::{Error, Result};
+use crate::util::{Error, Json, Result};
 
 /// Full SWAP configuration (one experiment arm).
 #[derive(Debug, Clone)]
@@ -36,6 +38,9 @@ pub struct SwapConfig {
     pub phase2_epochs: usize,
     pub phase2_sched: Schedule,
     pub seed: u64,
+    /// how the surviving phase-2 replicas are combined in phase 3
+    /// (default Uniform — the paper's mean, bitwise-pinned vs legacy)
+    pub averaging: AveragingSpec,
     /// snapshot params every N phase-2 steps (figure instrumentation)
     pub snapshot_every: Option<usize>,
     /// snapshot the shared model every N phase-1 steps (Figure 1's left
@@ -96,6 +101,9 @@ pub struct SwapResult {
     /// workers excluded from the phase-3 average (id, reason) — empty on
     /// a fully healthy run
     pub dropped: Vec<(usize, String)>,
+    /// final scalar state of the phase-3 averaging policy (persisted in
+    /// run.meta.json by resumable runs)
+    pub averaging_state: Json,
     /// wire traffic the phase-2 transport actually moved (zero in-memory)
     pub net: NetStats,
 }
@@ -197,7 +205,8 @@ pub fn run_swap_with(
 /// price workers whose result is loaded from a checkpoint (resume) and to
 /// book the time a dropped worker wasted (`ClusterClock::lost`).
 pub(crate) fn modeled_phase2_clock(env: &TrainEnv, cfg: &SwapConfig) -> ClusterClock {
-    let steps = cfg.phase2_epochs * (env.train.n / (cfg.group_devices * env.exec_batch));
+    let steps = cfg.phase2_epochs
+        * EpochSampler::steps_per_epoch(env.train.n, cfg.group_devices * env.exec_batch);
     let mut wclock = ClusterClock::new();
     wclock.advance_compute(steps as f64 * env.cost.train_step_time(env.exec_batch));
     if cfg.group_devices > 1 {
@@ -241,6 +250,7 @@ pub(crate) fn finish_swap(
 ) -> Result<SwapResult> {
     let mut outcomes = report.outcomes;
     outcomes.sort_by_key(|(w, _)| *w);
+    let mut worker_ids = Vec::with_capacity(cfg.workers);
     let mut worker_params = Vec::with_capacity(cfg.workers);
     let mut group_clocks = Vec::with_capacity(cfg.workers);
     let mut snapshots: Snapshots = Vec::with_capacity(cfg.workers);
@@ -248,6 +258,7 @@ pub(crate) fn finish_swap(
     for (w, outcome) in outcomes {
         match outcome {
             WorkerOutcome::Done { params, clock: wclock, trail } => {
+                worker_ids.push(w);
                 worker_params.push(params);
                 group_clocks.push(wclock);
                 snapshots.push(trail);
@@ -287,11 +298,21 @@ pub(crate) fn finish_swap(
     }
 
     // ---------------- Phase 3: average + BN recompute ------------------
-    // streaming flat-arena mean over the SURVIVORS (the paper's average is
-    // well-defined for any non-empty subset): one output allocation, no
-    // W-way clone, chunk-parallel across env.threads (bitwise-identical
-    // to sequential)
-    let final_params = ParamSet::average_mt(&worker_params, env.threads)?;
+    // the configured policy streams over the SURVIVORS in worker-id order
+    // (the paper's average is well-defined for any non-empty subset). The
+    // default Uniform policy is bitwise-identical to the historical
+    // `ParamSet::average_mt` call, chunk-parallel across env.threads.
+    let mut avg_policy = cfg.averaging.build();
+    for (id, wp) in worker_ids.iter().zip(&worker_params) {
+        let val_acc = maybe_val_acc(avg_policy.as_ref(), env, wp, cfg.seed, &mut clock)?;
+        avg_policy.observe(
+            wp,
+            Candidate { kind: CandidateKind::Worker(*id), val_acc },
+            env.threads,
+        )?;
+    }
+    let final_params = avg_policy.average(env.threads)?;
+    let averaging_state = avg_policy.state();
     let final_bn = env.recompute_bn(&final_params, cfg.seed, &mut clock, true)?;
     let final_stats = env.evaluate(&final_params, &final_bn, &mut clock)?;
 
@@ -310,6 +331,7 @@ pub(crate) fn finish_swap(
         phase1_params,
         phase1_snapshots,
         dropped,
+        averaging_state,
         net: report.net,
     };
     // one source of truth for the "before averaging" accuracy: the

@@ -30,6 +30,9 @@ pub struct TrainEnv<'a> {
     pub cost: &'a CostModel,
     pub train: &'a Dataset,
     pub test: &'a Dataset,
+    /// held-out validation split for validation-gated averaging policies
+    /// (the `val_examples` config knob); `None` = no split loaded
+    pub val: Option<&'a Dataset>,
     pub augment: AugmentSpec,
     /// per-executable batch size (all artifacts share it)
     pub exec_batch: usize,
@@ -161,6 +164,22 @@ impl<'a> TrainEnv<'a> {
             Ok(true)
         })?;
         BnState::from_moments(ParamLayout::of_bn(self.engine.manifest()), &moments)
+    }
+
+    /// Top-1 accuracy of `params` on the held-out validation split, or
+    /// `None` when no split is loaded. BN is recomputed uncharged and the
+    /// forward passes are booked as eval time — validation scoring guides
+    /// the averaging policy, it is not training compute.
+    pub fn val_acc(
+        &self,
+        params: &ParamSet,
+        seed: u64,
+        clock: &mut ClusterClock,
+    ) -> Result<Option<f64>> {
+        let Some(val) = self.val else { return Ok(None) };
+        let bn = self.recompute_bn(params, seed, clock, false)?;
+        let stats = self.evaluate_on(val, params, &bn, clock, usize::MAX)?;
+        Ok(Some(stats.accuracy1()))
     }
 
     /// Convenience: recompute BN (uncharged) then evaluate.

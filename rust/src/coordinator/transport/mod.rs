@@ -173,6 +173,10 @@ pub fn run_fingerprint(env: &TrainEnv, cfg: &SwapConfig) -> String {
         ("phase1_sched", Json::str(format!("{:?}", cfg.phase1_sched))),
         ("phase2_epochs", Json::Num(cfg.phase2_epochs as f64)),
         ("phase2_sched", Json::str(format!("{:?}", cfg.phase2_sched))),
+        // which averaging policy combined the replicas: resuming a run
+        // directory under a different policy must hard-error, not
+        // silently re-average the checkpoints another way
+        ("averaging", Json::str(cfg.averaging.id())),
     ])
     .to_string()
 }

@@ -53,7 +53,18 @@ impl EpochSampler {
     }
 
     pub fn batches_per_epoch(&self) -> usize {
-        self.n / self.batch
+        Self::steps_per_epoch(self.n, self.batch)
+    }
+
+    /// Steps one epoch of `n` examples yields at a global batch of
+    /// `batch`, with the ragged tail dropped — THE definition every
+    /// coordinator must price schedules and modeled clocks with. The
+    /// trainer's actual step count is `max_epochs *` this, so a cyclic
+    /// schedule whose period is built from the same helper always puts
+    /// its low-LR point exactly at the end of a cycle (regression-pinned
+    /// on non-divisible `n` in rust/tests/averaging_policy.rs).
+    pub fn steps_per_epoch(n: usize, batch: usize) -> usize {
+        n / batch
     }
 
     /// Next batch of indices; rolls into a fresh epoch when exhausted.

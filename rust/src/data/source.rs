@@ -16,6 +16,22 @@ pub trait DataSource: Send + Sync {
     fn name(&self) -> &'static str;
     /// (train, test)
     fn load(&self) -> Result<(Dataset, Dataset)>;
+
+    /// (train, test, val): like [`DataSource::load`], plus an optional
+    /// held-out validation split of `val_examples` examples for
+    /// validation-gated averaging policies. `val_examples == 0` means no
+    /// split (val is `None`) and must leave train/test bitwise identical
+    /// to `load`. The default carves the validation examples off the tail
+    /// of the train split (shrinking it); sources that can mint fresh
+    /// examples should override and keep train untouched instead.
+    fn load_with_val(&self, val_examples: usize) -> Result<(Dataset, Dataset, Option<Dataset>)> {
+        let (train, test) = self.load()?;
+        if val_examples == 0 {
+            return Ok((train, test, None));
+        }
+        let (train, val) = train.split_tail(val_examples)?;
+        Ok((train, test, Some(val)))
+    }
 }
 
 /// The synthetic generator (default): train/test sampled from the same
@@ -40,6 +56,23 @@ impl DataSource for SynthSource {
             self.seed,
         ));
         Ok((gen.sample(self.n_train, 10), gen.sample(self.n_test, 11)))
+    }
+
+    /// The generator mints the validation split from its own disjoint RNG
+    /// stream (split 12), so train keeps all n_train examples and stays
+    /// bitwise identical to a run without validation — enabling the
+    /// adaptive policy never perturbs the training trajectory.
+    fn load_with_val(&self, val_examples: usize) -> Result<(Dataset, Dataset, Option<Dataset>)> {
+        let (train, test) = self.load()?;
+        if val_examples == 0 {
+            return Ok((train, test, None));
+        }
+        let gen = Generator::new(SynthSpec::for_preset(
+            self.num_classes,
+            self.image_size,
+            self.seed,
+        ));
+        Ok((train, test, Some(gen.sample(val_examples, 12))))
     }
 }
 
@@ -103,6 +136,32 @@ mod tests {
         assert_eq!(test.images, want_test.images);
         assert_eq!(test.labels, want_test.labels);
         assert_eq!(src.name(), "synth");
+    }
+
+    #[test]
+    fn synth_val_split_leaves_train_untouched() {
+        let src = SynthSource {
+            num_classes: 10,
+            image_size: 16,
+            seed: 42,
+            n_train: 24,
+            n_test: 8,
+        };
+        let (plain_train, plain_test) = src.load().unwrap();
+        let (train, test, val) = src.load_with_val(6).unwrap();
+        // enabling validation must not move a single training pixel
+        assert_eq!(train.images, plain_train.images);
+        assert_eq!(train.labels, plain_train.labels);
+        assert_eq!(test.images, plain_test.images);
+        let val = val.unwrap();
+        assert_eq!(val.n, 6);
+        let gen = Generator::new(SynthSpec::for_preset(10, 16, 42));
+        let want = gen.sample(6, 12);
+        assert_eq!(val.images, want.images);
+        assert_eq!(val.labels, want.labels);
+        // val_examples == 0 → no split at all
+        let (_, _, none) = src.load_with_val(0).unwrap();
+        assert!(none.is_none());
     }
 
     #[test]

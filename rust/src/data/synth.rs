@@ -29,6 +29,32 @@ pub struct Dataset {
     pub num_classes: usize,
 }
 
+impl Dataset {
+    /// Split the last `k` examples off into their own dataset (held-out
+    /// validation for sources that cannot mint fresh examples). Returns
+    /// (head of n-k, tail of k); the head's examples are bit-identical to
+    /// the first n-k examples of the original.
+    pub fn split_tail(mut self, k: usize) -> crate::util::Result<(Dataset, Dataset)> {
+        if k == 0 || k >= self.n {
+            return Err(crate::util::Error::config(format!(
+                "split_tail: k={k} must be in 1..{} (dataset size)",
+                self.n
+            )));
+        }
+        let pix = self.image_size * self.image_size * 3;
+        let head_n = self.n - k;
+        let tail = Dataset {
+            images: self.images.split_off(head_n * pix),
+            labels: self.labels.split_off(head_n),
+            n: k,
+            image_size: self.image_size,
+            num_classes: self.num_classes,
+        };
+        self.n = head_n;
+        Ok((self, tail))
+    }
+}
+
 /// Generation parameters.
 #[derive(Debug, Clone)]
 pub struct SynthSpec {
@@ -210,6 +236,25 @@ mod tests {
         let acc = correct as f64 / test.n as f64;
         assert!(acc > 0.3, "task too hard: centroid acc {acc}");
         assert!(acc < 0.999, "task trivial: centroid acc {acc}");
+    }
+
+    #[test]
+    fn split_tail_head_is_prefix_and_tail_is_suffix() {
+        let g = gen();
+        let full = g.sample(10, 10);
+        let pix = full.pixels_per_image();
+        let (head, tail) = full.clone().split_tail(3).unwrap();
+        assert_eq!(head.n, 7);
+        assert_eq!(tail.n, 3);
+        assert_eq!(head.images, full.images[..7 * pix]);
+        assert_eq!(head.labels, full.labels[..7]);
+        assert_eq!(tail.images, full.images[7 * pix..]);
+        assert_eq!(tail.labels, full.labels[7..]);
+        assert_eq!(tail.image_size, full.image_size);
+        assert_eq!(tail.num_classes, full.num_classes);
+        // degenerate splits error instead of silently emptying a side
+        assert!(full.clone().split_tail(0).is_err());
+        assert!(full.clone().split_tail(10).is_err());
     }
 
     #[test]

@@ -107,6 +107,7 @@ pub fn ablate_averaging_frequency(lab: &Lab, h_sweep: &[usize]) -> Result<Table>
                 local_sched: lab.cfg.phase2_schedule(lab.spe(1)),
                 h_steps: h,
                 seed: lab.cfg.seed,
+                averaging: lab.averaging.clone(),
             },
         )?;
         t.row(&[

@@ -3,7 +3,7 @@
 //! bench, figure bench, example, and CLI subcommand goes through this.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{BaselineConfig, SwaConfig, SwapConfig, TrainEnv};
+use crate::coordinator::{AveragingSpec, BaselineConfig, SwaConfig, SwapConfig, TrainEnv};
 use crate::data::Dataset;
 use crate::runtime::Backend;
 use crate::sim::{CostModel, DeviceModel, NetModel};
@@ -15,17 +15,26 @@ pub struct Lab {
     pub cost: CostModel,
     pub train: Dataset,
     pub test: Dataset,
+    /// held-out validation split (val_examples > 0) for validation-gated
+    /// averaging policies
+    pub val: Option<Dataset>,
+    /// the parsed averaging policy every arm built from this lab uses
+    pub averaging: AveragingSpec,
 }
 
 impl Lab {
     pub fn new(cfg: ExperimentConfig) -> Result<Lab> {
         cfg.validate()?;
+        let averaging = cfg.averaging_spec()?;
         let engine = cfg.load_backend()?;
         let m = engine.manifest().clone();
         let source = cfg.data_source()?;
-        let (train, test) = source.load()?;
+        let (train, test, val) = source.load_with_val(cfg.val_examples)?;
         // the loaded data must fit the model contract, whatever fed it
-        for (ds, what) in [(&train, "train"), (&test, "test")] {
+        for (ds, what) in [(Some(&train), "train"), (Some(&test), "test"), (val.as_ref(), "val")]
+            .into_iter()
+            .filter_map(|(ds, what)| ds.map(|d| (d, what)))
+        {
             if ds.num_classes != m.model.num_classes || ds.image_size != m.model.image_size {
                 return Err(Error::config(format!(
                     "data source '{}' {what} split is {}x{} with {} classes, \
@@ -42,15 +51,16 @@ impl Lab {
         }
         let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
         crate::info!(
-            "lab ready: preset={} backend={} data={} params={} train={} test={}",
+            "lab ready: preset={} backend={} data={} params={} train={} test={} val={}",
             cfg.preset,
             engine.name(),
             source.name(),
             m.num_params,
             train.n,
-            test.n
+            test.n,
+            val.as_ref().map_or(0, |v| v.n)
         );
-        Ok(Lab { cfg, engine, cost, train, test })
+        Ok(Lab { cfg, engine, cost, train, test, val, averaging })
     }
 
     pub fn env(&self) -> TrainEnv<'_> {
@@ -59,6 +69,7 @@ impl Lab {
             cost: &self.cost,
             train: &self.train,
             test: &self.test,
+            val: self.val.as_ref(),
             augment: self.cfg.augment_spec(),
             exec_batch: self.cfg.exec_batch,
             bn_batches: self.cfg.bn_batches,
@@ -102,6 +113,7 @@ impl Lab {
             phase2_epochs: self.cfg.phase2_epochs,
             phase2_sched: self.cfg.phase2_schedule(self.spe(self.cfg.group_devices)),
             seed,
+            averaging: self.averaging.clone(),
             snapshot_every: None,
             phase1_snapshot_every: None,
         }
@@ -117,6 +129,8 @@ impl Lab {
             low_lr: self.cfg.swa_low_lr,
             seed,
             seed_stream: 7,
+            averaging: self.averaging.clone(),
+            keep_samples: false,
         }
     }
 

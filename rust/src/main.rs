@@ -93,6 +93,7 @@ fn main() -> Result<()> {
                     local_sched: lab.cfg.phase2_schedule(lab.spe(1)),
                     h_steps: 8,
                     seed: lab.cfg.seed,
+                    averaging: lab.averaging.clone(),
                 },
             )?;
             println!(

@@ -274,6 +274,16 @@ impl FlatParams {
         Ok(())
     }
 
+    /// self += x — the streaming-accumulation step of the averaging
+    /// policies. One `add_assign_mt` per candidate followed by a single
+    /// `scale(1/n)` reproduces `average_mt`'s accumulation order bitwise
+    /// (see `tensor::flat::add`).
+    pub fn add_assign_mt(&mut self, x: &FlatParams, threads: usize) -> Result<()> {
+        self.check_same(x)?;
+        flat::add(threads, &mut self.data, &x.data);
+        Ok(())
+    }
+
     /// self *= alpha
     pub fn scale(&mut self, alpha: f32, threads: usize) {
         flat::scale(threads, &mut self.data, alpha);

@@ -36,6 +36,23 @@ pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
     });
 }
 
+/// acc += x, chunk-parallel — the streaming-accumulation kernel of the
+/// averaging policies. A running sum built by one `add` per candidate (in
+/// observation order) followed by a single `scale(1/n)` reproduces
+/// `mean_into`'s accumulation order `((s0 + s1) + s2 + ...) * (1/n)`
+/// element for element, so a streaming mean is bitwise-identical to the
+/// terminal mean without retaining the candidates. (An incremental
+/// `avg += (x - avg)/n` update would NOT be.)
+pub fn add(threads: usize, acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "add: length mismatch");
+    let t = parallel::gate_per_chunk(threads, acc.len() * 2, parallel::MIN_ITEM_WORK);
+    parallel::parallel_row_chunks(t, acc, 1, |first, chunk| {
+        for (a, &b) in chunk.iter_mut().zip(&x[first..first + chunk.len()]) {
+            *a += b;
+        }
+    });
+}
+
 /// acc *= alpha, chunk-parallel.
 pub fn scale(threads: usize, acc: &mut [f32], alpha: f32) {
     let t = parallel::gate_per_chunk(threads, acc.len(), parallel::MIN_ITEM_WORK);

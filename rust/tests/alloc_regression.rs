@@ -23,7 +23,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use swap::coordinator::allreduce;
+use swap::coordinator::{allreduce, Candidate, CandidateKind, StreamingMean};
+use swap::coordinator::averaging::UniformPolicy;
+use swap::coordinator::AveragingPolicy;
 use swap::data::{AugStream, AugmentSpec, Batcher, Generator, SynthSpec};
 use swap::model::{FlatParams, ParamLayout};
 
@@ -95,6 +97,60 @@ fn average_and_ring_allocation_budgets() {
         "average allocated {avg_bytes}B, budget is one {arena_bytes}B output \
          arena (+slack)"
     );
+
+    // ---- streaming averaging policy: bounded to ~2 arenas --------------
+    // The AveragingPolicy refactor must keep phase 3 streaming: observing
+    // W candidates holds ONE running-sum arena (cloned from candidate 0),
+    // and reading the average clones + scales it — never the W-arena
+    // retention a naive "collect then average" policy would cost.
+    let ((sum_mean, stream_avg), stream_bytes, stream_calls) = measured(|| {
+        let mut mean = StreamingMean::new();
+        for s in &sets {
+            mean.push(s, 1).unwrap();
+        }
+        let avg = mean.mean(1).unwrap();
+        (mean, avg)
+    });
+    assert_eq!(sum_mean.count(), W);
+    assert_eq!(
+        stream_avg, avg,
+        "streamed mean must stay bitwise-identical to the terminal average"
+    );
+    assert!(
+        stream_bytes < legacy_floor / 2,
+        "streaming mean allocated {stream_bytes}B over {stream_calls} allocs \
+         — regressed toward W-arena candidate retention ({legacy_floor}B)"
+    );
+    assert!(
+        stream_bytes <= 2 * arena_bytes + 16_384,
+        "streaming mean allocated {stream_bytes}B, budget is the running sum \
+         + the read-out arena (2 x {arena_bytes}B + slack)"
+    );
+    drop((sum_mean, stream_avg));
+
+    // the full UniformPolicy wrapper obeys the same budget (it is the
+    // phase-3 default and must not add per-candidate bookkeeping arenas)
+    let ((pol, pol_avg), pol_bytes, pol_calls) = measured(|| {
+        let mut pol = UniformPolicy::new();
+        for (w, s) in sets.iter().enumerate() {
+            pol.observe(
+                s,
+                Candidate { kind: CandidateKind::Worker(w), val_acc: None },
+                1,
+            )
+            .unwrap();
+        }
+        let avg = pol.average(1).unwrap();
+        (pol, avg)
+    });
+    assert_eq!(pol.contributing(), W);
+    assert_eq!(pol_avg, avg, "uniform policy must match the terminal average");
+    assert!(
+        pol_bytes <= 2 * arena_bytes + 16_384,
+        "uniform policy allocated {pol_bytes}B over {pol_calls} allocs, \
+         budget is one running sum + one read-out arena"
+    );
+    drop((pol, pol_avg));
 
     // ---- in-place ring all-reduce: ZERO allocation ---------------------
     let mut bufs: Vec<Vec<f32>> = sets.iter().map(|s| s.data().to_vec()).collect();

@@ -1,0 +1,362 @@
+//! The AveragingPolicy refactor's bitwise-parity suite.
+//!
+//! The phase-3 / SWA averaging core moved from a hard-coded terminal
+//! `ParamSet::average_mt` into the pluggable streaming policies of
+//! `coordinator::averaging`. This file pins the refactor's contract:
+//!   * Uniform (the default) is BITWISE-identical to the legacy terminal
+//!     mean through every coordinator — SWAP phase 3, SWA cycles, and
+//!     local-SGD consensus — at threads 1 and 4,
+//!   * every policy's output is thread-count invariant bit for bit,
+//!   * the swa/hierarchical/adaptive policies match hand-computed
+//!     references through the real coordinators (not just unit vectors),
+//!   * the cyclic-SWA step alignment holds on train sets whose size does
+//!     NOT divide the global batch (the steps_per_epoch unification),
+//!   * resumable runs persist the policy state in run.meta.json and a
+//!     run directory refuses to resume under a different policy.
+
+use swap::coordinator::{
+    run_local_sgd, run_swa, run_swap, run_swap_resumable, AveragingSpec, LocalSgdConfig, RunDir,
+    StreamingMean, SwaConfig, SwapConfig, TrainEnv,
+};
+use swap::data::{AugmentSpec, Dataset, Generator, SynthSpec};
+use swap::model::ParamSet;
+use swap::optim::Schedule;
+use swap::runtime::{Backend, NativeBackend};
+use swap::sim::{ClusterClock, CostModel, DeviceModel, NetModel};
+
+struct Fixture {
+    engine: NativeBackend,
+    cost: CostModel,
+    train: Dataset,
+    test: Dataset,
+    val: Option<Dataset>,
+}
+
+fn fixture_n(n_train: usize, val_examples: usize) -> Fixture {
+    let engine = NativeBackend::tiny();
+    let m = engine.manifest().clone();
+    let gen = Generator::new(SynthSpec::for_preset(m.model.num_classes, m.model.image_size, 99));
+    let train = gen.sample(n_train, 10);
+    let test = gen.sample(32, 11);
+    let val = (val_examples > 0).then(|| gen.sample(val_examples, 12));
+    let cost = CostModel::new(DeviceModel::v100_like(), NetModel::pcie_like(), &m);
+    Fixture { engine, cost, train, test, val }
+}
+
+fn fixture() -> Fixture {
+    fixture_n(96, 0)
+}
+
+fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
+    TrainEnv {
+        engine: &f.engine,
+        cost: &f.cost,
+        train: &f.train,
+        test: &f.test,
+        val: f.val.as_ref(),
+        augment: AugmentSpec::none(),
+        exec_batch: 8,
+        bn_batches: 2,
+        threads,
+        prefetch: false,
+    }
+}
+
+fn swap_cfg(seed: u64, workers: usize, averaging: AveragingSpec) -> SwapConfig {
+    SwapConfig {
+        workers,
+        group_devices: 1,
+        phase1_max_epochs: 2,
+        phase1_stop_acc: 1.1,
+        phase1_sched: Schedule::Constant(0.08),
+        phase2_epochs: 2,
+        phase2_sched: Schedule::Constant(0.02),
+        seed,
+        averaging,
+        snapshot_every: None,
+        phase1_snapshot_every: None,
+    }
+}
+
+fn swa_cfg(seed: u64, cycles: usize, averaging: AveragingSpec) -> SwaConfig {
+    SwaConfig {
+        devices: 1,
+        cycles,
+        cycle_epochs: 1,
+        high_lr: 0.05,
+        low_lr: 0.005,
+        seed,
+        seed_stream: 0,
+        averaging,
+        keep_samples: true,
+    }
+}
+
+fn state_str(state: &swap::util::Json) -> String {
+    state.to_string_pretty()
+}
+
+#[test]
+fn streaming_mean_bitwise_matches_terminal_mean_on_model_arenas() {
+    // the kernel-level pin on real model-shaped arenas (26 tensors), not
+    // just hand-rolled unit vectors: ((s0+s1)+s2+...)*(1/n) streamed ==
+    // flat::mean_into, at threads 1 and 4
+    let f = fixture();
+    let m = f.engine.manifest();
+    let sets: Vec<ParamSet> = (0..5).map(|w| ParamSet::init(m, w as u64)).collect();
+    let legacy = ParamSet::average_mt(&sets, 1).unwrap();
+    for threads in [1usize, 4] {
+        let mut mean = StreamingMean::new();
+        for s in &sets {
+            mean.push(s, threads).unwrap();
+        }
+        assert_eq!(
+            mean.mean(threads).unwrap(),
+            legacy,
+            "threads={threads}: streamed mean must equal the terminal mean bitwise"
+        );
+    }
+    // and the multi-threaded terminal mean itself is thread-invariant
+    assert_eq!(ParamSet::average_mt(&sets, 4).unwrap(), legacy);
+}
+
+#[test]
+fn swap_uniform_final_params_bitwise_equal_legacy_average() {
+    // THE refactor acceptance criterion: a default (Uniform) SWAP run's
+    // averaged model is bitwise what the pre-refactor hard-coded
+    // `ParamSet::average_mt(&worker_params, threads)` produced — at
+    // threads 1 and at threads 4
+    let f = fixture();
+    for threads in [1usize, 4] {
+        let env = env_threads(&f, threads);
+        let r = run_swap(&env, &swap_cfg(17, 3, AveragingSpec::Uniform)).unwrap();
+        assert_eq!(r.worker_params.len(), 3);
+        let legacy = ParamSet::average_mt(&r.worker_params, threads).unwrap();
+        assert_eq!(
+            r.final_params, legacy,
+            "threads={threads}: uniform policy must be bitwise the legacy mean"
+        );
+        let st = r.averaging_state;
+        assert_eq!(st.get("policy").and_then(|v| v.as_str()), Some("uniform"));
+        assert_eq!(st.get("contributing").and_then(|v| v.as_usize()), Some(3));
+    }
+}
+
+#[test]
+fn every_policy_is_thread_invariant_through_swap() {
+    let f = fixture();
+    for spec in [
+        AveragingSpec::Uniform,
+        AveragingSpec::Swa,
+        AveragingSpec::Hierarchical { groups: 2 },
+    ] {
+        let a = run_swap(&env_threads(&f, 1), &swap_cfg(23, 4, spec.clone())).unwrap();
+        let b = run_swap(&env_threads(&f, 4), &swap_cfg(23, 4, spec.clone())).unwrap();
+        assert_eq!(
+            a.final_params,
+            b.final_params,
+            "{}: threads=4 must equal threads=1 bitwise",
+            spec.id()
+        );
+        assert_eq!(
+            a.final_stats.sum_loss.to_bits(),
+            b.final_stats.sum_loss.to_bits()
+        );
+        assert_eq!(state_str(&a.averaging_state), state_str(&b.averaging_state));
+    }
+}
+
+#[test]
+fn swa_policy_through_swap_matches_incremental_recurrence() {
+    // the Swa policy applies Izmailov's avg <- (avg*n + x)/(n+1) to the
+    // workers in id order; replay the recurrence on the returned replicas
+    let f = fixture();
+    let env = env_threads(&f, 1);
+    let r = run_swap(&env, &swap_cfg(29, 3, AveragingSpec::Swa)).unwrap();
+    let mut want = r.worker_params[0].clone();
+    for (n, wp) in r.worker_params[1..].iter().enumerate() {
+        want.scale((n + 1) as f32, 1);
+        want.add_assign_mt(wp, 1).unwrap();
+        want.scale(1.0 / (n + 2) as f32, 1);
+    }
+    assert_eq!(r.final_params, want, "swa recurrence replay must match bitwise");
+    assert_eq!(
+        r.averaging_state.get("policy").and_then(|v| v.as_str()),
+        Some("swa")
+    );
+}
+
+#[test]
+fn hierarchical_through_swap_matches_manual_group_means() {
+    // groups=2 routes worker ids round-robin: group 0 = {w0, w2},
+    // group 1 = {w1, w3}; final = mean(mean(g0), mean(g1))
+    let f = fixture();
+    let env = env_threads(&f, 1);
+    let spec = AveragingSpec::Hierarchical { groups: 2 };
+    let r = run_swap(&env, &swap_cfg(31, 4, spec)).unwrap();
+    let w = &r.worker_params;
+    let g0 = ParamSet::average_mt(&[w[0].clone(), w[2].clone()], 1).unwrap();
+    let g1 = ParamSet::average_mt(&[w[1].clone(), w[3].clone()], 1).unwrap();
+    let want = ParamSet::average_mt(&[g0, g1], 1).unwrap();
+    assert_eq!(r.final_params, want, "grouped means must match bitwise");
+    match r.averaging_state.get("group_counts") {
+        Some(swap::util::Json::Arr(counts)) => {
+            let counts: Vec<_> = counts.iter().map(|c| c.as_usize()).collect();
+            assert_eq!(counts, vec![Some(2), Some(2)]);
+        }
+        other => panic!("group_counts must be an array, got {other:?}"),
+    }
+
+    // groups=1 degenerates to Uniform, bitwise (the across-group mean over
+    // one set multiplies by 1.0, which is IEEE-exact)
+    let one = run_swap(&env, &swap_cfg(31, 4, AveragingSpec::Hierarchical { groups: 1 })).unwrap();
+    let uni = run_swap(&env, &swap_cfg(31, 4, AveragingSpec::Uniform)).unwrap();
+    assert_eq!(one.final_params, uni.final_params, "groups=1 must be bitwise uniform");
+}
+
+#[test]
+fn swa_uniform_averaged_bitwise_equals_mean_of_samples() {
+    let f = fixture();
+    for threads in [1usize, 4] {
+        let env = env_threads(&f, threads);
+        let mut params = ParamSet::init(f.engine.manifest(), 8);
+        let mut clock = ClusterClock::new();
+        let r = run_swa(&env, &mut params, &swa_cfg(8, 3, AveragingSpec::Uniform), &mut clock)
+            .unwrap();
+        assert_eq!(r.samples.len(), 3, "keep_samples must retain the trail");
+        let legacy = ParamSet::average_mt(&r.samples, threads).unwrap();
+        assert_eq!(
+            r.averaged, legacy,
+            "threads={threads}: streamed SWA average must equal the terminal mean"
+        );
+    }
+}
+
+#[test]
+fn local_sgd_uniform_consensus_is_thread_invariant() {
+    // the every-H sync and the final model now go through
+    // averaging::consensus — with Uniform that is the legacy mean, and the
+    // whole run stays bitwise across thread counts
+    let f = fixture();
+    let cfg = |averaging: AveragingSpec| LocalSgdConfig {
+        devices: 2,
+        sync_epochs: 1,
+        sync_sched: Schedule::Constant(0.08),
+        local_epochs: 1,
+        local_sched: Schedule::Constant(0.02),
+        h_steps: 4,
+        seed: 12,
+        averaging,
+    };
+    let a = run_local_sgd(&env_threads(&f, 1), &cfg(AveragingSpec::Uniform)).unwrap();
+    let b = run_local_sgd(&env_threads(&f, 4), &cfg(AveragingSpec::Uniform)).unwrap();
+    assert_eq!(a.params, b.params, "uniform consensus must be bitwise thread-invariant");
+    assert_eq!(a.sync_events, b.sync_events);
+
+    // validation-gated policies cannot drive a consensus round
+    let spec = AveragingSpec::Adaptive { window: 2, min_improve: 0.0 };
+    let err = run_local_sgd(&env_threads(&f, 1), &cfg(spec)).unwrap_err().to_string();
+    assert!(err.contains("consensus"), "{err}");
+}
+
+#[test]
+fn swa_cycles_align_on_non_divisible_train_set() {
+    // regression (steps_per_epoch unification): n_train = 100 does not
+    // divide the B=8 global batch — 12 steps/epoch with 4 examples
+    // dropped. The cyclic period and the trainer's epoch length must come
+    // from the same definition or run_swa's alignment check trips.
+    let f = fixture_n(100, 0);
+    let env = env_threads(&f, 2);
+    let mut params = ParamSet::init(f.engine.manifest(), 5);
+    let mut clock = ClusterClock::new();
+    let r = run_swa(&env, &mut params, &swa_cfg(5, 2, AveragingSpec::Uniform), &mut clock)
+        .expect("non-divisible n must not break cycle alignment");
+    assert_eq!(r.samples.len(), 2);
+    assert_eq!(
+        r.averaging_state.get("contributing").and_then(|v| v.as_usize()),
+        Some(2)
+    );
+    // and through SWAP on the same ragged train set
+    let s = run_swap(&env, &swap_cfg(5, 2, AveragingSpec::Uniform)).unwrap();
+    assert_eq!(s.worker_params.len(), 2);
+    let legacy = ParamSet::average_mt(&s.worker_params, 2).unwrap();
+    assert_eq!(s.final_params, legacy);
+}
+
+#[test]
+fn adaptive_through_swa_gates_and_windows_on_validation() {
+    // min_improve = 1.0 can never be beaten (accuracies live in [0, 1]),
+    // so the gate deterministically opens at the SECOND cycle: candidate 0
+    // seeds the running best, candidate 1 plateaus and starts the window.
+    // With window = 2 over 4 cycles the window holds samples {2, 3}.
+    let f = fixture_n(96, 24);
+    let env = env_threads(&f, 2);
+    let mut params = ParamSet::init(f.engine.manifest(), 9);
+    let mut clock = ClusterClock::new();
+    let spec = AveragingSpec::Adaptive { window: 2, min_improve: 1.0 };
+    let r = run_swa(&env, &mut params, &swa_cfg(9, 4, spec), &mut clock).unwrap();
+    let st = &r.averaging_state;
+    assert_eq!(st.get("policy").and_then(|v| v.as_str()), Some("adaptive"));
+    assert_eq!(st.get("started").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(st.get("opened_at").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(st.get("observed").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(st.get("contributing").and_then(|v| v.as_usize()), Some(2));
+    let want =
+        ParamSet::average_mt(&[r.samples[2].clone(), r.samples[3].clone()], 2).unwrap();
+    assert_eq!(r.averaged, want, "late window must average the last two samples");
+    // validation forward passes are booked as (uncharged-training) eval time
+    assert!(clock.eval > 0.0);
+}
+
+#[test]
+fn adaptive_without_validation_split_errors() {
+    // env.val = None: the candidate arrives unscored and the policy raises
+    // the actionable config error instead of silently degrading
+    let f = fixture();
+    let env = env_threads(&f, 1);
+    let mut params = ParamSet::init(f.engine.manifest(), 3);
+    let mut clock = ClusterClock::new();
+    let spec = AveragingSpec::Adaptive { window: 2, min_improve: 0.0 };
+    let err = run_swa(&env, &mut params, &swa_cfg(3, 2, spec), &mut clock)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("val_examples"), "{err}");
+}
+
+#[test]
+fn resumable_swap_persists_policy_state_and_pins_the_policy() {
+    let f = fixture();
+    let env = env_threads(&f, 2);
+    let cfg = swap_cfg(41, 2, AveragingSpec::Uniform);
+    let dir_path =
+        std::env::temp_dir().join(format!("swap-avgpolicy-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+
+    let fresh = run_swap(&env, &cfg).unwrap();
+    let a = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert_eq!(a.final_params, fresh.final_params);
+
+    // the policy's scalar state landed in run.meta.json
+    let st = dir.load_averaging_state().unwrap().expect("state must be persisted");
+    assert_eq!(st.get("policy").and_then(|v| v.as_str()), Some("uniform"));
+    assert_eq!(st.get("contributing").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(state_str(&st), state_str(&a.averaging_state));
+
+    // a resume of the SAME directory recomputes the identical state from
+    // the checkpointed replicas
+    let b = run_swap_resumable(&env, &cfg, &dir).unwrap();
+    assert_eq!(b.final_params, fresh.final_params);
+    assert_eq!(state_str(&b.averaging_state), state_str(&a.averaging_state));
+
+    // ... but resuming under a DIFFERENT averaging policy hard-errors: the
+    // policy id joins the run fingerprint
+    let mut other = cfg.clone();
+    other.averaging = AveragingSpec::Swa;
+    let err = run_swap_resumable(&env, &other, &dir).unwrap_err().to_string();
+    assert!(
+        err.contains("different configuration"),
+        "changing the averaging policy must trip the fingerprint check: {err}"
+    );
+    std::fs::remove_dir_all(&dir_path).ok();
+}

@@ -4,8 +4,8 @@
 //! hermetic: synthetic data + the pure-rust engine, no artifacts.
 
 use swap::coordinator::{
-    run_baseline, run_local_sgd, run_swa, run_swap, run_sync_training, BaselineConfig,
-    LocalSgdConfig, SwaConfig, SwapConfig, SyncTrainConfig, TrainEnv,
+    run_baseline, run_local_sgd, run_swa, run_swap, run_sync_training, AveragingSpec,
+    BaselineConfig, LocalSgdConfig, SwaConfig, SwapConfig, SyncTrainConfig, TrainEnv,
 };
 use swap::data::{AugmentSpec, Dataset, Generator, SynthSpec};
 use swap::model::ParamSet;
@@ -36,6 +36,7 @@ fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
         cost: &f.cost,
         train: &f.train,
         test: &f.test,
+        val: None,
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
@@ -70,6 +71,7 @@ fn tiny_swap_config(seed: u64) -> SwapConfig {
         phase2_epochs: 2,
         phase2_sched: Schedule::Constant(0.02),
         seed,
+        averaging: AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
     }
@@ -202,6 +204,7 @@ fn swap_averaging_beats_mean_worker() {
         phase2_epochs: 1,
         phase2_sched: Schedule::Triangle { peak: 0.01, warmup: 1, total: 12, end_lr: 0.0 },
         seed: 42,
+        averaging: AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
     };
@@ -309,6 +312,8 @@ fn swa_samples_and_averages() {
             low_lr: 0.005,
             seed: 8,
             seed_stream: 0,
+            averaging: AveragingSpec::Uniform,
+            keep_samples: true,
         },
         &mut clock,
     )
@@ -336,6 +341,7 @@ fn local_sgd_syncs_parameters() {
             local_sched: Schedule::Constant(0.02),
             h_steps: 4,
             seed: 12,
+            averaging: AveragingSpec::Uniform,
         },
     )
     .unwrap();
@@ -506,6 +512,7 @@ fn local_sgd_prefetch_matches_serial() {
         local_sched: Schedule::Constant(0.02),
         h_steps: 4,
         seed: 33,
+        averaging: AveragingSpec::Uniform,
     };
     let a = run_local_sgd(&env_with(&f, 1, false), &cfg).unwrap();
     let b = run_local_sgd(&env_with(&f, 4, true), &cfg).unwrap();
@@ -530,6 +537,7 @@ fn recompute_bn_errors_on_empty_dataset() {
         cost: &cost,
         train: &train,
         test: &test,
+        val: None,
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
@@ -558,6 +566,7 @@ fn evaluate_covers_ragged_final_batch() {
         cost: &cost,
         train: &train,
         test: &test,
+        val: None,
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
@@ -590,6 +599,7 @@ fn local_sgd_parallel_matches_sequential() {
         local_sched: Schedule::Constant(0.02),
         h_steps: 4,
         seed: 21,
+        averaging: AveragingSpec::Uniform,
     };
     let a = run_local_sgd(&env_threads(&f, 1), &cfg).unwrap();
     let b = run_local_sgd(&env_threads(&f, 4), &cfg).unwrap();

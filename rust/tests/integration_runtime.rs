@@ -197,6 +197,7 @@ fn train_env_eval_and_bn_recompute() {
         cost: &cost,
         train: &train,
         test: &test,
+        val: None,
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,

@@ -48,6 +48,7 @@ fn env_threads(f: &Fixture, threads: usize) -> TrainEnv<'_> {
         cost: &f.cost,
         train: &f.train,
         test: &f.test,
+        val: None,
         augment: AugmentSpec::none(),
         exec_batch: 8,
         bn_batches: 2,
@@ -70,6 +71,7 @@ fn tiny_swap_config(seed: u64) -> SwapConfig {
         phase2_epochs: 2,
         phase2_sched: Schedule::Constant(0.02),
         seed,
+        averaging: swap::coordinator::AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
     }
