@@ -1,15 +1,18 @@
 //! Blocked-GEMM smoke bench: GFLOP/s per ResNet9s conv shape (the paper's
-//! width-64 CIFAR net), blocked-vs-reference at threads 1 and 4, plus the
-//! fused im2col-packing conv path. Emits `BENCH_gemm.json` (and a copy
-//! under results/) — the compute baseline of the perf trajectory — and
-//! asserts blocked-vs-reference BITWISE parity on every shape along the
-//! way.
+//! width-64 CIFAR net), blocked-vs-reference at threads 1 and 4, the
+//! scalar-vs-SIMD dispatch tiers, plus the fused im2col-packing conv
+//! path. Emits `BENCH_gemm.json` (and a copy under results/) — the
+//! compute baseline of the perf trajectory, stamped with an environment
+//! manifest so numbers are diffable across machines — and asserts
+//! blocked-vs-reference (and every-tier-vs-scalar) BITWISE parity on
+//! every shape along the way.
 //! Run: cargo bench --bench gemm
 
-use swap::bench::time_once;
-use swap::runtime::native::gemm::{conv3x3_into, matmul_into, GemmScratch};
+use swap::bench::{env_manifest, time_once};
+use swap::runtime::native::gemm::{conv3x3_into, matmul_into, matmul_into_tier, GemmScratch};
 use swap::runtime::native::kernels::{im2col, matmul_reference};
 use swap::runtime::native::model::{conv_layers, Dims};
+use swap::util::simd::{self, Tier};
 use swap::util::{Json, Result};
 
 const BATCH: usize = 8;
@@ -41,9 +44,13 @@ fn main() -> Result<()> {
     let d = Dims { width: 64, num_classes: 10, image_size: 32 };
     let mut scratch = GemmScratch::default();
     let mut rows = Vec::new();
+    let active = simd::active();
     println!(
-        "blocked GEMM vs reference, ResNet9s width {} image {} batch {BATCH}:",
-        d.width, d.image_size
+        "blocked GEMM vs reference, ResNet9s width {} image {} batch {BATCH} \
+         (simd tier: {}):",
+        d.width,
+        d.image_size,
+        active.name()
     );
     for (name, cin, cout, side) in conv_layers(&d) {
         let (m, k, n) = (BATCH * side * side, 9 * cin, cout);
@@ -78,6 +85,23 @@ fn main() -> Result<()> {
             matmul_into(&mut out, &patches, &wts, m, k, n, THREADS_PAR, &mut scratch)
         });
 
+        // dispatch tiers: pin every tier this host can run against the
+        // scalar kernel bitwise, and time scalar vs the active tier — the
+        // simd_speedup column is the headline of the SIMD micro-kernels
+        let mut sout = vec![0.0f32; m * n];
+        matmul_into_tier(&mut sout, &patches, &wts, m, k, n, 1, Tier::Scalar, &mut scratch);
+        assert_bitwise(&sout, &want, &format!("{name}: scalar tier vs reference"));
+        let scalar_t1_s = best_of(3, || {
+            matmul_into_tier(&mut sout, &patches, &wts, m, k, n, 1, Tier::Scalar, &mut scratch)
+        });
+        for t in simd::tiers_available() {
+            matmul_into_tier(&mut out, &patches, &wts, m, k, n, 1, t, &mut scratch);
+            assert_bitwise(&out, &sout, &format!("{name}: tier {} vs scalar", t.name()));
+        }
+        let simd_t1_s = best_of(3, || {
+            matmul_into_tier(&mut out, &patches, &wts, m, k, n, 1, active, &mut scratch)
+        });
+
         // fused packing: conv straight from the NHWC image
         conv3x3_into(&mut out, &x, BATCH, side, side, cin, &wts, n, THREADS_PAR, &mut scratch);
         assert_bitwise(&out, &want, &format!("{name}: fused conv vs reference"));
@@ -86,14 +110,17 @@ fn main() -> Result<()> {
         });
 
         let speedup_tn = ref_tn_s / blk_tn_s.max(1e-12);
+        let simd_speedup_t1 = scalar_t1_s / simd_t1_s.max(1e-12);
         println!(
             "  {name:<7} m={m:<6} k={k:<5} n={n:<4} | ref {:.2}/{:.2} GF/s | \
-             blocked {:.2}/{:.2} GF/s | fused {:.2} GF/s | speedup(t{THREADS_PAR}) {speedup_tn:.2}x",
+             blocked {:.2}/{:.2} GF/s | fused {:.2} GF/s | speedup(t{THREADS_PAR}) {speedup_tn:.2}x \
+             | {} {simd_speedup_t1:.2}x over scalar",
             gflop / ref_t1_s,
             gflop / ref_tn_s,
             gflop / blk_t1_s,
             gflop / blk_tn_s,
             gflop / fused_tn_s,
+            active.name(),
         );
         rows.push(Json::obj(vec![
             ("layer", Json::str(name)),
@@ -106,6 +133,10 @@ fn main() -> Result<()> {
             ("blocked_t1_gflops", Json::Num(gflop / blk_t1_s)),
             ("blocked_tn_gflops", Json::Num(gflop / blk_tn_s)),
             ("fused_conv_tn_gflops", Json::Num(gflop / fused_tn_s)),
+            ("scalar_t1_gflops", Json::Num(gflop / scalar_t1_s)),
+            ("simd_tier", Json::str(active.name())),
+            ("simd_t1_gflops", Json::Num(gflop / simd_t1_s)),
+            ("simd_speedup_t1", Json::Num(simd_speedup_t1)),
             ("speedup_t1", Json::Num(ref_t1_s / blk_t1_s.max(1e-12))),
             ("speedup_tn", Json::Num(speedup_tn)),
             ("bitwise_identical", Json::Bool(true)), // asserted above
@@ -118,6 +149,7 @@ fn main() -> Result<()> {
         ("width", Json::Num(d.width as f64)),
         ("image_size", Json::Num(d.image_size as f64)),
         ("threads_parallel", Json::Num(THREADS_PAR as f64)),
+        ("environment", env_manifest()),
         ("rows", Json::Arr(rows)),
     ])
     .to_string_pretty();

@@ -8,7 +8,7 @@
 //! BITWISE-identical final parameters.
 //! Run: cargo bench --bench parallel_scaling
 
-use swap::bench::time_once;
+use swap::bench::{env_manifest, time_once};
 use swap::config::preset;
 use swap::coordinator::{parallel, run_swap};
 use swap::data::{AugStream, AugmentSpec, Batcher, Generator, SynthSpec};
@@ -110,6 +110,7 @@ fn main() -> Result<()> {
             "dawnbench_step_speedup",
             Json::Num(db_seq_s / db_par_s.max(1e-12)),
         ),
+        ("environment", env_manifest()),
     ])
     .to_string_pretty();
     std::fs::write("BENCH_parallel.json", &json)?;

@@ -46,7 +46,7 @@ pub fn cosine_to_target(
 pub fn travel_series(trail: &[(usize, ParamSet)], reference: &ParamSet) -> Result<SeriesLog> {
     let mut out = SeriesLog::new(&["step", "distance"]);
     for (step, theta) in trail {
-        out.push(&[*step as f64, theta.distance(reference)?]);
+        out.push(&[*step as f64, theta.distance(reference, 1)?]);
     }
     Ok(out)
 }

@@ -5,6 +5,51 @@
 
 use std::time::Instant;
 
+use crate::util::{simd, Json};
+
+/// Environment manifest attached to the bench JSON artifacts
+/// (BENCH_gemm.json, the dawnbench rows of BENCH_parallel.json) so the
+/// perf trajectory is diffable across machines: target os/arch, the SIMD
+/// tier the kernels actually dispatch on (and what detection alone would
+/// pick), the rustc version and the CPU brand string. The latter two are
+/// best-effort — null when the toolchain or /proc/cpuinfo is absent.
+pub fn env_manifest() -> Json {
+    let opt = |v: Option<String>| v.map(Json::str).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("simd_tier", Json::str(simd::active().name())),
+        ("simd_detected", Json::str(simd::detect().name())),
+        ("rustc", opt(rustc_version())),
+        ("cpu", opt(cpu_model())),
+    ])
+}
+
+/// `rustc --version` of the toolchain on PATH, if any.
+fn rustc_version() -> Option<String> {
+    let out = std::process::Command::new("rustc").arg("--version").output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let v = String::from_utf8(out.stdout).ok()?;
+    let v = v.trim();
+    (!v.is_empty()).then(|| v.to_string())
+}
+
+/// CPU brand string from /proc/cpuinfo (linux; the CI and bench hosts).
+fn cpu_model() -> Option<String> {
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    for line in text.lines() {
+        // x86 calls it "model name"; some arm kernels use "Processor"
+        if let Some((k, v)) = line.split_once(':') {
+            if matches!(k.trim(), "model name" | "Processor") && !v.trim().is_empty() {
+                return Some(v.trim().to_string());
+            }
+        }
+    }
+    None
+}
+
 /// Timing statistics over repeated runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Stats {
@@ -179,5 +224,22 @@ mod tests {
     fn pm_formats() {
         assert_eq!(pm(95.234, 0.087), "95.234 ± 0.087");
         assert_eq!(pm(254.12, 0.62), "254.12 ± 0.62");
+    }
+
+    #[test]
+    fn env_manifest_has_core_keys() {
+        let m = env_manifest();
+        assert_eq!(m.get("os").unwrap().as_str(), Some(std::env::consts::OS));
+        assert_eq!(m.get("arch").unwrap().as_str(), Some(std::env::consts::ARCH));
+        let tier = m.get("simd_tier").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&tier));
+        let detected = m.get("simd_detected").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&detected));
+        // rustc/cpu are best-effort: a string or null, never absent
+        assert!(m.get("rustc").is_some());
+        assert!(m.get("cpu").is_some());
+        // the manifest round-trips through the serializer
+        let text = m.to_string();
+        assert!(Json::parse(&text).is_ok());
     }
 }

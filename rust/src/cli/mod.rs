@@ -2,8 +2,8 @@
 //! subcommand surface of the `swap-train` binary.
 //!
 //! ```text
-//! swap-train <command> [--preset NAME] [--config FILE]
-//!            [--set key=value]... [--runs N] [--seed N] [--threads N]
+//! swap-train <command> [--preset NAME] [--config FILE] [--set key=value]...
+//!            [--runs N] [--seed N] [--threads N] [--simd TIER]
 //! ```
 //!
 //! Commands: swap | serve | join | swap-resume | sb | lb | swa | local-sgd |
@@ -24,7 +24,7 @@ pub struct Args {
 }
 
 const VALUE_FLAGS: &[&str] =
-    &["preset", "config", "set", "runs", "seed", "threads", "out", "addr", "worker"];
+    &["preset", "config", "set", "runs", "seed", "threads", "simd", "out", "addr", "worker"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -101,6 +101,9 @@ impl Args {
         if let Some(t) = self.get("threads") {
             cfg.apply_kv("threads", t)?;
         }
+        if let Some(s) = self.get("simd") {
+            cfg.apply_kv("simd", s)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -118,8 +121,8 @@ pub fn default_preset_for(command: &str) -> &'static str {
 pub const HELP: &str = "\
 swap-train — SWAP (Stochastic Weight Averaging in Parallel, ICLR 2020)
 
-USAGE:  swap-train <command> [--preset NAME] [--config FILE]
-                   [--set key=value]... [--runs N] [--seed N] [--threads N]
+USAGE:  swap-train <command> [--preset NAME] [--config FILE] [--set key=value]...
+                   [--runs N] [--seed N] [--threads N] [--simd TIER]
 
 Training commands (print a run summary):
   swap        run the three-phase SWAP algorithm (phase 2 in-process)
@@ -166,6 +169,12 @@ Threads (--threads N / --set threads=N):
   1         fully sequential execution
   N         phase-2 workers / phase-1 shards / native kernels on N OS
             threads; results are bitwise identical for every N
+SIMD (--simd TIER / --set simd=TIER):
+  auto      runtime feature detection (avx2 on x86_64, neon on
+            aarch64, else scalar)                            [default]
+  scalar    portable kernels — the parity oracle every tier must match
+  avx2|neon force a vector tier; an unavailable tier is a config error;
+            all tiers are bitwise identical (SWAP_SIMD env overrides)
 Averaging (--set averaging=..., applies to SWAP phase 3, swa, local-sgd):
   uniform       plain mean over candidates (bitwise the historical
                 behaviour)                                       [default]
@@ -185,7 +194,8 @@ Failure policy (serve/join, all settable via --set):
   join_retries=N         client connect attempts                [60]
   retry_backoff_ms=N     linear backoff between attempts        [500]
 Env: SWAP_RUNS=N override runs, SWAP_THREADS=N default thread count,
-     SWAP_PREFETCH=0|1 override prefetch, SWAP_LOG=debug|info|warn|quiet";
+     SWAP_PREFETCH=0|1 override prefetch, SWAP_SIMD=auto|scalar|avx2|neon
+     override simd tier, SWAP_LOG=debug|info|warn|quiet";
 
 #[cfg(test)]
 mod tests {
@@ -251,6 +261,20 @@ mod tests {
         assert_eq!(cfg.runs, 9);
         assert_eq!(cfg.seed, 77);
         assert_eq!(cfg.threads, 2);
+    }
+
+    #[test]
+    fn simd_flag_sets_knob_and_validates() {
+        let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--simd", "scalar"])).unwrap();
+        assert_eq!(a.get("simd"), Some("scalar"));
+        let cfg = a.config("tiny").unwrap();
+        assert_eq!(cfg.simd, "scalar");
+        // an unknown tier is rejected at validation (unless the SWAP_SIMD
+        // env override is set — then the knob is ignored entirely)
+        if std::env::var("SWAP_SIMD").is_err() {
+            let a = Args::parse(&argv(&["swap", "--preset", "tiny", "--simd", "sse9"])).unwrap();
+            assert!(a.config("tiny").is_err());
+        }
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct ExperimentConfig {
     /// env var if set, else available parallelism); 1 reproduces the fully
     /// sequential path; every value is bitwise-identical.
     pub threads: usize,
+    /// SIMD dispatch tier for the native kernels: "auto" (runtime feature
+    /// detection), "scalar", "avx2" or "neon". The SWAP_SIMD env var
+    /// overrides the knob; every tier is bitwise-identical.
+    pub simd: String,
 
     // ---- model (resnet9s) ----
     /// base channel count c (mirrors python/compile/aot.py presets)
@@ -175,6 +179,13 @@ impl ExperimentConfig {
         crate::data::prefetch::env_override().unwrap_or(self.prefetch)
     }
 
+    /// Resolved SIMD dispatch tier (the SWAP_SIMD env var overrides the
+    /// config knob — CI's forced-scalar lane). Errors if the knob names a
+    /// tier this CPU cannot run.
+    pub fn resolved_simd(&self) -> Result<crate::util::simd::Tier> {
+        crate::util::simd::resolve(&self.simd)
+    }
+
     /// Instantiate the selected dataset source.
     pub fn data_source(&self) -> Result<Box<dyn DataSource>> {
         match self.data.as_str() {
@@ -204,8 +215,11 @@ impl ExperimentConfig {
             .with_threads(self.resolved_threads())
     }
 
-    /// Instantiate the selected execution backend.
+    /// Instantiate the selected execution backend. Also installs the
+    /// process-wide SIMD dispatch tier from the `simd` knob (SWAP_SIMD
+    /// still wins), so every kernel the backend runs dispatches on it.
     pub fn load_backend(&self) -> Result<Box<dyn Backend>> {
+        crate::util::simd::set_active(&self.simd)?;
         match self.backend.as_str() {
             "native" => Ok(Box::new(NativeBackend::new(self.native_spec())?)),
             "xla" => self.load_xla_backend(),
@@ -320,6 +334,7 @@ impl ExperimentConfig {
             "seed" => self.seed = p(key, value)?,
             "runs" => self.runs = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
+            "simd" => self.simd = value.trim().to_string(),
             "backend" => self.backend = value.trim().to_string(),
             "model_width" => self.model_width = p(key, value)?,
             "num_classes" => self.num_classes = p(key, value)?,
@@ -394,6 +409,8 @@ impl ExperimentConfig {
         if !BACKENDS.contains(&self.backend.as_str()) {
             return Err(unknown_backend(&self.backend));
         }
+        // rejects unknown tier names and tiers this CPU cannot run
+        self.resolved_simd()?;
         if self.image_size == 0 || self.image_size % 8 != 0 {
             return Err(Error::config(format!(
                 "image_size {} must be a positive multiple of 8",
@@ -682,6 +699,26 @@ mod tests {
         // the native spec inherits the resolved count
         cfg.threads = 2;
         assert_eq!(cfg.native_spec().threads, 2);
+    }
+
+    #[test]
+    fn simd_knob_resolves_and_validates() {
+        let mut cfg = preset("tiny").unwrap();
+        assert_eq!(cfg.simd, "auto");
+        let auto = cfg.resolved_simd().unwrap();
+        assert!(auto.available());
+        cfg.validate().unwrap();
+        // unknown tier names fail validation loudly (unless the env
+        // override is set, in which case it wins — CI's scalar lane)
+        cfg.apply_kv("simd", "sse9").unwrap();
+        assert_eq!(cfg.simd, "sse9");
+        if std::env::var("SWAP_SIMD").is_err() {
+            assert!(cfg.validate().is_err());
+            assert!(cfg.load_backend().is_err());
+            // scalar is available on every host
+            cfg.apply_kv("simd", "scalar").unwrap();
+            assert_eq!(cfg.resolved_simd().unwrap(), crate::util::simd::Tier::Scalar);
+        }
     }
 
     #[test]

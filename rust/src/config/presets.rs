@@ -18,6 +18,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         seed: 42,
         runs: 3,
         threads: 0, // auto: SWAP_THREADS env or available parallelism
+        simd: "auto".to_string(), // runtime feature detection; SWAP_SIMD overrides
         model_width: 8,
         num_classes: 10,
         image_size: 32,

@@ -78,7 +78,7 @@ impl Plane {
     pub fn residual(&self, theta: &ParamSet) -> Result<f64> {
         let (a, b) = self.project(theta)?;
         let on_plane = self.point(a, b)?;
-        theta.distance(&on_plane)
+        theta.distance(&on_plane, 1)
     }
 
     /// A bounding box (with margin) around the anchors — the grid extent
@@ -132,7 +132,7 @@ mod tests {
         let p = Plane::through(&t1, &t2, &t3).unwrap();
         for (anchor, theta) in p.anchors.iter().zip([&t1, &t2, &t3]) {
             let recon = p.point(anchor.0, anchor.1).unwrap();
-            assert!(recon.distance(theta).unwrap() < 1e-5);
+            assert!(recon.distance(theta, 1).unwrap() < 1e-5);
         }
     }
 

@@ -328,9 +328,9 @@ impl FlatParams {
     }
 
     /// Euclidean distance (weight-travel statistics).
-    pub fn distance(&self, other: &FlatParams) -> Result<f64> {
+    pub fn distance(&self, other: &FlatParams, threads: usize) -> Result<f64> {
         self.check_same(other)?;
-        Ok(flat::distance_ranges(&self.data, &other.data, &self.layout.ranges()))
+        Ok(flat::distance_ranges(threads, &self.data, &other.data, &self.layout.ranges()))
     }
 
     /// Streaming mean of several weight vectors — SWAP phase 3. One output
@@ -420,7 +420,7 @@ mod tests {
         let other = FlatParams::from_vec(vec![0.0; 3]);
         assert!(a.axpy(1.0, &other, 1).is_err());
         assert!(a.dot(&other, 1).is_err());
-        assert!(a.distance(&other).is_err());
+        assert!(a.distance(&other, 1).is_err());
     }
 
     #[test]
@@ -428,7 +428,8 @@ mod tests {
         let a = FlatParams::from_vec(vec![3.0, 4.0]);
         let z = a.zeros_like();
         assert_eq!(a.norm(1), 5.0);
-        assert_eq!(a.distance(&z).unwrap(), 5.0);
+        assert_eq!(a.distance(&z, 1).unwrap(), 5.0);
+        assert_eq!(a.distance(&z, 4).unwrap(), 5.0);
         let b = FlatParams::from_vec(vec![4.0, -3.0]);
         assert_eq!(a.dot(&b, 1).unwrap(), 0.0);
         assert_eq!(a.cosine(&b, 1).unwrap(), 0.0);

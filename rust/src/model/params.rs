@@ -149,10 +149,10 @@ mod tests {
         let b = ParamSet::init(&m, 2);
         let avg = ParamSet::average(&[a.clone(), b.clone()]).unwrap();
         // distance(avg, a) == distance(avg, b) for a 2-mean
-        let da = avg.distance(&a).unwrap();
-        let db = avg.distance(&b).unwrap();
+        let da = avg.distance(&a, 1).unwrap();
+        let db = avg.distance(&b, 1).unwrap();
         assert!((da - db).abs() < 1e-6 * da.max(1.0));
-        assert!(avg.distance(&avg).unwrap() == 0.0);
+        assert!(avg.distance(&avg, 1).unwrap() == 0.0);
     }
 
     #[test]

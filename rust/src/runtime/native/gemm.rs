@@ -23,6 +23,21 @@
 //! `patchesᵀ @ dU` respectively), skipping the (B·H·W, 9·C)
 //! materialize-then-repack round trip.
 //!
+//! ## SIMD dispatch
+//!
+//! The micro-kernel exists per [`Tier`]: the portable scalar loop (the
+//! oracle and always-available fallback), an explicit AVX2 kernel on
+//! x86_64 and a NEON kernel on aarch64, selected by one-time runtime
+//! feature detection (`util::simd`, overridable via the `simd` config
+//! knob / `SWAP_SIMD` env var). The vector kernels span the `NR = 8`
+//! output **columns** with register lanes, so lane `j` replays output
+//! element `(i, j)`'s scalar chain instruction for instruction — and they
+//! use separate multiply + add vector ops (two roundings, the scalar op
+//! sequence), never fused multiply-add, whose single rounding would
+//! break parity. Ragged edge strips (`nr < NR`) take the scalar kernel:
+//! the edge is a vanishing share of the FLOPs and skipping masked loads
+//! keeps the hot kernel branch-free.
+//!
 //! ## Why it is still bitwise deterministic
 //!
 //! Every output element is an f32 accumulation chain that starts at 0.0
@@ -35,13 +50,14 @@
 //! identical to `threads = 1`, and the whole family is bitwise identical
 //! to the reference kernels on finite inputs (the reference's
 //! `av == 0.0` skip only diverges when B holds NaN/Inf — pinned by
-//! `rust/tests/gemm_oracle.rs`).
+//! `rust/tests/gemm_oracle.rs`, which also pins SIMD == scalar per tier).
 //!
 //! All entry points are `*_into`: outputs and packing buffers come from
 //! the caller (the per-engine [`super::workspace::Workspace`]), so a
 //! steady-state call performs zero heap allocations.
 
 use crate::coordinator::parallel;
+use crate::util::simd::{self, Tier};
 
 /// Register micro-tile rows (output rows per tile).
 pub const MR: usize = 8;
@@ -99,7 +115,8 @@ pub enum BSrc<'a> {
 }
 
 /// out(m,n) = a(m,k) @ b(k,n), blocked. Bitwise equal to
-/// `kernels::matmul_reference` on finite inputs, for every `threads`.
+/// `kernels::matmul_reference` on finite inputs, for every `threads`,
+/// dispatching on the process-wide [`simd::active`] tier.
 pub fn matmul_into(
     out: &mut [f32],
     a: &[f32],
@@ -110,18 +127,27 @@ pub fn matmul_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    matmul_into_tier(out, a, b, m, k, n, threads, simd::active(), scratch);
+}
+
+/// [`matmul_into`] pinned to an explicit dispatch [`Tier`] — what the
+/// per-tier parity tests and benches drive; every tier is bitwise
+/// identical.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into_tier(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    tier: Tier,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    gemm_into(
-        out,
-        ASrc::Rows { a, lda: k },
-        BSrc::Rows { b },
-        m,
-        k,
-        n,
-        threads,
-        scratch,
-    );
+    gemm_into(out, ASrc::Rows { a, lda: k }, BSrc::Rows { b }, m, k, n, threads, tier, scratch);
 }
 
 /// out(m,n) = aᵀ @ b where a is (r,m) and b is (r,n) — the dW matmul.
@@ -135,18 +161,25 @@ pub fn matmul_tn_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    matmul_tn_into_tier(out, a, b, r, m, n, threads, simd::active(), scratch);
+}
+
+/// [`matmul_tn_into`] pinned to an explicit dispatch [`Tier`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_into_tier(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+    tier: Tier,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
-    gemm_into(
-        out,
-        ASrc::Cols { a, lda: m },
-        BSrc::Rows { b },
-        m,
-        r,
-        n,
-        threads,
-        scratch,
-    );
+    gemm_into(out, ASrc::Cols { a, lda: m }, BSrc::Rows { b }, m, r, n, threads, tier, scratch);
 }
 
 /// out(m,n) = a(m,k) @ bᵀ where b is (n,k) — the dX matmul.
@@ -160,18 +193,25 @@ pub fn matmul_nt_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    matmul_nt_into_tier(out, a, b, m, k, n, threads, simd::active(), scratch);
+}
+
+/// [`matmul_nt_into`] pinned to an explicit dispatch [`Tier`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_into_tier(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    tier: Tier,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    gemm_into(
-        out,
-        ASrc::Rows { a, lda: k },
-        BSrc::Cols { b },
-        m,
-        k,
-        n,
-        threads,
-        scratch,
-    );
+    gemm_into(out, ASrc::Rows { a, lda: k }, BSrc::Cols { b }, m, k, n, threads, tier, scratch);
 }
 
 /// Fused 3x3 SAME convolution forward: out(b*h*w, cout) = im2col(x) @ w,
@@ -189,6 +229,24 @@ pub fn conv3x3_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    conv3x3_into_tier(out, x, b, h, w, c, weights, cout, threads, simd::active(), scratch);
+}
+
+/// [`conv3x3_into`] pinned to an explicit dispatch [`Tier`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_into_tier(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    weights: &[f32],
+    cout: usize,
+    threads: usize,
+    tier: Tier,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(x.len(), b * h * w * c);
     debug_assert_eq!(weights.len(), 9 * c * cout);
     gemm_into(
@@ -199,6 +257,7 @@ pub fn conv3x3_into(
         9 * c,
         cout,
         threads,
+        tier,
         scratch,
     );
 }
@@ -218,6 +277,24 @@ pub fn conv3x3_dw_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    conv3x3_dw_into_tier(out, x, b, h, w, c, du, cout, threads, simd::active(), scratch);
+}
+
+/// [`conv3x3_dw_into`] pinned to an explicit dispatch [`Tier`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_dw_into_tier(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    du: &[f32],
+    cout: usize,
+    threads: usize,
+    tier: Tier,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(x.len(), b * h * w * c);
     debug_assert_eq!(du.len(), b * h * w * cout);
     gemm_into(
@@ -228,13 +305,15 @@ pub fn conv3x3_dw_into(
         b * h * w,
         cout,
         threads,
+        tier,
         scratch,
     );
 }
 
 /// The shared blocked driver: pack B once (before any thread is spawned),
 /// partition output rows across workers, and run the packed micro-kernel
-/// sweep per chunk with that worker's own A-panel scratch.
+/// sweep per chunk with that worker's own A-panel scratch, dispatching
+/// each full-width strip on `tier`.
 #[allow(clippy::too_many_arguments)]
 fn gemm_into(
     out: &mut [f32],
@@ -244,6 +323,7 @@ fn gemm_into(
     k: usize,
     n: usize,
     threads: usize,
+    tier: Tier,
     scratch: &mut GemmScratch,
 ) {
     debug_assert_eq!(out.len(), m * n);
@@ -268,17 +348,19 @@ fn gemm_into(
         n,
         MR,
         &mut scratch.packs,
-        |row0, chunk, pack| gemm_chunk(a, bpack, row0, k, n, chunk, pack),
+        |row0, chunk, pack| gemm_chunk(a, bpack, row0, k, n, tier, chunk, pack),
     );
 }
 
 /// One worker's share: rows `[row0, row0 + chunk.len()/n)` of the output.
+#[allow(clippy::too_many_arguments)]
 fn gemm_chunk(
     a: ASrc<'_>,
     bpack: &[f32],
     row0: usize,
     k: usize,
     n: usize,
+    tier: Tier,
     chunk: &mut [f32],
     pack: &mut PackBuf,
 ) {
@@ -300,7 +382,26 @@ fn gemm_chunk(
                     let j0 = s * NR;
                     let nr = NR.min(n - j0);
                     let bpanel = &bpack[s * k * NR + pc * NR..s * k * NR + (pc + kc) * NR];
-                    micro_kernel(kc, apanel, bpanel, chunk, ic + ir, j0, n, mr, nr, pc == 0);
+                    let (crow, first) = (ic + ir, pc == 0);
+                    match tier {
+                        // SAFETY: the avx2 arm only becomes active after
+                        // runtime feature detection (Tier::available /
+                        // simd::resolve), and nr == NR guarantees the
+                        // full-width loads/stores stay in bounds.
+                        #[cfg(target_arch = "x86_64")]
+                        Tier::Avx2 if nr == NR => unsafe {
+                            micro_kernel_avx2(kc, apanel, bpanel, chunk, crow, j0, n, mr, first)
+                        },
+                        // SAFETY: same contract as the avx2 arm, gated on
+                        // runtime neon detection.
+                        #[cfg(target_arch = "aarch64")]
+                        Tier::Neon if nr == NR => unsafe {
+                            micro_kernel_neon(kc, apanel, bpanel, chunk, crow, j0, n, mr, first)
+                        },
+                        // ragged edge strips (nr < NR) and tiers of a
+                        // foreign arch fall back to the scalar kernel
+                        _ => micro_kernel(kc, apanel, bpanel, chunk, crow, j0, n, mr, nr, first),
+                    }
                 }
             }
             ic += mc;
@@ -309,10 +410,12 @@ fn gemm_chunk(
     }
 }
 
-/// The register micro-kernel: an `MR x NR` accumulator tile swept over one
-/// `kc`-long panel pair. `first` selects init-from-zero (first k block)
-/// vs reload of the stored partial (later blocks); either way each
-/// element's chain is ascending-k from 0.0, the reference order.
+/// The scalar register micro-kernel — the always-available dispatch tier
+/// and the parity oracle for the vector tiers: an `MR x NR` accumulator
+/// tile swept over one `kc`-long panel pair. `first` selects
+/// init-from-zero (first k block) vs reload of the stored partial (later
+/// blocks); either way each element's chain is ascending-k from 0.0, the
+/// reference order.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_kernel(
@@ -347,6 +450,117 @@ fn micro_kernel(
     for (i, arow) in acc.iter().enumerate().take(mr) {
         let base = (crow + i) * n + j0;
         chunk[base..base + nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// AVX2 micro-kernel for full-width (`nr == NR`) strips: accumulator row
+/// `i` is one 8-lane f32 vector holding output columns `j0..j0+NR`, so
+/// lane `j` replays output element `(crow+i, j0+j)`'s scalar chain
+/// instruction for instruction. Multiply and add stay two separately
+/// rounded vector ops — **never** FMA, whose single rounding would
+/// diverge from [`micro_kernel`] — so this tier is bitwise identical to
+/// the scalar tier. Ragged `mr < MR` groups compute all `MR` rows (the A
+/// panel is zero-padded) and store only `mr`, exactly like the scalar
+/// kernel.
+///
+/// # Safety
+///
+/// Requires AVX2 (dispatch is gated on runtime detection), panels of at
+/// least `kc * MR` / `kc * NR` elements, and `nr == NR` so rows
+/// `crow..crow+mr` of `chunk` hold `NR` in-bounds columns at `j0`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_kernel_avx2(
+    kc: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    chunk: &mut [f32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    first: bool,
+) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+    debug_assert!(apanel.len() >= kc * MR);
+    debug_assert!(bpanel.len() >= kc * NR);
+    debug_assert!(mr >= 1 && (crow + mr - 1) * n + j0 + NR <= chunk.len());
+    let mut acc = [_mm256_setzero_ps(); MR];
+    if !first {
+        for (i, row) in acc.iter_mut().enumerate().take(mr) {
+            *row = _mm256_loadu_ps(chunk.as_ptr().add((crow + i) * n + j0));
+        }
+    }
+    let ap = apanel.as_ptr();
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(bpanel.as_ptr().add(p * NR));
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*ap.add(p * MR + i));
+            // mul then add: two roundings, the scalar chain — not fma
+            *row = _mm256_add_ps(*row, _mm256_mul_ps(ai, bv));
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        _mm256_storeu_ps(chunk.as_mut_ptr().add((crow + i) * n + j0), *row);
+    }
+}
+
+/// NEON micro-kernel for full-width strips: accumulator row `i` is two
+/// 4-lane f32 vectors over output columns `j0..j0+NR`. Same contract as
+/// the AVX2 tier — separate multiply + add (no FMA), lane-for-lane the
+/// scalar chains, ragged `mr` handled by computing `MR` rows and storing
+/// `mr`.
+///
+/// # Safety
+///
+/// Requires NEON (dispatch is gated on runtime detection), panels of at
+/// least `kc * MR` / `kc * NR` elements, and `nr == NR` so rows
+/// `crow..crow+mr` of `chunk` hold `NR` in-bounds columns at `j0`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_kernel_neon(
+    kc: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    chunk: &mut [f32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    first: bool,
+) {
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    debug_assert!(apanel.len() >= kc * MR);
+    debug_assert!(bpanel.len() >= kc * NR);
+    debug_assert!(mr >= 1 && (crow + mr - 1) * n + j0 + NR <= chunk.len());
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    if !first {
+        for (i, (rl, rh)) in lo.iter_mut().zip(hi.iter_mut()).enumerate().take(mr) {
+            let base = chunk.as_ptr().add((crow + i) * n + j0);
+            *rl = vld1q_f32(base);
+            *rh = vld1q_f32(base.add(4));
+        }
+    }
+    let ap = apanel.as_ptr();
+    for p in 0..kc {
+        let b0 = vld1q_f32(bpanel.as_ptr().add(p * NR));
+        let b1 = vld1q_f32(bpanel.as_ptr().add(p * NR + 4));
+        for (i, (rl, rh)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+            let ai = vdupq_n_f32(*ap.add(p * MR + i));
+            *rl = vaddq_f32(*rl, vmulq_f32(ai, b0));
+            *rh = vaddq_f32(*rh, vmulq_f32(ai, b1));
+        }
+    }
+    for (i, (rl, rh)) in lo.iter().zip(hi.iter()).enumerate().take(mr) {
+        let base = chunk.as_mut_ptr().add((crow + i) * n + j0);
+        vst1q_f32(base, *rl);
+        vst1q_f32(base.add(4), *rh);
     }
 }
 
@@ -502,6 +716,24 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn every_available_tier_matches_naive() {
+        let mut scratch = GemmScratch::default();
+        // shapes crossing the KC boundary and both ragged tile edges
+        for &(m, k, n) in &[(5usize, 300usize, 8usize), (16, 257, 24), (33, 64, 13)] {
+            let a = wave(m * k, 0.41);
+            let b = wave(k * n, 0.59);
+            let want = naive(&a, &b, m, k, n);
+            for tier in simd::tiers_available() {
+                for threads in [1, 3] {
+                    let mut out = vec![f32::NAN; m * n];
+                    matmul_into_tier(&mut out, &a, &b, m, k, n, threads, tier, &mut scratch);
+                    assert_eq!(out, want, "tier={tier:?} m={m} k={k} n={n} t={threads}");
+                }
+            }
+        }
     }
 
     #[test]

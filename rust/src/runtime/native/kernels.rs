@@ -38,6 +38,15 @@ use super::gemm;
 use crate::coordinator::parallel::{
     gate_per_chunk, parallel_row_chunks, parallel_row_chunks2,
 };
+use crate::util::simd::{self, Tier};
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32, vsubq_f32};
 
 pub const BN_EPS: f32 = 1e-5;
 
@@ -293,7 +302,10 @@ pub fn col2im(dp: &[f32], b: usize, h: usize, w: usize, c: usize, threads: usize
 // batch norm (batch statistics in train mode; biased variance). The
 // channel reductions (mean/var, dgamma/dbeta) stay sequential — they are
 // O(rows*c) against the matmuls' O(rows*9c*cout) and a parallel reduction
-// would reorder the f32 sums; the elementwise normalize loops are split.
+// would reorder the f32 sums; the elementwise normalize loops are split
+// across threads AND dispatch on the SIMD tier (`util::simd`): lanes hold
+// channels, every op is a separately rounded sub/mul/add (never FMA), so
+// each tier reproduces the scalar loop bitwise.
 // ---------------------------------------------------------------------------
 
 /// Forward with batch statistics over `rows` = B*H*W samples of `c`
@@ -345,6 +357,7 @@ pub fn bn_train_into(
     }
     let meanr: &[f32] = mean;
     let invstdr: &[f32] = invstd;
+    let tier = simd::active();
     parallel_row_chunks2(
         par(threads, rows * c),
         xhat,
@@ -354,11 +367,7 @@ pub fn bn_train_into(
         |row0, cx, cy| {
             for (li, (xrow, yrow)) in cx.chunks_mut(c).zip(cy.chunks_mut(c)).enumerate() {
                 let r = row0 + li;
-                for ci in 0..c {
-                    let xh = (u[r * c + ci] - meanr[ci]) * invstdr[ci];
-                    xrow[ci] = xh;
-                    yrow[ci] = gamma[ci] * xh + beta[ci];
-                }
+                bn_norm_row(tier, &u[r * c..(r + 1) * c], meanr, invstdr, gamma, beta, xrow, yrow);
             }
         },
     );
@@ -426,13 +435,12 @@ pub fn bn_train_bwd_into(
     let scaler: &[f32] = scale;
     let dgammar: &[f32] = dgamma;
     let dbetar: &[f32] = dbeta;
+    let tier = simd::active();
     parallel_row_chunks(par(threads, rows * c), du, c, |row0, chunk| {
         for (li, drow) in chunk.chunks_mut(c).enumerate() {
             let r = row0 + li;
-            for ci in 0..c {
-                let i = r * c + ci;
-                drow[ci] = scaler[ci] * (n * dy[i] - dbetar[ci] - xhat[i] * dgammar[ci]);
-            }
+            let (dyrow, xrow) = (&dy[r * c..(r + 1) * c], &xhat[r * c..(r + 1) * c]);
+            bn_bwd_row(tier, dyrow, xrow, scaler, dgammar, dbetar, n, drow);
         }
     });
 }
@@ -480,12 +488,11 @@ pub fn bn_eval_into(
         *s = g / (v + BN_EPS).sqrt();
     }
     let scaler: &[f32] = scale;
+    let tier = simd::active();
     parallel_row_chunks(par(threads, rows * c), y, c, |row0, chunk| {
         for (li, yrow) in chunk.chunks_mut(c).enumerate() {
             let r = row0 + li;
-            for ci in 0..c {
-                yrow[ci] = (u[r * c + ci] - mean[ci]) * scaler[ci] + beta[ci];
-            }
+            bn_eval_row(tier, &u[r * c..(r + 1) * c], mean, scaler, beta, yrow);
         }
     });
 }
@@ -506,6 +513,250 @@ pub fn bn_eval(
     let mut scale = vec![0.0f32; c];
     bn_eval_into(u, gamma, beta, mean, var, rows, c, threads, &mut y, &mut scale);
     y
+}
+
+// ---------------------------------------------------------------------------
+// bn per-row dispatch bodies. Lanes hold channels; the vector prefix
+// returns how far it got and a scalar tail finishes the ragged remainder
+// in channel order. Unavailable tiers fall through to the scalar loop.
+// ---------------------------------------------------------------------------
+
+/// xhat = (u - mean) * invstd;  y = gamma * xhat + beta — one row.
+#[allow(clippy::too_many_arguments)]
+fn bn_norm_row(
+    tier: Tier,
+    urow: &[f32],
+    mean: &[f32],
+    invstd: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    xrow: &mut [f32],
+    yrow: &mut [f32],
+) {
+    let c = urow.len();
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; every slice is one
+        // c-length row/param vector, so the lane loads stay in bounds.
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { bn_norm_avx2(urow, mean, invstd, gamma, beta, xrow, yrow) },
+        // SAFETY: gated on runtime neon detection, same bounds contract.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { bn_norm_neon(urow, mean, invstd, gamma, beta, xrow, yrow) },
+        _ => 0,
+    };
+    for ci in done..c {
+        let xh = (urow[ci] - mean[ci]) * invstd[ci];
+        xrow[ci] = xh;
+        yrow[ci] = gamma[ci] * xh + beta[ci];
+    }
+}
+
+/// du = scale * ((n * dy - dbeta) - xhat * dgamma) — one row, the exact
+/// scalar evaluation order.
+#[allow(clippy::too_many_arguments)]
+fn bn_bwd_row(
+    tier: Tier,
+    dyrow: &[f32],
+    xrow: &[f32],
+    scale: &[f32],
+    dgamma: &[f32],
+    dbeta: &[f32],
+    n: f32,
+    drow: &mut [f32],
+) {
+    let c = drow.len();
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; c-length rows as above.
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { bn_bwd_avx2(dyrow, xrow, scale, dgamma, dbeta, n, drow) },
+        // SAFETY: gated on runtime neon detection, same bounds contract.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { bn_bwd_neon(dyrow, xrow, scale, dgamma, dbeta, n, drow) },
+        _ => 0,
+    };
+    for ci in done..c {
+        drow[ci] = scale[ci] * (n * dyrow[ci] - dbeta[ci] - xrow[ci] * dgamma[ci]);
+    }
+}
+
+/// y = (u - mean) * scale + beta — one eval-mode row.
+fn bn_eval_row(
+    tier: Tier,
+    urow: &[f32],
+    mean: &[f32],
+    scale: &[f32],
+    beta: &[f32],
+    yrow: &mut [f32],
+) {
+    let c = urow.len();
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; c-length rows as above.
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { bn_eval_avx2(urow, mean, scale, beta, yrow) },
+        // SAFETY: gated on runtime neon detection, same bounds contract.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { bn_eval_neon(urow, mean, scale, beta, yrow) },
+        _ => 0,
+    };
+    for ci in done..c {
+        yrow[ci] = (urow[ci] - mean[ci]) * scale[ci] + beta[ci];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bn_norm_avx2(
+    urow: &[f32],
+    mean: &[f32],
+    invstd: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    xrow: &mut [f32],
+    yrow: &mut [f32],
+) -> usize {
+    let n8 = urow.len() & !7;
+    let mut i = 0;
+    while i < n8 {
+        let u = _mm256_loadu_ps(urow.as_ptr().add(i));
+        let m = _mm256_loadu_ps(mean.as_ptr().add(i));
+        let s = _mm256_loadu_ps(invstd.as_ptr().add(i));
+        let xh = _mm256_mul_ps(_mm256_sub_ps(u, m), s);
+        _mm256_storeu_ps(xrow.as_mut_ptr().add(i), xh);
+        let g = _mm256_loadu_ps(gamma.as_ptr().add(i));
+        let b = _mm256_loadu_ps(beta.as_ptr().add(i));
+        _mm256_storeu_ps(yrow.as_mut_ptr().add(i), _mm256_add_ps(_mm256_mul_ps(g, xh), b));
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bn_bwd_avx2(
+    dyrow: &[f32],
+    xrow: &[f32],
+    scale: &[f32],
+    dgamma: &[f32],
+    dbeta: &[f32],
+    n: f32,
+    drow: &mut [f32],
+) -> usize {
+    let n8 = drow.len() & !7;
+    let nv = _mm256_set1_ps(n);
+    let mut i = 0;
+    while i < n8 {
+        let dy = _mm256_loadu_ps(dyrow.as_ptr().add(i));
+        let xh = _mm256_loadu_ps(xrow.as_ptr().add(i));
+        let db = _mm256_loadu_ps(dbeta.as_ptr().add(i));
+        let dg = _mm256_loadu_ps(dgamma.as_ptr().add(i));
+        let sc = _mm256_loadu_ps(scale.as_ptr().add(i));
+        let t = _mm256_sub_ps(_mm256_mul_ps(nv, dy), db);
+        let t = _mm256_sub_ps(t, _mm256_mul_ps(xh, dg));
+        _mm256_storeu_ps(drow.as_mut_ptr().add(i), _mm256_mul_ps(sc, t));
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bn_eval_avx2(
+    urow: &[f32],
+    mean: &[f32],
+    scale: &[f32],
+    beta: &[f32],
+    yrow: &mut [f32],
+) -> usize {
+    let n8 = urow.len() & !7;
+    let mut i = 0;
+    while i < n8 {
+        let u = _mm256_loadu_ps(urow.as_ptr().add(i));
+        let m = _mm256_loadu_ps(mean.as_ptr().add(i));
+        let s = _mm256_loadu_ps(scale.as_ptr().add(i));
+        let b = _mm256_loadu_ps(beta.as_ptr().add(i));
+        let y = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(u, m), s), b);
+        _mm256_storeu_ps(yrow.as_mut_ptr().add(i), y);
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn bn_norm_neon(
+    urow: &[f32],
+    mean: &[f32],
+    invstd: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    xrow: &mut [f32],
+    yrow: &mut [f32],
+) -> usize {
+    let n4 = urow.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        let u = vld1q_f32(urow.as_ptr().add(i));
+        let m = vld1q_f32(mean.as_ptr().add(i));
+        let s = vld1q_f32(invstd.as_ptr().add(i));
+        let xh = vmulq_f32(vsubq_f32(u, m), s);
+        vst1q_f32(xrow.as_mut_ptr().add(i), xh);
+        let g = vld1q_f32(gamma.as_ptr().add(i));
+        let b = vld1q_f32(beta.as_ptr().add(i));
+        vst1q_f32(yrow.as_mut_ptr().add(i), vaddq_f32(vmulq_f32(g, xh), b));
+        i += 4;
+    }
+    n4
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn bn_bwd_neon(
+    dyrow: &[f32],
+    xrow: &[f32],
+    scale: &[f32],
+    dgamma: &[f32],
+    dbeta: &[f32],
+    n: f32,
+    drow: &mut [f32],
+) -> usize {
+    let n4 = drow.len() & !3;
+    let nv = vdupq_n_f32(n);
+    let mut i = 0;
+    while i < n4 {
+        let dy = vld1q_f32(dyrow.as_ptr().add(i));
+        let xh = vld1q_f32(xrow.as_ptr().add(i));
+        let db = vld1q_f32(dbeta.as_ptr().add(i));
+        let dg = vld1q_f32(dgamma.as_ptr().add(i));
+        let sc = vld1q_f32(scale.as_ptr().add(i));
+        let t = vsubq_f32(vmulq_f32(nv, dy), db);
+        let t = vsubq_f32(t, vmulq_f32(xh, dg));
+        vst1q_f32(drow.as_mut_ptr().add(i), vmulq_f32(sc, t));
+        i += 4;
+    }
+    n4
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn bn_eval_neon(
+    urow: &[f32],
+    mean: &[f32],
+    scale: &[f32],
+    beta: &[f32],
+    yrow: &mut [f32],
+) -> usize {
+    let n4 = urow.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        let u = vld1q_f32(urow.as_ptr().add(i));
+        let m = vld1q_f32(mean.as_ptr().add(i));
+        let s = vld1q_f32(scale.as_ptr().add(i));
+        let b = vld1q_f32(beta.as_ptr().add(i));
+        let y = vaddq_f32(vmulq_f32(vsubq_f32(u, m), s), b);
+        vst1q_f32(yrow.as_mut_ptr().add(i), y);
+        i += 4;
+    }
+    n4
 }
 
 // ---------------------------------------------------------------------------
@@ -944,6 +1195,41 @@ mod tests {
         }
         assert_eq!(dgamma.len(), 3);
         assert_eq!(dbeta.len(), 3);
+    }
+
+    #[test]
+    fn bn_rows_match_scalar_bitwise_per_tier() {
+        // a ragged channel count exercises both the lane prefix and the
+        // scalar tail of every tier this host can run
+        let c = 21;
+        let urow = wave(c, 0.47);
+        let mean = wave(c, 0.13);
+        let invstd: Vec<f32> = wave(c, 0.29).iter().map(|v| v.abs() + 0.5).collect();
+        let gamma = wave(c, 0.61);
+        let beta = wave(c, 0.83);
+        let dyrow = wave(c, 0.37);
+        let dgamma = wave(c, 0.19);
+        let dbeta = wave(c, 0.71);
+        for tier in simd::tiers_available() {
+            let (mut x1, mut y1) = (vec![0.0f32; c], vec![0.0f32; c]);
+            bn_norm_row(Tier::Scalar, &urow, &mean, &invstd, &gamma, &beta, &mut x1, &mut y1);
+            let (mut x2, mut y2) = (vec![0.0f32; c], vec![0.0f32; c]);
+            bn_norm_row(tier, &urow, &mean, &invstd, &gamma, &beta, &mut x2, &mut y2);
+            assert_eq!(x1, x2, "bn_norm xhat {tier:?}");
+            assert_eq!(y1, y2, "bn_norm y {tier:?}");
+
+            let mut d1 = vec![0.0f32; c];
+            bn_bwd_row(Tier::Scalar, &dyrow, &x1, &invstd, &dgamma, &dbeta, 4.0, &mut d1);
+            let mut d2 = vec![0.0f32; c];
+            bn_bwd_row(tier, &dyrow, &x1, &invstd, &dgamma, &dbeta, 4.0, &mut d2);
+            assert_eq!(d1, d2, "bn_bwd {tier:?}");
+
+            let mut e1 = vec![0.0f32; c];
+            bn_eval_row(Tier::Scalar, &urow, &mean, &invstd, &beta, &mut e1);
+            let mut e2 = vec![0.0f32; c];
+            bn_eval_row(tier, &urow, &mean, &invstd, &beta, &mut e2);
+            assert_eq!(e1, e2, "bn_eval {tier:?}");
+        }
     }
 
     #[test]

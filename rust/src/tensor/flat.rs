@@ -15,6 +15,13 @@
 //!   accumulation order of `tensor::ops::sets_dot` exactly, whatever the
 //!   thread count.
 //!
+//! The elementwise kernels dispatch on the process-wide SIMD tier
+//! (`util::simd`): the AVX2/NEON bodies assign whole elements to vector
+//! lanes and keep multiply and add as two separately rounded instructions
+//! (never FMA), so every tier is bitwise the scalar loop; a scalar tail
+//! finishes the ragged remainder in element order. The reductions stay
+//! scalar — f64 accumulation chains must not be split across lanes.
+//!
 //! Threading is gated per chunk via `coordinator::parallel::gate_per_chunk`
 //! — a worker is only spawned if its own share of the work is worth a
 //! spawn, so tiny vectors (and modest ones at high thread counts) never
@@ -24,15 +31,23 @@
 use std::ops::Range;
 
 use crate::coordinator::parallel;
+use crate::util::simd::{self, Tier};
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32, vsubq_f32};
 
 /// acc += alpha * x, chunk-parallel.
 pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
     assert_eq!(acc.len(), x.len(), "axpy: length mismatch");
+    let tier = simd::active();
     let t = parallel::gate_per_chunk(threads, acc.len() * 2, parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, acc, 1, |first, chunk| {
-        for (a, &b) in chunk.iter_mut().zip(&x[first..first + chunk.len()]) {
-            *a += alpha * b;
-        }
+        axpy_chunk(tier, chunk, alpha, &x[first..first + chunk.len()]);
     });
 }
 
@@ -45,21 +60,19 @@ pub fn axpy(threads: usize, acc: &mut [f32], alpha: f32, x: &[f32]) {
 /// `avg += (x - avg)/n` update would NOT be.)
 pub fn add(threads: usize, acc: &mut [f32], x: &[f32]) {
     assert_eq!(acc.len(), x.len(), "add: length mismatch");
+    let tier = simd::active();
     let t = parallel::gate_per_chunk(threads, acc.len() * 2, parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, acc, 1, |first, chunk| {
-        for (a, &b) in chunk.iter_mut().zip(&x[first..first + chunk.len()]) {
-            *a += b;
-        }
+        add_chunk(tier, chunk, &x[first..first + chunk.len()]);
     });
 }
 
 /// acc *= alpha, chunk-parallel.
 pub fn scale(threads: usize, acc: &mut [f32], alpha: f32) {
+    let tier = simd::active();
     let t = parallel::gate_per_chunk(threads, acc.len(), parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, acc, 1, |_, chunk| {
-        for a in chunk.iter_mut() {
-            *a *= alpha;
-        }
+        scale_chunk(tier, chunk, alpha);
     });
 }
 
@@ -72,19 +85,16 @@ pub fn mean_into(threads: usize, out: &mut [f32], sets: &[&[f32]]) {
         assert_eq!(s.len(), out.len(), "mean_into: length mismatch");
     }
     let inv = 1.0 / sets.len() as f32;
+    let tier = simd::active();
     let t =
         parallel::gate_per_chunk(threads, out.len() * (sets.len() + 1), parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks(t, out, 1, |first, chunk| {
         let end = first + chunk.len();
         chunk.copy_from_slice(&sets[0][first..end]);
         for s in &sets[1..] {
-            for (o, &v) in chunk.iter_mut().zip(&s[first..end]) {
-                *o += v;
-            }
+            add_chunk(tier, chunk, &s[first..end]);
         }
-        for o in chunk.iter_mut() {
-            *o *= inv;
-        }
+        scale_chunk(tier, chunk, inv);
     });
 }
 
@@ -108,15 +118,10 @@ pub fn sgd_step(
 ) {
     assert_eq!(p.len(), m.len(), "sgd_step: momentum length mismatch");
     assert_eq!(p.len(), g.len(), "sgd_step: gradient length mismatch");
+    let tier = simd::active();
     let t = parallel::gate_per_chunk(threads, p.len() * 6, parallel::MIN_ITEM_WORK);
     parallel::parallel_row_chunks2(t, p, m, 1, 1, |first, pc, mc| {
-        let gc = &g[first..first + pc.len()];
-        for i in 0..pc.len() {
-            let g2 = gc[i] + wd * pc[i];
-            let m2 = mu * mc[i] + g2;
-            pc[i] -= lr * (g2 + mu * m2);
-            mc[i] = m2;
-        }
+        sgd_chunk(tier, pc, mc, &g[first..first + pc.len()], lr, mu, wd);
     });
 }
 
@@ -144,22 +149,232 @@ pub fn sq_norm_ranges(threads: usize, a: &[f32], ranges: &[Range<usize>]) -> f64
     partials.into_iter().sum()
 }
 
-/// Euclidean distance with per-range f64 partials (sequential — not a hot
-/// path; matches the legacy `sets_distance` accumulation order).
-pub fn distance_ranges(a: &[f32], b: &[f32], ranges: &[Range<usize>]) -> f64 {
+/// Euclidean distance with per-range f64 partials — like its sibling
+/// reductions, one partial per layout range combined in range order, so
+/// the result is bitwise identical for every `threads` value (and to the
+/// legacy sequential `sets_distance` accumulation order).
+pub fn distance_ranges(threads: usize, a: &[f32], b: &[f32], ranges: &[Range<usize>]) -> f64 {
     assert_eq!(a.len(), b.len(), "distance_ranges: length mismatch");
-    let mut acc = 0.0f64;
-    for r in ranges {
-        acc += a[r.clone()]
+    let t = parallel::gate_per_chunk(threads, a.len() * 2, parallel::MIN_ITEM_WORK);
+    let partials = parallel::parallel_map(t, ranges.to_vec(), |_, r| {
+        a[r.clone()]
             .iter()
-            .zip(&b[r.clone()])
+            .zip(&b[r])
             .map(|(p, q)| {
                 let d = (*p - *q) as f64;
                 d * d
             })
-            .sum::<f64>();
+            .sum::<f64>()
+    });
+    partials.into_iter().sum::<f64>().sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// per-chunk dispatch bodies. Each vector body processes the 8-element
+// (AVX2) or 4-element (NEON) prefix and returns how far it got; the
+// scalar tail finishes the remainder in element order. Unavailable tiers
+// fall through to the scalar loop (`done = 0`).
+// ---------------------------------------------------------------------------
+
+fn axpy_chunk(tier: Tier, acc: &mut [f32], alpha: f32, x: &[f32]) {
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; the helper stays
+        // inside acc/x, whose lengths match (asserted by the caller).
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { axpy_avx2(acc, alpha, x) },
+        // SAFETY: gated on runtime neon detection, same bounds contract.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { axpy_neon(acc, alpha, x) },
+        _ => 0,
+    };
+    for (a, &b) in acc[done..].iter_mut().zip(&x[done..]) {
+        *a += alpha * b;
     }
-    acc.sqrt()
+}
+
+fn add_chunk(tier: Tier, acc: &mut [f32], x: &[f32]) {
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; in bounds as above.
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { add_avx2(acc, x) },
+        // SAFETY: gated on runtime neon detection; in bounds as above.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { add_neon(acc, x) },
+        _ => 0,
+    };
+    for (a, &b) in acc[done..].iter_mut().zip(&x[done..]) {
+        *a += b;
+    }
+}
+
+fn scale_chunk(tier: Tier, acc: &mut [f32], alpha: f32) {
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; in bounds as above.
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { scale_avx2(acc, alpha) },
+        // SAFETY: gated on runtime neon detection; in bounds as above.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { scale_neon(acc, alpha) },
+        _ => 0,
+    };
+    for a in acc[done..].iter_mut() {
+        *a *= alpha;
+    }
+}
+
+fn sgd_chunk(tier: Tier, pc: &mut [f32], mc: &mut [f32], gc: &[f32], lr: f32, mu: f32, wd: f32) {
+    let done = match tier {
+        // SAFETY: gated on runtime avx2 detection; pc/mc/gc lengths
+        // match (asserted by the caller).
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { sgd_avx2(pc, mc, gc, lr, mu, wd) },
+        // SAFETY: gated on runtime neon detection, same bounds contract.
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { sgd_neon(pc, mc, gc, lr, mu, wd) },
+        _ => 0,
+    };
+    for i in done..pc.len() {
+        let g2 = gc[i] + wd * pc[i];
+        let m2 = mu * mc[i] + g2;
+        pc[i] -= lr * (g2 + mu * m2);
+        mc[i] = m2;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies (x86_64). Lane j holds element i+j; multiply and add are
+// separate instructions (two roundings — the scalar op sequence, never
+// FMA), so each lane replays its element's scalar chain exactly.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], alpha: f32, x: &[f32]) -> usize {
+    let n8 = acc.len() & !7;
+    let av = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i < n8 {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let b = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, _mm256_mul_ps(av, b)));
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_avx2(acc: &mut [f32], x: &[f32]) -> usize {
+    let n8 = acc.len() & !7;
+    let mut i = 0;
+    while i < n8 {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let b = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(acc: &mut [f32], alpha: f32) -> usize {
+    let n8 = acc.len() & !7;
+    let av = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i < n8 {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_mul_ps(a, av));
+        i += 8;
+    }
+    n8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_avx2(pc: &mut [f32], mc: &mut [f32], gc: &[f32], lr: f32, mu: f32, wd: f32) -> usize {
+    let n8 = pc.len() & !7;
+    let (lrv, muv, wdv) = (_mm256_set1_ps(lr), _mm256_set1_ps(mu), _mm256_set1_ps(wd));
+    let mut i = 0;
+    while i < n8 {
+        let p = _mm256_loadu_ps(pc.as_ptr().add(i));
+        let m = _mm256_loadu_ps(mc.as_ptr().add(i));
+        let g = _mm256_loadu_ps(gc.as_ptr().add(i));
+        let g2 = _mm256_add_ps(g, _mm256_mul_ps(wdv, p));
+        let m2 = _mm256_add_ps(_mm256_mul_ps(muv, m), g2);
+        let step = _mm256_mul_ps(lrv, _mm256_add_ps(g2, _mm256_mul_ps(muv, m2)));
+        _mm256_storeu_ps(pc.as_mut_ptr().add(i), _mm256_sub_ps(p, step));
+        _mm256_storeu_ps(mc.as_mut_ptr().add(i), m2);
+        i += 8;
+    }
+    n8
+}
+
+// ---------------------------------------------------------------------------
+// NEON bodies (aarch64) — same lane/rounding contract, 4 lanes.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(acc: &mut [f32], alpha: f32, x: &[f32]) -> usize {
+    let n4 = acc.len() & !3;
+    let av = vdupq_n_f32(alpha);
+    let mut i = 0;
+    while i < n4 {
+        let a = vld1q_f32(acc.as_ptr().add(i));
+        let b = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a, vmulq_f32(av, b)));
+        i += 4;
+    }
+    n4
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn add_neon(acc: &mut [f32], x: &[f32]) -> usize {
+    let n4 = acc.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        let a = vld1q_f32(acc.as_ptr().add(i));
+        let b = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a, b));
+        i += 4;
+    }
+    n4
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scale_neon(acc: &mut [f32], alpha: f32) -> usize {
+    let n4 = acc.len() & !3;
+    let av = vdupq_n_f32(alpha);
+    let mut i = 0;
+    while i < n4 {
+        let a = vld1q_f32(acc.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vmulq_f32(a, av));
+        i += 4;
+    }
+    n4
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sgd_neon(pc: &mut [f32], mc: &mut [f32], gc: &[f32], lr: f32, mu: f32, wd: f32) -> usize {
+    let n4 = pc.len() & !3;
+    let (lrv, muv, wdv) = (vdupq_n_f32(lr), vdupq_n_f32(mu), vdupq_n_f32(wd));
+    let mut i = 0;
+    while i < n4 {
+        let p = vld1q_f32(pc.as_ptr().add(i));
+        let m = vld1q_f32(mc.as_ptr().add(i));
+        let g = vld1q_f32(gc.as_ptr().add(i));
+        let g2 = vaddq_f32(g, vmulq_f32(wdv, p));
+        let m2 = vaddq_f32(vmulq_f32(muv, m), g2);
+        let step = vmulq_f32(lrv, vaddq_f32(g2, vmulq_f32(muv, m2)));
+        vst1q_f32(pc.as_mut_ptr().add(i), vsubq_f32(p, step));
+        vst1q_f32(mc.as_mut_ptr().add(i), m2);
+        i += 4;
+    }
+    n4
 }
 
 #[cfg(test)]
@@ -168,6 +383,13 @@ mod tests {
 
     fn whole(n: usize) -> Vec<Range<usize>> {
         vec![0..n]
+    }
+
+    fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+        }
     }
 
     #[test]
@@ -183,6 +405,41 @@ mod tests {
     }
 
     #[test]
+    fn simd_tiers_match_scalar_bitwise() {
+        // an odd length exercises both the vector body and the scalar
+        // tail of every dispatch tier this host can run
+        let n = 1003;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).sin() * 1.7).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.23).cos() * 0.9).collect();
+        for tier in simd::tiers_available() {
+            let mut want = x.clone();
+            axpy_chunk(Tier::Scalar, &mut want, 1.37, &g);
+            let mut got = x.clone();
+            axpy_chunk(tier, &mut got, 1.37, &g);
+            assert_bits(&got, &want, &format!("axpy {tier:?}"));
+
+            let mut want = x.clone();
+            add_chunk(Tier::Scalar, &mut want, &g);
+            let mut got = x.clone();
+            add_chunk(tier, &mut got, &g);
+            assert_bits(&got, &want, &format!("add {tier:?}"));
+
+            let mut want = x.clone();
+            scale_chunk(Tier::Scalar, &mut want, 0.73);
+            let mut got = x.clone();
+            scale_chunk(tier, &mut got, 0.73);
+            assert_bits(&got, &want, &format!("scale {tier:?}"));
+
+            let (mut p1, mut m1) = (x.clone(), g.clone());
+            sgd_chunk(Tier::Scalar, &mut p1, &mut m1, &g, 0.05, 0.9, 5e-4);
+            let (mut p2, mut m2) = (x.clone(), g.clone());
+            sgd_chunk(tier, &mut p2, &mut m2, &g, 0.05, 0.9, 5e-4);
+            assert_bits(&p2, &p1, &format!("sgd p {tier:?}"));
+            assert_bits(&m2, &m1, &format!("sgd m {tier:?}"));
+        }
+    }
+
+    #[test]
     fn kernels_bitwise_identical_across_threads() {
         // big enough that the per-chunk gate actually spawns workers
         let n = 2_100_007;
@@ -193,6 +450,7 @@ mod tests {
         axpy(1, &mut seq, 1.5, &b);
         let d_seq = dot_ranges(1, &seq, &b, &ranges);
         let n_seq = sq_norm_ranges(1, &seq, &ranges);
+        let e_seq = distance_ranges(1, &seq, &b, &ranges);
         for threads in [2, 4, 7] {
             let mut par = a0.clone();
             axpy(threads, &mut par, 1.5, &b);
@@ -206,6 +464,11 @@ mod tests {
                 n_seq.to_bits(),
                 sq_norm_ranges(threads, &par, &ranges).to_bits(),
                 "sq_norm threads={threads}"
+            );
+            assert_eq!(
+                e_seq.to_bits(),
+                distance_ranges(threads, &par, &b, &ranges).to_bits(),
+                "distance threads={threads}"
             );
         }
     }
@@ -248,7 +511,7 @@ mod tests {
     fn distance_and_dot_geometry() {
         let a = [3.0f32, 4.0];
         let z = [0.0f32, 0.0];
-        assert_eq!(distance_ranges(&a, &z, &whole(2)), 5.0);
+        assert_eq!(distance_ranges(1, &a, &z, &whole(2)), 5.0);
         assert_eq!(dot_ranges(1, &a, &a, &whole(2)), 25.0);
         let b = [4.0f32, -3.0];
         assert_eq!(dot_ranges(1, &a, &b, &whole(2)), 0.0);

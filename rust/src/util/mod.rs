@@ -1,10 +1,12 @@
 //! Substrate utilities: typed errors, JSON (no serde), deterministic RNG,
-//! and a tiny stderr logger. Everything else in the crate builds on these.
+//! runtime SIMD dispatch, and a tiny stderr logger. Everything else in
+//! the crate builds on these.
 
 pub mod error;
 pub mod json;
 pub mod logger;
 pub mod rng;
+pub mod simd;
 
 pub use error::{Error, Result};
 pub use json::Json;

@@ -1,0 +1,227 @@
+//! Runtime SIMD dispatch for the explicit micro-kernels: one detected
+//! **tier** per process, selected once and read by every hot kernel
+//! (the blocked GEMM family, the flat-arena elementwise kernels, the BN
+//! normalize/backward loops).
+//!
+//! Tiers: `scalar` (the always-available portable kernels), `avx2`
+//! (x86_64, 8-lane f32), `neon` (aarch64, 4-lane f32). Every tier is
+//! **bitwise identical**: the vector kernels assign whole output elements
+//! to lanes (never splitting an accumulation chain) and use separate
+//! multiply + add instructions — two roundings, exactly the scalar op
+//! sequence — never fused multiply-add, whose single rounding would
+//! diverge. `rust/tests/gemm_oracle.rs` and the in-module kernel tests
+//! pin SIMD == scalar == reference per tier.
+//!
+//! Selection precedence: the `SWAP_SIMD` env var (CI's forced-scalar
+//! lane) > the `simd` config knob (installed via [`set_active`] when a
+//! backend loads) > runtime feature detection ([`detect`]). Requesting a
+//! tier the CPU lacks fails loudly — silently running AVX2 code on a
+//! non-AVX2 host would be an illegal-instruction crash mid-training.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::{Error, Result};
+
+/// One SIMD dispatch tier. Kernels match on this; unavailable arms fall
+/// back to the scalar kernel defensively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar kernels — always available, the parity oracle.
+    Scalar,
+    /// x86_64 AVX2: 8-lane f32 vectors (one full `NR`-wide GEMM strip).
+    Avx2,
+    /// aarch64 NEON: 4-lane f32 vectors (half a GEMM strip per register).
+    Neon,
+}
+
+/// Knob vocabulary, for help/error text.
+pub const TIER_NAMES: &str = "auto|scalar|avx2|neon";
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// Whether this CPU can execute the tier's kernels.
+    pub fn available(self) -> bool {
+        match self {
+            Tier::Scalar => true,
+            Tier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Tier::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    fn from_name(name: &str) -> Result<Tier> {
+        match name {
+            "scalar" => Ok(Tier::Scalar),
+            "avx2" => Ok(Tier::Avx2),
+            "neon" => Ok(Tier::Neon),
+            other => Err(Error::config(format!(
+                "unknown simd tier '{other}' (expected {TIER_NAMES})"
+            ))),
+        }
+    }
+}
+
+/// The best tier this CPU supports: avx2 on x86_64, neon on aarch64,
+/// else scalar.
+pub fn detect() -> Tier {
+    for t in [Tier::Avx2, Tier::Neon] {
+        if t.available() {
+            return t;
+        }
+    }
+    Tier::Scalar
+}
+
+/// Every tier the current CPU can run — what the per-tier parity tests
+/// and benches iterate over (always contains at least `Scalar`).
+pub fn tiers_available() -> Vec<Tier> {
+    [Tier::Scalar, Tier::Avx2, Tier::Neon]
+        .into_iter()
+        .filter(|t| t.available())
+        .collect()
+}
+
+/// Resolve a `simd` knob value to a concrete tier: the `SWAP_SIMD` env
+/// var wins (so CI's forced-scalar lane overrides any config), then the
+/// knob; "auto" (or empty) means [`detect`]. A named tier the CPU lacks
+/// is a loud error, never a silent fallback.
+pub fn resolve(knob: &str) -> Result<Tier> {
+    let name = match std::env::var("SWAP_SIMD") {
+        Ok(v) => v,
+        Err(_) => knob.to_string(),
+    };
+    let name = name.trim().to_ascii_lowercase();
+    if name.is_empty() || name == "auto" {
+        return Ok(detect());
+    }
+    let tier = Tier::from_name(&name)?;
+    if !tier.available() {
+        return Err(Error::config(format!(
+            "simd tier '{}' is not available on this cpu (arch {}); use 'auto'",
+            tier.name(),
+            std::env::consts::ARCH
+        )));
+    }
+    Ok(tier)
+}
+
+// Process-wide active tier: 0 = not yet resolved, else encode(tier).
+// Relaxed ordering suffices — the value is write-once in practice and
+// every resolution path (lazy or explicit) computes the same tier for
+// the same env/knob, so racing initializations agree.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(t: Tier) -> u8 {
+    match t {
+        Tier::Scalar => 1,
+        Tier::Avx2 => 2,
+        Tier::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Tier {
+    match v {
+        2 => Tier::Avx2,
+        3 => Tier::Neon,
+        _ => Tier::Scalar,
+    }
+}
+
+/// The tier the kernels dispatch on. First use resolves "auto" (honoring
+/// `SWAP_SIMD`) and caches the answer; a malformed `SWAP_SIMD` panics
+/// here rather than silently running a different kernel than asked for.
+pub fn active() -> Tier {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let t = resolve("auto").unwrap_or_else(|e| panic!("{e}"));
+            ACTIVE.store(encode(t), Ordering::Relaxed);
+            t
+        }
+        v => decode(v),
+    }
+}
+
+/// Install the resolved tier for the process (the config/CLI path —
+/// called by `ExperimentConfig::load_backend`). `SWAP_SIMD` still wins
+/// inside [`resolve`]. Returns the tier that became active.
+pub fn set_active(knob: &str) -> Result<Tier> {
+    let t = resolve(knob)?;
+    ACTIVE.store(encode(t), Ordering::Relaxed);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(Tier::Scalar.available());
+        let tiers = tiers_available();
+        assert!(tiers.contains(&Tier::Scalar));
+        assert!(tiers.contains(&detect()));
+    }
+
+    #[test]
+    fn detect_is_available_and_named() {
+        let t = detect();
+        assert!(t.available());
+        assert!(["scalar", "avx2", "neon"].contains(&t.name()));
+    }
+
+    #[test]
+    fn resolve_knob_values() {
+        // the env override (if CI set one) must itself resolve cleanly
+        match std::env::var("SWAP_SIMD") {
+            Ok(_) => {
+                let forced = resolve("auto").unwrap();
+                // with the env set, every knob resolves to the same tier
+                assert_eq!(resolve("scalar").unwrap(), forced);
+            }
+            Err(_) => {
+                assert_eq!(resolve("auto").unwrap(), detect());
+                assert_eq!(resolve("").unwrap(), detect());
+                assert_eq!(resolve(" Scalar ").unwrap(), Tier::Scalar);
+                assert!(resolve("sse9").is_err());
+                // a tier for a foreign arch is rejected, not crashed on
+                if !Tier::Neon.available() {
+                    assert!(resolve("neon").is_err());
+                }
+                if !Tier::Avx2.available() {
+                    assert!(resolve("avx2").is_err());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_available() {
+        let t = active();
+        assert!(t.available());
+        assert_eq!(active(), t, "active tier is cached");
+    }
+}

@@ -9,14 +9,22 @@
 //!
 //! The fused im2col packing (`conv3x3_into` / `conv3x3_dw_into`) is also
 //! pinned against materialize-then-multiply with the reference kernels.
+//!
+//! The `*_tier` entry points additionally pin every SIMD dispatch tier
+//! this host can run (scalar always, avx2/neon when detected) against the
+//! same reference, over shapes biased onto the ragged tile edges where
+//! the vector kernels hand off to the scalar fallback.
 
 use swap::runtime::native::gemm::{
-    conv3x3_dw_into, conv3x3_into, matmul_into, matmul_nt_into, matmul_tn_into, GemmScratch,
+    conv3x3_dw_into, conv3x3_dw_into_tier, conv3x3_into, conv3x3_into_tier, matmul_into,
+    matmul_into_tier, matmul_nt_into, matmul_nt_into_tier, matmul_tn_into, matmul_tn_into_tier,
+    GemmScratch, KC, MR, NR,
 };
 use swap::runtime::native::kernels::{
     im2col, matmul_nt_reference, matmul_reference, matmul_tn_reference,
 };
 use swap::runtime::native::model::{conv_layers, Dims};
+use swap::util::simd;
 
 /// Deterministic pseudo-random buffer with exact zeros sprinkled in so
 /// the reference's sparsity branch actually takes both sides.
@@ -90,6 +98,50 @@ fn check_triple(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
     check_nt(m, k, n, scratch);
 }
 
+/// nn pinned per dispatch tier: every tier this host can run (scalar is
+/// always in the list, so scalar == reference is covered too) must match
+/// the reference bitwise at threads 1 and 4.
+fn check_nn_tiers(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(m * k, 0.37);
+    let b = wave(k * n, 0.73);
+    let want = matmul_reference(&a, &b, m, k, n, 1);
+    for tier in simd::tiers_available() {
+        for threads in [1, 4] {
+            let mut out = vec![f32::NAN; m * n];
+            matmul_into_tier(&mut out, &a, &b, m, k, n, threads, tier, scratch);
+            assert_bitwise(&out, &want, &format!("nn {tier:?} m={m} k={k} n={n} t={threads}"));
+        }
+    }
+}
+
+/// tn (dW orientation) pinned per dispatch tier.
+fn check_tn_tiers(r: usize, m: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(r * m, 0.53);
+    let b = wave(r * n, 0.41);
+    let want = matmul_tn_reference(&a, &b, r, m, n, 1);
+    for tier in simd::tiers_available() {
+        for threads in [1, 4] {
+            let mut out = vec![f32::NAN; m * n];
+            matmul_tn_into_tier(&mut out, &a, &b, r, m, n, threads, tier, scratch);
+            assert_bitwise(&out, &want, &format!("tn {tier:?} r={r} m={m} n={n} t={threads}"));
+        }
+    }
+}
+
+/// nt (dX orientation) pinned per dispatch tier.
+fn check_nt_tiers(m: usize, k: usize, n: usize, scratch: &mut GemmScratch) {
+    let a = wave(m * k, 0.61);
+    let b = wave(n * k, 0.29);
+    let want = matmul_nt_reference(&a, &b, m, k, n, 1);
+    for tier in simd::tiers_available() {
+        for threads in [1, 4] {
+            let mut out = vec![f32::NAN; m * n];
+            matmul_nt_into_tier(&mut out, &a, &b, m, k, n, threads, tier, scratch);
+            assert_bitwise(&out, &want, &format!("nt {tier:?} m={m} k={k} n={n} t={threads}"));
+        }
+    }
+}
+
 #[test]
 fn blocked_matches_reference_on_randomized_shapes() {
     let mut scratch = GemmScratch::default();
@@ -159,6 +211,57 @@ fn fused_im2col_packing_matches_materialized_patches() {
             let mut out = vec![f32::NAN; 9 * c * cout];
             conv3x3_dw_into(&mut out, &x, bs, h, w, c, &du, cout, threads, &mut scratch);
             assert_bitwise(&out, &want, &format!("fused dW t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn every_tier_matches_reference_on_ragged_edge_tiles() {
+    let mut scratch = GemmScratch::default();
+    // randomized shapes pinned OFF every tile boundary: mr < MR ragged
+    // row tiles, nr < NR ragged column strips (the scalar-fallback edge
+    // of the SIMD kernels), and k never a multiple of KC
+    let mut state = 0x7f4a7c15u64;
+    let mut next = |lo: usize, hi: usize| {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        lo + ((state >> 33) as usize) % (hi - lo + 1)
+    };
+    for _ in 0..5 {
+        let m = next(0, 4) * MR + next(1, MR - 1);
+        let n = next(0, 2) * NR + next(1, NR - 1);
+        let k = next(0, 1) * KC + next(1, KC - 1);
+        check_nn_tiers(m, k, n, &mut scratch);
+        check_tn_tiers(k, m, n, &mut scratch);
+        check_nt_tiers(m, k, n, &mut scratch);
+    }
+    // degenerate strips: a single ragged row tile, a 1x1 output with a
+    // long k chain crossing KC panels, and a lone ragged column strip
+    check_nn_tiers(MR - 1, 3, NR + 5, &mut scratch);
+    check_nn_tiers(1, 2 * KC + 1, 1, &mut scratch);
+    check_nn_tiers(MR + 3, KC + 7, NR - 1, &mut scratch);
+}
+
+#[test]
+fn fused_conv_matches_reference_per_tier() {
+    let mut scratch = GemmScratch::default();
+    // ragged everywhere: cout = 5 and 9c = 27 are never full NR strips,
+    // so the fused path exercises the vector kernel AND its scalar edge
+    let (bs, h, w, c, cout) = (1usize, 5usize, 7usize, 3usize, 5usize);
+    let x = wave(bs * h * w * c, 0.83);
+    let wts = wave(9 * c * cout, 0.47);
+    let patches = im2col(&x, bs, h, w, c, 1);
+    let rows = bs * h * w;
+    let want = matmul_reference(&patches, &wts, rows, 9 * c, cout, 1);
+    let du = wave(rows * cout, 0.31);
+    let want_dw = matmul_tn_reference(&patches, &du, rows, 9 * c, cout, 1);
+    for tier in simd::tiers_available() {
+        for threads in [1, 4] {
+            let mut out = vec![f32::NAN; rows * cout];
+            conv3x3_into_tier(&mut out, &x, bs, h, w, c, &wts, cout, threads, tier, &mut scratch);
+            assert_bitwise(&out, &want, &format!("fused conv {tier:?} t={threads}"));
+            let mut dw = vec![f32::NAN; 9 * c * cout];
+            conv3x3_dw_into_tier(&mut dw, &x, bs, h, w, c, &du, cout, threads, tier, &mut scratch);
+            assert_bitwise(&dw, &want_dw, &format!("fused dW {tier:?} t={threads}"));
         }
     }
 }

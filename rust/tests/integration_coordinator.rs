@@ -88,12 +88,12 @@ fn swap_three_phases_compose() {
     // two divergent workers
     assert_eq!(r.worker_params.len(), 2);
     assert!(
-        r.worker_params[0].distance(&r.worker_params[1]).unwrap() > 0.0,
+        r.worker_params[0].distance(&r.worker_params[1], 1).unwrap() > 0.0,
         "independent workers must diverge"
     );
     // the averaged model is the mean
     let manual = ParamSet::average(&r.worker_params).unwrap();
-    assert!(manual.distance(&r.final_params).unwrap() < 1e-9);
+    assert!(manual.distance(&r.final_params, 1).unwrap() < 1e-9);
     // stats sane
     assert!(r.final_stats.examples == 32);
     assert!(r.final_stats.accuracy1() >= 0.0 && r.final_stats.accuracy1() <= 1.0);
@@ -139,7 +139,7 @@ fn swap_bitwise_deterministic_per_seed() {
     }
     // a different seed diverges
     let c = run_swap(&env, &tiny_swap_config(6)).unwrap();
-    assert!(a.final_params.distance(&c.final_params).unwrap() > 0.0);
+    assert!(a.final_params.distance(&c.final_params, 1).unwrap() > 0.0);
 }
 
 #[test]
@@ -182,7 +182,7 @@ fn different_seed_streams_diverge_in_phase2() {
     let s101 = run_stream(101);
     assert_eq!(s100, s100_again, "same stream must be bitwise reproducible");
     assert!(
-        s100.distance(&s101).unwrap() > 0.0,
+        s100.distance(&s101, 1).unwrap() > 0.0,
         "different seed_streams must produce divergent workers"
     );
 }
@@ -211,7 +211,7 @@ fn swap_averaging_beats_mean_worker() {
     let r = run_swap(&env, &cfg).unwrap();
     assert_eq!(r.worker_stats.len(), 4);
     // workers did move independently
-    assert!(r.worker_params[0].distance(&r.worker_params[3]).unwrap() > 0.0);
+    assert!(r.worker_params[0].distance(&r.worker_params[3], 1).unwrap() > 0.0);
     let before = r.before_avg_acc1();
     let after = r.final_stats.accuracy1();
     assert!(
@@ -320,10 +320,10 @@ fn swa_samples_and_averages() {
     .unwrap();
     assert_eq!(r.samples.len(), 3);
     // samples are distinct iterates
-    assert!(r.samples[0].distance(&r.samples[2]).unwrap() > 0.0);
+    assert!(r.samples[0].distance(&r.samples[2], 1).unwrap() > 0.0);
     // averaged model equals the mean of samples
     let manual = ParamSet::average(&r.samples).unwrap();
-    assert!(manual.distance(&r.averaged).unwrap() < 1e-9);
+    assert!(manual.distance(&r.averaged, 1).unwrap() < 1e-9);
     assert!(clock.seconds > 0.0);
 }
 
@@ -365,7 +365,7 @@ fn resumable_swap_reproduces_fresh_run() {
 
     // first resumable run: everything computed + persisted
     let a = run_swap_resumable(&env, &cfg, &dir).unwrap();
-    assert!(a.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+    assert!(a.final_params.distance(&fresh.final_params, 1).unwrap() < 1e-9,
             "resumable(fresh) must equal run_swap");
     assert!((a.clock.seconds - fresh.clock.seconds).abs() < 1e-9);
 
@@ -373,7 +373,7 @@ fn resumable_swap_reproduces_fresh_run() {
     assert!(dir.has_phase1());
     assert_eq!(dir.finished_workers(cfg.workers), vec![0, 1]);
     let b = run_swap_resumable(&env, &cfg, &dir).unwrap();
-    assert!(b.final_params.distance(&fresh.final_params).unwrap() < 1e-9);
+    assert!(b.final_params.distance(&fresh.final_params, 1).unwrap() < 1e-9);
     assert!((b.clock.seconds - fresh.clock.seconds).abs() < 1e-6,
             "modeled time must be identical on resume: {} vs {}",
             b.clock.seconds, fresh.clock.seconds);
@@ -381,7 +381,7 @@ fn resumable_swap_reproduces_fresh_run() {
     // partial resume: delete one worker, keep phase 1
     std::fs::remove_file(dir_path.join("worker1.ckpt")).unwrap();
     let c = run_swap_resumable(&env, &cfg, &dir).unwrap();
-    assert!(c.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+    assert!(c.final_params.distance(&fresh.final_params, 1).unwrap() < 1e-9,
             "partial resume must still reproduce the fresh run");
     std::fs::remove_dir_all(&dir_path).ok();
 }
@@ -603,7 +603,7 @@ fn local_sgd_parallel_matches_sequential() {
     };
     let a = run_local_sgd(&env_threads(&f, 1), &cfg).unwrap();
     let b = run_local_sgd(&env_threads(&f, 4), &cfg).unwrap();
-    assert!(a.params.distance(&b.params).unwrap() < 1e-12);
+    assert!(a.params.distance(&b.params, 1).unwrap() < 1e-12);
     assert_eq!(a.sync_events, b.sync_events);
     assert_eq!(a.outcome.test_acc1, b.outcome.test_acc1);
 }

@@ -251,7 +251,7 @@ fn resumable_run_retries_only_dropped_workers() {
     let r2 = run_swap_resumable(&env, &cfg, &dir).unwrap();
     assert!(r2.dropped.is_empty());
     assert!(
-        r2.final_params.distance(&fresh.final_params).unwrap() < 1e-9,
+        r2.final_params.distance(&fresh.final_params, 1).unwrap() < 1e-9,
         "resume-after-drop must converge to the honest run"
     );
     std::fs::remove_dir_all(&dir_path).ok();
