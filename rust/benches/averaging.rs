@@ -8,7 +8,7 @@
 //! `BENCH_averaging.json` (and a copy under results/).
 //! Run: cargo bench --bench averaging
 
-use swap::bench::{bench, Stats, Table};
+use swap::bench::{bench, env_manifest, Stats, Table};
 use swap::coordinator::{
     parallel, run_swap, AveragingPolicy, AveragingSpec, Candidate, CandidateKind, SwapConfig,
     TrainEnv,
@@ -212,6 +212,7 @@ fn main() -> Result<()> {
         .collect();
     let json = Json::obj(vec![
         ("bench", Json::str("averaging")),
+        ("environment", env_manifest()),
         ("num_params", Json::Num(m.num_params as f64)),
         ("workers", Json::Num(W as f64)),
         ("threads_parallel", Json::Num(threads as f64)),

@@ -5,7 +5,7 @@
 //! assembly must equal serial assembly exactly.
 //! Run: cargo bench --bench data_pipeline
 
-use swap::bench::{bench, time_once};
+use swap::bench::{bench, env_manifest, time_once};
 use swap::config::preset;
 use swap::coordinator::{parallel, run_baseline, BaselineConfig};
 use swap::data::{
@@ -161,6 +161,7 @@ fn main() -> Result<()> {
 
     let json = Json::obj(vec![
         ("bench", Json::Str("data_pipeline".to_string())),
+        ("environment", env_manifest()),
         (
             "assembly",
             Json::obj(vec![

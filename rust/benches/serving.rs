@@ -1,0 +1,201 @@
+//! Serving smoke bench: open-loop latency/throughput for the dynamic
+//! batcher on both numeric tiers, plus the int8-vs-f32 engine speedup.
+//!
+//! A width-16 model on 32x32 images is served by one shard (the CI
+//! runner is effectively single-core) at three offered rates — 0.3/0.6/
+//! 0.9 of the tier's measured batch-8 engine capacity — under synthetic
+//! open-loop traffic: request `i` is *scheduled* at `i / rate` seconds
+//! and its latency is measured from that scheduled arrival, so queueing
+//! delay under load is part of the number (not hidden by client
+//! back-off). Emits `BENCH_serving.json` (and a copy under results/)
+//! with p50/p99 latency, sustained throughput and coalescing stats per
+//! (tier, rate), stamped with an environment manifest.
+//!
+//! The int8 tier must beat f32 on raw engine throughput whenever a SIMD
+//! tier is active (the i8 pair-MADD kernel does twice the k-depth per
+//! instruction); the bench asserts it.
+//! Run: cargo bench --bench serving
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use swap::bench::env_manifest;
+use swap::data::{Generator, SynthSpec};
+use swap::model::{BnState, ParamSet};
+use swap::runtime::native::{NativeBackend, NativeSpec};
+use swap::runtime::Backend;
+use swap::serving::{percentile, ServeConfig, ServeModel, ServeTier, Server, ShardEngine};
+use swap::util::simd::{self, Tier};
+use swap::util::{Json, Result};
+
+const WIDTH: usize = 16;
+const IMAGE: usize = 32;
+const CLASSES: usize = 10;
+const MAX_BATCH: usize = 8;
+const MAX_DELAY_US: u64 = 500;
+const REQUESTS: usize = 120;
+const CLIENTS: usize = 8;
+const N_IMGS: usize = 64;
+const RATE_FRACS: [f64; 3] = [0.3, 0.6, 0.9];
+
+fn build(tier: ServeTier) -> Result<Arc<ServeModel>> {
+    let spec = NativeSpec::new("serving-bench", WIDTH, CLASSES, IMAGE).with_batches(&[MAX_BATCH]);
+    let engine = NativeBackend::new(spec)?;
+    let params = ParamSet::init(engine.manifest(), 7);
+    let bn = BnState::init(engine.manifest());
+    Ok(Arc::new(ServeModel::new(engine, params, bn, tier)?))
+}
+
+/// Best-of batch-8 engine throughput (images/sec) on the model's tier —
+/// the serving capacity ceiling the offered rates are derived from.
+fn engine_rps(model: &ServeModel, images: &[f32]) -> Result<f64> {
+    let il = model.image_len();
+    let mut eng = ShardEngine::new(model, MAX_BATCH);
+    eng.warm(model)?;
+    for j in 0..MAX_BATCH {
+        eng.image_slot(j).copy_from_slice(&images[j * il..(j + 1) * il]);
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            eng.infer(model, MAX_BATCH)?;
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok((4 * MAX_BATCH) as f64 / best)
+}
+
+/// Drive `REQUESTS` open-loop requests at `rate` req/s through `CLIENTS`
+/// client threads; returns (p50_ms, p99_ms, throughput_rps).
+fn open_loop(server: &Server, images: &[f32], rate: f64) -> (f64, f64, f64) {
+    let il = server.model().image_len();
+    let nc = server.model().num_classes();
+    let start = Instant::now();
+    let mut lats: Vec<f64> = Vec::with_capacity(REQUESTS);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            handles.push(s.spawn(move || {
+                let mut out = vec![0.0f32; nc];
+                let mut mine = Vec::with_capacity(REQUESTS / CLIENTS + 1);
+                for i in (c..REQUESTS).step_by(CLIENTS) {
+                    let target = start + Duration::from_secs_f64(i as f64 / rate);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                    let at = i % N_IMGS;
+                    let img = &images[at * il..(at + 1) * il];
+                    server.classify_into(img, &mut out).expect("serve request failed");
+                    mine.push(Instant::now().duration_since(target).as_secs_f64() * 1e3);
+                }
+                mine
+            }));
+        }
+        for h in handles {
+            lats.extend(h.join().unwrap());
+        }
+    });
+    let wall = start.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    let p50 = percentile(&lats, 50.0);
+    let p99 = percentile(&lats, 99.0);
+    (p50, p99, REQUESTS as f64 / wall)
+}
+
+fn main() -> Result<()> {
+    let gen = Generator::new(SynthSpec::for_preset(CLASSES, IMAGE, 5));
+    let images = gen.sample(N_IMGS, CLASSES).images;
+    let active = simd::active();
+    println!(
+        "serving bench: width {WIDTH} image {IMAGE} | 1 shard, max_batch {MAX_BATCH}, \
+         max_delay {MAX_DELAY_US}us, {CLIENTS} clients (simd tier: {})",
+        active.name()
+    );
+
+    // raw engine capacity per tier (batch 8, threads 1) — the int8 tier
+    // must beat f32 whenever a vector tier is active
+    let f32_model = build(ServeTier::F32)?;
+    let int8_model = build(ServeTier::Int8)?;
+    let f32_rps = engine_rps(&f32_model, &images)?;
+    let int8_rps = engine_rps(&int8_model, &images)?;
+    let speedup = int8_rps / f32_rps.max(1e-12);
+    println!(
+        "  engine t=1 batch {MAX_BATCH}: f32 {f32_rps:.0} img/s | int8 {int8_rps:.0} img/s \
+         | int8 speedup {speedup:.2}x"
+    );
+    if active != Tier::Scalar {
+        assert!(
+            speedup > 1.0,
+            "int8 engine throughput must beat f32 on SIMD tier {} ({speedup:.2}x)",
+            active.name()
+        );
+    }
+
+    let mut rows = Vec::new();
+    for (model, capacity) in [(&f32_model, f32_rps), (&int8_model, int8_rps)] {
+        let tier = model.tier;
+        for frac in RATE_FRACS {
+            let rate = (frac * capacity).max(1.0);
+            let cfg = ServeConfig {
+                shards: 1,
+                max_batch: MAX_BATCH,
+                max_delay: Duration::from_micros(MAX_DELAY_US),
+                queue_slots: MAX_BATCH * 2,
+            };
+            // a fresh server per point: stats and warmup are per-combo
+            let server = Server::start(model.clone(), cfg)?;
+            let (p50, p99, tp) = open_loop(&server, &images, rate);
+            let st = server.stats();
+            assert_eq!(st.requests, REQUESTS as u64, "lost requests");
+            assert_eq!(st.infer_errors, 0, "inference errors under load");
+            println!(
+                "  {:<4} rate {frac:.1}x ({rate:>6.0} req/s offered) | p50 {p50:>7.2} ms \
+                 | p99 {p99:>7.2} ms | {tp:>6.0} req/s | mean batch {:.2} (max {})",
+                tier.name(),
+                st.mean_batch(),
+                st.max_batch_seen
+            );
+            rows.push(Json::obj(vec![
+                ("tier", Json::str(tier.name())),
+                ("rate_frac", Json::Num(frac)),
+                ("offered_rps", Json::Num(rate)),
+                ("requests", Json::Num(REQUESTS as f64)),
+                ("p50_ms", Json::Num(p50)),
+                ("p99_ms", Json::Num(p99)),
+                ("throughput_rps", Json::Num(tp)),
+                ("mean_batch", Json::Num(st.mean_batch())),
+                ("max_batch_seen", Json::Num(st.max_batch_seen as f64)),
+            ]));
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("width", Json::Num(WIDTH as f64)),
+        ("image_size", Json::Num(IMAGE as f64)),
+        ("num_classes", Json::Num(CLASSES as f64)),
+        ("shards", Json::Num(1.0)),
+        ("max_batch", Json::Num(MAX_BATCH as f64)),
+        ("max_delay_us", Json::Num(MAX_DELAY_US as f64)),
+        ("clients", Json::Num(CLIENTS as f64)),
+        (
+            "engine_t1",
+            Json::obj(vec![
+                ("f32_imgs_per_s", Json::Num(f32_rps)),
+                ("int8_imgs_per_s", Json::Num(int8_rps)),
+                ("int8_speedup", Json::Num(speedup)),
+                ("simd_tier", Json::str(active.name())),
+            ]),
+        ),
+        ("environment", env_manifest()),
+        ("rows", Json::Arr(rows)),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_serving.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_serving.json", &json)?;
+    println!("wrote BENCH_serving.json");
+    Ok(())
+}

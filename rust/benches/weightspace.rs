@@ -6,7 +6,7 @@
 //! bitwise old-vs-new parity along the way.
 //! Run: cargo bench --bench weightspace
 
-use swap::bench::{bench, Stats, Table};
+use swap::bench::{bench, env_manifest, Stats, Table};
 use swap::coordinator::{allreduce, parallel};
 use swap::landscape::Plane;
 use swap::model::{FlatParams, ParamSet};
@@ -249,6 +249,7 @@ fn main() -> Result<()> {
         .collect();
     let json = Json::obj(vec![
         ("bench", Json::Str("weightspace".to_string())),
+        ("environment", env_manifest()),
         ("num_params", Json::Num(n as f64)),
         ("workers", Json::Num(W as f64)),
         ("threads_parallel", Json::Num(threads as f64)),

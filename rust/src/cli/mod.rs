@@ -6,9 +6,10 @@
 //!            [--runs N] [--seed N] [--threads N] [--simd TIER]
 //! ```
 //!
-//! Commands: swap | serve | join | swap-resume | sb | lb | swa | local-sgd |
-//!           table1 | table2 | table3 | table4 | dawnbench | fig1 | fig2 |
-//!           fig3 | fig4 | fig5 | fig6 | schedules | info | help
+//! Commands: swap | serve | join | swap-resume | serve-model | sb | lb |
+//!           swa | local-sgd | table1 | table2 | table3 | table4 |
+//!           dawnbench | fig1 | fig2 | fig3 | fig4 | fig5 | fig6 |
+//!           schedules | info | help
 
 use crate::config::{preset, ExperimentConfig};
 use crate::util::{Error, Result};
@@ -23,8 +24,9 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
-const VALUE_FLAGS: &[&str] =
-    &["preset", "config", "set", "runs", "seed", "threads", "simd", "out", "addr", "worker"];
+const VALUE_FLAGS: &[&str] = &[
+    "preset", "config", "set", "runs", "seed", "threads", "simd", "out", "addr", "worker", "model",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -135,6 +137,11 @@ Training commands (print a run summary):
   join        worker: connect to a `serve` coordinator at --addr, train
               one phase-2 replica, upload it (--worker N requests a
               specific unfinished worker id when rejoining)
+  serve-model batched inference serving on an averaged-model checkpoint
+              (--model FILE, saved by `swap --out DIR` as DIR/model.ckpt);
+              coalesces requests through the dynamic batcher across
+              serve_threads shard engines and reports accuracy, p50/p99
+              latency and throughput over the test set
   sb          small-batch SGD baseline
   lb          large-batch SGD baseline
   swa         sequential SWA from a small-batch run
@@ -185,6 +192,14 @@ Averaging (--set averaging=..., applies to SWAP phase 3, swa, local-sgd):
                 by avg_min_improve, keep the last avg_window candidates
                 (needs val_examples>0; synth mints a disjoint split,
                 disk sources carve the train tail)    [window 4, improve 0]
+Serving (serve-model, all settable via --set):
+  serve_threads=N        shard engine workers, each owning a private
+                         workspace (0 = auto like threads)          [0]
+  serve_max_batch=N      largest coalesced batch                    [8]
+  serve_max_delay_us=N   batching window past the first request  [2000]
+  serve_quant=f32|int8   numeric tier; int8 quantizes conv/linear
+                         weights per-tensor at load and runs i8 GEMMs
+                         (top-1/logit tolerance parity vs f32)    [f32]
 Failure policy (serve/join, all settable via --set):
   min_workers=N          fewest phase-2 survivors to average    [1]
   connect_timeout_ms=N   serve: join window after phase 1       [60000]

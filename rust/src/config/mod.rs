@@ -156,6 +156,19 @@ pub struct ExperimentConfig {
     /// use the piecewise ImageNet-style schedule (Fig 5) instead of the
     /// warmup-triangle for the baselines/phase 1
     pub imagenet_style: bool,
+
+    // ---- inference serving (`swap serve-model`) ----------------------
+    /// shard engine workers, each with its own workspace (0 = auto:
+    /// resolved like `threads`)
+    pub serve_threads: usize,
+    /// largest batch the dynamic batcher coalesces requests into
+    pub serve_max_batch: usize,
+    /// longest a batch waits (microseconds) for co-batched requests past
+    /// its first request; 0 = serve immediately
+    pub serve_max_delay_us: u64,
+    /// serving numeric tier: "f32" (bitwise eval path) or "int8"
+    /// (post-training-quantized GEMMs, tolerance parity)
+    pub serve_quant: String,
 }
 
 impl ExperimentConfig {
@@ -184,6 +197,29 @@ impl ExperimentConfig {
     /// tier this CPU cannot run.
     pub fn resolved_simd(&self) -> Result<crate::util::simd::Tier> {
         crate::util::simd::resolve(&self.simd)
+    }
+
+    /// Resolved serving shard count (0 = auto, like `threads`).
+    pub fn resolved_serve_threads(&self) -> usize {
+        if self.serve_threads == 0 {
+            crate::coordinator::parallel::default_threads()
+        } else {
+            self.serve_threads
+        }
+    }
+
+    /// The dynamic-batcher configuration from the `serve_*` knob family.
+    pub fn serve_config(&self) -> crate::serving::ServeConfig {
+        let mut sc = crate::serving::ServeConfig::for_shards(self.resolved_serve_threads());
+        sc.max_batch = self.serve_max_batch;
+        sc.max_delay = std::time::Duration::from_micros(self.serve_max_delay_us);
+        sc.queue_slots = (sc.shards * self.serve_max_batch * 2).max(self.serve_max_batch);
+        sc
+    }
+
+    /// Serving numeric tier from the `serve_quant` knob.
+    pub fn serve_tier(&self) -> Result<crate::serving::ServeTier> {
+        crate::serving::ServeTier::from_knob(&self.serve_quant)
     }
 
     /// Instantiate the selected dataset source.
@@ -380,6 +416,10 @@ impl ExperimentConfig {
             "val_examples" => self.val_examples = p(key, value)?,
             "artifacts_root" => self.artifacts_root = value.trim().to_string(),
             "imagenet_style" => self.imagenet_style = p(key, value)?,
+            "serve_threads" => self.serve_threads = p(key, value)?,
+            "serve_max_batch" => self.serve_max_batch = p(key, value)?,
+            "serve_max_delay_us" => self.serve_max_delay_us = p(key, value)?,
+            "serve_quant" => self.serve_quant = value.trim().to_string(),
             other => {
                 return Err(Error::config(format!("unknown config key '{other}'")))
             }
@@ -502,6 +542,10 @@ impl ExperimentConfig {
                 )));
             }
         }
+        if self.serve_max_batch == 0 {
+            return Err(Error::config("serve_max_batch must be >= 1"));
+        }
+        crate::serving::ServeTier::from_knob(&self.serve_quant)?;
         Ok(())
     }
 }

@@ -62,6 +62,10 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         avg_min_improve: 0.0,
         val_examples: 0,
         imagenet_style: false,
+        serve_threads: 0,
+        serve_max_batch: 8,
+        serve_max_delay_us: 2000,
+        serve_quant: "f32".to_string(),
     };
     let cfg = match name {
         // fast unit/integration testing target (B=8 artifacts)

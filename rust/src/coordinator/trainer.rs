@@ -84,6 +84,35 @@ impl<'a> TrainEnv<'a> {
         clock: &mut ClusterClock,
         max_batches: usize,
     ) -> Result<BatchStats> {
+        self.eval_impl(ds, params, bn, clock, max_batches, true)
+    }
+
+    /// [`TrainEnv::evaluate_on`] for callers that only want accuracy: the
+    /// backend may skip the cross-entropy/loss tail
+    /// ([`Backend::eval_batch_top1`]), so the returned `sum_loss` is not
+    /// meaningful. Accuracy counts are contractually identical to
+    /// `evaluate_on`'s.
+    pub fn evaluate_acc_on(
+        &self,
+        ds: &Dataset,
+        params: &ParamSet,
+        bn: &BnState,
+        clock: &mut ClusterClock,
+        max_batches: usize,
+    ) -> Result<BatchStats> {
+        self.eval_impl(ds, params, bn, clock, max_batches, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn eval_impl(
+        &self,
+        ds: &Dataset,
+        params: &ParamSet,
+        bn: &BnState,
+        clock: &mut ClusterClock,
+        max_batches: usize,
+        with_loss: bool,
+    ) -> Result<BatchStats> {
         let b = self.exec_batch;
         let batcher = Batcher::new(b, self.image_size(), AugmentSpec::none());
         // sequential_batches yields the ragged final batch, so a full pass
@@ -103,7 +132,11 @@ impl<'a> TrainEnv<'a> {
         };
         let mut total = BatchStats::default();
         prefetch::run_pipeline(steps, slots, overlap, produce, |_, hb: &mut HostBatch| {
-            let stats = self.engine.eval_batch(params.as_slice(), bn.as_slice(), hb)?;
+            let stats = if with_loss {
+                self.engine.eval_batch(params.as_slice(), bn.as_slice(), hb)?
+            } else {
+                self.engine.eval_batch_top1(params.as_slice(), bn.as_slice(), hb)?
+            };
             total.accumulate(&stats);
             clock.note_eval(self.cost.eval_step_time(hb.batch));
             Ok(true)
@@ -178,7 +211,8 @@ impl<'a> TrainEnv<'a> {
     ) -> Result<Option<f64>> {
         let Some(val) = self.val else { return Ok(None) };
         let bn = self.recompute_bn(params, seed, clock, false)?;
-        let stats = self.evaluate_on(val, params, &bn, clock, usize::MAX)?;
+        // accuracy-only: the loss tail is skipped on backends that can
+        let stats = self.evaluate_acc_on(val, params, &bn, clock, usize::MAX)?;
         Ok(Some(stats.accuracy1()))
     }
 

@@ -31,6 +31,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod tensor;
 pub mod testutil;

@@ -10,6 +10,22 @@ use swap::coordinator::{
 };
 use swap::experiments::{figures, tables, Lab};
 use swap::landscape::GridSpec;
+use swap::serving::{percentile, ServeModel, Server};
+
+/// Persist the averaged model + recomputed BN stats as a servable
+/// checkpoint bundle (`serve-model --model` loads it back).
+fn save_servable(
+    out: &str,
+    manifest: &swap::runtime::Manifest,
+    params: &swap::model::ParamSet,
+    bn: &swap::model::BnState,
+) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    let path = std::path::Path::new(out).join("model.ckpt");
+    swap::model::save_model(&path, manifest, params, bn)?;
+    println!("saved servable model: {}", path.display());
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +57,9 @@ fn main() -> Result<()> {
                 "modeled time: phase1 {:.2}s, total {:.2}s (compute {:.2}s, comm {:.2}s); wall {:.1}s",
                 r.phase1_seconds, r.clock.seconds, r.clock.compute, r.clock.comm, r.wall_seconds
             );
+            if let Some(out) = args.get("out") {
+                save_servable(out, lab.engine.manifest(), &r.final_params, &r.final_bn)?;
+            }
         }
         "sb" | "lb" => {
             let lab = Lab::new(cfg)?;
@@ -161,6 +180,7 @@ fn main() -> Result<()> {
                 r.clock.seconds,
                 r.wall_seconds
             );
+            save_servable(&out, lab.engine.manifest(), &r.final_params, &r.final_bn)?;
         }
         "serve" => {
             // coordinator for multi-process SWAP: phase 1 runs here, phase
@@ -228,6 +248,68 @@ fn main() -> Result<()> {
             println!(
                 "joined {addr} as worker {}: {} steps | sent {} B, received {} B",
                 s.worker, s.steps, s.bytes_sent, s.bytes_received
+            );
+        }
+        "serve-model" => {
+            // batched inference on a saved averaged-model checkpoint:
+            // requests from concurrent clients coalesce through the
+            // dynamic batcher onto serve_threads shard engines
+            let model_path = args
+                .get("model")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("runs/{}/model.ckpt", cfg.preset));
+            swap::util::simd::set_active(&cfg.simd)?;
+            let tier = cfg.serve_tier()?;
+            let model =
+                std::sync::Arc::new(ServeModel::load(cfg.native_spec(), &model_path, tier)?);
+            let (_, test) = cfg.data_source()?.load()?;
+            let server = Server::start(model, cfg.serve_config())?;
+            let pix = test.image_size * test.image_size * 3;
+            let clients = (server.config().shards * server.config().max_batch).clamp(1, test.n);
+            let correct = std::sync::atomic::AtomicUsize::new(0);
+            let t0 = std::time::Instant::now();
+            let mut lats: Vec<f64> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let (server, test, correct) = (&server, &test, &correct);
+                        s.spawn(move || {
+                            let mut lat = Vec::new();
+                            let mut i = c;
+                            while i < test.n {
+                                let img = &test.images[i * pix..(i + 1) * pix];
+                                let q0 = std::time::Instant::now();
+                                let top1 = server.classify(img).expect("serve request failed");
+                                lat.push(q0.elapsed().as_secs_f64() * 1e3);
+                                if top1 as i32 == test.labels[i] {
+                                    correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                }
+                                i += clients;
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            lats.sort_by(f64::total_cmp);
+            let st = server.stats();
+            println!(
+                "serve-model [{}] {}: {} requests from {} clients over {} shards",
+                tier.name(),
+                model_path,
+                st.requests,
+                clients,
+                server.config().shards
+            );
+            println!(
+                "  acc {:.4} | mean batch {:.2} (max {}) | p50 {:.3} ms  p99 {:.3} ms | {:.0} req/s",
+                correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / test.n.max(1) as f64,
+                st.mean_batch(),
+                st.max_batch_seen,
+                percentile(&lats, 50.0),
+                percentile(&lats, 99.0),
+                test.n as f64 / wall.max(1e-9)
             );
         }
         "ablate-workers" | "ablate-tau" | "ablate-phase2" | "ablate-freq" | "ablate-net" => {

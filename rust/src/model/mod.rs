@@ -33,3 +33,45 @@ pub fn load_params(
     let data = checkpoint::load_flat(path, &layout)?;
     ParamSet::from_data(layout, data)
 }
+
+/// The combined layout of a *servable* model bundle: every parameter
+/// tensor followed by every BN running-statistic tensor, manifest order.
+/// One file holds everything inference needs — `swap serve-model` loads
+/// it without touching training state.
+fn model_bundle_layout(manifest: &Manifest) -> std::sync::Arc<ParamLayout> {
+    let mut specs = manifest.params.clone();
+    specs.extend(manifest.bn_stats.iter().cloned());
+    ParamLayout::from_specs(specs)
+}
+
+/// Save a servable model bundle (parameters + BN running statistics) as
+/// one checkpoint. Same validated `SWAPCKP1` container as `save_params`,
+/// atomically published.
+pub fn save_model(
+    path: impl AsRef<std::path::Path>,
+    manifest: &Manifest,
+    params: &ParamSet,
+    bn: &BnState,
+) -> Result<()> {
+    let layout = model_bundle_layout(manifest);
+    let mut data = Vec::with_capacity(layout.total());
+    data.extend_from_slice(params.data());
+    data.extend_from_slice(bn.as_slice());
+    checkpoint::save_flat(path, &layout, &data)
+}
+
+/// Load a servable model bundle saved by [`save_model`], verifying every
+/// tensor name/shape against the manifest.
+pub fn load_model(
+    path: impl AsRef<std::path::Path>,
+    manifest: &Manifest,
+) -> Result<(ParamSet, BnState)> {
+    let layout = model_bundle_layout(manifest);
+    let data = checkpoint::load_flat(path, &layout)?;
+    let p_layout = ParamLayout::of_params(manifest);
+    let bn_layout = ParamLayout::of_bn(manifest);
+    let np = p_layout.total();
+    let params = ParamSet::from_data(p_layout, data[..np].to_vec())?;
+    let bn = BnState::from_flat(FlatParams::from_data(bn_layout, data[np..].to_vec())?);
+    Ok((params, bn))
+}

@@ -75,6 +75,30 @@ pub trait Backend: Send + Sync {
         batch: &HostBatch,
     ) -> Result<BatchStats>;
 
+    /// Whether [`Backend::eval_batch_top1`] actually skips the loss tail.
+    /// Purely informational (the default delegate is always correct);
+    /// lets callers report which path accuracy-only sweeps took.
+    fn supports_logits_only(&self) -> bool {
+        false
+    }
+
+    /// Accuracy-only evaluation: identical `correct1`/`correct5`/`examples`
+    /// to [`Backend::eval_batch`], but `sum_loss` is **not** part of the
+    /// contract (backends that can skip the cross-entropy tail return
+    /// 0.0). Callers that discard loss — validation-gated averaging,
+    /// serving-style accuracy sweeps — should come through here. The
+    /// default delegates to `eval_batch`, so backends without a dedicated
+    /// logits-only path (the XLA engine's AOT executables) stay correct
+    /// unchanged.
+    fn eval_batch_top1(
+        &self,
+        params: &[f32],
+        bn_stats: &[f32],
+        batch: &HostBatch,
+    ) -> Result<BatchStats> {
+        self.eval_batch(params, bn_stats, batch)
+    }
+
     /// Phase-3 entry point: batch-norm moments (mean, biased var per conv
     /// layer) of one batch, as a flat arena in manifest `bn_stats` order.
     fn bn_moments(&self, params: &[f32], batch: &HostBatch) -> Result<Vec<f32>>;

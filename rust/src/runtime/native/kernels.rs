@@ -951,6 +951,31 @@ pub fn cross_entropy_into(
     (sum_loss, c1, c5)
 }
 
+/// Top-1/top-5 correct counts from raw logits — the accuracy half of
+/// [`cross_entropy_into`] without the softmax/loss tail (no `exp`/`ln`
+/// per logit, no gradient fill). Uses the identical rank rule
+/// (`rank = #logits strictly above the label's`), so any caller that
+/// discards loss gets bit-identical accuracy counts, cheaper.
+pub fn top_counts(logits: &[f32], labels: &[i32], b: usize, k: usize) -> (i64, i64) {
+    debug_assert_eq!(logits.len(), b * k);
+    debug_assert_eq!(labels.len(), b);
+    let (mut c1, mut c5) = (0i64, 0i64);
+    for i in 0..b {
+        let row = &logits[i * k..(i + 1) * k];
+        let y = labels[i] as usize;
+        debug_assert!(y < k);
+        let t = row[y];
+        let rank = row.iter().filter(|&&l| l > t).count();
+        if rank < 1 {
+            c1 += 1;
+        }
+        if rank < 5 {
+            c5 += 1;
+        }
+    }
+    (c1, c5)
+}
+
 /// Allocating wrapper over [`cross_entropy_into`]: returns
 /// (sum_loss, ncorrect1, ncorrect5, d(sum_loss)/dlogits).
 pub fn cross_entropy(

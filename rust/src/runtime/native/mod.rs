@@ -19,6 +19,7 @@
 pub mod gemm;
 pub mod kernels;
 pub mod model;
+pub mod qgemm;
 pub mod workspace;
 
 use std::collections::BTreeMap;
@@ -325,6 +326,87 @@ impl NativeBackend {
             examples: b as i64,
         })
     }
+
+    /// Static model dimensions.
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    /// Validate a raw (unlabeled) image buffer for a batch of `b`.
+    fn check_images(&self, images: &[f32], b: usize) -> Result<()> {
+        let im = self.dims.image_size;
+        if images.len() != b * im * im * 3 {
+            return Err(Error::shape(format!(
+                "image buffer {} != {b}x{im}x{im}x3",
+                images.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Logits-only eval forward into a caller buffer, using a caller-owned
+    /// [`Workspace`] — the serving hot path (shard workers own their
+    /// workspace so steady-state inference allocates nothing) and the
+    /// logits half of [`Backend::eval_batch`] without the
+    /// cross-entropy/loss tail. `threads` is per call: serving shards run
+    /// at 1 (the shard fan-out is the parallelism).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_logits_ws(
+        &self,
+        params: &[f32],
+        bn_stats: &[f32],
+        images: &[f32],
+        b: usize,
+        threads: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.check_images(images, b)?;
+        let p = self.param_views(params)?;
+        let bn = self.bn_views(bn_stats)?;
+        let nc = self.dims.num_classes;
+        if out.len() != b * nc {
+            return Err(Error::shape(format!("logits buffer {} != {b}x{nc}", out.len())));
+        }
+        model::forward_eval_ws(&self.dims, &p, &bn, images, b, threads.max(1), ws);
+        out.copy_from_slice(&ws.logits[..b * nc]);
+        Ok(())
+    }
+
+    /// [`NativeBackend::eval_logits_ws`] on the int8 tier: same chain,
+    /// quantized GEMMs from the pre-packed [`model::QuantModel`], pinned
+    /// to an explicit SIMD [`crate::util::simd::Tier`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_logits_quant_ws(
+        &self,
+        qm: &model::QuantModel,
+        params: &[f32],
+        bn_stats: &[f32],
+        images: &[f32],
+        b: usize,
+        threads: usize,
+        tier: crate::util::simd::Tier,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.check_images(images, b)?;
+        let p = self.param_views(params)?;
+        let bn = self.bn_views(bn_stats)?;
+        let nc = self.dims.num_classes;
+        if out.len() != b * nc {
+            return Err(Error::shape(format!("logits buffer {} != {b}x{nc}", out.len())));
+        }
+        model::forward_eval_q_ws(&self.dims, qm, &p, &bn, images, b, threads.max(1), tier, ws);
+        out.copy_from_slice(&ws.logits[..b * nc]);
+        Ok(())
+    }
+
+    /// Quantize the parameter arena into a pre-packed int8 serving model
+    /// (per-tensor symmetric scales, computed once here).
+    pub fn quantize_model(&self, params: &[f32]) -> Result<model::QuantModel> {
+        let p = self.param_views(params)?;
+        Ok(model::QuantModel::from_params(&self.dims, &p))
+    }
 }
 
 impl Backend for NativeBackend {
@@ -400,6 +482,35 @@ impl Backend for NativeBackend {
             );
             Ok(BatchStats {
                 sum_loss,
+                correct1: c1,
+                correct5: c5,
+                examples: b as i64,
+            })
+        })
+    }
+
+    fn supports_logits_only(&self) -> bool {
+        true
+    }
+
+    fn eval_batch_top1(
+        &self,
+        params: &[f32],
+        bn_stats: &[f32],
+        batch: &HostBatch,
+    ) -> Result<BatchStats> {
+        self.check_batch(batch)?;
+        let p = self.param_views(params)?;
+        let bn = self.bn_views(bn_stats)?;
+        let b = batch.batch;
+        let nc = self.dims.num_classes;
+        self.with_workspace(|ws| {
+            model::forward_eval_ws(&self.dims, &p, &bn, &batch.images, b, self.threads, ws);
+            // logits-only tail: rank counting, no softmax/loss (the exact
+            // top-k rule of cross_entropy_into, so accuracy is identical)
+            let (c1, c5) = kernels::top_counts(&ws.logits[..b * nc], &batch.labels, b, nc);
+            Ok(BatchStats {
+                sum_loss: 0.0,
                 correct1: c1,
                 correct5: c5,
                 examples: b as i64,

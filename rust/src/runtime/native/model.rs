@@ -27,7 +27,9 @@
 
 use super::gemm::{self, GemmScratch};
 use super::kernels as k;
+use super::qgemm::{self, QuantScratch, QuantTensor};
 use super::workspace::Workspace;
+use crate::util::simd::Tier;
 
 pub const HEAD_SCALE: f32 = 0.125;
 pub const NUM_CONV_LAYERS: usize = 8;
@@ -565,6 +567,186 @@ pub fn forward_eval_ws(
         threads,
         gs,
     );
+    let bias = params[25];
+    for bi in 0..b {
+        for j in 0..nc {
+            logits[bi * nc + j] = (logits[bi * nc + j] + bias[j]) * HEAD_SCALE;
+        }
+    }
+}
+
+/// The int8 serving model: every conv weight and the head linear weight
+/// quantized (per-tensor symmetric) and pre-packed into GEMM panels once
+/// at load. BN gamma/beta/moments, the head bias and every non-GEMM op
+/// (BN-eval, ReLU, pooling, residual adds) stay f32 — only the GEMMs run
+/// in the quantized domain, which is where the FLOPs are.
+pub struct QuantModel {
+    /// per conv layer: the packed `(9·cin, cout)` weight
+    pub convs: Vec<QuantTensor>,
+    /// the packed `(8c, num_classes)` head weight
+    pub head: QuantTensor,
+}
+
+impl QuantModel {
+    /// Quantize a manifest-ordered parameter view set (what
+    /// `NativeBackend::param_views` yields) for model `d`.
+    pub fn from_params(d: &Dims, params: &[&[f32]]) -> QuantModel {
+        debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+        let layers = conv_layers(d);
+        let convs = layers
+            .iter()
+            .enumerate()
+            .map(|(li, (_n, cin, cout, _s))| QuantTensor::quantize(params[3 * li], 9 * cin, *cout))
+            .collect();
+        let head = QuantTensor::quantize(params[24], 8 * d.width, d.num_classes);
+        QuantModel { convs, head }
+    }
+}
+
+/// One conv+BN+ReLU block, eval mode, int8 conv: dynamic activation
+/// quantization + pre-packed weight panels; BN/ReLU stay f32.
+#[allow(clippy::too_many_arguments)]
+fn block_fwd_eval_q(
+    li: usize,
+    layers: &Layers,
+    qm: &QuantModel,
+    params: &[&[f32]],
+    bn: &[&[f32]],
+    b: usize,
+    threads: usize,
+    tier: Tier,
+    x: &[f32],
+    out: &mut [f32],
+    u: &mut [f32],
+    v: &mut [f32],
+    scale: &mut [f32],
+    qs: &mut QuantScratch,
+) {
+    let (_, cin, cout, side) = layers[li];
+    let rows = b * side * side;
+    let n = rows * cout;
+    let us = &mut u[..n];
+    qgemm::qconv3x3_into(us, x, b, side, side, cin, &qm.convs[li], threads, tier, qs);
+    k::bn_eval_into(
+        us,
+        params[3 * li + 1],
+        params[3 * li + 2],
+        bn[2 * li],
+        bn[2 * li + 1],
+        rows,
+        cout,
+        threads,
+        &mut v[..n],
+        &mut scale[..cout],
+    );
+    k::relu_into(&v[..n], out);
+}
+
+/// [`forward_eval_ws`] on the int8 tier: the same eval chain with every
+/// GEMM replaced by its quantized counterpart, pinned to an explicit
+/// dispatch [`Tier`]. Fills `ws.logits`. Logits agree with the f32 path
+/// under the parity-tolerance contract (top-1 agreement + bounded logit
+/// error, `rust/tests/serving.rs`) — not bitwise; that is inherent to
+/// quantization. Across SIMD tiers the *quantized* path itself IS
+/// bitwise deterministic (exact i32 accumulation).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_eval_q_ws(
+    d: &Dims,
+    qm: &QuantModel,
+    params: &[&[f32]],
+    bn: &[&[f32]],
+    images: &[f32],
+    b: usize,
+    threads: usize,
+    tier: Tier,
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(params.len(), NUM_PARAM_TENSORS);
+    debug_assert_eq!(bn.len(), 2 * NUM_CONV_LAYERS);
+    ws.ensure(d, b);
+    let layers = conv_layers(d);
+    let h = d.image_size;
+    let c = d.width;
+    let nc = d.num_classes;
+    let Workspace {
+        quant: qs,
+        x1,
+        x2,
+        x3,
+        x4,
+        x5,
+        x6,
+        x7,
+        pool_idx,
+        hmax,
+        u,
+        v,
+        act,
+        r3,
+        hfeat,
+        logits,
+        scale,
+        ..
+    } = ws;
+
+    macro_rules! fwd {
+        ($li:expr, $x:expr, $out:expr) => {
+            block_fwd_eval_q(
+                $li, &layers, qm, params, bn, b, threads, tier, $x, $out, u, v, scale, qs,
+            )
+        };
+    }
+
+    let n0 = b * h * h * 3;
+    let x1n = b * h * h * c;
+    fwd!(0, &images[..n0], &mut x1[..x1n]);
+    let a1n = b * h * h * 2 * c;
+    fwd!(1, &x1[..x1n], &mut act[..a1n]);
+    let p1n = b * (h / 2) * (h / 2) * 2 * c;
+    k::maxpool2_into(
+        &act[..a1n],
+        b,
+        h,
+        h,
+        2 * c,
+        &mut x2[..p1n],
+        &mut pool_idx[0][..p1n],
+    );
+    fwd!(2, &x2[..p1n], &mut x3[..p1n]);
+    fwd!(3, &x3[..p1n], &mut x4[..p1n]);
+    add_into(&mut x4[..p1n], &x2[..p1n]);
+    let a4n = b * (h / 2) * (h / 2) * 4 * c;
+    fwd!(4, &x4[..p1n], &mut act[..a4n]);
+    let p2n = b * (h / 4) * (h / 4) * 4 * c;
+    k::maxpool2_into(
+        &act[..a4n],
+        b,
+        h / 2,
+        h / 2,
+        4 * c,
+        &mut x5[..p2n],
+        &mut pool_idx[1][..p2n],
+    );
+    let a5n = b * (h / 4) * (h / 4) * 8 * c;
+    fwd!(5, &x5[..p2n], &mut act[..a5n]);
+    let p3n = b * (h / 8) * (h / 8) * 8 * c;
+    k::maxpool2_into(
+        &act[..a5n],
+        b,
+        h / 4,
+        h / 4,
+        8 * c,
+        &mut x6[..p3n],
+        &mut pool_idx[2][..p3n],
+    );
+    fwd!(6, &x6[..p3n], &mut x7[..p3n]);
+    fwd!(7, &x7[..p3n], &mut r3[..p3n]);
+    add_into(&mut r3[..p3n], &x6[..p3n]);
+
+    let hw3 = (h / 8) * (h / 8);
+    let c8 = 8 * c;
+    k::global_maxpool_into(&r3[..p3n], b, hw3, c8, &mut hfeat[..b * c8], &mut hmax[..b * c8]);
+    qgemm::qmatmul_into(&mut logits[..b * nc], &hfeat[..b * c8], b, &qm.head, threads, tier, qs);
     let bias = params[25];
     for bi in 0..b {
         for j in 0..nc {

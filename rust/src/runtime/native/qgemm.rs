@@ -1,0 +1,681 @@
+//! int8 post-training-quantized GEMM tier — the serving speed lever.
+//!
+//! ## Scheme
+//!
+//! Per-tensor **symmetric** quantization: `scale = amax(|t|) / 127`,
+//! `q = round(v / scale)` clamped to `[-127, 127]` (never -128, so the
+//! grid is symmetric and `|q| <= 127` everywhere). Conv/linear *weights*
+//! are quantized **once at load** from the flat arena and pre-packed into
+//! GEMM panels ([`QuantTensor`]); *activations* are quantized dynamically
+//! per layer call (one amax pass + one rounding pass over the layer
+//! input, O(rows·c) against the GEMM's O(rows·9·c·cout)). The product is
+//! accumulated exactly in i32 and dequantized in one fused pass:
+//! `out_f32 = acc_i32 * (scale_a * scale_w)`. Zero always quantizes to
+//! zero, so the conv's implicit SAME padding is exact in the quantized
+//! domain too.
+//!
+//! ## Kernel structure
+//!
+//! The blocked driver reuses the f32 tier's shape exactly (`super::gemm`):
+//! `MR x NR` register tiles, `MC`/`KC` cache blocking, fused im2col A-panel
+//! packing straight from the (quantized) NHWC image, threads partitioning
+//! output rows only. Two deltas:
+//!
+//! * panels hold **i16** (values are i8-range; widening at pack time lets
+//!   the vector kernels multiply without unpack steps), laid out in
+//!   **k-pairs**: B panels interleave two consecutive k rows per column
+//!   (`[b[2p][j], b[2p+1][j]]` pairs), A panels store the even-k lane
+//!   row then the odd-k lane row per pair. Odd `k` is zero-padded.
+//! * the AVX2 kernel maps one k-pair to a single `_mm256_madd_epi16`
+//!   (multiply i16 pairs, add horizontally into i32 lanes) + one
+//!   `_mm256_add_epi32` — 2 ops per 2 k's against the f32 tier's
+//!   mul + add per k, which is where the int8 throughput win comes from.
+//!   NEON widens with `vmlal_n_s16`; the scalar kernel is a plain i32
+//!   multiply-accumulate and is always available.
+//!
+//! i32 accumulation is exact (|i8·i8| <= 16129, so any `k` up to ~133k
+//! fits i32 with full headroom — asserted), hence **every dispatch tier
+//! is bitwise identical**: scalar == AVX2 == NEON down to the final f32
+//! dequantization. int8-vs-f32 parity is a *tolerance* contract (top-1
+//! agreement + bounded logit error), pinned by `rust/tests/serving.rs`.
+//!
+//! All entry points are `*_into` over a caller-owned [`QuantScratch`]:
+//! buffers grow to the largest shape seen and steady-state calls perform
+//! zero heap allocations (pinned by `rust/tests/alloc_regression.rs`).
+
+use super::gemm::{KC, MC, MR, NR};
+use crate::coordinator::parallel;
+use crate::util::simd::Tier;
+
+/// Minimum multiply-add ops per worker before the row partition spawns
+/// another thread (wall-time knob only; results never depend on it).
+const QGEMM_MIN_WORK: usize = 1 << 18;
+
+/// Quantization scale for a tensor with absolute maximum `amax`. An
+/// all-zero tensor gets scale 1.0 (everything quantizes to 0 exactly).
+pub fn quant_scale(amax: f32) -> f32 {
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Round-to-nearest symmetric quantization of one value (clamped i8 range).
+#[inline]
+fn quant_val(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize `x` into `qx` (same length) and return the scale. One amax
+/// pass + one rounding pass; no allocation.
+pub fn quantize_into(x: &[f32], qx: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), qx.len());
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = quant_scale(amax);
+    let inv = 1.0 / scale;
+    for (q, &v) in qx.iter_mut().zip(x) {
+        *q = quant_val(v, inv);
+    }
+    scale
+}
+
+/// A weight tensor quantized once at load: per-tensor symmetric scale and
+/// the values pre-packed into `NR`-column, k-pair-interleaved i16 B
+/// panels (strip `s`, pair `p`, column `j` holds `[b[2p][j], b[2p+1][j]]`
+/// at `panels[s·kp·2NR + p·2NR + 2j .. +2]`; odd `k` zero-padded).
+pub struct QuantTensor {
+    panels: Vec<i16>,
+    /// number of k-pairs per strip: `(k + 1) / 2`
+    kp: usize,
+    /// per-tensor symmetric scale (`dequant = q * scale`)
+    pub scale: f32,
+    /// reduction length (rows of the unquantized `(k, n)` weight)
+    pub k: usize,
+    /// output columns
+    pub n: usize,
+}
+
+impl QuantTensor {
+    /// Quantize a dense row-major `(k, n)` weight and pre-pack its panels.
+    pub fn quantize(w: &[f32], k: usize, n: usize) -> QuantTensor {
+        assert_eq!(w.len(), k * n, "weight shape mismatch");
+        // headroom proof: k * 127 * 127 must fit i32 for exact accumulation
+        assert!(
+            (k as u64) * 127 * 127 <= i32::MAX as u64,
+            "k too large for exact i32 accumulation"
+        );
+        let amax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = quant_scale(amax);
+        let inv = 1.0 / scale;
+        let nstrips = (n + NR - 1) / NR;
+        let kp = (k + 1) / 2;
+        let mut panels = vec![0i16; nstrips * kp * 2 * NR];
+        for s in 0..nstrips {
+            let j0 = s * NR;
+            let nr = NR.min(n - j0);
+            let strip = &mut panels[s * kp * 2 * NR..(s + 1) * kp * 2 * NR];
+            for p in 0..k {
+                let row = &w[p * n + j0..p * n + j0 + nr];
+                let dst = &mut strip[(p / 2) * 2 * NR..(p / 2) * 2 * NR + 2 * NR];
+                for (jj, &v) in row.iter().enumerate() {
+                    dst[2 * jj + (p & 1)] = quant_val(v, inv) as i16;
+                }
+            }
+        }
+        QuantTensor { panels, kp, scale, k, n }
+    }
+
+    /// Packed panel bytes of column strip `s`.
+    fn strip(&self, s: usize) -> &[i16] {
+        &self.panels[s * self.kp * 2 * NR..(s + 1) * self.kp * 2 * NR]
+    }
+}
+
+/// Left operand of a quantized GEMM (mirrors `gemm::ASrc` over i8 data).
+#[derive(Clone, Copy)]
+pub enum QASrc<'a> {
+    /// Dense row-major `(m, lda)`; element `(i, p) = a[i * lda + p]`.
+    Rows { a: &'a [i8], lda: usize },
+    /// Virtual im2col patch matrix of a 3x3 SAME conv over quantized NHWC
+    /// `x`: `(b*h*w, 9*c)`, zero at the padding taps (exact — 0 is on the
+    /// symmetric grid).
+    Im2col { x: &'a [i8], b: usize, h: usize, w: usize, c: usize },
+}
+
+/// Per-thread packing scratch (the i16 A panels of one row chunk).
+#[derive(Default)]
+pub struct QPackBuf {
+    a: Vec<i16>,
+}
+
+/// Call-shared quantized-eval scratch owned by the engine workspace:
+/// the dynamic activation quantization buffer, the i32 accumulator arena
+/// and one [`QPackBuf`] per worker. Grow-only, reused verbatim.
+#[derive(Default)]
+pub struct QuantScratch {
+    qx: Vec<i8>,
+    acc: Vec<i32>,
+    packs: Vec<QPackBuf>,
+}
+
+/// Quantized fused 3x3 SAME conv forward:
+/// `out(b*h*w, cout) = dequant(im2col(quant(x)) @ wq)`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv3x3_into(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    wq: &QuantTensor,
+    threads: usize,
+    tier: Tier,
+    qs: &mut QuantScratch,
+) {
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(wq.k, 9 * c);
+    let (m, n) = (b * h * w, wq.n);
+    debug_assert_eq!(out.len(), m * n);
+    let QuantScratch { qx, acc, packs } = qs;
+    grow_i8(qx, x.len());
+    let sa = quantize_into(x, &mut qx[..x.len()]);
+    grow_i32(acc, m * n);
+    let a = QASrc::Im2col { x: &qx[..x.len()], b, h, w, c };
+    qgemm_into(&mut acc[..m * n], a, wq, m, threads, tier, packs);
+    dequant_into(out, &acc[..m * n], sa * wq.scale);
+}
+
+/// Quantized dense matmul (the classifier head):
+/// `out(m,n) = dequant(quant(a) @ wq)`.
+pub fn qmatmul_into(
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    wq: &QuantTensor,
+    threads: usize,
+    tier: Tier,
+    qs: &mut QuantScratch,
+) {
+    let (k, n) = (wq.k, wq.n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let QuantScratch { qx, acc, packs } = qs;
+    grow_i8(qx, a.len());
+    let sa = quantize_into(a, &mut qx[..a.len()]);
+    grow_i32(acc, m * n);
+    let src = QASrc::Rows { a: &qx[..a.len()], lda: k };
+    qgemm_into(&mut acc[..m * n], src, wq, m, threads, tier, packs);
+    dequant_into(out, &acc[..m * n], sa * wq.scale);
+}
+
+fn grow_i8(buf: &mut Vec<i8>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0);
+    }
+}
+
+fn grow_i32(buf: &mut Vec<i32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0);
+    }
+}
+
+fn dequant_into(out: &mut [f32], acc: &[i32], scale: f32) {
+    for (o, &v) in out.iter_mut().zip(acc) {
+        *o = v as f32 * scale;
+    }
+}
+
+/// The blocked quantized driver: B panels are already packed inside `wq`,
+/// so only the A side packs per call. Output rows are partitioned across
+/// workers exactly like the f32 tier; i32 accumulation is exact, so the
+/// result is identical for every `threads` and every dispatch tier.
+fn qgemm_into(
+    out: &mut [i32],
+    a: QASrc<'_>,
+    wq: &QuantTensor,
+    m: usize,
+    threads: usize,
+    tier: Tier,
+    packs: &mut Vec<QPackBuf>,
+) {
+    let (k, n) = (wq.k, wq.n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0);
+        return;
+    }
+    let workers = parallel::gate_per_chunk(threads, m * k * n, QGEMM_MIN_WORK);
+    if packs.len() < workers.max(1) {
+        packs.resize_with(workers.max(1), QPackBuf::default);
+    }
+    parallel::parallel_row_chunks_scratch(workers, out, n, MR, packs, |row0, chunk, pack| {
+        qgemm_chunk(a, wq, row0, n, tier, chunk, pack)
+    });
+}
+
+/// One worker's share: rows `[row0, row0 + chunk.len()/n)` of the output,
+/// swept in k-pair blocks of `KC/2` pairs and row blocks of `MC`.
+fn qgemm_chunk(
+    a: QASrc<'_>,
+    wq: &QuantTensor,
+    row0: usize,
+    n: usize,
+    tier: Tier,
+    chunk: &mut [i32],
+    pack: &mut QPackBuf,
+) {
+    let rows = chunk.len() / n;
+    let nstrips = (n + NR - 1) / NR;
+    let kp_block = KC / 2;
+    let mut pp = 0;
+    while pp < wq.kp {
+        let kpc = kp_block.min(wq.kp - pp);
+        let mut ic = 0;
+        while ic < rows {
+            let mc = MC.min(rows - ic);
+            pack_a_q(a, wq.k, row0 + ic, mc, pp, kpc, &mut pack.a);
+            let groups = (mc + MR - 1) / MR;
+            for g in 0..groups {
+                let ir = g * MR;
+                let mr = MR.min(mc - ir);
+                let apanel = &pack.a[g * kpc * 2 * MR..(g + 1) * kpc * 2 * MR];
+                for s in 0..nstrips {
+                    let j0 = s * NR;
+                    let nr = NR.min(n - j0);
+                    let strip = wq.strip(s);
+                    let bpanel = &strip[pp * 2 * NR..(pp + kpc) * 2 * NR];
+                    let (crow, first) = (ic + ir, pp == 0);
+                    match tier {
+                        // SAFETY: the avx2 arm only becomes active after
+                        // runtime feature detection, and nr == NR keeps the
+                        // full-width loads/stores in bounds.
+                        #[cfg(target_arch = "x86_64")]
+                        Tier::Avx2 if nr == NR => unsafe {
+                            qmicro_avx2(kpc, apanel, bpanel, chunk, crow, j0, n, mr, first)
+                        },
+                        // SAFETY: same contract, gated on runtime neon
+                        // detection.
+                        #[cfg(target_arch = "aarch64")]
+                        Tier::Neon if nr == NR => unsafe {
+                            qmicro_neon(kpc, apanel, bpanel, chunk, crow, j0, n, mr, first)
+                        },
+                        _ => qmicro_scalar(kpc, apanel, bpanel, chunk, crow, j0, n, mr, nr, first),
+                    }
+                }
+            }
+            ic += mc;
+        }
+        pp += kpc;
+    }
+}
+
+/// Pack rows `[row0, row0+mc)` x k-pairs `[pp, pp+kpc)` of the left
+/// operand into `MR`-row groups: per pair, the even-k lane row then the
+/// odd-k lane row (`buf[g][p·2MR + i]` / `buf[g][p·2MR + MR + i]`),
+/// zero-padding ragged groups and the odd-`k` tail.
+fn pack_a_q(
+    a: QASrc<'_>,
+    k: usize,
+    row0: usize,
+    mc: usize,
+    pp: usize,
+    kpc: usize,
+    buf: &mut Vec<i16>,
+) {
+    let groups = (mc + MR - 1) / MR;
+    buf.clear();
+    buf.resize(groups * kpc * 2 * MR, 0);
+    // the contiguous column window [c0, c1) covered by pairs [pp, pp+kpc)
+    let c0 = 2 * pp;
+    let c1 = (2 * (pp + kpc)).min(k);
+    match a {
+        QASrc::Rows { a, lda } => {
+            for g in 0..groups {
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kpc * 2 * MR..(g + 1) * kpc * 2 * MR];
+                for il in 0..mr {
+                    let row = row0 + g * MR + il;
+                    let src = &a[row * lda + c0..row * lda + c1];
+                    for (q, &v) in src.iter().enumerate() {
+                        let p = c0 + q;
+                        dst[(p / 2 - pp) * 2 * MR + (p & 1) * MR + il] = v as i16;
+                    }
+                }
+            }
+        }
+        QASrc::Im2col { x, b: _, h, w, c } => {
+            for g in 0..groups {
+                let mr = MR.min(mc - g * MR);
+                let dst = &mut buf[g * kpc * 2 * MR..(g + 1) * kpc * 2 * MR];
+                for il in 0..mr {
+                    let r = row0 + g * MR + il;
+                    let bi = r / (h * w);
+                    let rem = r % (h * w);
+                    let y = rem / w;
+                    let xx = rem % w;
+                    // walk the (dy, dx, ci) taps overlapping [c0, c1)
+                    let mut p = c0;
+                    while p < c1 {
+                        let tap = p / c;
+                        let ci0 = p % c;
+                        let take = (c - ci0).min(c1 - p);
+                        let (dy, dxo) = (tap / 3, tap % 3);
+                        let iy = y + dy;
+                        let ix = xx + dxo;
+                        if iy >= 1 && iy <= h && ix >= 1 && ix <= w {
+                            let src = ((bi * h + iy - 1) * w + ix - 1) * c + ci0;
+                            for q in 0..take {
+                                let col = p + q;
+                                dst[(col / 2 - pp) * 2 * MR + (col & 1) * MR + il] =
+                                    x[src + q] as i16;
+                            }
+                        }
+                        p += take;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The scalar quantized micro-kernel — always available and the reference
+/// the vector tiers must match bitwise (i32 accumulation is exact, so
+/// they do, by arithmetic not by ordering discipline).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn qmicro_scalar(
+    kpc: usize,
+    apanel: &[i16],
+    bpanel: &[i16],
+    chunk: &mut [i32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    nr: usize,
+    first: bool,
+) {
+    let mut acc = [[0i32; NR]; MR];
+    if !first {
+        for (i, arow) in acc.iter_mut().enumerate().take(mr) {
+            let base = (crow + i) * n + j0;
+            arow[..nr].copy_from_slice(&chunk[base..base + nr]);
+        }
+    }
+    for p in 0..kpc {
+        let ae = &apanel[p * 2 * MR..p * 2 * MR + MR];
+        let ao = &apanel[p * 2 * MR + MR..p * 2 * MR + 2 * MR];
+        let bv = &bpanel[p * 2 * NR..(p + 1) * 2 * NR];
+        for (i, arow) in acc.iter_mut().enumerate() {
+            let (a0, a1) = (ae[i] as i32, ao[i] as i32);
+            for (j, cell) in arow.iter_mut().enumerate() {
+                *cell += a0 * bv[2 * j] as i32 + a1 * bv[2 * j + 1] as i32;
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let base = (crow + i) * n + j0;
+        chunk[base..base + nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// AVX2 quantized micro-kernel for full-width strips: one k-pair is one
+/// `_mm256_madd_epi16` — each 32-bit lane multiplies the (even, odd) a
+/// pair against column `j`'s interleaved `(b_even[j], b_odd[j])` and sums
+/// into i32 — plus one `_mm256_add_epi32` into the accumulator row. This
+/// is the int8 throughput lever: ~1 multiply op per 2 k's vs the f32
+/// tier's mul + add per k. Exact i32 arithmetic ⇒ bitwise identical to
+/// [`qmicro_scalar`].
+///
+/// # Safety
+///
+/// Requires AVX2 (dispatch is gated on runtime detection), panels of at
+/// least `kpc·2MR` / `kpc·2NR` elements, and `nr == NR` so rows
+/// `crow..crow+mr` of `chunk` hold `NR` in-bounds columns at `j0`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn qmicro_avx2(
+    kpc: usize,
+    apanel: &[i16],
+    bpanel: &[i16],
+    chunk: &mut [i32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    first: bool,
+) {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16, _mm256_set1_epi32,
+        _mm256_setzero_si256, _mm256_storeu_si256,
+    };
+    debug_assert!(apanel.len() >= kpc * 2 * MR);
+    debug_assert!(bpanel.len() >= kpc * 2 * NR);
+    debug_assert!(mr >= 1 && (crow + mr - 1) * n + j0 + NR <= chunk.len());
+    let mut acc = [_mm256_setzero_si256(); MR];
+    if !first {
+        for (i, row) in acc.iter_mut().enumerate().take(mr) {
+            *row = _mm256_loadu_si256(chunk.as_ptr().add((crow + i) * n + j0) as *const __m256i);
+        }
+    }
+    let ap = apanel.as_ptr();
+    for p in 0..kpc {
+        let bv = _mm256_loadu_si256(bpanel.as_ptr().add(p * 2 * NR) as *const __m256i);
+        let ae = ap.add(p * 2 * MR);
+        let ao = ae.add(MR);
+        for (i, row) in acc.iter_mut().enumerate() {
+            // pack (a_even, a_odd) into one i32 lane value, broadcast: the
+            // i16 halves line up with the interleaved b pairs
+            let pair = (*ae.add(i) as u16 as u32) | ((*ao.add(i) as u16 as u32) << 16);
+            let av = _mm256_set1_epi32(pair as i32);
+            *row = _mm256_add_epi32(*row, _mm256_madd_epi16(av, bv));
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        _mm256_storeu_si256(chunk.as_mut_ptr().add((crow + i) * n + j0) as *mut __m256i, *row);
+    }
+}
+
+/// NEON quantized micro-kernel for full-width strips: `vld2q_s16`
+/// deinterleaves one k-pair's B row into even/odd column vectors and
+/// `vmlal_n_s16` widens i16·i16 into the i32 accumulators. Exact i32
+/// arithmetic ⇒ bitwise identical to [`qmicro_scalar`].
+///
+/// # Safety
+///
+/// Requires NEON (dispatch is gated on runtime detection), panels of at
+/// least `kpc·2MR` / `kpc·2NR` elements, and `nr == NR` so rows
+/// `crow..crow+mr` of `chunk` hold `NR` in-bounds columns at `j0`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn qmicro_neon(
+    kpc: usize,
+    apanel: &[i16],
+    bpanel: &[i16],
+    chunk: &mut [i32],
+    crow: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    first: bool,
+) {
+    use std::arch::aarch64::{
+        vdupq_n_s32, vget_high_s16, vget_low_s16, vld1q_s32, vld2q_s16, vmlal_n_s16, vst1q_s32,
+    };
+    debug_assert!(apanel.len() >= kpc * 2 * MR);
+    debug_assert!(bpanel.len() >= kpc * 2 * NR);
+    debug_assert!(mr >= 1 && (crow + mr - 1) * n + j0 + NR <= chunk.len());
+    let mut lo = [vdupq_n_s32(0); MR];
+    let mut hi = [vdupq_n_s32(0); MR];
+    if !first {
+        for (i, (rl, rh)) in lo.iter_mut().zip(hi.iter_mut()).enumerate().take(mr) {
+            let base = chunk.as_ptr().add((crow + i) * n + j0);
+            *rl = vld1q_s32(base);
+            *rh = vld1q_s32(base.add(4));
+        }
+    }
+    let ap = apanel.as_ptr();
+    for p in 0..kpc {
+        // .0 = even-k row b[2p][0..8], .1 = odd-k row b[2p+1][0..8]
+        let b2 = vld2q_s16(bpanel.as_ptr().add(p * 2 * NR));
+        let ae = ap.add(p * 2 * MR);
+        let ao = ae.add(MR);
+        for (i, (rl, rh)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+            let (a0, a1) = (*ae.add(i), *ao.add(i));
+            *rl = vmlal_n_s16(*rl, vget_low_s16(b2.0), a0);
+            *rl = vmlal_n_s16(*rl, vget_low_s16(b2.1), a1);
+            *rh = vmlal_n_s16(*rh, vget_high_s16(b2.0), a0);
+            *rh = vmlal_n_s16(*rh, vget_high_s16(b2.1), a1);
+        }
+    }
+    for (i, (rl, rh)) in lo.iter().zip(hi.iter()).enumerate().take(mr) {
+        let base = chunk.as_mut_ptr().add((crow + i) * n + j0);
+        vst1q_s32(base, *rl);
+        vst1q_s32(base.add(4), *rh);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simd;
+
+    fn wave(n: usize, f: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * f + 0.3).sin() * 1.1).collect()
+    }
+
+    /// Naive quantized reference: quantize both operands the same way the
+    /// production path does, accumulate in i32, dequantize.
+    fn naive_q(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut qa = vec![0i8; m * k];
+        let sa = quantize_into(a, &mut qa);
+        let mut qw = vec![0i8; k * n];
+        let sw = quantize_into(w, &mut qw);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for p in 0..k {
+                    acc += qa[i * k + p] as i32 * qw[p * n + j] as i32;
+                }
+                out[i * n + j] = acc as f32 * (sa * sw);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn quantize_round_trip_error_is_bounded() {
+        let x = wave(257, 0.7);
+        let mut q = vec![0i8; x.len()];
+        let s = quantize_into(&x, &mut q);
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (&v, &qv) in x.iter().zip(&q) {
+            assert!((v - qv as f32 * s).abs() <= s * 0.5 + 1e-7, "err > half step at {v}");
+        }
+        assert!((s - amax / 127.0).abs() < 1e-7);
+        // zero is exact on the symmetric grid
+        let mut q0 = [0i8; 1];
+        quantize_into(&[0.0], &mut q0);
+        assert_eq!(q0[0], 0);
+    }
+
+    #[test]
+    fn qmatmul_matches_naive_quantized_on_every_tier() {
+        // shapes crossing the KC boundary, odd k (pair padding) and both
+        // ragged tile edges
+        for &(m, k, n) in &[(5usize, 301usize, 8usize), (16, 257, 24), (33, 64, 13), (1, 9, 10)] {
+            let a = wave(m * k, 0.41);
+            let w = wave(k * n, 0.59);
+            let want = naive_q(&a, &w, m, k, n);
+            let wq = QuantTensor::quantize(&w, k, n);
+            let mut scalar = vec![f32::NAN; m * n];
+            let mut qs = QuantScratch::default();
+            qmatmul_into(&mut scalar, &a, m, &wq, 1, Tier::Scalar, &mut qs);
+            assert_eq!(scalar, want, "scalar vs naive m={m} k={k} n={n}");
+            for tier in simd::tiers_available() {
+                for threads in [1, 3] {
+                    let mut out = vec![f32::NAN; m * n];
+                    qmatmul_into(&mut out, &a, m, &wq, threads, tier, &mut qs);
+                    for (i, (g, s)) in out.iter().zip(&scalar).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            s.to_bits(),
+                            "tier {tier:?} t{threads} [{i}] m={m} k={k} n={n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qconv_matches_quantized_patches() {
+        let (b, h, w, c, cout) = (2usize, 5usize, 4usize, 3usize, 6usize);
+        let x = wave(b * h * w * c, 0.77);
+        let wts = wave(9 * c * cout, 0.31);
+        // reference: materialized quantized patch matrix (padding taps are
+        // zero, which quantizes to zero exactly)
+        let mut qx = vec![0i8; x.len()];
+        let sa = quantize_into(&x, &mut qx);
+        let patches_f = super::super::kernels::im2col(&x, b, h, w, c, 1);
+        let mut qpatches = vec![0i8; patches_f.len()];
+        let inv = 1.0 / sa;
+        for (q, &v) in qpatches.iter_mut().zip(&patches_f) {
+            *q = quant_val(v, inv);
+        }
+        let mut qw = vec![0i8; wts.len()];
+        let sw = quantize_into(&wts, &mut qw);
+        let (m, k, n) = (b * h * w, 9 * c, cout);
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for p in 0..k {
+                    acc += qpatches[i * k + p] as i32 * qw[p * n + j] as i32;
+                }
+                want[i * n + j] = acc as f32 * (sa * sw);
+            }
+        }
+        let wq = QuantTensor::quantize(&wts, k, n);
+        for tier in simd::tiers_available() {
+            let mut out = vec![f32::NAN; m * n];
+            let mut qs = QuantScratch::default();
+            qconv3x3_into(&mut out, &x, b, h, w, c, &wq, 2, tier, &mut qs);
+            assert_eq!(out, want, "fused qconv vs quantized patches ({tier:?})");
+        }
+    }
+
+    #[test]
+    fn quantized_error_is_small_relative_to_f32() {
+        let (m, k, n) = (12usize, 72usize, 16usize);
+        let a = wave(m * k, 0.37);
+        let w = wave(k * n, 0.73);
+        let mut exact = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] as f64 * w[p * n + j] as f64;
+                }
+                exact[i * n + j] = acc as f32;
+            }
+        }
+        let wq = QuantTensor::quantize(&w, k, n);
+        let mut out = vec![0.0f32; m * n];
+        let mut qs = QuantScratch::default();
+        qmatmul_into(&mut out, &a, m, &wq, 1, Tier::Scalar, &mut qs);
+        let amax = exact.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+        for (g, e) in out.iter().zip(&exact) {
+            assert!((g - e).abs() <= 0.02 * amax + 1e-3, "quant err too large: {g} vs {e}");
+        }
+    }
+}

@@ -17,12 +17,17 @@
 
 use super::gemm::GemmScratch;
 use super::model::{conv_layers, Dims, NUM_CONV_LAYERS};
+use super::qgemm::QuantScratch;
 
 /// All mutable state of one native forward/backward invocation.
 #[derive(Default)]
 pub struct Workspace {
     /// packed GEMM panels: shared B panel + per-worker A packing buffers
     pub gemm: GemmScratch,
+    /// int8 eval-tier scratch (activation quantization buffer, i32
+    /// accumulators, i16 A panels); grows lazily inside the quantized
+    /// entry points, so f32-only callers never pay for it
+    pub quant: QuantScratch,
 
     // -- saved conv-input activations (x0 = a copy of the images) -------
     pub x0: Vec<f32>,

@@ -1,0 +1,208 @@
+//! The dynamic batcher: a fixed slot arena for in-flight requests and a
+//! bounded pending queue that coalesces singles into GEMM-friendly
+//! batches.
+//!
+//! Everything is preallocated at server start: `queue_slots` request
+//! slots (each with its image/logits buffers, mutex and condvar) plus a
+//! capacity-reserved `VecDeque`/free-list of slot indices. Steady-state
+//! operation is pure index shuffling under short mutexes — **zero heap
+//! allocations** (there are deliberately no channels here: `std::sync::mpsc`
+//! allocates per send).
+//!
+//! Flow: a client acquires a free slot (blocking while the arena is
+//! full — natural backpressure), writes its image, submits the index and
+//! waits on the slot's condvar. A shard worker pops the first pending
+//! index, then keeps popping until either `max_batch` is reached or
+//! `max_delay` has elapsed since the batch opened (`Condvar::wait_timeout`
+//! on the queue), runs the batch, writes logits back and signals each
+//! slot. Latency is bounded by construction: a request waits at most
+//! `max_delay` for co-batching plus one inference.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One in-flight request's state: staging buffers + completion flag.
+pub(crate) struct SlotState {
+    pub image: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub top1: usize,
+    pub done: bool,
+    /// the worker failed this request (logits are zeroed)
+    pub failed: bool,
+}
+
+/// A request slot: state under its own mutex + a completion condvar, so
+/// completing one request never wakes unrelated waiters.
+pub(crate) struct Slot {
+    pub m: Mutex<SlotState>,
+    pub cv: Condvar,
+}
+
+impl Slot {
+    pub fn new(image_len: usize, num_classes: usize) -> Slot {
+        Slot {
+            m: Mutex::new(SlotState {
+                image: vec![0.0; image_len],
+                logits: vec![0.0; num_classes],
+                top1: 0,
+                done: false,
+                failed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+struct QState {
+    pending: VecDeque<u32>,
+    free: Vec<u32>,
+    shutdown: bool,
+}
+
+/// The shared pending/free bookkeeping of the slot arena.
+pub(crate) struct BatchQueue {
+    m: Mutex<QState>,
+    /// new pending work (or shutdown) — workers wait here
+    cv_work: Condvar,
+    /// a slot returned to the free list — blocked clients wait here
+    cv_free: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new(slots: usize) -> BatchQueue {
+        BatchQueue {
+            m: Mutex::new(QState {
+                pending: VecDeque::with_capacity(slots),
+                free: (0..slots as u32).rev().collect(),
+                shutdown: false,
+            }),
+            cv_work: Condvar::new(),
+            cv_free: Condvar::new(),
+        }
+    }
+
+    /// Claim a free slot, blocking while the arena is saturated
+    /// (backpressure). `None` once the server is shutting down.
+    pub fn acquire_free(&self) -> Option<u32> {
+        let mut st = self.m.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if let Some(idx) = st.free.pop() {
+                return Some(idx);
+            }
+            st = self.cv_free.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue a filled slot for batching and wake one worker.
+    pub fn submit(&self, idx: u32) {
+        let mut st = self.m.lock().unwrap();
+        st.pending.push_back(idx);
+        drop(st);
+        self.cv_work.notify_one();
+    }
+
+    /// Return a completed slot to the free list.
+    pub fn release(&self, idx: u32) {
+        let mut st = self.m.lock().unwrap();
+        st.free.push(idx);
+        drop(st);
+        self.cv_free.notify_one();
+    }
+
+    /// Collect the next batch into `out` (cleared first): block for the
+    /// first request, then coalesce up to `max_batch` pending requests,
+    /// waiting at most `max_delay` past the batch opening for stragglers.
+    /// Returns `false` when the server is shut down and the queue fully
+    /// drained (workers exit then — in-flight requests still complete).
+    pub fn next_batch(&self, out: &mut Vec<u32>, max_batch: usize, max_delay: Duration) -> bool {
+        out.clear();
+        let mut st = self.m.lock().unwrap();
+        loop {
+            if let Some(idx) = st.pending.pop_front() {
+                out.push(idx);
+                break;
+            }
+            if st.shutdown {
+                return false;
+            }
+            st = self.cv_work.wait(st).unwrap();
+        }
+        let deadline = Instant::now() + max_delay;
+        while out.len() < max_batch {
+            if let Some(idx) = st.pending.pop_front() {
+                out.push(idx);
+                continue;
+            }
+            if st.shutdown {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.cv_work.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
+    }
+
+    /// Flip the shutdown flag and wake everyone (blocked clients error
+    /// out, workers drain and exit).
+    pub fn shutdown(&self) {
+        let mut st = self.m.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.cv_work.notify_all();
+        self.cv_free.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let q = BatchQueue::new(8);
+        for _ in 0..5 {
+            let idx = q.acquire_free().unwrap();
+            q.submit(idx);
+        }
+        let mut batch = Vec::with_capacity(4);
+        assert!(q.next_batch(&mut batch, 4, Duration::from_millis(1)));
+        assert_eq!(batch.len(), 4);
+        assert!(q.next_batch(&mut batch, 4, Duration::from_millis(1)));
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn shutdown_unblocks_everyone() {
+        let q = BatchQueue::new(1);
+        let a = q.acquire_free().unwrap();
+        q.shutdown();
+        // saturated arena + shutdown: a new client gets None, not a hang
+        assert_eq!(q.acquire_free(), None);
+        // a worker with no pending work exits
+        let mut batch = Vec::new();
+        assert!(!q.next_batch(&mut batch, 4, Duration::from_millis(1)));
+        // but in-flight work still drains
+        q.submit(a);
+        assert!(q.next_batch(&mut batch, 4, Duration::from_millis(1)));
+        assert_eq!(batch, vec![a]);
+        assert!(!q.next_batch(&mut batch, 4, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn release_recycles_slots() {
+        let q = BatchQueue::new(2);
+        let a = q.acquire_free().unwrap();
+        let b = q.acquire_free().unwrap();
+        assert_ne!(a, b);
+        q.release(a);
+        assert_eq!(q.acquire_free(), Some(a));
+    }
+}

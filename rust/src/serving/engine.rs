@@ -1,0 +1,218 @@
+//! The inference engine side of serving: the loaded (and optionally
+//! quantized) model, and the per-shard execution state.
+
+use crate::model::{BnState, ParamSet};
+use crate::runtime::native::model::QuantModel;
+use crate::runtime::native::workspace::Workspace;
+use crate::runtime::native::{NativeBackend, NativeSpec};
+use crate::runtime::Backend;
+use crate::util::{simd, Error, Result};
+
+/// Which numeric tier a server runs inference on (the `serve_quant` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeTier {
+    /// The bitwise-deterministic f32 eval path (`forward_eval_ws`).
+    F32,
+    /// int8 post-training-quantized GEMMs (`forward_eval_q_ws`): faster,
+    /// f32 parity under a tolerance contract (top-1 + logit error), and
+    /// itself bitwise deterministic across SIMD tiers.
+    Int8,
+}
+
+impl ServeTier {
+    pub fn from_knob(knob: &str) -> Result<ServeTier> {
+        match knob {
+            "f32" => Ok(ServeTier::F32),
+            "int8" => Ok(ServeTier::Int8),
+            other => Err(Error::config(format!(
+                "serve_quant must be one of f32|int8, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeTier::F32 => "f32",
+            ServeTier::Int8 => "int8",
+        }
+    }
+}
+
+/// A deployable model: the native engine, the averaged parameters, the BN
+/// running statistics, and (on the int8 tier) the pre-packed quantized
+/// weights — everything computed once at load, shared read-only by all
+/// shard workers.
+pub struct ServeModel {
+    pub engine: NativeBackend,
+    pub params: ParamSet,
+    pub bn: BnState,
+    pub tier: ServeTier,
+    /// present iff `tier == Int8` (per-tensor scales + packed i16 panels)
+    pub quant: Option<QuantModel>,
+}
+
+impl ServeModel {
+    /// Assemble from in-memory state, validating both arenas against the
+    /// engine layout and quantizing the weights if the tier asks for it.
+    pub fn new(
+        engine: NativeBackend,
+        params: ParamSet,
+        bn: BnState,
+        tier: ServeTier,
+    ) -> Result<ServeModel> {
+        let m = engine.manifest();
+        if params.data().len() != m.num_params {
+            return Err(Error::shape(format!(
+                "serve model: param arena {} != manifest {}",
+                params.data().len(),
+                m.num_params
+            )));
+        }
+        let quant = match tier {
+            ServeTier::F32 => None,
+            ServeTier::Int8 => Some(engine.quantize_model(params.as_slice())?),
+        };
+        // fail fast on a bn arena the eval path would reject per request
+        let probe = vec![0.0f32; engine.dims().image_size.pow(2) * 3];
+        let mut ws = Workspace::new();
+        let mut logits = vec![0.0f32; engine.dims().num_classes];
+        let (p, b) = (params.as_slice(), bn.as_slice());
+        engine.eval_logits_ws(p, b, &probe, 1, 1, &mut ws, &mut logits)?;
+        Ok(ServeModel { engine, params, bn, tier, quant })
+    }
+
+    /// Load a servable checkpoint bundle (`model::save_model`) for the
+    /// given spec and tier.
+    pub fn load(
+        spec: NativeSpec,
+        path: impl AsRef<std::path::Path>,
+        tier: ServeTier,
+    ) -> Result<ServeModel> {
+        let engine = NativeBackend::new(spec)?;
+        let (params, bn) = crate::model::load_model(path, engine.manifest())?;
+        ServeModel::new(engine, params, bn, tier)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.engine.dims().num_classes
+    }
+
+    /// f32 count of one NHWC request image.
+    pub fn image_len(&self) -> usize {
+        let im = self.engine.dims().image_size;
+        im * im * 3
+    }
+}
+
+/// One shard worker's execution state: a dedicated grow-only [`Workspace`]
+/// plus fixed batch staging buffers. Nothing here is shared — each worker
+/// thread owns its `ShardEngine` outright, so inference never contends on
+/// the engine's workspace pool and steady-state calls allocate nothing.
+pub struct ShardEngine {
+    ws: Box<Workspace>,
+    images: Vec<f32>,
+    logits: Vec<f32>,
+    image_len: usize,
+    num_classes: usize,
+    max_batch: usize,
+}
+
+impl ShardEngine {
+    pub fn new(model: &ServeModel, max_batch: usize) -> ShardEngine {
+        let max_batch = max_batch.max(1);
+        ShardEngine {
+            ws: Box::new(Workspace::new()),
+            images: vec![0.0; max_batch * model.image_len()],
+            logits: vec![0.0; max_batch * model.num_classes()],
+            image_len: model.image_len(),
+            num_classes: model.num_classes(),
+            max_batch,
+        }
+    }
+
+    /// Pre-grow every buffer for every batch shape up to `max_batch` by
+    /// running one inference at the largest and smallest shapes; after
+    /// this, [`ShardEngine::infer`] never allocates (any `b` between the
+    /// two reuses the max-shape buffers — grow-only).
+    pub fn warm(&mut self, model: &ServeModel) -> Result<()> {
+        self.infer(model, self.max_batch)?;
+        self.infer(model, 1)?;
+        Ok(())
+    }
+
+    /// The logits staged by the last [`ShardEngine::infer`] call (rows
+    /// beyond that call's batch size are stale).
+    pub fn staged_logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Mutable staging row for request `j` of the next batch.
+    pub fn image_slot(&mut self, j: usize) -> &mut [f32] {
+        let il = self.image_len;
+        &mut self.images[j * il..(j + 1) * il]
+    }
+
+    /// Run the staged batch of `b` requests on the model's tier; returns
+    /// the `b * num_classes` logits. Intra-op threads stay at 1 — the
+    /// shard fan-out is the parallelism.
+    pub fn infer(&mut self, model: &ServeModel, b: usize) -> Result<&[f32]> {
+        debug_assert!((1..=self.max_batch).contains(&b));
+        let images = &self.images[..b * self.image_len];
+        let out = &mut self.logits[..b * self.num_classes];
+        match (model.tier, &model.quant) {
+            (ServeTier::Int8, Some(qm)) => model.engine.eval_logits_quant_ws(
+                qm,
+                model.params.as_slice(),
+                model.bn.as_slice(),
+                images,
+                b,
+                1,
+                simd::active(),
+                &mut self.ws,
+                out,
+            )?,
+            _ => model.engine.eval_logits_ws(
+                model.params.as_slice(),
+                model.bn.as_slice(),
+                images,
+                b,
+                1,
+                &mut self.ws,
+                out,
+            )?,
+        }
+        Ok(&self.logits[..b * self.num_classes])
+    }
+}
+
+/// First-max argmax over one logits row — the serving prediction rule
+/// (consistent with the rank rule: a class ties the winner only at a
+/// higher index, and the winner has rank 0).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate().skip(1) {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_knob_parses() {
+        assert_eq!(ServeTier::from_knob("f32").unwrap(), ServeTier::F32);
+        assert_eq!(ServeTier::from_knob("int8").unwrap(), ServeTier::Int8);
+        assert!(ServeTier::from_knob("fp16").is_err());
+    }
+
+    #[test]
+    fn argmax_is_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Batched inference serving on the averaged model — the deployment
+//! subsystem (`swap serve-model`).
+//!
+//! SWAP's product is a single averaged model; this module serves it. The
+//! architecture is built around the two invariants the native runtime
+//! already guarantees:
+//!
+//! * **Zero-allocation steady state.** Requests live in a fixed slot
+//!   arena ([`batcher`]), the pending queue is a capacity-reserved ring,
+//!   and every shard worker owns its own grow-only `Workspace` — after
+//!   warmup, a served request performs zero heap allocations end to end
+//!   (pinned by `rust/tests/alloc_regression.rs`).
+//! * **Per-example batch invariance.** The eval forward is per-example
+//!   independent (row-partitioned GEMM chains, BN from running stats,
+//!   per-example pools), so the dynamic batcher can coalesce any mix of
+//!   requests into one ragged batch and return f32 logits **bitwise
+//!   identical** to serving each request at batch = 1 (pinned by
+//!   `rust/tests/serving.rs`).
+//!
+//! [`server::Server`] owns N shard workers; each loop pops a batch from
+//! the shared [`batcher::BatchQueue`] (waiting up to `max_delay` to
+//! coalesce up to `max_batch` singles — bounded latency, GEMM-friendly
+//! shapes), runs it through its [`engine::ShardEngine`] on the f32 or
+//! int8 tier, and completes the slots. The int8 tier
+//! (`runtime::native::qgemm`) trades bitwise f32 parity for throughput
+//! under a tolerance contract: top-1 agreement + bounded logit error.
+
+pub mod batcher;
+pub mod engine;
+pub mod server;
+pub mod stats;
+
+pub use engine::{argmax, ServeModel, ServeTier, ShardEngine};
+pub use server::{ServeConfig, Server};
+pub use stats::{percentile, ServerStats};

@@ -1,0 +1,220 @@
+//! The server: N shard worker threads over the shared dynamic batcher.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::batcher::{BatchQueue, Slot};
+use super::engine::{argmax, ServeModel, ShardEngine};
+use super::stats::{Counters, ServerStats};
+use crate::util::{Error, Result};
+
+/// Batching/sharding knobs (the `serve_*` config family).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// shard engine workers, each with its own workspace (`serve_threads`)
+    pub shards: usize,
+    /// largest coalesced batch (`serve_max_batch`)
+    pub max_batch: usize,
+    /// longest a batch waits for co-batched requests past its first
+    /// request (`serve_max_delay_us`); 0 = never wait
+    pub max_delay: Duration,
+    /// request slot arena size; saturation blocks new clients
+    /// (backpressure) rather than growing a queue without bound
+    pub queue_slots: usize,
+}
+
+impl ServeConfig {
+    /// Sensible defaults for `shards` workers: batches of 8, a 2 ms
+    /// coalescing window, and enough slots to keep every shard busy with
+    /// a full batch while another full batch queues behind it.
+    pub fn for_shards(shards: usize) -> ServeConfig {
+        let shards = shards.max(1);
+        ServeConfig {
+            shards,
+            max_batch: 8,
+            max_delay: Duration::from_micros(2000),
+            queue_slots: shards * 8 * 2,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shards == 0 || self.max_batch == 0 {
+            return Err(Error::config("serve: shards and max_batch must be >= 1"));
+        }
+        if self.queue_slots < self.max_batch {
+            return Err(Error::config(format!(
+                "serve: queue_slots {} < max_batch {} can never fill a batch",
+                self.queue_slots, self.max_batch
+            )));
+        }
+        Ok(())
+    }
+}
+
+struct Inner {
+    model: Arc<ServeModel>,
+    queue: BatchQueue,
+    slots: Vec<Slot>,
+    counters: Counters,
+}
+
+/// A running inference server: shard workers live for the server's
+/// lifetime; `Drop` shuts the queue down and joins them (in-flight
+/// requests complete, blocked clients get an error).
+pub struct Server {
+    inner: Arc<Inner>,
+    cfg: ServeConfig,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Preallocate the slot arena, warm one [`ShardEngine`] per shard
+    /// (growing every buffer to the largest batch shape), and start the
+    /// workers.
+    pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> Result<Server> {
+        cfg.validate()?;
+        let (il, nc) = (model.image_len(), model.num_classes());
+        let slots = (0..cfg.queue_slots).map(|_| Slot::new(il, nc)).collect();
+        let inner = Arc::new(Inner {
+            model: model.clone(),
+            queue: BatchQueue::new(cfg.queue_slots),
+            slots,
+            counters: Counters::default(),
+        });
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            // warm on the spawning thread so start() surfaces engine
+            // errors instead of burying them in a worker
+            let mut eng = ShardEngine::new(&model, cfg.max_batch);
+            eng.warm(&model)?;
+            let inner = inner.clone();
+            let (max_batch, max_delay) = (cfg.max_batch, cfg.max_delay);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("swap-serve-{shard}"))
+                    .spawn(move || worker_loop(&inner, eng, max_batch, max_delay))
+                    .map_err(|e| Error::invalid(format!("serve: spawn failed: {e}")))?,
+            );
+        }
+        Ok(Server { inner, cfg, workers })
+    }
+
+    /// Serve one classification request: blocks until a slot is free
+    /// (backpressure) and the batched inference completes; writes the
+    /// logits row into `logits_out` and returns the top-1 class. Zero
+    /// allocations on the steady-state path.
+    pub fn classify_into(&self, image: &[f32], logits_out: &mut [f32]) -> Result<usize> {
+        if logits_out.len() != self.inner.model.num_classes() {
+            return Err(Error::shape(format!(
+                "logits buffer {} != num_classes {}",
+                logits_out.len(),
+                self.inner.model.num_classes()
+            )));
+        }
+        self.request(image, Some(logits_out))
+    }
+
+    /// [`Server::classify_into`] without copying the logits out.
+    pub fn classify(&self, image: &[f32]) -> Result<usize> {
+        self.request(image, None)
+    }
+
+    fn request(&self, image: &[f32], logits_out: Option<&mut [f32]>) -> Result<usize> {
+        if image.len() != self.inner.model.image_len() {
+            return Err(Error::shape(format!(
+                "request image {} f32s != model image {}",
+                image.len(),
+                self.inner.model.image_len()
+            )));
+        }
+        let idx = self
+            .inner
+            .queue
+            .acquire_free()
+            .ok_or_else(|| Error::invalid("serve: server is shut down"))?;
+        let slot = &self.inner.slots[idx as usize];
+        {
+            let mut st = slot.m.lock().unwrap();
+            st.image.copy_from_slice(image);
+            st.done = false;
+            st.failed = false;
+        }
+        self.inner.queue.submit(idx);
+        let (top1, failed) = {
+            let mut st = slot.m.lock().unwrap();
+            while !st.done {
+                st = slot.cv.wait(st).unwrap();
+            }
+            if let Some(out) = logits_out {
+                out.copy_from_slice(&st.logits);
+            }
+            (st.top1, st.failed)
+        };
+        self.inner.queue.release(idx);
+        if failed {
+            return Err(Error::invalid("serve: inference failed for this request"));
+        }
+        Ok(top1)
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.inner.counters.snapshot()
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        &self.inner.model
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.inner.queue.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One shard worker: pop a coalesced batch, stage the slot images into
+/// the shard's own buffers, infer, complete the slots. All buffers are
+/// preallocated (`batch` indices, engine staging, workspace) — the loop
+/// body allocates nothing.
+fn worker_loop(inner: &Inner, mut eng: ShardEngine, max_batch: usize, max_delay: Duration) {
+    let nc = inner.model.num_classes();
+    let mut batch: Vec<u32> = Vec::with_capacity(max_batch);
+    while inner.queue.next_batch(&mut batch, max_batch, max_delay) {
+        let b = batch.len();
+        for (j, &idx) in batch.iter().enumerate() {
+            let st = inner.slots[idx as usize].m.lock().unwrap();
+            eng.image_slot(j).copy_from_slice(&st.image);
+        }
+        let ok = eng.infer(&inner.model, b).is_ok();
+        if !ok {
+            inner.counters.infer_errors.fetch_add(b as u64, Ordering::Relaxed);
+        }
+        for (j, &idx) in batch.iter().enumerate() {
+            let slot = &inner.slots[idx as usize];
+            let mut st = slot.m.lock().unwrap();
+            if ok {
+                let row = &eng.staged_logits()[j * nc..(j + 1) * nc];
+                st.logits.copy_from_slice(row);
+                st.top1 = argmax(row);
+                st.failed = false;
+            } else {
+                st.logits.fill(0.0);
+                st.top1 = 0;
+                st.failed = true;
+            }
+            st.done = true;
+            drop(st);
+            slot.cv.notify_all();
+        }
+        inner.counters.note_batch(b);
+    }
+}

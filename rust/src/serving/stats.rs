@@ -1,0 +1,93 @@
+//! Serving counters and latency summaries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free server counters, updated by shard workers per batch.
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub max_batch_seen: AtomicU64,
+    pub infer_errors: AtomicU64,
+}
+
+impl Counters {
+    pub fn note_batch(&self, size: usize) {
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.max_batch_seen.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServerStats {
+        ServerStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            max_batch_seen: self.max_batch_seen.load(Ordering::Relaxed),
+            infer_errors: self.infer_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of a server's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// requests completed
+    pub requests: u64,
+    /// inference batches run
+    pub batches: u64,
+    /// largest coalesced batch observed
+    pub max_batch_seen: u64,
+    /// requests that failed inside inference (completed with zero logits)
+    pub infer_errors: u64,
+}
+
+impl ServerStats {
+    /// Mean coalesced batch size — the dynamic batcher's effectiveness.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]) over an **ascending-sorted**
+/// sample slice. Returns 0.0 on an empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::default();
+        c.note_batch(3);
+        c.note_batch(5);
+        c.note_batch(1);
+        let s = c.snapshot();
+        assert_eq!(s.requests, 9);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.max_batch_seen, 5);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-12);
+    }
+}

@@ -216,4 +216,69 @@ fn average_and_ring_allocation_budgets() {
          allocs; forward/backward/SGD must run entirely out of the engine \
          workspace"
     );
+
+    // ---- steady-state serving: ZERO allocation per request -------------
+    // The dynamic batcher's slot arena, the pending ring and each shard
+    // worker's engine buffers are all preallocated, and Server::start
+    // warms every batch shape. A served request (client copy-in,
+    // coalesce, infer, copy-out, condvar handshake) must allocate
+    // nothing — on either numeric tier. The counting allocator is
+    // global, so this also pins the shard worker threads.
+    use std::sync::Arc;
+    use swap::serving::{ServeConfig, ServeModel, ServeTier, Server, ShardEngine};
+    let il = 16 * 16 * 3;
+    for tier in [ServeTier::F32, ServeTier::Int8] {
+        let eng = NativeBackend::tiny();
+        let sp = ParamSet::init(eng.manifest(), 3);
+        let sbn = swap::model::BnState::init(eng.manifest());
+        let model = Arc::new(ServeModel::new(eng, sp, sbn, tier).unwrap());
+        let cfg = ServeConfig {
+            shards: 1,
+            max_batch: 4,
+            max_delay: std::time::Duration::ZERO,
+            queue_slots: 8,
+        };
+        let server = Server::start(model, cfg).unwrap();
+        let mut logits = vec![0.0f32; 10];
+        // warmup: first trips through the condvar handshake per slot
+        for i in 0..8 {
+            let img = &ds.images[i * il..(i + 1) * il];
+            server.classify_into(img, &mut logits).unwrap();
+        }
+        let ((), srv_bytes, srv_calls) = measured(|| {
+            for r in 0..40 {
+                let i = r % 8;
+                let img = &ds.images[i * il..(i + 1) * il];
+                server.classify_into(img, &mut logits).unwrap();
+            }
+        });
+        assert_eq!(
+            srv_bytes, 0,
+            "steady-state {} serving allocated {srv_bytes}B over {srv_calls} \
+             allocs; the request path must run out of the slot arena + shard \
+             workspaces",
+            tier.name()
+        );
+        drop(server);
+    }
+
+    // ---- shard engine across alternating batch shapes: ZERO alloc ------
+    // warm() grows every buffer to the max shape once; ragged coalesced
+    // batches must reuse them (grow-only workspace + fixed staging).
+    let eng = NativeBackend::tiny();
+    let sp = ParamSet::init(eng.manifest(), 3);
+    let sbn = swap::model::BnState::init(eng.manifest());
+    let qmodel = ServeModel::new(eng, sp, sbn, ServeTier::Int8).unwrap();
+    let mut shard = ShardEngine::new(&qmodel, 8);
+    shard.warm(&qmodel).unwrap();
+    let ((), shape_bytes, shape_calls) = measured(|| {
+        for &b in &[8usize, 3, 1, 5, 2, 8, 1] {
+            shard.infer(&qmodel, b).unwrap();
+        }
+    });
+    assert_eq!(
+        shape_bytes, 0,
+        "alternating batch shapes allocated {shape_bytes}B over \
+         {shape_calls} allocs; warm() must cover every shape <= max_batch"
+    );
 }

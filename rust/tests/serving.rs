@@ -1,0 +1,317 @@
+//! Serving subsystem integration suite.
+//!
+//! Pins the three contracts the `serve-model` path is built on:
+//!
+//! 1. **Ragged-batch invariance (f32)** — the dynamic batcher may coalesce
+//!    requests into any batch shape; per-example f32 logits must be
+//!    bitwise identical to serving each request alone at batch 1, both at
+//!    the engine level and end-to-end through a running [`Server`].
+//! 2. **int8 parity oracle** — the quantized tier is a *tolerance*
+//!    contract against f32 (top-1 agreement + bounded logit error), but
+//!    the quantized path itself is bitwise deterministic across every
+//!    available SIMD tier and across intra-op thread counts (exact i32
+//!    accumulation).
+//! 3. **Servable checkpoints** — `save_model`/`load_model` round-trip the
+//!    param + BN bundle bitwise and reject truncated/corrupt files.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use swap::data::{Generator, SynthSpec};
+use swap::model::{load_model, save_model, BnState, ParamSet};
+use swap::runtime::native::workspace::Workspace;
+use swap::runtime::native::NativeBackend;
+use swap::runtime::Backend;
+use swap::serving::{argmax, ServeConfig, ServeModel, ServeTier, Server};
+use swap::util::simd::{self, Tier};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("swap-serving-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Engine + randomized-but-deterministic weights/BN and a synthetic
+/// image set sized for the tiny preset.
+fn fixture(seed: u64, n: usize) -> (NativeBackend, ParamSet, BnState, Vec<f32>) {
+    let engine = NativeBackend::tiny();
+    let params = ParamSet::init(engine.manifest(), seed);
+    let bn = BnState::init(engine.manifest());
+    let d = engine.dims();
+    let ds = Generator::new(SynthSpec::for_preset(d.num_classes, d.image_size, seed)).sample(n, 7);
+    (engine, params, bn, ds.images)
+}
+
+/// Reference logits: each image alone at batch 1 through the f32 path.
+fn batch1_logits(
+    engine: &NativeBackend,
+    params: &ParamSet,
+    bn: &BnState,
+    images: &[f32],
+) -> Vec<f32> {
+    let d = engine.dims();
+    let il = d.image_size * d.image_size * 3;
+    let n = images.len() / il;
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; n * d.num_classes];
+    for i in 0..n {
+        let img = &images[i * il..(i + 1) * il];
+        let row = &mut out[i * d.num_classes..(i + 1) * d.num_classes];
+        let r = engine.eval_logits_ws(params.as_slice(), bn.as_slice(), img, 1, 1, &mut ws, row);
+        r.unwrap();
+    }
+    out
+}
+
+#[test]
+fn ragged_batch_shapes_match_batch1_bitwise_f32() {
+    let (engine, params, bn, images) = fixture(11, 11);
+    let d = engine.dims();
+    let (il, nc) = (d.image_size * d.image_size * 3, d.num_classes);
+    let reference = batch1_logits(&engine, &params, &bn, &images);
+
+    // one grow-only workspace reused across every ragged shape
+    let mut ws = Workspace::new();
+    let mut got = vec![0.0f32; 11 * nc];
+    let mut at = 0usize;
+    for &b in &[4usize, 3, 1, 2, 1] {
+        let imgs = &images[at * il..(at + b) * il];
+        let rows = &mut got[at * nc..(at + b) * nc];
+        let r = engine.eval_logits_ws(params.as_slice(), bn.as_slice(), imgs, b, 1, &mut ws, rows);
+        r.unwrap();
+        at += b;
+    }
+    assert_eq!(at, 11);
+    for i in 0..11 {
+        assert_eq!(
+            got[i * nc..(i + 1) * nc],
+            reference[i * nc..(i + 1) * nc],
+            "image {i}: ragged-batch f32 logits differ from batch=1"
+        );
+    }
+}
+
+#[test]
+fn server_coalesced_requests_match_direct_eval_bitwise() {
+    let n = 10usize;
+    let (engine, params, bn, images) = fixture(3, n);
+    let reference = batch1_logits(&engine, &params, &bn, &images);
+    let d = engine.dims();
+    let (il, nc) = (d.image_size * d.image_size * 3, d.num_classes);
+
+    let model = Arc::new(ServeModel::new(engine, params, bn, ServeTier::F32).unwrap());
+    let cfg = ServeConfig {
+        shards: 2,
+        max_batch: 4,
+        // generous window so concurrent requests actually coalesce
+        max_delay: Duration::from_millis(20),
+        queue_slots: 16,
+    };
+    let server = Server::start(model, cfg).unwrap();
+
+    // two rounds over the same slots to exercise slot recycling
+    for _round in 0..2 {
+        let mismatches = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for i in 0..n {
+                let (server, reference, images, mismatches) =
+                    (&server, &reference, &images, &mismatches);
+                s.spawn(move || {
+                    let mut logits = vec![0.0f32; nc];
+                    let img = &images[i * il..(i + 1) * il];
+                    let top1 = server.classify_into(img, &mut logits).unwrap();
+                    let want = &reference[i * nc..(i + 1) * nc];
+                    if logits != want || top1 != argmax(want) {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(mismatches.load(Ordering::Relaxed), 0, "served logits differ from batch=1");
+    }
+
+    let st = server.stats();
+    assert_eq!(st.requests, 2 * n as u64);
+    assert_eq!(st.infer_errors, 0);
+    assert!(st.batches >= 1 && st.batches <= st.requests);
+    assert!(st.max_batch_seen >= 1 && st.max_batch_seen <= 4);
+}
+
+#[test]
+fn int8_parity_oracle_across_simd_tiers() {
+    let n = 64usize;
+    let (engine, params, bn, images) = fixture(5, n);
+    let d = engine.dims();
+    let (il, nc) = (d.image_size * d.image_size * 3, d.num_classes);
+    let f32_logits = batch1_logits(&engine, &params, &bn, &images);
+    let qm = engine.quantize_model(params.as_slice()).unwrap();
+
+    // quantized logits per tier, batched in chunks of 16
+    let run_tier = |tier: Tier, threads: usize| -> Vec<f32> {
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; n * nc];
+        for c in 0..(n / 16) {
+            let imgs = &images[c * 16 * il..(c + 1) * 16 * il];
+            let rows = &mut out[c * 16 * nc..(c + 1) * 16 * nc];
+            let r = engine.eval_logits_quant_ws(
+                &qm,
+                params.as_slice(),
+                bn.as_slice(),
+                imgs,
+                16,
+                threads,
+                tier,
+                &mut ws,
+                rows,
+            );
+            r.unwrap();
+        }
+        out
+    };
+
+    let scalar = run_tier(Tier::Scalar, 1);
+    // exact i32 accumulation: every SIMD tier and thread count is bitwise
+    // identical to the scalar tier
+    for tier in simd::tiers_available() {
+        let got = run_tier(tier, 1);
+        assert_eq!(got, scalar, "int8 logits differ: {tier:?} t=1 vs scalar");
+        let got_t3 = run_tier(tier, 3);
+        assert_eq!(got_t3, scalar, "int8 logits differ: {tier:?} t=3 vs scalar");
+    }
+
+    // tolerance contract vs f32: bounded logit error, high top-1 agreement
+    let amax = f32_logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let bound = 0.15 * amax + 1e-3;
+    let mut agree = 0usize;
+    for i in 0..n {
+        let fr = &f32_logits[i * nc..(i + 1) * nc];
+        let qr = &scalar[i * nc..(i + 1) * nc];
+        let mut err = 0.0f32;
+        for (a, b) in fr.iter().zip(qr) {
+            err = err.max((a - b).abs());
+        }
+        assert!(err <= bound, "image {i}: int8 logit error {err} > bound {bound} (amax {amax})");
+        // when the f32 margin dominates the error bound, top-1 MUST agree
+        let top = argmax(fr);
+        let margin = fr[top] - runner_up(fr, top);
+        if margin > 2.0 * bound {
+            assert_eq!(argmax(qr), top, "image {i}: top-1 flip despite margin {margin}");
+        }
+        if argmax(qr) == top {
+            agree += 1;
+        }
+    }
+    let frac = agree as f64 / n as f64;
+    assert!(frac >= 0.8, "int8 top-1 agreement {frac} < 0.8 ({agree}/{n})");
+}
+
+fn runner_up(row: &[f32], top: usize) -> f32 {
+    let mut best = f32::NEG_INFINITY;
+    for (j, &v) in row.iter().enumerate() {
+        if j != top && v > best {
+            best = v;
+        }
+    }
+    best
+}
+
+#[test]
+fn int8_server_end_to_end() {
+    let n = 8usize;
+    let (engine, params, bn, images) = fixture(9, n);
+    let d = engine.dims();
+    let (il, nc) = (d.image_size * d.image_size * 3, d.num_classes);
+
+    let model = Arc::new(ServeModel::new(engine, params, bn, ServeTier::Int8).unwrap());
+    let cfg = ServeConfig {
+        shards: 1,
+        max_batch: 4,
+        max_delay: Duration::from_micros(200),
+        queue_slots: 8,
+    };
+    let server = Server::start(model, cfg).unwrap();
+    let mut logits = vec![0.0f32; nc];
+    for i in 0..n {
+        let img = &images[i * il..(i + 1) * il];
+        let top1 = server.classify_into(img, &mut logits).unwrap();
+        assert!(top1 < nc);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(top1, argmax(&logits));
+    }
+    assert_eq!(server.stats().requests, n as u64);
+    assert_eq!(server.stats().infer_errors, 0);
+    // explicit drop: shuts the queue down and joins the workers
+    drop(server);
+}
+
+#[test]
+fn servable_checkpoint_roundtrip_and_corruption() {
+    let dir = scratch("ckpt");
+    let path = dir.join("model.ckpt");
+    let (engine, params, bn, _) = fixture(21, 1);
+    let manifest = engine.manifest();
+
+    save_model(&path, manifest, &params, &bn).unwrap();
+    let (p2, bn2) = load_model(&path, manifest).unwrap();
+    assert_eq!(p2.data(), params.data(), "param arena not bitwise after round-trip");
+    assert_eq!(bn2.as_slice(), bn.as_slice(), "bn arena not bitwise after round-trip");
+
+    // a loaded bundle must serve; logits must match the in-memory model
+    let images = fixture(21, 2).3;
+    let want = batch1_logits(&engine, &params, &bn, &images);
+    let got = batch1_logits(&engine, &p2, &bn2, &images);
+    assert_eq!(got, want);
+
+    // truncated file: must error, not mis-shape silently
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = dir.join("truncated.ckpt");
+    std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(load_model(&cut, manifest).is_err(), "truncated checkpoint loaded");
+
+    // missing file
+    assert!(load_model(dir.join("absent.ckpt"), manifest).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_validation_rejects_bad_shapes_and_configs() {
+    let (engine, params, bn, images) = fixture(2, 1);
+    let d = engine.dims();
+    let nc = d.num_classes;
+
+    // a param arena that doesn't match the engine layout is rejected at
+    // model assembly, not at the first request
+    let bad_layout = swap::model::ParamLayout::single(3);
+    let wrong = swap::model::FlatParams::from_data(bad_layout, vec![0.0; 3]).unwrap();
+    let spare = NativeBackend::tiny();
+    let spare_bn = BnState::init(spare.manifest());
+    assert!(ServeModel::new(spare, wrong, spare_bn, ServeTier::F32).is_err());
+
+    let model = Arc::new(ServeModel::new(engine, params, bn, ServeTier::F32).unwrap());
+
+    // queue_slots < max_batch can never fill a batch
+    let bad = ServeConfig {
+        shards: 1,
+        max_batch: 8,
+        max_delay: Duration::ZERO,
+        queue_slots: 4,
+    };
+    assert!(Server::start(model.clone(), bad).is_err());
+
+    let server = Server::start(model, ServeConfig::for_shards(1)).unwrap();
+    // wrong image length
+    assert!(server.classify(&images[..7]).is_err());
+    // wrong logits buffer length
+    let mut logits = vec![0.0f32; nc + 1];
+    let il = d.image_size * d.image_size * 3;
+    assert!(server.classify_into(&images[..il], &mut logits).is_err());
+    // a healthy request still works on the same server afterwards
+    let mut ok = vec![0.0f32; nc];
+    assert!(server.classify_into(&images[..il], &mut ok).is_ok());
+
+    // tier knob surface
+    assert!(ServeTier::from_knob("bf16").is_err());
+    assert_eq!(ServeTier::from_knob("int8").unwrap().name(), "int8");
+}
