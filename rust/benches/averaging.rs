@@ -130,6 +130,8 @@ fn main() -> Result<()> {
         averaging,
         snapshot_every: None,
         phase1_snapshot_every: None,
+        phase1_dist: false,
+        phase1_record_every: 1,
     };
     let mut ablation: Vec<AblationRow> = Vec::new();
     for spec in &specs {

@@ -1,10 +1,11 @@
 //! Blocked-GEMM smoke bench: GFLOP/s per ResNet9s conv shape (the paper's
 //! width-64 CIFAR net), blocked-vs-reference at threads 1 and 4, the
-//! scalar-vs-SIMD dispatch tiers, plus the fused im2col-packing conv
-//! path. Emits `BENCH_gemm.json` (and a copy under results/) — the
-//! compute baseline of the perf trajectory, stamped with an environment
-//! manifest so numbers are diffable across machines — and asserts
-//! blocked-vs-reference (and every-tier-vs-scalar) BITWISE parity on
+//! scalar-vs-SIMD dispatch tiers, the fused im2col-packing conv path,
+//! plus the int8 quantized GEMM tier on the same shapes. Emits
+//! `BENCH_gemm.json` (and a copy under results/) — the compute baseline
+//! of the perf trajectory, stamped with an environment manifest so
+//! numbers are diffable across machines — and asserts blocked-vs-reference
+//! (and every-tier-vs-scalar, f32 and int8 alike) BITWISE parity on
 //! every shape along the way.
 //! Run: cargo bench --bench gemm
 
@@ -12,6 +13,7 @@ use swap::bench::{env_manifest, time_once};
 use swap::runtime::native::gemm::{conv3x3_into, matmul_into, matmul_into_tier, GemmScratch};
 use swap::runtime::native::kernels::{im2col, matmul_reference};
 use swap::runtime::native::model::{conv_layers, Dims};
+use swap::runtime::native::qgemm::{qconv3x3_into, QuantScratch, QuantTensor};
 use swap::util::simd::{self, Tier};
 use swap::util::{Json, Result};
 
@@ -109,17 +111,42 @@ fn main() -> Result<()> {
             conv3x3_into(&mut out, &x, BATCH, side, side, cin, &wts, n, THREADS_PAR, &mut scratch)
         });
 
+        // int8 quantized tier on the same conv shape: weights pre-packed
+        // once (as serving does at load), activations quantized per call.
+        // Exact i32 accumulation makes every dispatch tier bitwise equal
+        // to the quantized scalar kernel — assert it, then time the
+        // active tier against the fused f32 conv at the same threads.
+        let wq = QuantTensor::quantize(&wts, k, n);
+        let mut qs = QuantScratch::default();
+        let mut qwant = vec![0.0f32; m * n];
+        qconv3x3_into(
+            &mut qwant, &x, BATCH, side, side, cin, &wq, 1, Tier::Scalar, &mut qs,
+        );
+        let mut qout = vec![0.0f32; m * n];
+        for t in simd::tiers_available() {
+            qconv3x3_into(&mut qout, &x, BATCH, side, side, cin, &wq, 1, t, &mut qs);
+            assert_bitwise(&qout, &qwant, &format!("{name}: int8 tier {} vs scalar", t.name()));
+        }
+        let q_tn_s = best_of(3, || {
+            qconv3x3_into(
+                &mut qout, &x, BATCH, side, side, cin, &wq, THREADS_PAR, active, &mut qs,
+            )
+        });
+
         let speedup_tn = ref_tn_s / blk_tn_s.max(1e-12);
+        let int8_speedup_tn = fused_tn_s / q_tn_s.max(1e-12);
         let simd_speedup_t1 = scalar_t1_s / simd_t1_s.max(1e-12);
         println!(
             "  {name:<7} m={m:<6} k={k:<5} n={n:<4} | ref {:.2}/{:.2} GF/s | \
-             blocked {:.2}/{:.2} GF/s | fused {:.2} GF/s | speedup(t{THREADS_PAR}) {speedup_tn:.2}x \
+             blocked {:.2}/{:.2} GF/s | fused {:.2} GF/s | int8 {:.2} GF/s \
+             ({int8_speedup_tn:.2}x) | speedup(t{THREADS_PAR}) {speedup_tn:.2}x \
              | {} {simd_speedup_t1:.2}x over scalar",
             gflop / ref_t1_s,
             gflop / ref_tn_s,
             gflop / blk_t1_s,
             gflop / blk_tn_s,
             gflop / fused_tn_s,
+            gflop / q_tn_s,
             active.name(),
         );
         rows.push(Json::obj(vec![
@@ -133,6 +160,11 @@ fn main() -> Result<()> {
             ("blocked_t1_gflops", Json::Num(gflop / blk_t1_s)),
             ("blocked_tn_gflops", Json::Num(gflop / blk_tn_s)),
             ("fused_conv_tn_gflops", Json::Num(gflop / fused_tn_s)),
+            // int8 rows: effective GFLOP/s (same 2mkn op count), the
+            // tier that ran, and its wall-time win over the f32 fused conv
+            ("int8_tn_gflops", Json::Num(gflop / q_tn_s)),
+            ("int8_tier", Json::str(active.name())),
+            ("int8_speedup_tn", Json::Num(int8_speedup_tn)),
             ("scalar_t1_gflops", Json::Num(gflop / scalar_t1_s)),
             ("simd_tier", Json::str(active.name())),
             ("simd_t1_gflops", Json::Num(gflop / simd_t1_s)),

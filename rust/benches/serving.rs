@@ -150,6 +150,8 @@ fn main() -> Result<()> {
             let st = server.stats();
             assert_eq!(st.requests, REQUESTS as u64, "lost requests");
             assert_eq!(st.infer_errors, 0, "inference errors under load");
+            // CLIENTS <= queue_slots: closed-loop clients can never shed
+            assert_eq!(st.sheds, 0, "shed despite clients <= queue_slots");
             println!(
                 "  {:<4} rate {frac:.1}x ({rate:>6.0} req/s offered) | p50 {p50:>7.2} ms \
                  | p99 {p99:>7.2} ms | {tp:>6.0} req/s | mean batch {:.2} (max {})",
@@ -167,6 +169,7 @@ fn main() -> Result<()> {
                 ("throughput_rps", Json::Num(tp)),
                 ("mean_batch", Json::Num(st.mean_batch())),
                 ("max_batch_seen", Json::Num(st.max_batch_seen as f64)),
+                ("sheds", Json::Num(st.sheds as f64)),
             ]));
         }
     }

@@ -1,0 +1,96 @@
+//! Transport wire bench — measured vs predicted phase-1 comm time.
+//!
+//! `ClusterClock` prices the distributed phase-1 collective with the α–β
+//! [`NetModel::hub_exchange`] term. This bench closes ROADMAP item 1's
+//! validation loop: it calibrates α (frame latency) and β (payload
+//! bandwidth) on a real loopback socket pair, then times the actual
+//! `serve_phase1` per-step wire pattern (broadcast + gradient gather over
+//! real TCP) across member/device/payload combinations and holds the
+//! measured wall clock against the model's prediction under the measured
+//! constants. Emits `BENCH_transport.json` (and a copy under results/)
+//! with one measured-vs-predicted row per combination, stamped with an
+//! environment manifest.
+//!
+//! The α–β model ignores scheduler noise, syscall overhead beyond the
+//! first frame, and kernel buffering, so agreement is asserted to a
+//! deliberately loose factor-of-RATIO_TOL band — enough to catch a
+//! mispriced topology (e.g. a ring term where a star belongs) without
+//! flaking on a busy runner. rust/tests/transport.rs pins a wider band
+//! in CI.
+//! Run: cargo bench --bench transport
+
+use swap::bench::env_manifest;
+use swap::coordinator::transport::loopback::{calibrate, time_hub_exchange};
+use swap::util::{Json, Result};
+
+/// (members, group_devices, weight count) combinations: fan-out scaling
+/// at a fixed payload, then payload scaling at a fixed fan-out.
+const COMBOS: [(usize, usize, usize); 4] =
+    [(2, 1, 1 << 14), (4, 1, 1 << 14), (2, 2, 1 << 14), (2, 1, 1 << 17)];
+
+/// Steps to time per combination (plus one warm-up exchange inside).
+const STEPS: usize = 12;
+
+/// Accepted measured/predicted band. Loopback has no real wire, so the
+/// α–β fit is coarse; a correct topology lands well inside [1/4, 4].
+const RATIO_TOL: f64 = 4.0;
+
+fn main() -> Result<()> {
+    let cal = calibrate(64, 1 << 18)?;
+    let net = cal.net_model();
+    println!(
+        "loopback calibration: latency {:.2} us | bandwidth {:.2} GiB/s",
+        cal.latency * 1e6,
+        cal.bandwidth / (1024.0 * 1024.0 * 1024.0)
+    );
+
+    let mut rows = Vec::new();
+    println!("phase-1 hub exchange, measured vs predicted ({STEPS} steps each):");
+    for (members, gd, numel) in COMBOS {
+        let measured = time_hub_exchange(members, gd, numel, STEPS)?;
+        let bytes = 4 * numel as u64;
+        let predicted = net.hub_exchange(bytes, members, members * gd);
+        let ratio = measured / predicted.max(1e-12);
+        println!(
+            "  members {members} x gd {gd} | {:>8} B | measured {:>9.1} us | \
+             predicted {:>9.1} us | ratio {ratio:.2}",
+            bytes,
+            measured * 1e6,
+            predicted * 1e6
+        );
+        assert!(
+            ratio > 1.0 / RATIO_TOL && ratio < RATIO_TOL,
+            "hub_exchange model off by more than {RATIO_TOL}x: measured {measured:.3e}s \
+             vs predicted {predicted:.3e}s (members {members}, gd {gd}, {bytes} B)"
+        );
+        rows.push(Json::obj(vec![
+            ("members", Json::Num(members as f64)),
+            ("group_devices", Json::Num(gd as f64)),
+            ("payload_bytes", Json::Num(bytes as f64)),
+            ("steps", Json::Num(STEPS as f64)),
+            ("measured_per_step_s", Json::Num(measured)),
+            ("predicted_per_step_s", Json::Num(predicted)),
+            ("ratio", Json::Num(ratio)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("transport_loopback")),
+        (
+            "calibration",
+            Json::obj(vec![
+                ("latency_s", Json::Num(cal.latency)),
+                ("bandwidth_bytes_per_s", Json::Num(cal.bandwidth)),
+            ]),
+        ),
+        ("ratio_tolerance", Json::Num(RATIO_TOL)),
+        ("environment", env_manifest()),
+        ("rows", Json::Arr(rows)),
+    ])
+    .to_string_pretty();
+    std::fs::write("BENCH_transport.json", &json)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_transport.json", &json)?;
+    println!("wrote BENCH_transport.json");
+    Ok(())
+}

@@ -129,14 +129,20 @@ USAGE:  swap-train <command> [--preset NAME] [--config FILE] [--set key=value]..
 Training commands (print a run summary):
   swap        run the three-phase SWAP algorithm (phase 2 in-process)
   swap-resume restartable SWAP: phase checkpoints under --out DIR
-  serve       coordinator: phase 1 locally, then serve phase 2 to remote
-              `join` processes on --addr (TCP host:port or a unix socket
-              path); workers that crash, hang, or straggle are dropped
-              from the average under the failure policy; state persists
-              under --out so a re-serve retries only the dropped workers
-  join        worker: connect to a `serve` coordinator at --addr, train
-              one phase-2 replica, upload it (--worker N requests a
-              specific unfinished worker id when rejoining)
+  serve       coordinator: phase 1 locally (or as the hub of a
+              distributed collective with --set phase1_dist=true), then
+              serve phase 2 to remote `join` processes on --addr (TCP
+              host:port or a unix socket path); workers that crash,
+              hang, or straggle are dropped under the failure policy —
+              phase 1 re-forms the collective from survivors, phase 2
+              drops them from the average; state persists under --out
+              so a re-serve resumes phase 1 from the last recorded sync
+              step and retries only the dropped phase-2 workers
+  join        worker: connect to a `serve` coordinator at --addr; when
+              phase1_dist=true, first computes phase-1 gradient shards
+              for the collective, then trains one phase-2 replica and
+              uploads it (--worker N requests a specific member slot /
+              unfinished worker id when rejoining)
   serve-model batched inference serving on an averaged-model checkpoint
               (--model FILE, saved by `swap --out DIR` as DIR/model.ckpt);
               coalesces requests through the dynamic batcher across
@@ -200,14 +206,25 @@ Serving (serve-model, all settable via --set):
   serve_quant=f32|int8   numeric tier; int8 quantizes conv/linear
                          weights per-tensor at load and runs i8 GEMMs
                          (top-1/logit tolerance parity vs f32)    [f32]
+  serve_queue_depth=N    pending-request ring capacity before the
+                         server sheds load with an overload error
+                         (0 = auto: shards x serve_max_batch x 2)  [0]
+Distributed phase 1 (serve/join, all settable via --set):
+  phase1_dist=BOOL       serve phase 1 as a socket collective: joins
+                         compute gradient shards, the hub averages and
+                         steps; bitwise identical to in-process [false]
+  phase1_record_every=N  fsync the phase-1 progress record every N
+                         sync steps (crash-safe resume granularity) [1]
 Failure policy (serve/join, all settable via --set):
-  min_workers=N          fewest phase-2 survivors to average    [1]
-  connect_timeout_ms=N   serve: join window after phase 1       [60000]
-  io_timeout_ms=N        drop a worker silent this long         [10000]
-  heartbeat_ms=N         worker heartbeat interval              [1000]
-  straggler_ms=N         grace after the first finished worker  [600000]
-  join_retries=N         client connect attempts                [60]
-  retry_backoff_ms=N     linear backoff between attempts        [500]
+  min_workers=N          fewest survivors: phase-1 collective members
+                         and phase-2 replicas to average         [1]
+  connect_timeout_ms=N   serve: join window per phase            [60000]
+  io_timeout_ms=N        drop a worker silent this long          [10000]
+  heartbeat_ms=N         worker heartbeat interval               [1000]
+  straggler_ms=N         grace after the first finished worker   [600000]
+  join_retries=N         client connect attempts                 [60]
+  retry_backoff_ms=N     linear backoff ramp between attempts,
+                         jittered per-process to break stampedes [500]
 Env: SWAP_RUNS=N override runs, SWAP_THREADS=N default thread count,
      SWAP_PREFETCH=0|1 override prefetch, SWAP_SIMD=auto|scalar|avx2|neon
      override simd tier, SWAP_LOG=debug|info|warn|quiet";

@@ -109,8 +109,17 @@ pub struct ExperimentConfig {
     pub straggler_ms: u64,
     /// client-side connect attempts before `join` gives up
     pub join_retries: usize,
-    /// linear backoff between connect attempts (ms)
+    /// base backoff between connect attempts (ms); attempt k waits k+1
+    /// windows plus up to one window of per-process jitter
     pub retry_backoff_ms: u64,
+    /// distribute phase 1 over the socket transport too: `serve` becomes
+    /// the hub of the synchronous collective and each `join` process owns
+    /// `group_devices` gradient shards (bitwise identical to in-process
+    /// when nothing fails). Ignored without an `addr`.
+    pub phase1_dist: bool,
+    /// append a crash-safe phase-1 progress record every this many sync
+    /// steps (resumable runs; 1 = every step)
+    pub phase1_record_every: usize,
 
     // ---- small-batch baseline schedule ----
     pub sb_epochs: usize,
@@ -169,6 +178,10 @@ pub struct ExperimentConfig {
     /// serving numeric tier: "f32" (bitwise eval path) or "int8"
     /// (post-training-quantized GEMMs, tolerance parity)
     pub serve_quant: String,
+    /// pending-request ring capacity; a full ring sheds the request with
+    /// an overload error instead of blocking the submitter
+    /// (0 = auto: shards x serve_max_batch x 2)
+    pub serve_queue_depth: usize,
 }
 
 impl ExperimentConfig {
@@ -213,7 +226,11 @@ impl ExperimentConfig {
         let mut sc = crate::serving::ServeConfig::for_shards(self.resolved_serve_threads());
         sc.max_batch = self.serve_max_batch;
         sc.max_delay = std::time::Duration::from_micros(self.serve_max_delay_us);
-        sc.queue_slots = (sc.shards * self.serve_max_batch * 2).max(self.serve_max_batch);
+        sc.queue_slots = if self.serve_queue_depth > 0 {
+            self.serve_queue_depth.max(self.serve_max_batch)
+        } else {
+            (sc.shards * self.serve_max_batch * 2).max(self.serve_max_batch)
+        };
         sc
     }
 
@@ -395,6 +412,8 @@ impl ExperimentConfig {
             "straggler_ms" => self.straggler_ms = p(key, value)?,
             "join_retries" => self.join_retries = p(key, value)?,
             "retry_backoff_ms" => self.retry_backoff_ms = p(key, value)?,
+            "phase1_dist" => self.phase1_dist = p(key, value)?,
+            "phase1_record_every" => self.phase1_record_every = p(key, value)?,
             "sb_epochs" => self.sb_epochs = p(key, value)?,
             "sb_peak_lr" => self.sb_peak_lr = p(key, value)?,
             "sb_warmup_frac" => self.sb_warmup_frac = p(key, value)?,
@@ -420,6 +439,7 @@ impl ExperimentConfig {
             "serve_max_batch" => self.serve_max_batch = p(key, value)?,
             "serve_max_delay_us" => self.serve_max_delay_us = p(key, value)?,
             "serve_quant" => self.serve_quant = value.trim().to_string(),
+            "serve_queue_depth" => self.serve_queue_depth = p(key, value)?,
             other => {
                 return Err(Error::config(format!("unknown config key '{other}'")))
             }
@@ -542,6 +562,9 @@ impl ExperimentConfig {
                 )));
             }
         }
+        if self.phase1_record_every == 0 {
+            return Err(Error::config("phase1_record_every must be >= 1"));
+        }
         if self.serve_max_batch == 0 {
             return Err(Error::config("serve_max_batch must be >= 1"));
         }
@@ -647,6 +670,32 @@ mod tests {
         assert_eq!(p.straggler_grace.as_millis(), 4000);
         assert_eq!(p.join_retries, 7);
         assert_eq!(p.retry_backoff.as_millis(), 100);
+    }
+
+    #[test]
+    fn phase1_and_serving_knobs_flow_through() {
+        let mut cfg = preset("tiny").unwrap();
+        assert!(!cfg.phase1_dist, "phase 1 stays in-process by default");
+        assert_eq!(cfg.phase1_record_every, 1);
+        cfg.apply_kv("phase1_dist", "true").unwrap();
+        cfg.apply_kv("phase1_record_every", "4").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.phase1_dist);
+        assert_eq!(cfg.phase1_record_every, 4);
+        cfg.apply_kv("phase1_record_every", "0").unwrap();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = preset("tiny").unwrap();
+        assert_eq!(cfg.serve_queue_depth, 0, "queue depth defaults to auto");
+        let auto = cfg.serve_config().queue_slots;
+        assert!(auto >= cfg.serve_max_batch);
+        cfg.apply_kv("serve_queue_depth", "97").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.serve_config().queue_slots, 97);
+        // a depth below one batch is raised to it: the batcher must be
+        // able to hold at least one full batch
+        cfg.apply_kv("serve_queue_depth", "1").unwrap();
+        assert_eq!(cfg.serve_config().queue_slots, cfg.serve_max_batch.max(1));
     }
 
     #[test]

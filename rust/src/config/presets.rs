@@ -42,6 +42,8 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         straggler_ms: 600_000,
         join_retries: 60,
         retry_backoff_ms: 500,
+        phase1_dist: false,
+        phase1_record_every: 1,
         sb_epochs: 20,
         sb_peak_lr: 0.15,
         sb_warmup_frac: 0.3,
@@ -66,6 +68,7 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
         serve_max_batch: 8,
         serve_max_delay_us: 2000,
         serve_quant: "f32".to_string(),
+        serve_queue_depth: 0, // auto: shards x serve_max_batch x 2
     };
     let cfg = match name {
         // fast unit/integration testing target (B=8 artifacts)

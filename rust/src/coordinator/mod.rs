@@ -8,9 +8,10 @@
 //!                 swa, hierarchical, adaptive/late-window) streaming over
 //!                 the flat arena
 //! * `swap`      — Algorithm 1 (three phases)
-//! * `transport` — how phase 2 executes: in-process threads or remote
-//!                 processes over sockets, with a per-worker failure
-//!                 policy (timeouts, stragglers, elastic drop-out)
+//! * `transport` — how phases 1 and 2 execute: in-process threads or
+//!                 remote processes over sockets, with a failure policy
+//!                 (timeouts, stragglers, elastic drop-out, ring repair,
+//!                 crash-safe phase-1 progress records)
 //! * `baseline`  — pure small-/large-batch SGD arms (Tables 1-3)
 //! * `swa`       — sequential SWA baseline (Table 4)
 //! * `local_sgd` — post-local SGD extension (§2/§6 related method)
@@ -32,7 +33,11 @@ pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdResult};
 pub use resume::{run_swap_resumable, run_swap_resumable_with, RunDir};
 pub use swa::{run_swa, SwaConfig, SwaResult};
 pub use swap::{run_swap, run_swap_with, SwapConfig, SwapResult};
-pub use trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+pub use trainer::{
+    run_sync_training, run_sync_training_with, SyncResume, SyncTrainConfig, TrainEnv,
+    TrainProgress,
+};
 pub use transport::{
-    join_run, FailurePolicy, JoinSummary, MemoryTransport, NetStats, SocketTransport, Transport,
+    join_phase1, join_run, FailurePolicy, JoinSummary, MemoryTransport, NetStats, Phase1Outcome,
+    SocketTransport, Transport,
 };

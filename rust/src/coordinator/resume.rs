@@ -7,11 +7,18 @@
 //! missing piece. File layout under a run directory:
 //!
 //! ```text
-//! run/run.meta.json        config fingerprint this directory belongs to
-//! run/phase1.ckpt          phase-1 weights
-//! run/phase1.meta.json     steps/epochs/train-acc/cluster-clock
-//! run/worker<k>.ckpt       finished phase-2 replicas
+//! run/run.meta.json          config fingerprint this directory belongs to
+//! run/phase1.progress        crash-safe mid-phase-1 record (transport::progress)
+//! run/phase1.part-<s>.ckpt   weights at recorded sync step s (mid-phase only)
+//! run/phase1.part-<s>.mom    momentum at recorded sync step s (mid-phase only)
+//! run/phase1.ckpt            phase-1 weights (final)
+//! run/phase1.meta.json       steps/epochs/train-acc/cluster-clock
+//! run/worker<k>.ckpt         finished phase-2 replicas
 //! ```
+//!
+//! A crash *inside* phase 1 resumes at the last recorded sync step via the
+//! progress record; once `phase1.ckpt` is saved the mid-phase files are
+//! cleared and a later resume skips phase 1 entirely.
 //!
 //! The fingerprint (see `transport::run_fingerprint`) pins the model,
 //! dataset, and full phase recipe: resuming the directory with a different
@@ -24,10 +31,10 @@
 
 use std::path::{Path, PathBuf};
 
-use super::swap::{finish_swap, modeled_phase2_clock, SwapConfig, SwapResult};
-use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use super::swap::{finish_swap, modeled_phase2_clock, phase1_train_config, SwapConfig, SwapResult};
+use super::trainer::{TrainEnv, TrainProgress};
 use super::transport::{
-    self, FailurePolicy, MemoryTransport, NetStats, Phase2Ctx, Phase2Report, Transport,
+    self, FailurePolicy, MemoryTransport, NetStats, Phase1Ctx, Phase2Ctx, Phase2Report, Transport,
     WorkerOutcome,
 };
 use crate::model::{load_params, save_params, ParamSet};
@@ -59,6 +66,29 @@ impl RunDir {
 
     pub(crate) fn worker_ckpt(&self, w: usize) -> PathBuf {
         self.dir.join(format!("worker{w}.ckpt"))
+    }
+
+    pub(crate) fn phase1_progress(&self) -> PathBuf {
+        self.dir.join("phase1.progress")
+    }
+
+    pub(crate) fn phase1_part(&self, step: u64, kind: &str) -> PathBuf {
+        self.dir.join(format!("phase1.part-{step}.{kind}"))
+    }
+
+    /// Remove the progress record and its part files: called once the
+    /// final `phase1.ckpt` is saved (the record is mid-phase state, not a
+    /// run artifact — leaving it behind would shadow nothing but waste a
+    /// full arena on disk).
+    pub(crate) fn clear_phase1_progress(&self) -> Result<()> {
+        let _ = std::fs::remove_file(self.phase1_progress());
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            if entry.file_name().to_string_lossy().starts_with("phase1.part-") {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        Ok(())
     }
 
     pub fn has_phase1(&self) -> bool {
@@ -211,9 +241,14 @@ pub fn run_swap_resumable_with(
     let wall0 = std::time::Instant::now();
     let fingerprint = transport::run_fingerprint(env, cfg);
     dir.check_fingerprint(&fingerprint)?;
-    let devices = cfg.total_devices();
 
     // ---- phase 1 (or resume) -------------------------------------------
+    // A fresh-or-interrupted phase 1 goes through the transport with the
+    // run dir attached: the collective records crash-safe progress as it
+    // goes (and re-enters at the last recorded step if this process is
+    // itself a restart). Once the final checkpoint lands the mid-phase
+    // record is cleared.
+    let mut p1_net = NetStats::default();
     let (params, p1, clock) = if dir.has_phase1() {
         crate::info!("resume: phase 1 loaded from {}", dir.dir.display());
         dir.load_phase1(env)?
@@ -221,25 +256,23 @@ pub fn run_swap_resumable_with(
         let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
         let mut momentum = params.zeros_like();
         let mut clock = ClusterClock::new();
-        let p1 = run_sync_training(
-            env,
+        let report = transport.run_phase1(
+            &Phase1Ctx {
+                env,
+                cfg,
+                train: phase1_train_config(cfg, env),
+                policy,
+                run_dir: Some(dir),
+                fingerprint: fingerprint.clone(),
+            },
             &mut params,
             &mut momentum,
-            &SyncTrainConfig {
-                devices,
-                global_batch: devices * env.exec_batch,
-                max_epochs: cfg.phase1_max_epochs,
-                stop_train_acc: cfg.phase1_stop_acc,
-                sched: cfg.phase1_sched.clone(),
-                sched_offset: 0,
-                seed_stream: 0,
-                seed: cfg.seed,
-            },
             &mut clock,
-            |_, _, _| {},
         )?;
-        dir.save_phase1(env, &params, &p1, &clock)?;
-        (params, p1, clock)
+        dir.save_phase1(env, &params, &report.progress, &clock)?;
+        dir.clear_phase1_progress()?;
+        p1_net = report.net;
+        (params, report.progress, clock)
     };
     let phase1_seconds = clock.seconds;
     let phase1_params = params.clone();
@@ -265,7 +298,7 @@ pub fn run_swap_resumable_with(
             },
         ));
     }
-    let mut net = NetStats::default();
+    let mut net = p1_net;
     if !pending.is_empty() {
         let report = transport.run_phase2(&Phase2Ctx {
             env,
@@ -277,7 +310,8 @@ pub fn run_swap_resumable_with(
             fingerprint,
         })?;
         outcomes.extend(report.outcomes);
-        net = report.net;
+        net.framed_bytes += report.net.framed_bytes;
+        net.param_bytes += report.net.param_bytes;
     }
 
     // ---- phases 2½ + 3 (same tail as run_swap_with) ---------------------

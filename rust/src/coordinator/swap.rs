@@ -10,9 +10,9 @@
 //!          statistics are recomputed over the training data.
 
 use super::averaging::{maybe_val_acc, AveragingSpec, Candidate, CandidateKind};
-use super::trainer::{run_sync_training, SyncTrainConfig, TrainEnv, TrainProgress};
+use super::trainer::{SyncTrainConfig, TrainEnv, TrainProgress};
 use super::transport::{
-    self, FailurePolicy, MemoryTransport, NetStats, Phase2Ctx, Phase2Report, Transport,
+    self, FailurePolicy, MemoryTransport, NetStats, Phase1Ctx, Phase2Ctx, Phase2Report, Transport,
     WorkerOutcome,
 };
 use crate::data::EpochSampler;
@@ -46,6 +46,13 @@ pub struct SwapConfig {
     /// snapshot the shared model every N phase-1 steps (Figure 1's left
     /// half plots the phase-1 accuracy trajectory)
     pub phase1_snapshot_every: Option<usize>,
+    /// run phase 1 as a multi-process collective over the socket
+    /// transport (`serve` is the hub, `join`ed workers compute the
+    /// gradient shards); the in-memory transport ignores this
+    pub phase1_dist: bool,
+    /// resumable runs append a crash-safe phase-1 progress record every
+    /// N sync steps (1 = every step)
+    pub phase1_record_every: usize,
 }
 
 impl SwapConfig {
@@ -56,6 +63,24 @@ impl SwapConfig {
 
 /// Per-worker phase-2 snapshot trail (for Figures 1 and 4).
 pub type Snapshots = Vec<Vec<(usize, ParamSet)>>;
+
+/// The sync-training recipe of phase 1 — ONE definition shared by
+/// `run_swap_with`, `run_swap_resumable_with`, and every transport, so an
+/// in-process, distributed, fresh, or resumed phase 1 can never diverge
+/// on the collective's configuration.
+pub(crate) fn phase1_train_config(cfg: &SwapConfig, env: &TrainEnv) -> SyncTrainConfig {
+    let devices = cfg.total_devices();
+    SyncTrainConfig {
+        devices,
+        global_batch: devices * env.exec_batch,
+        max_epochs: cfg.phase1_max_epochs,
+        stop_train_acc: cfg.phase1_stop_acc,
+        sched: cfg.phase1_sched.clone(),
+        sched_offset: 0,
+        seed_stream: 0,
+        seed: cfg.seed,
+    }
+}
 
 /// The sync-training recipe of phase-2 worker `w` — ONE definition shared
 /// by `run_swap` and `run_swap_resumable`, so a fresh run and a resumed
@@ -132,34 +157,28 @@ pub fn run_swap_with(
     let mut clock = ClusterClock::new();
 
     // ---------------- Phase 1: synchronous large batch -----------------
-    let devices = cfg.total_devices();
+    // The transport decides where the collective runs (in-process device
+    // threads, or a hub + remote shard workers over sockets); the recipe
+    // is phase1_train_config either way, so the weights coming out are
+    // transport-independent.
+    let fingerprint = transport::run_fingerprint(env, cfg);
     let mut params = ParamSet::init(env.engine.manifest(), cfg.seed);
     let mut momentum = params.zeros_like();
-    let mut phase1_snapshots: Vec<(usize, ParamSet)> = Vec::new();
-    let p1_snap = cfg.phase1_snapshot_every;
-    let p1 = run_sync_training(
-        env,
+    let p1_report = transport.run_phase1(
+        &Phase1Ctx {
+            env,
+            cfg,
+            train: phase1_train_config(cfg, env),
+            policy,
+            run_dir: None,
+            fingerprint: fingerprint.clone(),
+        },
         &mut params,
         &mut momentum,
-        &SyncTrainConfig {
-            devices,
-            global_batch: devices * env.exec_batch,
-            max_epochs: cfg.phase1_max_epochs,
-            stop_train_acc: cfg.phase1_stop_acc,
-            sched: cfg.phase1_sched.clone(),
-            sched_offset: 0,
-            seed_stream: 0,
-            seed: cfg.seed,
-        },
         &mut clock,
-        |step, ps, _| {
-            if let Some(every) = p1_snap {
-                if step % every == 0 {
-                    phase1_snapshots.push((step, ps.clone()));
-                }
-            }
-        },
     )?;
+    let p1 = p1_report.progress;
+    let phase1_snapshots = p1_report.snapshots;
     let phase1_seconds = clock.seconds;
     let phase1_params = params.clone();
     crate::info!(
@@ -176,15 +195,17 @@ pub fn run_swap_with(
     // w's replica is a pure function of (cfg.seed, 100 + w), so the
     // transport can never change the result, only where it is computed.
     let pending: Vec<usize> = (0..cfg.workers).collect();
-    let report = transport.run_phase2(&Phase2Ctx {
+    let mut report = transport.run_phase2(&Phase2Ctx {
         env,
         cfg,
         start: &params,
         pending: &pending,
         policy,
         run_dir: None,
-        fingerprint: transport::run_fingerprint(env, cfg),
+        fingerprint,
     })?;
+    report.net.framed_bytes += p1_report.net.framed_bytes;
+    report.net.param_bytes += p1_report.net.param_bytes;
     finish_swap(
         env,
         cfg,

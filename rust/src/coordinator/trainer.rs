@@ -265,6 +265,43 @@ pub struct TrainProgress {
     pub train_loss: f64,
 }
 
+/// Mid-segment state to restart a sync segment from (the crash-safe
+/// phase-1 progress record round-trips exactly these fields, plus the
+/// weight/momentum arenas and the clock, which the caller restores).
+/// `start_step` completed optimizer steps are skipped: the sampler is
+/// fast-forwarded past their batches and the step/epoch counters resume
+/// at the absolute index, so an interrupted-and-resumed segment is
+/// bitwise identical to an uninterrupted one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SyncResume {
+    /// completed optimizer steps (absolute, within this segment)
+    pub start_step: usize,
+    /// partial statistics of the in-progress epoch
+    pub epoch_stats: BatchStats,
+    pub last_epoch_acc: f64,
+    pub last_epoch_loss: f64,
+}
+
+/// Everything a per-step progress hook needs to persist a resumable
+/// snapshot of the segment: handed to the hook after EVERY completed
+/// optimizer step (epoch bookkeeping already applied), so `step`,
+/// `epoch_stats`, and the arenas are exactly what [`SyncResume`] +
+/// restored arenas would restart from.
+pub struct SyncState<'a> {
+    /// completed optimizer steps (absolute, within this segment)
+    pub step: usize,
+    pub params: &'a ParamSet,
+    pub momentum: &'a ParamSet,
+    pub epoch_stats: &'a BatchStats,
+    pub last_epoch_acc: f64,
+    pub last_epoch_loss: f64,
+    pub clock: ClusterClock,
+}
+
+/// A per-step progress hook (crash-safe persistence); an `Err` aborts the
+/// segment — tests use that to inject crashes at exact step boundaries.
+pub type ProgressHook<'h> = &'h mut dyn FnMut(&SyncState) -> Result<()>;
+
 /// Run synchronous SGD: `devices` workers each compute gradients on a
 /// `global_batch / devices` shard, gradients are ring-averaged, and the
 /// host applies the Nesterov update (phase 1 of Algorithm 1). With
@@ -279,8 +316,12 @@ pub fn run_sync_training(
     momentum: &mut ParamSet,
     cfg: &SyncTrainConfig,
     clock: &mut ClusterClock,
-    mut observer: impl FnMut(usize, &ParamSet, &BatchStats),
+    observer: impl FnMut(usize, &ParamSet, &BatchStats),
 ) -> Result<TrainProgress> {
+    run_sync_training_with(env, params, momentum, cfg, clock, observer, None, None)
+}
+
+fn check_sync_config(env: &TrainEnv, cfg: &SyncTrainConfig) -> Result<()> {
     if cfg.global_batch != cfg.devices * env.exec_batch {
         return Err(Error::config(format!(
             "global batch {} != devices {} x exec batch {}",
@@ -290,6 +331,23 @@ pub fn run_sync_training(
     if cfg.global_batch > env.train.n {
         return Err(Error::config("global batch larger than the dataset"));
     }
+    Ok(())
+}
+
+/// [`run_sync_training`] with mid-segment resume and a per-step progress
+/// hook. `resume = None, progress = None` is bitwise the plain call.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sync_training_with(
+    env: &TrainEnv,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    cfg: &SyncTrainConfig,
+    clock: &mut ClusterClock,
+    mut observer: impl FnMut(usize, &ParamSet, &BatchStats),
+    resume: Option<SyncResume>,
+    mut progress: Option<ProgressHook>,
+) -> Result<TrainProgress> {
+    check_sync_config(env, cfg)?;
     let sgd = env.sgd_config();
     // zero-copy ownership handoff of the momentum arena for the segment
     // (flat::sgd_step gates its own fan-out on the arena size)
@@ -306,10 +364,27 @@ pub fn run_sync_training(
 
     let steps_per_epoch = sampler.batches_per_epoch();
     let total_steps = cfg.max_epochs * steps_per_epoch;
-    let mut epoch_stats = BatchStats::default();
-    let mut last_epoch_acc = 0.0;
-    let mut last_epoch_loss = f64::INFINITY;
-    let mut steps = 0usize;
+    let resume = resume.unwrap_or(SyncResume {
+        start_step: 0,
+        epoch_stats: BatchStats::default(),
+        last_epoch_acc: 0.0,
+        last_epoch_loss: f64::INFINITY,
+    });
+    let start_step = resume.start_step;
+    if start_step > total_steps {
+        return Err(Error::config(format!(
+            "resume step {start_step} beyond the segment's {total_steps} steps"
+        )));
+    }
+    // skip the batches the completed steps already consumed: batch t is
+    // the t-th draw of the (seed, stream) sampler sequence on every path
+    for _ in 0..start_step {
+        sampler.next_batch();
+    }
+    let mut epoch_stats = resume.epoch_stats;
+    let mut last_epoch_acc = resume.last_epoch_acc;
+    let mut last_epoch_loss = resume.last_epoch_loss;
+    let mut steps = start_step;
 
     let step_compute = env.cost.train_step_time(env.exec_batch);
     let ar_time = env.cost.allreduce_time(cfg.devices);
@@ -328,8 +403,10 @@ pub fn run_sync_training(
         prefetch::make_slots(overlap, || (0..devices).map(|_| batcher.make_batch()).collect());
 
     // the producer: a pure function of the step index (sampler order is
-    // deterministic, augmentation is counter-keyed)
-    let produce = move |step: usize, out: &mut Vec<HostBatch>| {
+    // deterministic, augmentation is counter-keyed); the pipeline counts
+    // local indices, the batch keys stay absolute
+    let produce = move |k: usize, out: &mut Vec<HostBatch>| {
+        let step = start_step + k;
         let global = sampler.next_batch();
         if devices == 1 {
             batcher.assemble_step_into(train, global, aug, step as u64, 0, &mut out[0]);
@@ -343,7 +420,8 @@ pub fn run_sync_training(
     };
 
     // the consumer: the device-side step + bookkeeping (main thread)
-    let consume = |step: usize, batches: &mut Vec<HostBatch>| -> Result<bool> {
+    let consume = |k: usize, batches: &mut Vec<HostBatch>| -> Result<bool> {
+        let step = start_step + k;
         let lr = cfg.sched.lr(cfg.sched_offset + step);
         let stats = if devices == 1 {
             env.engine.train_step(
@@ -383,6 +461,7 @@ pub fn run_sync_training(
         steps += 1;
         observer(cfg.sched_offset + steps - 1, params, &stats);
 
+        let mut stop = false;
         if steps % steps_per_epoch == 0 {
             last_epoch_acc = epoch_stats.accuracy1();
             last_epoch_loss = epoch_stats.mean_loss();
@@ -394,13 +473,147 @@ pub fn run_sync_training(
             );
             epoch_stats = BatchStats::default();
             if last_epoch_acc >= cfg.stop_train_acc {
-                return Ok(false);
+                stop = true;
             }
         }
-        Ok(true)
+        if let Some(h) = progress.as_mut() {
+            (**h)(&SyncState {
+                step: steps,
+                params,
+                momentum: &opt.momentum,
+                epoch_stats: &epoch_stats,
+                last_epoch_acc,
+                last_epoch_loss,
+                clock: *clock,
+            })?;
+        }
+        Ok(!stop)
     };
 
-    prefetch::run_pipeline(total_steps, slots, overlap, produce, consume)?;
+    prefetch::run_pipeline(total_steps - start_step, slots, overlap, produce, consume)?;
+
+    *momentum = opt.momentum;
+    Ok(TrainProgress {
+        steps,
+        epochs: steps as f64 / steps_per_epoch as f64,
+        train_acc: last_epoch_acc,
+        train_loss: last_epoch_loss,
+    })
+}
+
+/// What one sync step's distributed gradient exchange came back with.
+pub struct CollectiveStep {
+    /// per-device gradient arenas in ascending absolute device order —
+    /// only the shards of members that delivered completely this step
+    pub grads: Vec<Vec<f32>>,
+    /// batch statistics accumulated over those shards in the same order
+    pub stats: BatchStats,
+    /// device shards that contributed (= `grads.len()`); prices the
+    /// step's ring all-reduce time
+    pub live_devices: usize,
+    /// modeled seconds of shard compute discarded this step (members
+    /// that died mid-collective), booked into `ClusterClock::lost`
+    pub lost: f64,
+}
+
+/// The coordinator-side loop of a *distributed* phase 1: identical
+/// bookkeeping to [`run_sync_training`] (same optimizer, schedule, stats,
+/// epoch, early-stop, observer, and clock sequence), but the per-device
+/// gradients come from `exchange(step, params)` — remote members
+/// assembling their own shard batches — instead of local threads. On a
+/// zero-failure run the exchange returns the same arenas in the same
+/// order as the in-process path, so the result is bitwise identical; a
+/// repaired (shrunken) ring returns fewer arenas and
+/// `allreduce::ring_mean_inplace` re-normalizes the mean over the
+/// surviving shard set by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sync_collective(
+    env: &TrainEnv,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    cfg: &SyncTrainConfig,
+    clock: &mut ClusterClock,
+    mut observer: impl FnMut(usize, &ParamSet, &BatchStats),
+    resume: Option<SyncResume>,
+    mut progress: Option<ProgressHook>,
+    mut exchange: impl FnMut(usize, &ParamSet) -> Result<CollectiveStep>,
+) -> Result<TrainProgress> {
+    check_sync_config(env, cfg)?;
+    let sgd = env.sgd_config();
+    let mut opt = SgdOptimizer { cfg: sgd, momentum: momentum.take() };
+    let steps_per_epoch = EpochSampler::steps_per_epoch(env.train.n, cfg.global_batch);
+    let total_steps = cfg.max_epochs * steps_per_epoch;
+    let resume = resume.unwrap_or(SyncResume {
+        start_step: 0,
+        epoch_stats: BatchStats::default(),
+        last_epoch_acc: 0.0,
+        last_epoch_loss: f64::INFINITY,
+    });
+    if resume.start_step > total_steps {
+        return Err(Error::config(format!(
+            "resume step {} beyond the segment's {total_steps} steps",
+            resume.start_step
+        )));
+    }
+    let mut epoch_stats = resume.epoch_stats;
+    let mut last_epoch_acc = resume.last_epoch_acc;
+    let mut last_epoch_loss = resume.last_epoch_loss;
+    let mut steps = resume.start_step;
+
+    let step_compute = env.cost.train_step_time(env.exec_batch);
+    let ar_time = env.cost.allreduce_time(cfg.devices);
+    let data_time = env.cost.assembly_time(cfg.global_batch);
+    let step_budget = step_compute + if cfg.devices > 1 { ar_time } else { 0.0 };
+
+    while steps < total_steps {
+        let step = steps;
+        let lr = cfg.sched.lr(cfg.sched_offset + step);
+        let ex = exchange(step, params)?;
+        let mut worker_grads = ex.grads;
+        allreduce::ring_mean_inplace(&mut worker_grads)?;
+        opt.step_mt(params, &worker_grads[0], lr, env.threads)?;
+        clock.advance_compute(step_compute);
+        if ex.live_devices > 1 {
+            clock.advance_comm(env.cost.allreduce_time(ex.live_devices));
+        }
+        clock.note_data(data_time, step_budget, env.prefetch);
+        if ex.lost > 0.0 {
+            clock.note_drop(ex.lost);
+        }
+        epoch_stats.accumulate(&ex.stats);
+        steps += 1;
+        observer(cfg.sched_offset + steps - 1, params, &ex.stats);
+
+        let mut stop = false;
+        if steps % steps_per_epoch == 0 {
+            last_epoch_acc = epoch_stats.accuracy1();
+            last_epoch_loss = epoch_stats.mean_loss();
+            crate::debug!(
+                "epoch {} train acc {:.4} loss {:.4}",
+                steps / steps_per_epoch,
+                last_epoch_acc,
+                last_epoch_loss
+            );
+            epoch_stats = BatchStats::default();
+            if last_epoch_acc >= cfg.stop_train_acc {
+                stop = true;
+            }
+        }
+        if let Some(h) = progress.as_mut() {
+            (**h)(&SyncState {
+                step: steps,
+                params,
+                momentum: &opt.momentum,
+                epoch_stats: &epoch_stats,
+                last_epoch_acc,
+                last_epoch_loss,
+                clock: *clock,
+            })?;
+        }
+        if stop {
+            break;
+        }
+    }
 
     *momentum = opt.momentum;
     Ok(TrainProgress {

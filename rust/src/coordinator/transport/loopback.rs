@@ -1,0 +1,189 @@
+//! Loopback wire calibration — the measurement half of ROADMAP item 1.
+//!
+//! `ClusterClock` prices communication with an α–β [`NetModel`]; this
+//! module measures α and β on a REAL loopback socket pair and times the
+//! phase-1 hub-exchange pattern over real sockets, so the modeled comm
+//! time can be held against measured wall clock on the same machine.
+//! rust/tests/transport.rs asserts the two agree within a stated
+//! tolerance, and rust/benches/transport.rs reports the
+//! measured-vs-predicted rows in BENCH_transport.json.
+//!
+//! TCP on 127.0.0.1 with ephemeral ports: nothing here touches the
+//! transport's own listener, and no fixed port can collide in CI.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use super::wire::{self, Msg};
+use crate::runtime::BatchStats;
+use crate::sim::NetModel;
+use crate::util::{Error, Result};
+
+/// Measured loopback constants, in [`NetModel`] units.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    /// one-way per-frame latency α in seconds
+    pub latency: f64,
+    /// payload bandwidth β in bytes/sec
+    pub bandwidth: f64,
+}
+
+impl Calibration {
+    /// A [`NetModel`] priced with the measured constants — plug into a
+    /// [`crate::sim::CostModel`] to predict wire time on THIS machine.
+    pub fn net_model(&self) -> NetModel {
+        NetModel { latency: self.latency, bandwidth: self.bandwidth }
+    }
+}
+
+/// A connected loopback pair with Nagle disabled (coalescing would fold
+/// whole round trips into one segment and poison the latency estimate).
+fn pair() -> Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let client = TcpStream::connect(addr)?;
+    let (server, _) = listener.accept()?;
+    client.set_nodelay(true)?;
+    server.set_nodelay(true)?;
+    Ok((client, server))
+}
+
+/// Measure α from `iters` small-frame round trips (rtt ≈ 2α) and β from
+/// bulk frames of `bulk_bytes` f32 payload (per trip ≈ rtt + bytes/β) on
+/// a fresh loopback pair.
+pub fn calibrate(iters: usize, bulk_bytes: usize) -> Result<Calibration> {
+    let (mut a, mut b) = pair()?;
+    let iters = iters.max(1);
+    let echo = std::thread::spawn(move || -> Result<()> {
+        loop {
+            let (msg, _) = wire::read_msg(&mut b)?;
+            match msg {
+                Msg::Heartbeat { .. } | Msg::P1Step { .. } => {
+                    wire::write_msg(&mut b, &Msg::Heartbeat { worker: 0, step: 0 })?;
+                }
+                _ => return Ok(()),
+            }
+        }
+    });
+
+    let ping = Msg::Heartbeat { worker: 0, step: 0 };
+    for _ in 0..iters.min(8) {
+        wire::write_msg(&mut a, &ping)?;
+        wire::read_msg(&mut a)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        wire::write_msg(&mut a, &ping)?;
+        wire::read_msg(&mut a)?;
+    }
+    let rtt = t0.elapsed().as_secs_f64() / iters as f64;
+    let latency = (rtt / 2.0).max(1e-9);
+
+    let numel = (bulk_bytes / 4).max(1);
+    let bulk = Msg::P1Step { step: 0, params: vec![1.0f32; numel] };
+    wire::write_msg(&mut a, &bulk)?;
+    wire::read_msg(&mut a)?; // warm-up trip
+    let reps = 8usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        wire::write_msg(&mut a, &bulk)?;
+        wire::read_msg(&mut a)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    let transfer = (per - rtt).max(1e-9);
+    let bandwidth = (4 * numel) as f64 / transfer;
+
+    wire::write_msg(&mut a, &Msg::P1Done { step: 0 })?;
+    echo.join().map_err(|_| Error::invalid("loopback echo thread panicked"))??;
+    Ok(Calibration { latency, bandwidth })
+}
+
+/// Time `serve_phase1`'s per-step wire pattern in isolation: the hub
+/// broadcasts a `numel`-weight `P1Step` to every member and gathers `gd`
+/// same-sized `P1Grad`s per member back — no training, so the wall clock
+/// is pure wire + codec. Returns mean seconds per step, the measured
+/// counterpart of [`NetModel::hub_exchange`].
+pub fn time_hub_exchange(members: usize, gd: usize, numel: usize, steps: usize) -> Result<f64> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let steps = steps.max(1);
+    std::thread::scope(|s| -> Result<f64> {
+        for m in 0..members {
+            s.spawn(move || -> Result<()> {
+                let mut conn = TcpStream::connect(addr)?;
+                conn.set_nodelay(true)?;
+                loop {
+                    let (msg, _) = wire::read_msg(&mut conn)?;
+                    match msg {
+                        Msg::P1Step { step, params } => {
+                            for d in 0..gd {
+                                wire::write_msg(
+                                    &mut conn,
+                                    &Msg::P1Grad {
+                                        device: m * gd + d,
+                                        step,
+                                        stats: BatchStats::default(),
+                                        grads: params.clone(),
+                                    },
+                                )?;
+                            }
+                        }
+                        _ => return Ok(()),
+                    }
+                }
+            });
+        }
+        let mut links: Vec<TcpStream> = Vec::with_capacity(members);
+        for _ in 0..members {
+            let (conn, _) = listener.accept()?;
+            conn.set_nodelay(true)?;
+            links.push(conn);
+        }
+        let msg = Msg::P1Step { step: 0, params: vec![1.0f32; numel] };
+        let mut exchange = |links: &mut [TcpStream]| -> Result<()> {
+            for l in links.iter_mut() {
+                wire::write_msg(l, &msg)?;
+            }
+            for l in links.iter_mut() {
+                for _ in 0..gd {
+                    wire::read_msg(l)?;
+                }
+            }
+            Ok(())
+        };
+        exchange(&mut links)?; // warm-up step
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            exchange(&mut links)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / steps as f64;
+        for l in links.iter_mut() {
+            wire::write_msg(l, &Msg::P1Done { step: steps as u64 })?;
+        }
+        Ok(per)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_is_finite_and_positive() {
+        let c = calibrate(16, 1 << 16).unwrap();
+        assert!(c.latency > 0.0 && c.latency.is_finite(), "latency {}", c.latency);
+        assert!(c.bandwidth > 0.0 && c.bandwidth.is_finite(), "bandwidth {}", c.bandwidth);
+        // loopback is fast, but not faster than light: sanity bounds only,
+        // wide enough for the noisiest CI runner
+        assert!(c.latency < 0.1);
+        assert!(c.bandwidth > 1e4);
+        let n = c.net_model();
+        assert!(n.hub_exchange(1 << 20, 2, 4) > 0.0);
+    }
+
+    #[test]
+    fn hub_exchange_timing_runs() {
+        let per = time_hub_exchange(2, 2, 256, 4).unwrap();
+        assert!(per > 0.0 && per.is_finite());
+    }
+}

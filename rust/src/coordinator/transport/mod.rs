@@ -21,20 +21,26 @@
 //!   length-prefix framed protocol of [`wire`]: join handshake, phase-1
 //!   weight broadcast, heartbeats, worker-done weight upload.
 
+pub mod loopback;
 pub mod memory;
+pub mod progress;
 pub mod socket;
 pub mod wire;
 
 pub use memory::MemoryTransport;
-pub use socket::{join_run, JoinSummary, SocketTransport};
+pub use progress::{Phase1Progress, Phase1Recorder};
+pub use socket::{join_phase1, join_run, JoinSummary, Phase1Outcome, SocketTransport};
 
 use std::time::Duration;
 
 use super::resume::RunDir;
 use super::swap::SwapConfig;
-use super::trainer::TrainEnv;
-use crate::model::ParamSet;
-use crate::runtime::Backend;
+use super::trainer::{
+    run_sync_training_with, ProgressHook, SyncResume, SyncState, SyncTrainConfig, TrainEnv,
+    TrainProgress,
+};
+use crate::model::{load_params, save_params, ParamSet};
+use crate::runtime::{Backend, BatchStats};
 use crate::sim::ClusterClock;
 use crate::util::{Json, Result};
 
@@ -62,9 +68,31 @@ pub struct FailurePolicy {
     /// client-side connect attempts before `join` gives up (the server
     /// may still be in phase 1 when a worker starts)
     pub join_retries: usize,
-    /// backoff between connect attempts (linear: attempt k waits k times
-    /// this long)
+    /// base backoff between connect attempts: attempt k waits k+1 times
+    /// this long, plus up to one extra window of deterministic per-process
+    /// jitter (see [`FailurePolicy::backoff_delay`])
     pub retry_backoff: Duration,
+}
+
+impl FailurePolicy {
+    /// Delay before reconnect attempt `attempt` (0-based): a bounded
+    /// linear ramp plus jitter. Pure linear backoff makes workers that
+    /// were restarted together reconnect in lockstep forever — each
+    /// attempt hammers the coordinator's accept loop at the same instant.
+    /// The jitter is FNV-1a of `(salt, attempt)` reduced into one backoff
+    /// window: stateless, reproducible per process (callers pass the
+    /// process id as salt), and decorrelated across processes.
+    pub fn backoff_delay(&self, attempt: u32, salt: u64) -> Duration {
+        let base = self.retry_backoff * (attempt + 1);
+        let window = self.retry_backoff.as_nanos() as u64;
+        if window == 0 {
+            return base;
+        }
+        let mut key = [0u8; 12];
+        key[..8].copy_from_slice(&salt.to_le_bytes());
+        key[8..].copy_from_slice(&attempt.to_le_bytes());
+        base + Duration::from_nanos(progress::fnv1a(&key) % window)
+    }
 }
 
 impl Default for FailurePolicy {
@@ -136,14 +164,177 @@ pub struct Phase2Report {
     pub net: NetStats,
 }
 
-/// How phase 2 is executed: in-process threads or remote processes. The
-/// contract every implementation must honor: worker `w` trains with
-/// `phase2_worker_config(cfg, env, w)` from `ctx.start`, so its replica is
-/// a pure function of `(cfg.seed, 100 + w)` — transports can never change
-/// the result, only where it is computed.
+/// Everything a transport needs to run the phase-1 synchronous collective.
+pub struct Phase1Ctx<'a> {
+    pub env: &'a TrainEnv<'a>,
+    pub cfg: &'a SwapConfig,
+    /// the phase-1 sync-training recipe (ONE definition shared by every
+    /// execution path — see `swap::phase1_train_config`)
+    pub train: SyncTrainConfig,
+    pub policy: &'a FailurePolicy,
+    /// persist a crash-safe phase-1 progress record here (resumable runs)
+    pub run_dir: Option<&'a RunDir>,
+    /// config fingerprint of this run — phase-1 joins and the progress
+    /// record must present/carry the identical string
+    pub fingerprint: String,
+}
+
+/// Outcome of phase 1 over a transport. The weights/momentum/clock come
+/// back through the `run_phase1` out-parameters; this carries the rest.
+pub struct Phase1Report {
+    pub progress: TrainProgress,
+    /// phase-1 snapshot trail if requested (figure instrumentation)
+    pub snapshots: Vec<(usize, ParamSet)>,
+    /// wire traffic the collective moved (zero for in-process execution)
+    pub net: NetStats,
+}
+
+/// How SWAP's phases are executed: in-process threads or remote processes.
+/// The contract every implementation must honor: phase 1 trains with
+/// `ctx.train` and worker `w` of phase 2 trains with
+/// `phase2_worker_config(cfg, env, w)` from `ctx.start`, so the results
+/// are pure functions of the config — transports can never change them,
+/// only where they are computed (a zero-failure distributed phase 1 is
+/// bitwise identical to the in-process loop).
 pub trait Transport {
     fn name(&self) -> &'static str;
+
+    /// Run the phase-1 synchronous collective, mutating the weight /
+    /// momentum arenas and the modeled clock in place. The default is the
+    /// historical in-process loop (with crash-safe progress recording
+    /// when `ctx.run_dir` is set); `SocketTransport` overrides it to act
+    /// as the hub of a multi-process collective when `cfg.phase1_dist`.
+    fn run_phase1(
+        &self,
+        ctx: &Phase1Ctx,
+        params: &mut ParamSet,
+        momentum: &mut ParamSet,
+        clock: &mut ClusterClock,
+    ) -> Result<Phase1Report> {
+        run_phase1_local(ctx, params, momentum, clock)
+    }
+
     fn run_phase2(&self, ctx: &Phase2Ctx) -> Result<Phase2Report>;
+}
+
+/// The in-process phase 1: `run_sync_training_with` plus, when a run dir
+/// is present, the crash-safe progress record — every
+/// `cfg.phase1_record_every` steps the weight/momentum arenas are
+/// published as part files and an fsync'd entry is appended, so a crashed
+/// run re-enters the collective at the last recorded step (bitwise
+/// identical to never having crashed; pinned in rust/tests/transport.rs).
+pub fn run_phase1_local(
+    ctx: &Phase1Ctx,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    clock: &mut ClusterClock,
+) -> Result<Phase1Report> {
+    let mut snapshots: Vec<(usize, ParamSet)> = Vec::new();
+    let snap = ctx.cfg.phase1_snapshot_every;
+    let observer = |step: usize, ps: &ParamSet, _: &BatchStats| {
+        if let Some(every) = snap {
+            if step % every == 0 {
+                snapshots.push((step, ps.clone()));
+            }
+        }
+    };
+
+    let mut resume = None;
+    let mut hook_state: Option<(Phase1Recorder, Option<u64>)> = None;
+    if let Some(dir) = ctx.run_dir {
+        let (rec, found) = open_phase1_record(ctx, dir, params, momentum, clock)?;
+        hook_state = Some((rec, found.map(|r| r.start_step as u64)));
+        resume = found;
+    }
+    let recording = hook_state.is_some();
+    let record_every = ctx.cfg.phase1_record_every.max(1);
+    let mut hook = |st: &SyncState| -> Result<()> {
+        let Some((rec, prev)) = hook_state.as_mut() else { return Ok(()) };
+        if st.step == 0 || st.step % record_every != 0 {
+            return Ok(());
+        }
+        record_phase1_step(ctx, ctx.run_dir.unwrap(), rec, prev, st)
+    };
+    let progress: Option<ProgressHook> = if recording { Some(&mut hook) } else { None };
+
+    let p = run_sync_training_with(
+        ctx.env, params, momentum, &ctx.train, clock, observer, resume, progress,
+    )?;
+    Ok(Phase1Report { progress: p, snapshots, net: NetStats::default() })
+}
+
+/// Open (or create) the run dir's progress record and, if a recorded step
+/// has both part files intact on disk (existence + arena-hash match),
+/// restore the arenas/clock from it and return the matching
+/// [`SyncResume`]. Recorded entries whose parts are missing or torn are
+/// skipped — the scan walks backwards to the newest usable step.
+pub(crate) fn open_phase1_record(
+    ctx: &Phase1Ctx,
+    dir: &RunDir,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    clock: &mut ClusterClock,
+) -> Result<(Phase1Recorder, Option<SyncResume>)> {
+    let (rec, entries) =
+        Phase1Recorder::open(&dir.phase1_progress(), &ctx.fingerprint, params.numel() as u64)?;
+    let manifest = ctx.env.engine.manifest();
+    for e in entries.iter().rev() {
+        let Ok(p) = load_params(dir.phase1_part(e.step, "ckpt"), manifest) else { continue };
+        let Ok(m) = load_params(dir.phase1_part(e.step, "mom"), manifest) else { continue };
+        if progress::fnv1a_f32s(p.data()) != e.params_hash
+            || progress::fnv1a_f32s(m.data()) != e.momentum_hash
+        {
+            continue;
+        }
+        crate::info!("resume: phase 1 collective re-entered at step {}", e.step);
+        *params = p;
+        *momentum = m;
+        *clock = e.clock;
+        return Ok((
+            rec,
+            Some(SyncResume {
+                start_step: e.step as usize,
+                epoch_stats: e.epoch_stats,
+                last_epoch_acc: e.last_epoch_acc,
+                last_epoch_loss: e.last_epoch_loss,
+            }),
+        ));
+    }
+    Ok((rec, None))
+}
+
+/// One crash-safe record: publish the step's part files (atomic tmp +
+/// fsync + rename), append the fsync'd entry, THEN delete the previous
+/// step's parts — at every crash point at least one recorded step is
+/// fully resumable.
+pub(crate) fn record_phase1_step(
+    ctx: &Phase1Ctx,
+    dir: &RunDir,
+    rec: &mut Phase1Recorder,
+    prev: &mut Option<u64>,
+    st: &SyncState,
+) -> Result<()> {
+    let step = st.step as u64;
+    let manifest = ctx.env.engine.manifest();
+    save_params(dir.phase1_part(step, "ckpt"), manifest, st.params)?;
+    save_params(dir.phase1_part(step, "mom"), manifest, st.momentum)?;
+    rec.append(&Phase1Progress {
+        step,
+        epoch_stats: *st.epoch_stats,
+        last_epoch_acc: st.last_epoch_acc,
+        last_epoch_loss: st.last_epoch_loss,
+        clock: st.clock,
+        params_hash: progress::fnv1a_f32s(st.params.data()),
+        momentum_hash: progress::fnv1a_f32s(st.momentum.data()),
+    })?;
+    if let Some(p) = prev.take() {
+        if p != step {
+            let _ = std::fs::remove_file(dir.phase1_part(p, "ckpt"));
+            let _ = std::fs::remove_file(dir.phase1_part(p, "mom"));
+        }
+    }
+    *prev = Some(step);
+    Ok(())
 }
 
 /// Everything that must agree for two processes (or two sessions of one
@@ -179,4 +370,39 @@ pub fn run_fingerprint(env: &TrainEnv, cfg: &SwapConfig) -> String {
         ("averaging", Json::str(cfg.averaging.id())),
     ])
     .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_ramps_with_bounded_jitter() {
+        let p = FailurePolicy::default();
+        let base = p.retry_backoff;
+        for a in 0..6u32 {
+            let d = p.backoff_delay(a, 42);
+            // linear ramp floor, plus strictly less than one extra window
+            assert!(d >= base * (a + 1), "attempt {a}: {d:?}");
+            assert!(d < base * (a + 2), "attempt {a}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_jitter_decorrelates_processes_deterministically() {
+        let p = FailurePolicy::default();
+        // two workers restarted together must not reconnect in lockstep
+        let a: Vec<_> = (0..4).map(|k| p.backoff_delay(k, 1)).collect();
+        let b: Vec<_> = (0..4).map(|k| p.backoff_delay(k, 2)).collect();
+        assert_ne!(a, b);
+        // but each process's schedule is reproducible
+        let again: Vec<_> = (0..4).map(|k| p.backoff_delay(k, 1)).collect();
+        assert_eq!(a, again);
+    }
+
+    #[test]
+    fn backoff_zero_window_means_no_jitter() {
+        let p = FailurePolicy { retry_backoff: Duration::ZERO, ..FailurePolicy::default() };
+        assert_eq!(p.backoff_delay(3, 99), Duration::ZERO);
+    }
 }

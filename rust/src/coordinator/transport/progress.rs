@@ -1,0 +1,344 @@
+//! Crash-safe phase-1 progress record: an append-only binary log in the
+//! run directory that lets a restarted `serve` (or an in-process resumable
+//! run) re-enter the synchronous collective at the last completed sync
+//! step instead of redoing phase 1 from step 0.
+//!
+//! File layout (`phase1.progress`, all integers little-endian):
+//!
+//! ```text
+//! header (28 bytes):
+//!   magic            8  b"SWP1PRG1"
+//!   version          4  u32 = 1
+//!   fingerprint      8  FNV-1a of the run fingerprint string
+//!   arena_len        8  parameter count (u64)
+//! entry (repeated, 140 bytes each):
+//!   payload_len      4  u32 = 128
+//!   checksum         8  FNV-1a of the payload bytes
+//!   payload        128  16 x u64/f64 slots (see `encode_payload`)
+//! ```
+//!
+//! Durability contract: each entry is appended with a single `write_all`
+//! followed by `sync_all`, AFTER the step's weight/momentum part files
+//! were atomically published (tmp + fsync + rename) and BEFORE the
+//! previous step's parts are deleted — so at every crash point at least
+//! one recorded step has both a valid entry and matching arenas on disk.
+//! A torn tail write (partial length, short payload, or checksum
+//! mismatch) invalidates only the tail: parsing stops at the first bad
+//! entry, the file is truncated back to the last valid one, and the run
+//! resumes from there. A header that names a different fingerprint or
+//! arena length is a hard error — resuming a collective under a different
+//! configuration must never silently restart it.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::runtime::BatchStats;
+use crate::sim::ClusterClock;
+use crate::util::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"SWP1PRG1";
+const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 8 + 4 + 8 + 8;
+const ENTRY_PAYLOAD: usize = 16 * 8;
+const ENTRY_BYTES: usize = 4 + 8 + ENTRY_PAYLOAD;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over raw bytes — the record's only integrity primitive (no
+/// crypto needed: the threat model is torn writes, not adversaries).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over an f32 arena's little-endian bytes: fingerprints the
+/// weight/momentum part files so resume can verify an arena on disk is
+/// the one the entry was recorded against.
+pub fn fnv1a_f32s(xs: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// One recorded sync step: everything `SyncResume` needs plus the clock
+/// and the hashes of the step's published weight/momentum part files.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase1Progress {
+    /// completed optimizer steps at record time
+    pub step: u64,
+    /// partial statistics of the in-progress epoch
+    pub epoch_stats: BatchStats,
+    pub last_epoch_acc: f64,
+    pub last_epoch_loss: f64,
+    pub clock: ClusterClock,
+    /// FNV-1a of `phase1.part-<step>.ckpt`'s f32 arena
+    pub params_hash: u64,
+    /// FNV-1a of `phase1.part-<step>.mom`'s f32 arena
+    pub momentum_hash: u64,
+}
+
+fn encode_payload(e: &Phase1Progress) -> [u8; ENTRY_PAYLOAD] {
+    let slots: [u64; 16] = [
+        e.step,
+        e.epoch_stats.sum_loss.to_bits(),
+        e.epoch_stats.correct1 as u64,
+        e.epoch_stats.correct5 as u64,
+        e.epoch_stats.examples as u64,
+        e.last_epoch_acc.to_bits(),
+        e.last_epoch_loss.to_bits(),
+        e.clock.seconds.to_bits(),
+        e.clock.compute.to_bits(),
+        e.clock.comm.to_bits(),
+        e.clock.data_hidden.to_bits(),
+        e.clock.data_exposed.to_bits(),
+        e.clock.eval.to_bits(),
+        e.clock.lost.to_bits(),
+        e.params_hash,
+        e.momentum_hash,
+    ];
+    let mut out = [0u8; ENTRY_PAYLOAD];
+    for (i, s) in slots.iter().enumerate() {
+        out[i * 8..(i + 1) * 8].copy_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+fn decode_payload(p: &[u8]) -> Phase1Progress {
+    let slot = |i: usize| u64::from_le_bytes(p[i * 8..(i + 1) * 8].try_into().unwrap());
+    Phase1Progress {
+        step: slot(0),
+        epoch_stats: BatchStats {
+            sum_loss: f64::from_bits(slot(1)),
+            correct1: slot(2) as i64,
+            correct5: slot(3) as i64,
+            examples: slot(4) as i64,
+        },
+        last_epoch_acc: f64::from_bits(slot(5)),
+        last_epoch_loss: f64::from_bits(slot(6)),
+        clock: ClusterClock {
+            seconds: f64::from_bits(slot(7)),
+            compute: f64::from_bits(slot(8)),
+            comm: f64::from_bits(slot(9)),
+            data_hidden: f64::from_bits(slot(10)),
+            data_exposed: f64::from_bits(slot(11)),
+            eval: f64::from_bits(slot(12)),
+            lost: f64::from_bits(slot(13)),
+        },
+        params_hash: slot(14),
+        momentum_hash: slot(15),
+    }
+}
+
+/// Parse the valid prefix of a record file's bytes. A full-but-wrong
+/// header errors; a torn tail entry just ends the prefix.
+fn parse(bytes: &[u8], fp_hash: u64, arena_len: u64) -> Result<Vec<Phase1Progress>> {
+    if &bytes[..8] != MAGIC {
+        return Err(Error::invalid("phase1 progress: bad magic (not a progress record)"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::invalid(format!("phase1 progress: unknown version {version}")));
+    }
+    let have_fp = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    if have_fp != fp_hash {
+        return Err(Error::config(
+            "phase1 progress record belongs to a different run configuration; \
+             use a fresh --run-dir instead of mixing runs",
+        ));
+    }
+    let have_len = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    if have_len != arena_len {
+        return Err(Error::config(format!(
+            "phase1 progress record expects {have_len} parameters, this model has {arena_len}"
+        )));
+    }
+    let mut entries = Vec::new();
+    let mut i = HEADER_BYTES;
+    while bytes.len() - i >= ENTRY_BYTES {
+        let len = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+        if len != ENTRY_PAYLOAD {
+            break; // torn or foreign tail
+        }
+        let checksum = u64::from_le_bytes(bytes[i + 4..i + 12].try_into().unwrap());
+        let payload = &bytes[i + 12..i + 12 + ENTRY_PAYLOAD];
+        if fnv1a(payload) != checksum {
+            break; // torn write: only the tail entry can be affected
+        }
+        entries.push(decode_payload(payload));
+        i += ENTRY_BYTES;
+    }
+    Ok(entries)
+}
+
+/// Append-only writer over the progress record. `open` returns every
+/// valid entry already on disk (oldest first) and truncates any torn
+/// tail, so subsequent appends extend a clean file.
+pub struct Phase1Recorder {
+    file: File,
+}
+
+impl Phase1Recorder {
+    pub fn open(
+        path: &Path,
+        fingerprint: &str,
+        arena_len: u64,
+    ) -> Result<(Self, Vec<Phase1Progress>)> {
+        let fp_hash = fnv1a(fingerprint.as_bytes());
+        let existing = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        if existing.len() < HEADER_BYTES {
+            // absent, empty, or torn mid-header: nothing was recorded yet
+            let mut file =
+                OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
+            let mut h = Vec::with_capacity(HEADER_BYTES);
+            h.extend_from_slice(MAGIC);
+            h.extend_from_slice(&VERSION.to_le_bytes());
+            h.extend_from_slice(&fp_hash.to_le_bytes());
+            h.extend_from_slice(&arena_len.to_le_bytes());
+            file.write_all(&h)?;
+            file.sync_all()?;
+            return Ok((Phase1Recorder { file }, Vec::new()));
+        }
+        let entries = parse(&existing, fp_hash, arena_len)?;
+        let file = OpenOptions::new().write(true).open(path)?;
+        file.set_len((HEADER_BYTES + entries.len() * ENTRY_BYTES) as u64)?;
+        Ok((Phase1Recorder { file }, entries))
+    }
+
+    /// Append one entry and fsync. The caller publishes the step's part
+    /// files BEFORE this and deletes the previous step's parts AFTER —
+    /// see the module docs for why that ordering is crash-safe.
+    pub fn append(&mut self, e: &Phase1Progress) -> Result<()> {
+        let payload = encode_payload(e);
+        let mut rec = Vec::with_capacity(ENTRY_BYTES);
+        rec.extend_from_slice(&(ENTRY_PAYLOAD as u32).to_le_bytes());
+        rec.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.write_all(&rec)?;
+        self.file.sync_all()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("swap-p1prg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.progress"))
+    }
+
+    fn entry(step: u64) -> Phase1Progress {
+        let mut clock = ClusterClock::new();
+        clock.advance_compute(step as f64 * 0.25);
+        clock.note_drop(0.5);
+        Phase1Progress {
+            step,
+            epoch_stats: BatchStats {
+                sum_loss: 1.5 * step as f64,
+                correct1: step as i64,
+                correct5: 2 * step as i64,
+                examples: 8 * step as i64,
+            },
+            last_epoch_acc: 0.25,
+            last_epoch_loss: 2.0,
+            clock,
+            params_hash: 0x1111 + step,
+            momentum_hash: 0x2222 + step,
+        }
+    }
+
+    #[test]
+    fn round_trips_entries() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let (mut rec, got) = Phase1Recorder::open(&path, "fp-a", 10).unwrap();
+        assert!(got.is_empty());
+        for s in [4, 8, 12] {
+            rec.append(&entry(s)).unwrap();
+        }
+        drop(rec);
+        let (_, got) = Phase1Recorder::open(&path, "fp-a", 10).unwrap();
+        assert_eq!(got, vec![entry(4), entry(8), entry(12)]);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_appendable() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let (mut rec, _) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        rec.append(&entry(1)).unwrap();
+        rec.append(&entry(2)).unwrap();
+        drop(rec);
+        // tear the last entry at every cut point: only entry 1 survives
+        let full = std::fs::read(&path).unwrap();
+        for cut in (full.len() - ENTRY_BYTES + 1)..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (_, got) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+            assert_eq!(got, vec![entry(1)], "cut at {cut}");
+        }
+        // the torn tail was truncated away; appending extends cleanly
+        let (mut rec, _) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        rec.append(&entry(3)).unwrap();
+        drop(rec);
+        let (_, got) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        assert_eq!(got, vec![entry(1), entry(3)]);
+    }
+
+    #[test]
+    fn corrupt_checksum_invalidates_tail() {
+        let path = tmp("cksum");
+        let _ = std::fs::remove_file(&path);
+        let (mut rec, _) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        rec.append(&entry(1)).unwrap();
+        rec.append(&entry(2)).unwrap();
+        drop(rec);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF; // flip a byte inside entry 2's payload
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, got) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        assert_eq!(got, vec![entry(1)]);
+    }
+
+    #[test]
+    fn wrong_fingerprint_or_arena_is_fatal() {
+        let path = tmp("fp-mismatch");
+        let _ = std::fs::remove_file(&path);
+        let (mut rec, _) = Phase1Recorder::open(&path, "fp-a", 7).unwrap();
+        rec.append(&entry(1)).unwrap();
+        drop(rec);
+        assert!(Phase1Recorder::open(&path, "fp-b", 7).is_err());
+        assert!(Phase1Recorder::open(&path, "fp-a", 8).is_err());
+        assert!(Phase1Recorder::open(&path, "fp-a", 7).is_ok());
+    }
+
+    #[test]
+    fn torn_header_restarts_empty() {
+        let path = tmp("torn-header");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, &MAGIC[..5]).unwrap();
+        let (mut rec, got) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        assert!(got.is_empty());
+        rec.append(&entry(9)).unwrap();
+        drop(rec);
+        let (_, got) = Phase1Recorder::open(&path, "fp", 3).unwrap();
+        assert_eq!(got, vec![entry(9)]);
+    }
+}

@@ -1,15 +1,30 @@
-//! Socket transport: phase-2 workers as separate processes over TCP or a
+//! Socket transport: SWAP's phases as separate processes over TCP or a
 //! Unix domain socket, speaking the framed protocol of [`super::wire`].
 //!
-//! Coordinator side (`serve_phase2`, via `swap-train serve`): after phase
-//! 1 the coordinator listens on `addr`, admits workers during a join
-//! window (checking each one's config fingerprint, assigning unfinished
-//! worker ids — a rejoining process may request a specific id), broadcasts
-//! the phase-1 weights, then supervises one reader thread per link. A
-//! worker that uploads its replica is `Done`; one that disconnects, stays
-//! silent past `FailurePolicy::io_timeout`, or outlives the straggler
-//! deadline (first finisher + `straggler_grace`) is `Dropped` — its link
-//! is shut down and the run proceeds without it.
+//! Phase 1 (`serve_phase1` / [`join_phase1`], when `cfg.phase1_dist`):
+//! the coordinator is the hub of a synchronous collective. Each of the
+//! `cfg.workers` members owns `group_devices` consecutive device shards;
+//! per step the hub broadcasts the weights (`P1Step`), every member
+//! assembles its shard batches (pure functions of the step index) and
+//! uploads one `P1Grad` per device, and the hub runs the ring all-reduce
+//! and optimizer — bitwise the in-process loop when nothing fails. A
+//! member that dies or straggles mid-collective is dropped, the ring
+//! re-forms from the survivors (the mean re-normalizes over the surviving
+//! shard set by construction), its discarded shard compute is booked into
+//! `ClusterClock::lost`, and a restarted process re-joins between steps.
+//! With a run dir the hub also appends the crash-safe phase-1 progress
+//! record, so a killed coordinator resumes the collective at the last
+//! recorded sync step.
+//!
+//! Phase 2 (`serve_phase2`, via `swap-train serve`): the coordinator
+//! admits workers during a join window (checking each one's config
+//! fingerprint, assigning unfinished worker ids — a rejoining process may
+//! request a specific id), broadcasts the phase-1 weights, then
+//! supervises one reader thread per link. A worker that uploads its
+//! replica is `Done`; one that disconnects, stays silent past
+//! `FailurePolicy::io_timeout`, or outlives the straggler deadline (first
+//! finisher + `straggler_grace`) is `Dropped` — its link is shut down and
+//! the run proceeds without it.
 //!
 //! Worker side ([`join_run`], via `swap-train join`): connect with bounded
 //! retry/backoff (the coordinator may still be in phase 1), present the
@@ -29,25 +44,51 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::super::swap::{phase2_worker_config, SwapConfig};
-use super::super::trainer::{run_sync_training, TrainEnv};
+use super::super::swap::{phase1_train_config, phase2_worker_config, SwapConfig};
+use super::super::trainer::{
+    run_sync_collective, run_sync_training, CollectiveStep, ProgressHook, SyncState, TrainEnv,
+};
+use super::progress::Phase1Recorder;
 use super::wire::{self, Msg};
-use super::{FailurePolicy, NetStats, Phase2Ctx, Phase2Report, Transport, WorkerOutcome};
+use super::{
+    FailurePolicy, NetStats, Phase1Ctx, Phase1Report, Phase2Ctx, Phase2Report, Transport,
+    WorkerOutcome,
+};
+use crate::data::{AugStream, Batcher, EpochSampler};
 use crate::model::{save_params, ParamLayout, ParamSet};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, BatchStats};
 use crate::sim::ClusterClock;
 use crate::util::{Error, Result};
 
-/// Phase-2 workers as remote processes; see the module docs.
+/// SWAP's phases as remote processes; see the module docs.
 #[derive(Debug, Clone)]
 pub struct SocketTransport {
     /// "host:port" for TCP, a filesystem path for a Unix socket
     pub addr: String,
+    /// the run's listener, bound once and reused by every phase served
+    /// from this transport: rebinding `addr` between phases races against
+    /// TIME_WAIT left by links the previous phase actively closed
+    listener: Arc<Mutex<Option<Listener>>>,
 }
 
 impl SocketTransport {
     pub fn new(addr: impl Into<String>) -> Self {
-        SocketTransport { addr: addr.into() }
+        SocketTransport { addr: addr.into(), listener: Arc::new(Mutex::new(None)) }
+    }
+
+    /// Take the run's listener, binding it on first use (non-blocking:
+    /// every accept loop in this module polls).
+    fn acquire(&self) -> Result<Listener> {
+        if let Some(l) = self.listener.lock().unwrap().take() {
+            return Ok(l);
+        }
+        let l = Listener::bind(&self.addr)?;
+        l.set_nonblocking(true)?;
+        Ok(l)
+    }
+
+    fn release(&self, l: Listener) {
+        *self.listener.lock().unwrap() = Some(l);
     }
 }
 
@@ -56,8 +97,28 @@ impl Transport for SocketTransport {
         "socket"
     }
 
+    fn run_phase1(
+        &self,
+        ctx: &Phase1Ctx,
+        params: &mut ParamSet,
+        momentum: &mut ParamSet,
+        clock: &mut ClusterClock,
+    ) -> Result<Phase1Report> {
+        if !ctx.cfg.phase1_dist {
+            // phase 1 stays on the coordinator; only phase 2 distributes
+            return super::run_phase1_local(ctx, params, momentum, clock);
+        }
+        let listener = self.acquire()?;
+        let r = serve_phase1(&self.addr, &listener, ctx, params, momentum, clock);
+        self.release(listener);
+        r
+    }
+
     fn run_phase2(&self, ctx: &Phase2Ctx) -> Result<Phase2Report> {
-        serve_phase2(&self.addr, ctx)
+        let listener = self.acquire()?;
+        let r = serve_phase2(&self.addr, &listener, ctx);
+        self.release(listener);
+        r
     }
 }
 
@@ -159,6 +220,7 @@ impl Write for Conn {
     }
 }
 
+#[derive(Debug)]
 enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
@@ -202,6 +264,503 @@ impl Listener {
 }
 
 // ---------------------------------------------------------------------
+// Phase 1: the coordinator as hub of a distributed collective
+// ---------------------------------------------------------------------
+
+/// Reject reason the phase-2 handshake sends a `P1Join` that arrives
+/// after the collective finished — [`join_phase1`] maps it to
+/// [`Phase1Outcome::AlreadyDone`] so the process falls through to
+/// [`join_run`].
+pub(crate) const PHASE1_DONE_REJECT: &str = "phase 1 already complete";
+
+/// Read-timeout quantum of the hub's single-threaded member pump: short
+/// enough that one silent member never stalls the others' drains.
+const PUMP_TICK: Duration = Duration::from_millis(2);
+
+fn would_block(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Accumulates raw socket bytes and yields complete frames. The hub
+/// multiplexes many members on one thread, so it must never sit in
+/// `read_exact` mid-frame on one link while others have data ready —
+/// partial reads stay buffered here and the pump moves on.
+struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Pull whatever the socket has ready and return the next complete
+    /// frame, if any. A read timeout is "no frame yet", never an error;
+    /// EOF and malformed framing are.
+    fn poll(&mut self, conn: &mut Conn) -> Result<Option<(Msg, u64)>> {
+        loop {
+            if let Some(r) = self.take_frame()? {
+                return Ok(Some(r));
+            }
+            let mut chunk = [0u8; 64 * 1024];
+            match conn.read(&mut chunk) {
+                Ok(0) => return Err(Error::invalid("connection closed by peer")),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if would_block(&e) => return Ok(None),
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn take_frame(&mut self) -> Result<Option<(Msg, u64)>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len == 0 || len > wire::MAX_FRAME {
+            return Err(Error::invalid(format!("wire: bad frame length {len}")));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let msg = wire::decode_payload(&self.buf[4..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some((msg, 4 + len as u64)))
+    }
+}
+
+/// One live collective member, indexed by its slot.
+struct MemberLink {
+    conn: Conn,
+    reader: FrameReader,
+    last_heard: Instant,
+}
+
+/// The coordinator side of the distributed phase-1 collective: owns the
+/// member links and implements one `exchange` per sync step for
+/// [`run_sync_collective`].
+struct Phase1Hub<'h, 'e> {
+    addr: &'h str,
+    listener: &'h Listener,
+    ctx: &'h Phase1Ctx<'e>,
+    /// slot -> live link; `None` is a free slot (never joined or dropped)
+    members: Vec<Option<MemberLink>>,
+    sent: u64,
+    recvd: u64,
+    payload: u64,
+    /// members dropped mid-collective over the whole phase
+    deaths: usize,
+}
+
+impl<'h, 'e> Phase1Hub<'h, 'e> {
+    fn live(&self) -> usize {
+        self.members.iter().filter(|m| m.is_some()).count()
+    }
+
+    fn min_members(&self) -> usize {
+        self.ctx.policy.min_workers.max(1)
+    }
+
+    /// The elastic floor: a shrunken ring is fine down to `min_workers`
+    /// members; below that the collective fails loudly.
+    fn check_quorum(&self, step: u64) -> Result<()> {
+        let live = self.live();
+        if live < self.min_members() {
+            return Err(Error::config(format!(
+                "phase 1 collective at step {step}: {live} of {} members left, below \
+                 min_workers {} — aborting",
+                self.members.len(),
+                self.min_members()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Wait up to `connect_timeout` for the full membership, then start
+    /// with whoever came (at least `min_workers`).
+    fn join_window(&mut self, start_step: u64) -> Result<()> {
+        let want = self.members.len();
+        crate::info!(
+            "serve: phase 1 hub on {} waiting for {want} members (join window {:?})",
+            self.addr,
+            self.ctx.policy.connect_timeout
+        );
+        let deadline = Instant::now() + self.ctx.policy.connect_timeout;
+        while self.live() < want && Instant::now() < deadline {
+            match self.listener.accept() {
+                Ok(conn) => self.admit(conn, start_step),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.check_quorum(start_step)?;
+        let live = self.live();
+        if live < want {
+            crate::warn_!("serve: phase 1 starting with {live} of {want} members");
+        }
+        Ok(())
+    }
+
+    /// Admit rejoining members at a step boundary (non-blocking): a
+    /// restarted process re-enters the collective at the current step.
+    fn poll_joins(&mut self, step: u64) {
+        while let Ok(conn) = self.listener.accept() {
+            self.admit(conn, step);
+        }
+    }
+
+    /// Handshake one candidate: fingerprint check, slot assignment (the
+    /// requested slot when free, else the lowest free one), `P1Assign`
+    /// carrying the step the next broadcast will use.
+    fn admit(&mut self, conn: Conn, step: u64) {
+        let mut conn = conn;
+        if conn.set_nonblocking(false).is_err()
+            || conn.set_read_timeout(Some(self.ctx.policy.io_timeout)).is_err()
+        {
+            return;
+        }
+        let msg = match wire::read_msg(&mut conn) {
+            Ok((msg, nb)) => {
+                self.recvd += nb;
+                msg
+            }
+            Err(e) => {
+                crate::warn_!("serve: phase 1 handshake failed: {e}");
+                return;
+            }
+        };
+        let (fingerprint, wanted) = match msg {
+            Msg::P1Join { fingerprint, slot } => (fingerprint, slot),
+            Msg::Join { .. } => {
+                // a phase-2 worker started early; it retries with backoff
+                self.reject(&mut conn, "phase 1 in progress; retry to join phase 2".to_string());
+                return;
+            }
+            _ => {
+                crate::warn_!("serve: phase 1 candidate spoke out of protocol, dropped");
+                return;
+            }
+        };
+        if fingerprint != self.ctx.fingerprint {
+            self.reject(
+                &mut conn,
+                format!(
+                    "config fingerprint mismatch: coordinator runs {}, you presented {fingerprint}",
+                    self.ctx.fingerprint
+                ),
+            );
+            return;
+        }
+        let slot = match wanted {
+            Some(s) if s < self.members.len() && self.members[s].is_none() => s,
+            _ => match self.members.iter().position(|m| m.is_none()) {
+                Some(s) => s,
+                None => {
+                    self.reject(&mut conn, "all member slots taken".to_string());
+                    return;
+                }
+            },
+        };
+        match wire::write_msg(&mut conn, &Msg::P1Assign { slot, step }) {
+            Ok(nb) => self.sent += nb,
+            Err(e) => {
+                crate::warn_!("serve: could not assign member slot {slot}: {e}");
+                return;
+            }
+        }
+        if conn.set_read_timeout(Some(PUMP_TICK)).is_err() {
+            return;
+        }
+        crate::info!("serve: member {slot} joined the phase 1 collective at step {step}");
+        self.members[slot] =
+            Some(MemberLink { conn, reader: FrameReader::new(), last_heard: Instant::now() });
+    }
+
+    fn reject(&mut self, conn: &mut Conn, reason: String) {
+        crate::warn_!("serve: rejected phase 1 join: {reason}");
+        if let Ok(nb) = wire::write_msg(conn, &Msg::Reject { reason }) {
+            self.sent += nb;
+        }
+    }
+
+    fn drop_member(&mut self, s: usize, reason: &str) {
+        if let Some(link) = self.members[s].take() {
+            crate::warn_!("serve: phase 1 member {s} dropped: {reason}");
+            link.conn.shutdown();
+            self.deaths += 1;
+        }
+    }
+
+    /// One sync step's gradient exchange: broadcast the weights, gather
+    /// every live member's device shards, apply the failure policy to
+    /// whoever goes quiet, and hand the surviving arenas (ascending
+    /// absolute device order — the in-process order) to the collective
+    /// loop. Dropping a member mid-gather discards its partial shards:
+    /// the ring re-forms from complete members only, and the mean
+    /// re-normalizes over that shard set inside `ring_mean_inplace`.
+    fn exchange(&mut self, step: u64, ps: &ParamSet) -> Result<CollectiveStep> {
+        let gd = self.ctx.cfg.group_devices;
+        let numel = ps.numel();
+        let step_compute = self.ctx.env.cost.train_step_time(self.ctx.env.exec_batch);
+        let deaths0 = self.deaths;
+        self.poll_joins(step);
+
+        // ---- broadcast this step's weights --------------------------
+        let bcast = Msg::P1Step { step, params: ps.data().to_vec() };
+        for s in 0..self.members.len() {
+            let wrote = match self.members[s].as_mut() {
+                Some(link) => {
+                    let r = wire::write_msg(&mut link.conn, &bcast);
+                    if r.is_ok() {
+                        link.last_heard = Instant::now();
+                    }
+                    r
+                }
+                None => continue,
+            };
+            match wrote {
+                Ok(nb) => {
+                    self.sent += nb;
+                    self.payload += 4 * numel as u64;
+                }
+                Err(e) => self.drop_member(s, &format!("weight broadcast failed: {e}")),
+            }
+        }
+        self.check_quorum(step)?;
+
+        // ---- gather shard gradients ---------------------------------
+        let members = self.members.len();
+        let mut shards: Vec<Option<(Vec<f32>, BatchStats)>> = Vec::new();
+        shards.resize_with(members * gd, || None);
+        let done = |shards: &[Option<(Vec<f32>, BatchStats)>], s: usize| {
+            shards[s * gd..(s + 1) * gd].iter().all(|x| x.is_some())
+        };
+        let mut first_complete: Option<Instant> = None;
+        loop {
+            let mut waiting = 0usize;
+            for s in 0..members {
+                let pumped = match self.members[s].as_mut() {
+                    Some(link) => {
+                        if done(&shards, s) {
+                            continue;
+                        }
+                        pump_member(link, s, step, gd, numel, &mut shards)
+                    }
+                    None => continue,
+                };
+                match pumped {
+                    Ok((framed, pay)) => {
+                        self.recvd += framed;
+                        self.payload += pay;
+                    }
+                    Err(reason) => {
+                        self.drop_member(s, &reason);
+                        // a dead member's partial shards never enter the mean
+                        for sh in &mut shards[s * gd..(s + 1) * gd] {
+                            *sh = None;
+                        }
+                        continue;
+                    }
+                }
+                if done(&shards, s) {
+                    if first_complete.is_none() {
+                        first_complete = Some(Instant::now());
+                    }
+                } else {
+                    waiting += 1;
+                }
+            }
+            if waiting == 0 {
+                break;
+            }
+            // failure-policy sweep over the members still owing shards
+            let now = Instant::now();
+            for s in 0..members {
+                let silent = match &self.members[s] {
+                    Some(link) if !done(&shards, s) => now.duration_since(link.last_heard),
+                    _ => continue,
+                };
+                if silent > self.ctx.policy.io_timeout {
+                    self.drop_member(
+                        s,
+                        &format!("no shard data within {:?}", self.ctx.policy.io_timeout),
+                    );
+                    for sh in &mut shards[s * gd..(s + 1) * gd] {
+                        *sh = None;
+                    }
+                } else if let Some(t0) = first_complete {
+                    if now.duration_since(t0) > self.ctx.policy.straggler_grace {
+                        self.drop_member(
+                            s,
+                            &format!(
+                                "straggler: shards unfinished {:?} after the first member",
+                                self.ctx.policy.straggler_grace
+                            ),
+                        );
+                        for sh in &mut shards[s * gd..(s + 1) * gd] {
+                            *sh = None;
+                        }
+                    }
+                }
+            }
+            self.check_quorum(step)?;
+        }
+        self.check_quorum(step)?;
+
+        // ---- assemble in ascending absolute device order ------------
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.live() * gd);
+        let mut stats = BatchStats::default();
+        for sh in shards.into_iter().flatten() {
+            stats.accumulate(&sh.1);
+            grads.push(sh.0);
+        }
+        let live_devices = grads.len();
+        // every death this step wasted its gd shards' modeled compute
+        let lost = (self.deaths - deaths0) as f64 * step_compute * gd as f64;
+        Ok(CollectiveStep { grads, stats, live_devices, lost })
+    }
+
+    /// Release the surviving members: the collective is over.
+    fn finish(&mut self, steps: u64) {
+        let msg = Msg::P1Done { step: steps };
+        for s in 0..self.members.len() {
+            let wrote = match self.members[s].as_mut() {
+                Some(link) => wire::write_msg(&mut link.conn, &msg),
+                None => continue,
+            };
+            if let Ok(nb) = wrote {
+                self.sent += nb;
+            }
+        }
+    }
+}
+
+/// Drain every frame one member has ready this tick, filing its `P1Grad`
+/// shards for the current step. `Err` is a drop reason (dead link,
+/// protocol violation, foreign shard, bad arena); `Ok` carries the
+/// (framed, weight-payload) byte counts drained.
+fn pump_member(
+    link: &mut MemberLink,
+    s: usize,
+    step: u64,
+    gd: usize,
+    numel: usize,
+    shards: &mut [Option<(Vec<f32>, BatchStats)>],
+) -> std::result::Result<(u64, u64), String> {
+    let mut framed = 0u64;
+    let mut payload = 0u64;
+    loop {
+        let msg = match link.reader.poll(&mut link.conn) {
+            Ok(Some((msg, nb))) => {
+                framed += nb;
+                link.last_heard = Instant::now();
+                msg
+            }
+            Ok(None) => return Ok((framed, payload)),
+            Err(e) => return Err(format!("connection lost: {e}")),
+        };
+        match msg {
+            Msg::Heartbeat { .. } => {}
+            Msg::P1Grad { device, step: gstep, stats, grads } => {
+                if gstep != step {
+                    continue; // stale shard from a superseded step
+                }
+                if device / gd != s {
+                    return Err(format!("delivered foreign device shard {device}"));
+                }
+                if grads.len() != numel {
+                    return Err(format!(
+                        "bad gradient arena: {} values, expected {numel}",
+                        grads.len()
+                    ));
+                }
+                payload += 4 * grads.len() as u64;
+                shards[device] = Some((grads, stats));
+            }
+            _ => return Err("spoke out of protocol".to_string()),
+        }
+    }
+}
+
+/// The hub side of a distributed phase 1: identical bookkeeping and
+/// progress recording to `run_phase1_local`, with the per-device
+/// gradients gathered from remote members by a [`Phase1Hub`].
+fn serve_phase1(
+    addr: &str,
+    listener: &Listener,
+    ctx: &Phase1Ctx,
+    params: &mut ParamSet,
+    momentum: &mut ParamSet,
+    clock: &mut ClusterClock,
+) -> Result<Phase1Report> {
+    let mut snapshots: Vec<(usize, ParamSet)> = Vec::new();
+    let snap = ctx.cfg.phase1_snapshot_every;
+    let observer = |step: usize, ps: &ParamSet, _: &BatchStats| {
+        if let Some(every) = snap {
+            if step % every == 0 {
+                snapshots.push((step, ps.clone()));
+            }
+        }
+    };
+
+    let mut resume = None;
+    let mut hook_state: Option<(Phase1Recorder, Option<u64>)> = None;
+    if let Some(dir) = ctx.run_dir {
+        let (rec, found) = super::open_phase1_record(ctx, dir, params, momentum, clock)?;
+        hook_state = Some((rec, found.map(|r| r.start_step as u64)));
+        resume = found;
+    }
+    let recording = hook_state.is_some();
+    let record_every = ctx.cfg.phase1_record_every.max(1);
+    let mut hook = |st: &SyncState| -> Result<()> {
+        let Some((rec, prev)) = hook_state.as_mut() else { return Ok(()) };
+        if st.step == 0 || st.step % record_every != 0 {
+            return Ok(());
+        }
+        super::record_phase1_step(ctx, ctx.run_dir.unwrap(), rec, prev, st)
+    };
+    let progress: Option<ProgressHook> = if recording { Some(&mut hook) } else { None };
+
+    let start_step = resume.as_ref().map_or(0, |r| r.start_step) as u64;
+    let mut hub = Phase1Hub {
+        addr,
+        listener,
+        ctx,
+        members: (0..ctx.cfg.workers).map(|_| None).collect(),
+        sent: 0,
+        recvd: 0,
+        payload: 0,
+        deaths: 0,
+    };
+    hub.join_window(start_step)?;
+
+    let p = run_sync_collective(
+        ctx.env,
+        params,
+        momentum,
+        &ctx.train,
+        clock,
+        observer,
+        resume,
+        progress,
+        |step, ps| hub.exchange(step as u64, ps),
+    )?;
+    hub.finish(p.steps as u64);
+    crate::info!(
+        "serve: phase 1 collective done after {} steps ({} members dropped)",
+        p.steps,
+        hub.deaths
+    );
+    Ok(Phase1Report {
+        progress: p,
+        snapshots,
+        net: NetStats { framed_bytes: hub.sent + hub.recvd, param_bytes: hub.payload },
+    })
+}
+
+// ---------------------------------------------------------------------
 // Coordinator side
 // ---------------------------------------------------------------------
 
@@ -221,10 +780,8 @@ fn set_once(slot: &Mutex<Option<WorkerOutcome>>, outcome: WorkerOutcome) {
     }
 }
 
-fn serve_phase2(addr: &str, ctx: &Phase2Ctx) -> Result<Phase2Report> {
+fn serve_phase2(addr: &str, listener: &Listener, ctx: &Phase2Ctx) -> Result<Phase2Report> {
     let policy = ctx.policy;
-    let listener = Listener::bind(addr)?;
-    listener.set_nonblocking(true)?;
     crate::info!(
         "serve: listening on {addr} for {} phase-2 workers (join window {:?})",
         ctx.pending.len(),
@@ -380,9 +937,21 @@ fn handshake(
         }
     };
     recvd.fetch_add(nb, Ordering::Relaxed);
-    let Msg::Join { fingerprint, resume } = msg else {
-        crate::warn_!("serve: candidate spoke out of protocol, dropped");
-        return None;
+    let (fingerprint, resume) = match msg {
+        Msg::Join { fingerprint, resume } => (fingerprint, resume),
+        Msg::P1Join { .. } => {
+            // a collective member restarted after phase 1 finished: tell
+            // it so, and it falls through to a phase-2 join
+            let reject = Msg::Reject { reason: PHASE1_DONE_REJECT.to_string() };
+            if let Ok(nb) = wire::write_msg(&mut conn, &reject) {
+                sent.fetch_add(nb, Ordering::Relaxed);
+            }
+            return None;
+        }
+        _ => {
+            crate::warn_!("serve: candidate spoke out of protocol, dropped");
+            return None;
+        }
     };
     if fingerprint != ctx.fingerprint {
         crate::warn_!("serve: rejected join with a mismatched config fingerprint");
@@ -487,6 +1056,172 @@ fn reader_loop(
 // Worker side
 // ---------------------------------------------------------------------
 
+/// Bounded connect retry with jittered backoff: the coordinator may not
+/// be listening yet, or may be busy inside an earlier phase.
+fn connect_with_retry(addr: &str, policy: &FailurePolicy) -> Result<Conn> {
+    let mut attempt = 0usize;
+    loop {
+        match Conn::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                if attempt >= policy.join_retries {
+                    return Err(Error::config(format!(
+                        "join: cannot reach {addr} after {} attempts: {e}",
+                        attempt + 1
+                    )));
+                }
+                std::thread::sleep(
+                    policy.backoff_delay(attempt as u32, std::process::id() as u64),
+                );
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// What a successful phase-1 membership did, for CLI reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase1JoinSummary {
+    pub slot: usize,
+    /// the step the hub admitted us at (0 for a fresh run; later when
+    /// rejoining a collective in flight or resumed from its record)
+    pub first_step: u64,
+    /// sync steps this process computed shards for
+    pub steps: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+/// How a phase-1 join attempt resolved.
+#[derive(Debug)]
+pub enum Phase1Outcome {
+    /// This process served as a collective member.
+    Participated(Phase1JoinSummary),
+    /// The coordinator already finished phase 1 (a restarted member can
+    /// miss the whole collective); proceed straight to [`join_run`].
+    AlreadyDone,
+}
+
+/// Join a coordinator at `addr` as one phase-1 collective member owning
+/// `group_devices` consecutive device shards. Per `P1Step` the member
+/// assembles its shard batches — pure functions of the step index, the
+/// same sampler draws and counter-keyed augmentation as the hub's
+/// in-process path — computes the gradients, and uploads one `P1Grad`
+/// per device. `want` asks to re-adopt a specific member slot after a
+/// restart; the hub honors it when free. Returns
+/// [`Phase1Outcome::AlreadyDone`] when the hub has moved on to phase 2.
+pub fn join_phase1(
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    addr: &str,
+    policy: &FailurePolicy,
+    want: Option<usize>,
+) -> Result<Phase1Outcome> {
+    let fingerprint = super::run_fingerprint(env, cfg);
+    let train = phase1_train_config(cfg, env);
+    let gd = cfg.group_devices;
+    let total_devices = cfg.total_devices();
+    let numel = env.engine.manifest().num_params;
+
+    let mut conn = connect_with_retry(addr, policy)?;
+    let mut sent = 0u64;
+    let mut recvd = 0u64;
+    sent += wire::write_msg(&mut conn, &Msg::P1Join { fingerprint, slot: want })?;
+    conn.set_read_timeout(Some(policy.io_timeout))?;
+    let (msg, nb) = wire::read_msg(&mut conn)?;
+    recvd += nb;
+    let (slot, first_step) = match msg {
+        Msg::P1Assign { slot, step } => (slot, step),
+        Msg::Reject { reason } if reason == PHASE1_DONE_REJECT => {
+            crate::info!("join: {reason}; proceeding to phase 2");
+            return Ok(Phase1Outcome::AlreadyDone);
+        }
+        Msg::Reject { reason } => {
+            return Err(Error::config(format!("phase 1 join rejected: {reason}")))
+        }
+        _ => return Err(Error::invalid("phase 1 join: hub spoke out of protocol")),
+    };
+    if slot >= cfg.workers {
+        return Err(Error::invalid(format!("phase 1 join: slot {slot} out of range")));
+    }
+    crate::info!("join: phase 1 member {slot} from step {first_step}, computing shards");
+    // a hub waiting out another member's straggler grace must not look
+    // dead to us
+    conn.set_read_timeout(Some(policy.io_timeout + policy.straggler_grace))?;
+
+    let mut sampler =
+        EpochSampler::new(env.train.n, train.global_batch, train.seed, train.seed_stream);
+    let mut batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
+    let aug = AugStream { seed: train.seed ^ 0xAE6, stream: train.seed_stream };
+    // batch t is the t-th draw of the sampler sequence on every path:
+    // skip the draws the steps before our admission already consumed
+    for _ in 0..first_step {
+        sampler.next_batch();
+    }
+    let mut next_draw = first_step;
+    let mut hb = batcher.make_batch();
+    let mut steps = 0u64;
+    loop {
+        let (msg, nb) = wire::read_msg(&mut conn)?;
+        recvd += nb;
+        match msg {
+            Msg::P1Step { step, params } => {
+                if params.len() != numel {
+                    return Err(Error::invalid(format!(
+                        "phase 1 join: broadcast carried {} weights, expected {numel}",
+                        params.len()
+                    )));
+                }
+                if step < next_draw {
+                    return Err(Error::invalid(format!(
+                        "phase 1 join: hub stepped backwards ({step} < {next_draw})"
+                    )));
+                }
+                // liveness before the (long) shard compute
+                sent += wire::write_msg(&mut conn, &Msg::Heartbeat { worker: slot, step })?;
+                for _ in next_draw..step {
+                    sampler.next_batch();
+                }
+                next_draw = step + 1;
+                let global = sampler.next_batch();
+                let per = global.len() / total_devices;
+                for d in 0..gd {
+                    let dev = slot * gd + d;
+                    let rows = &global[dev * per..(dev + 1) * per];
+                    batcher.assemble_step_into(
+                        env.train,
+                        rows,
+                        aug,
+                        step,
+                        (dev * per) as u64,
+                        &mut hb,
+                    );
+                    let g = env.engine.grad(&params, &hb)?;
+                    sent += wire::write_msg(
+                        &mut conn,
+                        &Msg::P1Grad { device: dev, step, stats: g.stats, grads: g.grads },
+                    )?;
+                }
+                steps += 1;
+            }
+            Msg::P1Done { step } => {
+                crate::info!("join: phase 1 complete at step {step} ({steps} steps computed)");
+                return Ok(Phase1Outcome::Participated(Phase1JoinSummary {
+                    slot,
+                    first_step,
+                    steps,
+                    bytes_sent: sent,
+                    bytes_received: recvd,
+                }));
+            }
+            Msg::Reject { reason } => {
+                return Err(Error::config(format!("phase 1 join: dropped by hub: {reason}")))
+            }
+            _ => return Err(Error::invalid("phase 1 join: hub spoke out of protocol")),
+        }
+    }
+}
+
 /// What a successful `join_run` did, for CLI reporting.
 #[derive(Debug, Clone, Copy)]
 pub struct JoinSummary {
@@ -510,25 +1245,7 @@ pub fn join_run(
     want: Option<usize>,
 ) -> Result<JoinSummary> {
     let fingerprint = super::run_fingerprint(env, cfg);
-    let mut conn = None;
-    for attempt in 0..=policy.join_retries {
-        match Conn::connect(addr) {
-            Ok(c) => {
-                conn = Some(c);
-                break;
-            }
-            Err(e) => {
-                if attempt == policy.join_retries {
-                    return Err(Error::config(format!(
-                        "join: cannot reach {addr} after {} attempts: {e}",
-                        attempt + 1
-                    )));
-                }
-                std::thread::sleep(policy.retry_backoff * (attempt as u32 + 1));
-            }
-        }
-    }
-    let mut conn = conn.expect("loop either set a connection or returned");
+    let mut conn = connect_with_retry(addr, policy)?;
     let mut sent = 0u64;
     let mut recvd = 0u64;
     sent += wire::write_msg(&mut conn, &Msg::Join { fingerprint, resume: want })?;

@@ -13,7 +13,20 @@
 //! Heartbeat { worker: u64, step: u64 }                       worker -> coord
 //! Done      { worker: u64, params: f32s, clock: 6 x f64 }    worker -> coord
 //! Abort     { worker: u64, reason: str }                     worker -> coord
+//! P1Join    { fingerprint: str, slot: u64 (MAX = none) }     worker -> coord
+//! P1Assign  { slot: u64, step: u64 }                         coord  -> worker
+//! P1Step    { step: u64, params: f32s }                      coord  -> worker
+//! P1Grad    { device: u64, step: u64, stats: 4 x 8B, grads: f32s }
+//!                                                            worker -> coord
+//! P1Done    { step: u64 }                                    coord  -> worker
 //! ```
+//!
+//! The `P1*` family carries the distributed phase-1 collective: a member
+//! joins with `P1Join`, is assigned a shard slot and a resume step with
+//! `P1Assign`, then per sync step receives the full parameter arena in
+//! `P1Step`, replies one `P1Grad` per local device shard (the step echo
+//! is the barrier token — a stale-step gradient is dropped, not summed),
+//! and is released by `P1Done` when the phase completes.
 //!
 //! Every encode/decode returns the exact framed byte count, feeding the
 //! transport's `NetStats` — the byte-accounting tests compare those
@@ -22,6 +35,7 @@
 
 use std::io::{Read, Write};
 
+use crate::runtime::BatchStats;
 use crate::sim::ClusterClock;
 use crate::util::{Error, Result};
 
@@ -35,6 +49,11 @@ const TAG_REJECT: u8 = 3;
 const TAG_HEARTBEAT: u8 = 4;
 const TAG_DONE: u8 = 5;
 const TAG_ABORT: u8 = 6;
+const TAG_P1_JOIN: u8 = 7;
+const TAG_P1_ASSIGN: u8 = 8;
+const TAG_P1_STEP: u8 = 9;
+const TAG_P1_GRAD: u8 = 10;
+const TAG_P1_DONE: u8 = 11;
 
 /// One protocol message.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +71,20 @@ pub enum Msg {
     Done { worker: usize, params: Vec<f32>, clock: ClusterClock },
     /// Worker reports a terminal error (it will be dropped, not retried).
     Abort { worker: usize, reason: String },
+    /// Member asks to participate in the phase-1 collective, presenting
+    /// its fingerprint and (optionally) the member slot it wants back.
+    P1Join { fingerprint: String, slot: Option<usize> },
+    /// Coordinator admits a member: its shard slot and the sync step the
+    /// collective is currently at (a rejoiner fast-forwards to it).
+    P1Assign { slot: usize, step: u64 },
+    /// Coordinator opens sync step `step`: the full parameter arena the
+    /// member's shards compute gradients against.
+    P1Step { step: u64, params: Vec<f32> },
+    /// Member returns one device shard's gradient arena for `step`, with
+    /// that shard's batch statistics. The step echo is the barrier token.
+    P1Grad { device: usize, step: u64, stats: BatchStats, grads: Vec<f32> },
+    /// Coordinator releases the members: phase 1 is complete.
+    P1Done { step: u64 },
 }
 
 /// Encoded size of a `params` field (count prefix + f32 payload).
@@ -67,6 +100,16 @@ pub fn assign_frame_bytes(n: usize) -> u64 {
 /// Total framed size of a `Done` carrying `n` parameters.
 pub fn done_frame_bytes(n: usize) -> u64 {
     4 + 1 + 8 + params_field_bytes(n) + 6 * 8
+}
+
+/// Total framed size of a `P1Step` carrying `n` parameters.
+pub fn p1_step_frame_bytes(n: usize) -> u64 {
+    4 + 1 + 8 + params_field_bytes(n)
+}
+
+/// Total framed size of a `P1Grad` carrying `n` gradient values.
+pub fn p1_grad_frame_bytes(n: usize) -> u64 {
+    4 + 1 + 8 + 8 + 4 * 8 + params_field_bytes(n)
 }
 
 fn put_u32(p: &mut Vec<u8>, v: u32) {
@@ -133,6 +176,35 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<u64> {
             put_u64(&mut p, *worker as u64);
             put_str(&mut p, reason);
         }
+        Msg::P1Join { fingerprint, slot } => {
+            p.push(TAG_P1_JOIN);
+            put_str(&mut p, fingerprint);
+            put_u64(&mut p, slot.map(|s| s as u64).unwrap_or(u64::MAX));
+        }
+        Msg::P1Assign { slot, step } => {
+            p.push(TAG_P1_ASSIGN);
+            put_u64(&mut p, *slot as u64);
+            put_u64(&mut p, *step);
+        }
+        Msg::P1Step { step, params } => {
+            p.push(TAG_P1_STEP);
+            put_u64(&mut p, *step);
+            put_f32s(&mut p, params);
+        }
+        Msg::P1Grad { device, step, stats, grads } => {
+            p.push(TAG_P1_GRAD);
+            put_u64(&mut p, *device as u64);
+            put_u64(&mut p, *step);
+            put_f64(&mut p, stats.sum_loss);
+            put_u64(&mut p, stats.correct1 as u64);
+            put_u64(&mut p, stats.correct5 as u64);
+            put_u64(&mut p, stats.examples as u64);
+            put_f32s(&mut p, grads);
+        }
+        Msg::P1Done { step } => {
+            p.push(TAG_P1_DONE);
+            put_u64(&mut p, *step);
+        }
     }
     if p.len() > MAX_FRAME {
         return Err(Error::invalid(format!("wire: frame too large ({} bytes)", p.len())));
@@ -156,6 +228,13 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<(Msg, u64)> {
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf)?;
     Ok((decode(&buf)?, 4 + len as u64))
+}
+
+/// Decode a frame payload (the bytes after the 4-byte length prefix) that
+/// arrived through a caller-managed buffer — the multiplexed phase-1 hub
+/// accumulates partial reads itself and hands over complete payloads.
+pub fn decode_payload(b: &[u8]) -> Result<Msg> {
+    decode(b)
 }
 
 struct Cur<'a> {
@@ -204,6 +283,19 @@ impl<'a> Cur<'a> {
             .collect())
     }
 
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn stats(&mut self) -> Result<BatchStats> {
+        Ok(BatchStats {
+            sum_loss: self.f64()?,
+            correct1: self.i64()?,
+            correct5: self.i64()?,
+            examples: self.i64()?,
+        })
+    }
+
     fn clock(&mut self) -> Result<ClusterClock> {
         Ok(ClusterClock {
             seconds: self.f64()?,
@@ -237,6 +329,23 @@ fn decode(b: &[u8]) -> Result<Msg> {
             clock: c.clock()?,
         },
         TAG_ABORT => Msg::Abort { worker: c.u64()? as usize, reason: c.str_()? },
+        TAG_P1_JOIN => {
+            let fingerprint = c.str_()?;
+            let slot = match c.u64()? {
+                u64::MAX => None,
+                s => Some(s as usize),
+            };
+            Msg::P1Join { fingerprint, slot }
+        }
+        TAG_P1_ASSIGN => Msg::P1Assign { slot: c.u64()? as usize, step: c.u64()? },
+        TAG_P1_STEP => Msg::P1Step { step: c.u64()?, params: c.f32s()? },
+        TAG_P1_GRAD => Msg::P1Grad {
+            device: c.u64()? as usize,
+            step: c.u64()?,
+            stats: c.stats()?,
+            grads: c.f32s()?,
+        },
+        TAG_P1_DONE => Msg::P1Done { step: c.u64()? },
         other => return Err(Error::invalid(format!("wire: unknown message tag {other}"))),
     };
     if c.i != b.len() {
@@ -273,6 +382,17 @@ mod tests {
             Msg::Heartbeat { worker: 7, step: 123456 },
             Msg::Done { worker: 0, params: vec![0.1, 0.2, 0.3], clock },
             Msg::Abort { worker: 1, reason: "io error: oh no".into() },
+            Msg::P1Join { fingerprint: "{\"seed\":42}".into(), slot: None },
+            Msg::P1Join { fingerprint: String::new(), slot: Some(1) },
+            Msg::P1Assign { slot: 1, step: 77 },
+            Msg::P1Step { step: 12, params: vec![-1.5, f32::MIN_POSITIVE, 0.0] },
+            Msg::P1Grad {
+                device: 3,
+                step: 12,
+                stats: BatchStats { sum_loss: 2.25, correct1: 5, correct5: 8, examples: -1 },
+                grads: vec![0.5, -0.25, 1e-20],
+            },
+            Msg::P1Done { step: 96 },
         ];
         for msg in msgs {
             let (back, wrote, read) = round_trip(msg.clone());
@@ -290,10 +410,20 @@ mod tests {
         let mut buf = Vec::new();
         let wrote = write_msg(
             &mut buf,
-            &Msg::Done { worker: 1, params, clock: ClusterClock::new() },
+            &Msg::Done { worker: 1, params: params.clone(), clock: ClusterClock::new() },
         )
         .unwrap();
         assert_eq!(wrote, done_frame_bytes(17));
+        let mut buf = Vec::new();
+        let wrote = write_msg(&mut buf, &Msg::P1Step { step: 3, params: params.clone() }).unwrap();
+        assert_eq!(wrote, p1_step_frame_bytes(17));
+        let mut buf = Vec::new();
+        let wrote = write_msg(
+            &mut buf,
+            &Msg::P1Grad { device: 0, step: 3, stats: BatchStats::default(), grads: params },
+        )
+        .unwrap();
+        assert_eq!(wrote, p1_grad_frame_bytes(17));
     }
 
     #[test]
@@ -331,6 +461,60 @@ mod tests {
         let mut frame = (p.len() as u32).to_le_bytes().to_vec();
         frame.extend_from_slice(&p);
         let mut r: &[u8] = &frame;
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    /// Frame a raw payload (without the length sanity `write_msg` does).
+    fn frame(p: &[u8]) -> Vec<u8> {
+        let mut f = (p.len() as u32).to_le_bytes().to_vec();
+        f.extend_from_slice(p);
+        f
+    }
+
+    #[test]
+    fn hostile_phase1_frames_rejected() {
+        // every P1 tag with an empty body: all want at least one field
+        for tag in [TAG_P1_JOIN, TAG_P1_ASSIGN, TAG_P1_STEP, TAG_P1_GRAD, TAG_P1_DONE] {
+            let mut r: &[u8] = &frame(&[tag]);
+            assert!(read_msg(&mut r).is_err(), "tag {tag} with empty body must be rejected");
+        }
+        // torn mid-field: each legitimate P1 frame truncated at every
+        // prefix length must fail (either short read or short body)
+        let msgs = vec![
+            Msg::P1Join { fingerprint: "fp".into(), slot: Some(0) },
+            Msg::P1Assign { slot: 0, step: 1 },
+            Msg::P1Step { step: 1, params: vec![1.0, 2.0] },
+            Msg::P1Grad {
+                device: 0,
+                step: 1,
+                stats: BatchStats::default(),
+                grads: vec![1.0, 2.0],
+            },
+            Msg::P1Done { step: 1 },
+        ];
+        for msg in msgs {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &msg).unwrap();
+            for cut in 0..buf.len() {
+                let mut r: &[u8] = &buf[..cut];
+                assert!(read_msg(&mut r).is_err(), "truncation at {cut} must fail");
+            }
+        }
+        // trailing garbage after a complete P1Done
+        let mut p = vec![TAG_P1_DONE];
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.push(0x55);
+        let mut r: &[u8] = &frame(&p);
+        assert!(read_msg(&mut r).is_err());
+        // arena count prefix claiming more f32s than the frame holds
+        let mut p = vec![TAG_P1_STEP];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 f32s
+        p.extend_from_slice(&[0u8; 8]); // delivers 2
+        let mut r: &[u8] = &frame(&p);
+        assert!(read_msg(&mut r).is_err());
+        // oversized length prefix on a P1 frame
+        let mut r: &[u8] = &((MAX_FRAME + 1) as u32).to_le_bytes();
         assert!(read_msg(&mut r).is_err());
     }
 }

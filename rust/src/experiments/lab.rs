@@ -116,6 +116,8 @@ impl Lab {
             averaging: self.averaging.clone(),
             snapshot_every: None,
             phase1_snapshot_every: None,
+            phase1_dist: self.cfg.phase1_dist,
+            phase1_record_every: self.cfg.phase1_record_every,
         }
     }
 

@@ -5,8 +5,8 @@ use swap::cli::{default_preset_for, Args, HELP};
 use swap::runtime::Backend;
 use swap::util::{Error, Result};
 use swap::coordinator::{
-    join_run, run_baseline, run_local_sgd, run_swa, run_swap, run_swap_resumable_with,
-    LocalSgdConfig, RunDir, SocketTransport,
+    join_phase1, join_run, run_baseline, run_local_sgd, run_swa, run_swap,
+    run_swap_resumable_with, LocalSgdConfig, Phase1Outcome, RunDir, SocketTransport,
 };
 use swap::experiments::{figures, tables, Lab};
 use swap::landscape::GridSpec;
@@ -244,7 +244,23 @@ fn main() -> Result<()> {
             };
             let policy = cfg.failure_policy();
             let lab = Lab::new(cfg)?;
-            let s = join_run(&lab.env(), &lab.swap_arm(lab.cfg.seed), &addr, &policy, want)?;
+            let env = lab.env();
+            let swap_cfg = lab.swap_arm(lab.cfg.seed);
+            if swap_cfg.phase1_dist {
+                // the coordinator runs phase 1 as a distributed collective:
+                // contribute gradient shards first, then fall through to the
+                // phase-2 join (a late joiner finds phase 1 already done)
+                match join_phase1(&env, &swap_cfg, &addr, &policy, want)? {
+                    Phase1Outcome::Participated(p) => println!(
+                        "phase 1 on {addr} as member {}: {} sync steps (from {}) | sent {} B, received {} B",
+                        p.slot, p.steps, p.first_step, p.bytes_sent, p.bytes_received
+                    ),
+                    Phase1Outcome::AlreadyDone => {
+                        println!("phase 1 on {addr} already complete; joining phase 2")
+                    }
+                }
+            }
+            let s = join_run(&env, &swap_cfg, &addr, &policy, want)?;
             println!(
                 "joined {addr} as worker {}: {} steps | sent {} B, received {} B",
                 s.worker, s.steps, s.bytes_sent, s.bytes_received
@@ -278,7 +294,17 @@ fn main() -> Result<()> {
                             while i < test.n {
                                 let img = &test.images[i * pix..(i + 1) * pix];
                                 let q0 = std::time::Instant::now();
-                                let top1 = server.classify(img).expect("serve request failed");
+                                // a small serve_queue_depth sheds under this
+                                // client storm: back off and retry
+                                let top1 = loop {
+                                    match server.classify(img) {
+                                        Ok(t) => break t,
+                                        Err(e) if e.is_overloaded() => std::thread::sleep(
+                                            std::time::Duration::from_micros(200),
+                                        ),
+                                        Err(e) => panic!("serve request failed: {e}"),
+                                    }
+                                };
                                 lat.push(q0.elapsed().as_secs_f64() * 1e3);
                                 if top1 as i32 == test.labels[i] {
                                     correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -303,13 +329,14 @@ fn main() -> Result<()> {
                 server.config().shards
             );
             println!(
-                "  acc {:.4} | mean batch {:.2} (max {}) | p50 {:.3} ms  p99 {:.3} ms | {:.0} req/s",
+                "  acc {:.4} | mean batch {:.2} (max {}) | p50 {:.3} ms  p99 {:.3} ms | {:.0} req/s | {} shed",
                 correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / test.n.max(1) as f64,
                 st.mean_batch(),
                 st.max_batch_seen,
                 percentile(&lats, 50.0),
                 percentile(&lats, 99.0),
-                test.n as f64 / wall.max(1e-9)
+                test.n as f64 / wall.max(1e-9),
+                st.sheds
             );
         }
         "ablate-workers" | "ablate-tau" | "ablate-phase2" | "ablate-freq" | "ablate-net" => {

@@ -12,7 +12,7 @@ pub struct HostBatch {
 }
 
 /// Loss/accuracy statistics returned by every executable.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct BatchStats {
     pub sum_loss: f64,
     pub correct1: i64,

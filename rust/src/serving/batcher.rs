@@ -9,14 +9,17 @@
 //! allocations** (there are deliberately no channels here: `std::sync::mpsc`
 //! allocates per send).
 //!
-//! Flow: a client acquires a free slot (blocking while the arena is
-//! full — natural backpressure), writes its image, submits the index and
+//! Flow: a client tries to claim a free slot — a saturated arena **sheds
+//! the request immediately** ([`Acquire::Full`], surfaced to callers as
+//! an explicit overload error) instead of blocking, so saturation shows
+//! up at the edge as a retryable signal rather than as unbounded queueing
+//! delay. A successful client writes its image, submits the index and
 //! waits on the slot's condvar. A shard worker pops the first pending
 //! index, then keeps popping until either `max_batch` is reached or
 //! `max_delay` has elapsed since the batch opened (`Condvar::wait_timeout`
 //! on the queue), runs the batch, writes logits back and signals each
-//! slot. Latency is bounded by construction: a request waits at most
-//! `max_delay` for co-batching plus one inference.
+//! slot. Latency is bounded by construction: an admitted request waits at
+//! most `max_delay` for co-batching plus one inference.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -60,13 +63,23 @@ struct QState {
     shutdown: bool,
 }
 
+/// Outcome of a slot claim: the three states a client must distinguish
+/// (admitted / shed / shutting down) map to distinct error classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Acquire {
+    /// claimed this slot index
+    Slot(u32),
+    /// every slot is in flight — shed the request (retryable overload)
+    Full,
+    /// the server is shutting down (terminal)
+    Shutdown,
+}
+
 /// The shared pending/free bookkeeping of the slot arena.
 pub(crate) struct BatchQueue {
     m: Mutex<QState>,
     /// new pending work (or shutdown) — workers wait here
     cv_work: Condvar,
-    /// a slot returned to the free list — blocked clients wait here
-    cv_free: Condvar,
 }
 
 impl BatchQueue {
@@ -78,22 +91,20 @@ impl BatchQueue {
                 shutdown: false,
             }),
             cv_work: Condvar::new(),
-            cv_free: Condvar::new(),
         }
     }
 
-    /// Claim a free slot, blocking while the arena is saturated
-    /// (backpressure). `None` once the server is shutting down.
-    pub fn acquire_free(&self) -> Option<u32> {
+    /// Try to claim a free slot. Never blocks: a saturated arena returns
+    /// [`Acquire::Full`] so the caller can shed the request with an
+    /// explicit overload error instead of queueing without bound.
+    pub fn try_acquire(&self) -> Acquire {
         let mut st = self.m.lock().unwrap();
-        loop {
-            if st.shutdown {
-                return None;
-            }
-            if let Some(idx) = st.free.pop() {
-                return Some(idx);
-            }
-            st = self.cv_free.wait(st).unwrap();
+        if st.shutdown {
+            return Acquire::Shutdown;
+        }
+        match st.free.pop() {
+            Some(idx) => Acquire::Slot(idx),
+            None => Acquire::Full,
         }
     }
 
@@ -109,8 +120,6 @@ impl BatchQueue {
     pub fn release(&self, idx: u32) {
         let mut st = self.m.lock().unwrap();
         st.free.push(idx);
-        drop(st);
-        self.cv_free.notify_one();
     }
 
     /// Collect the next batch into `out` (cleared first): block for the
@@ -150,14 +159,13 @@ impl BatchQueue {
         true
     }
 
-    /// Flip the shutdown flag and wake everyone (blocked clients error
-    /// out, workers drain and exit).
+    /// Flip the shutdown flag and wake the workers (they drain pending
+    /// work and exit; new claims see [`Acquire::Shutdown`]).
     pub fn shutdown(&self) {
         let mut st = self.m.lock().unwrap();
         st.shutdown = true;
         drop(st);
         self.cv_work.notify_all();
-        self.cv_free.notify_all();
     }
 }
 
@@ -165,11 +173,18 @@ impl BatchQueue {
 mod tests {
     use super::*;
 
+    fn claim(q: &BatchQueue) -> u32 {
+        match q.try_acquire() {
+            Acquire::Slot(idx) => idx,
+            other => panic!("expected a slot, got {other:?}"),
+        }
+    }
+
     #[test]
     fn coalesces_up_to_max_batch() {
         let q = BatchQueue::new(8);
         for _ in 0..5 {
-            let idx = q.acquire_free().unwrap();
+            let idx = claim(&q);
             q.submit(idx);
         }
         let mut batch = Vec::with_capacity(4);
@@ -180,12 +195,26 @@ mod tests {
     }
 
     #[test]
+    fn saturated_arena_sheds_instead_of_blocking() {
+        let q = BatchQueue::new(2);
+        let a = claim(&q);
+        let b = claim(&q);
+        // every slot in flight: the claim returns immediately with Full
+        assert_eq!(q.try_acquire(), Acquire::Full);
+        // releasing any slot readmits new work
+        q.release(b);
+        assert_eq!(q.try_acquire(), Acquire::Slot(b));
+        q.release(a);
+    }
+
+    #[test]
     fn shutdown_unblocks_everyone() {
         let q = BatchQueue::new(1);
-        let a = q.acquire_free().unwrap();
+        let a = claim(&q);
         q.shutdown();
-        // saturated arena + shutdown: a new client gets None, not a hang
-        assert_eq!(q.acquire_free(), None);
+        // saturated arena + shutdown: a new client is told Shutdown (not
+        // Full — there is no point retrying), and never hangs
+        assert_eq!(q.try_acquire(), Acquire::Shutdown);
         // a worker with no pending work exits
         let mut batch = Vec::new();
         assert!(!q.next_batch(&mut batch, 4, Duration::from_millis(1)));
@@ -199,10 +228,11 @@ mod tests {
     #[test]
     fn release_recycles_slots() {
         let q = BatchQueue::new(2);
-        let a = q.acquire_free().unwrap();
-        let b = q.acquire_free().unwrap();
+        let a = claim(&q);
+        let b = claim(&q);
         assert_ne!(a, b);
         q.release(a);
-        assert_eq!(q.acquire_free(), Some(a));
+        assert_eq!(q.try_acquire(), Acquire::Slot(a));
+        q.release(b);
     }
 }

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::batcher::{BatchQueue, Slot};
+use super::batcher::{Acquire, BatchQueue, Slot};
 use super::engine::{argmax, ServeModel, ShardEngine};
 use super::stats::{Counters, ServerStats};
 use crate::util::{Error, Result};
@@ -20,8 +20,9 @@ pub struct ServeConfig {
     /// longest a batch waits for co-batched requests past its first
     /// request (`serve_max_delay_us`); 0 = never wait
     pub max_delay: Duration,
-    /// request slot arena size; saturation blocks new clients
-    /// (backpressure) rather than growing a queue without bound
+    /// request slot arena size (`serve_queue_depth`); saturation sheds
+    /// new requests with [`Error::Overloaded`] rather than blocking them
+    /// or growing a queue without bound
     pub queue_slots: usize,
 }
 
@@ -101,9 +102,10 @@ impl Server {
         Ok(Server { inner, cfg, workers })
     }
 
-    /// Serve one classification request: blocks until a slot is free
-    /// (backpressure) and the batched inference completes; writes the
-    /// logits row into `logits_out` and returns the top-1 class. Zero
+    /// Serve one classification request: claims a request slot (a
+    /// saturated server sheds with [`Error::Overloaded`] — retryable),
+    /// blocks until the batched inference completes, writes the logits
+    /// row into `logits_out` and returns the top-1 class. Zero
     /// allocations on the steady-state path.
     pub fn classify_into(&self, image: &[f32], logits_out: &mut [f32]) -> Result<usize> {
         if logits_out.len() != self.inner.model.num_classes() {
@@ -129,11 +131,18 @@ impl Server {
                 self.inner.model.image_len()
             )));
         }
-        let idx = self
-            .inner
-            .queue
-            .acquire_free()
-            .ok_or_else(|| Error::invalid("serve: server is shut down"))?;
+        let idx = match self.inner.queue.try_acquire() {
+            Acquire::Slot(idx) => idx,
+            Acquire::Full => {
+                self.inner.counters.sheds.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::overloaded(format!(
+                    "serve: all {} request slots in flight — shed; retry after backoff \
+                     or raise serve_queue_depth",
+                    self.cfg.queue_slots
+                )));
+            }
+            Acquire::Shutdown => return Err(Error::invalid("serve: server is shut down")),
+        };
         let slot = &self.inner.slots[idx as usize];
         {
             let mut st = slot.m.lock().unwrap();

@@ -9,6 +9,7 @@ pub(crate) struct Counters {
     pub batches: AtomicU64,
     pub max_batch_seen: AtomicU64,
     pub infer_errors: AtomicU64,
+    pub sheds: AtomicU64,
 }
 
 impl Counters {
@@ -24,6 +25,7 @@ impl Counters {
             batches: self.batches.load(Ordering::Relaxed),
             max_batch_seen: self.max_batch_seen.load(Ordering::Relaxed),
             infer_errors: self.infer_errors.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
         }
     }
 }
@@ -39,6 +41,9 @@ pub struct ServerStats {
     pub max_batch_seen: u64,
     /// requests that failed inside inference (completed with zero logits)
     pub infer_errors: u64,
+    /// requests shed at admission because every slot was in flight
+    /// (clients saw `Error::Overloaded`; not counted in `requests`)
+    pub sheds: u64,
 }
 
 impl ServerStats {

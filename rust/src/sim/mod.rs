@@ -79,6 +79,15 @@ impl CostModel {
     pub fn phase2_comm_bytes(&self, workers: usize) -> u64 {
         2 * workers as u64 * self.param_bytes
     }
+
+    /// Weight bytes a zero-failure distributed phase 1 moves: per sync
+    /// step the hub broadcasts the weights to each of `members` links and
+    /// gathers one same-sized gradient arena per device back. Measured
+    /// `NetStats::param_bytes` of a zero-drop collective must equal this
+    /// exactly (asserted in rust/tests/transport.rs).
+    pub fn phase1_comm_bytes(&self, steps: usize, members: usize, devices: usize) -> u64 {
+        steps as u64 * (members + devices) as u64 * self.param_bytes
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +126,9 @@ mod tests {
         assert!(cm.assembly_time(64) < cm.train_step_time(64));
         // phase-2 wire traffic: one broadcast down + one upload up per worker
         assert_eq!(cm.phase2_comm_bytes(4), 8 * cm.param_bytes);
+        // phase-1 wire traffic: per step, one broadcast per member and one
+        // gradient arena per device
+        assert_eq!(cm.phase1_comm_bytes(12, 2, 4), 12 * 6 * cm.param_bytes);
     }
 
     #[test]

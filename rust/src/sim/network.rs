@@ -44,6 +44,17 @@ impl NetModel {
         2.0 * (w - 1.0) * self.latency + 2.0 * (w - 1.0) / w * bytes as f64 / self.bandwidth
     }
 
+    /// One sync step of the *distributed* phase-1 collective as the
+    /// socket hub executes it: a serial weight broadcast of `bytes` to
+    /// each of `members` links, then `devices` gradient uploads of the
+    /// same size gathered back — (members + devices) frames through one
+    /// host, each paying latency plus serialization. This is the measured
+    /// topology of `serve_phase1`, validated against loopback wall clock
+    /// in rust/benches/transport.rs.
+    pub fn hub_exchange(&self, bytes: u64, members: usize, devices: usize) -> f64 {
+        (members + devices) as f64 * (self.latency + bytes as f64 / self.bandwidth)
+    }
+
     /// Broadcast of the model (phase transitions): one tree pass.
     pub fn broadcast(&self, bytes: u64, workers: usize) -> f64 {
         if workers <= 1 {
@@ -78,6 +89,16 @@ mod tests {
         let t = n.ring_allreduce(26_000_000, 8);
         let bw_term = 2.0 * 7.0 / 8.0 * 26e6 / n.bandwidth;
         assert!(t > bw_term && t < bw_term * 1.2, "t={t} bw={bw_term}");
+    }
+
+    #[test]
+    fn hub_exchange_scales_with_fanout_and_bytes() {
+        let n = NetModel::pcie_like();
+        assert!(n.hub_exchange(1 << 20, 4, 8) > n.hub_exchange(1 << 20, 2, 4));
+        assert!(n.hub_exchange(1 << 24, 2, 4) > n.hub_exchange(1 << 20, 2, 4));
+        // members == devices (group_devices = 1): down + up per member
+        let one = n.latency + (1 << 20) as f64 / n.bandwidth;
+        assert!((n.hub_exchange(1 << 20, 3, 3) - 6.0 * one).abs() < 1e-12);
     }
 
     #[test]

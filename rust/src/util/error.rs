@@ -16,6 +16,9 @@ pub enum Error {
     Config(String),
     /// Shape mismatch between host tensors / manifest / literals.
     Shape(String),
+    /// Transient saturation: the service shed this request instead of
+    /// queueing it without bound. Safe to retry after backing off.
+    Overloaded(String),
     /// Anything else that indicates a bug or broken invariant.
     Invalid(String),
 }
@@ -28,6 +31,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
         }
     }
@@ -72,6 +76,14 @@ impl Error {
     pub fn json(msg: impl Into<String>) -> Self {
         Error::Json(msg.into())
     }
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
+    }
+    /// Whether this failure is transient saturation (shed load) — the
+    /// retry-after-backoff class, distinct from every hard error.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Error::Overloaded(_))
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +96,10 @@ mod tests {
         assert_eq!(e.to_string(), "config error: bad preset");
         let e = Error::shape("want [2,2] got [4]");
         assert!(e.to_string().contains("want [2,2]"));
+        let e = Error::overloaded("queue full");
+        assert_eq!(e.to_string(), "overloaded: queue full");
+        assert!(e.is_overloaded());
+        assert!(!Error::invalid("x").is_overloaded());
     }
 
     #[test]

@@ -75,6 +75,8 @@ fn swap_cfg(seed: u64, workers: usize, averaging: AveragingSpec) -> SwapConfig {
         averaging,
         snapshot_every: None,
         phase1_snapshot_every: None,
+        phase1_dist: false,
+        phase1_record_every: 1,
     }
 }
 

@@ -74,6 +74,8 @@ fn tiny_swap_config(seed: u64) -> SwapConfig {
         averaging: AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
+        phase1_dist: false,
+        phase1_record_every: 1,
     }
 }
 
@@ -207,6 +209,8 @@ fn swap_averaging_beats_mean_worker() {
         averaging: AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
+        phase1_dist: false,
+        phase1_record_every: 1,
     };
     let r = run_swap(&env, &cfg).unwrap();
     assert_eq!(r.worker_stats.len(), 4);

@@ -247,6 +247,59 @@ fn int8_server_end_to_end() {
 }
 
 #[test]
+fn saturated_server_sheds_with_overload_error() {
+    let (engine, params, bn, images) = fixture(13, 1);
+    let d = engine.dims();
+    let il = d.image_size * d.image_size * 3;
+    let img = &images[..il];
+
+    let model = Arc::new(ServeModel::new(engine, params, bn, ServeTier::F32).unwrap());
+    // a deliberately tiny arena: far more concurrent clients than slots
+    let cfg = ServeConfig {
+        shards: 1,
+        max_batch: 2,
+        max_delay: Duration::from_micros(100),
+        queue_slots: 2,
+    };
+    let server = Server::start(model, cfg).unwrap();
+
+    // Waves of concurrent clients against 2 slots: admitted requests must
+    // succeed, saturated ones must come back Overloaded immediately (the
+    // old behaviour blocked forever here, so a regression turns this loop
+    // into a deadline failure, not a hang).
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let sheds = AtomicUsize::new(0);
+    let served = AtomicUsize::new(0);
+    while sheds.load(Ordering::Relaxed) == 0 && std::time::Instant::now() < deadline {
+        std::thread::scope(|s| {
+            for _ in 0..32 {
+                let (server, sheds, served) = (&server, &sheds, &served);
+                s.spawn(move || match server.classify(img) {
+                    Ok(top1) => {
+                        assert!(top1 < d.num_classes);
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        assert!(e.is_overloaded(), "unexpected serve error class: {e}");
+                        sheds.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+    }
+    let (sheds, served) = (sheds.load(Ordering::Relaxed), served.load(Ordering::Relaxed));
+    assert!(sheds > 0, "32-way waves on a 2-slot arena never shed a request");
+    assert!(served > 0, "saturation shed every request — admission is broken");
+    let st = server.stats();
+    assert_eq!(st.sheds, sheds as u64, "shed counter disagrees with client-observed sheds");
+    assert_eq!(st.requests, served as u64, "sheds must not count as served requests");
+    assert_eq!(st.infer_errors, 0);
+
+    // after the storm the server still serves cleanly
+    assert!(server.classify(img).unwrap() < d.num_classes);
+}
+
+#[test]
 fn servable_checkpoint_roundtrip_and_corruption() {
     let dir = scratch("ckpt");
     let path = dir.join("model.ckpt");

@@ -1,25 +1,38 @@
-//! Phase-2 transport integration: the elastic fault-tolerance contract.
+//! Phase-1 + phase-2 transport integration: the elastic fault-tolerance
+//! contract.
 //!
 //! * Zero-failure socket runs are BITWISE identical to in-memory runs —
-//!   the transport decides where workers execute, never what they compute.
+//!   the transport decides where workers execute, never what they
+//!   compute. With `phase1_dist` that covers the phase-1 collective too:
+//!   params, snapshot trail, eval stats, and the modeled clock.
 //! * An injected fault (worker error, crashed process, hung process)
 //!   drops that worker from the phase-3 average; the survivors' average
 //!   is bitwise equal to averaging the same replicas from an honest run,
 //!   and the drop is recorded in `SwapResult::dropped` + `clock.lost`.
-//! * Measured wire traffic matches `CostModel::phase2_comm_bytes`.
+//! * A phase-1 member killed mid-all-reduce is dropped at the broken
+//!   step: the ring re-forms from the survivors (down to `min_workers`,
+//!   below which the collective aborts loudly), the discarded shard
+//!   compute is booked as lost, and a restarted process re-adopts the
+//!   freed slot at the current step.
+//! * A quorum abort is crash-safe: the fsync'd phase-1 progress record
+//!   resumes the collective at the last recorded step, bitwise.
+//! * Measured wire traffic matches `CostModel::phase1_comm_bytes` +
+//!   `CostModel::phase2_comm_bytes`; the `hub_exchange` α–β clock term is
+//!   held against a real loopback socket pair.
 //! * Run directories are pinned to one config fingerprint; resume retries
 //!   exactly the dropped workers.
 
 use std::time::Duration;
 
-use swap::coordinator::transport::wire::{self, Msg};
+use swap::coordinator::transport::loopback;
 use swap::coordinator::transport::run_fingerprint;
+use swap::coordinator::transport::wire::{self, Msg};
 use swap::coordinator::{
-    join_run, run_swap, run_swap_resumable, run_swap_resumable_with, run_swap_with,
-    FailurePolicy, MemoryTransport, NetStats, RunDir, SocketTransport, SwapConfig, TrainEnv,
-    TrainProgress,
+    join_phase1, join_run, run_swap, run_swap_resumable, run_swap_resumable_with, run_swap_with,
+    FailurePolicy, MemoryTransport, NetStats, Phase1Outcome, RunDir, SocketTransport, SwapConfig,
+    TrainEnv, TrainProgress,
 };
-use swap::data::{AugmentSpec, Dataset, Generator, SynthSpec};
+use swap::data::{AugStream, AugmentSpec, Batcher, Dataset, EpochSampler, Generator, SynthSpec};
 use swap::model::ParamSet;
 use swap::optim::Schedule;
 use swap::runtime::{Backend, NativeBackend};
@@ -74,6 +87,8 @@ fn tiny_swap_config(seed: u64) -> SwapConfig {
         averaging: swap::coordinator::AveragingSpec::Uniform,
         snapshot_every: None,
         phase1_snapshot_every: None,
+        phase1_dist: false,
+        phase1_record_every: 1,
     }
 }
 
@@ -449,4 +464,345 @@ fn socket_rejects_mismatched_fingerprint_then_admits_honest_join() {
     std::fs::remove_file(&addr).ok();
     assert!(r.dropped.is_empty());
     assert_eq!(r.worker_params.len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// Distributed phase 1 (phase1_dist): collective over the wire
+// ---------------------------------------------------------------------
+
+/// A wire-level phase-1 member mirroring `join_phase1`'s honest shard
+/// compute (same sampler draws, same counter-keyed augmentation, same
+/// absolute-device batch slices), but scriptable: an optional per-step
+/// delay holds the collective open while another thread rejoins, and
+/// `die_after = Some(k)` processes `k` steps honestly then drops the
+/// connection on the next broadcast — a process killed mid-all-reduce,
+/// no goodbye frame. Returns the number of sync steps it computed.
+#[cfg(unix)]
+fn phase1_wire_member(
+    addr: &str,
+    env: &TrainEnv,
+    cfg: &SwapConfig,
+    want: usize,
+    die_after: Option<u64>,
+    step_delay: Duration,
+) -> u64 {
+    let mut conn = connect_retry(addr);
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let fp = run_fingerprint(env, cfg);
+    wire::write_msg(&mut conn, &Msg::P1Join { fingerprint: fp, slot: Some(want) }).unwrap();
+    let (msg, _) = wire::read_msg(&mut conn).unwrap();
+    let Msg::P1Assign { slot, step: first_step } = msg else {
+        panic!("wire member expected P1Assign, got {msg:?}")
+    };
+    assert_eq!(slot, want, "a free requested slot must be honored");
+
+    // the recipe `join_phase1` derives from phase1_train_config: the
+    // global batch spans every device shard, sampler/augment stream 0,
+    // augmentation keyed by seed ^ 0xAE6
+    let gd = cfg.group_devices;
+    let total_devices = cfg.workers * gd;
+    let global_batch = total_devices * env.exec_batch;
+    let mut sampler = EpochSampler::new(env.train.n, global_batch, cfg.seed, 0);
+    let mut batcher = Batcher::new(env.exec_batch, env.image_size(), env.augment);
+    let aug = AugStream { seed: cfg.seed ^ 0xAE6, stream: 0 };
+    for _ in 0..first_step {
+        sampler.next_batch();
+    }
+    let mut next_draw = first_step;
+    let mut hb = batcher.make_batch();
+    let mut steps = 0u64;
+    loop {
+        let (msg, _) = wire::read_msg(&mut conn).unwrap();
+        match msg {
+            Msg::P1Step { step, params } => {
+                if die_after == Some(steps) {
+                    return steps; // drops conn: crashed mid-all-reduce
+                }
+                std::thread::sleep(step_delay);
+                wire::write_msg(&mut conn, &Msg::Heartbeat { worker: slot, step }).unwrap();
+                for _ in next_draw..step {
+                    sampler.next_batch();
+                }
+                next_draw = step + 1;
+                let global = sampler.next_batch();
+                let per = global.len() / total_devices;
+                for d in 0..gd {
+                    let dev = slot * gd + d;
+                    let rows = &global[dev * per..(dev + 1) * per];
+                    batcher.assemble_step_into(
+                        env.train,
+                        rows,
+                        aug,
+                        step,
+                        (dev * per) as u64,
+                        &mut hb,
+                    );
+                    let g = env.engine.grad(&params, &hb).unwrap();
+                    wire::write_msg(
+                        &mut conn,
+                        &Msg::P1Grad { device: dev, step, stats: g.stats, grads: g.grads },
+                    )
+                    .unwrap();
+                }
+                steps += 1;
+            }
+            Msg::P1Done { .. } => return steps,
+            other => panic!("wire member got unexpected frame {other:?}"),
+        }
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_phase1_collective_bitwise_equals_in_process() {
+    // the distribution acceptance property: with phase1_dist the sync
+    // phase runs as hub + remote shard members over the wire, and a
+    // zero-failure run is BITWISE the in-process run — params, snapshot
+    // trail, eval stats, and the modeled clock — at any thread count
+    let f = fixture();
+    let mut cfg = tiny_swap_config(23);
+    cfg.phase1_dist = true;
+    cfg.phase1_snapshot_every = Some(3);
+    let policy = fast_policy();
+
+    for threads in [1usize, 4] {
+        let env = env_threads(&f, threads);
+        // the in-memory transport ignores phase1_dist: this IS the
+        // historical in-process run
+        let mem = run_swap(&env, &cfg).unwrap();
+
+        let addr = sock_addr(&format!("p1zf{threads}"));
+        let transport = SocketTransport::new(addr.clone());
+        let sock = std::thread::scope(|s| {
+            let server = s.spawn(|| run_swap_with(&env, &cfg, &transport, &policy));
+            let members: Vec<_> = (0..cfg.workers)
+                .map(|w| {
+                    let (env, cfg, addr, policy) = (&env, &cfg, &addr, &policy);
+                    s.spawn(move || {
+                        // one thread = one `swap join` process: phase-1
+                        // membership, then the phase-2 replica
+                        let o = join_phase1(env, cfg, addr, policy, Some(w)).unwrap();
+                        let Phase1Outcome::Participated(p) = o else {
+                            panic!("member {w}: collective finished without us")
+                        };
+                        assert_eq!(p.slot, w);
+                        assert_eq!(p.first_step, 0, "a fresh collective starts at step 0");
+                        assert_eq!(p.steps, 12, "2 epochs x 6 steps at global batch 16");
+                        assert!(p.bytes_sent > 0 && p.bytes_received > 0);
+                        join_run(env, cfg, addr, policy, Some(w)).unwrap()
+                    })
+                })
+                .collect();
+            for (w, m) in members.into_iter().enumerate() {
+                assert_eq!(m.join().unwrap().worker, w);
+            }
+            server.join().unwrap()
+        })
+        .unwrap();
+        std::fs::remove_file(&addr).ok();
+
+        assert!(sock.dropped.is_empty(), "healthy run must drop nobody");
+        assert_eq!(sock.phase1.steps, 12);
+        assert_eq!(
+            sock.final_params, mem.final_params,
+            "threads={threads}: distributed phase 1 must equal in-process bitwise"
+        );
+        for (a, b) in sock.worker_params.iter().zip(&mem.worker_params) {
+            assert_eq!(a, b, "threads={threads}: every replica must match bitwise");
+        }
+        assert_eq!(sock.final_stats.correct1, mem.final_stats.correct1);
+        assert_eq!(
+            sock.clock.seconds.to_bits(),
+            mem.clock.seconds.to_bits(),
+            "a zero-failure collective books the identical modeled clock"
+        );
+        assert_eq!(sock.phase1_snapshots.len(), mem.phase1_snapshots.len());
+        for ((sa, pa), (sb, pb)) in sock.phase1_snapshots.iter().zip(&mem.phase1_snapshots) {
+            assert_eq!(sa, sb, "snapshot steps must line up");
+            assert_eq!(pa, pb, "threads={threads}: phase-1 snapshot trail must match bitwise");
+        }
+
+        // byte accounting: per step the hub broadcasts one arena per
+        // member and gathers one per device — exactly phase1_comm_bytes —
+        // on top of phase 2's broadcast-down/upload-up per worker
+        let devices = cfg.workers * cfg.group_devices;
+        assert_eq!(
+            sock.net.param_bytes,
+            f.cost.phase1_comm_bytes(sock.phase1.steps, cfg.workers, devices)
+                + f.cost.phase2_comm_bytes(cfg.workers)
+        );
+        assert!(
+            sock.net.framed_bytes > sock.net.param_bytes,
+            "framing overhead must be accounted"
+        );
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_phase1_member_death_repairs_ring_and_admits_rejoin() {
+    // kill one member mid-all-reduce: the hub must drop it at the broken
+    // step, re-form the ring from the survivor (min_workers = 1), book
+    // the discarded shard compute as lost time, and admit a restarted
+    // process into the freed slot at the current step — then finish a
+    // full phase 2 with both slots
+    let f = fixture();
+    let env = env(&f);
+    let mut cfg = tiny_swap_config(25);
+    cfg.phase1_dist = true;
+    let policy = fast_policy();
+
+    let addr = sock_addr("p1repair");
+    let transport = SocketTransport::new(addr.clone());
+    let r = std::thread::scope(|s| {
+        let server = s.spawn(|| run_swap_with(&env, &cfg, &transport, &policy));
+        // slot 0: honest, held to >= 25ms per step so the collective is
+        // still open when the restarted process comes knocking
+        let survivor = s.spawn(|| {
+            let steps =
+                phase1_wire_member(&addr, &env, &cfg, 0, None, Duration::from_millis(25));
+            assert_eq!(steps, 12, "the survivor carries the whole collective");
+            join_run(&env, &cfg, &addr, &policy, Some(0)).unwrap()
+        });
+        // slot 1: dies after 3 honest steps, then rejoins as a restarted
+        // process asking for its old slot back
+        let rejoin = s.spawn(|| {
+            let died_at = phase1_wire_member(&addr, &env, &cfg, 1, Some(3), Duration::ZERO);
+            assert_eq!(died_at, 3);
+            let outcome = loop {
+                match join_phase1(&env, &cfg, &addr, &policy, Some(1)) {
+                    Ok(o) => break o,
+                    // the hub frees the slot only once the death surfaces
+                    // at the next exchange; keep knocking until then
+                    Err(e) if e.to_string().contains("all member slots taken") => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => panic!("rejoin failed: {e}"),
+                }
+            };
+            let Phase1Outcome::Participated(p) = outcome else {
+                panic!("collective finished before the rejoin (12 steps at >=25ms each)")
+            };
+            assert_eq!(p.slot, 1, "a rejoiner must adopt its freed slot");
+            assert!(p.first_step > 0, "a rejoiner enters at the current step, not step 0");
+            assert!(p.steps > 0);
+            join_run(&env, &cfg, &addr, &policy, Some(1)).unwrap()
+        });
+        assert_eq!(survivor.join().unwrap().worker, 0);
+        assert_eq!(rejoin.join().unwrap().worker, 1);
+        server.join().unwrap()
+    })
+    .unwrap();
+    std::fs::remove_file(&addr).ok();
+
+    assert_eq!(r.phase1.steps, 12, "the repaired collective must run to completion");
+    assert!(r.clock.lost > 0.0, "the dead member's discarded shard compute must be booked");
+    assert!(r.dropped.is_empty(), "phase 2 is healthy: both slots rejoined");
+    assert_eq!(r.worker_params.len(), 2);
+
+    // the death cost the run at least one gathered arena vs a clean one
+    let devices = cfg.workers * cfg.group_devices;
+    assert!(
+        r.net.param_bytes
+            < f.cost.phase1_comm_bytes(r.phase1.steps, cfg.workers, devices)
+                + f.cost.phase2_comm_bytes(cfg.workers),
+        "a dropped member's unsent shards must be missing from the payload count"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_phase1_quorum_abort_is_crash_safe_and_resumes_bitwise() {
+    // below min_workers the collective must abort loudly — and because
+    // the progress record is fsync'd per recorded step, restarting the
+    // whole cluster resumes at the last completed sync step and finishes
+    // bitwise identical to a never-crashed run
+    let f = fixture();
+    let env = env(&f);
+    let mut cfg = tiny_swap_config(27);
+    cfg.phase1_dist = true;
+    let strict = FailurePolicy { min_workers: 2, ..fast_policy() };
+
+    let honest = run_swap(&env, &cfg).unwrap();
+
+    let dir_path = tmp_dir("p1resume");
+    std::fs::remove_dir_all(&dir_path).ok();
+    let dir = RunDir::new(&dir_path).unwrap();
+    let addr = sock_addr("p1resume");
+    let transport = SocketTransport::new(addr.clone());
+
+    // attempt 1: slot 1 dies after 4 honest steps; one survivor is below
+    // min_workers = 2, so the hub must fail the collective
+    let err = std::thread::scope(|s| {
+        let server = s.spawn(|| {
+            run_swap_resumable_with(&env, &cfg, &dir, &transport, &strict).unwrap_err()
+        });
+        // the survivor is torn down with the hub; its error is noise
+        s.spawn(|| {
+            let _ = join_phase1(&env, &cfg, &addr, &strict, Some(0));
+        });
+        s.spawn(|| phase1_wire_member(&addr, &env, &cfg, 1, Some(4), Duration::ZERO));
+        server.join().unwrap()
+    });
+    assert!(err.to_string().contains("below min_workers"), "unexpected error: {err}");
+
+    // attempt 2, "restart everything": the record resumes the collective
+    // at the last recorded step — members are assigned first_step > 0 and
+    // fast-forward their sampler draws — and the run finishes bitwise
+    let r = std::thread::scope(|s| {
+        let server =
+            s.spawn(|| run_swap_resumable_with(&env, &cfg, &dir, &transport, &strict));
+        let members: Vec<_> = (0..cfg.workers)
+            .map(|w| {
+                let (env, cfg, addr, strict) = (&env, &cfg, &addr, &strict);
+                s.spawn(move || {
+                    let o = join_phase1(env, cfg, addr, strict, Some(w)).unwrap();
+                    let Phase1Outcome::Participated(p) = o else {
+                        panic!("member {w}: resumed collective reported already done")
+                    };
+                    assert_eq!(p.slot, w);
+                    assert!(p.first_step > 0, "resume must skip the recorded steps");
+                    assert_eq!(p.first_step + p.steps, 12, "resume + remainder = full phase");
+                    join_run(env, cfg, addr, strict, Some(w)).unwrap()
+                })
+            })
+            .collect();
+        for m in members {
+            m.join().unwrap();
+        }
+        server.join().unwrap()
+    })
+    .unwrap();
+    std::fs::remove_file(&addr).ok();
+    std::fs::remove_dir_all(&dir_path).ok();
+
+    assert_eq!(r.phase1.steps, 12);
+    assert!(r.dropped.is_empty());
+    assert_eq!(
+        r.final_params, honest.final_params,
+        "resume-from-record must reproduce the honest run bitwise"
+    );
+    assert_eq!(r.final_stats.correct1, honest.final_stats.correct1);
+}
+
+#[test]
+fn loopback_hub_exchange_tracks_cluster_clock_model() {
+    // ROADMAP item 1's validation half: the α–β hub_exchange term must
+    // price a real loopback phase-1 step within an order of magnitude.
+    // (This CI band is deliberately loose for noisy shared runners; the
+    // transport bench asserts the tight factor-of-4 band and reports the
+    // measured-vs-predicted rows in BENCH_transport.json.)
+    let cal = loopback::calibrate(24, 1 << 16).unwrap();
+    assert!(cal.latency > 0.0 && cal.bandwidth > 0.0, "degenerate calibration: {cal:?}");
+    let net = cal.net_model();
+
+    let (members, gd, numel) = (2usize, 1usize, 1usize << 12);
+    let measured = loopback::time_hub_exchange(members, gd, numel, 8).unwrap();
+    let predicted = net.hub_exchange(4 * numel as u64, members, members * gd);
+    let ratio = measured / predicted.max(1e-12);
+    assert!(
+        ratio > 0.1 && ratio < 10.0,
+        "hub_exchange model off by more than 10x on loopback: measured {measured:.3e}s \
+         vs predicted {predicted:.3e}s (ratio {ratio:.2})"
+    );
 }
